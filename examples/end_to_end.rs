@@ -1,0 +1,81 @@
+//! END-TO-END driver: proves all three layers compose on a real workload.
+//!
+//! 1. **L1/L2 (build time)**: `make artifacts` lowered the Pallas sorting
+//!    /merge/prefix datapaths and the composed block sorter to HLO text.
+//! 2. **Runtime**: this binary loads those artifacts through PJRT (the
+//!    "bitstreams" of the reconfigurable instruction region).
+//! 3. **L3**: the cycle-level softcore runs the paper's §4.3.1 sorting
+//!    workload twice — once with native datapaths, once with every
+//!    custom instruction executing through the compiled artifacts — and
+//!    the results must be bit-identical with identical cycle counts.
+//! 4. Headline metric: the paper's sort speedup (12.1×) and memcpy rate
+//!    (0.69 GB/s) measured on the composed system.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use simdsoftcore::coordinator::{experiments, Scale};
+use simdsoftcore::core::Core;
+use simdsoftcore::runtime::{hlo_pool, Fabric};
+use simdsoftcore::util::Xoshiro256;
+use simdsoftcore::workloads::sort;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+
+    // ---- 1+2: load the fabric ------------------------------------------
+    let dir = Fabric::default_dir();
+    anyhow::ensure!(
+        Fabric::available(&dir),
+        "fabric artifacts missing — run `make artifacts` first"
+    );
+    let fabric = Rc::new(RefCell::new(Fabric::open(&dir)?));
+    println!("[1] fabric loaded from {:?}: {:?}", dir, fabric.borrow().names());
+    let vlen = fabric.borrow().lanes * 32;
+
+    // ---- 3: the same sort program on both fabric backends ---------------
+    let n = 4096usize;
+    println!("\n[2] sorting {n} elements on the simulated softcore, twice:");
+
+    let mut native = Core::paper_default();
+    let nat = sort::run_vector_mergesort(&mut native, n)?;
+    println!(
+        "    native units : {:>9} cycles, verified: {}",
+        nat.throughput.cycles, nat.verified
+    );
+
+    let mut hlo = Core::paper_default();
+    hlo.pool = hlo_pool(fabric.clone(), vlen);
+    let hl = sort::run_vector_mergesort(&mut hlo, n)?;
+    println!(
+        "    HLO fabric   : {:>9} cycles, verified: {}  (every c1/c2/c3 call ran through PJRT)",
+        hl.throughput.cycles, hl.verified
+    );
+    anyhow::ensure!(nat.verified && hl.verified, "sort results must verify");
+    anyhow::ensure!(
+        nat.throughput.cycles == hl.throughput.cycles,
+        "cycle counts must be identical across fabric backends"
+    );
+    println!("    ✓ bit-identical results, identical cycle counts");
+
+    // Whole-function offload: the L2 composed sorter artifact.
+    let mut rng = Xoshiro256::seeded(99);
+    let vals = rng.vec_i32(4096);
+    let offloaded = fabric.borrow_mut().sort_block(&vals)?;
+    let mut expect = vals.clone();
+    expect.sort_unstable();
+    anyhow::ensure!(offloaded == expect, "sort_block artifact must sort");
+    println!("    ✓ L2 sort_block artifact sorts 4096 elements (whole-function offload)");
+
+    // ---- 4: headline metrics --------------------------------------------
+    println!("\n[3] headline metrics (scaled inputs; pass --full to benches for paper sizes):");
+    let scale = Scale { full: false };
+    print!("{}", experiments::memcpy_headline(scale).render());
+    print!("{}", experiments::sec43_sort(scale).render());
+
+    println!("\nend-to-end driver completed in {:.2?} (host)", t0.elapsed());
+    Ok(())
+}

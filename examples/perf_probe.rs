@@ -1,0 +1,20 @@
+//! perf-stat / profiling probe: one deterministic workload mix used by
+//! the §Perf optimisation process (EXPERIMENTS.md) — run it under
+//! `perf record` to profile the simulator hot path.
+use simdsoftcore::core::Core;
+
+fn main() {
+    let mut core = Core::paper_default();
+    let r = simdsoftcore::workloads::memcpy::run(&mut core, 16 * 1024 * 1024, true).unwrap();
+    assert!(r.verified);
+    let mut core = Core::paper_default();
+    let r2 = simdsoftcore::workloads::sort::run_qsort(&mut core, 64 * 1024).unwrap();
+    assert!(r2.verified);
+    let mut core = Core::paper_default();
+    let r3 = simdsoftcore::workloads::sort::run_vector_mergesort(&mut core, 256 * 1024).unwrap();
+    assert!(r3.verified);
+    println!(
+        "{} {} {}",
+        r.throughput.instret, r2.throughput.instret, r3.throughput.instret
+    );
+}

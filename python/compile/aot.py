@@ -1,0 +1,118 @@
+"""AOT path: lower every fabric entry point to HLO **text** under
+``artifacts/`` for the Rust runtime (PJRT CPU).
+
+HLO text — NOT ``lowered.compile()`` / serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (lanes = VLEN/32 = 8 by default):
+
+  sort8_b{B}.hlo.txt    (B, L) i32            -> (B, L)
+  merge_b{B}.hlo.txt    (B, L), (B, L)        -> (B, L), (B, L)
+  prefix_b{B}.hlo.txt   (B, L), (1,) carry    -> (B, L), (1,) carry
+  sort_block_{N}.hlo.txt (N,) i32             -> (N,)
+
+plus ``manifest.txt`` (one line per artifact: name, path, shapes) read by
+``rust/src/runtime``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--lanes 8]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *args) -> str:
+    """Lower a jittable function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_all(out_dir: str, lanes: int, batches: list[int], block_n: int) -> list[tuple]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for b in batches:
+        entries.append(
+            (
+                f"sort8_b{b}",
+                lambda x: (model.sort_rows(x),),
+                [spec((b, lanes))],
+                f"in=(({b},{lanes}) i32) out=(({b},{lanes}) i32)",
+            )
+        )
+        entries.append(
+            (
+                f"merge_b{b}",
+                lambda a, x: model.merge_rows(a, x),
+                [spec((b, lanes)), spec((b, lanes))],
+                f"in=(({b},{lanes}) i32, ({b},{lanes}) i32) out=(({b},{lanes}) i32, ({b},{lanes}) i32)",
+            )
+        )
+        entries.append(
+            (
+                f"prefix_b{b}",
+                lambda x, c: model.prefix_stream(x, c),
+                [spec((b, lanes)), spec((1,))],
+                f"in=(({b},{lanes}) i32, (1,) i32) out=(({b},{lanes}) i32, (1,) i32)",
+            )
+        )
+
+    entries.append(
+        (
+            f"sort_block_{block_n}",
+            lambda x: (model.sort_block(x, lanes=lanes),),
+            [spec((block_n,))],
+            f"in=(({block_n},) i32) out=(({block_n},) i32)",
+        )
+    )
+
+    written = []
+    for name, fn, specs, shapes in entries:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(fn, *specs)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((name, f"{name}.hlo.txt", shapes, len(text)))
+        print(f"  {name:<20} {len(text):>9} chars")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--lanes", type=int, default=8, help="VLEN/32 (Table 1: 8)")
+    ap.add_argument("--batch", type=int, nargs="*", default=[1, 64])
+    ap.add_argument("--block-n", type=int, default=4096)
+    args = ap.parse_args()
+
+    print(f"lowering fabric artifacts (lanes={args.lanes}) to {args.out_dir}")
+    written = build_all(args.out_dir, args.lanes, args.batch, args.block_n)
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"# fabric artifacts, lanes={args.lanes}\n")
+        for name, rel, shapes, _ in written:
+            f.write(f"{name}\t{rel}\t{shapes}\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

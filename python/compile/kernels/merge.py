@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: the c1_merge datapath — the paper's odd-even merge
+block (Fig. 5): merge two sorted L-lane vectors into a sorted 2L-lane
+result, low half and high half returned separately (low retires, high
+recirculates when merging long lists progressively).
+
+The network is the leading reverse-CAS layer plus a log2(2L)-layer
+bitonic merger (depth = log2(2L) + 1, matching the Fig. 6 timing);
+each layer is one vectorised min/max + static permutation, as in
+``sort8.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .networks import merge_block_layers
+from .sort8 import apply_cas_layers
+
+
+def _merge_kernel(a_ref, b_ref, lo_ref, hi_ref, *, lanes: int):
+    x = jnp.concatenate([a_ref[...], b_ref[...]], axis=-1)  # (block_b, 2L)
+    x = apply_cas_layers(x, merge_block_layers(2 * lanes))
+    lo_ref[...] = x[:, :lanes]
+    hi_ref[...] = x[:, lanes:]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def merge(a: jnp.ndarray, b: jnp.ndarray, block_b: int = 64):
+    """Merge rows of two sorted int32 (B, L) batches; returns (lo, hi)."""
+    bsz, lanes = a.shape
+    assert a.shape == b.shape
+    block = min(block_b, bsz)
+    assert bsz % block == 0
+    out_shape = jax.ShapeDtypeStruct((bsz, lanes), jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, lanes=lanes),
+        out_shape=(out_shape, out_shape),
+        grid=(bsz // block,),
+        in_specs=[
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,82 @@
+"""Structural network definitions shared by the Pallas kernels.
+
+Mirrors ``rust/src/simd/networks.rs``: the Verilog templates build
+instructions out of compare-and-swap (CAS) layers, and both language
+sides derive datapaths *and latencies* from the same layer structure.
+The Rust tests cross-check layer counts against the paper's numbers
+(6 layers for an 8-input bitonic sorter, etc.); the Python tests
+cross-check kernel outputs against pure-jnp oracles.
+"""
+
+from __future__ import annotations
+
+
+def bitonic_sort_layers(n: int) -> list[list[tuple[int, int]]]:
+    """Batcher bitonic sorting network: k(k+1)/2 layers for n = 2^k."""
+    assert n >= 2 and (n & (n - 1)) == 0, "n must be a power of two"
+    layers: list[list[tuple[int, int]]] = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            layer = []
+            for i in range(n):
+                partner = i ^ j
+                if partner > i:
+                    if i & k == 0:
+                        layer.append((i, partner))
+                    else:
+                        layer.append((partner, i))
+            layers.append(layer)
+            j //= 2
+        k *= 2
+    return layers
+
+
+def merge_block_layers(two_m: int) -> list[list[tuple[int, int]]]:
+    """The paper's merge block (§4.3.1): one leading reverse-CAS layer
+    (enabling progressive merging of arbitrarily long lists) followed by
+    the log2(2m) bitonic-merge layers. Depth = log2(2m) + 1."""
+    assert two_m >= 2 and (two_m & (two_m - 1)) == 0
+    m = two_m // 2
+    layers = [[(i, two_m - 1 - i) for i in range(m)]]
+    j = m
+    while j >= 1:
+        layer = []
+        for i in range(two_m):
+            partner = i | j
+            if partner != i and partner < two_m:
+                layer.append((i, partner))
+        layers.append(layer)
+        j //= 2
+    return layers
+
+
+def layers_to_perm(n: int, layer: list[tuple[int, int]]):
+    """Convert one CAS layer into (partner permutation, takes_min mask).
+
+    Lane ``lo`` of a pair keeps the minimum, lane ``hi`` the maximum;
+    unpaired lanes are their own partner (min(x, x) = x).
+    """
+    partner = list(range(n))
+    takes_min = [True] * n
+    for lo, hi in layer:
+        partner[lo] = hi
+        partner[hi] = lo
+        takes_min[lo] = True
+        takes_min[hi] = False
+    return partner, takes_min
+
+
+def sort_latency(n: int) -> int:
+    return len(bitonic_sort_layers(n))
+
+
+def merge_latency(two_m: int) -> int:
+    return len(merge_block_layers(two_m))
+
+
+def prefix_latency(n: int) -> int:
+    """log2(n) Hillis-Steele layers + 1 carry layer (Fig. 7)."""
+    assert (n & (n - 1)) == 0
+    return n.bit_length() - 1 + 1

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: the c3_prefix datapath — Hillis-Steele inclusive
+scan within each vector plus the carry accumulator chaining batches
+(Fig. 7 of the paper).
+
+Hardware adaptation: the paper's stateful Verilog register (the running
+total of all previous batches) becomes a carry *operand/result* pair:
+the kernel takes the incoming carry, scans the whole batch, and returns
+the outgoing carry. Chaining across batches — the hardware's implicit
+state — is explicit dataflow at the L2 level, which is also what makes
+the AOT artifact a pure function the Rust runtime can replay safely.
+
+Within a batch the cross-row carry is itself a Hillis-Steele scan over
+the row totals, so the whole kernel stays data-parallel (log L + log B
+min/max-free add layers — VPU-only work).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hillis_steele(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive scan along the last axis via shift-add layers
+    (log2(width) steps — the paper's Fig. 7 stages)."""
+    width = x.shape[-1]
+    shift = 1
+    while shift < width:
+        shifted = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(shift, 0)])[..., :width]
+        x = x + shifted
+        shift *= 2
+    return x
+
+
+def _prefix_kernel(x_ref, carry_ref, o_ref, carry_out_ref):
+    x = x_ref[...].astype(jnp.int32)  # (B, L)
+    carry = carry_ref[0]
+    row = _hillis_steele(x)  # per-row inclusive scan
+    totals = row[:, -1]  # (B,)
+    # Exclusive scan of row totals = carry chain across the batch,
+    # computed with the same shift-add network over the batch axis.
+    incl = _hillis_steele(totals[None, :])[0]
+    excl = incl - totals
+    out = row + (excl + carry)[:, None]
+    o_ref[...] = out
+    carry_out_ref[0] = carry + incl[-1]
+
+
+@jax.jit
+def prefix_sum(x: jnp.ndarray, carry: jnp.ndarray):
+    """Inclusive scan of an int32 (B, L) batch with carry-in; returns
+    (scanned batch, carry-out). Single grid block: the carry chain makes
+    the batch a sequential unit at the instruction level; parallelism is
+    inside (lanes) and across independent streams, not across the chain."""
+    b, lanes = x.shape
+    return pl.pallas_call(
+        _prefix_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=True,
+    )(x, carry.reshape(1).astype(jnp.int32))

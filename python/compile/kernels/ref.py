@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas fabric kernels.
+
+These are the *specification*: every Pallas kernel must match its oracle
+bit-for-bit over int32 inputs (including extremes), enforced by
+``python/tests/test_kernels.py`` with hypothesis sweeps, and the Rust
+native units must match the AOT-compiled kernels (cross-validated in
+``rust/tests/fabric_crosscheck.rs``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sort8_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort each row of (B, L) int32 ascending — the c2_sort semantics."""
+    return jnp.sort(x, axis=-1)
+
+
+def merge_ref(a: jnp.ndarray, b: jnp.ndarray):
+    """Odd-even merge semantics (c1_merge, Fig. 5): rows of `a` and `b`
+    are sorted; return (low half, high half) of the merged rows."""
+    both = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+    lanes = a.shape[-1]
+    return both[..., :lanes], both[..., lanes:]
+
+
+def prefix_ref(x: jnp.ndarray, carry: jnp.ndarray):
+    """c3_prefix semantics over a batch (Fig. 7): inclusive scan of the
+    flattened (B, L) input plus the incoming carry; returns the scanned
+    batch and the outgoing carry (carry + total). Wrapping int32."""
+    b, lanes = x.shape
+    flat = x.reshape(-1)
+    scan = jnp.cumsum(flat, dtype=jnp.int32) + carry.astype(jnp.int32)
+    return scan.reshape(b, lanes), scan[-1]
+
+
+def memcpy_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """c0_lv/c0_sv round trip — the identity over vectors."""
+    return x
+
+
+def sort_block_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Full block sorter (the L2 composition): sort a flat int32 vector."""
+    return jnp.sort(x)

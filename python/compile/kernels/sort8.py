@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the c2_sort datapath — a Batcher bitonic sorting
+network over the lanes of each vector register in a batch.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the Verilog
+template's CAS modules (Algorithm 1 of the paper) become one vectorised
+``minimum``/``maximum`` pair per network layer over a statically permuted
+view of the lane axis — the FPGA's wire permutation is a static gather,
+one VPU step per layer. The batch dimension streams through VMEM via the
+BlockSpec grid, the Pallas analogue of the instruction pipeline accepting
+one call per cycle (II = 1).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what
+the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .networks import bitonic_sort_layers
+
+
+def apply_cas_layers(x: jnp.ndarray, layers) -> jnp.ndarray:
+    """Apply CAS layers column-wise: each (lo, hi) pair becomes one
+    min/max pair over batch columns — the literal translation of the
+    Verilog CAS module wiring (static, no captured array constants, which
+    pallas_call forbids inside kernels)."""
+    lanes = x.shape[-1]
+    cols = [x[:, i] for i in range(lanes)]
+    for layer in layers:
+        out = list(cols)
+        for lo, hi in layer:
+            a, b = cols[lo], cols[hi]
+            out[lo] = jnp.minimum(a, b)
+            out[hi] = jnp.maximum(a, b)
+        cols = out
+    return jnp.stack(cols, axis=1)
+
+
+def _sort_kernel(x_ref, o_ref, *, lanes: int):
+    x = x_ref[...]  # (block_b, lanes) int32, VMEM-resident
+    o_ref[...] = apply_cas_layers(x, bitonic_sort_layers(lanes))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sort8(x: jnp.ndarray, block_b: int = 64) -> jnp.ndarray:
+    """Sort each row of an int32 (B, L) batch. B must divide by block_b
+    or be smaller (single block)."""
+    b, lanes = x.shape
+    block = min(block_b, b)
+    assert b % block == 0, f"batch {b} not divisible by block {block}"
+    return pl.pallas_call(
+        functools.partial(_sort_kernel, lanes=lanes),
+        out_shape=jax.ShapeDtypeStruct((b, lanes), jnp.int32),
+        grid=(b // block,),
+        in_specs=[pl.BlockSpec((block, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, lanes), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,87 @@
+"""L2: JAX compositions of the L1 fabric kernels — the compute graphs the
+paper's softcore executes instruction-by-instruction, expressed as whole-
+block offloads. These are the functions ``aot.py`` lowers to HLO text for
+the Rust runtime.
+
+- ``sort_block``: the §4.3.1 mergesort — chunk-sort with the sorting
+  network, then log2 merge passes with the merge block. One artifact
+  sorts a whole block; the Rust coordinator uses it both as a golden
+  model for the instruction-level simulation and as a "whole-function
+  fabric offload" (the §6 discussion of internalising processing).
+- ``prefix_stream``: batched c3_prefix with explicit carry chaining.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.merge import merge
+from .kernels.prefix_sum import prefix_sum
+from .kernels.sort8 import sort8
+
+
+def sort_block(x: jnp.ndarray, lanes: int = 8) -> jnp.ndarray:
+    """Sort a flat int32 vector of power-of-two length >= 2*lanes using
+    the paper's algorithm: sort lanes-sized chunks with the c2 network,
+    then repeatedly merge runs pairwise with the c1 merge block.
+
+    The merge tree is expressed with static python loops over levels
+    (static shapes per level), lax.scan over the data-dependent refill
+    steps and vmap over independent run pairs, so the whole function
+    lowers to a single HLO module.
+    """
+    (n,) = x.shape
+    assert n % lanes == 0 and (n & (n - 1)) == 0, "n must be a power of two"
+    rows = x.reshape(-1, lanes)
+    rows = sort8(rows)  # sorted runs of `lanes`
+
+    run = 1  # run length in rows
+    n_rows = rows.shape[0]
+    while run < n_rows:
+        pairs = rows.reshape(-1, 2 * run, lanes)
+
+        def merge_pair(pair, run=run):
+            a = pair[:run]  # (run, lanes) sorted run A
+            b = pair[run:]  # sorted run B
+
+            def step(state, _):
+                ia, ib, carry = state
+                # Refill selection (§4.3.1): take the run whose head is
+                # smaller; an exhausted run always loses.
+                a_head = a[jnp.minimum(ia, run - 1), 0]
+                b_head = b[jnp.minimum(ib, run - 1), 0]
+                take_a = (ib >= run) | ((ia < run) & (a_head <= b_head))
+                nxt = jnp.where(
+                    take_a, a[jnp.minimum(ia, run - 1)], b[jnp.minimum(ib, run - 1)]
+                )
+                ia = ia + jnp.where(take_a, jnp.int32(1), jnp.int32(0))
+                ib = ib + jnp.where(take_a, jnp.int32(0), jnp.int32(1))
+                lo, hi = merge(carry[None, :], nxt[None, :], block_b=1)
+                return (ia, ib, hi[0]), lo[0]
+
+            # Prime the merge register with the first vector of A.
+            (_, _, carry), outs = jax.lax.scan(
+                step, (jnp.int32(1), jnp.int32(0), a[0]), None, length=2 * run - 1
+            )
+            return jnp.concatenate([outs, carry[None, :]], axis=0)
+
+        rows = jax.vmap(merge_pair)(pairs).reshape(-1, lanes)
+        run *= 2
+    return rows.reshape(-1)
+
+
+def prefix_stream(x: jnp.ndarray, carry: jnp.ndarray):
+    """Batched prefix scan with carry-in/out — the L2 view of a stream of
+    c3_prefix instructions (Fig. 7)."""
+    return prefix_sum(x, carry)
+
+
+def sort_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Batched c2_sort — one instruction call per row."""
+    return sort8(x)
+
+
+def merge_rows(a: jnp.ndarray, b: jnp.ndarray):
+    """Batched c1_merge — one instruction call per row pair."""
+    return merge(a, b)

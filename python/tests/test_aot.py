@@ -1,0 +1,43 @@
+"""AOT path: lowering must produce XLA-parseable HLO text with the
+expected entry computation, for every artifact the Rust runtime loads."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_to_hlo_text_smoke():
+    text = aot.to_hlo_text(
+        lambda x: (model.sort_rows(x),), jnp.zeros((4, 8), dtype=jnp.int32)
+    )
+    assert "ENTRY" in text
+    assert "s32[4,8]" in text
+
+
+def test_prefix_hlo_has_carry_io():
+    text = aot.to_hlo_text(
+        lambda x, c: model.prefix_stream(x, c),
+        jnp.zeros((2, 8), dtype=jnp.int32),
+        jnp.zeros((1,), dtype=jnp.int32),
+    )
+    assert "ENTRY" in text
+    assert "s32[1]" in text  # the carry operand
+
+
+def test_build_all_writes_artifacts(tmp_path):
+    written = aot.build_all(str(tmp_path), lanes=8, batches=[1], block_n=64)
+    names = [w[0] for w in written]
+    assert names == ["sort8_b1", "merge_b1", "prefix_b1", "sort_block_64"]
+    for _, rel, _, size in written:
+        assert (tmp_path / rel).exists()
+        assert size > 100
+
+
+def test_lowered_sort_block_still_correct():
+    # jit-compile the same function that gets lowered and check numerics —
+    # the interpret-mode pallas path must survive jit.
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.integers(-1000, 1000, size=128, dtype=np.int64).astype(np.int32))
+    got = model.sort_block(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))

@@ -1,0 +1,135 @@
+"""L1 correctness: every Pallas kernel must match its pure-jnp oracle
+bit-for-bit, across lane widths (the paper's VLEN sweep), batch sizes and
+adversarial int32 inputs. Hypothesis drives the sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.merge import merge
+from compile.kernels.networks import (
+    bitonic_sort_layers,
+    merge_block_layers,
+    merge_latency,
+    prefix_latency,
+    sort_latency,
+)
+from compile.kernels.prefix_sum import prefix_sum
+from compile.kernels.ref import merge_ref, prefix_ref, sort8_ref
+from compile.kernels.sort8 import sort8
+
+LANES = [4, 8, 16, 32]  # VLEN 128..1024 (Fig. 3 right)
+
+i32 = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+
+def arr(data, b, lanes):
+    vals = data.draw(
+        st.lists(i32, min_size=b * lanes, max_size=b * lanes), label=f"x[{b}x{lanes}]"
+    )
+    return jnp.array(vals, dtype=jnp.int32).reshape(b, lanes)
+
+
+# ---- structural invariants (match the Rust side and the paper) ---------
+
+
+def test_network_depths_match_paper():
+    assert sort_latency(4) == 3  # Algorithm 1: c1_cycles = 3
+    assert sort_latency(8) == 6  # §6: 8 elements in 6 cycles
+    assert merge_latency(16) == 5  # Fig. 6 merge stages
+    assert prefix_latency(8) == 4  # Fig. 7: log 8 + carry
+
+
+@pytest.mark.parametrize("n", LANES)
+def test_layers_are_parallel(n):
+    for net in (bitonic_sort_layers(n), merge_block_layers(n)):
+        for layer in net:
+            touched = [i for pair in layer for i in pair]
+            assert len(touched) == len(set(touched)), "CAS pairs must be disjoint"
+
+
+# ---- sort kernel --------------------------------------------------------
+
+
+@pytest.mark.parametrize("lanes", LANES)
+@pytest.mark.parametrize("b", [1, 3, 64])
+def test_sort_random(lanes, b):
+    rng = np.random.default_rng(42)
+    x = jnp.array(rng.integers(-(2**31), 2**31, size=(b, lanes), dtype=np.int64).astype(np.int32))
+    got = sort8(x, block_b=min(b, 64))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(sort8_ref(x)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_sort_hypothesis(data):
+    lanes = data.draw(st.sampled_from(LANES))
+    b = data.draw(st.sampled_from([1, 2, 4]))
+    x = arr(data, b, lanes)
+    got = sort8(x, block_b=b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(sort8_ref(x)))
+
+
+def test_sort_extremes():
+    x = jnp.array(
+        [[2**31 - 1, -(2**31), 0, -1, 1, 2**31 - 1, -(2**31), 0]], dtype=jnp.int32
+    )
+    np.testing.assert_array_equal(np.asarray(sort8(x)), np.asarray(sort8_ref(x)))
+
+
+# ---- merge kernel --------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_merge_hypothesis(data):
+    lanes = data.draw(st.sampled_from(LANES))
+    b = data.draw(st.sampled_from([1, 2, 4]))
+    a = jnp.sort(arr(data, b, lanes), axis=-1)
+    x = jnp.sort(arr(data, b, lanes), axis=-1)
+    lo, hi = merge(a, x, block_b=b)
+    rlo, rhi = merge_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+def test_merge_fig5_example():
+    # Fig. 5's shape: two sorted octuples merge into a sorted 16-list.
+    a = jnp.array([[1, 3, 5, 7, 9, 11, 13, 15]], dtype=jnp.int32)
+    b = jnp.array([[0, 2, 4, 6, 8, 10, 12, 14]], dtype=jnp.int32)
+    lo, hi = merge(a, b)
+    assert np.asarray(lo).tolist() == [[0, 1, 2, 3, 4, 5, 6, 7]]
+    assert np.asarray(hi).tolist() == [[8, 9, 10, 11, 12, 13, 14, 15]]
+
+
+# ---- prefix kernel -------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_prefix_hypothesis(data):
+    lanes = data.draw(st.sampled_from(LANES))
+    b = data.draw(st.sampled_from([1, 2, 8]))
+    x = arr(data, b, lanes)
+    carry = jnp.int32(data.draw(i32, label="carry"))
+    out, c_out = prefix_sum(x, carry)
+    rout, rc = prefix_ref(x, carry)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rout))
+    assert int(np.asarray(c_out)[0]) == int(rc)
+
+
+def test_prefix_carry_chains_batches():
+    ones = jnp.ones((2, 8), dtype=jnp.int32)
+    out1, c1 = prefix_sum(ones, jnp.int32(0))
+    out2, c2 = prefix_sum(ones, c1[0])
+    assert np.asarray(out1).reshape(-1).tolist() == list(range(1, 17))
+    assert np.asarray(out2).reshape(-1).tolist() == list(range(17, 33))
+    assert int(np.asarray(c2)[0]) == 32
+
+
+def test_prefix_wraps_like_hardware():
+    x = jnp.full((1, 8), 2**30, dtype=jnp.int32)
+    out, _ = prefix_sum(x, jnp.int32(0))
+    ref, _ = prefix_ref(x, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

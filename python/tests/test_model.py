@@ -1,0 +1,64 @@
+"""L2 correctness: the composed fabric graphs (block sorter, prefix
+stream) against their oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import sort_block_ref
+from compile.model import merge_rows, prefix_stream, sort_block, sort_rows
+
+
+@pytest.mark.parametrize("n", [16, 64, 256, 1024])
+def test_sort_block_random(n):
+    rng = np.random.default_rng(7)
+    x = jnp.array(rng.integers(-(2**31), 2**31, size=n, dtype=np.int64).astype(np.int32))
+    got = sort_block(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(sort_block_ref(x)))
+
+
+def test_sort_block_duplicates_and_sorted_input():
+    x = jnp.array([5] * 64, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sort_block(x)), np.asarray(x))
+    y = jnp.arange(128, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sort_block(y)), np.asarray(y))
+    z = y[::-1]
+    np.testing.assert_array_equal(np.asarray(sort_block(z)), np.asarray(y))
+
+
+def test_sort_block_other_lane_widths():
+    rng = np.random.default_rng(11)
+    for lanes in [4, 16]:
+        x = jnp.array(rng.integers(-(2**31), 2**31, size=256, dtype=np.int64).astype(np.int32))
+        got = sort_block(x, lanes=lanes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(jnp.sort(x)))
+
+
+def test_prefix_stream_long_chain():
+    rng = np.random.default_rng(3)
+    carry = jnp.int32(0)
+    acc = 0
+    for _ in range(4):
+        x = jnp.array(rng.integers(-(2**20), 2**20, size=(8, 8), dtype=np.int64).astype(np.int32))
+        out, carry_arr = prefix_stream(x, carry)
+        carry = carry_arr[0]
+        flat = np.asarray(x).reshape(-1)
+        expect = []
+        for v in flat:
+            acc = np.int32(acc + np.int32(v))
+            expect.append(acc)
+        np.testing.assert_array_equal(np.asarray(out).reshape(-1), np.array(expect, dtype=np.int32))
+        assert int(carry) == int(expect[-1])
+
+
+def test_batched_instruction_views():
+    rng = np.random.default_rng(5)
+    x = jnp.array(rng.integers(-100, 100, size=(16, 8), dtype=np.int64).astype(np.int32))
+    s = sort_rows(x)
+    np.testing.assert_array_equal(np.asarray(s), np.sort(np.asarray(x), axis=-1))
+    a = jnp.sort(x[:8], axis=-1)
+    b = jnp.sort(x[8:], axis=-1)
+    lo, hi = merge_rows(a, b)
+    both = np.sort(np.concatenate([np.asarray(a), np.asarray(b)], axis=-1), axis=-1)
+    np.testing.assert_array_equal(np.asarray(lo), both[:, :8])
+    np.testing.assert_array_equal(np.asarray(hi), both[:, 8:])

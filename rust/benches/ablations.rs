@@ -1,0 +1,70 @@
+//! Bench: ablations of the §3.1 design choices DESIGN.md calls out.
+//!
+//! 1. **Replacement policy** (§3.1): the paper asserts "a random policy
+//!    would stagnate the bandwidth for memory copying, when the source
+//!    and destination are aligned" — NRU vs Random on aligned memcpy.
+//! 2. **Double-rate interconnect** (§3.1.4).
+//! 3. **No-fetch-on-full-block-write** (§3.1.1) — approximated by
+//!    comparing vector memcpy (full-block stores) against a scalar-store
+//!    copy of the same volume, which must fetch destination blocks.
+//! 4. **Sub-blocked LLC / critical-sub-block-first** (§3.1.3) —
+//!    burst-setup sensitivity as a proxy for serving L1 early.
+//!
+//! `cargo bench --bench ablations`
+
+use simdsoftcore::core::{Core, CoreConfig};
+use simdsoftcore::mem::{MemConfig, Replacement};
+use simdsoftcore::workloads::memcpy;
+
+fn rate(mut mem: MemConfig, bytes: usize) -> f64 {
+    mem.dram.size_bytes = 192 * 1024 * 1024;
+    let mut core = Core::new(CoreConfig::paper_default(), mem);
+    let r = memcpy::run(&mut core, bytes, true).expect("memcpy runs");
+    assert!(r.verified);
+    r.throughput.bytes_per_second() / 1e9
+}
+
+fn main() {
+    let bytes = if std::env::args().any(|a| a == "--full") {
+        64 * 1024 * 1024
+    } else {
+        8 * 1024 * 1024
+    };
+    println!("== ablations: §3.1 design choices (memcpy {} MiB, VLEN=256) ==", bytes >> 20);
+
+    // (1) replacement policy, aligned src/dst (the paper's claim).
+    let nru = rate(MemConfig::paper_default(), bytes);
+    let mut random = MemConfig::paper_default();
+    random.replacement = Replacement::Random;
+    let rnd = rate(random, bytes);
+    println!("replacement   : NRU {nru:.2} GB/s vs Random {rnd:.2} GB/s  (NRU/Random = {:.2}×)", nru / rnd);
+
+    // (2) interconnect rate.
+    let mut single = MemConfig::paper_default();
+    single.dram.double_rate = false;
+    let sr = rate(single, bytes);
+    println!("interconnect  : double-rate {nru:.2} GB/s vs single-rate {sr:.2} GB/s  ({:.2}×)", nru / sr);
+
+    // (3) §3.1.1 no-fetch: vector (full-block stores) vs scalar copy.
+    let small = bytes.min(4 * 1024 * 1024);
+    let mut vcore = Core::paper_default();
+    memcpy::run(&mut vcore, small, true).expect("vector");
+    let anf = vcore.mem.stats().dl1.alloc_no_fetch;
+    let mut score = Core::paper_default();
+    let scalar = memcpy::run(&mut score, small, false).expect("scalar");
+    println!(
+        "full-block st : vector path allocated {anf} blocks without fetch (= every store); \
+         scalar copy (partial-block stores, must fetch) {:.2} GB/s",
+        scalar.throughput.bytes_per_second() / 1e9
+    );
+
+    // (4) burst setup sensitivity (proxy for §3.1.3's early service).
+    for setup in [5u64, 20, 60] {
+        let mut m = MemConfig::paper_default();
+        m.dram.burst_setup_cycles = setup;
+        println!("burst setup {setup:>3}: {:.2} GB/s", rate(m, bytes));
+    }
+    println!("\npaper claims: NRU chosen over random for streaming (§3.1); double");
+    println!("rate 'saturates the bandwidth more easily' (§3.1.4); full-block");
+    println!("writes avoid the fetch (§3.1.1); longer bursts amortise setup (§3.1.2).");
+}

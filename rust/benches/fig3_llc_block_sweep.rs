@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 3 (left) — memcpy throughput vs LLC block size.
+//! `cargo bench --bench fig3_llc_block_sweep [-- --full]`
+use simdsoftcore::coordinator::{experiments, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig3_left(Scale { full });
+    print!("{}", table.render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

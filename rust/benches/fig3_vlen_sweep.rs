@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 3 (right) — memcpy throughput vs vector width.
+//! `cargo bench --bench fig3_vlen_sweep [-- --full]`
+use simdsoftcore::coordinator::{experiments, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig3_right(Scale { full });
+    print!("{}", table.render());
+    print!("{}", experiments::memcpy_headline(Scale { full }).render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 4 — adapted STREAM on the softcore vs the
+//! PicoRV32 baseline model, plus the §4.1/§4.2 38×/144× ratios.
+//! `cargo bench --bench fig4_stream [-- --full]`
+use simdsoftcore::coordinator::{experiments, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = std::time::Instant::now();
+    print!("{}", experiments::fig4(Scale { full }).render());
+    print!("{}", experiments::fig4_ratios(Scale { full }).render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

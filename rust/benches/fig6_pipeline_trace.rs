@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 6 — the cycle-annotated pipeline diagram of
+//! the sorting-in-chunks loop, plus Fig. 5's merge semantics.
+//! `cargo bench --bench fig6_pipeline_trace`
+use simdsoftcore::coordinator::experiments;
+
+fn main() {
+    print!("{}", experiments::fig5().render());
+    print!("{}", experiments::fig6());
+    print!("{}", experiments::discussion().render());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate §4.3.2 — c3_prefix vs the serial loop and vs the
+//! calibrated ARM A53 model.
+//! `cargo bench --bench sec43_prefix_speedup [-- --full]`
+use simdsoftcore::coordinator::{experiments, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = std::time::Instant::now();
+    print!("{}", experiments::sec43_prefix(Scale { full }).render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

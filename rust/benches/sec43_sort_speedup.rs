@@ -1,0 +1,12 @@
+//! Bench: regenerate §4.3.1 — vector mergesort vs qsort() on the
+//! softcore and vs the calibrated ARM A53 model.
+//! `cargo bench --bench sec43_sort_speedup [-- --full]`
+//! (--full sorts the paper's 16M elements; takes minutes of host time.)
+use simdsoftcore::coordinator::{experiments, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let t0 = std::time::Instant::now();
+    print!("{}", experiments::sec43_sort(Scale { full }).render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

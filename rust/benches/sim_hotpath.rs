@@ -1,0 +1,91 @@
+//! Bench: simulator hot-path throughput (host-side performance, §Perf in
+//! EXPERIMENTS.md). Measures simulated instructions per host second on
+//! the workloads that dominate experiment wall time.
+//!
+//! `cargo bench --bench sim_hotpath`
+
+use simdsoftcore::core::Core;
+use simdsoftcore::util::stats::fmt_count;
+use simdsoftcore::workloads::{memcpy, sort, stream};
+use std::time::Instant;
+
+struct Row {
+    name: &'static str,
+    sim_instrs: u64,
+    sim_cycles: u64,
+    host_secs: f64,
+}
+
+/// Best-of-3 (the shared host is noisy; min is the least-biased
+/// estimator of the true cost).
+fn measure(name: &'static str, f: impl Fn() -> (u64, u64)) -> Row {
+    let mut best = f64::INFINITY;
+    let mut out = (0, 0);
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        out = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Row { name, sim_instrs: out.0, sim_cycles: out.1, host_secs: best }
+}
+
+fn main() {
+    let rows = vec![
+        measure("alu loop (dhrystone-like x2000)", || {
+            let mut core = Core::paper_default();
+            let r =
+                simdsoftcore::workloads::cpubench::run_dhrystone_like(&mut core, 2000).unwrap();
+            (r.instret, r.cycles)
+        }),
+        measure("vector memcpy 16 MiB", || {
+            let mut core = Core::paper_default();
+            let r = memcpy::run(&mut core, 16 * 1024 * 1024, true).unwrap();
+            (r.throughput.instret, r.throughput.cycles)
+        }),
+        measure("scalar memcpy 4 MiB", || {
+            let mut core = Core::paper_default();
+            let r = memcpy::run(&mut core, 4 * 1024 * 1024, false).unwrap();
+            (r.throughput.instret, r.throughput.cycles)
+        }),
+        measure("STREAM Triad 1M elems", || {
+            let mut core = Core::paper_default();
+            let r = stream::run(&mut core, stream::Kernel::Triad, 1024 * 1024, false).unwrap();
+            (r.throughput.instret, r.throughput.cycles)
+        }),
+        measure("qsort 64K elems", || {
+            let mut core = Core::paper_default();
+            let r = sort::run_qsort(&mut core, 64 * 1024).unwrap();
+            (r.throughput.instret, r.throughput.cycles)
+        }),
+        measure("vector mergesort 256K elems", || {
+            let mut core = Core::paper_default();
+            let r = sort::run_vector_mergesort(&mut core, 256 * 1024).unwrap();
+            (r.throughput.instret, r.throughput.cycles)
+        }),
+    ];
+
+    println!("== simulator hot-path throughput ==");
+    println!(
+        "{:<34} {:>16} {:>16} {:>10} {:>12} {:>12}",
+        "workload", "sim instrs", "sim cycles", "host s", "Minstr/s", "Mcycle/s"
+    );
+    let mut total_i = 0u64;
+    let mut total_t = 0f64;
+    for r in &rows {
+        total_i += r.sim_instrs;
+        total_t += r.host_secs;
+        println!(
+            "{:<34} {:>16} {:>16} {:>10.3} {:>12.1} {:>12.1}",
+            r.name,
+            fmt_count(r.sim_instrs),
+            fmt_count(r.sim_cycles),
+            r.host_secs,
+            r.sim_instrs as f64 / r.host_secs / 1e6,
+            r.sim_cycles as f64 / r.host_secs / 1e6,
+        );
+    }
+    println!(
+        "aggregate: {:.1} M simulated instructions / host second",
+        total_i as f64 / total_t / 1e6
+    );
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Table 2 — DMIPS/MHz and CoreMark/MHz (derived from
+//! measured IPC; see workloads::cpubench for the derivation constants).
+//! `cargo bench --bench table2_core_perf`
+use simdsoftcore::coordinator::experiments;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    print!("{}", experiments::table2().render());
+    print!("{}", experiments::table1().render());
+    println!("(host wall time: {:.2?})", t0.elapsed());
+}

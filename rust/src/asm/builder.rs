@@ -1,0 +1,936 @@
+//! Typed program builder — the in-Rust equivalent of the paper's inline
+//! assembly with the patched binutils (§2.1): workloads are authored as
+//! Rust functions that emit RV32IM + custom-SIMD instructions with label
+//! support, then assembled to a flat [`Program`] image.
+//!
+//! ```
+//! use simdsoftcore::asm::Asm;
+//! use simdsoftcore::isa::reg::*;
+//!
+//! let mut a = Asm::new();
+//! let loop_ = a.new_label("loop");
+//! a.li(A0, 10);
+//! a.bind(loop_);
+//! a.addi(A0, A0, -1);
+//! a.bnez(A0, loop_);
+//! a.halt();
+//! let prog = a.assemble().unwrap();
+//! assert!(prog.text.len() >= 4);
+//! ```
+
+use super::program::{Program, DEFAULT_DATA_BASE, DEFAULT_TEXT_BASE};
+use crate::isa::encode::{encode, EncodeError};
+use crate::isa::instr::{csr, CustomSlot, IPrime, Instr, SPrime};
+use crate::isa::reg::{Reg, VReg, RA, ZERO};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum AsmError {
+    #[error("label '{0}' used but never bound")]
+    UnboundLabel(String),
+    #[error("label '{0}' bound twice")]
+    DoubleBound(String),
+    #[error("branch to '{label}' out of range (offset {offset})")]
+    BranchOutOfRange { label: String, offset: i64 },
+    #[error("jump to '{label}' out of range (offset {offset})")]
+    JumpOutOfRange { label: String, offset: i64 },
+    #[error("encode error at instruction {index}: {source}")]
+    Encode { index: usize, source: EncodeError },
+    #[error("text segment (ends {text_end:#x}) overlaps data segment (base {data_base:#x})")]
+    SegmentOverlap { text_end: u32, data_base: u32 },
+}
+
+/// A (possibly not-yet-bound) position in the program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Label(usize);
+
+#[derive(Debug, Clone, Copy)]
+enum LabelPos {
+    /// Index into the text item list.
+    Text(usize),
+    /// Byte offset into the data segment.
+    Data(usize),
+}
+
+#[derive(Debug, Clone)]
+enum Item {
+    /// Fully-resolved instruction.
+    Fixed(Instr),
+    /// Branch with label-relative offset to patch.
+    Branch(Instr, Label),
+    /// `jal rd, label`.
+    Jal(Reg, Label),
+    /// `lui rd, %hi(label)`.
+    Hi20(Reg, Label),
+    /// Instruction whose 12-bit immediate is `%lo(label)` (addi/lw/sw...).
+    Lo12(Instr, Label),
+    /// Literal word (e.g. `.word label` jump tables).
+    WordLabel(Label),
+    /// Raw literal word in the text stream (`.word 0x...`).
+    WordLiteral(u32),
+}
+
+/// The program builder. See module docs for an example.
+pub struct Asm {
+    text_base: u32,
+    data_base: u32,
+    items: Vec<Item>,
+    data: Vec<u8>,
+    labels: Vec<(String, Option<LabelPos>)>,
+    named: HashMap<String, Label>,
+    entry: Option<Label>,
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::with_bases(DEFAULT_TEXT_BASE, DEFAULT_DATA_BASE)
+    }
+
+    pub fn with_bases(text_base: u32, data_base: u32) -> Self {
+        assert_eq!(text_base % 4, 0, "text base must be word-aligned");
+        Self {
+            text_base,
+            data_base,
+            items: Vec::new(),
+            data: Vec::new(),
+            labels: Vec::new(),
+            named: HashMap::new(),
+            entry: None,
+        }
+    }
+
+    // ---- labels ---------------------------------------------------------
+
+    /// Create a fresh label with a diagnostic name (names need not be
+    /// unique; `named_label` gives uniqueness by name).
+    pub fn new_label(&mut self, name: &str) -> Label {
+        let id = Label(self.labels.len());
+        self.labels.push((name.to_string(), None));
+        id
+    }
+
+    /// Get or create the unique label with this exact name (used by the
+    /// text assembler and for cross-referencing data symbols).
+    pub fn named_label(&mut self, name: &str) -> Label {
+        if let Some(&l) = self.named.get(name) {
+            return l;
+        }
+        let l = self.new_label(name);
+        self.named.insert(name.to_string(), l);
+        l
+    }
+
+    /// Bind `label` to the current text position.
+    pub fn bind(&mut self, label: Label) {
+        assert!(
+            self.labels[label.0].1.is_none(),
+            "label '{}' bound twice",
+            self.labels[label.0].0
+        );
+        self.labels[label.0].1 = Some(LabelPos::Text(self.items.len()));
+    }
+
+    /// Create and bind a label at the current text position.
+    pub fn here(&mut self, name: &str) -> Label {
+        let l = self.new_label(name);
+        self.bind(l);
+        l
+    }
+
+    /// Bind `label` to the current data position.
+    pub fn bind_data(&mut self, label: Label) {
+        assert!(
+            self.labels[label.0].1.is_none(),
+            "label '{}' bound twice",
+            self.labels[label.0].0
+        );
+        self.labels[label.0].1 = Some(LabelPos::Data(self.data.len()));
+    }
+
+    /// Mark the entry point (defaults to the first text instruction).
+    pub fn entry(&mut self, label: Label) {
+        self.entry = Some(label);
+    }
+
+    /// Number of instruction slots emitted so far (li/la may expand to 2).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.len() == 0
+    }
+
+    // ---- data segment ---------------------------------------------------
+
+    /// Append raw bytes to the data segment.
+    pub fn db(&mut self, bytes: &[u8]) {
+        self.data.extend_from_slice(bytes);
+    }
+
+    /// Append 32-bit words (little-endian) to the data segment.
+    pub fn dw(&mut self, words: &[u32]) {
+        for w in words {
+            self.data.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    /// Reserve `n` zero bytes in the data segment.
+    pub fn dspace(&mut self, n: usize) {
+        self.data.resize(self.data.len() + n, 0);
+    }
+
+    /// Align the data cursor to a multiple of `align` bytes.
+    pub fn dalign(&mut self, align: usize) {
+        assert!(align.is_power_of_two());
+        while self.data.len() % align != 0 {
+            self.data.push(0);
+        }
+    }
+
+    /// Convenience: bind a fresh data label, aligned, with reserved space.
+    pub fn buffer(&mut self, name: &str, bytes: usize, align: usize) -> Label {
+        self.dalign(align);
+        let l = self.named_label(name);
+        self.bind_data(l);
+        self.dspace(bytes);
+        l
+    }
+
+    /// Convenience: bind a fresh data label over initialised words.
+    pub fn words(&mut self, name: &str, ws: &[u32]) -> Label {
+        self.dalign(4);
+        let l = self.named_label(name);
+        self.bind_data(l);
+        self.dw(ws);
+        l
+    }
+
+    // ---- raw emit -------------------------------------------------------
+
+    pub fn emit(&mut self, instr: Instr) {
+        self.items.push(Item::Fixed(instr));
+    }
+
+    /// Emit a literal `.word` in the text stream.
+    pub fn word(&mut self, w: u32) {
+        // Represent as a Fixed item via a decode round-trip when possible;
+        // otherwise store as a word-label-free literal. We use a dedicated
+        // data-in-text escape: a raw word item.
+        self.items.push(Item::WordLiteral(w));
+    }
+
+    /// Emit `.word label` (absolute address of `label`).
+    pub fn word_label(&mut self, label: Label) {
+        self.items.push(Item::WordLabel(label));
+    }
+
+    // ---- RV32I ----------------------------------------------------------
+
+    pub fn lui(&mut self, rd: Reg, imm_hi: i32) {
+        self.emit(Instr::Lui { rd, imm: imm_hi });
+    }
+    pub fn auipc(&mut self, rd: Reg, imm_hi: i32) {
+        self.emit(Instr::Auipc { rd, imm: imm_hi });
+    }
+    pub fn jal(&mut self, rd: Reg, target: Label) {
+        self.items.push(Item::Jal(rd, target));
+    }
+    pub fn jalr(&mut self, rd: Reg, rs1: Reg, offset: i32) {
+        self.emit(Instr::Jalr { rd, rs1, offset });
+    }
+
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Beq { rs1, rs2, offset: 0 }, t));
+    }
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Bne { rs1, rs2, offset: 0 }, t));
+    }
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Blt { rs1, rs2, offset: 0 }, t));
+    }
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Bge { rs1, rs2, offset: 0 }, t));
+    }
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Bltu { rs1, rs2, offset: 0 }, t));
+    }
+    pub fn bgeu(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.items.push(Item::Branch(Instr::Bgeu { rs1, rs2, offset: 0 }, t));
+    }
+
+    pub fn lb(&mut self, rd: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Lb { rd, rs1, offset });
+    }
+    pub fn lh(&mut self, rd: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Lh { rd, rs1, offset });
+    }
+    pub fn lw(&mut self, rd: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Lw { rd, rs1, offset });
+    }
+    pub fn lbu(&mut self, rd: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Lbu { rd, rs1, offset });
+    }
+    pub fn lhu(&mut self, rd: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Lhu { rd, rs1, offset });
+    }
+    pub fn sb(&mut self, rs2: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Sb { rs1, rs2, offset });
+    }
+    pub fn sh(&mut self, rs2: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Sh { rs1, rs2, offset });
+    }
+    pub fn sw(&mut self, rs2: Reg, offset: i32, rs1: Reg) {
+        self.emit(Instr::Sw { rs1, rs2, offset });
+    }
+
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Addi { rd, rs1, imm });
+    }
+    pub fn slti(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Slti { rd, rs1, imm });
+    }
+    pub fn sltiu(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Sltiu { rd, rs1, imm });
+    }
+    pub fn xori(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Xori { rd, rs1, imm });
+    }
+    pub fn ori(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Ori { rd, rs1, imm });
+    }
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.emit(Instr::Andi { rd, rs1, imm });
+    }
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, shamt: u8) {
+        self.emit(Instr::Slli { rd, rs1, shamt });
+    }
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, shamt: u8) {
+        self.emit(Instr::Srli { rd, rs1, shamt });
+    }
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, shamt: u8) {
+        self.emit(Instr::Srai { rd, rs1, shamt });
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Add { rd, rs1, rs2 });
+    }
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Sub { rd, rs1, rs2 });
+    }
+    pub fn sll(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Sll { rd, rs1, rs2 });
+    }
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Slt { rd, rs1, rs2 });
+    }
+    pub fn sltu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Sltu { rd, rs1, rs2 });
+    }
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Xor { rd, rs1, rs2 });
+    }
+    pub fn srl(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Srl { rd, rs1, rs2 });
+    }
+    pub fn sra(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Sra { rd, rs1, rs2 });
+    }
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Or { rd, rs1, rs2 });
+    }
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::And { rd, rs1, rs2 });
+    }
+
+    pub fn fence(&mut self) {
+        self.emit(Instr::Fence);
+    }
+    pub fn ecall(&mut self) {
+        self.emit(Instr::Ecall);
+    }
+    pub fn ebreak(&mut self) {
+        self.emit(Instr::Ebreak);
+    }
+
+    // ---- M extension ----------------------------------------------------
+
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Mul { rd, rs1, rs2 });
+    }
+    pub fn mulh(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Mulh { rd, rs1, rs2 });
+    }
+    pub fn mulhsu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Mulhsu { rd, rs1, rs2 });
+    }
+    pub fn mulhu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Mulhu { rd, rs1, rs2 });
+    }
+    pub fn div(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Div { rd, rs1, rs2 });
+    }
+    pub fn divu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Divu { rd, rs1, rs2 });
+    }
+    pub fn rem(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Rem { rd, rs1, rs2 });
+    }
+    pub fn remu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::Remu { rd, rs1, rs2 });
+    }
+
+    // ---- pseudo-instructions ---------------------------------------------
+
+    pub fn nop(&mut self) {
+        self.addi(ZERO, ZERO, 0);
+    }
+
+    pub fn mv(&mut self, rd: Reg, rs: Reg) {
+        self.addi(rd, rs, 0);
+    }
+
+    pub fn not(&mut self, rd: Reg, rs: Reg) {
+        self.xori(rd, rs, -1);
+    }
+
+    pub fn neg(&mut self, rd: Reg, rs: Reg) {
+        self.sub(rd, ZERO, rs);
+    }
+
+    pub fn seqz(&mut self, rd: Reg, rs: Reg) {
+        self.sltiu(rd, rs, 1);
+    }
+
+    pub fn snez(&mut self, rd: Reg, rs: Reg) {
+        self.sltu(rd, ZERO, rs);
+    }
+
+    /// Load a 32-bit immediate (1 or 2 instructions).
+    pub fn li(&mut self, rd: Reg, imm: i64) {
+        let imm = imm as i32; // callers may pass u32 via `as i64`
+        if (-2048..=2047).contains(&imm) {
+            self.addi(rd, ZERO, imm);
+            return;
+        }
+        // lui + addi with carry correction: hi = (imm + 0x800) >> 12.
+        let hi = (imm as u32).wrapping_add(0x800) & 0xffff_f000;
+        let lo = imm.wrapping_sub(hi as i32);
+        debug_assert!((-2048..=2047).contains(&lo));
+        self.lui(rd, hi as i32);
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+    }
+
+    /// Load the absolute address of `label` (lui+addi; always 2 slots for
+    /// deterministic code size).
+    pub fn la(&mut self, rd: Reg, label: Label) {
+        self.items.push(Item::Hi20(rd, label));
+        self.items.push(Item::Lo12(Instr::Addi { rd, rs1: rd, imm: 0 }, label));
+    }
+
+    pub fn j(&mut self, target: Label) {
+        self.jal(ZERO, target);
+    }
+
+    pub fn call(&mut self, target: Label) {
+        self.jal(RA, target);
+    }
+
+    pub fn ret(&mut self) {
+        self.jalr(ZERO, RA, 0);
+    }
+
+    pub fn jr(&mut self, rs: Reg) {
+        self.jalr(ZERO, rs, 0);
+    }
+
+    pub fn beqz(&mut self, rs: Reg, t: Label) {
+        self.beq(rs, ZERO, t);
+    }
+    pub fn bnez(&mut self, rs: Reg, t: Label) {
+        self.bne(rs, ZERO, t);
+    }
+    pub fn blez(&mut self, rs: Reg, t: Label) {
+        self.bge(ZERO, rs, t);
+    }
+    pub fn bgez(&mut self, rs: Reg, t: Label) {
+        self.bge(rs, ZERO, t);
+    }
+    pub fn bltz(&mut self, rs: Reg, t: Label) {
+        self.blt(rs, ZERO, t);
+    }
+    pub fn bgtz(&mut self, rs: Reg, t: Label) {
+        self.blt(ZERO, rs, t);
+    }
+    pub fn bgt(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.blt(rs2, rs1, t);
+    }
+    pub fn ble(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.bge(rs2, rs1, t);
+    }
+    pub fn bgtu(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.bltu(rs2, rs1, t);
+    }
+    pub fn bleu(&mut self, rs1: Reg, rs2: Reg, t: Label) {
+        self.bgeu(rs2, rs1, t);
+    }
+
+    /// Read the 64-bit cycle counter low word.
+    pub fn rdcycle(&mut self, rd: Reg) {
+        self.emit(Instr::Csrrs { rd, csr: csr::CYCLE, rs1: ZERO });
+    }
+    pub fn rdcycleh(&mut self, rd: Reg) {
+        self.emit(Instr::Csrrs { rd, csr: csr::CYCLEH, rs1: ZERO });
+    }
+    pub fn rdinstret(&mut self, rd: Reg) {
+        self.emit(Instr::Csrrs { rd, csr: csr::INSTRET, rs1: ZERO });
+    }
+
+    /// Halt convention: `ecall` returns control to the host/coordinator.
+    pub fn halt(&mut self) {
+        self.ecall();
+    }
+
+    // ---- custom SIMD instructions (§2, default fabric binding) -----------
+    //
+    // These wrappers encode the standard unit set this repo loads into the
+    // four reconfigurable slots (see `simd::units`): c0 = load/store
+    // vector (S′), c1 = merge + elementwise ops (I′), c2 = sorting
+    // network (I′), c3 = prefix sum (I′, stateful).
+
+    /// `c0.lv vrd1, (rs1+rs2)` — load a VLEN vector from `rs1 + rs2`.
+    pub fn lv(&mut self, vrd: VReg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::CustomS {
+            slot: CustomSlot::C0,
+            funct3: 4,
+            ops: SPrime { vrs1: VReg::ZERO, vrd1: vrd, imm: 0, rs2, rs1, rd: ZERO },
+        });
+    }
+
+    /// `c0.sv vrs1, (rs1+rs2)` — store a VLEN vector to `rs1 + rs2`.
+    pub fn sv(&mut self, vrs: VReg, rs1: Reg, rs2: Reg) {
+        self.emit(Instr::CustomS {
+            slot: CustomSlot::C0,
+            funct3: 5,
+            ops: SPrime { vrs1: vrs, vrd1: VReg::ZERO, imm: 0, rs2, rs1, rd: ZERO },
+        });
+    }
+
+    /// `c2.sort vrd1, vrs1` — bitonic-sort the VLEN/32 elements of `vrs1`.
+    pub fn sort8(&mut self, vrd: VReg, vrs: VReg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C2,
+            funct3: 0,
+            ops: IPrime {
+                vrs1: vrs,
+                vrd1: vrd,
+                vrs2: VReg::ZERO,
+                vrd2: VReg::ZERO,
+                rs1: ZERO,
+                rd: ZERO,
+            },
+        });
+    }
+
+    /// `c1.merge vrd1, vrd2, vrs1, vrs2` — odd-even merge of two sorted
+    /// vectors; low half → vrd1, high half → vrd2 (Fig. 5).
+    pub fn merge(&mut self, vrd1: VReg, vrd2: VReg, vrs1: VReg, vrs2: VReg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C1,
+            funct3: 0,
+            ops: IPrime { vrs1, vrd1, vrs2, vrd2, rs1: ZERO, rd: ZERO },
+        });
+    }
+
+    /// `c1.vadd vrd1, vrs1, vrs2` — elementwise 32-bit add.
+    pub fn vadd(&mut self, vrd: VReg, vrs1: VReg, vrs2: VReg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C1,
+            funct3: 1,
+            ops: IPrime { vrs1, vrd1: vrd, vrs2, vrd2: VReg::ZERO, rs1: ZERO, rd: ZERO },
+        });
+    }
+
+    /// `c1.vscale vrd1, vrs1, rs1` — elementwise multiply by scalar `rs1`.
+    pub fn vscale(&mut self, vrd: VReg, vrs: VReg, rs1: Reg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C1,
+            funct3: 2,
+            ops: IPrime { vrs1: vrs, vrd1: vrd, vrs2: VReg::ZERO, vrd2: VReg::ZERO, rs1, rd: ZERO },
+        });
+    }
+
+    /// `c1.vfilt rd, vrd1, vrs1, rs1` — compact lanes of `vrs1` strictly
+    /// below the scalar threshold `rs1` into `vrd1` (order-preserving);
+    /// the selected count lands in `rd`. The §4.3.2-motivated database
+    /// selection instruction (an exploration beyond the paper's set,
+    /// using the I′ type's 6-operand capacity).
+    pub fn vfilt(&mut self, rd: Reg, vrd: VReg, vrs: VReg, rs1: Reg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C1,
+            funct3: 3,
+            ops: IPrime { vrs1: vrs, vrd1: vrd, vrs2: VReg::ZERO, vrd2: VReg::ZERO, rs1, rd },
+        });
+    }
+
+    /// `c3.prefix vrd1, vrs1` — Hillis-Steele prefix sum over the vector
+    /// plus the unit's carry accumulator; the accumulator is updated with
+    /// the total (Fig. 7).
+    pub fn prefix(&mut self, vrd: VReg, vrs: VReg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C3,
+            funct3: 0,
+            ops: IPrime {
+                vrs1: vrs,
+                vrd1: vrd,
+                vrs2: VReg::ZERO,
+                vrd2: VReg::ZERO,
+                rs1: ZERO,
+                rd: ZERO,
+            },
+        });
+    }
+
+    /// `c3.reset` — clear the prefix-sum carry accumulator.
+    pub fn prefix_reset(&mut self) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C3,
+            funct3: 1,
+            ops: IPrime {
+                vrs1: VReg::ZERO,
+                vrd1: VReg::ZERO,
+                vrs2: VReg::ZERO,
+                vrd2: VReg::ZERO,
+                rs1: ZERO,
+                rd: ZERO,
+            },
+        });
+    }
+
+    /// `c3.carry rd` — read the carry accumulator into a base register.
+    pub fn prefix_carry(&mut self, rd: Reg) {
+        self.emit(Instr::CustomI {
+            slot: CustomSlot::C3,
+            funct3: 2,
+            ops: IPrime {
+                vrs1: VReg::ZERO,
+                vrd1: VReg::ZERO,
+                vrs2: VReg::ZERO,
+                vrd2: VReg::ZERO,
+                rs1: ZERO,
+                rd,
+            },
+        });
+    }
+
+    // ---- assembly --------------------------------------------------------
+
+    fn label_addr(&self, label: Label) -> Option<u32> {
+        match self.labels[label.0].1? {
+            LabelPos::Text(i) => Some(self.text_base + (i as u32) * 4),
+            LabelPos::Data(off) => Some(self.data_base + off as u32),
+        }
+    }
+
+    fn label_name(&self, label: Label) -> &str {
+        &self.labels[label.0].0
+    }
+
+    /// Resolve all fixups and produce the program image.
+    pub fn assemble(self) -> Result<Program, AsmError> {
+        let text_end = self.text_base + (self.items.len() as u32) * 4;
+        if !self.data.is_empty() && text_end > self.data_base {
+            return Err(AsmError::SegmentOverlap { text_end, data_base: self.data_base });
+        }
+
+        let mut text = Vec::with_capacity(self.items.len());
+        for (i, item) in self.items.iter().enumerate() {
+            let pc = self.text_base + (i as u32) * 4;
+            let word = match item {
+                Item::Fixed(instr) => {
+                    encode(instr).map_err(|source| AsmError::Encode { index: i, source })?
+                }
+                Item::WordLiteral(w) => *w,
+                Item::Branch(instr, target) => {
+                    let addr = self
+                        .label_addr(*target)
+                        .ok_or_else(|| AsmError::UnboundLabel(self.label_name(*target).into()))?;
+                    let offset = addr as i64 - pc as i64;
+                    if !(-4096..=4094).contains(&offset) {
+                        return Err(AsmError::BranchOutOfRange {
+                            label: self.label_name(*target).into(),
+                            offset,
+                        });
+                    }
+                    let patched = patch_branch(instr, offset as i32);
+                    encode(&patched).map_err(|source| AsmError::Encode { index: i, source })?
+                }
+                Item::Jal(rd, target) => {
+                    let addr = self
+                        .label_addr(*target)
+                        .ok_or_else(|| AsmError::UnboundLabel(self.label_name(*target).into()))?;
+                    let offset = addr as i64 - pc as i64;
+                    if !(-(1 << 20)..=(1 << 20) - 2).contains(&offset) {
+                        return Err(AsmError::JumpOutOfRange {
+                            label: self.label_name(*target).into(),
+                            offset,
+                        });
+                    }
+                    encode(&Instr::Jal { rd: *rd, offset: offset as i32 })
+                        .map_err(|source| AsmError::Encode { index: i, source })?
+                }
+                Item::Hi20(rd, target) => {
+                    let addr = self
+                        .label_addr(*target)
+                        .ok_or_else(|| AsmError::UnboundLabel(self.label_name(*target).into()))?;
+                    let hi = addr.wrapping_add(0x800) & 0xffff_f000;
+                    encode(&Instr::Lui { rd: *rd, imm: hi as i32 })
+                        .map_err(|source| AsmError::Encode { index: i, source })?
+                }
+                Item::Lo12(instr, target) => {
+                    let addr = self
+                        .label_addr(*target)
+                        .ok_or_else(|| AsmError::UnboundLabel(self.label_name(*target).into()))?;
+                    let hi = addr.wrapping_add(0x800) & 0xffff_f000;
+                    let lo = addr.wrapping_sub(hi) as i32;
+                    let patched = patch_lo12(instr, lo);
+                    encode(&patched).map_err(|source| AsmError::Encode { index: i, source })?
+                }
+                Item::WordLabel(target) => self
+                    .label_addr(*target)
+                    .ok_or_else(|| AsmError::UnboundLabel(self.label_name(*target).into()))?,
+            };
+            text.push(word);
+        }
+
+        let mut symbols = HashMap::new();
+        for (name, pos) in &self.labels {
+            if let Some(pos) = pos {
+                let addr = match pos {
+                    LabelPos::Text(idx) => self.text_base + (*idx as u32) * 4,
+                    LabelPos::Data(off) => self.data_base + *off as u32,
+                };
+                symbols.insert(name.clone(), addr);
+            }
+        }
+
+        let entry = match self.entry {
+            Some(l) => self
+                .label_addr(l)
+                .ok_or_else(|| AsmError::UnboundLabel(self.label_name(l).into()))?,
+            None => self.text_base,
+        };
+
+        Ok(Program {
+            text_base: self.text_base,
+            text,
+            data_base: self.data_base,
+            data: self.data,
+            symbols,
+            entry,
+        })
+    }
+}
+
+fn patch_branch(instr: &Instr, offset: i32) -> Instr {
+    use Instr::*;
+    match *instr {
+        Beq { rs1, rs2, .. } => Beq { rs1, rs2, offset },
+        Bne { rs1, rs2, .. } => Bne { rs1, rs2, offset },
+        Blt { rs1, rs2, .. } => Blt { rs1, rs2, offset },
+        Bge { rs1, rs2, .. } => Bge { rs1, rs2, offset },
+        Bltu { rs1, rs2, .. } => Bltu { rs1, rs2, offset },
+        Bgeu { rs1, rs2, .. } => Bgeu { rs1, rs2, offset },
+        other => panic!("patch_branch on non-branch {other:?}"),
+    }
+}
+
+fn patch_lo12(instr: &Instr, lo: i32) -> Instr {
+    use Instr::*;
+    match *instr {
+        Addi { rd, rs1, .. } => Addi { rd, rs1, imm: lo },
+        Lw { rd, rs1, .. } => Lw { rd, rs1, offset: lo },
+        Lb { rd, rs1, .. } => Lb { rd, rs1, offset: lo },
+        Lh { rd, rs1, .. } => Lh { rd, rs1, offset: lo },
+        Lbu { rd, rs1, .. } => Lbu { rd, rs1, offset: lo },
+        Lhu { rd, rs1, .. } => Lhu { rd, rs1, offset: lo },
+        Sw { rs1, rs2, .. } => Sw { rs1, rs2, offset: lo },
+        Sb { rs1, rs2, .. } => Sb { rs1, rs2, offset: lo },
+        Sh { rs1, rs2, .. } => Sh { rs1, rs2, offset: lo },
+        other => panic!("patch_lo12 on unsupported instruction {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn forward_and_backward_branches_resolve() {
+        let mut a = Asm::new();
+        let start = a.here("start");
+        let end = a.new_label("end");
+        a.beq(A0, A1, end); // forward
+        a.addi(A0, A0, 1);
+        a.j(start); // backward
+        a.bind(end);
+        a.halt();
+        let p = a.assemble().unwrap();
+        assert_eq!(p.text.len(), 4);
+        // beq forward by 12 bytes
+        assert_eq!(
+            decode(p.text[0]).unwrap(),
+            Instr::Beq { rs1: A0, rs2: A1, offset: 12 }
+        );
+        // jal backward by -8
+        assert_eq!(decode(p.text[2]).unwrap(), Instr::Jal { rd: ZERO, offset: -8 });
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        let mut a = Asm::new();
+        a.li(A0, 42);
+        a.li(A1, 0x12345);
+        a.li(A2, -1);
+        a.li(A3, 0x0000_0800); // needs lui because 0x800 > 2047
+        let p = a.assemble().unwrap();
+        // 1 + 2 + 1 + 2 instructions
+        assert_eq!(p.text.len(), 6);
+        assert_eq!(decode(p.text[0]).unwrap(), Instr::Addi { rd: A0, rs1: ZERO, imm: 42 });
+        // Verify 0x12345 materialisation semantics by symbolic execution.
+        let check = |hi_word: u32, lo_word: u32, expect: u32| {
+            let hi = match decode(hi_word).unwrap() {
+                Instr::Lui { imm, .. } => imm as u32,
+                other => panic!("expected lui, got {other}"),
+            };
+            let lo = match decode(lo_word).unwrap() {
+                Instr::Addi { imm, .. } => imm,
+                other => panic!("expected addi, got {other}"),
+            };
+            assert_eq!(hi.wrapping_add(lo as u32), expect);
+        };
+        check(p.text[1], p.text[2], 0x12345);
+        check(p.text[4], p.text[5], 0x800);
+    }
+
+    #[test]
+    fn la_points_at_data() {
+        let mut a = Asm::new();
+        let buf = a.buffer("buf", 64, 16);
+        a.la(A0, buf);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let addr = p.sym("buf");
+        let hi = match decode(p.text[0]).unwrap() {
+            Instr::Lui { imm, .. } => imm as u32,
+            other => panic!("{other}"),
+        };
+        let lo = match decode(p.text[1]).unwrap() {
+            Instr::Addi { imm, .. } => imm,
+            other => panic!("{other}"),
+        };
+        assert_eq!(hi.wrapping_add(lo as u32), addr);
+    }
+
+    #[test]
+    fn unbound_label_is_an_error() {
+        let mut a = Asm::new();
+        let nowhere = a.new_label("nowhere");
+        a.j(nowhere);
+        assert!(matches!(a.assemble(), Err(AsmError::UnboundLabel(n)) if n == "nowhere"));
+    }
+
+    #[test]
+    fn branch_out_of_range_is_reported() {
+        let mut a = Asm::new();
+        let far = a.new_label("far");
+        a.beq(A0, A1, far);
+        for _ in 0..2000 {
+            a.nop();
+        }
+        a.bind(far);
+        a.halt();
+        assert!(matches!(a.assemble(), Err(AsmError::BranchOutOfRange { .. })));
+    }
+
+    #[test]
+    fn data_segment_and_symbols() {
+        let mut a = Asm::new();
+        let tbl = a.words("table", &[1, 2, 3, 4]);
+        a.dalign(64);
+        let buf = a.buffer("buf", 32, 32);
+        a.la(A0, tbl);
+        a.la(A1, buf);
+        a.halt();
+        let p = a.assemble().unwrap();
+        assert_eq!(p.sym("table") % 4, 0);
+        assert_eq!(p.sym("buf") % 32, 0);
+        assert_eq!(&p.data[0..4], &1u32.to_le_bytes());
+        assert!(p.sym("buf") >= p.sym("table") + 16);
+    }
+
+    #[test]
+    fn custom_wrappers_encode_and_decode() {
+        let mut a = Asm::new();
+        a.lv(V1, A0, A1);
+        a.sv(V1, A2, A3);
+        a.sort8(V2, V1);
+        a.merge(V1, V2, V1, V2);
+        a.vadd(V3, V1, V2);
+        a.vscale(V4, V3, T0);
+        a.prefix(V5, V4);
+        a.prefix_reset();
+        a.prefix_carry(A5);
+        a.halt();
+        let p = a.assemble().unwrap();
+        // Every emitted word must decode back to a custom instruction.
+        for (i, w) in p.text[..9].iter().enumerate() {
+            let instr = decode(*w).unwrap_or_else(|e| panic!("word {i}: {e}"));
+            assert!(
+                matches!(instr, Instr::CustomI { .. } | Instr::CustomS { .. }),
+                "word {i} decoded to {instr}"
+            );
+        }
+        // Spot-check lv operand wiring.
+        match decode(p.text[0]).unwrap() {
+            Instr::CustomS { slot: CustomSlot::C0, funct3: 4, ops } => {
+                assert_eq!(ops.vrd1, V1);
+                assert_eq!(ops.rs1, A0);
+                assert_eq!(ops.rs2, A1);
+            }
+            other => panic!("lv decoded to {other}"),
+        }
+    }
+
+    #[test]
+    fn segment_overlap_rejected() {
+        let mut a = Asm::with_bases(0x1000, 0x1010);
+        a.words("d", &[1]);
+        for _ in 0..8 {
+            a.nop();
+        }
+        assert!(matches!(a.assemble(), Err(AsmError::SegmentOverlap { .. })));
+    }
+
+    #[test]
+    fn entry_defaults_and_overrides() {
+        let mut a = Asm::new();
+        a.nop();
+        let main = a.here("main");
+        a.halt();
+        a.entry(main);
+        let p = a.assemble().unwrap();
+        assert_eq!(p.entry, p.sym("main"));
+    }
+}

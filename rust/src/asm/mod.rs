@@ -1,0 +1,16 @@
+//! Assembler layer — the software-tooling substrate of the paper
+//! (its binutils/GCC patch for I′/S′ inline assembly, §2.1).
+//!
+//! Two front ends share one back end:
+//! - [`Asm`] — a typed builder API; all in-repo workloads are authored
+//!   through it (the analogue of the paper's inline asm in C).
+//! - [`assemble_text`] — a `.s`-style text assembler with the custom
+//!   SIMD mnemonics (`c0.lv`, `c2.sort`, …), used by examples and tests.
+
+pub mod builder;
+pub mod program;
+pub mod text;
+
+pub use builder::{Asm, AsmError, Label};
+pub use program::{Program, DEFAULT_DATA_BASE, DEFAULT_TEXT_BASE};
+pub use text::{assemble_text, assemble_text_with, ParseError};

@@ -1,0 +1,131 @@
+//! Assembled program image: text + data segments, symbols, entry point.
+//!
+//! The softcore has a single flat address space shared between data and
+//! instructions (modified Harvard — §3 of the paper: IL1 and DL1 both sit
+//! in front of the unified LLC), so a `Program` is just two byte ranges
+//! plus metadata. The simulator copies both into simulated DRAM.
+
+use std::collections::HashMap;
+
+/// Default load address of the text segment.
+pub const DEFAULT_TEXT_BASE: u32 = 0x0000_1000;
+
+/// Default load address of the data segment (1 MiB up, leaving room for
+/// large unrolled loops).
+pub const DEFAULT_DATA_BASE: u32 = 0x0010_0000;
+
+/// Address the core jumps to on `ecall`-halt convention; execution stops
+/// when the core executes `ecall` (the softcore framework's "return to
+/// host" — in hardware this raised an interrupt to the ARM host).
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Load address of the text segment (instruction words).
+    pub text_base: u32,
+    /// Machine words of the text segment.
+    pub text: Vec<u32>,
+    /// Load address of the initialised data segment.
+    pub data_base: u32,
+    /// Initialised data bytes.
+    pub data: Vec<u8>,
+    /// Symbol table (labels → absolute addresses).
+    pub symbols: HashMap<String, u32>,
+    /// Entry point (defaults to `text_base`).
+    pub entry: u32,
+}
+
+impl Program {
+    /// Size of the text segment in bytes.
+    pub fn text_size(&self) -> usize {
+        self.text.len() * 4
+    }
+
+    /// Address one past the end of the text segment.
+    pub fn text_end(&self) -> u32 {
+        self.text_base + self.text_size() as u32
+    }
+
+    /// Address one past the end of the data segment.
+    pub fn data_end(&self) -> u32 {
+        self.data_base + self.data.len() as u32
+    }
+
+    /// Look up a symbol, panicking with a useful message if absent
+    /// (programs are authored in-repo; a missing symbol is a bug).
+    pub fn sym(&self, name: &str) -> u32 {
+        *self
+            .symbols
+            .get(name)
+            .unwrap_or_else(|| panic!("program has no symbol '{name}'"))
+    }
+
+    /// Disassemble the text segment (for traces and debugging).
+    pub fn disassemble(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        // Invert the symbol table for labelling.
+        let mut by_addr: HashMap<u32, Vec<&str>> = HashMap::new();
+        for (name, &addr) in &self.symbols {
+            by_addr.entry(addr).or_default().push(name);
+        }
+        for (i, &word) in self.text.iter().enumerate() {
+            let addr = self.text_base + (i as u32) * 4;
+            if let Some(names) = by_addr.get(&addr) {
+                for n in names {
+                    let _ = writeln!(out, "{n}:");
+                }
+            }
+            match crate::isa::decode(word) {
+                Ok(instr) => {
+                    let _ = writeln!(out, "  {addr:#010x}: {word:08x}  {instr}");
+                }
+                Err(_) => {
+                    let _ = writeln!(out, "  {addr:#010x}: {word:08x}  .word {word:#010x}");
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Program {
+        Program {
+            text_base: 0x1000,
+            text: vec![0x0015_0513, 0x0000_0073], // addi a0,a0,1; ecall
+            data_base: 0x2000,
+            data: vec![1, 2, 3],
+            symbols: HashMap::from([("start".to_string(), 0x1000u32)]),
+            entry: 0x1000,
+        }
+    }
+
+    #[test]
+    fn segment_geometry() {
+        let p = tiny();
+        assert_eq!(p.text_size(), 8);
+        assert_eq!(p.text_end(), 0x1008);
+        assert_eq!(p.data_end(), 0x2003);
+    }
+
+    #[test]
+    fn symbol_lookup() {
+        assert_eq!(tiny().sym("start"), 0x1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "no symbol")]
+    fn missing_symbol_panics() {
+        tiny().sym("nope");
+    }
+
+    #[test]
+    fn disassembly_includes_labels_and_mnemonics() {
+        let d = tiny().disassemble();
+        assert!(d.contains("start:"));
+        assert!(d.contains("addi a0, a0, 1"));
+        assert!(d.contains("ecall"));
+    }
+}

@@ -1,0 +1,777 @@
+//! Text assembler: a `.s`-like surface syntax over [`super::Asm`].
+//!
+//! Supports the RV32IM mnemonics, the pseudo-instructions GNU `as`
+//! accepts for them, the paper's custom-SIMD mnemonics (both the named
+//! forms like `c2.sort` and the generic `cN.iK`/`cN.sK` forms), labels,
+//! and a directive subset: `.text .data .word .half .byte .space .align
+//! .equ .global .entry`.
+//!
+//! ```
+//! use simdsoftcore::asm::assemble_text;
+//! let prog = assemble_text(r#"
+//!     .text
+//!     main:
+//!         li   a0, 5
+//!     loop:
+//!         addi a0, a0, -1
+//!         bnez a0, loop
+//!         ecall
+//! "#).unwrap();
+//! assert_eq!(prog.entry, prog.sym("main"));
+//! ```
+
+use super::builder::{Asm, AsmError, Label};
+use crate::isa::instr::{CustomSlot, IPrime, Instr, SPrime};
+use crate::isa::reg::{Reg, VReg, ZERO};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ParseError {
+    #[error("line {line}: {msg}")]
+    Syntax { line: usize, msg: String },
+    #[error(transparent)]
+    Asm(#[from] AsmError),
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError::Syntax { line, msg: msg.into() }
+}
+
+/// Assemble a source string with default segment bases.
+pub fn assemble_text(src: &str) -> Result<crate::asm::Program, ParseError> {
+    assemble_text_with(src, Asm::new())
+}
+
+/// Assemble a source string into a caller-configured builder (custom
+/// segment bases etc.).
+pub fn assemble_text_with(src: &str, mut a: Asm) -> Result<crate::asm::Program, ParseError> {
+    let mut parser = Parser { equs: HashMap::new(), in_data: false, entry_name: None };
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno + 1;
+        let code = strip_comment(raw).trim();
+        if code.is_empty() {
+            continue;
+        }
+        // A line may carry `label:` prefixes before a statement.
+        let mut rest = code;
+        while let Some(colon) = find_label_colon(rest) {
+            let (name, tail) = rest.split_at(colon);
+            let name = name.trim();
+            if !is_ident(name) {
+                return Err(err(line, format!("bad label name '{name}'")));
+            }
+            let l = a.named_label(name);
+            if parser.in_data {
+                a.bind_data(l);
+            } else {
+                a.bind(l);
+            }
+            rest = tail[1..].trim();
+        }
+        if rest.is_empty() {
+            continue;
+        }
+        parser.statement(&mut a, line, rest)?;
+    }
+
+    if let Some(name) = parser.entry_name {
+        let l = a.named_label(&name);
+        a.entry(l);
+    }
+    Ok(a.assemble()?)
+}
+
+struct Parser {
+    equs: HashMap<String, i64>,
+    in_data: bool,
+    entry_name: Option<String>,
+}
+
+impl Parser {
+    fn statement(&mut self, a: &mut Asm, line: usize, stmt: &str) -> Result<(), ParseError> {
+        let (mnemonic, rest) = match stmt.find(char::is_whitespace) {
+            Some(i) => (&stmt[..i], stmt[i..].trim()),
+            None => (stmt, ""),
+        };
+        let ops: Vec<&str> = if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',').map(str::trim).collect()
+        };
+
+        if let Some(directive) = mnemonic.strip_prefix('.') {
+            return self.directive(a, line, directive, &ops);
+        }
+        if self.in_data {
+            return Err(err(line, format!("instruction '{mnemonic}' in .data section")));
+        }
+        self.instruction(a, line, mnemonic, &ops)
+    }
+
+    fn directive(
+        &mut self,
+        a: &mut Asm,
+        line: usize,
+        d: &str,
+        ops: &[&str],
+    ) -> Result<(), ParseError> {
+        match d {
+            "text" => self.in_data = false,
+            "data" => self.in_data = true,
+            "global" | "globl" | "section" | "p2align" => {} // accepted, ignored
+            "entry" => {
+                let name = ops.first().ok_or_else(|| err(line, ".entry needs a symbol"))?;
+                self.entry_name = Some(name.to_string());
+            }
+            "equ" | "set" => {
+                if ops.len() != 2 {
+                    return Err(err(line, ".equ needs 'name, value'"));
+                }
+                let v = self.imm(line, ops[1])?;
+                self.equs.insert(ops[0].to_string(), v);
+            }
+            "word" => {
+                for op in ops {
+                    if let Ok(v) = self.imm(line, op) {
+                        if self.in_data {
+                            a.dw(&[v as u32]);
+                        } else {
+                            a.word(v as u32);
+                        }
+                    } else if is_ident(op) {
+                        let l = a.named_label(op);
+                        if self.in_data {
+                            // Data-side label words are not supported (they
+                            // would need data fixups); text-side are.
+                            return Err(err(line, ".word <label> only allowed in .text"));
+                        }
+                        a.word_label(l);
+                    } else {
+                        return Err(err(line, format!("bad .word operand '{op}'")));
+                    }
+                }
+            }
+            "half" => {
+                for op in ops {
+                    let v = self.imm(line, op)?;
+                    if self.in_data {
+                        a.db(&(v as u16).to_le_bytes());
+                    } else {
+                        return Err(err(line, ".half only allowed in .data"));
+                    }
+                }
+            }
+            "byte" => {
+                for op in ops {
+                    let v = self.imm(line, op)?;
+                    if self.in_data {
+                        a.db(&[(v as u8)]);
+                    } else {
+                        return Err(err(line, ".byte only allowed in .data"));
+                    }
+                }
+            }
+            "space" | "zero" => {
+                let n = self.imm(line, ops.first().ok_or_else(|| err(line, ".space needs size"))?)?;
+                if self.in_data {
+                    a.dspace(n as usize);
+                } else {
+                    return Err(err(line, ".space only allowed in .data"));
+                }
+            }
+            "align" => {
+                let n = self.imm(line, ops.first().ok_or_else(|| err(line, ".align needs n"))?)?;
+                if self.in_data {
+                    a.dalign(1usize << n);
+                } // .text is always word-aligned; ignore
+            }
+            other => return Err(err(line, format!("unknown directive .{other}"))),
+        }
+        Ok(())
+    }
+
+    fn reg(&self, line: usize, s: &str) -> Result<Reg, ParseError> {
+        Reg::parse(s).ok_or_else(|| err(line, format!("bad register '{s}'")))
+    }
+
+    fn vreg(&self, line: usize, s: &str) -> Result<VReg, ParseError> {
+        VReg::parse(s).ok_or_else(|| err(line, format!("bad vector register '{s}'")))
+    }
+
+    fn imm(&self, line: usize, s: &str) -> Result<i64, ParseError> {
+        parse_int(s)
+            .or_else(|| self.equs.get(s).copied())
+            .ok_or_else(|| err(line, format!("bad immediate '{s}'")))
+    }
+
+    /// `offset(base)` memory operand.
+    fn mem(&self, line: usize, s: &str) -> Result<(i32, Reg), ParseError> {
+        let open = s.find('(').ok_or_else(|| err(line, format!("bad memory operand '{s}'")))?;
+        if !s.ends_with(')') {
+            return Err(err(line, format!("bad memory operand '{s}'")));
+        }
+        let off_str = s[..open].trim();
+        let off = if off_str.is_empty() { 0 } else { self.imm(line, off_str)? };
+        let base = self.reg(line, s[open + 1..s.len() - 1].trim())?;
+        Ok((off as i32, base))
+    }
+
+    fn label(&self, a: &mut Asm, s: &str, line: usize) -> Result<Label, ParseError> {
+        if !is_ident(s) {
+            return Err(err(line, format!("bad label operand '{s}'")));
+        }
+        Ok(a.named_label(s))
+    }
+
+    #[allow(clippy::too_many_lines)]
+    fn instruction(
+        &mut self,
+        a: &mut Asm,
+        line: usize,
+        m: &str,
+        ops: &[&str],
+    ) -> Result<(), ParseError> {
+        macro_rules! need {
+            ($n:expr) => {
+                if ops.len() != $n {
+                    return Err(err(line, format!("'{m}' expects {} operands, got {}", $n, ops.len())));
+                }
+            };
+        }
+        macro_rules! r3 {
+            ($f:ident) => {{
+                need!(3);
+                let (rd, rs1, rs2) =
+                    (self.reg(line, ops[0])?, self.reg(line, ops[1])?, self.reg(line, ops[2])?);
+                a.$f(rd, rs1, rs2);
+            }};
+        }
+        macro_rules! i3 {
+            ($f:ident) => {{
+                need!(3);
+                let (rd, rs1) = (self.reg(line, ops[0])?, self.reg(line, ops[1])?);
+                let imm = self.imm(line, ops[2])? as i32;
+                a.$f(rd, rs1, imm);
+            }};
+        }
+        macro_rules! sh3 {
+            ($f:ident) => {{
+                need!(3);
+                let (rd, rs1) = (self.reg(line, ops[0])?, self.reg(line, ops[1])?);
+                let sh = self.imm(line, ops[2])? as u8;
+                a.$f(rd, rs1, sh);
+            }};
+        }
+        macro_rules! ld {
+            ($f:ident) => {{
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let (off, base) = self.mem(line, ops[1])?;
+                a.$f(rd, off, base);
+            }};
+        }
+        macro_rules! st {
+            ($f:ident) => {{
+                need!(2);
+                let rs2 = self.reg(line, ops[0])?;
+                let (off, base) = self.mem(line, ops[1])?;
+                a.$f(rs2, off, base);
+            }};
+        }
+        macro_rules! br2 {
+            ($f:ident) => {{
+                need!(3);
+                let (rs1, rs2) = (self.reg(line, ops[0])?, self.reg(line, ops[1])?);
+                let t = self.label(a, ops[2], line)?;
+                a.$f(rs1, rs2, t);
+            }};
+        }
+        macro_rules! br1 {
+            ($f:ident) => {{
+                need!(2);
+                let rs = self.reg(line, ops[0])?;
+                let t = self.label(a, ops[1], line)?;
+                a.$f(rs, t);
+            }};
+        }
+
+        // Custom-SIMD mnemonics (named binding + generic forms).
+        if let Some(rest) = m.strip_prefix('c') {
+            if let Some((slot_s, op_s)) = rest.split_once('.') {
+                if let Ok(slot_i) = slot_s.parse::<usize>() {
+                    if let Some(slot) = CustomSlot::from_index(slot_i) {
+                        return self.custom(a, line, slot, op_s, ops);
+                    }
+                }
+            }
+        }
+
+        match m {
+            "lui" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let hi = self.imm(line, ops[1])? as i32;
+                a.lui(rd, hi << 12);
+            }
+            "auipc" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let hi = self.imm(line, ops[1])? as i32;
+                a.auipc(rd, hi << 12);
+            }
+            "jal" => match ops.len() {
+                1 => {
+                    let t = self.label(a, ops[0], line)?;
+                    a.call(t);
+                }
+                2 => {
+                    let rd = self.reg(line, ops[0])?;
+                    let t = self.label(a, ops[1], line)?;
+                    a.jal(rd, t);
+                }
+                n => return Err(err(line, format!("jal expects 1-2 operands, got {n}"))),
+            },
+            "jalr" => match ops.len() {
+                1 => {
+                    let rs = self.reg(line, ops[0])?;
+                    a.jalr(crate::isa::reg::RA, rs, 0);
+                }
+                2 => {
+                    let rd = self.reg(line, ops[0])?;
+                    let (off, base) = self.mem(line, ops[1])?;
+                    a.jalr(rd, base, off);
+                }
+                n => return Err(err(line, format!("jalr expects 1-2 operands, got {n}"))),
+            },
+            "beq" => br2!(beq),
+            "bne" => br2!(bne),
+            "blt" => br2!(blt),
+            "bge" => br2!(bge),
+            "bltu" => br2!(bltu),
+            "bgeu" => br2!(bgeu),
+            "bgt" => br2!(bgt),
+            "ble" => br2!(ble),
+            "bgtu" => br2!(bgtu),
+            "bleu" => br2!(bleu),
+            "beqz" => br1!(beqz),
+            "bnez" => br1!(bnez),
+            "blez" => br1!(blez),
+            "bgez" => br1!(bgez),
+            "bltz" => br1!(bltz),
+            "bgtz" => br1!(bgtz),
+            "lb" => ld!(lb),
+            "lh" => ld!(lh),
+            "lw" => ld!(lw),
+            "lbu" => ld!(lbu),
+            "lhu" => ld!(lhu),
+            "sb" => st!(sb),
+            "sh" => st!(sh),
+            "sw" => st!(sw),
+            "addi" => i3!(addi),
+            "slti" => i3!(slti),
+            "sltiu" => i3!(sltiu),
+            "xori" => i3!(xori),
+            "ori" => i3!(ori),
+            "andi" => i3!(andi),
+            "slli" => sh3!(slli),
+            "srli" => sh3!(srli),
+            "srai" => sh3!(srai),
+            "add" => r3!(add),
+            "sub" => r3!(sub),
+            "sll" => r3!(sll),
+            "slt" => r3!(slt),
+            "sltu" => r3!(sltu),
+            "xor" => r3!(xor),
+            "srl" => r3!(srl),
+            "sra" => r3!(sra),
+            "or" => r3!(or),
+            "and" => r3!(and),
+            "mul" => r3!(mul),
+            "mulh" => r3!(mulh),
+            "mulhsu" => r3!(mulhsu),
+            "mulhu" => r3!(mulhu),
+            "div" => r3!(div),
+            "divu" => r3!(divu),
+            "rem" => r3!(rem),
+            "remu" => r3!(remu),
+            "fence" => a.fence(),
+            "ecall" | "halt" => a.ecall(),
+            "ebreak" => a.ebreak(),
+            "nop" => a.nop(),
+            "li" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let v = self.imm(line, ops[1])?;
+                a.li(rd, v);
+            }
+            "la" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let t = self.label(a, ops[1], line)?;
+                a.la(rd, t);
+            }
+            "mv" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let rs = self.reg(line, ops[1])?;
+                a.mv(rd, rs);
+            }
+            "not" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let rs = self.reg(line, ops[1])?;
+                a.not(rd, rs);
+            }
+            "neg" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let rs = self.reg(line, ops[1])?;
+                a.neg(rd, rs);
+            }
+            "seqz" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let rs = self.reg(line, ops[1])?;
+                a.seqz(rd, rs);
+            }
+            "snez" => {
+                need!(2);
+                let rd = self.reg(line, ops[0])?;
+                let rs = self.reg(line, ops[1])?;
+                a.snez(rd, rs);
+            }
+            "j" => {
+                need!(1);
+                let t = self.label(a, ops[0], line)?;
+                a.j(t);
+            }
+            "call" => {
+                need!(1);
+                let t = self.label(a, ops[0], line)?;
+                a.call(t);
+            }
+            "jr" => {
+                need!(1);
+                let rs = self.reg(line, ops[0])?;
+                a.jr(rs);
+            }
+            "ret" => a.ret(),
+            "rdcycle" => {
+                need!(1);
+                let rd = self.reg(line, ops[0])?;
+                a.rdcycle(rd);
+            }
+            "rdcycleh" => {
+                need!(1);
+                let rd = self.reg(line, ops[0])?;
+                a.rdcycleh(rd);
+            }
+            "rdinstret" => {
+                need!(1);
+                let rd = self.reg(line, ops[0])?;
+                a.rdinstret(rd);
+            }
+            other => return Err(err(line, format!("unknown mnemonic '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Custom instruction forms:
+    /// named: `c0.lv vd, rs1, rs2` / `c0.sv vs, rs1, rs2` / `c2.sort vd, vs`
+    /// / `c1.merge vd1, vd2, vs1, vs2` / `c1.vadd vd, vs1, vs2` /
+    /// `c1.vscale vd, vs, rs` / `c3.prefix vd, vs` / `c3.reset` /
+    /// `c3.carry rd`;
+    /// generic: `cN.iK rd, vrd1, vrd2, rs1, vrs1, vrs2` and
+    /// `cN.sK rd, vrd1, rs1, rs2, vrs1, imm`.
+    fn custom(
+        &mut self,
+        a: &mut Asm,
+        line: usize,
+        slot: CustomSlot,
+        op: &str,
+        ops: &[&str],
+    ) -> Result<(), ParseError> {
+        match (slot, op) {
+            (CustomSlot::C0, "lv") => {
+                if ops.len() != 3 {
+                    return Err(err(line, "c0.lv expects 'vd, rs1, rs2'"));
+                }
+                let vd = self.vreg(line, ops[0])?;
+                let rs1 = self.reg(line, ops[1])?;
+                let rs2 = self.reg(line, ops[2])?;
+                a.lv(vd, rs1, rs2);
+            }
+            (CustomSlot::C0, "sv") => {
+                if ops.len() != 3 {
+                    return Err(err(line, "c0.sv expects 'vs, rs1, rs2'"));
+                }
+                let vs = self.vreg(line, ops[0])?;
+                let rs1 = self.reg(line, ops[1])?;
+                let rs2 = self.reg(line, ops[2])?;
+                a.sv(vs, rs1, rs2);
+            }
+            (CustomSlot::C2, "sort") => {
+                if ops.len() != 2 {
+                    return Err(err(line, "c2.sort expects 'vd, vs'"));
+                }
+                let vd = self.vreg(line, ops[0])?;
+                let vs = self.vreg(line, ops[1])?;
+                a.sort8(vd, vs);
+            }
+            (CustomSlot::C1, "merge") => {
+                if ops.len() != 4 {
+                    return Err(err(line, "c1.merge expects 'vd1, vd2, vs1, vs2'"));
+                }
+                let vd1 = self.vreg(line, ops[0])?;
+                let vd2 = self.vreg(line, ops[1])?;
+                let vs1 = self.vreg(line, ops[2])?;
+                let vs2 = self.vreg(line, ops[3])?;
+                a.merge(vd1, vd2, vs1, vs2);
+            }
+            (CustomSlot::C1, "vadd") => {
+                if ops.len() != 3 {
+                    return Err(err(line, "c1.vadd expects 'vd, vs1, vs2'"));
+                }
+                let vd = self.vreg(line, ops[0])?;
+                let vs1 = self.vreg(line, ops[1])?;
+                let vs2 = self.vreg(line, ops[2])?;
+                a.vadd(vd, vs1, vs2);
+            }
+            (CustomSlot::C1, "vscale") => {
+                if ops.len() != 3 {
+                    return Err(err(line, "c1.vscale expects 'vd, vs, rs'"));
+                }
+                let vd = self.vreg(line, ops[0])?;
+                let vs = self.vreg(line, ops[1])?;
+                let rs = self.reg(line, ops[2])?;
+                a.vscale(vd, vs, rs);
+            }
+            (CustomSlot::C3, "prefix") => {
+                if ops.len() != 2 {
+                    return Err(err(line, "c3.prefix expects 'vd, vs'"));
+                }
+                let vd = self.vreg(line, ops[0])?;
+                let vs = self.vreg(line, ops[1])?;
+                a.prefix(vd, vs);
+            }
+            (CustomSlot::C3, "reset") => a.prefix_reset(),
+            (CustomSlot::C3, "carry") => {
+                if ops.len() != 1 {
+                    return Err(err(line, "c3.carry expects 'rd'"));
+                }
+                let rd = self.reg(line, ops[0])?;
+                a.prefix_carry(rd);
+            }
+            _ => {
+                // Generic forms: iK / sK.
+                if let Some(k) = op.strip_prefix('i').and_then(|k| k.parse::<u8>().ok()) {
+                    if ops.len() != 6 {
+                        return Err(err(line, "cN.iK expects 'rd, vrd1, vrd2, rs1, vrs1, vrs2'"));
+                    }
+                    let instr = Instr::CustomI {
+                        slot,
+                        funct3: k,
+                        ops: IPrime {
+                            rd: self.reg(line, ops[0])?,
+                            vrd1: self.vreg(line, ops[1])?,
+                            vrd2: self.vreg(line, ops[2])?,
+                            rs1: self.reg(line, ops[3])?,
+                            vrs1: self.vreg(line, ops[4])?,
+                            vrs2: self.vreg(line, ops[5])?,
+                        },
+                    };
+                    a.emit(instr);
+                } else if let Some(k) = op.strip_prefix('s').and_then(|k| k.parse::<u8>().ok()) {
+                    if ops.len() != 6 {
+                        return Err(err(line, "cN.sK expects 'rd, vrd1, rs1, rs2, vrs1, imm'"));
+                    }
+                    let instr = Instr::CustomS {
+                        slot,
+                        funct3: k,
+                        ops: SPrime {
+                            rd: self.reg(line, ops[0])?,
+                            vrd1: self.vreg(line, ops[1])?,
+                            rs1: self.reg(line, ops[2])?,
+                            rs2: self.reg(line, ops[3])?,
+                            vrs1: self.vreg(line, ops[4])?,
+                            imm: self.imm(line, ops[5])? as u8,
+                        },
+                    };
+                    a.emit(instr);
+                } else {
+                    return Err(err(line, format!("unknown custom mnemonic '{slot}.{op}'")));
+                }
+            }
+        }
+        let _ = ZERO; // silence unused import on some cfgs
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut end = line.len();
+    for pat in ["#", "//", ";"] {
+        if let Some(i) = line.find(pat) {
+            end = end.min(i);
+        }
+    }
+    &line[..end]
+}
+
+/// Find the colon ending a leading `label:` prefix (not inside operands).
+fn find_label_colon(s: &str) -> Option<usize> {
+    let colon = s.find(':')?;
+    // Only treat as a label if everything before the colon is an identifier.
+    is_ident(s[..colon].trim()).then_some(colon)
+}
+
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+}
+
+fn parse_int(s: &str) -> Option<i64> {
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16).ok().or_else(|| u64::from_str_radix(hex, 16).ok().map(|u| u as i64))?
+    } else if let Some(bin) = body.strip_prefix("0b") {
+        i64::from_str_radix(bin, 2).ok()?
+    } else {
+        body.parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn countdown_loop_assembles() {
+        let p = assemble_text(
+            r#"
+            # simple countdown
+            .entry main
+            main:
+                li a0, 3
+            loop:
+                addi a0, a0, -1   // decrement
+                bnez a0, loop
+                ecall
+        "#,
+        )
+        .unwrap();
+        assert_eq!(p.entry, p.sym("main"));
+        assert_eq!(p.text.len(), 4);
+        assert_eq!(
+            decode(p.text[2]).unwrap(),
+            Instr::Bne { rs1: A0, rs2: ZERO, offset: -4 }
+        );
+    }
+
+    #[test]
+    fn data_and_la() {
+        let p = assemble_text(
+            r#"
+            .data
+            table: .word 10, 20, 30
+            buf:   .space 64
+            .text
+            main:
+                la a0, table
+                lw a1, 4(a0)
+                ecall
+        "#,
+        )
+        .unwrap();
+        assert_eq!(&p.data[4..8], &20u32.to_le_bytes());
+        assert_eq!(p.sym("buf"), p.sym("table") + 12);
+    }
+
+    #[test]
+    fn custom_mnemonics() {
+        let p = assemble_text(
+            r#"
+            main:
+                c0.lv v1, a0, a1
+                c2.sort v1, v1
+                c1.merge v1, v2, v1, v2
+                c3.prefix v3, v1
+                c3.reset
+                c3.carry a5
+                c0.sv v1, a2, a3
+                c1.i3 a0, v1, v2, a1, v3, v4
+                c0.s6 a0, v1, a1, a2, v2, 1
+                ecall
+        "#,
+        )
+        .unwrap();
+        for w in &p.text[..9] {
+            assert!(matches!(
+                decode(*w).unwrap(),
+                Instr::CustomI { .. } | Instr::CustomS { .. }
+            ));
+        }
+        match decode(p.text[7]).unwrap() {
+            Instr::CustomI { slot: CustomSlot::C1, funct3: 3, ops } => {
+                assert_eq!(ops.rd, A0);
+                assert_eq!(ops.vrs2, V4);
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn equ_constants() {
+        let p = assemble_text(
+            r#"
+            .equ N, 64
+            main:
+                li a0, N
+                addi a0, a0, N
+                ecall
+        "#,
+        )
+        .unwrap();
+        assert_eq!(decode(p.text[0]).unwrap(), Instr::Addi { rd: A0, rs1: ZERO, imm: 64 });
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = assemble_text("main:\n  bogus a0, a1\n").unwrap_err();
+        match e {
+            ParseError::Syntax { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("bogus"));
+            }
+            other => panic!("{other}"),
+        }
+        let e = assemble_text("  lw a0, 4[sp]\n").unwrap_err();
+        assert!(matches!(e, ParseError::Syntax { line: 1, .. }));
+    }
+
+    #[test]
+    fn hex_and_binary_immediates() {
+        let p = assemble_text("li a0, 0x10\nli a1, 0b101\nli a2, -0x8\necall\n").unwrap();
+        assert_eq!(decode(p.text[0]).unwrap(), Instr::Addi { rd: A0, rs1: ZERO, imm: 16 });
+        assert_eq!(decode(p.text[1]).unwrap(), Instr::Addi { rd: A1, rs1: ZERO, imm: 5 });
+        assert_eq!(decode(p.text[2]).unwrap(), Instr::Addi { rd: A2, rs1: ZERO, imm: -8 });
+    }
+
+    #[test]
+    fn comments_all_styles() {
+        let p = assemble_text("nop # a\nnop // b\nnop ; c\necall\n").unwrap();
+        assert_eq!(p.text.len(), 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Comparator baselines of the paper's evaluation: the PicoRV32 drop-in
+//! softcore model (Fig. 4) and the calibrated ARM Cortex-A53 reference
+//! (§4.3 speedup anchors).
+
+pub mod arm_a53;
+pub mod picorv32;
+
+pub use picorv32::{PicoConfig, PicoCore};

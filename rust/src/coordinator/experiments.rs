@@ -1,0 +1,516 @@
+//! Experiment drivers — one function per table/figure of the paper
+//! (DESIGN.md §4 maps each to its modules). Every driver returns a
+//! [`Table`] whose rows mirror what the paper plots, with the paper's
+//! reference values carried in notes so reports are self-checking.
+
+use super::report::Table;
+use super::sweep::parallel_map;
+use crate::baseline::arm_a53;
+use crate::baseline::{PicoConfig, PicoCore};
+use crate::core::{Core, CoreConfig, Trace};
+use crate::isa::reg::*;
+use crate::mem::MemConfig;
+use crate::util::stats::fmt_rate;
+use crate::workloads::{common, cpubench, memcpy, prefix, sort, stream};
+
+/// Experiment scale: `full` reproduces the paper's sizes (256 MiB memcpy,
+/// 64 MiB sort inputs); default is scaled for CI-speed runs with the same
+/// asymptotic behaviour (all sizes far exceed the 256 KiB LLC).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scale {
+    pub full: bool,
+}
+
+impl Scale {
+    pub fn memcpy_bytes(&self) -> usize {
+        if self.full {
+            256 * 1024 * 1024
+        } else {
+            8 * 1024 * 1024
+        }
+    }
+
+    pub fn sort_n(&self) -> usize {
+        if self.full {
+            16 * 1024 * 1024 // 64 MiB of i32
+        } else {
+            64 * 1024
+        }
+    }
+
+    pub fn prefix_n(&self) -> usize {
+        if self.full {
+            16 * 1024 * 1024
+        } else {
+            1024 * 1024
+        }
+    }
+
+    pub fn stream_sizes(&self) -> Vec<usize> {
+        // Elements per array; Fig. 4's x-axis spans sizes around the
+        // cache capacities into DRAM-resident territory.
+        if self.full {
+            vec![4 * 1024, 16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024, 4 * 1024 * 1024]
+        } else {
+            vec![4 * 1024, 16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024]
+        }
+    }
+
+    /// DRAM size covering `buffers` × `bytes` under the workload layout.
+    fn dram_bytes(&self, buffers: usize, bytes: usize) -> usize {
+        let need = common::BUF_BASE as usize + buffers * (bytes + 128 * 1024);
+        // Round to a 2 MiB multiple (covers every LLC block size).
+        need.div_ceil(2 * 1024 * 1024) * 2 * 1024 * 1024
+    }
+}
+
+fn core_with(vlen: usize, llc_block_bits: usize, dram_bytes: usize) -> Core {
+    let mut mem = MemConfig::for_vlen(vlen);
+    // Keep LLC capacity at 256 KiB while sweeping block size.
+    let capacity = mem.llc.capacity_bytes();
+    mem.llc.block_bits = llc_block_bits;
+    mem.llc.sets = capacity / (llc_block_bits / 8) / mem.llc.ways;
+    mem.dram.size_bytes = dram_bytes;
+    Core::new(CoreConfig::for_vlen(vlen), mem)
+}
+
+/// Fig. 3 (left): memcpy throughput vs LLC block size, VLEN = 256.
+pub fn fig3_left(scale: Scale) -> Table {
+    let bytes = scale.memcpy_bytes();
+    let dram = scale.dram_bytes(2, bytes);
+    let blocks = vec![2048usize, 4096, 8192, 16384];
+    let results = parallel_map(blocks, |block_bits| {
+        let mut core = core_with(256, block_bits, dram);
+        let r = memcpy::run(&mut core, bytes, true).expect("memcpy runs");
+        (block_bits, r)
+    });
+
+    let mut t = Table::new(
+        format!("Fig. 3 (left): memcpy vs LLC block size ({} MiB, VLEN=256)", bytes >> 20),
+        &["LLC block (bits)", "GB/s", "B/cycle", "verified"],
+    );
+    for (block_bits, r) in &results {
+        t.row(&[
+            block_bits.to_string(),
+            format!("{:.2}", r.throughput.bytes_per_second() / 1e9),
+            format!("{:.2}", r.throughput.bytes_per_cycle()),
+            r.verified.to_string(),
+        ]);
+    }
+    t.note("paper: improvement plateaus at ~8192-bit blocks; 16384-bit selected (Table 1)");
+    let first = results.first().unwrap().1.throughput.bytes_per_cycle();
+    let last = results.last().unwrap().1.throughput.bytes_per_cycle();
+    t.note(format!("monotone gain 2048→16384: {:.2}×", last / first));
+    t
+}
+
+/// Fig. 3 (right): memcpy throughput vs vector register width.
+pub fn fig3_right(scale: Scale) -> Table {
+    let bytes = scale.memcpy_bytes();
+    let dram = scale.dram_bytes(2, bytes);
+    let vlens = vec![128usize, 256, 512, 1024];
+    let results = parallel_map(vlens, |vlen| {
+        let mut core = core_with(vlen, 16384, dram);
+        let r = memcpy::run(&mut core, bytes, true).expect("memcpy runs");
+        (vlen, core.cfg.fmax_mhz, r)
+    });
+
+    let mut t = Table::new(
+        format!("Fig. 3 (right): memcpy vs vector width ({} MiB, LLC block 16384)", bytes >> 20),
+        &["VLEN (bits)", "f_max (MHz)", "GB/s", "B/cycle", "verified"],
+    );
+    for (vlen, fmax, r) in &results {
+        t.row(&[
+            vlen.to_string(),
+            format!("{fmax:.0}"),
+            format!("{:.2}", r.throughput.bytes_per_second() / 1e9),
+            format!("{:.2}", r.throughput.bytes_per_cycle()),
+            r.verified.to_string(),
+        ]);
+    }
+    t.note("paper: 0.69 GB/s at VLEN=256 (150 MHz); 1.37 GB/s at VLEN=1024 (125 MHz)");
+    t
+}
+
+/// Table 1: the selected configuration.
+pub fn table1() -> Table {
+    let mem = MemConfig::paper_default();
+    let core = CoreConfig::paper_default();
+    let mut t = Table::new("Table 1: selected configuration", &["component", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("IL1", format!("{} sets, direct-mapped, {}-bit blocks (= {} KiB, registers)",
+            mem.il1.sets, mem.il1.block_bits, mem.il1.capacity_bytes() / 1024)),
+        ("DL1", format!("{} sets, {} ways, {}-bit blocks (= {} KiB, BRAM)",
+            mem.dl1.sets, mem.dl1.ways, mem.dl1.block_bits, mem.dl1.capacity_bytes() / 1024)),
+        ("LLC", format!("{} sets, {} ways, {}-bit blocks, {} sub-blocks (= {} KiB, BRAM)",
+            mem.llc.sets, mem.llc.ways, mem.llc.block_bits, mem.llc_sub_blocks(),
+            mem.llc.capacity_bytes() / 1024)),
+        ("VLEN", format!("{} bits ({} lanes)", core.vlen_bits, core.lanes())),
+        ("interconnect", format!("{}-bit AXI, double rate: {}, burst setup {} cycles",
+            mem.dram.axi_width_bits, mem.dram.double_rate, mem.dram.burst_setup_cycles)),
+        ("f_max", format!("{} MHz", core.fmax_mhz)),
+        ("replacement", "NRU (1 bit/block) at DL1 and LLC; writeback".to_string()),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v]);
+    }
+    t
+}
+
+/// Table 2: DMIPS/MHz & CoreMark/MHz vs literature rows.
+pub fn table2() -> Table {
+    let mut core = Core::paper_default();
+    let d = cpubench::run_dhrystone_like(&mut core, 300).expect("dhrystone runs");
+    let mut core = Core::paper_default();
+    let c = cpubench::run_coremark_like(&mut core, 100).expect("coremark runs");
+
+    let mut t = Table::new(
+        "Table 2: indicative comparison ignoring SIMD",
+        &["core", "DMIPS/MHz", "CoreMark/MHz", "f_max (MHz)", "platform"],
+    );
+    // Literature rows as printed in the paper.
+    for (name, dm, cm, f, plat) in [
+        ("RVCoreP/radix-4 [18]", "1.25", "1.69", "169", "Xilinx Artix-7"),
+        ("RVCoreP/DSP [18]", "1.4", "2.33", "169", "Xilinx Artix-7"),
+        ("PicoRV32 [44]", "0.52", "N/A", "N/A", "(simulation)"),
+        ("RSD/hdiv [23]", "2.04", "N/A", "95", "Zynq"),
+        ("BOOM/hdiv [3,23]", "1.06", "N/A", "76", "Zynq"),
+        ("Taiga [12,25]", ">1", "2.53", "~200", "Xilinx Virtex-7"),
+    ] {
+        t.row(&[name.into(), dm.into(), cm.into(), f.into(), plat.into()]);
+    }
+    t.row(&[
+        "This work (simulated)".into(),
+        format!("{:.2}", d.derived_score),
+        format!("{:.2}", c.derived_score),
+        "150".into(),
+        "cycle-level model".into(),
+    ]);
+    t.note(format!(
+        "measured IPC: dhrystone-like {:.3} (verified: {}), coremark-like {:.3} (verified: {})",
+        d.ipc, d.verified, c.ipc, c.verified
+    ));
+    t.note("paper: 1.47 DMIPS/MHz, 2.26 CoreMark/MHz; scores derived from IPC × published RV32 -O2 instruction counts (see workloads::cpubench)");
+    t
+}
+
+/// Fig. 4: adapted STREAM, softcore vs PicoRV32, across array sizes.
+pub fn fig4(scale: Scale) -> Table {
+    let sizes = scale.stream_sizes();
+    let mut t = Table::new(
+        "Fig. 4: adapted STREAM (no SIMD), MB/s",
+        &["array KiB", "Copy", "Scale", "Add", "Triad", "Pico Copy", "Pico Scale", "Pico Add", "Pico Triad"],
+    );
+    let rows = parallel_map(sizes, |n| {
+        let mut soft = Vec::new();
+        for k in stream::Kernel::ALL {
+            let mut core = Core::paper_default();
+            // STREAM needs 3 arrays; default DRAM (64 MiB) covers the
+            // scaled sizes; bump for the full 4M-element point.
+            if n >= 2 * 1024 * 1024 {
+                let mut mem = MemConfig::paper_default();
+                mem.dram.size_bytes = 256 * 1024 * 1024;
+                core = Core::new(CoreConfig::paper_default(), mem);
+            }
+            let r = stream::run(&mut core, k, n, false).expect("stream runs");
+            assert!(r.verified, "{} failed", k.name());
+            soft.push(r.throughput.bytes_per_second() / 1e6);
+        }
+        // PicoRV32: sizes above its flat behaviour threshold simulate
+        // slowly (every access is a 40-cycle transaction); its rates are
+        // size-independent, so measure on a capped size.
+        let pico_n = n.min(16 * 1024);
+        let mut pico_rates = Vec::new();
+        for k in stream::Kernel::ALL {
+            let addrs = common::layout_buffers(3, pico_n * 4);
+            let prog = stream::build_scalar(k, addrs[0], addrs[1], addrs[2], pico_n);
+            let mut pico = PicoCore::new(PicoConfig::default());
+            pico.load(&prog);
+            // STREAM init: a=1, b=2, c=0.
+            pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(pico_n));
+            pico.host_write(addrs[1], &2i32.to_le_bytes().repeat(pico_n));
+            pico.host_write(addrs[2], &0i32.to_le_bytes().repeat(pico_n));
+            pico.run(common::MAX_INSTRS).expect("pico runs");
+            pico_rates
+                .push(pico.bytes_per_second(k.bytes_per_elem() * pico_n as u64) / 1e6);
+        }
+        (n, soft, pico_rates)
+    });
+    for (n, soft, pico) in rows {
+        let mut cells = vec![format!("{}", n * 4 / 1024)];
+        cells.extend(soft.iter().map(|v| format!("{v:.1}")));
+        cells.extend(pico.iter().map(|v| format!("{v:.1}")));
+        t.row(&cells);
+    }
+    t.note("paper: softcore Copy 183.4 MB/s; PicoRV32 flat 4.8/3.6/4.4/4.0 MB/s across sizes");
+    t
+}
+
+/// §4.1/§4.2 ratios: 38× (STREAM Copy) and 144× (256-bit memcpy) over
+/// PicoRV32.
+pub fn fig4_ratios(scale: Scale) -> Table {
+    // Softcore STREAM copy at a DRAM-resident size.
+    let n = 1024 * 1024;
+    let mut core = Core::paper_default();
+    let soft = stream::run(&mut core, stream::Kernel::Copy, n, false).expect("stream");
+    let soft_mbps = soft.throughput.bytes_per_second() / 1e6;
+    // Softcore vector memcpy.
+    let mut core = Core::paper_default();
+    let vec = memcpy::run(&mut core, scale.memcpy_bytes().min(32 * 1024 * 1024), true)
+        .expect("memcpy");
+    // The paper's 144× is 0.69 GB/s (copied bytes) over 4.8 MB/s —
+    // plain copied-byte rate, not the STREAM 2× convention.
+    let vec_mbps = vec.throughput.bytes_per_second() / 1e6;
+
+    // PicoRV32 copy.
+    let pico_n = 16 * 1024;
+    let addrs = common::layout_buffers(3, pico_n * 4);
+    let prog = stream::build_scalar(stream::Kernel::Copy, addrs[0], addrs[1], addrs[2], pico_n);
+    let mut pico = PicoCore::new(PicoConfig::default());
+    pico.load(&prog);
+    pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(pico_n));
+    pico.run(common::MAX_INSTRS).expect("pico");
+    let pico_mbps = pico.bytes_per_second(8 * pico_n as u64) / 1e6;
+
+    let mut t = Table::new("§4.1–4.2 ratios vs PicoRV32", &["metric", "value"]);
+    t.row(&["softcore STREAM Copy".into(), format!("{soft_mbps:.1} MB/s")]);
+    t.row(&["softcore 256-bit memcpy".into(), format!("{vec_mbps:.1} MB/s")]);
+    t.row(&["PicoRV32 Copy".into(), format!("{pico_mbps:.1} MB/s")]);
+    t.row(&["STREAM Copy ratio".into(), format!("{:.0}×", soft_mbps / pico_mbps)]);
+    t.row(&["memcpy ratio".into(), format!("{:.0}×", vec_mbps / pico_mbps)]);
+    t.note("paper: 38× (Copy) and 144× (256-bit memcpy)");
+    t
+}
+
+/// Fig. 5: merge-block semantics on the paper's example shape.
+pub fn fig5() -> Table {
+    use crate::simd::{CustomUnit, MergeUnit, UnitInputs, VecVal};
+    let mut unit = MergeUnit::new(8);
+    let a = VecVal::from_i32s(&[2, 4, 6, 8, 10, 12, 14, 16]);
+    let b = VecVal::from_i32s(&[1, 3, 5, 7, 9, 11, 13, 15]);
+    let out = unit
+        .execute(&UnitInputs { funct3: 0, rs1: 0, rs2: 0, imm: 0, vrs1: a, vrs2: b })
+        .expect("merge");
+    let mut t = Table::new("Fig. 5: c1_merge semantics", &["operand", "lanes"]);
+    t.row(&["vrs1 (sorted)".into(), a.to_string()]);
+    t.row(&["vrs2 (sorted)".into(), b.to_string()]);
+    t.row(&["vrd1 (low half)".into(), out.vrd1.unwrap().to_string()]);
+    t.row(&["vrd2 (high half)".into(), out.vrd2.unwrap().to_string()]);
+    t.note(format!("merge pipeline depth: {} cycles (leading stage + log2(16) layers)", out.latency));
+    t
+}
+
+/// Fig. 6: cycle-level trace of the sorting-in-chunks loop.
+pub fn fig6() -> String {
+    let mut a = crate::asm::Asm::new();
+    let data: Vec<u32> = (0..64u32).rev().collect();
+    let d = a.words("data", &data);
+    a.la(A0, d);
+    a.li(A2, 0);
+    a.li(A3, 256);
+    let l = a.here("chunk");
+    a.lv(V1, A0, A2);
+    a.addi(T0, A2, 32);
+    a.lv(V2, A0, T0);
+    a.sort8(V1, V1);
+    a.sort8(V2, V2);
+    a.merge(V1, V2, V1, V2);
+    a.sv(V1, A0, A2);
+    a.sv(V2, A0, T0);
+    a.addi(A2, A2, 64);
+    a.bne(A2, A3, l);
+    a.halt();
+    let prog = a.assemble().expect("fig6 program");
+
+    let mut core = Core::paper_default();
+    core.load(&prog);
+    // Trace the second loop iteration (caches warm — the paper's figure
+    // shows the steady-state loop).
+    core.trace = Trace::windowed(15, 35);
+    core.run(10_000).expect("fig6 runs");
+    let mut out = String::from(
+        "Fig. 6: instruction start/end cycles, sorting-in-chunks loop (steady state)\n",
+    );
+    out.push_str(&core.trace.render_pipeline());
+    out.push_str("\nNote the two c2.sort calls overlapping (pipelining), the second\n\
+                  shifted by the second lv's latency, then c1.merge consuming both —\n\
+                  the paper's Fig. 6 schedule.\n");
+    out
+}
+
+/// §4.3.1: sorting speedups (vs softcore qsort and vs ARM A53 qsort).
+pub fn sec43_sort(scale: Scale) -> Table {
+    let n = scale.sort_n();
+    let dram = scale.dram_bytes(2, n * 4);
+    let results = parallel_map(vec![false, true], |vector| {
+        let mut mem = MemConfig::paper_default();
+        mem.dram.size_bytes = dram;
+        let mut core = Core::new(CoreConfig::paper_default(), mem);
+        if vector {
+            sort::run_vector_mergesort(&mut core, n).expect("mergesort")
+        } else {
+            sort::run_qsort(&mut core, n).expect("qsort")
+        }
+    });
+    let (q, m) = (results[0], results[1]);
+    let fmax = 150e6;
+    let q_secs = q.throughput.cycles as f64 / fmax;
+    let m_secs = m.throughput.cycles as f64 / fmax;
+    let a53_secs = arm_a53::qsort_seconds(n);
+
+    let mut t = Table::new(
+        format!("§4.3.1: sorting {} Ki elements ({} KiB)", n >> 10, (n * 4) >> 10),
+        &["implementation", "cycles/elem", "time (s)", "speedup", "verified"],
+    );
+    t.row(&[
+        "qsort() on softcore".into(),
+        format!("{:.1}", q.cycles_per_elem),
+        format!("{q_secs:.3}"),
+        "1.0× (baseline)".into(),
+        q.verified.to_string(),
+    ]);
+    t.row(&[
+        "vector mergesort (c2_sort + c1_merge)".into(),
+        format!("{:.1}", m.cycles_per_elem),
+        format!("{m_secs:.3}"),
+        format!("{:.1}×", q_secs / m_secs),
+        m.verified.to_string(),
+    ]);
+    t.row(&[
+        "qsort() on ARM A53 @1.2 GHz (calibrated model)".into(),
+        "-".into(),
+        format!("{a53_secs:.3}"),
+        format!("{:.1}× vs A53", a53_secs / m_secs),
+        "model".into(),
+    ]);
+    t.note("paper: 12.1× over softcore qsort, 1.8× over A53 qsort (64 MiB input)");
+    t
+}
+
+/// §4.3.2: prefix-sum speedups.
+pub fn sec43_prefix(scale: Scale) -> Table {
+    let n = scale.prefix_n();
+    let dram = scale.dram_bytes(2, n * 4);
+    let results = parallel_map(vec![false, true], |vector| {
+        let mut mem = MemConfig::paper_default();
+        mem.dram.size_bytes = dram;
+        let mut core = Core::new(CoreConfig::paper_default(), mem);
+        prefix::run(&mut core, n, vector).expect("prefix")
+    });
+    let (s, v) = (results[0], results[1]);
+    let fmax = 150e6;
+    let s_secs = s.throughput.cycles as f64 / fmax;
+    let v_secs = v.throughput.cycles as f64 / fmax;
+    let a53_secs = arm_a53::prefix_seconds(n);
+
+    let mut t = Table::new(
+        format!("§4.3.2: prefix sum over {} Ki elements", n >> 10),
+        &["implementation", "cycles/elem", "time (s)", "speedup", "verified"],
+    );
+    t.row(&[
+        "serial on softcore".into(),
+        format!("{:.2}", s.cycles_per_elem),
+        format!("{s_secs:.4}"),
+        "1.0× (baseline)".into(),
+        s.verified.to_string(),
+    ]);
+    t.row(&[
+        "c3_prefix vector".into(),
+        format!("{:.2}", v.cycles_per_elem),
+        format!("{v_secs:.4}"),
+        format!("{:.1}×", s_secs / v_secs),
+        v.verified.to_string(),
+    ]);
+    t.row(&[
+        "serial on ARM A53 @1.2 GHz (calibrated model)".into(),
+        "-".into(),
+        format!("{a53_secs:.4}"),
+        format!("{:.2}× of A53 speed", a53_secs / v_secs),
+        "model".into(),
+    ]);
+    t.note("paper: 4.1× over serial softcore; 0.4× the speed of the A53 (64 MiB)");
+    t
+}
+
+/// §6 discussion: instruction/cycle count reduction vs SSE sorting
+/// networks.
+pub fn discussion() -> Table {
+    use crate::simd::networks;
+    let sort8_cycles = networks::sort_latency(8);
+    let mut t = Table::new(
+        "§6: c2_sort vs SSE sorting-network sequence (Chhugani et al. [8])",
+        &["metric", "SSE (4 elems)", "c2_sort (8 elems)", "reduction"],
+    );
+    t.row(&[
+        "instructions".into(),
+        "13".into(),
+        "1".into(),
+        "13×".into(),
+    ]);
+    t.row(&[
+        "cycles".into(),
+        "26".into(),
+        format!("{sort8_cycles}"),
+        format!("{:.1}×", 26.0 / sort8_cycles as f64),
+    ]);
+    t.row(&["problem size".into(), "4".into(), "8".into(), "2× larger".into()]);
+    t.note("paper: 13× fewer instructions and 4.3× fewer cycles while solving a 2× bigger problem");
+    t
+}
+
+/// memcpy() rate quoted in §4.1 prose at the default configuration.
+pub fn memcpy_headline(scale: Scale) -> Table {
+    let bytes = scale.memcpy_bytes();
+    let dram = scale.dram_bytes(2, bytes);
+    let mut core = core_with(256, 16384, dram);
+    let r = memcpy::run(&mut core, bytes, true).expect("memcpy");
+    let mut t = Table::new("§4.1 headline memcpy (VLEN=256, LLC 16384-bit)", &["metric", "value"]);
+    t.row(&["rate".into(), fmt_rate(r.throughput.bytes_per_second())]);
+    t.row(&["bytes/cycle".into(), format!("{:.2}", r.throughput.bytes_per_cycle())]);
+    t.row(&["IPC".into(), format!("{:.2}", r.throughput.ipc())]);
+    t.row(&["verified".into(), r.verified.to_string()]);
+    let ms = core.mem.stats();
+    t.row(&["DL1 alloc-no-fetch".into(), ms.dl1.alloc_no_fetch.to_string()]);
+    t.row(&["DRAM mean burst".into(), format!("{:.0} B", ms.dram.mean_burst_bytes())]);
+    t.note("paper: 0.69 GB/s at this configuration");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fast smoke tests; full calibration lives in
+    // rust/tests/figures_calibration.rs and the benches.
+
+    #[test]
+    fn table1_prints_selected_config() {
+        let t = table1();
+        let r = t.render();
+        assert!(r.contains("16384-bit blocks"));
+        assert!(r.contains("NRU"));
+    }
+
+    #[test]
+    fn fig5_semantics() {
+        let t = fig5();
+        let r = t.render();
+        assert!(r.contains("[1, 2, 3, 4, 5, 6, 7, 8]"));
+        assert!(r.contains("[9, 10, 11, 12, 13, 14, 15, 16]"));
+    }
+
+    #[test]
+    fn fig6_trace_shows_overlap() {
+        let s = fig6();
+        assert!(s.contains("c2.i0") || s.contains("sort"), "{s}");
+        assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn discussion_ratios() {
+        let t = discussion();
+        let r = t.render();
+        assert!(r.contains("13×"));
+        assert!(r.contains("4.3×"));
+    }
+}

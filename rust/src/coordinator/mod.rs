@@ -1,0 +1,10 @@
+//! Experiment coordination: report tables, the parallel sweep driver and
+//! one driver function per paper table/figure (see DESIGN.md §4 for the
+//! experiment index).
+
+pub mod experiments;
+pub mod report;
+pub mod sweep;
+
+pub use experiments::Scale;
+pub use report::Table;

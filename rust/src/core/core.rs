@@ -1,0 +1,1067 @@
+//! The single-pipeline-stage softcore (§3.2).
+//!
+//! Timing model (the "contract" in DESIGN.md §5):
+//! - every instruction issues in order, one per cycle (plus stalls);
+//! - ALU/branch results are visible to the next instruction (no forwarding
+//!   stalls by construction — consecutive dependent instructions execute
+//!   back-to-back, §3.2);
+//! - loads have a 3-cycle pipe: a dependent instruction executes 3 cycles
+//!   after the load issues (2 effective stall cycles, §3.2); misses add
+//!   the memory system's latency;
+//! - div/rem block for `div_cycles`;
+//! - custom SIMD instructions occupy their unit's pipeline for
+//!   `cN_cycles` (the unit's structural latency) but are fully pipelined
+//!   (initiation interval 1): back-to-back calls overlap, which is the
+//!   effect Fig. 6 visualises;
+//! - dependency tracking is by per-register ready times (scoreboard), the
+//!   simulator equivalent of the template's delayed destination-name
+//!   shift register.
+
+use super::config::CoreConfig;
+use super::trace::{Trace, TraceEvent};
+use crate::asm::Program;
+use crate::isa::instr::csr;
+use crate::isa::{decode, DecodeError, Instr};
+use crate::mem::{MemConfig, MemSys};
+use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecVal};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SimError {
+    #[error("illegal instruction at pc {pc:#010x}: {source}")]
+    Illegal { pc: u32, source: DecodeError },
+    #[error("memory fault at pc {pc:#010x}: access {addr:#010x}+{len} outside DRAM ({size:#x} bytes)")]
+    MemFault { pc: u32, addr: u32, len: usize, size: usize },
+    #[error("custom instruction fault at pc {pc:#010x}: {source}")]
+    Unit { pc: u32, source: UnitError },
+    #[error("watchdog: exceeded {0} instructions without halting")]
+    Watchdog(u64),
+    #[error("ebreak at pc {0:#010x}")]
+    Break(u32),
+}
+
+/// Retired-instruction class counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CoreCounters {
+    pub alu: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub branches: u64,
+    pub taken_branches: u64,
+    pub jumps: u64,
+    pub mul: u64,
+    pub div: u64,
+    pub custom: [u64; 4],
+    /// Cycles lost waiting on source operands (RAW hazards).
+    pub raw_stall_cycles: u64,
+    /// Cycles lost waiting on instruction fetch (IL1 misses).
+    pub fetch_stall_cycles: u64,
+    /// Cycles lost waiting for the (blocking) data-memory port.
+    pub mem_port_stall_cycles: u64,
+}
+
+impl CoreCounters {
+    pub fn custom_total(&self) -> u64 {
+        self.custom.iter().sum()
+    }
+}
+
+/// Result of a completed run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunResult {
+    pub cycles: u64,
+    pub instret: u64,
+    pub counters: CoreCounters,
+}
+
+impl RunResult {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instret as f64 / self.cycles as f64
+        }
+    }
+}
+
+pub struct Core {
+    pub cfg: CoreConfig,
+    pub mem: MemSys,
+    pub pool: UnitPool,
+    pub trace: Trace,
+
+    regs: [u32; 32],
+    vregs: [VecVal; 8],
+    pc: u32,
+    cycle: u64,
+    instret: u64,
+    reg_ready: [u64; 32],
+    vreg_ready: [u64; 8],
+    /// The blocking DL1 port: next memory operation may issue at this
+    /// cycle at the earliest.
+    mem_busy_until: u64,
+    halted: bool,
+
+    text_base: u32,
+    decoded: Vec<Option<Instr>>,
+    /// Fetch line buffer: base address of the IL1 block the last fetch
+    /// came from. Fetches within the same block with an already-decoded
+    /// instruction skip the IL1 model entirely (a hit is timing-neutral:
+    /// ready == now) — the dominant fast path. Invalidated on load().
+    fetch_block_base: u32,
+    fetch_block_mask: u32,
+    /// IL1 hits skipped via the line buffer (credited to IL1 stats at
+    /// the end of run()).
+    fast_fetches: u64,
+
+    counters: CoreCounters,
+}
+
+impl Core {
+    /// Core with the standard unit pool for its VLEN.
+    pub fn new(cfg: CoreConfig, mem_cfg: MemConfig) -> Self {
+        assert_eq!(
+            mem_cfg.dl1.block_bits, cfg.vlen_bits,
+            "§3.1.1: DL1 block size must equal the vector register width"
+        );
+        let lanes = cfg.lanes();
+        let mem_block_bytes = mem_cfg.il1.block_bytes();
+        Self {
+            cfg,
+            mem: MemSys::new(mem_cfg),
+            pool: standard_pool(cfg.vlen_bits),
+            trace: Trace::disabled(),
+            regs: [0; 32],
+            vregs: [VecVal::zero(lanes); 8],
+            pc: 0,
+            cycle: 0,
+            instret: 0,
+            reg_ready: [0; 32],
+            vreg_ready: [0; 8],
+            mem_busy_until: 0,
+            halted: false,
+            text_base: 0,
+            decoded: Vec::new(),
+            fetch_block_base: u32::MAX,
+            fetch_block_mask: !(mem_block_bytes as u32 - 1),
+            fast_fetches: 0,
+            counters: CoreCounters::default(),
+        }
+    }
+
+    /// Paper-default core (Table 1).
+    pub fn paper_default() -> Self {
+        Self::new(CoreConfig::paper_default(), MemConfig::paper_default())
+    }
+
+    /// Paper-shaped core at a given VLEN (used by the Fig. 3 sweeps).
+    pub fn for_vlen(vlen_bits: usize) -> Self {
+        Self::new(CoreConfig::for_vlen(vlen_bits), MemConfig::for_vlen(vlen_bits))
+    }
+
+    /// Load a program and reset architectural state. The stack pointer is
+    /// initialised to the top of DRAM (16-byte aligned).
+    pub fn load(&mut self, prog: &Program) {
+        self.mem.load_program(prog);
+        self.regs = [0; 32];
+        self.vregs = [VecVal::zero(self.cfg.lanes()); 8];
+        self.regs[2] = (self.mem.dram_size() as u32) & !15; // sp
+        self.pc = prog.entry;
+        self.cycle = 0;
+        self.instret = 0;
+        self.reg_ready = [0; 32];
+        self.vreg_ready = [0; 8];
+        self.mem_busy_until = 0;
+        self.halted = false;
+        self.counters = CoreCounters::default();
+        self.text_base = prog.text_base;
+        self.decoded = vec![None; prog.text.len()];
+        self.fetch_block_base = u32::MAX;
+        self.fast_fetches = 0;
+        self.pool.reset_all();
+    }
+
+    // ---- host accessors ---------------------------------------------------
+
+    pub fn reg(&self, r: crate::isa::Reg) -> u32 {
+        self.regs[r.num() as usize]
+    }
+
+    pub fn set_reg(&mut self, r: crate::isa::Reg, v: u32) {
+        if r.num() != 0 {
+            self.regs[r.num() as usize] = v;
+        }
+    }
+
+    pub fn vreg(&self, v: crate::isa::VReg) -> VecVal {
+        self.vregs[v.num() as usize]
+    }
+
+    pub fn set_vreg(&mut self, v: crate::isa::VReg, val: VecVal) {
+        if v.num() != 0 {
+            self.vregs[v.num() as usize] = val;
+        }
+    }
+
+    pub fn pc(&self) -> u32 {
+        self.pc
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    pub fn instret(&self) -> u64 {
+        self.instret
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    pub fn counters(&self) -> CoreCounters {
+        self.counters
+    }
+
+    /// Run until `ecall` or the instruction budget is exhausted.
+    pub fn run(&mut self, max_instrs: u64) -> Result<RunResult, SimError> {
+        let start_instret = self.instret;
+        while !self.halted {
+            if self.instret - start_instret >= max_instrs {
+                self.flush_fetch_credits();
+                return Err(SimError::Watchdog(max_instrs));
+            }
+            self.step()?;
+        }
+        self.flush_fetch_credits();
+        Ok(RunResult { cycles: self.cycle, instret: self.instret, counters: self.counters })
+    }
+
+    /// Credit line-buffer fetches to the IL1 hit counters (they are
+    /// architecturally IL1 hits; the line buffer is a simulator
+    /// optimisation, not a microarchitectural feature).
+    pub fn flush_fetch_credits(&mut self) {
+        if self.fast_fetches > 0 {
+            self.mem.credit_il1_hits(self.fast_fetches);
+            self.fast_fetches = 0;
+        }
+    }
+
+    #[inline]
+    fn check_mem(&self, addr: u32, len: usize) -> Result<(), SimError> {
+        if (addr as usize).checked_add(len).is_none_or(|end| end > self.mem.dram_size()) {
+            return Err(SimError::MemFault {
+                pc: self.pc,
+                addr,
+                len,
+                size: self.mem.dram_size(),
+            });
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn read_reg_stalling(&mut self, r: crate::isa::Reg, t: &mut u64) -> u32 {
+        let n = r.num() as usize;
+        if self.reg_ready[n] > *t {
+            self.counters.raw_stall_cycles += self.reg_ready[n] - *t;
+            *t = self.reg_ready[n];
+        }
+        self.regs[n]
+    }
+
+    #[inline]
+    fn read_vreg_stalling(&mut self, v: crate::isa::VReg, t: &mut u64) -> VecVal {
+        let n = v.num() as usize;
+        if self.vreg_ready[n] > *t {
+            self.counters.raw_stall_cycles += self.vreg_ready[n] - *t;
+            *t = self.vreg_ready[n];
+        }
+        self.vregs[n]
+    }
+
+    #[inline]
+    fn write_reg(&mut self, r: crate::isa::Reg, v: u32, ready: u64) {
+        let n = r.num() as usize;
+        if n != 0 {
+            self.regs[n] = v;
+            self.reg_ready[n] = ready;
+        }
+    }
+
+    #[inline]
+    fn write_vreg(&mut self, v: crate::isa::VReg, val: VecVal, ready: u64) {
+        let n = v.num() as usize;
+        if n != 0 {
+            self.vregs[n] = val;
+            self.vreg_ready[n] = ready;
+        }
+    }
+
+    /// Decode (with caching) the instruction at `pc` whose fetched word is
+    /// `word`.
+    fn decode_at(&mut self, pc: u32, word: u32) -> Result<Instr, SimError> {
+        let idx = pc.wrapping_sub(self.text_base) as usize / 4;
+        if let Some(slot) = self.decoded.get(idx) {
+            if let Some(i) = slot {
+                return Ok(*i);
+            }
+            let i = decode(word).map_err(|source| SimError::Illegal { pc, source })?;
+            self.decoded[idx] = Some(i);
+            return Ok(i);
+        }
+        decode(word).map_err(|source| SimError::Illegal { pc, source })
+    }
+
+    /// Execute one instruction.
+    pub fn step(&mut self) -> Result<(), SimError> {
+        debug_assert!(!self.halted, "step() after halt");
+        let pc = self.pc;
+        // Fast path: same IL1 block as the previous fetch and already
+        // decoded — an IL1 hit is timing-neutral, so skip the model.
+        let idx = pc.wrapping_sub(self.text_base) as usize / 4;
+        let instr = match self.decoded.get(idx) {
+            Some(Some(i)) if (pc & self.fetch_block_mask) == self.fetch_block_base => {
+                self.fast_fetches += 1;
+                *i
+            }
+            _ => {
+                self.check_mem(pc, 4)?;
+                let (word, fetch_ready) = self.mem.fetch(pc, self.cycle);
+                if fetch_ready > self.cycle {
+                    self.counters.fetch_stall_cycles += fetch_ready - self.cycle;
+                    self.cycle = fetch_ready;
+                }
+                self.fetch_block_base = pc & self.fetch_block_mask;
+                self.decode_at(pc, word)?
+            }
+        };
+
+        let mut t = self.cycle; // issue time after operand stalls
+        let mut next_pc = pc.wrapping_add(4);
+        let mut end = t + 1; // completion time for the trace
+        use Instr::*;
+        match instr {
+            Lui { rd, imm } => {
+                self.counters.alu += 1;
+                self.write_reg(rd, imm as u32, t + 1);
+            }
+            Auipc { rd, imm } => {
+                self.counters.alu += 1;
+                self.write_reg(rd, pc.wrapping_add(imm as u32), t + 1);
+            }
+            Jal { rd, offset } => {
+                self.counters.jumps += 1;
+                self.write_reg(rd, pc.wrapping_add(4), t + 1);
+                next_pc = pc.wrapping_add(offset as u32);
+                t += self.cfg.branch_taken_penalty;
+            }
+            Jalr { rd, rs1, offset } => {
+                self.counters.jumps += 1;
+                let base = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, pc.wrapping_add(4), t + 1);
+                next_pc = base.wrapping_add(offset as u32) & !1;
+                t += self.cfg.branch_taken_penalty;
+            }
+            Beq { rs1, rs2, offset }
+            | Bne { rs1, rs2, offset }
+            | Blt { rs1, rs2, offset }
+            | Bge { rs1, rs2, offset }
+            | Bltu { rs1, rs2, offset }
+            | Bgeu { rs1, rs2, offset } => {
+                self.counters.branches += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                let b = self.read_reg_stalling(rs2, &mut t);
+                let take = match instr {
+                    Beq { .. } => a == b,
+                    Bne { .. } => a != b,
+                    Blt { .. } => (a as i32) < (b as i32),
+                    Bge { .. } => (a as i32) >= (b as i32),
+                    Bltu { .. } => a < b,
+                    Bgeu { .. } => a >= b,
+                    _ => unreachable!(),
+                };
+                if take {
+                    self.counters.taken_branches += 1;
+                    next_pc = pc.wrapping_add(offset as u32);
+                    t += self.cfg.branch_taken_penalty;
+                }
+            }
+            Lb { rd, rs1, offset }
+            | Lh { rd, rs1, offset }
+            | Lw { rd, rs1, offset }
+            | Lbu { rd, rs1, offset }
+            | Lhu { rd, rs1, offset } => {
+                self.counters.loads += 1;
+                let base = self.read_reg_stalling(rs1, &mut t);
+                let addr = base.wrapping_add(offset as u32);
+                let len = match instr {
+                    Lb { .. } | Lbu { .. } => 1,
+                    Lh { .. } | Lhu { .. } => 2,
+                    _ => 4,
+                };
+                self.check_mem(addr, len)?;
+                if self.mem_busy_until > t {
+                    self.counters.mem_port_stall_cycles += self.mem_busy_until - t;
+                    t = self.mem_busy_until;
+                }
+                let mut buf = [0u8; 4];
+                let mem_ready = self.mem.read(addr, &mut buf[..len], t);
+                let value = match instr {
+                    Lb { .. } => buf[0] as i8 as i32 as u32,
+                    Lbu { .. } => buf[0] as u32,
+                    Lh { .. } => i16::from_le_bytes([buf[0], buf[1]]) as i32 as u32,
+                    Lhu { .. } => u16::from_le_bytes([buf[0], buf[1]]) as u32,
+                    _ => u32::from_le_bytes(buf),
+                };
+                let ready = (t + self.cfg.load_use_cycles).max(mem_ready + 2);
+                self.write_reg(rd, value, ready);
+                self.mem_busy_until = mem_ready.max(t + 1);
+                end = ready;
+            }
+            Sb { rs1, rs2, offset } | Sh { rs1, rs2, offset } | Sw { rs1, rs2, offset } => {
+                self.counters.stores += 1;
+                let base = self.read_reg_stalling(rs1, &mut t);
+                let val = self.read_reg_stalling(rs2, &mut t);
+                let addr = base.wrapping_add(offset as u32);
+                let len = match instr {
+                    Sb { .. } => 1,
+                    Sh { .. } => 2,
+                    _ => 4,
+                };
+                self.check_mem(addr, len)?;
+                if self.mem_busy_until > t {
+                    self.counters.mem_port_stall_cycles += self.mem_busy_until - t;
+                    t = self.mem_busy_until;
+                }
+                let bytes = val.to_le_bytes();
+                let mem_ready = self.mem.write(addr, &bytes[..len], t);
+                self.mem_busy_until = mem_ready.max(t + 1);
+                end = mem_ready;
+            }
+            Addi { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a.wrapping_add(imm as u32), t + 1);
+            }
+            Slti { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, ((a as i32) < imm) as u32, t + 1);
+            }
+            Sltiu { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, (a < imm as u32) as u32, t + 1);
+            }
+            Xori { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a ^ imm as u32, t + 1);
+            }
+            Ori { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a | imm as u32, t + 1);
+            }
+            Andi { rd, rs1, imm } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a & imm as u32, t + 1);
+            }
+            Slli { rd, rs1, shamt } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a << shamt, t + 1);
+            }
+            Srli { rd, rs1, shamt } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, a >> shamt, t + 1);
+            }
+            Srai { rd, rs1, shamt } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                self.write_reg(rd, ((a as i32) >> shamt) as u32, t + 1);
+            }
+            Add { rd, rs1, rs2 }
+            | Sub { rd, rs1, rs2 }
+            | Sll { rd, rs1, rs2 }
+            | Slt { rd, rs1, rs2 }
+            | Sltu { rd, rs1, rs2 }
+            | Xor { rd, rs1, rs2 }
+            | Srl { rd, rs1, rs2 }
+            | Sra { rd, rs1, rs2 }
+            | Or { rd, rs1, rs2 }
+            | And { rd, rs1, rs2 } => {
+                self.counters.alu += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                let b = self.read_reg_stalling(rs2, &mut t);
+                let v = match instr {
+                    Add { .. } => a.wrapping_add(b),
+                    Sub { .. } => a.wrapping_sub(b),
+                    Sll { .. } => a << (b & 31),
+                    Slt { .. } => ((a as i32) < (b as i32)) as u32,
+                    Sltu { .. } => (a < b) as u32,
+                    Xor { .. } => a ^ b,
+                    Srl { .. } => a >> (b & 31),
+                    Sra { .. } => ((a as i32) >> (b & 31)) as u32,
+                    Or { .. } => a | b,
+                    And { .. } => a & b,
+                    _ => unreachable!(),
+                };
+                self.write_reg(rd, v, t + 1);
+            }
+            Mul { rd, rs1, rs2 }
+            | Mulh { rd, rs1, rs2 }
+            | Mulhsu { rd, rs1, rs2 }
+            | Mulhu { rd, rs1, rs2 } => {
+                self.counters.mul += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                let b = self.read_reg_stalling(rs2, &mut t);
+                let v = match instr {
+                    Mul { .. } => a.wrapping_mul(b),
+                    Mulh { .. } => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+                    Mulhsu { .. } => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+                    Mulhu { .. } => (((a as u64) * (b as u64)) >> 32) as u32,
+                    _ => unreachable!(),
+                };
+                t += self.cfg.mul_cycles - 1;
+                self.write_reg(rd, v, t + 1);
+                end = t + 1;
+            }
+            Div { rd, rs1, rs2 }
+            | Divu { rd, rs1, rs2 }
+            | Rem { rd, rs1, rs2 }
+            | Remu { rd, rs1, rs2 } => {
+                self.counters.div += 1;
+                let a = self.read_reg_stalling(rs1, &mut t);
+                let b = self.read_reg_stalling(rs2, &mut t);
+                let v = match instr {
+                    Div { .. } => {
+                        if b == 0 {
+                            u32::MAX
+                        } else if a == 0x8000_0000 && b == u32::MAX {
+                            a
+                        } else {
+                            ((a as i32).wrapping_div(b as i32)) as u32
+                        }
+                    }
+                    Divu { .. } => {
+                        if b == 0 {
+                            u32::MAX
+                        } else {
+                            a / b
+                        }
+                    }
+                    Rem { .. } => {
+                        if b == 0 {
+                            a
+                        } else if a == 0x8000_0000 && b == u32::MAX {
+                            0
+                        } else {
+                            ((a as i32).wrapping_rem(b as i32)) as u32
+                        }
+                    }
+                    Remu { .. } => {
+                        if b == 0 {
+                            a
+                        } else {
+                            a % b
+                        }
+                    }
+                    _ => unreachable!(),
+                };
+                // Iterative divider blocks the (single-stage) pipeline.
+                t += self.cfg.div_cycles - 1;
+                self.write_reg(rd, v, t + 1);
+                end = t + 1;
+            }
+            Fence => {
+                self.counters.alu += 1;
+                // Single in-order core: fence is a timing no-op.
+            }
+            Ecall => {
+                self.halted = true;
+            }
+            Ebreak => {
+                return Err(SimError::Break(pc));
+            }
+            Csrrs { rd, csr: c, rs1: _ } => {
+                self.counters.alu += 1;
+                let v = match c {
+                    csr::CYCLE | csr::TIME => self.cycle as u32,
+                    csr::CYCLEH | csr::TIMEH => (self.cycle >> 32) as u32,
+                    csr::INSTRET => self.instret as u32,
+                    csr::INSTRETH => (self.instret >> 32) as u32,
+                    _ => 0,
+                };
+                self.write_reg(rd, v, t + 1);
+            }
+            CustomI { slot, funct3, ops } => {
+                end = self.exec_custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    None,
+                    0,
+                    ops.vrs1,
+                    ops.vrs2,
+                    ops.rd,
+                    ops.vrd1,
+                    ops.vrd2,
+                    &mut t,
+                )?;
+            }
+            CustomS { slot, funct3, ops } => {
+                end = self.exec_custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    Some(ops.rs2),
+                    ops.imm,
+                    ops.vrs1,
+                    crate::isa::reg::V0,
+                    ops.rd,
+                    ops.vrd1,
+                    crate::isa::reg::V0,
+                    &mut t,
+                )?;
+            }
+        }
+
+        if self.trace.enabled {
+            self.trace.record(self.instret, TraceEvent { start: t, end: end.max(t + 1), pc, instr });
+        }
+
+        self.pc = next_pc;
+        self.cycle = t + self.cfg.base_cpi;
+        self.instret += 1;
+        Ok(())
+    }
+
+    /// Issue a custom instruction: read operands (stalling), run the unit,
+    /// route any memory request through DL1, and schedule writebacks.
+    /// Returns the completion cycle (for the trace).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_custom(
+        &mut self,
+        pc: u32,
+        slot: usize,
+        funct3: u8,
+        rs1: crate::isa::Reg,
+        rs2: Option<crate::isa::Reg>,
+        imm: u8,
+        vrs1: crate::isa::VReg,
+        vrs2: crate::isa::VReg,
+        rd: crate::isa::Reg,
+        vrd1: crate::isa::VReg,
+        vrd2: crate::isa::VReg,
+        t: &mut u64,
+    ) -> Result<u64, SimError> {
+        self.counters.custom[slot] += 1;
+        let rs1_v = self.read_reg_stalling(rs1, t);
+        let rs2_v = rs2.map(|r| self.read_reg_stalling(r, t)).unwrap_or(0);
+        let vrs1_v = self.read_vreg_stalling(vrs1, t);
+        let vrs2_v = self.read_vreg_stalling(vrs2, t);
+        // WAW: results write in order; wait until prior writers are done.
+        for reg in [vrd1, vrd2] {
+            let n = reg.num() as usize;
+            if n != 0 && self.vreg_ready[n] > *t {
+                self.counters.raw_stall_cycles += self.vreg_ready[n] - *t;
+                *t = self.vreg_ready[n];
+            }
+        }
+
+        let inputs = UnitInputs { funct3, rs1: rs1_v, rs2: rs2_v, imm, vrs1: vrs1_v, vrs2: vrs2_v };
+        let out = self
+            .pool
+            .get_mut(slot)
+            .and_then(|u| u.execute(&inputs))
+            .map_err(|source| SimError::Unit { pc, source })?;
+
+        let mut end = *t + out.latency;
+        match out.mem {
+            Some(VecMemOp::Load { addr }) => {
+                let len = self.cfg.vlen_bytes();
+                self.check_mem(addr, len)?;
+                if self.mem_busy_until > *t {
+                    self.counters.mem_port_stall_cycles += self.mem_busy_until - *t;
+                    *t = self.mem_busy_until;
+                }
+                // Stack buffer: the hot vector path must not allocate.
+                let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
+                let mem_ready = self.mem.read(addr, &mut buf[..len], *t);
+                let ready = (*t + out.latency).max(mem_ready + 2);
+                self.write_vreg(vrd1, VecVal::from_bytes(&buf[..len]), ready);
+                self.mem_busy_until = mem_ready.max(*t + 1);
+                end = ready;
+            }
+            Some(VecMemOp::Store { addr, data }) => {
+                let len = self.cfg.vlen_bytes();
+                self.check_mem(addr, len)?;
+                if self.mem_busy_until > *t {
+                    self.counters.mem_port_stall_cycles += self.mem_busy_until - *t;
+                    *t = self.mem_busy_until;
+                }
+                let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
+                data.write_bytes(&mut buf[..len]);
+                let mem_ready = self.mem.write(addr, &buf[..len], *t);
+                self.mem_busy_until = mem_ready.max(*t + 1);
+                end = mem_ready;
+            }
+            None => {
+                let ready = *t + out.latency;
+                if let Some(v) = out.vrd1 {
+                    self.write_vreg(vrd1, v, ready);
+                }
+                if let Some(v) = out.vrd2 {
+                    self.write_vreg(vrd2, v, ready);
+                }
+                if let Some(v) = out.rd {
+                    self.write_reg(rd, v, ready);
+                }
+            }
+        }
+        Ok(end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+
+    fn run_asm(build: impl FnOnce(&mut Asm)) -> Core {
+        let mut a = Asm::new();
+        build(&mut a);
+        let p = a.assemble().unwrap();
+        let mut core = Core::paper_default();
+        core.load(&p);
+        core.run(1_000_000).unwrap();
+        core
+    }
+
+    #[test]
+    fn arithmetic_and_halt() {
+        let c = run_asm(|a| {
+            a.li(A0, 20);
+            a.li(A1, 22);
+            a.add(A2, A0, A1);
+            a.halt();
+        });
+        assert_eq!(c.reg(A2), 42);
+        assert!(c.halted());
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let c = run_asm(|a| {
+            a.li(ZERO, 99);
+            a.addi(ZERO, ZERO, 5);
+            a.mv(A0, ZERO);
+            a.halt();
+        });
+        assert_eq!(c.reg(A0), 0);
+    }
+
+    #[test]
+    fn back_to_back_dependent_alu_has_no_stall() {
+        // 100 dependent addis: 1 cycle each (§3.2).
+        let c = run_asm(|a| {
+            for _ in 0..100 {
+                a.addi(A0, A0, 1);
+            }
+            a.halt();
+        });
+        assert_eq!(c.reg(A0), 100);
+        assert_eq!(c.counters().raw_stall_cycles, 0);
+    }
+
+    #[test]
+    fn load_use_stall_is_two_cycles() {
+        // lw then immediately use: dependent instruction executes 3 cycles
+        // after the load (2 stall cycles).
+        let mut a = Asm::new();
+        let buf = a.words("buf", &[7]);
+        a.la(A1, buf);
+        a.lw(A0, 0, A1);
+        a.addi(A0, A0, 1); // dependent
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut warm = Core::paper_default();
+        warm.load(&p);
+        warm.run(100).unwrap();
+        assert_eq!(warm.reg(A0), 8);
+        // Warm run to measure the hit-latency path: run again after caches
+        // are warm.
+        let cold_stalls = warm.counters().raw_stall_cycles;
+        assert!(cold_stalls >= 2, "load-use stall expected, got {cold_stalls}");
+    }
+
+    #[test]
+    fn loop_and_branch() {
+        let c = run_asm(|a| {
+            let l = a.new_label("loop");
+            a.li(A0, 10);
+            a.li(A1, 0);
+            a.bind(l);
+            a.add(A1, A1, A0);
+            a.addi(A0, A0, -1);
+            a.bnez(A0, l);
+            a.halt();
+        });
+        assert_eq!(c.reg(A1), 55);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_sign_extension() {
+        let mut a = Asm::new();
+        let buf = a.buffer("buf", 64, 8);
+        a.la(A1, buf);
+        a.li(A0, -2);
+        a.sb(A0, 0, A1);
+        a.lb(A2, 0, A1);
+        a.lbu(A3, 0, A1);
+        a.li(A0, -3);
+        a.sh(A0, 8, A1);
+        a.lh(A4, 8, A1);
+        a.lhu(A5, 8, A1);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        assert_eq!(c.reg(A2) as i32, -2);
+        assert_eq!(c.reg(A3), 0xFE);
+        assert_eq!(c.reg(A4) as i32, -3);
+        assert_eq!(c.reg(A5), 0xFFFD);
+    }
+
+    #[test]
+    fn mul_div_semantics() {
+        let c = run_asm(|a| {
+            a.li(A0, -6);
+            a.li(A1, 4);
+            a.mul(A2, A0, A1); // -24
+            a.div(A3, A0, A1); // -1 (trunc)
+            a.rem(A4, A0, A1); // -2
+            a.li(T0, 0);
+            a.div(A5, A0, T0); // div by zero => -1
+            a.remu(A6, A0, T0); // rem by zero => a
+            a.halt();
+        });
+        assert_eq!(c.reg(A2) as i32, -24);
+        assert_eq!(c.reg(A3) as i32, -1);
+        assert_eq!(c.reg(A4) as i32, -2);
+        assert_eq!(c.reg(A5), u32::MAX);
+        assert_eq!(c.reg(A6) as i32, -6);
+    }
+
+    #[test]
+    fn div_blocks_pipeline() {
+        let base = run_asm(|a| {
+            a.li(A0, 100);
+            a.li(A1, 7);
+            a.halt();
+        })
+        .cycle();
+        let with_div = run_asm(|a| {
+            a.li(A0, 100);
+            a.li(A1, 7);
+            a.divu(A2, A0, A1);
+            a.halt();
+        })
+        .cycle();
+        assert!(
+            with_div >= base + 32,
+            "divider must block ~32 cycles (got {} vs {})",
+            with_div,
+            base
+        );
+    }
+
+    #[test]
+    fn function_call_and_return() {
+        let c = run_asm(|a| {
+            let f = a.new_label("double");
+            a.li(A0, 21);
+            a.call(f);
+            a.halt();
+            a.bind(f);
+            a.add(A0, A0, A0);
+            a.ret();
+        });
+        assert_eq!(c.reg(A0), 42);
+    }
+
+    #[test]
+    fn rdcycle_and_rdinstret_increase() {
+        let c = run_asm(|a| {
+            a.rdcycle(S0);
+            for _ in 0..10 {
+                a.nop();
+            }
+            a.rdcycle(S1);
+            a.rdinstret(S2);
+            a.halt();
+        });
+        let d = c.reg(S1).wrapping_sub(c.reg(S0));
+        assert!((10..=20).contains(&d), "10 nops ≈ 10-20 cycles, got {d}");
+        assert!(c.reg(S2) >= 12);
+    }
+
+    #[test]
+    fn vector_load_sort_store() {
+        let mut a = Asm::new();
+        let data = a.words("data", &[5, 3, 8, 1, 9, 2, 7, 4].map(|x: i32| x as u32));
+        a.dalign(32);
+        let out = a.buffer("out", 32, 32);
+        a.la(A0, data);
+        a.la(A1, out);
+        a.lv(V1, A0, ZERO);
+        a.sort8(V2, V1);
+        a.sv(V2, A1, ZERO);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        c.mem.flush_all();
+        let bytes = c.mem.dram_slice(p.sym("out"), 32);
+        let got: Vec<i32> = bytes
+            .chunks(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 7, 8, 9]);
+    }
+
+    #[test]
+    fn v0_is_hardwired_zero() {
+        let mut a = Asm::new();
+        let data = a.words("data", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.dalign(32);
+        let out = a.buffer("out", 32, 32);
+        a.la(A0, data);
+        a.la(A1, out);
+        a.lv(V0, A0, ZERO); // write to v0 discarded
+        a.sv(V0, A1, ZERO); // stores zeros
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        c.mem.flush_all();
+        assert_eq!(c.mem.dram_slice(p.sym("out"), 32), &[0u8; 32]);
+    }
+
+    #[test]
+    fn custom_sort_is_pipelined() {
+        // Two independent sorts issue back-to-back; their latencies
+        // overlap (Fig. 6's pipelining effect). Total runtime must be well
+        // under 2 × 6 cycles of serial sort latency.
+        let mut a = Asm::new();
+        let d1 = a.words("d1", &[8, 7, 6, 5, 4, 3, 2, 1]);
+        let d2 = a.words("d2", &[16, 15, 14, 13, 12, 11, 10, 9]);
+        a.la(A0, d1);
+        a.la(A1, d2);
+        a.lv(V1, A0, ZERO);
+        a.lv(V2, A1, ZERO);
+        a.rdcycle(S0);
+        a.sort8(V3, V1);
+        a.sort8(V4, V2);
+        a.rdcycle(S1);
+        a.sv(V3, A0, ZERO);
+        a.sv(V4, A1, ZERO);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        // The two sorts overlap (Fig. 6: the second sort issues ~2 cycles
+        // after the first, waiting on its own load — far less than the
+        // 6-cycle sort latency, so the pipelines overlap).
+        let issue_span = c.reg(S1).wrapping_sub(c.reg(S0));
+        assert!(
+            issue_span < 6,
+            "sorts must overlap (span {issue_span} < sort latency 6); serial would be ≥ 12"
+        );
+        // But consuming v4 (the sv) waits for the sort latency.
+        c.mem.flush_all();
+        let b = c.mem.dram_slice(p.sym("d2"), 32);
+        let got: Vec<i32> =
+            b.chunks(4).map(|x| i32::from_le_bytes(x.try_into().unwrap())).collect();
+        assert_eq!(got, vec![9, 10, 11, 12, 13, 14, 15, 16]);
+    }
+
+    #[test]
+    fn watchdog_fires_on_infinite_loop() {
+        let mut a = Asm::new();
+        let l = a.here("forever");
+        a.j(l);
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        assert!(matches!(c.run(1000), Err(SimError::Watchdog(1000))));
+    }
+
+    #[test]
+    fn ebreak_reports() {
+        let mut a = Asm::new();
+        a.ebreak();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        assert!(matches!(c.run(10), Err(SimError::Break(_))));
+    }
+
+    #[test]
+    fn mem_fault_detected() {
+        let mut a = Asm::new();
+        a.li(A0, 0x7fff_f000u32 as i64);
+        a.lw(A1, 0, A0);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        assert!(matches!(c.run(10), Err(SimError::MemFault { .. })));
+    }
+
+    #[test]
+    fn prefix_instruction_state_carries() {
+        let mut a = Asm::new();
+        let d = a.words("d", &[1u32; 8]);
+        a.la(A0, d);
+        a.lv(V1, A0, ZERO);
+        a.prefix_reset();
+        a.prefix(V2, V1);
+        a.prefix(V3, V1);
+        a.prefix_carry(A5);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        assert_eq!(c.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(c.vreg(V3).to_i32s(), vec![9, 10, 11, 12, 13, 14, 15, 16]);
+        assert_eq!(c.reg(A5), 16);
+    }
+
+    #[test]
+    fn run_result_reports_ipc() {
+        let mut a = Asm::new();
+        for _ in 0..50 {
+            a.nop();
+        }
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        let r = c.run(100).unwrap();
+        assert_eq!(r.instret, 51);
+        assert!(r.ipc() > 0.5, "mostly 1 IPC, got {}", r.ipc());
+    }
+}

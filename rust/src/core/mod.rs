@@ -1,0 +1,13 @@
+//! The softcore microarchitecture (§3 of the paper): a single-pipeline-
+//! stage RV32IM core with 8 VLEN-bit vector registers, per-register
+//! scoreboarding for the load pipe and the pipelined custom SIMD units,
+//! and the §3.1 cache hierarchy behind it.
+
+pub mod config;
+#[allow(clippy::module_inception)]
+pub mod core;
+pub mod trace;
+
+pub use config::CoreConfig;
+pub use core::{Core, CoreCounters, RunResult, SimError};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,120 @@
+//! Instruction-level trace events — the data behind Fig. 6 of the paper
+//! (instruction start/end times in the sorting-in-chunks loop).
+
+use crate::isa::Instr;
+use std::fmt::Write as _;
+
+/// One retired instruction with its issue/complete cycle times.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Cycle at which the instruction issued (after all stalls).
+    pub start: u64,
+    /// Cycle at which its results became architecturally visible (for
+    /// pipelined custom instructions this is start + cN_cycles; for plain
+    /// ALU ops start + 1).
+    pub end: u64,
+    pub pc: u32,
+    pub instr: Instr,
+}
+
+/// Trace collector with an instruction-index window so long runs can
+/// capture just the loop of interest (as the paper's Fig. 6 does).
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Record only instructions with retire index in `[from, to)`.
+    pub window: Option<(u64, u64)>,
+    pub enabled: bool,
+}
+
+impl Trace {
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    pub fn windowed(from: u64, to: u64) -> Self {
+        Self { events: Vec::new(), window: Some((from, to)), enabled: true }
+    }
+
+    pub fn full() -> Self {
+        Self { events: Vec::new(), window: None, enabled: true }
+    }
+
+    #[inline]
+    pub fn record(&mut self, instr_index: u64, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if let Some((from, to)) = self.window {
+            if instr_index < from || instr_index >= to {
+                return;
+            }
+        }
+        self.events.push(ev);
+    }
+
+    /// Render an ASCII pipeline diagram in the style of Fig. 6: one row
+    /// per instruction, `#` spans from issue to completion.
+    pub fn render_pipeline(&self) -> String {
+        if self.events.is_empty() {
+            return "(empty trace)\n".to_string();
+        }
+        let t0 = self.events.iter().map(|e| e.start).min().unwrap();
+        let t1 = self.events.iter().map(|e| e.end).max().unwrap();
+        let span = ((t1 - t0) as usize).min(200);
+        let mut out = String::new();
+        let _ = writeln!(out, "{:<38} {:>6}  cycles {}..{}", "instruction", "issue", t0, t1);
+        for e in &self.events {
+            let s = (e.start - t0) as usize;
+            let w = ((e.end - e.start) as usize).max(1);
+            let mut bar = String::new();
+            bar.push_str(&" ".repeat(s.min(span)));
+            bar.push_str(&"#".repeat(w.min(span + 1 - s.min(span))));
+            let _ = writeln!(out, "{:<38} {:>6}  |{bar}", e.instr.to_string(), e.start);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+
+    fn ev(start: u64, end: u64) -> TraceEvent {
+        TraceEvent { start, end, pc: 0, instr: Instr::Addi { rd: A0, rs1: A0, imm: 1 } }
+    }
+
+    #[test]
+    fn window_filters_by_instruction_index() {
+        let mut t = Trace::windowed(10, 12);
+        t.record(9, ev(0, 1));
+        t.record(10, ev(1, 2));
+        t.record(11, ev(2, 3));
+        t.record(12, ev(3, 4));
+        assert_eq!(t.events.len(), 2);
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(0, ev(0, 1));
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn render_shows_overlap() {
+        let mut t = Trace::full();
+        t.record(0, ev(0, 6));
+        t.record(1, ev(2, 8));
+        let s = t.render_pipeline();
+        assert!(s.contains("######"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows");
+    }
+
+    #[test]
+    fn empty_render() {
+        assert!(Trace::full().render_pipeline().contains("empty"));
+    }
+}

@@ -1,0 +1,322 @@
+//! Instruction decoding: 32-bit machine word → `Instr`.
+//!
+//! The inverse of [`super::encode`]; `decode(encode(i)) == i` is a repo
+//! invariant enforced by a property test in `rust/tests/isa_roundtrip.rs`.
+
+use super::encode::{bits, sext};
+use super::instr::{CustomSlot, IPrime, Instr, SPrime};
+use super::reg::{Reg, VReg};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("illegal instruction word {word:#010x}: unknown opcode {opcode:#09b}")]
+    UnknownOpcode { word: u32, opcode: u32 },
+    #[error("illegal instruction word {word:#010x}: bad funct3/funct7 for opcode {opcode:#09b}")]
+    BadFunct { word: u32, opcode: u32 },
+    #[error("unsupported system instruction {word:#010x}")]
+    UnsupportedSystem { word: u32 },
+}
+
+#[inline]
+fn rd(w: u32) -> Reg {
+    Reg(bits(w, 11, 7) as u8)
+}
+#[inline]
+fn rs1(w: u32) -> Reg {
+    Reg(bits(w, 19, 15) as u8)
+}
+#[inline]
+fn rs2(w: u32) -> Reg {
+    Reg(bits(w, 24, 20) as u8)
+}
+#[inline]
+fn funct3(w: u32) -> u32 {
+    bits(w, 14, 12)
+}
+#[inline]
+fn funct7(w: u32) -> u32 {
+    bits(w, 31, 25)
+}
+
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    sext(bits(w, 31, 20), 12)
+}
+
+#[inline]
+fn imm_s(w: u32) -> i32 {
+    sext((bits(w, 31, 25) << 5) | bits(w, 11, 7), 12)
+}
+
+#[inline]
+fn imm_b(w: u32) -> i32 {
+    sext(
+        (bits(w, 31, 31) << 12) | (bits(w, 7, 7) << 11) | (bits(w, 30, 25) << 5)
+            | (bits(w, 11, 8) << 1),
+        13,
+    )
+}
+
+#[inline]
+fn imm_u(w: u32) -> i32 {
+    (w & 0xffff_f000) as i32
+}
+
+#[inline]
+fn imm_j(w: u32) -> i32 {
+    sext(
+        (bits(w, 31, 31) << 20) | (bits(w, 19, 12) << 12) | (bits(w, 20, 20) << 11)
+            | (bits(w, 30, 21) << 1),
+        21,
+    )
+}
+
+/// Decode a 32-bit instruction word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    use Instr::*;
+    let opcode = bits(w, 6, 0);
+
+    // Custom slots first: the paper routes all custom SIMD instructions
+    // through the four custom-reserved major opcodes.
+    if let Some(slot) = CustomSlot::from_opcode(opcode) {
+        let f3 = funct3(w) as u8;
+        return Ok(if f3 < 4 {
+            CustomI {
+                slot,
+                funct3: f3,
+                ops: IPrime {
+                    vrs1: VReg(bits(w, 31, 29) as u8),
+                    vrd1: VReg(bits(w, 28, 26) as u8),
+                    vrs2: VReg(bits(w, 25, 23) as u8),
+                    vrd2: VReg(bits(w, 22, 20) as u8),
+                    rs1: rs1(w),
+                    rd: rd(w),
+                },
+            }
+        } else {
+            CustomS {
+                slot,
+                funct3: f3,
+                ops: SPrime {
+                    vrs1: VReg(bits(w, 31, 29) as u8),
+                    vrd1: VReg(bits(w, 28, 26) as u8),
+                    imm: bits(w, 25, 25) as u8,
+                    rs2: rs2(w),
+                    rs1: rs1(w),
+                    rd: rd(w),
+                },
+            }
+        });
+    }
+
+    Ok(match opcode {
+        0b011_0111 => Lui { rd: rd(w), imm: imm_u(w) },
+        0b001_0111 => Auipc { rd: rd(w), imm: imm_u(w) },
+        0b110_1111 => Jal { rd: rd(w), offset: imm_j(w) },
+        0b110_0111 => match funct3(w) {
+            0b000 => Jalr { rd: rd(w), rs1: rs1(w), offset: imm_i(w) },
+            _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+        },
+        0b110_0011 => {
+            let (rs1, rs2, offset) = (rs1(w), rs2(w), imm_b(w));
+            match funct3(w) {
+                0b000 => Beq { rs1, rs2, offset },
+                0b001 => Bne { rs1, rs2, offset },
+                0b100 => Blt { rs1, rs2, offset },
+                0b101 => Bge { rs1, rs2, offset },
+                0b110 => Bltu { rs1, rs2, offset },
+                0b111 => Bgeu { rs1, rs2, offset },
+                _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+            }
+        }
+        0b000_0011 => {
+            let (rd, rs1, offset) = (rd(w), rs1(w), imm_i(w));
+            match funct3(w) {
+                0b000 => Lb { rd, rs1, offset },
+                0b001 => Lh { rd, rs1, offset },
+                0b010 => Lw { rd, rs1, offset },
+                0b100 => Lbu { rd, rs1, offset },
+                0b101 => Lhu { rd, rs1, offset },
+                _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+            }
+        }
+        0b010_0011 => {
+            let (rs1, rs2, offset) = (rs1(w), rs2(w), imm_s(w));
+            match funct3(w) {
+                0b000 => Sb { rs1, rs2, offset },
+                0b001 => Sh { rs1, rs2, offset },
+                0b010 => Sw { rs1, rs2, offset },
+                _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+            }
+        }
+        0b001_0011 => {
+            let (rd, rs1) = (rd(w), rs1(w));
+            match funct3(w) {
+                0b000 => Addi { rd, rs1, imm: imm_i(w) },
+                0b010 => Slti { rd, rs1, imm: imm_i(w) },
+                0b011 => Sltiu { rd, rs1, imm: imm_i(w) },
+                0b100 => Xori { rd, rs1, imm: imm_i(w) },
+                0b110 => Ori { rd, rs1, imm: imm_i(w) },
+                0b111 => Andi { rd, rs1, imm: imm_i(w) },
+                0b001 => match funct7(w) {
+                    0 => Slli { rd, rs1, shamt: bits(w, 24, 20) as u8 },
+                    _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+                },
+                0b101 => match funct7(w) {
+                    0 => Srli { rd, rs1, shamt: bits(w, 24, 20) as u8 },
+                    0b010_0000 => Srai { rd, rs1, shamt: bits(w, 24, 20) as u8 },
+                    _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+                },
+                _ => unreachable!(),
+            }
+        }
+        0b011_0011 => {
+            let (rd, rs1, rs2) = (rd(w), rs1(w), rs2(w));
+            match (funct7(w), funct3(w)) {
+                (0, 0b000) => Add { rd, rs1, rs2 },
+                (0b010_0000, 0b000) => Sub { rd, rs1, rs2 },
+                (0, 0b001) => Sll { rd, rs1, rs2 },
+                (0, 0b010) => Slt { rd, rs1, rs2 },
+                (0, 0b011) => Sltu { rd, rs1, rs2 },
+                (0, 0b100) => Xor { rd, rs1, rs2 },
+                (0, 0b101) => Srl { rd, rs1, rs2 },
+                (0b010_0000, 0b101) => Sra { rd, rs1, rs2 },
+                (0, 0b110) => Or { rd, rs1, rs2 },
+                (0, 0b111) => And { rd, rs1, rs2 },
+                (1, 0b000) => Mul { rd, rs1, rs2 },
+                (1, 0b001) => Mulh { rd, rs1, rs2 },
+                (1, 0b010) => Mulhsu { rd, rs1, rs2 },
+                (1, 0b011) => Mulhu { rd, rs1, rs2 },
+                (1, 0b100) => Div { rd, rs1, rs2 },
+                (1, 0b101) => Divu { rd, rs1, rs2 },
+                (1, 0b110) => Rem { rd, rs1, rs2 },
+                (1, 0b111) => Remu { rd, rs1, rs2 },
+                _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+            }
+        }
+        0b000_1111 => Fence,
+        0b111_0011 => match (funct3(w), bits(w, 31, 20)) {
+            (0b000, 0) => Ecall,
+            (0b000, 1) => Ebreak,
+            (0b010, csr) => Csrrs { rd: rd(w), csr: csr as u16, rs1: rs1(w) },
+            _ => return Err(DecodeError::UnsupportedSystem { word: w }),
+        },
+        _ => return Err(DecodeError::UnknownOpcode { word: w, opcode }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn golden_decodings() {
+        assert_eq!(decode(0x0015_0513).unwrap(), Instr::Addi { rd: A0, rs1: A0, imm: 1 });
+        assert_eq!(decode(0x00c5_8533).unwrap(), Instr::Add { rd: A0, rs1: A1, rs2: A2 });
+        assert_eq!(decode(0x0041_2503).unwrap(), Instr::Lw { rd: A0, rs1: SP, offset: 4 });
+        assert_eq!(decode(0xfeb5_0ee3).unwrap(), Instr::Beq { rs1: A0, rs2: A1, offset: -4 });
+        assert_eq!(
+            decode(0xc000_2573).unwrap(),
+            Instr::Csrrs { rd: A0, csr: 0xC00, rs1: ZERO }
+        );
+    }
+
+    #[test]
+    fn negative_immediates_sign_extend() {
+        // addi a0, a0, -1 => 0xfff50513
+        assert_eq!(decode(0xfff5_0513).unwrap(), Instr::Addi { rd: A0, rs1: A0, imm: -1 });
+        // lw a0, -8(sp)
+        let w = encode(&Instr::Lw { rd: A0, rs1: SP, offset: -8 }).unwrap();
+        assert_eq!(decode(w).unwrap(), Instr::Lw { rd: A0, rs1: SP, offset: -8 });
+    }
+
+    #[test]
+    fn illegal_words_rejected() {
+        assert!(matches!(decode(0x0000_0000), Err(DecodeError::UnknownOpcode { .. })));
+        assert!(matches!(decode(0xffff_ffff), Err(DecodeError::UnknownOpcode { .. }) | Err(_)));
+        // R-type with funct7 junk
+        assert!(matches!(decode(0x7000_0033), Err(DecodeError::BadFunct { .. })));
+    }
+
+    #[test]
+    fn custom_words_decode_to_prime_types() {
+        let ops = IPrime { vrs1: V1, vrd1: V2, vrs2: V3, vrd2: V4, rs1: A0, rd: A1 };
+        let i = Instr::CustomI { slot: CustomSlot::C2, funct3: 0, ops };
+        assert_eq!(decode(encode(&i).unwrap()).unwrap(), i);
+
+        let sops = SPrime { vrs1: V7, vrd1: V0, imm: 1, rs2: T0, rs1: A0, rd: A3 };
+        let s = Instr::CustomS { slot: CustomSlot::C0, funct3: 4, ops: sops };
+        assert_eq!(decode(encode(&s).unwrap()).unwrap(), s);
+    }
+
+    /// Exhaustive round-trip over every RV32IM variant with varied operands.
+    #[test]
+    fn roundtrip_all_variants() {
+        let mut cases: Vec<Instr> = Vec::new();
+        use Instr::*;
+        for (rd, rs1v, rs2v, imm) in [
+            (A0, A1, A2, 0i32),
+            (T0, S0, T6, -2048),
+            (ZERO, RA, SP, 2047),
+            (S11, A7, GP, 1),
+        ] {
+            cases.extend([
+                Lui { rd, imm: 0x7ffff000u32 as i32 },
+                Auipc { rd, imm: (imm << 12) & !0xfff },
+                Jal { rd, offset: 2048 },
+                Jalr { rd, rs1: rs1v, offset: imm },
+                Beq { rs1: rs1v, rs2: rs2v, offset: -4096 },
+                Bne { rs1: rs1v, rs2: rs2v, offset: 4094 },
+                Blt { rs1: rs1v, rs2: rs2v, offset: 2 },
+                Bge { rs1: rs1v, rs2: rs2v, offset: -2 },
+                Bltu { rs1: rs1v, rs2: rs2v, offset: 8 },
+                Bgeu { rs1: rs1v, rs2: rs2v, offset: 16 },
+                Lb { rd, rs1: rs1v, offset: imm },
+                Lh { rd, rs1: rs1v, offset: imm },
+                Lw { rd, rs1: rs1v, offset: imm },
+                Lbu { rd, rs1: rs1v, offset: imm },
+                Lhu { rd, rs1: rs1v, offset: imm },
+                Sb { rs1: rs1v, rs2: rs2v, offset: imm },
+                Sh { rs1: rs1v, rs2: rs2v, offset: imm },
+                Sw { rs1: rs1v, rs2: rs2v, offset: imm },
+                Addi { rd, rs1: rs1v, imm },
+                Slti { rd, rs1: rs1v, imm },
+                Sltiu { rd, rs1: rs1v, imm },
+                Xori { rd, rs1: rs1v, imm },
+                Ori { rd, rs1: rs1v, imm },
+                Andi { rd, rs1: rs1v, imm },
+                Slli { rd, rs1: rs1v, shamt: 31 },
+                Srli { rd, rs1: rs1v, shamt: 0 },
+                Srai { rd, rs1: rs1v, shamt: 17 },
+                Add { rd, rs1: rs1v, rs2: rs2v },
+                Sub { rd, rs1: rs1v, rs2: rs2v },
+                Sll { rd, rs1: rs1v, rs2: rs2v },
+                Slt { rd, rs1: rs1v, rs2: rs2v },
+                Sltu { rd, rs1: rs1v, rs2: rs2v },
+                Xor { rd, rs1: rs1v, rs2: rs2v },
+                Srl { rd, rs1: rs1v, rs2: rs2v },
+                Sra { rd, rs1: rs1v, rs2: rs2v },
+                Or { rd, rs1: rs1v, rs2: rs2v },
+                And { rd, rs1: rs1v, rs2: rs2v },
+                Mul { rd, rs1: rs1v, rs2: rs2v },
+                Mulh { rd, rs1: rs1v, rs2: rs2v },
+                Mulhsu { rd, rs1: rs1v, rs2: rs2v },
+                Mulhu { rd, rs1: rs1v, rs2: rs2v },
+                Div { rd, rs1: rs1v, rs2: rs2v },
+                Divu { rd, rs1: rs1v, rs2: rs2v },
+                Rem { rd, rs1: rs1v, rs2: rs2v },
+                Remu { rd, rs1: rs1v, rs2: rs2v },
+                Csrrs { rd, csr: 0xC82, rs1: ZERO },
+            ]);
+        }
+        cases.extend([Fence, Ecall, Ebreak]);
+        for instr in cases {
+            let w = encode(&instr).unwrap_or_else(|e| panic!("encode {instr}: {e}"));
+            let back = decode(w).unwrap_or_else(|e| panic!("decode {instr} ({w:#010x}): {e}"));
+            assert_eq!(back, instr, "word {w:#010x}");
+        }
+    }
+}

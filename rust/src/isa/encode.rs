@@ -1,0 +1,381 @@
+//! Instruction encoding: `Instr` → 32-bit machine word.
+//!
+//! RV32I/M encodings follow the unprivileged spec; I′/S′ follow Fig. 1 of
+//! the paper. One decode-level convention of ours (documented in
+//! DESIGN.md): within a custom slot, `funct3 < 4` encodes an I′-type
+//! instruction and `funct3 >= 4` an S′-type, so the decoder needs no
+//! per-slot side table — mirroring how the paper's binutils patch fixes
+//! the format per mnemonic.
+
+use super::instr::{CustomSlot, IPrime, Instr, SPrime};
+use super::reg::Reg;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum EncodeError {
+    #[error("immediate {imm} out of range for {what} (range {lo}..={hi})")]
+    ImmOutOfRange { what: &'static str, imm: i64, lo: i64, hi: i64 },
+    #[error("{what} offset {imm} must be a multiple of {align}")]
+    Misaligned { what: &'static str, imm: i64, align: i64 },
+    #[error("shift amount {0} out of range (0..=31)")]
+    BadShamt(u8),
+    #[error("funct3 {funct3} invalid for {what}: {why}")]
+    BadFunct3 { what: &'static str, funct3: u8, why: &'static str },
+}
+
+fn check_range(what: &'static str, imm: i64, lo: i64, hi: i64) -> Result<(), EncodeError> {
+    if imm < lo || imm > hi {
+        return Err(EncodeError::ImmOutOfRange { what, imm, lo, hi });
+    }
+    Ok(())
+}
+
+#[inline]
+fn r(rd: Reg, f3: u32, rs1: Reg, rs2: Reg, f7: u32, opcode: u32) -> u32 {
+    (f7 << 25)
+        | ((rs2.num() as u32) << 20)
+        | ((rs1.num() as u32) << 15)
+        | (f3 << 12)
+        | ((rd.num() as u32) << 7)
+        | opcode
+}
+
+#[inline]
+fn i(rd: Reg, f3: u32, rs1: Reg, imm12: i32, opcode: u32) -> u32 {
+    (((imm12 as u32) & 0xfff) << 20)
+        | ((rs1.num() as u32) << 15)
+        | (f3 << 12)
+        | ((rd.num() as u32) << 7)
+        | opcode
+}
+
+#[inline]
+fn s(f3: u32, rs1: Reg, rs2: Reg, imm12: i32, opcode: u32) -> u32 {
+    let imm = imm12 as u32;
+    (((imm >> 5) & 0x7f) << 25)
+        | ((rs2.num() as u32) << 20)
+        | ((rs1.num() as u32) << 15)
+        | (f3 << 12)
+        | ((imm & 0x1f) << 7)
+        | opcode
+}
+
+#[inline]
+fn b(f3: u32, rs1: Reg, rs2: Reg, off: i32, opcode: u32) -> u32 {
+    let imm = off as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3f) << 25)
+        | ((rs2.num() as u32) << 20)
+        | ((rs1.num() as u32) << 15)
+        | (f3 << 12)
+        | (((imm >> 1) & 0xf) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | opcode
+}
+
+#[inline]
+fn u(rd: Reg, imm: i32, opcode: u32) -> u32 {
+    ((imm as u32) & 0xffff_f000) | ((rd.num() as u32) << 7) | opcode
+}
+
+#[inline]
+fn j(rd: Reg, off: i32, opcode: u32) -> u32 {
+    let imm = off as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3ff) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xff) << 12)
+        | ((rd.num() as u32) << 7)
+        | opcode
+}
+
+/// Encode the paper's I′-type (Fig. 1):
+/// `vrs1[31:29] vrd1[28:26] vrs2[25:23] vrd2[22:20] rs1 funct3 rd opcode`.
+#[inline]
+fn iprime(slot: CustomSlot, funct3: u8, ops: &IPrime) -> u32 {
+    ((ops.vrs1.num() as u32) << 29)
+        | ((ops.vrd1.num() as u32) << 26)
+        | ((ops.vrs2.num() as u32) << 23)
+        | ((ops.vrd2.num() as u32) << 20)
+        | ((ops.rs1.num() as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | ((ops.rd.num() as u32) << 7)
+        | slot.opcode()
+}
+
+/// Encode the paper's S′-type (Fig. 1):
+/// `vrs1[31:29] vrd1[28:26] imm[25] rs2[24:20] rs1 funct3 rd opcode`.
+#[inline]
+fn sprime(slot: CustomSlot, funct3: u8, ops: &SPrime) -> u32 {
+    ((ops.vrs1.num() as u32) << 29)
+        | ((ops.vrd1.num() as u32) << 26)
+        | (((ops.imm & 1) as u32) << 25)
+        | ((ops.rs2.num() as u32) << 20)
+        | ((ops.rs1.num() as u32) << 15)
+        | ((funct3 as u32) << 12)
+        | ((ops.rd.num() as u32) << 7)
+        | slot.opcode()
+}
+
+const OP_LUI: u32 = 0b011_0111;
+const OP_AUIPC: u32 = 0b001_0111;
+const OP_JAL: u32 = 0b110_1111;
+const OP_JALR: u32 = 0b110_0111;
+const OP_BRANCH: u32 = 0b110_0011;
+const OP_LOAD: u32 = 0b000_0011;
+const OP_STORE: u32 = 0b010_0011;
+const OP_IMM: u32 = 0b001_0011;
+const OP_REG: u32 = 0b011_0011;
+const OP_FENCE: u32 = 0b000_1111;
+const OP_SYSTEM: u32 = 0b111_0011;
+
+/// Encode an instruction to its 32-bit machine word.
+pub fn encode(instr: &Instr) -> Result<u32, EncodeError> {
+    use Instr::*;
+    Ok(match *instr {
+        Lui { rd, imm } => {
+            // `imm` carries the already-shifted 32-bit value (low 12 bits 0).
+            if imm & 0xfff != 0 {
+                return Err(EncodeError::Misaligned { what: "lui", imm: imm as i64, align: 4096 });
+            }
+            u(rd, imm, OP_LUI)
+        }
+        Auipc { rd, imm } => {
+            if imm & 0xfff != 0 {
+                return Err(EncodeError::Misaligned { what: "auipc", imm: imm as i64, align: 4096 });
+            }
+            u(rd, imm, OP_AUIPC)
+        }
+        Jal { rd, offset } => {
+            check_range("jal", offset as i64, -(1 << 20), (1 << 20) - 2)?;
+            if offset & 1 != 0 {
+                return Err(EncodeError::Misaligned { what: "jal", imm: offset as i64, align: 2 });
+            }
+            j(rd, offset, OP_JAL)
+        }
+        Jalr { rd, rs1, offset } => {
+            check_range("jalr", offset as i64, -2048, 2047)?;
+            i(rd, 0b000, rs1, offset, OP_JALR)
+        }
+        Beq { rs1, rs2, offset } => branch(0b000, rs1, rs2, offset)?,
+        Bne { rs1, rs2, offset } => branch(0b001, rs1, rs2, offset)?,
+        Blt { rs1, rs2, offset } => branch(0b100, rs1, rs2, offset)?,
+        Bge { rs1, rs2, offset } => branch(0b101, rs1, rs2, offset)?,
+        Bltu { rs1, rs2, offset } => branch(0b110, rs1, rs2, offset)?,
+        Bgeu { rs1, rs2, offset } => branch(0b111, rs1, rs2, offset)?,
+        Lb { rd, rs1, offset } => load(rd, 0b000, rs1, offset)?,
+        Lh { rd, rs1, offset } => load(rd, 0b001, rs1, offset)?,
+        Lw { rd, rs1, offset } => load(rd, 0b010, rs1, offset)?,
+        Lbu { rd, rs1, offset } => load(rd, 0b100, rs1, offset)?,
+        Lhu { rd, rs1, offset } => load(rd, 0b101, rs1, offset)?,
+        Sb { rs1, rs2, offset } => store(0b000, rs1, rs2, offset)?,
+        Sh { rs1, rs2, offset } => store(0b001, rs1, rs2, offset)?,
+        Sw { rs1, rs2, offset } => store(0b010, rs1, rs2, offset)?,
+        Addi { rd, rs1, imm } => alu_imm(rd, 0b000, rs1, imm)?,
+        Slti { rd, rs1, imm } => alu_imm(rd, 0b010, rs1, imm)?,
+        Sltiu { rd, rs1, imm } => alu_imm(rd, 0b011, rs1, imm)?,
+        Xori { rd, rs1, imm } => alu_imm(rd, 0b100, rs1, imm)?,
+        Ori { rd, rs1, imm } => alu_imm(rd, 0b110, rs1, imm)?,
+        Andi { rd, rs1, imm } => alu_imm(rd, 0b111, rs1, imm)?,
+        Slli { rd, rs1, shamt } => shift(rd, 0b001, rs1, shamt, 0)?,
+        Srli { rd, rs1, shamt } => shift(rd, 0b101, rs1, shamt, 0)?,
+        Srai { rd, rs1, shamt } => shift(rd, 0b101, rs1, shamt, 0b010_0000)?,
+        Add { rd, rs1, rs2 } => r(rd, 0b000, rs1, rs2, 0, OP_REG),
+        Sub { rd, rs1, rs2 } => r(rd, 0b000, rs1, rs2, 0b010_0000, OP_REG),
+        Sll { rd, rs1, rs2 } => r(rd, 0b001, rs1, rs2, 0, OP_REG),
+        Slt { rd, rs1, rs2 } => r(rd, 0b010, rs1, rs2, 0, OP_REG),
+        Sltu { rd, rs1, rs2 } => r(rd, 0b011, rs1, rs2, 0, OP_REG),
+        Xor { rd, rs1, rs2 } => r(rd, 0b100, rs1, rs2, 0, OP_REG),
+        Srl { rd, rs1, rs2 } => r(rd, 0b101, rs1, rs2, 0, OP_REG),
+        Sra { rd, rs1, rs2 } => r(rd, 0b101, rs1, rs2, 0b010_0000, OP_REG),
+        Or { rd, rs1, rs2 } => r(rd, 0b110, rs1, rs2, 0, OP_REG),
+        And { rd, rs1, rs2 } => r(rd, 0b111, rs1, rs2, 0, OP_REG),
+        Fence => OP_FENCE,
+        Ecall => 0x0000_0073,
+        Ebreak => 0x0010_0073,
+        Csrrs { rd, csr, rs1 } => {
+            ((csr as u32) << 20)
+                | ((rs1.num() as u32) << 15)
+                | (0b010 << 12)
+                | ((rd.num() as u32) << 7)
+                | OP_SYSTEM
+        }
+        Mul { rd, rs1, rs2 } => r(rd, 0b000, rs1, rs2, 1, OP_REG),
+        Mulh { rd, rs1, rs2 } => r(rd, 0b001, rs1, rs2, 1, OP_REG),
+        Mulhsu { rd, rs1, rs2 } => r(rd, 0b010, rs1, rs2, 1, OP_REG),
+        Mulhu { rd, rs1, rs2 } => r(rd, 0b011, rs1, rs2, 1, OP_REG),
+        Div { rd, rs1, rs2 } => r(rd, 0b100, rs1, rs2, 1, OP_REG),
+        Divu { rd, rs1, rs2 } => r(rd, 0b101, rs1, rs2, 1, OP_REG),
+        Rem { rd, rs1, rs2 } => r(rd, 0b110, rs1, rs2, 1, OP_REG),
+        Remu { rd, rs1, rs2 } => r(rd, 0b111, rs1, rs2, 1, OP_REG),
+        CustomI { slot, funct3, ops } => {
+            if funct3 >= 4 {
+                return Err(EncodeError::BadFunct3 {
+                    what: "I'-type",
+                    funct3,
+                    why: "funct3 0..=3 encode I'-type; 4..=7 are S'-type",
+                });
+            }
+            iprime(slot, funct3, &ops)
+        }
+        CustomS { slot, funct3, ops } => {
+            if !(4..8).contains(&funct3) {
+                return Err(EncodeError::BadFunct3 {
+                    what: "S'-type",
+                    funct3,
+                    why: "funct3 4..=7 encode S'-type; 0..=3 are I'-type",
+                });
+            }
+            sprime(slot, funct3, &ops)
+        }
+    })
+}
+
+fn branch(f3: u32, rs1: Reg, rs2: Reg, offset: i32) -> Result<u32, EncodeError> {
+    check_range("branch", offset as i64, -4096, 4094)?;
+    if offset & 1 != 0 {
+        return Err(EncodeError::Misaligned { what: "branch", imm: offset as i64, align: 2 });
+    }
+    Ok(b(f3, rs1, rs2, offset, OP_BRANCH))
+}
+
+fn load(rd: Reg, f3: u32, rs1: Reg, offset: i32) -> Result<u32, EncodeError> {
+    check_range("load", offset as i64, -2048, 2047)?;
+    Ok(i(rd, f3, rs1, offset, OP_LOAD))
+}
+
+fn store(f3: u32, rs1: Reg, rs2: Reg, offset: i32) -> Result<u32, EncodeError> {
+    check_range("store", offset as i64, -2048, 2047)?;
+    Ok(s(f3, rs1, rs2, offset, OP_STORE))
+}
+
+fn alu_imm(rd: Reg, f3: u32, rs1: Reg, imm: i32) -> Result<u32, EncodeError> {
+    check_range("alu-imm", imm as i64, -2048, 2047)?;
+    Ok(i(rd, f3, rs1, imm, OP_IMM))
+}
+
+fn shift(rd: Reg, f3: u32, rs1: Reg, shamt: u8, f7: u32) -> Result<u32, EncodeError> {
+    if shamt >= 32 {
+        return Err(EncodeError::BadShamt(shamt));
+    }
+    Ok(r(rd, f3, rs1, Reg(shamt), f7, OP_IMM))
+}
+
+// Re-export field helpers for the decoder (kept here so layout knowledge
+// lives in one file).
+pub(crate) mod fields {
+    /// Extract `[hi:lo]` (inclusive) from a word.
+    #[inline]
+    pub fn bits(word: u32, hi: u32, lo: u32) -> u32 {
+        (word >> lo) & ((1u32 << (hi - lo + 1)) - 1)
+    }
+
+    /// Sign-extend the low `n` bits of `v`.
+    #[inline]
+    pub fn sext(v: u32, n: u32) -> i32 {
+        let shift = 32 - n;
+        ((v << shift) as i32) >> shift
+    }
+}
+
+pub(crate) use fields::{bits, sext};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+
+    /// Cross-checked against `riscv64-unknown-elf-gcc -c` objdump output
+    /// (well-known encodings).
+    #[test]
+    fn golden_encodings() {
+        // addi a0, a0, 1  => 0x00150513
+        assert_eq!(encode(&Instr::Addi { rd: A0, rs1: A0, imm: 1 }).unwrap(), 0x0015_0513);
+        // add a0, a1, a2 => 0x00c58533
+        assert_eq!(encode(&Instr::Add { rd: A0, rs1: A1, rs2: A2 }).unwrap(), 0x00c5_8533);
+        // lw a0, 4(sp) => 0x00412503
+        assert_eq!(encode(&Instr::Lw { rd: A0, rs1: SP, offset: 4 }).unwrap(), 0x0041_2503);
+        // sw a0, 8(sp) => 0x00a12423
+        assert_eq!(encode(&Instr::Sw { rs1: SP, rs2: A0, offset: 8 }).unwrap(), 0x00a1_2423);
+        // lui a0, 0x12345 => 0x12345537
+        assert_eq!(encode(&Instr::Lui { rd: A0, imm: 0x1234_5000 }).unwrap(), 0x1234_5537);
+        // jal ra, 16 => 0x010000ef
+        assert_eq!(encode(&Instr::Jal { rd: RA, offset: 16 }).unwrap(), 0x0100_00ef);
+        // beq a0, a1, -4 => 0xfeb50ee3
+        assert_eq!(encode(&Instr::Beq { rs1: A0, rs2: A1, offset: -4 }).unwrap(), 0xfeb5_0ee3);
+        // mul a0, a1, a2 => 0x02c58533
+        assert_eq!(encode(&Instr::Mul { rd: A0, rs1: A1, rs2: A2 }).unwrap(), 0x02c5_8533);
+        // srai a0, a0, 3 => 0x40355513
+        assert_eq!(encode(&Instr::Srai { rd: A0, rs1: A0, shamt: 3 }).unwrap(), 0x4035_5513);
+        // ecall / ebreak / fence
+        assert_eq!(encode(&Instr::Ecall).unwrap(), 0x0000_0073);
+        assert_eq!(encode(&Instr::Ebreak).unwrap(), 0x0010_0073);
+        // csrrs a0, cycle, zero  (rdcycle a0) => 0xc0002573
+        assert_eq!(
+            encode(&Instr::Csrrs { rd: A0, csr: 0xC00, rs1: ZERO }).unwrap(),
+            0xc000_2573
+        );
+    }
+
+    #[test]
+    fn range_validation() {
+        assert!(matches!(
+            encode(&Instr::Addi { rd: A0, rs1: A0, imm: 5000 }),
+            Err(EncodeError::ImmOutOfRange { .. })
+        ));
+        assert!(matches!(
+            encode(&Instr::Beq { rs1: A0, rs2: A1, offset: 3 }),
+            Err(EncodeError::Misaligned { .. })
+        ));
+        assert!(matches!(
+            encode(&Instr::Slli { rd: A0, rs1: A0, shamt: 32 }),
+            Err(EncodeError::BadShamt(32))
+        ));
+        assert!(matches!(
+            encode(&Instr::Jal { rd: RA, offset: 1 << 20 }),
+            Err(EncodeError::ImmOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn iprime_field_placement() {
+        let ops = IPrime { vrs1: V1, vrd1: V2, vrs2: V3, vrd2: V4, rs1: A0, rd: A1 };
+        let w = encode(&Instr::CustomI { slot: CustomSlot::C2, funct3: 1, ops }).unwrap();
+        assert_eq!(bits(w, 31, 29), 1, "vrs1");
+        assert_eq!(bits(w, 28, 26), 2, "vrd1");
+        assert_eq!(bits(w, 25, 23), 3, "vrs2");
+        assert_eq!(bits(w, 22, 20), 4, "vrd2");
+        assert_eq!(bits(w, 19, 15), 10, "rs1");
+        assert_eq!(bits(w, 14, 12), 1, "funct3");
+        assert_eq!(bits(w, 11, 7), 11, "rd");
+        assert_eq!(bits(w, 6, 0), CustomSlot::C2.opcode(), "opcode");
+    }
+
+    #[test]
+    fn sprime_field_placement() {
+        let ops = SPrime { vrs1: V5, vrd1: V6, imm: 1, rs2: A2, rs1: A0, rd: ZERO };
+        let w = encode(&Instr::CustomS { slot: CustomSlot::C0, funct3: 5, ops }).unwrap();
+        assert_eq!(bits(w, 31, 29), 5, "vrs1");
+        assert_eq!(bits(w, 28, 26), 6, "vrd1");
+        assert_eq!(bits(w, 25, 25), 1, "imm");
+        assert_eq!(bits(w, 24, 20), 12, "rs2");
+        assert_eq!(bits(w, 19, 15), 10, "rs1");
+        assert_eq!(bits(w, 14, 12), 5, "funct3");
+        assert_eq!(bits(w, 11, 7), 0, "rd");
+        assert_eq!(bits(w, 6, 0), CustomSlot::C0.opcode(), "opcode");
+    }
+
+    #[test]
+    fn custom_funct3_convention_enforced() {
+        let iops = IPrime { vrs1: V1, vrd1: V1, vrs2: V0, vrd2: V0, rs1: ZERO, rd: ZERO };
+        assert!(matches!(
+            encode(&Instr::CustomI { slot: CustomSlot::C1, funct3: 4, ops: iops }),
+            Err(EncodeError::BadFunct3 { .. })
+        ));
+        let sops = SPrime { vrs1: V1, vrd1: V1, imm: 0, rs2: ZERO, rs1: ZERO, rd: ZERO };
+        assert!(matches!(
+            encode(&Instr::CustomS { slot: CustomSlot::C1, funct3: 2, ops: sops }),
+            Err(EncodeError::BadFunct3 { .. })
+        ));
+    }
+}

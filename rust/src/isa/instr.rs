@@ -1,0 +1,436 @@
+//! Decoded instruction forms: RV32I base, the M extension, the Zicsr
+//! subset the softcore exposes (cycle/instret counters), and the paper's
+//! two non-standard vector instruction types I′ and S′ (§2.1, Fig. 1).
+//!
+//! `Instr` is the single source of truth shared by the encoder, decoder,
+//! assembler, disassembler and the simulator core.
+
+use super::reg::{Reg, VReg};
+use std::fmt;
+
+/// Opcode slot for custom instructions. RISC-V reserves four major opcodes
+/// for custom extensions; the paper's `cN_*` mnemonics name the unit
+/// loaded into reconfigurable slot N, which we bind 1:1 to these opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CustomSlot {
+    /// custom-0, opcode `0001011`
+    C0,
+    /// custom-1, opcode `0101011`
+    C1,
+    /// custom-2, opcode `1011011`
+    C2,
+    /// custom-3, opcode `1111011`
+    C3,
+}
+
+impl CustomSlot {
+    pub const ALL: [CustomSlot; 4] = [CustomSlot::C0, CustomSlot::C1, CustomSlot::C2, CustomSlot::C3];
+
+    pub const fn opcode(self) -> u32 {
+        match self {
+            CustomSlot::C0 => 0b000_1011,
+            CustomSlot::C1 => 0b010_1011,
+            CustomSlot::C2 => 0b101_1011,
+            CustomSlot::C3 => 0b111_1011,
+        }
+    }
+
+    pub const fn from_opcode(op: u32) -> Option<CustomSlot> {
+        match op {
+            0b000_1011 => Some(CustomSlot::C0),
+            0b010_1011 => Some(CustomSlot::C1),
+            0b101_1011 => Some(CustomSlot::C2),
+            0b111_1011 => Some(CustomSlot::C3),
+            _ => None,
+        }
+    }
+
+    pub const fn index(self) -> usize {
+        match self {
+            CustomSlot::C0 => 0,
+            CustomSlot::C1 => 1,
+            CustomSlot::C2 => 2,
+            CustomSlot::C3 => 3,
+        }
+    }
+
+    pub const fn from_index(i: usize) -> Option<CustomSlot> {
+        match i {
+            0 => Some(CustomSlot::C0),
+            1 => Some(CustomSlot::C1),
+            2 => Some(CustomSlot::C2),
+            3 => Some(CustomSlot::C3),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CustomSlot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}", self.index())
+    }
+}
+
+/// Operand bundle of an I′-type instruction (Fig. 1).
+///
+/// Field layout (32-bit word, MSB→LSB):
+/// `vrs1[31:29] vrd1[28:26] vrs2[25:23] vrd2[22:20] rs1[19:15] funct3[14:12] rd[11:7] opcode[6:0]`
+///
+/// The 12-bit immediate of the standard I-type is repurposed as four 3-bit
+/// vector register names, giving up to 6 accessible registers per
+/// instruction (2 base + 4 vector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IPrime {
+    pub vrs1: VReg,
+    pub vrd1: VReg,
+    pub vrs2: VReg,
+    pub vrd2: VReg,
+    pub rs1: Reg,
+    pub rd: Reg,
+}
+
+/// Operand bundle of an S′-type instruction (Fig. 1).
+///
+/// Field layout (32-bit word, MSB→LSB):
+/// `vrs1[31:29] vrd1[28:26] imm[25] rs2[24:20] rs1[19:15] funct3[14:12] rd[11:7] opcode[6:0]`
+///
+/// S′ trades the `vrs2`/`vrd2` fields of I′ for a second base source
+/// register `rs2` (useful to split loop indices for load/store-style
+/// instructions, §2.1). The 6 bits freed by `vrs2+vrd2` hold the 5-bit
+/// `rs2` plus a single immediate bit (the paper's figure leaves the
+/// residual bit as `imm`; we expose it as a 1-bit modifier flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SPrime {
+    pub vrs1: VReg,
+    pub vrd1: VReg,
+    /// 1-bit immediate/modifier flag (bit 25).
+    pub imm: u8,
+    pub rs2: Reg,
+    pub rs1: Reg,
+    pub rd: Reg,
+}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    // ---- RV32I: upper immediates & jumps --------------------------------
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, offset: i32 },
+    Jalr { rd: Reg, rs1: Reg, offset: i32 },
+
+    // ---- RV32I: conditional branches ------------------------------------
+    Beq { rs1: Reg, rs2: Reg, offset: i32 },
+    Bne { rs1: Reg, rs2: Reg, offset: i32 },
+    Blt { rs1: Reg, rs2: Reg, offset: i32 },
+    Bge { rs1: Reg, rs2: Reg, offset: i32 },
+    Bltu { rs1: Reg, rs2: Reg, offset: i32 },
+    Bgeu { rs1: Reg, rs2: Reg, offset: i32 },
+
+    // ---- RV32I: loads / stores ------------------------------------------
+    Lb { rd: Reg, rs1: Reg, offset: i32 },
+    Lh { rd: Reg, rs1: Reg, offset: i32 },
+    Lw { rd: Reg, rs1: Reg, offset: i32 },
+    Lbu { rd: Reg, rs1: Reg, offset: i32 },
+    Lhu { rd: Reg, rs1: Reg, offset: i32 },
+    Sb { rs1: Reg, rs2: Reg, offset: i32 },
+    Sh { rs1: Reg, rs2: Reg, offset: i32 },
+    Sw { rs1: Reg, rs2: Reg, offset: i32 },
+
+    // ---- RV32I: immediate ALU -------------------------------------------
+    Addi { rd: Reg, rs1: Reg, imm: i32 },
+    Slti { rd: Reg, rs1: Reg, imm: i32 },
+    Sltiu { rd: Reg, rs1: Reg, imm: i32 },
+    Xori { rd: Reg, rs1: Reg, imm: i32 },
+    Ori { rd: Reg, rs1: Reg, imm: i32 },
+    Andi { rd: Reg, rs1: Reg, imm: i32 },
+    Slli { rd: Reg, rs1: Reg, shamt: u8 },
+    Srli { rd: Reg, rs1: Reg, shamt: u8 },
+    Srai { rd: Reg, rs1: Reg, shamt: u8 },
+
+    // ---- RV32I: register ALU --------------------------------------------
+    Add { rd: Reg, rs1: Reg, rs2: Reg },
+    Sub { rd: Reg, rs1: Reg, rs2: Reg },
+    Sll { rd: Reg, rs1: Reg, rs2: Reg },
+    Slt { rd: Reg, rs1: Reg, rs2: Reg },
+    Sltu { rd: Reg, rs1: Reg, rs2: Reg },
+    Xor { rd: Reg, rs1: Reg, rs2: Reg },
+    Srl { rd: Reg, rs1: Reg, rs2: Reg },
+    Sra { rd: Reg, rs1: Reg, rs2: Reg },
+    Or { rd: Reg, rs1: Reg, rs2: Reg },
+    And { rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ---- RV32I: system ----------------------------------------------------
+    Fence,
+    Ecall,
+    Ebreak,
+
+    // ---- Zicsr subset (read-only performance counters) --------------------
+    /// `csrrs rd, csr, rs1` — the softcore implements the read-only
+    /// counter CSRs (cycle/cycleh/instret/instreth/time/timeh).
+    Csrrs { rd: Reg, csr: u16, rs1: Reg },
+
+    // ---- M extension -------------------------------------------------------
+    Mul { rd: Reg, rs1: Reg, rs2: Reg },
+    Mulh { rd: Reg, rs1: Reg, rs2: Reg },
+    Mulhsu { rd: Reg, rs1: Reg, rs2: Reg },
+    Mulhu { rd: Reg, rs1: Reg, rs2: Reg },
+    Div { rd: Reg, rs1: Reg, rs2: Reg },
+    Divu { rd: Reg, rs1: Reg, rs2: Reg },
+    Rem { rd: Reg, rs1: Reg, rs2: Reg },
+    Remu { rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ---- Paper's custom SIMD types (§2.1) ----------------------------------
+    /// I′-type custom instruction: `funct3` selects the operation within
+    /// the slot's loaded unit.
+    CustomI { slot: CustomSlot, funct3: u8, ops: IPrime },
+    /// S′-type custom instruction.
+    CustomS { slot: CustomSlot, funct3: u8, ops: SPrime },
+}
+
+impl Instr {
+    /// The destination base register written by this instruction, if any.
+    pub fn rd(&self) -> Option<Reg> {
+        use Instr::*;
+        match *self {
+            Lui { rd, .. }
+            | Auipc { rd, .. }
+            | Jal { rd, .. }
+            | Jalr { rd, .. }
+            | Lb { rd, .. }
+            | Lh { rd, .. }
+            | Lw { rd, .. }
+            | Lbu { rd, .. }
+            | Lhu { rd, .. }
+            | Addi { rd, .. }
+            | Slti { rd, .. }
+            | Sltiu { rd, .. }
+            | Xori { rd, .. }
+            | Ori { rd, .. }
+            | Andi { rd, .. }
+            | Slli { rd, .. }
+            | Srli { rd, .. }
+            | Srai { rd, .. }
+            | Add { rd, .. }
+            | Sub { rd, .. }
+            | Sll { rd, .. }
+            | Slt { rd, .. }
+            | Sltu { rd, .. }
+            | Xor { rd, .. }
+            | Srl { rd, .. }
+            | Sra { rd, .. }
+            | Or { rd, .. }
+            | And { rd, .. }
+            | Csrrs { rd, .. }
+            | Mul { rd, .. }
+            | Mulh { rd, .. }
+            | Mulhsu { rd, .. }
+            | Mulhu { rd, .. }
+            | Div { rd, .. }
+            | Divu { rd, .. }
+            | Rem { rd, .. }
+            | Remu { rd, .. } => Some(rd),
+            CustomI { ops, .. } => Some(ops.rd),
+            CustomS { ops, .. } => Some(ops.rd),
+            _ => None,
+        }
+    }
+
+    /// True for control-flow instructions (used by the assembler to decide
+    /// which immediates are label-relative).
+    pub fn is_branch_or_jump(&self) -> bool {
+        use Instr::*;
+        matches!(
+            self,
+            Jal { .. } | Jalr { .. } | Beq { .. } | Bne { .. } | Blt { .. } | Bge { .. }
+                | Bltu { .. } | Bgeu { .. }
+        )
+    }
+
+    /// True if the instruction accesses data memory through DL1.
+    pub fn is_mem(&self) -> bool {
+        use Instr::*;
+        matches!(
+            self,
+            Lb { .. } | Lh { .. } | Lw { .. } | Lbu { .. } | Lhu { .. } | Sb { .. } | Sh { .. }
+                | Sw { .. }
+        )
+    }
+
+    /// Canonical mnemonic (what the text assembler parses and the
+    /// disassembler prints).
+    pub fn mnemonic(&self) -> &'static str {
+        use Instr::*;
+        match self {
+            Lui { .. } => "lui",
+            Auipc { .. } => "auipc",
+            Jal { .. } => "jal",
+            Jalr { .. } => "jalr",
+            Beq { .. } => "beq",
+            Bne { .. } => "bne",
+            Blt { .. } => "blt",
+            Bge { .. } => "bge",
+            Bltu { .. } => "bltu",
+            Bgeu { .. } => "bgeu",
+            Lb { .. } => "lb",
+            Lh { .. } => "lh",
+            Lw { .. } => "lw",
+            Lbu { .. } => "lbu",
+            Lhu { .. } => "lhu",
+            Sb { .. } => "sb",
+            Sh { .. } => "sh",
+            Sw { .. } => "sw",
+            Addi { .. } => "addi",
+            Slti { .. } => "slti",
+            Sltiu { .. } => "sltiu",
+            Xori { .. } => "xori",
+            Ori { .. } => "ori",
+            Andi { .. } => "andi",
+            Slli { .. } => "slli",
+            Srli { .. } => "srli",
+            Srai { .. } => "srai",
+            Add { .. } => "add",
+            Sub { .. } => "sub",
+            Sll { .. } => "sll",
+            Slt { .. } => "slt",
+            Sltu { .. } => "sltu",
+            Xor { .. } => "xor",
+            Srl { .. } => "srl",
+            Sra { .. } => "sra",
+            Or { .. } => "or",
+            And { .. } => "and",
+            Fence => "fence",
+            Ecall => "ecall",
+            Ebreak => "ebreak",
+            Csrrs { .. } => "csrrs",
+            Mul { .. } => "mul",
+            Mulh { .. } => "mulh",
+            Mulhsu { .. } => "mulhsu",
+            Mulhu { .. } => "mulhu",
+            Div { .. } => "div",
+            Divu { .. } => "divu",
+            Rem { .. } => "rem",
+            Remu { .. } => "remu",
+            CustomI { .. } => "custom.i",
+            CustomS { .. } => "custom.s",
+        }
+    }
+}
+
+impl fmt::Display for Instr {
+    /// Disassembly in the syntax the text assembler accepts.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Instr::*;
+        match *self {
+            Lui { rd, imm } => write!(f, "lui {rd}, {:#x}", (imm as u32) >> 12),
+            Auipc { rd, imm } => write!(f, "auipc {rd}, {:#x}", (imm as u32) >> 12),
+            Jal { rd, offset } => write!(f, "jal {rd}, {offset}"),
+            Jalr { rd, rs1, offset } => write!(f, "jalr {rd}, {offset}({rs1})"),
+            Beq { rs1, rs2, offset } => write!(f, "beq {rs1}, {rs2}, {offset}"),
+            Bne { rs1, rs2, offset } => write!(f, "bne {rs1}, {rs2}, {offset}"),
+            Blt { rs1, rs2, offset } => write!(f, "blt {rs1}, {rs2}, {offset}"),
+            Bge { rs1, rs2, offset } => write!(f, "bge {rs1}, {rs2}, {offset}"),
+            Bltu { rs1, rs2, offset } => write!(f, "bltu {rs1}, {rs2}, {offset}"),
+            Bgeu { rs1, rs2, offset } => write!(f, "bgeu {rs1}, {rs2}, {offset}"),
+            Lb { rd, rs1, offset } => write!(f, "lb {rd}, {offset}({rs1})"),
+            Lh { rd, rs1, offset } => write!(f, "lh {rd}, {offset}({rs1})"),
+            Lw { rd, rs1, offset } => write!(f, "lw {rd}, {offset}({rs1})"),
+            Lbu { rd, rs1, offset } => write!(f, "lbu {rd}, {offset}({rs1})"),
+            Lhu { rd, rs1, offset } => write!(f, "lhu {rd}, {offset}({rs1})"),
+            Sb { rs1, rs2, offset } => write!(f, "sb {rs2}, {offset}({rs1})"),
+            Sh { rs1, rs2, offset } => write!(f, "sh {rs2}, {offset}({rs1})"),
+            Sw { rs1, rs2, offset } => write!(f, "sw {rs2}, {offset}({rs1})"),
+            Addi { rd, rs1, imm } => write!(f, "addi {rd}, {rs1}, {imm}"),
+            Slti { rd, rs1, imm } => write!(f, "slti {rd}, {rs1}, {imm}"),
+            Sltiu { rd, rs1, imm } => write!(f, "sltiu {rd}, {rs1}, {imm}"),
+            Xori { rd, rs1, imm } => write!(f, "xori {rd}, {rs1}, {imm}"),
+            Ori { rd, rs1, imm } => write!(f, "ori {rd}, {rs1}, {imm}"),
+            Andi { rd, rs1, imm } => write!(f, "andi {rd}, {rs1}, {imm}"),
+            Slli { rd, rs1, shamt } => write!(f, "slli {rd}, {rs1}, {shamt}"),
+            Srli { rd, rs1, shamt } => write!(f, "srli {rd}, {rs1}, {shamt}"),
+            Srai { rd, rs1, shamt } => write!(f, "srai {rd}, {rs1}, {shamt}"),
+            Add { rd, rs1, rs2 } => write!(f, "add {rd}, {rs1}, {rs2}"),
+            Sub { rd, rs1, rs2 } => write!(f, "sub {rd}, {rs1}, {rs2}"),
+            Sll { rd, rs1, rs2 } => write!(f, "sll {rd}, {rs1}, {rs2}"),
+            Slt { rd, rs1, rs2 } => write!(f, "slt {rd}, {rs1}, {rs2}"),
+            Sltu { rd, rs1, rs2 } => write!(f, "sltu {rd}, {rs1}, {rs2}"),
+            Xor { rd, rs1, rs2 } => write!(f, "xor {rd}, {rs1}, {rs2}"),
+            Srl { rd, rs1, rs2 } => write!(f, "srl {rd}, {rs1}, {rs2}"),
+            Sra { rd, rs1, rs2 } => write!(f, "sra {rd}, {rs1}, {rs2}"),
+            Or { rd, rs1, rs2 } => write!(f, "or {rd}, {rs1}, {rs2}"),
+            And { rd, rs1, rs2 } => write!(f, "and {rd}, {rs1}, {rs2}"),
+            Fence => write!(f, "fence"),
+            Ecall => write!(f, "ecall"),
+            Ebreak => write!(f, "ebreak"),
+            Csrrs { rd, csr, rs1 } => write!(f, "csrrs {rd}, {csr:#x}, {rs1}"),
+            Mul { rd, rs1, rs2 } => write!(f, "mul {rd}, {rs1}, {rs2}"),
+            Mulh { rd, rs1, rs2 } => write!(f, "mulh {rd}, {rs1}, {rs2}"),
+            Mulhsu { rd, rs1, rs2 } => write!(f, "mulhsu {rd}, {rs1}, {rs2}"),
+            Mulhu { rd, rs1, rs2 } => write!(f, "mulhu {rd}, {rs1}, {rs2}"),
+            Div { rd, rs1, rs2 } => write!(f, "div {rd}, {rs1}, {rs2}"),
+            Divu { rd, rs1, rs2 } => write!(f, "divu {rd}, {rs1}, {rs2}"),
+            Rem { rd, rs1, rs2 } => write!(f, "rem {rd}, {rs1}, {rs2}"),
+            Remu { rd, rs1, rs2 } => write!(f, "remu {rd}, {rs1}, {rs2}"),
+            CustomI { slot, funct3, ops } => write!(
+                f,
+                "{slot}.i{funct3} {}, {}, {}, {}, {}, {}",
+                ops.rd, ops.vrd1, ops.vrd2, ops.rs1, ops.vrs1, ops.vrs2
+            ),
+            CustomS { slot, funct3, ops } => write!(
+                f,
+                "{slot}.s{funct3} {}, {}, {}, {}, {}, {}",
+                ops.rd, ops.vrd1, ops.rs1, ops.rs2, ops.vrs1, ops.imm
+            ),
+        }
+    }
+}
+
+/// CSR numbers implemented by the softcore (read-only counters).
+pub mod csr {
+    pub const CYCLE: u16 = 0xC00;
+    pub const TIME: u16 = 0xC01;
+    pub const INSTRET: u16 = 0xC02;
+    pub const CYCLEH: u16 = 0xC80;
+    pub const TIMEH: u16 = 0xC81;
+    pub const INSTRETH: u16 = 0xC82;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn custom_slot_opcode_roundtrip() {
+        for slot in CustomSlot::ALL {
+            assert_eq!(CustomSlot::from_opcode(slot.opcode()), Some(slot));
+            assert_eq!(CustomSlot::from_index(slot.index()), Some(slot));
+        }
+        assert_eq!(CustomSlot::from_opcode(0b0110011), None);
+        assert_eq!(CustomSlot::from_index(4), None);
+    }
+
+    #[test]
+    fn rd_extraction() {
+        assert_eq!(Instr::Add { rd: A0, rs1: A1, rs2: A2 }.rd(), Some(A0));
+        assert_eq!(Instr::Sw { rs1: A0, rs2: A1, offset: 0 }.rd(), None);
+        assert_eq!(Instr::Beq { rs1: A0, rs2: A1, offset: 8 }.rd(), None);
+        assert_eq!(Instr::Fence.rd(), None);
+    }
+
+    #[test]
+    fn class_predicates() {
+        assert!(Instr::Jal { rd: RA, offset: 16 }.is_branch_or_jump());
+        assert!(!Instr::Add { rd: A0, rs1: A1, rs2: A2 }.is_branch_or_jump());
+        assert!(Instr::Lw { rd: A0, rs1: A1, offset: 0 }.is_mem());
+        assert!(!Instr::Jal { rd: RA, offset: 16 }.is_mem());
+    }
+
+    #[test]
+    fn display_smoke() {
+        let i = Instr::Addi { rd: A0, rs1: ZERO, imm: -5 };
+        assert_eq!(i.to_string(), "addi a0, zero, -5");
+        let s = Instr::Sw { rs1: SP, rs2: A0, offset: 12 };
+        assert_eq!(s.to_string(), "sw a0, 12(sp)");
+    }
+}

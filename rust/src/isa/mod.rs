@@ -1,0 +1,17 @@
+//! Instruction-set architecture layer: RV32IM plus the paper's
+//! non-standard I′/S′ vector instruction types (§2.1, Fig. 1).
+//!
+//! - [`reg`] — base (`x0..x31`) and vector (`v0..v7`) register names.
+//! - [`instr`] — the decoded [`instr::Instr`] form shared by all layers.
+//! - [`encode`] / [`decode`] — machine-word codecs; `decode ∘ encode = id`
+//!   is enforced by property tests.
+
+pub mod decode;
+pub mod encode;
+pub mod instr;
+pub mod reg;
+
+pub use decode::{decode, DecodeError};
+pub use encode::{encode, EncodeError};
+pub use instr::{csr, CustomSlot, IPrime, Instr, SPrime};
+pub use reg::{Reg, VReg};

@@ -1,0 +1,181 @@
+//! Architectural register names: the 32 base integer registers of RV32I
+//! and the 8 vector registers of the paper's SIMD extension (§2.1).
+//!
+//! Vector register fields in the I′/S′ encodings are 3 bits wide, which
+//! fixes the architectural maximum at 8 vector registers; `v0` reads as
+//! the constant 0 (like `x0`), so unused operand slots of a many-operand
+//! instruction are aliased to `v0`.
+
+use std::fmt;
+
+/// A base (scalar, 32-bit) register `x0..x31`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u8);
+
+impl Reg {
+    pub const fn new(n: u8) -> Self {
+        assert!(n < 32);
+        Reg(n)
+    }
+
+    #[inline]
+    pub const fn num(self) -> u8 {
+        self.0
+    }
+
+    /// ABI name (the assembler accepts and the disassembler prints these).
+    pub fn abi_name(self) -> &'static str {
+        ABI_NAMES[self.0 as usize]
+    }
+
+    /// Parse either the `x<N>` form or an ABI name.
+    pub fn parse(s: &str) -> Option<Reg> {
+        if let Some(num) = s.strip_prefix('x') {
+            if let Ok(n) = num.parse::<u8>() {
+                if n < 32 {
+                    return Some(Reg(n));
+                }
+            }
+        }
+        ABI_NAMES
+            .iter()
+            .position(|&n| n == s)
+            .map(|i| Reg(i as u8))
+            .or(match s {
+                // `fp` is an alias for `s0`/`x8`.
+                "fp" => Some(Reg(8)),
+                _ => None,
+            })
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.abi_name())
+    }
+}
+
+const ABI_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+// Convenience constants (the ones programs actually use).
+pub const ZERO: Reg = Reg(0);
+pub const RA: Reg = Reg(1);
+pub const SP: Reg = Reg(2);
+pub const GP: Reg = Reg(3);
+pub const TP: Reg = Reg(4);
+pub const T0: Reg = Reg(5);
+pub const T1: Reg = Reg(6);
+pub const T2: Reg = Reg(7);
+pub const S0: Reg = Reg(8);
+pub const S1: Reg = Reg(9);
+pub const A0: Reg = Reg(10);
+pub const A1: Reg = Reg(11);
+pub const A2: Reg = Reg(12);
+pub const A3: Reg = Reg(13);
+pub const A4: Reg = Reg(14);
+pub const A5: Reg = Reg(15);
+pub const A6: Reg = Reg(16);
+pub const A7: Reg = Reg(17);
+pub const S2: Reg = Reg(18);
+pub const S3: Reg = Reg(19);
+pub const S4: Reg = Reg(20);
+pub const S5: Reg = Reg(21);
+pub const S6: Reg = Reg(22);
+pub const S7: Reg = Reg(23);
+pub const S8: Reg = Reg(24);
+pub const S9: Reg = Reg(25);
+pub const S10: Reg = Reg(26);
+pub const S11: Reg = Reg(27);
+pub const T3: Reg = Reg(28);
+pub const T4: Reg = Reg(29);
+pub const T5: Reg = Reg(30);
+pub const T6: Reg = Reg(31);
+
+/// A vector register `v0..v7` (§2.1: 3-bit fields, `v0` ≡ 0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VReg(pub u8);
+
+impl VReg {
+    pub const fn new(n: u8) -> Self {
+        assert!(n < 8);
+        VReg(n)
+    }
+
+    #[inline]
+    pub const fn num(self) -> u8 {
+        self.0
+    }
+
+    /// The constant-zero vector register used to alias unused operand slots.
+    pub const ZERO: VReg = VReg(0);
+
+    pub fn parse(s: &str) -> Option<VReg> {
+        let num = s.strip_prefix('v')?;
+        let n = num.parse::<u8>().ok()?;
+        (n < 8).then_some(VReg(n))
+    }
+}
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+pub const V0: VReg = VReg(0);
+pub const V1: VReg = VReg(1);
+pub const V2: VReg = VReg(2);
+pub const V3: VReg = VReg(3);
+pub const V4: VReg = VReg(4);
+pub const V5: VReg = VReg(5);
+pub const V6: VReg = VReg(6);
+pub const V7: VReg = VReg(7);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abi_names_roundtrip() {
+        for n in 0..32u8 {
+            let r = Reg(n);
+            assert_eq!(Reg::parse(r.abi_name()), Some(r), "abi {}", r.abi_name());
+            assert_eq!(Reg::parse(&format!("x{n}")), Some(r));
+        }
+    }
+
+    #[test]
+    fn fp_alias() {
+        assert_eq!(Reg::parse("fp"), Some(S0));
+        assert_eq!(Reg::parse("s0"), Some(S0));
+        assert_eq!(Reg::parse("x8"), Some(S0));
+    }
+
+    #[test]
+    fn bad_regs_rejected() {
+        assert_eq!(Reg::parse("x32"), None);
+        assert_eq!(Reg::parse("q1"), None);
+        assert_eq!(Reg::parse(""), None);
+        assert_eq!(VReg::parse("v8"), None);
+        assert_eq!(VReg::parse("x1"), None);
+    }
+
+    #[test]
+    fn vreg_roundtrip() {
+        for n in 0..8u8 {
+            assert_eq!(VReg::parse(&format!("v{n}")), Some(VReg(n)));
+        }
+        assert_eq!(format!("{}", V3), "v3");
+    }
+
+    #[test]
+    fn display_uses_abi() {
+        assert_eq!(format!("{}", A0), "a0");
+        assert_eq!(format!("{}", ZERO), "zero");
+        assert_eq!(format!("{}", T6), "t6");
+    }
+}

@@ -1,0 +1,19 @@
+//! # simdsoftcore
+//!
+//! Reproduction of "Extending the RISC-V ISA for exploring advanced
+//! reconfigurable SIMD instructions" (Papaphilippou, Kelly, Luk; 2021)
+//! as a cycle-level softcore simulator whose reconfigurable instruction
+//! fabric is authored in JAX/Pallas and loaded as AOT-compiled XLA
+//! executables via PJRT. See DESIGN.md for the system inventory and the
+//! per-experiment index.
+
+pub mod asm;
+pub mod baseline;
+pub mod coordinator;
+pub mod core;
+pub mod isa;
+pub mod mem;
+pub mod runtime;
+pub mod simd;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,219 @@
+//! `simdsoftcore` — CLI for the softcore framework: run programs on the
+//! simulated core, regenerate every table/figure of the paper, inspect
+//! the fabric artifacts.
+//!
+//! ```text
+//! simdsoftcore <command> [options]
+//!
+//! experiments:
+//!   fig3 [--side left|right] [--full]   memcpy design-space sweeps
+//!   fig4 [--full] [--ratios]            adapted STREAM vs PicoRV32
+//!   table1                              selected configuration
+//!   table2                              DMIPS/CoreMark comparison
+//!   fig5                                c1_merge semantics
+//!   fig6                                pipeline trace of the chunk loop
+//!   memcpy [--full]                     §4.1 headline rate
+//!   sort-speedup [--full]               §4.3.1 sorting
+//!   prefix-speedup [--full]             §4.3.2 prefix sum
+//!   discussion                          §6 instruction/cycle reduction
+//!   all [--full] [--markdown]           everything above
+//!
+//! tools:
+//!   run <prog.s> [--trace] [--vlen N]   assemble + run a text program
+//!   disasm <prog.s>                     assemble + disassemble
+//!   fabric [--dir artifacts]            list + smoke-test the artifacts
+//!   config                              print the Table-1 configuration
+//! ```
+
+use simdsoftcore::coordinator::{experiments as exp, Scale};
+use simdsoftcore::core::{Core, Trace};
+use simdsoftcore::runtime::Fabric;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let flags: Vec<&str> = args[1..].iter().map(|s| s.as_str()).collect();
+    let has = |f: &str| flags.contains(&f);
+    let opt_val = |f: &str| -> Option<&str> {
+        flags.iter().position(|&a| a == f).and_then(|i| flags.get(i + 1).copied())
+    };
+    let scale = Scale { full: has("--full") };
+
+    let result: Result<(), String> = match cmd.as_str() {
+        "fig3" => {
+            let side = opt_val("--side").unwrap_or("both");
+            if side == "left" || side == "both" {
+                print!("{}", exp::fig3_left(scale).render());
+            }
+            if side == "right" || side == "both" {
+                print!("{}", exp::fig3_right(scale).render());
+            }
+            Ok(())
+        }
+        "fig4" => {
+            if has("--ratios") {
+                print!("{}", exp::fig4_ratios(scale).render());
+            } else {
+                print!("{}", exp::fig4(scale).render());
+            }
+            Ok(())
+        }
+        "table1" | "config" => {
+            print!("{}", exp::table1().render());
+            Ok(())
+        }
+        "table2" => {
+            print!("{}", exp::table2().render());
+            Ok(())
+        }
+        "fig5" => {
+            print!("{}", exp::fig5().render());
+            Ok(())
+        }
+        "fig6" => {
+            print!("{}", exp::fig6());
+            Ok(())
+        }
+        "memcpy" => {
+            print!("{}", exp::memcpy_headline(scale).render());
+            Ok(())
+        }
+        "sort-speedup" => {
+            print!("{}", exp::sec43_sort(scale).render());
+            Ok(())
+        }
+        "prefix-speedup" => {
+            print!("{}", exp::sec43_prefix(scale).render());
+            Ok(())
+        }
+        "discussion" => {
+            print!("{}", exp::discussion().render());
+            Ok(())
+        }
+        "all" => {
+            run_all(scale, has("--markdown"));
+            Ok(())
+        }
+        "run" => run_program(&flags),
+        "disasm" => disasm_program(&flags),
+        "fabric" => fabric_info(opt_val("--dir")),
+        "--help" | "help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    };
+
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: simdsoftcore <fig3|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+     see the header of rust/src/main.rs for details"
+}
+
+fn run_all(scale: Scale, markdown: bool) {
+    let tables = vec![
+        exp::table1(),
+        exp::fig3_left(scale),
+        exp::fig3_right(scale),
+        exp::memcpy_headline(scale),
+        exp::table2(),
+        exp::fig4(scale),
+        exp::fig4_ratios(scale),
+        exp::fig5(),
+        exp::sec43_sort(scale),
+        exp::sec43_prefix(scale),
+        exp::discussion(),
+    ];
+    for t in tables {
+        if markdown {
+            print!("{}", t.render_markdown());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    if markdown {
+        println!("### Fig. 6 trace\n\n```\n{}```\n", exp::fig6());
+    } else {
+        print!("{}", exp::fig6());
+    }
+}
+
+fn run_program(flags: &[&str]) -> Result<(), String> {
+    let path = flags
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or("run needs a .s file argument")?;
+    let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let prog = simdsoftcore::asm::assemble_text(&src).map_err(|e| e.to_string())?;
+    let vlen: usize = flags
+        .iter()
+        .position(|&a| a == "--vlen")
+        .and_then(|i| flags.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut core = Core::for_vlen(vlen);
+    if flags.contains(&"--trace") {
+        core.trace = Trace::full();
+    }
+    core.load(&prog);
+    let run = core.run(1_000_000_000).map_err(|e| e.to_string())?;
+    println!(
+        "halted: {} instructions, {} cycles (IPC {:.3})",
+        run.instret,
+        run.cycles,
+        run.ipc()
+    );
+    println!("{}", core.mem.stats().report());
+    // Dump argument registers (a0..a3) — program outputs by convention.
+    use simdsoftcore::isa::reg::*;
+    for (name, r) in [("a0", A0), ("a1", A1), ("a2", A2), ("a3", A3)] {
+        println!("  {name} = {:#010x} ({})", core.reg(r), core.reg(r) as i32);
+    }
+    if flags.contains(&"--trace") {
+        println!("{}", core.trace.render_pipeline());
+    }
+    Ok(())
+}
+
+fn disasm_program(flags: &[&str]) -> Result<(), String> {
+    let path = flags
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or("disasm needs a .s file argument")?;
+    let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let prog = simdsoftcore::asm::assemble_text(&src).map_err(|e| e.to_string())?;
+    print!("{}", prog.disassemble());
+    Ok(())
+}
+
+fn fabric_info(dir: Option<&str>) -> Result<(), String> {
+    let dir = dir
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Fabric::default_dir);
+    if !Fabric::available(&dir) {
+        return Err(format!("no artifacts at {dir:?}; run `make artifacts`"));
+    }
+    let mut fabric = Fabric::open(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("fabric at {:?} (lanes = {}):", fabric.dir(), fabric.lanes);
+    for name in fabric.names() {
+        println!("  {name}");
+    }
+    // Smoke test: sort a vector through the fabric.
+    let lanes = fabric.lanes;
+    let vals: Vec<i32> = (0..lanes as i32).rev().collect();
+    let sorted = fabric.sort_rows(&vals, 1).map_err(|e| format!("{e:#}"))?;
+    println!("smoke: sort{lanes} {vals:?} -> {sorted:?}");
+    Ok(())
+}

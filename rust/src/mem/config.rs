@@ -1,0 +1,233 @@
+//! Memory-system configuration (§3.1 + Table 1 of the paper).
+//!
+//! The defaults reproduce Table 1: IL1 = 64-set direct-mapped × 256-bit
+//! blocks (2 KiB), DL1 = 32 sets × 4 ways × 256-bit blocks (4 KiB),
+//! LLC = 32 sets × 4 ways × 16384-bit blocks (256 KiB, 64 sub-blocks of
+//! 256 bits), AXI-style interconnect 128 bits wide at double rate
+//! (§3.1.4), softcore clocked at 150 MHz.
+
+use thiserror::Error;
+
+/// Block replacement policy for the set-associative caches (§3.1: the
+/// paper chooses NRU and notes a random policy "would stagnate the
+/// bandwidth for memory copying when the source and destination are
+/// aligned" — the `ablations` bench demonstrates exactly that).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Replacement {
+    #[default]
+    Nru,
+    /// Deterministic pseudo-random victim selection (xorshift).
+    Random,
+}
+
+/// Geometry of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeometry {
+    pub sets: usize,
+    pub ways: usize,
+    /// Block size in bits (the paper speaks in bits; we keep that unit).
+    pub block_bits: usize,
+}
+
+impl CacheGeometry {
+    pub const fn block_bytes(&self) -> usize {
+        self.block_bits / 8
+    }
+
+    pub const fn capacity_bytes(&self) -> usize {
+        self.sets * self.ways * self.block_bytes()
+    }
+}
+
+/// DRAM + interconnect timing (§3.1.2–3.1.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramConfig {
+    /// Backing storage size in bytes (the Ultra96 reserved 1 GiB for the
+    /// FPGA; scaled runs use less).
+    pub size_bytes: usize,
+    /// AXI data width in bits (the port is "rather narrow", e.g. 128).
+    pub axi_width_bits: usize,
+    /// §3.1.4: run the interconnect at double rate, i.e. two beats per
+    /// core cycle, emulating double data width.
+    pub double_rate: bool,
+    /// Fixed cycles to open a burst (arbitration + DRAM access time,
+    /// in core clocks).
+    pub burst_setup_cycles: u64,
+}
+
+impl DramConfig {
+    /// Bytes transferred per core cycle once a burst is streaming.
+    pub fn bytes_per_cycle(&self) -> usize {
+        self.axi_width_bits / 8 * if self.double_rate { 2 } else { 1 }
+    }
+}
+
+/// Full memory-system configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemConfig {
+    pub il1: CacheGeometry,
+    pub dl1: CacheGeometry,
+    pub llc: CacheGeometry,
+    pub dram: DramConfig,
+    /// Extra cycles for a DL1-miss round trip to LLC on a hit there
+    /// (tag lookup + sub-block read; the paper keeps this at one cycle
+    /// thanks to the sub-block organisation, §3.1.3).
+    pub llc_hit_cycles: u64,
+    /// Replacement policy for DL1 and LLC (IL1 is direct-mapped).
+    pub replacement: Replacement,
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MemConfigError {
+    #[error("{what} must be a power of two (got {got})")]
+    NotPowerOfTwo { what: &'static str, got: usize },
+    #[error("IL1 and DL1 block sizes must match the LLC sub-block size; got IL1={il1}, DL1={dl1} bits")]
+    L1BlockMismatch { il1: usize, dl1: usize },
+    #[error("LLC block ({llc} bits) must be a multiple of the L1 block ({l1} bits)")]
+    LlcBlockTooSmall { llc: usize, l1: usize },
+    #[error("block size {0} bits is not a multiple of 32")]
+    BlockNotWordMultiple(usize),
+    #[error("DRAM size {0} bytes is not a multiple of the LLC block size")]
+    DramNotBlockMultiple(usize),
+}
+
+impl MemConfig {
+    /// Table 1 configuration (VLEN = 256 bits).
+    pub fn paper_default() -> Self {
+        Self::for_vlen(256)
+    }
+
+    /// Table-1-shaped configuration for a given vector width: the paper
+    /// sets the L1 block size equal to VLEN (§3.1.1) and keeps capacities
+    /// constant, so the set counts scale inversely with block size.
+    pub fn for_vlen(vlen_bits: usize) -> Self {
+        let il1_capacity = 2 * 1024; // 2 KiB
+        let dl1_capacity = 4 * 1024; // 4 KiB, 4-way
+        let llc_capacity = 256 * 1024; // 256 KiB, 4-way
+        let llc_block_bits = 16384;
+        let block_bytes = vlen_bits / 8;
+        MemConfig {
+            il1: CacheGeometry {
+                sets: il1_capacity / block_bytes,
+                ways: 1,
+                block_bits: vlen_bits,
+            },
+            dl1: CacheGeometry {
+                sets: dl1_capacity / block_bytes / 4,
+                ways: 4,
+                block_bits: vlen_bits,
+            },
+            llc: CacheGeometry {
+                sets: llc_capacity / (llc_block_bits / 8) / 4,
+                ways: 4,
+                block_bits: llc_block_bits,
+            },
+            dram: DramConfig {
+                size_bytes: 64 * 1024 * 1024,
+                axi_width_bits: 128,
+                double_rate: true,
+                burst_setup_cycles: 20,
+            },
+            llc_hit_cycles: 1,
+            replacement: Replacement::Nru,
+        }
+    }
+
+    /// Sub-blocks per LLC block (§3.1.3).
+    pub fn llc_sub_blocks(&self) -> usize {
+        self.llc.block_bits / self.dl1.block_bits
+    }
+
+    pub fn validate(&self) -> Result<(), MemConfigError> {
+        for (what, got) in [
+            ("IL1 sets", self.il1.sets),
+            ("DL1 sets", self.dl1.sets),
+            ("LLC sets", self.llc.sets),
+            ("IL1 block bits", self.il1.block_bits),
+            ("DL1 block bits", self.dl1.block_bits),
+            ("LLC block bits", self.llc.block_bits),
+            ("AXI width", self.dram.axi_width_bits),
+        ] {
+            if !got.is_power_of_two() {
+                return Err(MemConfigError::NotPowerOfTwo { what, got });
+            }
+        }
+        if self.il1.block_bits != self.dl1.block_bits {
+            return Err(MemConfigError::L1BlockMismatch {
+                il1: self.il1.block_bits,
+                dl1: self.dl1.block_bits,
+            });
+        }
+        if self.llc.block_bits < self.dl1.block_bits {
+            return Err(MemConfigError::LlcBlockTooSmall {
+                llc: self.llc.block_bits,
+                l1: self.dl1.block_bits,
+            });
+        }
+        for bits in [self.il1.block_bits, self.dl1.block_bits, self.llc.block_bits] {
+            if bits % 32 != 0 {
+                return Err(MemConfigError::BlockNotWordMultiple(bits));
+            }
+        }
+        if self.dram.size_bytes % self.llc.block_bytes() != 0 {
+            return Err(MemConfigError::DramNotBlockMultiple(self.dram.size_bytes));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_matches_table_1() {
+        let c = MemConfig::paper_default();
+        c.validate().unwrap();
+        assert_eq!(c.il1.capacity_bytes(), 2 * 1024);
+        assert_eq!(c.il1.ways, 1, "IL1 is direct-mapped");
+        assert_eq!(c.dl1.capacity_bytes(), 4 * 1024);
+        assert_eq!(c.dl1.sets, 32);
+        assert_eq!(c.dl1.ways, 4);
+        assert_eq!(c.dl1.block_bits, 256);
+        assert_eq!(c.llc.capacity_bytes(), 256 * 1024);
+        assert_eq!(c.llc.sets, 32);
+        assert_eq!(c.llc.ways, 4);
+        assert_eq!(c.llc.block_bits, 16384);
+        assert_eq!(c.llc_sub_blocks(), 64);
+    }
+
+    #[test]
+    fn vlen_variants_keep_capacity() {
+        for vlen in [128, 256, 512, 1024] {
+            let c = MemConfig::for_vlen(vlen);
+            c.validate().unwrap();
+            assert_eq!(c.dl1.capacity_bytes(), 4 * 1024, "vlen {vlen}");
+            assert_eq!(c.dl1.block_bits, vlen);
+            assert_eq!(c.il1.block_bits, vlen);
+        }
+    }
+
+    #[test]
+    fn double_rate_doubles_bandwidth() {
+        let mut d = MemConfig::paper_default().dram;
+        assert_eq!(d.bytes_per_cycle(), 32);
+        d.double_rate = false;
+        assert_eq!(d.bytes_per_cycle(), 16);
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let mut c = MemConfig::paper_default();
+        c.il1.block_bits = 128;
+        assert!(matches!(c.validate(), Err(MemConfigError::L1BlockMismatch { .. })));
+
+        let mut c = MemConfig::paper_default();
+        c.llc.sets = 33;
+        assert!(matches!(c.validate(), Err(MemConfigError::NotPowerOfTwo { .. })));
+
+        let mut c = MemConfig::paper_default();
+        c.llc.block_bits = 128;
+        assert!(matches!(c.validate(), Err(MemConfigError::LlcBlockTooSmall { .. })));
+    }
+}

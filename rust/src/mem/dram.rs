@@ -1,0 +1,266 @@
+//! DRAM + AXI-style interconnect model (§3.1.2–3.1.4).
+//!
+//! The model is burst-oriented: the LLC transfers whole LLC blocks as
+//! single bursts ("associating entire LLC blocks with bursts was a
+//! convenient and practical organisation choice", §3.1.2). A burst costs
+//! `burst_setup_cycles` plus one beat of `axi_width_bits` per cycle (two
+//! per cycle at double rate, §3.1.4). The interconnect is a single
+//! channel: overlapping requests queue behind `busy_until`.
+//!
+//! AXI's 4 KiB-boundary rule is honoured structurally: the LLC never
+//! issues a burst that crosses a 4 KiB boundary because LLC blocks are
+//! power-of-two sized, block-aligned and at most 4 KiB (validated in
+//! [`super::config::MemConfig::validate`] geometry); a debug assertion
+//! checks it here.
+
+use super::config::DramConfig;
+use super::stats::DramStats;
+
+pub struct Dram {
+    cfg: DramConfig,
+    data: Vec<u8>,
+    /// The single-channel interconnect is busy until this core cycle.
+    busy_until: u64,
+    stats: DramStats,
+}
+
+/// Timing result of a burst: when the first `critical_offset` bytes are
+/// available (critical-word-first, §3.1.3) and when the burst fully ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstTiming {
+    /// Cycle at which the critical prefix has landed.
+    pub critical_ready: u64,
+    /// Cycle at which the whole burst is done (channel free).
+    pub done: u64,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig) -> Self {
+        Self { cfg, data: vec![0u8; cfg.size_bytes], busy_until: 0, stats: DramStats::default() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = DramStats::default();
+    }
+
+    /// Beats needed for `bytes`.
+    fn beats(&self, bytes: usize) -> u64 {
+        let bpc = self.cfg.bytes_per_cycle();
+        bytes.div_ceil(bpc) as u64
+    }
+
+    fn begin_burst(&mut self, now: u64) -> u64 {
+        let start = now.max(self.busy_until);
+        start + self.cfg.burst_setup_cycles
+    }
+
+    #[inline]
+    fn check_range(&self, addr: u32, len: usize) {
+        debug_assert!(
+            (addr as usize) + len <= self.data.len(),
+            "DRAM access {addr:#x}+{len} beyond size {:#x}",
+            self.data.len()
+        );
+        // AXI 4 KiB boundary rule: a burst must not cross a 4 KiB page.
+        debug_assert!(
+            len <= 4096 && (addr as usize % 4096) + len <= 4096 || len > 4096,
+            "burst {addr:#x}+{len} crosses a 4KiB AXI boundary"
+        );
+    }
+
+    /// Read a whole burst of `buf.len()` bytes starting at `addr`.
+    ///
+    /// `critical_offset` is the byte offset (within the burst) of the
+    /// datum the requester is stalled on; `critical_ready` reports when
+    /// the beats covering `[0, critical_offset]` have arrived, because
+    /// §3.1.3's sub-blocked LLC forwards the requested L1 block before the
+    /// burst finishes.
+    pub fn read_burst(
+        &mut self,
+        addr: u32,
+        buf: &mut [u8],
+        critical_offset: usize,
+        now: u64,
+    ) -> BurstTiming {
+        self.check_range(addr, buf.len());
+        let a = addr as usize;
+        buf.copy_from_slice(&self.data[a..a + buf.len()]);
+
+        let transfer_start = self.begin_burst(now);
+        let critical_beats = self.beats(critical_offset + 1);
+        let total_beats = self.beats(buf.len());
+        let done = transfer_start + total_beats;
+        self.stats.read_bursts += 1;
+        self.stats.bytes_read += buf.len() as u64;
+        self.stats.busy_cycles += done - now.max(self.busy_until);
+        self.busy_until = done;
+        BurstTiming { critical_ready: transfer_start + critical_beats, done }
+    }
+
+    /// Write a whole burst. Returns when the channel is free again.
+    pub fn write_burst(&mut self, addr: u32, buf: &[u8], now: u64) -> u64 {
+        self.check_range(addr, buf.len());
+        let a = addr as usize;
+        self.data[a..a + buf.len()].copy_from_slice(buf);
+
+        let transfer_start = self.begin_burst(now);
+        let done = transfer_start + self.beats(buf.len());
+        self.stats.write_bursts += 1;
+        self.stats.bytes_written += buf.len() as u64;
+        self.stats.busy_cycles += done - now.max(self.busy_until);
+        self.busy_until = done;
+        done
+    }
+
+    /// Single-beat (AXI-Lite style) 32-bit read — used by the PicoRV32
+    /// baseline model, which has no cache and no bursts.
+    pub fn read_word_single(&mut self, addr: u32, latency: u64, now: u64) -> (u32, u64) {
+        self.check_range(addr, 4);
+        let a = addr as usize & !3;
+        let w = u32::from_le_bytes(self.data[a..a + 4].try_into().unwrap());
+        let start = now.max(self.busy_until);
+        let done = start + latency;
+        self.stats.read_bursts += 1;
+        self.stats.bytes_read += 4;
+        self.stats.busy_cycles += done - start;
+        self.busy_until = done;
+        (w, done)
+    }
+
+    /// Single-beat 32-bit write (AXI-Lite style).
+    pub fn write_word_single(&mut self, addr: u32, value: u32, latency: u64, now: u64) -> u64 {
+        self.check_range(addr, 4);
+        let a = addr as usize & !3;
+        self.data[a..a + 4].copy_from_slice(&value.to_le_bytes());
+        let start = now.max(self.busy_until);
+        let done = start + latency;
+        self.stats.write_bursts += 1;
+        self.stats.bytes_written += 4;
+        self.stats.busy_cycles += done - start;
+        self.busy_until = done;
+        done
+    }
+
+    // ---- host (zero-time) access for program loading & verification -----
+
+    pub fn host_read(&self, addr: u32, buf: &mut [u8]) {
+        let a = addr as usize;
+        buf.copy_from_slice(&self.data[a..a + buf.len()]);
+    }
+
+    pub fn host_write(&mut self, addr: u32, buf: &[u8]) {
+        let a = addr as usize;
+        self.data[a..a + buf.len()].copy_from_slice(buf);
+    }
+
+    pub fn host_slice(&self, addr: u32, len: usize) -> &[u8] {
+        &self.data[addr as usize..addr as usize + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DramConfig {
+        DramConfig {
+            size_bytes: 1 << 20,
+            axi_width_bits: 128,
+            double_rate: true,
+            burst_setup_cycles: 20,
+        }
+    }
+
+    #[test]
+    fn burst_roundtrip_preserves_data() {
+        let mut d = Dram::new(cfg());
+        let src: Vec<u8> = (0..2048).map(|i| (i % 251) as u8).collect();
+        d.write_burst(0x1000, &src, 0);
+        let mut out = vec![0u8; 2048];
+        d.read_burst(0x1000, &mut out, 0, 100);
+        assert_eq!(src, out);
+    }
+
+    #[test]
+    fn burst_timing_setup_plus_beats() {
+        let mut d = Dram::new(cfg());
+        let mut buf = vec![0u8; 2048];
+        // 2048 bytes at 32 B/cycle = 64 beats; setup 20.
+        let t = d.read_burst(0, &mut buf, 0, 0);
+        assert_eq!(t.done, 20 + 64);
+        // Critical word at offset 0 arrives after the first beat.
+        assert_eq!(t.critical_ready, 21);
+    }
+
+    #[test]
+    fn critical_word_first_scales_with_offset() {
+        let mut d = Dram::new(cfg());
+        let mut buf = vec![0u8; 2048];
+        // Critical offset into the second half of the burst.
+        let t = d.read_burst(0, &mut buf, 1024, 0);
+        assert_eq!(t.critical_ready, 20 + 33); // beats covering 1025 bytes
+        assert!(t.critical_ready < t.done);
+    }
+
+    #[test]
+    fn channel_serialises_bursts() {
+        let mut d = Dram::new(cfg());
+        let mut buf = vec![0u8; 1024];
+        let t1 = d.read_burst(0, &mut buf, 0, 0);
+        // Second burst issued "in the past" still queues behind the first.
+        let t2 = d.read_burst(4096, &mut buf, 0, 1);
+        assert!(t2.critical_ready > t1.done);
+        assert_eq!(t2.done, t1.done + 20 + 32);
+    }
+
+    #[test]
+    fn single_rate_halves_throughput() {
+        let mut slow = cfg();
+        slow.double_rate = false;
+        let mut d = Dram::new(slow);
+        let mut buf = vec![0u8; 2048];
+        let t = d.read_burst(0, &mut buf, 0, 0);
+        assert_eq!(t.done, 20 + 128);
+    }
+
+    #[test]
+    fn axi_lite_single_beats() {
+        let mut d = Dram::new(cfg());
+        d.host_write(0x40, &0xdead_beefu32.to_le_bytes());
+        let (w, done) = d.read_word_single(0x40, 30, 5);
+        assert_eq!(w, 0xdead_beef);
+        assert_eq!(done, 35);
+        let done2 = d.write_word_single(0x44, 7, 30, 0);
+        assert_eq!(done2, 65, "queues behind the read");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut d = Dram::new(cfg());
+        let mut buf = vec![0u8; 512];
+        d.read_burst(0, &mut buf, 0, 0);
+        d.write_burst(0x1000, &buf, 0);
+        let s = d.stats();
+        assert_eq!(s.read_bursts, 1);
+        assert_eq!(s.write_bursts, 1);
+        assert_eq!(s.bytes(), 1024);
+        assert!(s.busy_cycles > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses a 4KiB AXI boundary")]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_assert compiled out in release")]
+    fn boundary_crossing_trips_debug_assert() {
+        let mut d = Dram::new(cfg());
+        let mut buf = vec![0u8; 2048];
+        d.read_burst(3072, &mut buf, 0, 0); // 3072+2048 crosses 4096
+    }
+}

@@ -1,0 +1,417 @@
+//! Level-1 caches (§3.1, §3.1.1).
+//!
+//! One implementation serves both L1s:
+//! - **IL1**: direct-mapped (1 way), read-only, "implemented in registers"
+//!   — a hit adds no stall, the next instruction is available on the next
+//!   cycle.
+//! - **DL1**: set-associative, write-back + write-allocate with NRU
+//!   replacement; its block size equals the vector register width so a
+//!   full-block (vector) store on a miss allocates **without fetching**
+//!   the block from the LLC (§3.1.1).
+
+use super::config::{CacheGeometry, Replacement};
+use super::dram::Dram;
+use super::llc::Llc;
+use super::stats::CacheStats;
+
+/// Largest supported L1 block (VLEN 1024 → 128 bytes); lets miss paths
+/// use fixed stack buffers instead of heap allocation.
+pub const MAX_BLOCK_BYTES: usize = 128;
+
+pub struct L1Cache {
+    geom: CacheGeometry,
+    writable: bool,
+    replacement: Replacement,
+    /// xorshift state for Replacement::Random (deterministic).
+    rand_state: u32,
+    /// log2(block bytes) — lookups use shift/mask, not division.
+    block_shift: u32,
+    set_mask: usize,
+
+    tags: Vec<u32>,
+    valid: Vec<bool>,
+    dirty: Vec<bool>,
+    ru: Vec<bool>,
+    data: Vec<u8>,
+
+    stats: CacheStats,
+}
+
+impl L1Cache {
+    pub fn new(geom: CacheGeometry, writable: bool) -> Self {
+        Self::with_policy(geom, writable, Replacement::Nru)
+    }
+
+    pub fn with_policy(geom: CacheGeometry, writable: bool, replacement: Replacement) -> Self {
+        let blocks = geom.sets * geom.ways;
+        assert!(geom.block_bytes().is_power_of_two() && geom.sets.is_power_of_two());
+        assert!(geom.block_bytes() <= MAX_BLOCK_BYTES);
+        Self {
+            geom,
+            writable,
+            replacement,
+            rand_state: 0x9E37_79B9,
+            block_shift: geom.block_bytes().trailing_zeros(),
+            set_mask: geom.sets - 1,
+            tags: vec![0; blocks],
+            valid: vec![false; blocks],
+            dirty: vec![false; blocks],
+            ru: vec![false; blocks],
+            data: vec![0; blocks * geom.block_bytes()],
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Credit `n` extra hits (used by the core's fetch line buffer,
+    /// which elides architecturally-hitting IL1 reads).
+    pub fn credit_hits(&mut self, n: u64) {
+        self.stats.hits += n;
+    }
+
+    #[inline]
+    pub fn block_bytes(&self) -> usize {
+        self.geom.block_bytes()
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u32) -> usize {
+        (addr as usize >> self.block_shift) & self.set_mask
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u32) -> u32 {
+        ((addr as usize >> self.block_shift) / self.geom.sets) as u32
+    }
+
+    #[inline]
+    fn slot(&self, set: usize, way: usize) -> usize {
+        set * self.geom.ways + way
+    }
+
+    #[inline]
+    fn block_base(&self, addr: u32) -> u32 {
+        addr & !(self.block_bytes() as u32 - 1)
+    }
+
+    #[inline]
+    fn lookup(&self, addr: u32) -> Option<usize> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        for w in 0..self.geom.ways {
+            let s = self.slot(set, w);
+            if self.valid[s] && self.tags[s] == tag {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    fn touch(&mut self, set: usize, way_slot: usize) {
+        if self.geom.ways == 1 || self.ru[way_slot] {
+            return; // direct-mapped, or already marked: no state change
+        }
+        self.ru[way_slot] = true;
+        let all_used = (0..self.geom.ways).all(|w| {
+            let s = self.slot(set, w);
+            !self.valid[s] || self.ru[s]
+        });
+        if all_used {
+            for w in 0..self.geom.ways {
+                let s = self.slot(set, w);
+                if s != way_slot {
+                    self.ru[s] = false;
+                }
+            }
+        }
+    }
+
+    fn victim(&mut self, set: usize) -> usize {
+        for w in 0..self.geom.ways {
+            if !self.valid[self.slot(set, w)] {
+                return w;
+            }
+        }
+        match self.replacement {
+            Replacement::Nru => {
+                for w in 0..self.geom.ways {
+                    if !self.ru[self.slot(set, w)] {
+                        return w;
+                    }
+                }
+                0
+            }
+            Replacement::Random => {
+                // xorshift32 — deterministic, policy-only randomness.
+                let mut x = self.rand_state;
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                self.rand_state = x;
+                (x as usize) & (self.geom.ways - 1)
+            }
+        }
+    }
+
+    /// Evict the victim of `addr`'s set (writing back if dirty) and claim
+    /// its slot for `addr`. Returns the slot; contents are stale.
+    fn evict_and_claim(&mut self, addr: u32, llc: &mut Llc, dram: &mut Dram, now: u64) -> usize {
+        let set = self.set_of(addr);
+        let way = self.victim(set);
+        let slot = self.slot(set, way);
+        if self.valid[slot] && self.dirty[slot] {
+            self.stats.writebacks += 1;
+            let bb = self.block_bytes();
+            let victim_addr = ((self.tags[slot] as usize * self.geom.sets + set) * bb) as u32;
+            let base = slot * bb;
+            llc.write_sub(victim_addr, &self.data[base..base + bb], dram, now);
+        }
+        self.tags[slot] = self.tag_of(addr);
+        self.valid[slot] = true;
+        self.dirty[slot] = false;
+        slot
+    }
+
+    /// Read `buf.len()` bytes at `addr`; the access must not cross a block
+    /// boundary (the core guarantees natural alignment). Returns the cycle
+    /// the data is available.
+    pub fn read(
+        &mut self,
+        addr: u32,
+        buf: &mut [u8],
+        llc: &mut Llc,
+        dram: &mut Dram,
+        now: u64,
+    ) -> u64 {
+        let bb = self.block_bytes();
+        debug_assert!(
+            (addr as usize % bb) + buf.len() <= bb,
+            "L1 read {addr:#x}+{} crosses a block boundary",
+            buf.len()
+        );
+        let (slot, ready) = match self.lookup(addr) {
+            Some(slot) => {
+                self.stats.hits += 1;
+                (slot, now)
+            }
+            None => {
+                self.stats.misses += 1;
+                let slot = self.evict_and_claim(addr, llc, dram, now);
+                let base = slot * bb;
+                let block_addr = self.block_base(addr);
+                let ready =
+                    llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, now);
+                (slot, ready)
+            }
+        };
+        let set = self.set_of(addr);
+        self.touch(set, slot);
+        let off = slot * bb + (addr as usize % bb);
+        buf.copy_from_slice(&self.data[off..off + buf.len()]);
+        ready
+    }
+
+    /// Write `data` at `addr` (write-back, write-allocate). A full-block
+    /// aligned write allocates without fetching (§3.1.1). Returns the
+    /// cycle the store retires.
+    pub fn write(
+        &mut self,
+        addr: u32,
+        data: &[u8],
+        llc: &mut Llc,
+        dram: &mut Dram,
+        now: u64,
+    ) -> u64 {
+        assert!(self.writable, "write to read-only L1 (IL1)");
+        let bb = self.block_bytes();
+        debug_assert!(
+            (addr as usize % bb) + data.len() <= bb,
+            "L1 write {addr:#x}+{} crosses a block boundary",
+            data.len()
+        );
+        let full_block = data.len() == bb && addr as usize % bb == 0;
+        let (slot, ready) = match self.lookup(addr) {
+            Some(slot) => {
+                self.stats.hits += 1;
+                (slot, now + 1)
+            }
+            None => {
+                self.stats.misses += 1;
+                let slot = self.evict_and_claim(addr, llc, dram, now);
+                if full_block {
+                    // §3.1.1: the whole block is about to be overwritten —
+                    // no need to wait for a fetch.
+                    self.stats.alloc_no_fetch += 1;
+                    (slot, now + 1)
+                } else {
+                    let base = slot * bb;
+                    let block_addr = self.block_base(addr);
+                    let ready =
+                        llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, now);
+                    (slot, ready + 1)
+                }
+            }
+        };
+        let set = self.set_of(addr);
+        self.touch(set, slot);
+        self.dirty[slot] = true;
+        let off = slot * bb + (addr as usize % bb);
+        self.data[off..off + data.len()].copy_from_slice(data);
+        ready
+    }
+
+    /// Write back all dirty blocks (host-side, no timing).
+    pub fn flush(&mut self, llc: &mut Llc, dram: &mut Dram) {
+        for set in 0..self.geom.sets {
+            for way in 0..self.geom.ways {
+                let slot = self.slot(set, way);
+                if self.valid[slot] && self.dirty[slot] {
+                    let bb = self.block_bytes();
+                    let addr =
+                        ((self.tags[slot] as usize * self.geom.sets + set) * bb) as u32;
+                    let base = slot * bb;
+                    llc.write_sub(addr, &self.data[base..base + bb], dram, 0);
+                    self.dirty[slot] = false;
+                }
+            }
+        }
+    }
+
+    /// Invalidate everything without writing back (IL1 refill / tests).
+    pub fn invalidate_all(&mut self) {
+        self.valid.iter_mut().for_each(|v| *v = false);
+        self.dirty.iter_mut().for_each(|v| *v = false);
+        self.ru.iter_mut().for_each(|v| *v = false);
+    }
+
+    /// Hierarchy-aware host read of one byte.
+    pub fn peek(&self, addr: u32, llc: &Llc, dram: &Dram) -> u8 {
+        if let Some(slot) = self.lookup(addr) {
+            let off = slot * self.block_bytes() + (addr as usize % self.block_bytes());
+            return self.data[off];
+        }
+        llc.peek(addr, dram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::config::MemConfig;
+
+    fn mk() -> (L1Cache, Llc, Dram) {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        (L1Cache::new(cfg.dl1, true), Llc::new(&cfg), Dram::new(cfg.dram))
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        dl1.write(0x100, &42u32.to_le_bytes(), &mut llc, &mut dram, 0);
+        let mut buf = [0u8; 4];
+        dl1.read(0x100, &mut buf, &mut llc, &mut dram, 10);
+        assert_eq!(u32::from_le_bytes(buf), 42);
+    }
+
+    #[test]
+    fn hit_is_free_miss_pays_llc() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        dram.host_write(0x2000, &[9u8; 32]);
+        let mut buf = [0u8; 4];
+        let r1 = dl1.read(0x2000, &mut buf, &mut llc, &mut dram, 0);
+        assert!(r1 > 20, "cold miss goes to DRAM");
+        let r2 = dl1.read(0x2004, &mut buf, &mut llc, &mut dram, 100);
+        assert_eq!(r2, 100, "same-block hit has no memory stall");
+        assert_eq!(dl1.stats().hits, 1);
+        assert_eq!(dl1.stats().misses, 1);
+    }
+
+    #[test]
+    fn full_block_store_skips_fetch() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        let vec_data = [0xABu8; 32]; // VLEN=256 full block
+        let ready = dl1.write(0x4000, &vec_data, &mut llc, &mut dram, 0);
+        assert_eq!(ready, 1, "no fetch latency");
+        assert_eq!(dl1.stats().alloc_no_fetch, 1);
+        assert_eq!(dram.stats().read_bursts, 0);
+        assert_eq!(llc.stats().accesses(), 0, "no LLC traffic either");
+    }
+
+    #[test]
+    fn partial_store_miss_fetches_block() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        dram.host_write(0x4000, &[0x11u8; 32]);
+        let ready = dl1.write(0x4004, &7u32.to_le_bytes(), &mut llc, &mut dram, 0);
+        assert!(ready > 20, "partial write must fetch the rest of the block");
+        // Block now = old content with word 1 replaced.
+        let mut buf = [0u8; 4];
+        dl1.read(0x4000, &mut buf, &mut llc, &mut dram, 100);
+        assert_eq!(buf, [0x11; 4]);
+        dl1.read(0x4004, &mut buf, &mut llc, &mut dram, 100);
+        assert_eq!(u32::from_le_bytes(buf), 7);
+    }
+
+    #[test]
+    fn dirty_eviction_reaches_llc_and_dram() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        // DL1 paper-default: 32 sets × 32-byte blocks → same set every
+        // 1024 bytes. Write 5 dirty blocks in one set (4 ways).
+        for i in 0..5u32 {
+            let data = [i as u8 + 1; 32];
+            dl1.write(0x1000 + i * 1024, &data, &mut llc, &mut dram, 0);
+        }
+        assert!(dl1.stats().writebacks >= 1);
+        // The evicted block must be readable through the hierarchy.
+        dl1.flush(&mut llc, &mut dram);
+        llc.flush(&mut dram);
+        for i in 0..5u32 {
+            let mut got = [0u8; 32];
+            dram.host_read(0x1000 + i * 1024, &mut got);
+            assert_eq!(got, [i as u8 + 1; 32], "block {i}");
+        }
+    }
+
+    #[test]
+    fn direct_mapped_il1_conflicts() {
+        let cfg = MemConfig::paper_default();
+        let mut il1 = L1Cache::new(cfg.il1, false);
+        let mut llc = Llc::new(&cfg);
+        let mut dram = Dram::new(crate::mem::config::DramConfig {
+            size_bytes: 1 << 20,
+            ..cfg.dram
+        });
+        let mut buf = [0u8; 4];
+        // IL1: 64 sets × 32 B = 2 KiB; addresses 2 KiB apart conflict.
+        il1.read(0x0000, &mut buf, &mut llc, &mut dram, 0);
+        il1.read(0x0800, &mut buf, &mut llc, &mut dram, 100);
+        il1.read(0x0000, &mut buf, &mut llc, &mut dram, 200);
+        assert_eq!(il1.stats().misses, 3, "direct-mapped conflict evicts");
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only")]
+    fn il1_rejects_writes() {
+        let cfg = MemConfig::paper_default();
+        let mut il1 = L1Cache::new(cfg.il1, false);
+        let mut llc = Llc::new(&cfg);
+        let mut dram =
+            Dram::new(crate::mem::config::DramConfig { size_bytes: 1 << 20, ..cfg.dram });
+        il1.write(0, &[0u8; 4], &mut llc, &mut dram, 0);
+    }
+
+    #[test]
+    fn peek_prefers_l1_dirty_data() {
+        let (mut dl1, mut llc, mut dram) = mk();
+        dl1.write(0x3000, &[0x66u8; 4], &mut llc, &mut dram, 0);
+        assert_eq!(dl1.peek(0x3000, &llc, &dram), 0x66);
+        assert_eq!(llc.peek(0x3000, &dram), 0, "LLC unaware of DL1 dirty line");
+    }
+}

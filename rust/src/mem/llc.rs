@@ -1,0 +1,496 @@
+//! Unified last-level cache (§3.1.2–3.1.3): very wide blocks (e.g.
+//! 16384 bits) stored as consecutive narrower *sub-blocks* the size of an
+//! L1 block, so a whole L1 block is served in a single cycle while DRAM
+//! transfers whole LLC blocks as long bursts.
+//!
+//! Key behaviours reproduced from the paper:
+//! - **NRU replacement** (one meta bit per block, §3.1) — a random policy
+//!   "would stagnate the bandwidth for memcpy() when source and
+//!   destination are aligned".
+//! - **Per-sub-block valid bits**: a full-sub-block write allocates
+//!   without fetching from DRAM (the §3.1.1 no-fetch-on-full-write
+//!   optimisation applied at the LLC level — DL1 write-backs always cover
+//!   a whole sub-block).
+//! - **Critical-sub-block-first** (§3.1.3): on a fetch, the requested L1
+//!   block is forwarded as soon as its beats land, before the burst
+//!   finishes; the channel stays busy until the burst completes.
+
+use super::config::{CacheGeometry, MemConfig, Replacement};
+use super::dram::Dram;
+use super::stats::CacheStats;
+
+pub struct Llc {
+    geom: CacheGeometry,
+    replacement: Replacement,
+    rand_state: u32,
+    sub_bytes: usize,
+    subs_per_block: usize,
+    hit_cycles: u64,
+    /// Precomputed shifts/masks (all geometry is power-of-two).
+    block_shift: u32,
+    set_mask: usize,
+    sub_shift: u32,
+    /// Reusable whole-block staging buffer for DRAM fills (avoids a heap
+    /// allocation per LLC miss).
+    fill_buf: Vec<u8>,
+
+    /// Per (set, way): tag value (block address / sets).
+    tags: Vec<u32>,
+    valid: Vec<bool>,
+    dirty: Vec<bool>,
+    /// NRU "recently used" bit per block.
+    ru: Vec<bool>,
+    /// Per-block sub-block valid bitmap (≤128 sub-blocks per block in any
+    /// valid configuration: 16384-bit block / 128-bit sub-block).
+    sub_valid: Vec<u128>,
+    data: Vec<u8>,
+
+    stats: CacheStats,
+}
+
+impl Llc {
+    pub fn new(cfg: &MemConfig) -> Self {
+        let geom = cfg.llc;
+        let sub_bytes = cfg.dl1.block_bytes();
+        let subs_per_block = cfg.llc_sub_blocks();
+        assert!(subs_per_block <= 128, "sub-block bitmap limited to 128");
+        let blocks = geom.sets * geom.ways;
+        assert!(geom.block_bytes().is_power_of_two() && geom.sets.is_power_of_two());
+        Self {
+            geom,
+            replacement: cfg.replacement,
+            rand_state: 0x2545_F491,
+            sub_bytes,
+            subs_per_block,
+            hit_cycles: cfg.llc_hit_cycles,
+            block_shift: geom.block_bytes().trailing_zeros(),
+            set_mask: geom.sets - 1,
+            sub_shift: sub_bytes.trailing_zeros(),
+            fill_buf: vec![0u8; geom.block_bytes()],
+            tags: vec![0; blocks],
+            valid: vec![false; blocks],
+            dirty: vec![false; blocks],
+            ru: vec![false; blocks],
+            sub_valid: vec![0; blocks],
+            data: vec![0; blocks * geom.block_bytes()],
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    #[inline]
+    fn block_bytes(&self) -> usize {
+        self.geom.block_bytes()
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u32) -> usize {
+        (addr as usize >> self.block_shift) & self.set_mask
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u32) -> u32 {
+        ((addr as usize >> self.block_shift) / self.geom.sets) as u32
+    }
+
+    #[inline]
+    fn block_base(&self, addr: u32) -> u32 {
+        addr & !(self.block_bytes() as u32 - 1)
+    }
+
+    #[inline]
+    fn sub_index(&self, addr: u32) -> usize {
+        (addr as usize & (self.block_bytes() - 1)) >> self.sub_shift
+    }
+
+    #[inline]
+    fn slot(&self, set: usize, way: usize) -> usize {
+        set * self.geom.ways + way
+    }
+
+    fn lookup(&self, addr: u32) -> Option<usize> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        (0..self.geom.ways)
+            .map(|w| self.slot(set, w))
+            .find(|&s| self.valid[s] && self.tags[s] == tag)
+    }
+
+    /// NRU touch: mark used; if every way in the set is now marked, clear
+    /// all other marks (the one-bit approximation of LRU, §3.1).
+    fn touch(&mut self, set: usize, way_slot: usize) {
+        if self.ru[way_slot] {
+            return; // already marked: no state change
+        }
+        self.ru[way_slot] = true;
+        let all_used = (0..self.geom.ways).all(|w| {
+            let s = self.slot(set, w);
+            !self.valid[s] || self.ru[s]
+        });
+        if all_used {
+            for w in 0..self.geom.ways {
+                let s = self.slot(set, w);
+                if s != way_slot {
+                    self.ru[s] = false;
+                }
+            }
+        }
+    }
+
+    /// Pick the victim way for `set`: first invalid, else first not
+    /// recently used, else way 0.
+    fn victim(&mut self, set: usize) -> usize {
+        for w in 0..self.geom.ways {
+            if !self.valid[self.slot(set, w)] {
+                return w;
+            }
+        }
+        match self.replacement {
+            Replacement::Nru => {
+                for w in 0..self.geom.ways {
+                    if !self.ru[self.slot(set, w)] {
+                        return w;
+                    }
+                }
+                0
+            }
+            Replacement::Random => {
+                let mut x = self.rand_state;
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                self.rand_state = x;
+                (x as usize) & (self.geom.ways - 1)
+            }
+        }
+    }
+
+    /// Write back the victim's valid sub-blocks to DRAM (runs of valid
+    /// sub-blocks become bursts; a fully-valid block is one whole-block
+    /// burst, the common case).
+    fn writeback(&mut self, slot: usize, set: usize, dram: &mut Dram, now: u64) {
+        if !self.valid[slot] || !self.dirty[slot] {
+            return;
+        }
+        self.stats.writebacks += 1;
+        let block_addr = ((self.tags[slot] as usize * self.geom.sets + set)
+            * self.block_bytes()) as u32;
+        let base = slot * self.block_bytes();
+        let mask = self.sub_valid[slot];
+        let mut i = 0;
+        while i < self.subs_per_block {
+            if mask >> i & 1 == 1 {
+                let run_start = i;
+                while i < self.subs_per_block && mask >> i & 1 == 1 {
+                    i += 1;
+                }
+                let lo = run_start * self.sub_bytes;
+                let hi = i * self.sub_bytes;
+                dram.write_burst(
+                    block_addr + lo as u32,
+                    &self.data[base + lo..base + hi],
+                    now,
+                );
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Allocate a block for `addr` (evicting if needed) WITHOUT fetching
+    /// its contents; returns the slot. Sub-valid bits start empty.
+    fn allocate(&mut self, addr: u32, dram: &mut Dram, now: u64) -> usize {
+        let set = self.set_of(addr);
+        let way = self.victim(set);
+        let slot = self.slot(set, way);
+        self.writeback(slot, set, dram, now);
+        self.tags[slot] = self.tag_of(addr);
+        self.valid[slot] = true;
+        self.dirty[slot] = false;
+        self.sub_valid[slot] = 0;
+        self.ru[slot] = false;
+        slot
+    }
+
+    /// Burst-fetch all *invalid* sub-blocks of `slot` from DRAM (one
+    /// whole-block burst; valid — possibly dirty — sub-blocks are
+    /// preserved). Returns the cycle the critical sub-block is ready.
+    fn fill(&mut self, slot: usize, addr: u32, dram: &mut Dram, now: u64) -> u64 {
+        let block_addr = self.block_base(addr);
+        let critical = addr as usize & (self.block_bytes() - 1);
+        let bb = self.geom.block_bytes();
+        let base = slot * bb;
+        let mask = self.sub_valid[slot];
+        let timing = if mask == 0 {
+            // Common case (fresh allocation): burst straight into the
+            // cache array — no staging copy.
+            dram.read_burst(block_addr, &mut self.data[base..base + bb], critical, now)
+        } else {
+            // Partially-valid block: stage, then fill only invalid subs.
+            let timing = dram.read_burst(block_addr, &mut self.fill_buf, critical, now);
+            for i in 0..self.subs_per_block {
+                if mask >> i & 1 == 0 {
+                    let lo = i * self.sub_bytes;
+                    self.data[base + lo..base + lo + self.sub_bytes]
+                        .copy_from_slice(&self.fill_buf[lo..lo + self.sub_bytes]);
+                }
+            }
+            timing
+        };
+        self.sub_valid[slot] = if self.subs_per_block == 128 {
+            u128::MAX
+        } else {
+            (1u128 << self.subs_per_block) - 1
+        };
+        timing.critical_ready
+    }
+
+    /// Read one L1 block (sub-block granularity). `buf.len()` must equal
+    /// the sub-block size and `addr` must be sub-block aligned.
+    /// Returns the cycle the data is available to the requesting L1.
+    pub fn read_sub(&mut self, addr: u32, buf: &mut [u8], dram: &mut Dram, now: u64) -> u64 {
+        debug_assert_eq!(buf.len(), self.sub_bytes);
+        debug_assert_eq!(addr as usize % self.sub_bytes, 0);
+        let sub = self.sub_index(addr);
+        let ready = if let Some(slot) = self.lookup(addr) {
+            let set = self.set_of(addr);
+            self.touch(set, slot);
+            if self.sub_valid[slot] >> sub & 1 == 1 {
+                self.stats.hits += 1;
+                now + self.hit_cycles
+            } else {
+                // Block allocated by writes, requested sub not yet valid:
+                // fetch the remainder of the block.
+                self.stats.misses += 1;
+                self.fill(slot, addr, dram, now) + self.hit_cycles
+            }
+        } else {
+            self.stats.misses += 1;
+            let slot = self.allocate(addr, dram, now);
+            let set = self.set_of(addr);
+            self.touch(set, slot);
+            self.fill(slot, addr, dram, now) + self.hit_cycles
+        };
+        let slot = self.lookup(addr).expect("block just ensured");
+        let base = slot * self.block_bytes() + sub * self.sub_bytes;
+        buf.copy_from_slice(&self.data[base..base + self.sub_bytes]);
+        ready
+    }
+
+    /// Write one full sub-block (a DL1 write-back or an uncached vector
+    /// store). Never fetches from DRAM: a full-sub-block write validates
+    /// the sub-block by itself (§3.1.1 applied at this level).
+    pub fn write_sub(&mut self, addr: u32, data: &[u8], dram: &mut Dram, now: u64) -> u64 {
+        debug_assert_eq!(data.len(), self.sub_bytes);
+        debug_assert_eq!(addr as usize % self.sub_bytes, 0);
+        let sub = self.sub_index(addr);
+        let slot = match self.lookup(addr) {
+            Some(slot) => {
+                self.stats.hits += 1;
+                slot
+            }
+            None => {
+                self.stats.misses += 1;
+                self.stats.alloc_no_fetch += 1;
+                self.allocate(addr, dram, now)
+            }
+        };
+        let set = self.set_of(addr);
+        self.touch(set, slot);
+        let base = slot * self.block_bytes() + sub * self.sub_bytes;
+        self.data[base..base + self.sub_bytes].copy_from_slice(data);
+        self.sub_valid[slot] |= 1 << sub;
+        self.dirty[slot] = true;
+        now + 1
+    }
+
+    /// Write back everything dirty (host-side; no timing).
+    pub fn flush(&mut self, dram: &mut Dram) {
+        for set in 0..self.geom.sets {
+            for way in 0..self.geom.ways {
+                let slot = self.slot(set, way);
+                self.writeback(slot, set, dram, 0);
+                self.dirty[slot] = false;
+            }
+        }
+    }
+
+    /// Hierarchy-aware host read of a single byte (no timing, no state
+    /// change) — checks the cache before DRAM.
+    pub fn peek(&self, addr: u32, dram: &Dram) -> u8 {
+        if let Some(slot) = self.lookup(addr) {
+            let sub = self.sub_index(addr);
+            if self.sub_valid[slot] >> sub & 1 == 1 {
+                let off = slot * self.block_bytes() + (addr as usize & (self.block_bytes() - 1));
+                return self.data[off];
+            }
+        }
+        let mut b = [0u8];
+        dram.host_read(addr, &mut b);
+        b[0]
+    }
+
+    /// Invalidate everything (drops dirty data — test helper).
+    pub fn invalidate_all(&mut self) {
+        self.valid.iter_mut().for_each(|v| *v = false);
+        self.sub_valid.iter_mut().for_each(|v| *v = 0);
+        self.dirty.iter_mut().for_each(|v| *v = false);
+        self.ru.iter_mut().for_each(|v| *v = false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::config::MemConfig;
+
+    fn mk() -> (Llc, Dram) {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        (Llc::new(&cfg), Dram::new(cfg.dram))
+    }
+
+    const SUB: usize = 32; // 256-bit sub-block
+
+    #[test]
+    fn read_after_dram_write_roundtrips() {
+        let (mut llc, mut dram) = mk();
+        let pattern: Vec<u8> = (0..SUB as u8).collect();
+        dram.host_write(0x4000, &pattern);
+        let mut buf = vec![0u8; SUB];
+        let ready = llc.read_sub(0x4000, &mut buf, &mut dram, 10);
+        assert_eq!(buf, pattern);
+        assert!(ready > 10 + 20, "miss must pay the burst setup");
+        // Second read: hit in 1 cycle.
+        let ready2 = llc.read_sub(0x4000, &mut buf, &mut dram, 200);
+        assert_eq!(ready2, 201);
+        assert_eq!(llc.stats().hits, 1);
+        assert_eq!(llc.stats().misses, 1);
+    }
+
+    #[test]
+    fn write_allocates_without_fetch() {
+        let (mut llc, mut dram) = mk();
+        let data = vec![7u8; SUB];
+        let ready = llc.write_sub(0x8000, &data, &mut dram, 0);
+        assert_eq!(ready, 1, "no-fetch allocation completes immediately");
+        assert_eq!(llc.stats().alloc_no_fetch, 1);
+        assert_eq!(dram.stats().read_bursts, 0, "no DRAM fetch for a full-sub write");
+        // Reading it back hits the cache.
+        let mut buf = vec![0u8; SUB];
+        let r = llc.read_sub(0x8000, &mut buf, &mut dram, 10);
+        assert_eq!(r, 11);
+        assert_eq!(buf, data);
+    }
+
+    #[test]
+    fn partial_block_read_fetches_only_invalid_subs() {
+        let (mut llc, mut dram) = mk();
+        // DRAM has pattern A everywhere in the block.
+        let block: Vec<u8> = vec![0xAA; 2048];
+        dram.host_write(0x0000, &block);
+        // Write sub 0 with pattern B (allocates, no fetch).
+        let newer = vec![0xBB; SUB];
+        llc.write_sub(0x0000, &newer, &mut dram, 0);
+        // Read sub 1 → fetches block but must NOT clobber sub 0.
+        let mut buf = vec![0u8; SUB];
+        llc.read_sub(SUB as u32, &mut buf, &mut dram, 10);
+        assert_eq!(buf, vec![0xAA; SUB]);
+        let mut buf0 = vec![0u8; SUB];
+        llc.read_sub(0, &mut buf0, &mut dram, 400);
+        assert_eq!(buf0, newer, "dirty sub survived the fill");
+    }
+
+    #[test]
+    fn eviction_writes_back_dirty_data() {
+        let (mut llc, mut dram) = mk();
+        // Fill one set beyond its ways with dirty blocks. Set index is
+        // (addr / 2048) % 32 → addresses 2048*32 apart share a set.
+        let stride = 2048 * 32;
+        let mut patterns = Vec::new();
+        for i in 0..5u32 {
+            let data = vec![i as u8 + 1; SUB];
+            llc.write_sub(i * stride, &data, &mut dram, 0);
+            patterns.push(data);
+        }
+        // First block was evicted (NRU) — its data must be in DRAM.
+        llc.flush(&mut dram);
+        for i in 0..5u32 {
+            let mut got = vec![0u8; SUB];
+            dram.host_read(i * stride, &mut got);
+            assert_eq!(got, patterns[i as usize], "block {i}");
+        }
+        assert!(llc.stats().writebacks >= 1);
+    }
+
+    #[test]
+    fn critical_sub_block_first_beats_full_burst() {
+        let (mut llc, mut dram) = mk();
+        let mut buf = vec![0u8; SUB];
+        // Miss on the first sub-block of a 2048-byte block: ready after
+        // setup + 1 beat + hit_cycles, well before the 64-beat burst ends.
+        let ready = llc.read_sub(0x0000, &mut buf, &mut dram, 0);
+        assert_eq!(ready, 20 + 1 + 1);
+        // The next read of a different block queues behind the burst.
+        let ready2 = llc.read_sub(0x10000, &mut buf, &mut dram, ready);
+        assert!(ready2 > 20 + 64, "channel was still busy with burst 1");
+    }
+
+    #[test]
+    fn nru_keeps_streaming_alternation_alive() {
+        // memcpy pattern: alternating reads (src) and writes (dst) whose
+        // blocks map to the same set must not evict each other — NRU keeps
+        // both resident, unlike random replacement (§3.1).
+        let (mut llc, mut dram) = mk();
+        let stride = 2048 * 32; // same set
+        let src = 0u32;
+        let dst = stride;
+        let mut buf = vec![0u8; SUB];
+        let mut misses_after_warmup = 0;
+        for i in 0..64u32 {
+            let off = (i as usize % 64) as u32 * SUB as u32;
+            let before = llc.stats().misses;
+            llc.read_sub(src + off, &mut buf, &mut dram, 0);
+            llc.write_sub(dst + off, &buf, &mut dram, 0);
+            if i >= 2 {
+                misses_after_warmup += llc.stats().misses - before;
+            }
+        }
+        assert_eq!(misses_after_warmup, 0, "src and dst blocks must coexist");
+    }
+
+    #[test]
+    fn peek_sees_cached_dirty_data() {
+        let (mut llc, mut dram) = mk();
+        let data = vec![0x5A; SUB];
+        llc.write_sub(0x6000, &data, &mut dram, 0);
+        assert_eq!(llc.peek(0x6000, &dram), 0x5A);
+        // DRAM itself still has zeros.
+        let mut b = [0u8];
+        dram.host_read(0x6000, &mut b);
+        assert_eq!(b[0], 0);
+    }
+
+    #[test]
+    fn flush_then_invalidate_pushes_all_state_to_dram() {
+        let (mut llc, mut dram) = mk();
+        for i in 0..16u32 {
+            let data = vec![i as u8; SUB];
+            llc.write_sub(0x4000 + i * SUB as u32, &data, &mut dram, 0);
+        }
+        llc.flush(&mut dram);
+        llc.invalidate_all();
+        for i in 0..16u32 {
+            let mut got = vec![0u8; SUB];
+            dram.host_read(0x4000 + i * SUB as u32, &mut got);
+            assert_eq!(got, vec![i as u8; SUB]);
+        }
+    }
+}

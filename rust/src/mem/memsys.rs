@@ -1,0 +1,239 @@
+//! The assembled memory system: IL1 + DL1 over a unified LLC over DRAM
+//! (Fig. 2 of the paper). This is the object the simulated core talks to.
+
+use super::config::MemConfig;
+use super::dram::Dram;
+use super::l1::L1Cache;
+use super::llc::Llc;
+use super::stats::MemStats;
+use crate::asm::Program;
+
+pub struct MemSys {
+    pub cfg: MemConfig,
+    il1: L1Cache,
+    dl1: L1Cache,
+    llc: Llc,
+    dram: Dram,
+}
+
+impl MemSys {
+    pub fn new(cfg: MemConfig) -> Self {
+        cfg.validate().expect("invalid memory configuration");
+        Self {
+            cfg,
+            il1: L1Cache::new(cfg.il1, false),
+            dl1: L1Cache::with_policy(cfg.dl1, true, cfg.replacement),
+            llc: Llc::new(&cfg),
+            dram: Dram::new(cfg.dram),
+        }
+    }
+
+    /// Copy a program image into DRAM (host-side, no timing) and drop any
+    /// cached state.
+    pub fn load_program(&mut self, prog: &Program) {
+        let mut text_bytes = Vec::with_capacity(prog.text.len() * 4);
+        for w in &prog.text {
+            text_bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        self.dram.host_write(prog.text_base, &text_bytes);
+        if !prog.data.is_empty() {
+            self.dram.host_write(prog.data_base, &prog.data);
+        }
+        self.il1.invalidate_all();
+        self.dl1.invalidate_all();
+        self.llc.invalidate_all();
+    }
+
+    /// Instruction fetch through IL1. Hit: instruction available this
+    /// cycle (the IL1 is "implemented in registers", §3.1). Returns
+    /// `(word, ready_cycle)`.
+    pub fn fetch(&mut self, pc: u32, now: u64) -> (u32, u64) {
+        let mut buf = [0u8; 4];
+        let ready = self.il1.read(pc, &mut buf, &mut self.llc, &mut self.dram, now);
+        (u32::from_le_bytes(buf), ready)
+    }
+
+    /// Data read through DL1; splits block-crossing accesses.
+    pub fn read(&mut self, addr: u32, buf: &mut [u8], now: u64) -> u64 {
+        let bb = self.dl1.block_bytes();
+        let mut ready = now;
+        let mut done = 0usize;
+        while done < buf.len() {
+            let a = addr + done as u32;
+            let room = bb - (a as usize % bb);
+            let chunk = room.min(buf.len() - done);
+            let r = self.dl1.read(a, &mut buf[done..done + chunk], &mut self.llc, &mut self.dram, now);
+            ready = ready.max(r);
+            done += chunk;
+        }
+        ready
+    }
+
+    /// Data write through DL1; splits block-crossing accesses.
+    pub fn write(&mut self, addr: u32, data: &[u8], now: u64) -> u64 {
+        let bb = self.dl1.block_bytes();
+        let mut ready = now;
+        let mut done = 0usize;
+        while done < data.len() {
+            let a = addr + done as u32;
+            let room = bb - (a as usize % bb);
+            let chunk = room.min(data.len() - done);
+            let r = self.dl1.write(a, &data[done..done + chunk], &mut self.llc, &mut self.dram, now);
+            ready = ready.max(r);
+            done += chunk;
+        }
+        ready
+    }
+
+    /// Write all dirty state down to DRAM (host-side, end of run).
+    pub fn flush_all(&mut self) {
+        self.dl1.flush(&mut self.llc, &mut self.dram);
+        self.llc.flush(&mut self.dram);
+    }
+
+    /// Hierarchy-aware host read (no timing, no state change).
+    pub fn peek(&self, addr: u32) -> u8 {
+        self.dl1.peek(addr, &self.llc, &self.dram)
+    }
+
+    /// Host read of a range (hierarchy-aware, slow; use `flush_all` +
+    /// `dram_slice` for bulk verification).
+    pub fn peek_range(&self, addr: u32, len: usize) -> Vec<u8> {
+        (0..len).map(|i| self.peek(addr + i as u32)).collect()
+    }
+
+    /// Host write (no timing): goes straight to DRAM, so callers must
+    /// either write before execution or flush+invalidate first.
+    pub fn host_write(&mut self, addr: u32, data: &[u8]) {
+        self.dram.host_write(addr, data);
+    }
+
+    /// Direct DRAM view (valid after `flush_all`).
+    pub fn dram_slice(&self, addr: u32, len: usize) -> &[u8] {
+        self.dram.host_slice(addr, len)
+    }
+
+    pub fn dram_size(&self) -> usize {
+        self.dram.size()
+    }
+
+    pub fn stats(&self) -> MemStats {
+        MemStats {
+            il1: self.il1.stats(),
+            dl1: self.dl1.stats(),
+            llc: self.llc.stats(),
+            dram: self.dram.stats(),
+        }
+    }
+
+    /// Credit line-buffer fetches (see `core`) as IL1 hits so reported
+    /// hit rates stay architecturally accurate.
+    pub fn credit_il1_hits(&mut self, n: u64) {
+        self.il1.credit_hits(n);
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.il1.reset_stats();
+        self.dl1.reset_stats();
+        self.llc.reset_stats();
+        self.dram.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn mk() -> MemSys {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        MemSys::new(cfg)
+    }
+
+    #[test]
+    fn program_load_and_fetch() {
+        let mut m = mk();
+        let mut a = crate::asm::Asm::new();
+        a.addi(crate::isa::reg::A0, crate::isa::reg::ZERO, 7);
+        a.halt();
+        let p = a.assemble().unwrap();
+        m.load_program(&p);
+        let (w, _) = m.fetch(p.text_base, 0);
+        assert_eq!(crate::isa::decode(w).unwrap().to_string(), "addi a0, zero, 7");
+    }
+
+    #[test]
+    fn block_crossing_access_is_split_correctly() {
+        let mut m = mk();
+        let data: Vec<u8> = (0..64).collect();
+        // Unaligned write straddling a 32-byte block boundary.
+        m.write(0x1f0, &data, 0);
+        let mut got = vec![0u8; 64];
+        m.read(0x1f0, &mut got, 100);
+        assert_eq!(got, data);
+    }
+
+    /// The repo's central functional-correctness property: an arbitrary
+    /// mix of reads and writes through the full hierarchy must equal a
+    /// flat shadow memory, regardless of evictions and write-backs.
+    #[test]
+    fn random_traffic_matches_shadow_memory() {
+        crate::util::proptest::check("memsys matches shadow", 16, |rng: &mut Xoshiro256| {
+            let mut m = mk();
+            let mut shadow = vec![0u8; 1 << 16];
+            let mut now = 0u64;
+            for _ in 0..2000 {
+                let len = [1usize, 2, 4, 8, 32][rng.below(5) as usize];
+                let addr = (rng.below((1 << 16) - 64) as usize / len * len) as u32;
+                if rng.below(2) == 0 {
+                    let data = rng.vec_u8(len);
+                    now = m.write(addr, &data, now).max(now) + 1;
+                    shadow[addr as usize..addr as usize + len].copy_from_slice(&data);
+                } else {
+                    let mut buf = vec![0u8; len];
+                    now = m.read(addr, &mut buf, now).max(now) + 1;
+                    crate::prop_assert_eq!(buf, shadow[addr as usize..addr as usize + len].to_vec());
+                }
+            }
+            // After a flush, DRAM must equal the shadow exactly.
+            m.flush_all();
+            let dram = m.dram_slice(0, 1 << 16);
+            crate::prop_assert!(dram == &shadow[..], "post-flush DRAM differs from shadow");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memcpy_traffic_is_two_bursts_per_block() {
+        // Vector memcpy of 8 KiB with 32-byte (VLEN) transfers: per
+        // 2048-byte LLC block, one read burst (src) and one write-back
+        // burst (dst) — the §3.1.1 no-fetch path must avoid dst fetches.
+        let mut m = mk();
+        let n = 8192u32;
+        let (src, dst) = (0x0_0000u32, 0x8_0000u32);
+        let mut now = 0u64;
+        for off in (0..n).step_by(32) {
+            let mut v = [0u8; 32];
+            now = m.read(src + off, &mut v, now);
+            now = m.write(dst + off, &v, now);
+        }
+        m.flush_all();
+        let s = m.stats();
+        let blocks = (n / 2048) as u64;
+        assert_eq!(s.dram.read_bursts, blocks, "one src fetch per LLC block");
+        assert_eq!(s.dram.write_bursts, blocks, "one dst write-back per LLC block");
+        assert_eq!(s.dl1.alloc_no_fetch, (n / 32) as u64, "every vector store skips fetch");
+    }
+
+    #[test]
+    fn stats_reset() {
+        let mut m = mk();
+        let mut buf = [0u8; 4];
+        m.read(0, &mut buf, 0);
+        assert!(m.stats().dl1.accesses() > 0);
+        m.reset_stats();
+        assert_eq!(m.stats().dl1.accesses(), 0);
+        assert_eq!(m.stats().dram.bursts(), 0);
+    }
+}

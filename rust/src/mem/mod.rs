@@ -1,0 +1,18 @@
+//! Memory-hierarchy substrate (§3.1 of the paper): IL1 (direct-mapped,
+//! register-backed), DL1 (set-associative write-back, block = VLEN), a
+//! unified wide-block sub-blocked LLC with NRU replacement, and an
+//! AXI-style burst DRAM model with an optional double-rate interconnect.
+
+pub mod config;
+pub mod dram;
+pub mod l1;
+pub mod llc;
+pub mod memsys;
+pub mod stats;
+
+pub use config::{CacheGeometry, DramConfig, MemConfig, MemConfigError, Replacement};
+pub use dram::{BurstTiming, Dram};
+pub use l1::L1Cache;
+pub use llc::Llc;
+pub use memsys::MemSys;
+pub use stats::{CacheStats, DramStats, MemStats};

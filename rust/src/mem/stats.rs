@@ -1,0 +1,124 @@
+//! Counters collected by every level of the memory system. The
+//! experiment reports (Figs. 3–4) are computed from these plus the core's
+//! cycle counter.
+
+/// Per-cache counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Write hits/misses are counted in `hits`/`misses`; this counts
+    /// dirty evictions (write-backs to the next level).
+    pub writebacks: u64,
+    /// §3.1.1: vector-store misses that allocated without fetching.
+    pub alloc_no_fetch: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// DRAM/interconnect counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DramStats {
+    pub read_bursts: u64,
+    pub write_bursts: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Core cycles the interconnect spent busy (setup + beats).
+    pub busy_cycles: u64,
+}
+
+impl DramStats {
+    pub fn bursts(&self) -> u64 {
+        self.read_bursts + self.write_bursts
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Mean burst length in bytes (0 when no bursts happened).
+    pub fn mean_burst_bytes(&self) -> f64 {
+        if self.bursts() == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 / self.bursts() as f64
+        }
+    }
+}
+
+/// Aggregated memory-system stats snapshot.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MemStats {
+    pub il1: CacheStats,
+    pub dl1: CacheStats,
+    pub llc: CacheStats,
+    pub dram: DramStats,
+}
+
+impl MemStats {
+    pub fn report(&self) -> String {
+        format!(
+            "IL1 {:>10} acc {:>6.2}% hit | DL1 {:>10} acc {:>6.2}% hit ({} wb, {} anf) | \
+             LLC {:>10} acc {:>6.2}% hit ({} wb) | DRAM {} rd + {} wr bursts, {} B, {} busy cyc",
+            self.il1.accesses(),
+            self.il1.hit_rate() * 100.0,
+            self.dl1.accesses(),
+            self.dl1.hit_rate() * 100.0,
+            self.dl1.writebacks,
+            self.dl1.alloc_no_fetch,
+            self.llc.accesses(),
+            self.llc.hit_rate() * 100.0,
+            self.llc.writebacks,
+            self.dram.read_bursts,
+            self.dram.write_bursts,
+            self.dram.bytes(),
+            self.dram.busy_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_zero() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_aggregates() {
+        let d = DramStats {
+            read_bursts: 2,
+            write_bursts: 2,
+            bytes_read: 4096,
+            bytes_written: 4096,
+            busy_cycles: 100,
+        };
+        assert_eq!(d.bursts(), 4);
+        assert_eq!(d.bytes(), 8192);
+        assert!((d.mean_burst_bytes() - 2048.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_is_human_readable() {
+        let s = MemStats::default();
+        let r = s.report();
+        assert!(r.contains("IL1"));
+        assert!(r.contains("DRAM"));
+    }
+}

@@ -1,0 +1,198 @@
+//! HLO-backed custom units: the same `CustomUnit` interface as the native
+//! units in `simd::units`, but every invocation executes the AOT-compiled
+//! Pallas datapath through PJRT — the simulator literally "runs the
+//! loaded bitstream" for each instruction call.
+//!
+//! Latencies still come from the network structure (they are a property
+//! of the *hardware shape*, not of how we compute the result), so a core
+//! with an HLO pool reports identical cycle counts to a native-pool core;
+//! only the datapath evaluation differs. `fabric_crosscheck.rs` asserts
+//! both properties.
+
+use super::Fabric;
+use crate::simd::{
+    networks, CustomUnit, MemUnit, UnitError, UnitInputs, UnitOutput, UnitPool, VecVal,
+};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Shared handle to an open fabric (single-threaded simulator; PJRT
+/// objects are not Send).
+pub type FabricHandle = Rc<RefCell<Fabric>>;
+
+/// c2: sorting network evaluated through the `sort8_b1` artifact.
+pub struct HloSortUnit {
+    fabric: FabricHandle,
+    lanes: usize,
+    latency: u64,
+}
+
+impl CustomUnit for HloSortUnit {
+    fn name(&self) -> &'static str {
+        "sort[hlo]"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        (funct3 == 0).then_some("sort via AOT pallas artifact")
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        if inp.funct3 != 0 {
+            return Err(UnitError::BadFunct3 { unit: "sort[hlo]", funct3: inp.funct3 });
+        }
+        if inp.vrs1.lanes() != self.lanes {
+            return Err(UnitError::BadLanes {
+                unit: "sort[hlo]",
+                expected: self.lanes,
+                got: inp.vrs1.lanes(),
+            });
+        }
+        let rows = inp.vrs1.to_i32s();
+        let sorted = self
+            .fabric
+            .borrow_mut()
+            .sort_rows(&rows, 1)
+            .unwrap_or_else(|e| panic!("fabric sort failed: {e}"));
+        Ok(UnitOutput::vector(VecVal::from_i32s(&sorted), self.latency))
+    }
+}
+
+/// c1: merge block through `merge_b1` (funct3 1/2 elementwise helpers are
+/// delegated to the native implementation — they are not part of the
+/// paper's artifact set).
+pub struct HloMergeUnit {
+    fabric: FabricHandle,
+    native: crate::simd::MergeUnit,
+    lanes: usize,
+    latency: u64,
+}
+
+impl CustomUnit for HloMergeUnit {
+    fn name(&self) -> &'static str {
+        "merge[hlo]"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        match funct3 {
+            0 => Some("odd-even merge via AOT pallas artifact"),
+            _ => self.native.describe(funct3),
+        }
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        if inp.funct3 != 0 {
+            return self.native.execute(inp);
+        }
+        for v in [&inp.vrs1, &inp.vrs2] {
+            if v.lanes() != self.lanes {
+                return Err(UnitError::BadLanes {
+                    unit: "merge[hlo]",
+                    expected: self.lanes,
+                    got: v.lanes(),
+                });
+            }
+        }
+        let (lo, hi) = self
+            .fabric
+            .borrow_mut()
+            .merge_rows(&inp.vrs1.to_i32s(), &inp.vrs2.to_i32s(), 1)
+            .unwrap_or_else(|e| panic!("fabric merge failed: {e}"));
+        Ok(UnitOutput {
+            rd: None,
+            vrd1: Some(VecVal::from_i32s(&lo)),
+            vrd2: Some(VecVal::from_i32s(&hi)),
+            mem: None,
+            latency: self.latency,
+        })
+    }
+}
+
+/// c3: prefix sum through `prefix_b1`; the carry register lives in the
+/// unit (as in hardware) and is passed through the artifact explicitly.
+pub struct HloPrefixUnit {
+    fabric: FabricHandle,
+    lanes: usize,
+    latency: u64,
+    carry: i32,
+}
+
+impl CustomUnit for HloPrefixUnit {
+    fn name(&self) -> &'static str {
+        "prefix[hlo]"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        match funct3 {
+            0 => Some("prefix scan via AOT pallas artifact"),
+            1 => Some("reset carry"),
+            2 => Some("read carry"),
+            _ => None,
+        }
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        match inp.funct3 {
+            0 => {
+                if inp.vrs1.lanes() != self.lanes {
+                    return Err(UnitError::BadLanes {
+                        unit: "prefix[hlo]",
+                        expected: self.lanes,
+                        got: inp.vrs1.lanes(),
+                    });
+                }
+                let (out, carry) = self
+                    .fabric
+                    .borrow_mut()
+                    .prefix(&inp.vrs1.to_i32s(), 1, self.carry)
+                    .unwrap_or_else(|e| panic!("fabric prefix failed: {e}"));
+                self.carry = carry;
+                Ok(UnitOutput::vector(VecVal::from_i32s(&out), self.latency))
+            }
+            1 => {
+                self.carry = 0;
+                Ok(UnitOutput::nothing(1))
+            }
+            2 => Ok(UnitOutput::scalar(self.carry as u32, 1)),
+            f3 => Err(UnitError::BadFunct3 { unit: "prefix[hlo]", funct3: f3 }),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.carry = 0;
+    }
+
+    fn is_stateful(&self) -> bool {
+        true
+    }
+}
+
+/// Build a unit pool whose datapaths execute through the fabric
+/// artifacts (c0 stays native: load/store is DL1 wiring, not fabric
+/// logic — as in the paper, where c0 is provided by the framework).
+pub fn hlo_pool(fabric: FabricHandle, vlen_bits: usize) -> UnitPool {
+    let lanes = vlen_bits / 32;
+    let mut pool = UnitPool::empty();
+    pool.load(0, Box::new(MemUnit::new(lanes)));
+    pool.load(
+        1,
+        Box::new(HloMergeUnit {
+            fabric: fabric.clone(),
+            native: crate::simd::MergeUnit::new(lanes),
+            lanes,
+            latency: networks::merge_latency(2 * lanes),
+        }),
+    );
+    pool.load(
+        2,
+        Box::new(HloSortUnit {
+            fabric: fabric.clone(),
+            lanes,
+            latency: networks::sort_latency(lanes),
+        }),
+    );
+    pool.load(
+        3,
+        Box::new(HloPrefixUnit { fabric, lanes, latency: networks::prefix_latency(lanes), carry: 0 }),
+    );
+    pool
+}

@@ -1,0 +1,15 @@
+//! Custom-SIMD instruction framework (§2 of the paper): the instruction
+//! *template* abstraction ([`unit::CustomUnit`]), the four reconfigurable
+//! slots ([`unit::UnitPool`]), structural network models with
+//! structure-derived latencies ([`networks`]), and the standard
+//! demonstration units ([`units`]): vector load/store, bitonic sort,
+//! odd-even merge, and stateful prefix sum.
+
+pub mod networks;
+pub mod unit;
+pub mod units;
+pub mod value;
+
+pub use unit::{CustomUnit, UnitError, UnitInputs, UnitOutput, UnitPool, VecMemOp};
+pub use units::{standard_pool, MemUnit, MergeUnit, PrefixUnit, SortUnit, LOAD_PIPE_CYCLES};
+pub use value::{VecVal, MAX_LANES, MAX_VLEN_BITS};

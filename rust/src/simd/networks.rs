@@ -1,0 +1,270 @@
+//! Structural models of the paper's datapath networks.
+//!
+//! The Verilog templates (§2.2, Algorithm 1) build instructions out of
+//! compare-and-swap (CAS) layers; the pipeline length `cN_cycles` equals
+//! the number of layers. We model networks the same way — as explicit
+//! layer lists — so that (a) instruction latencies are *derived from the
+//! structure*, exactly like the hardware, and (b) tests can check the
+//! structural model against functional oracles.
+//!
+//! Networks implemented:
+//! - Batcher bitonic sorter (`c2_sort`) — Θ(log²N) layers; 6 layers for
+//!   N=8, 3 for N=4 (matching §6: "sorts 8 elements in 6 cycles" and
+//!   Algorithm 1's `c1_cycles 3` for 4 inputs).
+//! - Odd-even merge block (`c1_merge`) — the last log₂(N) layers of
+//!   odd-even mergesort plus one leading layer for progressive merging of
+//!   arbitrarily long lists (Fig. 5).
+//! - Hillis-Steele prefix-sum (`c3_prefix`) — log₂(N) shift-add layers
+//!   plus one carry layer (Fig. 7).
+
+/// One compare-and-swap: indices `(lo, hi)`; after the CAS,
+/// `out[lo] = min(in[lo], in[hi])`, `out[hi] = max(...)`.
+pub type Cas = (usize, usize);
+
+/// A network is a sequence of parallel layers; each layer's CAS pairs are
+/// disjoint (checked by [`validate_layers`]), i.e. executable in one cycle.
+pub type CasLayers = Vec<Vec<Cas>>;
+
+/// Batcher's bitonic sorting network for `n` inputs (n = power of two).
+/// Layer count is k(k+1)/2 for n = 2^k.
+pub fn bitonic_sort_network(n: usize) -> CasLayers {
+    assert!(n.is_power_of_two() && n >= 2);
+    let mut layers: CasLayers = Vec::new();
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 1 {
+            let mut layer: Vec<Cas> = Vec::new();
+            for i in 0..n {
+                let l = i ^ j;
+                if l > i {
+                    // Direction: ascending iff bit k of i is 0.
+                    if i & k == 0 {
+                        layer.push((i, l));
+                    } else {
+                        layer.push((l, i)); // descending: swap roles
+                    }
+                }
+            }
+            layers.push(layer);
+            j /= 2;
+        }
+        k *= 2;
+    }
+    layers
+}
+
+/// The odd-even *merge block*: merges two sorted halves of a 2m-element
+/// input (elements `0..m` sorted ascending, `m..2m` sorted ascending).
+///
+/// This is the last log₂(2m) layers of Batcher's odd-even mergesort. As
+/// in the paper (§4.3.1) we prepend one extra CAS layer pairing element i
+/// of the first list with element m-1-i of the second, which converts the
+/// concatenation of two ascending lists into a bitonic sequence — the
+/// same trick that lets the instruction merge arbitrarily long lists
+/// progressively (low half retired, high half recirculated).
+pub fn merge_block_network(two_m: usize) -> CasLayers {
+    assert!(two_m.is_power_of_two() && two_m >= 2);
+    let m = two_m / 2;
+    let mut layers: CasLayers = Vec::new();
+    // Leading layer: (i, 2m-1-i) — reverse the second list and CAS.
+    layers.push((0..m).map(|i| (i, two_m - 1 - i)).collect());
+    // Then a bitonic merger: for j = m/2 ... 1, CAS (i, i+j) within
+    // aligned groups.
+    let mut j = m;
+    while j >= 1 {
+        let mut layer: Vec<Cas> = Vec::new();
+        for i in 0..two_m {
+            let l = i | j;
+            if l != i && l < two_m {
+                layer.push((i, l));
+            }
+        }
+        // Note the j == m layer never swaps after the leading layer (the
+        // halves are already min/max partitioned) but it is kept as a
+        // pipeline stage, matching the paper's depth of log₂(N) merge
+        // layers plus one leading stage (§4.3.1, Fig. 6).
+        layers.push(layer);
+        j /= 2;
+    }
+    layers
+}
+
+/// Apply one CAS layer.
+pub fn apply_layer(values: &mut [i32], layer: &[Cas]) {
+    for &(lo, hi) in layer {
+        if values[lo] > values[hi] {
+            values.swap(lo, hi);
+        }
+    }
+}
+
+/// Run a full network over `values`.
+pub fn run_network(values: &mut [i32], layers: &CasLayers) {
+    for layer in layers {
+        apply_layer(values, layer);
+    }
+}
+
+/// Check the single-cycle property: within each layer every index is
+/// touched at most once. Returns the offending layer index on failure.
+pub fn validate_layers(n: usize, layers: &CasLayers) -> Result<(), usize> {
+    for (li, layer) in layers.iter().enumerate() {
+        let mut used = vec![false; n];
+        for &(a, b) in layer {
+            if a >= n || b >= n || used[a] || used[b] || a == b {
+                return Err(li);
+            }
+            used[a] = true;
+            used[b] = true;
+        }
+    }
+    Ok(())
+}
+
+/// Hillis-Steele inclusive prefix sum, expressed as layers of
+/// (dst, src, shift) add steps: layer k adds `x[i - 2^k]` into `x[i]`.
+/// Returns the number of layers for an n-element vector (log₂ n), to
+/// which the instruction adds one carry-in layer (Fig. 7).
+pub fn hillis_steele_layer_count(n: usize) -> u64 {
+    assert!(n.is_power_of_two());
+    n.trailing_zeros() as u64
+}
+
+/// Functional Hillis-Steele prefix sum with carry-in; returns the output
+/// vector and the new carry (= carry + total of inputs). Wrapping i32
+/// arithmetic, as 32-bit adders in hardware would behave.
+pub fn prefix_sum_with_carry(input: &[i32], carry: i32) -> (Vec<i32>, i32) {
+    let n = input.len();
+    let mut x: Vec<i32> = input.to_vec();
+    let mut shift = 1;
+    while shift < n {
+        // One parallel layer (read the pre-layer values).
+        let prev = x.clone();
+        for i in shift..n {
+            x[i] = prev[i].wrapping_add(prev[i - shift]);
+        }
+        shift *= 2;
+    }
+    // Carry layer: add the running total of all previous batches.
+    for v in x.iter_mut() {
+        *v = v.wrapping_add(carry);
+    }
+    let new_carry = *x.last().expect("non-empty input");
+    (x, new_carry)
+}
+
+/// Total pipeline depth of the `c2_sort` instruction for `n` elements.
+pub fn sort_latency(n: usize) -> u64 {
+    bitonic_sort_network(n).len() as u64
+}
+
+/// Total pipeline depth of the `c1_merge` instruction for 2m elements.
+pub fn merge_latency(two_m: usize) -> u64 {
+    merge_block_network(two_m).len() as u64
+}
+
+/// Total pipeline depth of the `c3_prefix` instruction (log₂ n + carry).
+pub fn prefix_latency(n: usize) -> u64 {
+    hillis_steele_layer_count(n) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn bitonic_depths_match_paper() {
+        assert_eq!(sort_latency(4), 3, "Algorithm 1: c1_cycles = 3 for 4 inputs");
+        assert_eq!(sort_latency(8), 6, "§6: 8 elements in 6 cycles");
+        assert_eq!(sort_latency(16), 10);
+        assert_eq!(sort_latency(32), 15);
+    }
+
+    #[test]
+    fn networks_have_disjoint_layers() {
+        for n in [2usize, 4, 8, 16, 32, 64] {
+            validate_layers(n, &bitonic_sort_network(n))
+                .unwrap_or_else(|l| panic!("bitonic n={n} layer {l} not parallel"));
+            validate_layers(n, &merge_block_network(n))
+                .unwrap_or_else(|l| panic!("merge n={n} layer {l} not parallel"));
+        }
+    }
+
+    #[test]
+    fn bitonic_sorts_random_inputs() {
+        let mut rng = Xoshiro256::seeded(1);
+        for n in [4usize, 8, 16, 32] {
+            let net = bitonic_sort_network(n);
+            for _ in 0..200 {
+                let mut v = rng.vec_i32(n);
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                run_network(&mut v, &net);
+                assert_eq!(v, expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_block_merges_sorted_halves() {
+        let mut rng = Xoshiro256::seeded(2);
+        for two_m in [4usize, 8, 16, 32] {
+            let net = merge_block_network(two_m);
+            for _ in 0..200 {
+                let mut v = rng.vec_i32(two_m);
+                let m = two_m / 2;
+                v[..m].sort_unstable();
+                v[m..].sort_unstable();
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                run_network(&mut v, &net);
+                assert_eq!(v, expect, "two_m={two_m}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_depth_is_log_plus_one() {
+        // log2(16) layers of the mergesort tail + 1 leading layer, but the
+        // leading layer replaces the first bitonic layer: total log2(N)+1-1+1.
+        assert_eq!(merge_latency(16), 5, "Fig. 6 uses a 5-stage merge for 16 elems");
+        assert_eq!(merge_latency(8), 4);
+        assert_eq!(merge_latency(4), 3);
+    }
+
+    #[test]
+    fn prefix_sum_matches_serial_oracle() {
+        let mut rng = Xoshiro256::seeded(3);
+        for n in [4usize, 8, 16] {
+            let mut carry = 0i32;
+            let mut serial_acc = 0i32;
+            for _ in 0..50 {
+                let input = rng.vec_i32(n);
+                let (out, new_carry) = prefix_sum_with_carry(&input, carry);
+                for (i, &x) in input.iter().enumerate() {
+                    serial_acc = serial_acc.wrapping_add(x);
+                    assert_eq!(out[i], serial_acc, "n={n} i={i}");
+                }
+                assert_eq!(new_carry, serial_acc);
+                carry = new_carry;
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_latency_matches_fig7() {
+        // Fig. 7: logN Hillis-Steele stages + 1 carry stage.
+        assert_eq!(prefix_latency(8), 4);
+        assert_eq!(prefix_latency(16), 5);
+    }
+
+    #[test]
+    fn merge_is_stable_for_presorted_input() {
+        let net = merge_block_network(16);
+        let mut v: Vec<i32> = (0..16).collect();
+        run_network(&mut v, &net);
+        assert_eq!(v, (0..16).collect::<Vec<i32>>());
+    }
+}

@@ -1,0 +1,207 @@
+//! The custom-instruction *template* abstraction — the Rust analogue of
+//! the paper's Verilog instruction templates (§2.2, Algorithm 1).
+//!
+//! A hardware instruction module receives the operand data plus the
+//! destination register names, and after `cN_cycles` produces results
+//! with those names attached. Here a [`CustomUnit`] receives operand
+//! *values* ([`UnitInputs`]) and returns result values plus its pipeline
+//! `latency` ([`UnitOutput`]); the core performs register writeback and
+//! scoreboard bookkeeping, exactly like the template's shift-register of
+//! destination names.
+//!
+//! Memory-capable units (the paper's default `c0_lv`/`c0_sv`) do not
+//! access memory themselves; they return a [`VecMemOp`] *request* that the
+//! core routes through DL1 — in hardware, the c0 slot is the one wired to
+//! the data cache.
+
+use super::value::VecVal;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum UnitError {
+    #[error("unit '{unit}' does not implement funct3={funct3}")]
+    BadFunct3 { unit: &'static str, funct3: u8 },
+    #[error("unit '{unit}' requires VLEN with {expected} lanes, got {got}")]
+    BadLanes { unit: &'static str, expected: usize, got: usize },
+    #[error("no unit loaded in slot c{0}")]
+    EmptySlot(usize),
+}
+
+/// Operand values presented to a unit on issue (the template's input
+/// ports: `in_data`, `in_vdata1`, `in_vdata2`, plus S′'s second scalar).
+#[derive(Debug, Clone, Copy)]
+pub struct UnitInputs {
+    pub funct3: u8,
+    /// rs1 value (I′ and S′).
+    pub rs1: u32,
+    /// rs2 value (S′ only; 0 for I′).
+    pub rs2: u32,
+    /// S′ 1-bit immediate (0 for I′).
+    pub imm: u8,
+    pub vrs1: VecVal,
+    pub vrs2: VecVal,
+}
+
+/// A memory request issued by a unit (serviced by the core through DL1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VecMemOp {
+    /// Load a VLEN vector from `addr`; the loaded value lands in `vrd1`.
+    Load { addr: u32 },
+    /// Store `data` to `addr`.
+    Store { addr: u32, data: VecVal },
+}
+
+/// Results of a unit invocation, available `latency` cycles after issue.
+#[derive(Debug, Clone)]
+pub struct UnitOutput {
+    /// Scalar result for `rd` (None = rd not written).
+    pub rd: Option<u32>,
+    /// Vector result for `vrd1`.
+    pub vrd1: Option<VecVal>,
+    /// Vector result for `vrd2`.
+    pub vrd2: Option<VecVal>,
+    /// Memory request (load/store vector).
+    pub mem: Option<VecMemOp>,
+    /// Pipeline depth of this invocation (the template's `cN_cycles`).
+    pub latency: u64,
+}
+
+impl UnitOutput {
+    pub fn nothing(latency: u64) -> Self {
+        Self { rd: None, vrd1: None, vrd2: None, mem: None, latency }
+    }
+
+    pub fn vector(vrd1: VecVal, latency: u64) -> Self {
+        Self { rd: None, vrd1: Some(vrd1), vrd2: None, mem: None, latency }
+    }
+
+    pub fn scalar(rd: u32, latency: u64) -> Self {
+        Self { rd: Some(rd), vrd1: None, vrd2: None, mem: None, latency }
+    }
+}
+
+/// A reconfigurable execution unit loaded into one of the four custom
+/// opcode slots. Implementations must be *pure per-call* except for
+/// explicitly stateful units (e.g. the prefix-sum carry accumulator),
+/// mirroring §6's discussion of instructions holding state.
+///
+/// Deliberately NOT `Send`: the HLO-backed units hold PJRT handles. A
+/// `Core` is built and driven inside one thread; the sweep driver spawns
+/// per-configuration threads that each construct their own core.
+pub trait CustomUnit {
+    /// Short name used in traces and reports (e.g. "sort").
+    fn name(&self) -> &'static str;
+
+    /// Human description of one funct3 operation, if implemented.
+    fn describe(&self, funct3: u8) -> Option<&'static str>;
+
+    /// Execute one invocation. Must not mutate architectural state other
+    /// than its own internal registers.
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError>;
+
+    /// Power-on reset (clears internal registers).
+    fn reset(&mut self) {}
+
+    /// True if the unit holds internal state across invocations (affects
+    /// what the core may reorder; see §6).
+    fn is_stateful(&self) -> bool {
+        false
+    }
+}
+
+/// The four reconfigurable slots (c0..c3). "Loading a unit" is the
+/// simulator's analogue of partial reconfiguration of the instruction
+/// region.
+pub struct UnitPool {
+    slots: [Option<Box<dyn CustomUnit>>; 4],
+}
+
+impl Default for UnitPool {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl UnitPool {
+    pub fn empty() -> Self {
+        Self { slots: [None, None, None, None] }
+    }
+
+    /// Load `unit` into `slot` (replacing whatever was there).
+    pub fn load(&mut self, slot: usize, unit: Box<dyn CustomUnit>) {
+        assert!(slot < 4);
+        self.slots[slot] = Some(unit);
+    }
+
+    pub fn unload(&mut self, slot: usize) {
+        self.slots[slot] = None;
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Result<&mut (dyn CustomUnit + 'static), UnitError> {
+        match self.slots[slot].as_mut() {
+            Some(b) => Ok(&mut **b),
+            None => Err(UnitError::EmptySlot(slot)),
+        }
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&(dyn CustomUnit + 'static)> {
+        self.slots[slot].as_deref()
+    }
+
+    pub fn reset_all(&mut self) {
+        for s in self.slots.iter_mut().flatten() {
+            s.reset();
+        }
+    }
+
+    /// Inventory line for reports.
+    pub fn describe(&self) -> String {
+        (0..4)
+            .map(|i| match self.get(i) {
+                Some(u) => format!("c{i}={}", u.name()),
+                None => format!("c{i}=<empty>"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy;
+    impl CustomUnit for Dummy {
+        fn name(&self) -> &'static str {
+            "dummy"
+        }
+        fn describe(&self, f3: u8) -> Option<&'static str> {
+            (f3 == 0).then_some("no-op")
+        }
+        fn execute(&mut self, _inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+            Ok(UnitOutput::nothing(1))
+        }
+    }
+
+    #[test]
+    fn pool_load_and_dispatch() {
+        let mut pool = UnitPool::empty();
+        assert!(matches!(pool.get_mut(2), Err(UnitError::EmptySlot(2))));
+        pool.load(2, Box::new(Dummy));
+        assert_eq!(pool.get_mut(2).unwrap().name(), "dummy");
+        assert!(pool.describe().contains("c2=dummy"));
+        pool.unload(2);
+        assert!(pool.get(2).is_none());
+    }
+
+    #[test]
+    fn output_constructors() {
+        let o = UnitOutput::nothing(3);
+        assert_eq!(o.latency, 3);
+        assert!(o.rd.is_none() && o.vrd1.is_none() && o.mem.is_none());
+        let v = UnitOutput::vector(VecVal::zero(8), 6);
+        assert!(v.vrd1.is_some());
+        let s = UnitOutput::scalar(7, 1);
+        assert_eq!(s.rd, Some(7));
+    }
+}

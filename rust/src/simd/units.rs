@@ -1,0 +1,490 @@
+//! The standard unit set this repository loads into the four
+//! reconfigurable slots — the paper's demonstration instructions:
+//!
+//! | slot | unit | funct3 | instruction | type | latency (8 lanes) |
+//! |------|------|--------|-------------|------|-------------------|
+//! | c0 | [`MemUnit`]    | 4 | `c0.lv`     | S′ | DL1 pipe (3) + miss |
+//! | c0 | [`MemUnit`]    | 5 | `c0.sv`     | S′ | 1 |
+//! | c1 | [`MergeUnit`]  | 0 | `c1.merge`  | I′ | 5 |
+//! | c1 | [`MergeUnit`]  | 1 | `c1.vadd`   | I′ | 1 |
+//! | c1 | [`MergeUnit`]  | 2 | `c1.vscale` | I′ | 2 |
+//! | c2 | [`SortUnit`]   | 0 | `c2.sort`   | I′ | 6 |
+//! | c3 | [`PrefixUnit`] | 0 | `c3.prefix` | I′ | 4 |
+//! | c3 | [`PrefixUnit`] | 1 | `c3.reset`  | I′ | 1 |
+//! | c3 | [`PrefixUnit`] | 2 | `c3.carry`  | I′ | 1 |
+//!
+//! Latencies are *derived from network structure* (`networks` module), as
+//! in the Verilog templates where `cN_cycles` equals the layer count.
+
+use super::networks::{
+    bitonic_sort_network, merge_block_network, prefix_latency, prefix_sum_with_carry,
+    run_network, CasLayers,
+};
+use super::unit::{CustomUnit, UnitError, UnitInputs, UnitOutput, VecMemOp};
+use super::value::VecVal;
+
+/// DL1 load pipeline depth on a hit (§3.2: "a latency of 3 cycles until
+/// the dependent command gets executed").
+pub const LOAD_PIPE_CYCLES: u64 = 3;
+
+/// c0: vector load/store (S′-type; §2.2 "One S′ type instruction for
+/// loading and storing VLEN-sized vectors is provided by default").
+/// Effective address is `rs1 + rs2` (the two base sources let loops split
+/// base+index across registers, §2.1).
+pub struct MemUnit {
+    lanes: usize,
+}
+
+impl MemUnit {
+    pub fn new(lanes: usize) -> Self {
+        Self { lanes }
+    }
+}
+
+impl CustomUnit for MemUnit {
+    fn name(&self) -> &'static str {
+        "memvec"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        match funct3 {
+            4 => Some("lv: load VLEN vector from rs1+rs2 into vrd1"),
+            5 => Some("sv: store vrs1 to rs1+rs2"),
+            _ => None,
+        }
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        let addr = inp.rs1.wrapping_add(inp.rs2);
+        match inp.funct3 {
+            4 => Ok(UnitOutput {
+                rd: None,
+                vrd1: None, // filled by the core from the DL1 response
+                vrd2: None,
+                mem: Some(VecMemOp::Load { addr }),
+                latency: LOAD_PIPE_CYCLES,
+            }),
+            5 => {
+                if inp.vrs1.lanes() != self.lanes {
+                    return Err(UnitError::BadLanes {
+                        unit: "memvec",
+                        expected: self.lanes,
+                        got: inp.vrs1.lanes(),
+                    });
+                }
+                Ok(UnitOutput {
+                    rd: None,
+                    vrd1: None,
+                    vrd2: None,
+                    mem: Some(VecMemOp::Store { addr, data: inp.vrs1 }),
+                    latency: 1,
+                })
+            }
+            f3 => Err(UnitError::BadFunct3 { unit: "memvec", funct3: f3 }),
+        }
+    }
+}
+
+/// c2: the bitonic sorting network (`c2_sort`) — sorts the VLEN/32
+/// signed 32-bit lanes of `vrs1` into `vrd1`.
+pub struct SortUnit {
+    lanes: usize,
+    network: CasLayers,
+    latency: u64,
+}
+
+impl SortUnit {
+    pub fn new(lanes: usize) -> Self {
+        let network = bitonic_sort_network(lanes);
+        let latency = network.len() as u64;
+        Self { lanes, network, latency }
+    }
+
+    pub fn latency(&self) -> u64 {
+        self.latency
+    }
+}
+
+impl CustomUnit for SortUnit {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        (funct3 == 0).then_some("sort: bitonic-sort lanes of vrs1 into vrd1")
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        if inp.funct3 != 0 {
+            return Err(UnitError::BadFunct3 { unit: "sort", funct3: inp.funct3 });
+        }
+        if inp.vrs1.lanes() != self.lanes {
+            return Err(UnitError::BadLanes {
+                unit: "sort",
+                expected: self.lanes,
+                got: inp.vrs1.lanes(),
+            });
+        }
+        let mut vals = [0i32; crate::simd::MAX_LANES];
+        for i in 0..self.lanes {
+            vals[i] = inp.vrs1.words()[i] as i32;
+        }
+        run_network(&mut vals[..self.lanes], &self.network);
+        Ok(UnitOutput::vector(VecVal::from_i32s(&vals[..self.lanes]), self.latency))
+    }
+}
+
+/// c1: odd-even merge block (`c1_merge`, Fig. 5) plus two small
+/// elementwise helpers (`c1.vadd`, `c1.vscale`) demonstrating that one
+/// slot can host several related operations selected by funct3.
+pub struct MergeUnit {
+    lanes: usize,
+    network: CasLayers,
+    merge_latency: u64,
+}
+
+impl MergeUnit {
+    pub fn new(lanes: usize) -> Self {
+        let network = merge_block_network(2 * lanes);
+        let merge_latency = network.len() as u64;
+        Self { lanes, network, merge_latency }
+    }
+
+    pub fn merge_latency(&self) -> u64 {
+        self.merge_latency
+    }
+}
+
+impl CustomUnit for MergeUnit {
+    fn name(&self) -> &'static str {
+        "merge"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        match funct3 {
+            0 => Some("merge: odd-even merge vrs1,vrs2 (sorted) -> vrd1 (low), vrd2 (high)"),
+            1 => Some("vadd: elementwise vrs1 + vrs2 -> vrd1"),
+            2 => Some("vscale: elementwise vrs1 * rs1 -> vrd1"),
+            3 => Some("vfilt: compact lanes of vrs1 < rs1 into vrd1; rd = count"),
+            _ => None,
+        }
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        let check = |v: &VecVal| -> Result<(), UnitError> {
+            if v.lanes() != self.lanes {
+                Err(UnitError::BadLanes { unit: "merge", expected: self.lanes, got: v.lanes() })
+            } else {
+                Ok(())
+            }
+        };
+        match inp.funct3 {
+            0 => {
+                check(&inp.vrs1)?;
+                check(&inp.vrs2)?;
+                // Stack buffer (max 2×32 lanes): the merge is on the
+                // simulator's hottest custom-instruction path.
+                let mut both = [0i32; 2 * crate::simd::MAX_LANES];
+                let n = self.lanes;
+                for i in 0..n {
+                    both[i] = inp.vrs1.words()[i] as i32;
+                    both[n + i] = inp.vrs2.words()[i] as i32;
+                }
+                run_network(&mut both[..2 * n], &self.network);
+                let lo = VecVal::from_i32s(&both[..n]);
+                let hi = VecVal::from_i32s(&both[n..2 * n]);
+                Ok(UnitOutput {
+                    rd: None,
+                    vrd1: Some(lo),
+                    vrd2: Some(hi),
+                    mem: None,
+                    latency: self.merge_latency,
+                })
+            }
+            1 => {
+                check(&inp.vrs1)?;
+                check(&inp.vrs2)?;
+                let mut out = VecVal::zero(self.lanes);
+                for i in 0..self.lanes {
+                    out.words_mut()[i] = inp.vrs1.words()[i].wrapping_add(inp.vrs2.words()[i]);
+                }
+                Ok(UnitOutput::vector(out, 1))
+            }
+            2 => {
+                check(&inp.vrs1)?;
+                let mut out = VecVal::zero(self.lanes);
+                for i in 0..self.lanes {
+                    out.words_mut()[i] = inp.vrs1.words()[i].wrapping_mul(inp.rs1);
+                }
+                Ok(UnitOutput::vector(out, 2))
+            }
+            3 => {
+                // vfilt — the selection/compaction instruction the §4.3.2
+                // database motivation calls for (Zhang & Ross [48]):
+                // lanes of vrs1 strictly below the scalar threshold rs1
+                // are packed densely (order-preserving) into vrd1; the
+                // selected count is returned in rd. A compaction network
+                // is a prefix-routed butterfly: log2(L)+2 layers.
+                check(&inp.vrs1)?;
+                let mut out = VecVal::zero(self.lanes);
+                let mut count = 0usize;
+                let threshold = inp.rs1 as i32;
+                for i in 0..self.lanes {
+                    let v = inp.vrs1.words()[i] as i32;
+                    if v < threshold {
+                        out.words_mut()[count] = v as u32;
+                        count += 1;
+                    }
+                }
+                let latency =
+                    (self.lanes.trailing_zeros() as u64) + 2;
+                Ok(UnitOutput {
+                    rd: Some(count as u32),
+                    vrd1: Some(out),
+                    vrd2: None,
+                    mem: None,
+                    latency,
+                })
+            }
+            f3 => Err(UnitError::BadFunct3 { unit: "merge", funct3: f3 }),
+        }
+    }
+}
+
+/// c3: Hillis-Steele prefix sum with an internal carry accumulator
+/// (Fig. 7) — the paper's example of a *stateful* instruction (§6): the
+/// carry register holds the cumulative sum of all previous batches so an
+/// arbitrarily long input can be scanned in a pipelined, non-blocking way.
+pub struct PrefixUnit {
+    lanes: usize,
+    carry: i32,
+    latency: u64,
+}
+
+impl PrefixUnit {
+    pub fn new(lanes: usize) -> Self {
+        Self { lanes, carry: 0, latency: prefix_latency(lanes) }
+    }
+
+    pub fn latency(&self) -> u64 {
+        self.latency
+    }
+}
+
+impl CustomUnit for PrefixUnit {
+    fn name(&self) -> &'static str {
+        "prefix"
+    }
+
+    fn describe(&self, funct3: u8) -> Option<&'static str> {
+        match funct3 {
+            0 => Some("prefix: inclusive scan of vrs1 + carry -> vrd1; carry += total"),
+            1 => Some("reset: clear the carry accumulator"),
+            2 => Some("carry: read the carry accumulator into rd"),
+            _ => None,
+        }
+    }
+
+    fn execute(&mut self, inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+        match inp.funct3 {
+            0 => {
+                if inp.vrs1.lanes() != self.lanes {
+                    return Err(UnitError::BadLanes {
+                        unit: "prefix",
+                        expected: self.lanes,
+                        got: inp.vrs1.lanes(),
+                    });
+                }
+                let (out, new_carry) = prefix_sum_with_carry(&inp.vrs1.to_i32s(), self.carry);
+                self.carry = new_carry;
+                Ok(UnitOutput::vector(VecVal::from_i32s(&out), self.latency))
+            }
+            1 => {
+                self.carry = 0;
+                Ok(UnitOutput::nothing(1))
+            }
+            2 => Ok(UnitOutput::scalar(self.carry as u32, 1)),
+            f3 => Err(UnitError::BadFunct3 { unit: "prefix", funct3: f3 }),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.carry = 0;
+    }
+
+    fn is_stateful(&self) -> bool {
+        true
+    }
+}
+
+/// Build the standard pool for a given vector width.
+pub fn standard_pool(vlen_bits: usize) -> super::unit::UnitPool {
+    let lanes = vlen_bits / 32;
+    let mut pool = super::unit::UnitPool::empty();
+    pool.load(0, Box::new(MemUnit::new(lanes)));
+    pool.load(1, Box::new(MergeUnit::new(lanes)));
+    pool.load(2, Box::new(SortUnit::new(lanes)));
+    pool.load(3, Box::new(PrefixUnit::new(lanes)));
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn inputs(funct3: u8, vrs1: VecVal, vrs2: VecVal) -> UnitInputs {
+        UnitInputs { funct3, rs1: 0, rs2: 0, imm: 0, vrs1, vrs2 }
+    }
+
+    #[test]
+    fn sort_unit_sorts_and_reports_paper_latency() {
+        let mut u = SortUnit::new(8);
+        let out = u
+            .execute(&inputs(0, VecVal::from_i32s(&[5, -1, 3, 9, 0, -7, 2, 2]), VecVal::zero(8)))
+            .unwrap();
+        assert_eq!(out.latency, 6, "§6: 8 elements in 6 cycles");
+        assert_eq!(out.vrd1.unwrap().to_i32s(), vec![-7, -1, 0, 2, 2, 3, 5, 9]);
+    }
+
+    #[test]
+    fn merge_unit_merges_sorted_vectors() {
+        let mut u = MergeUnit::new(8);
+        let a = VecVal::from_i32s(&[1, 3, 5, 7, 9, 11, 13, 15]);
+        let b = VecVal::from_i32s(&[0, 2, 4, 6, 8, 10, 12, 14]);
+        let out = u.execute(&inputs(0, a, b)).unwrap();
+        assert_eq!(out.latency, 5, "Fig. 6 merge stage count");
+        assert_eq!(out.vrd1.unwrap().to_i32s(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(out.vrd2.unwrap().to_i32s(), vec![8, 9, 10, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn vadd_and_vscale() {
+        let mut u = MergeUnit::new(4);
+        let a = VecVal::from_i32s(&[1, 2, 3, 4]);
+        let b = VecVal::from_i32s(&[10, 20, 30, 40]);
+        let out = u.execute(&inputs(1, a, b)).unwrap();
+        assert_eq!(out.vrd1.unwrap().to_i32s(), vec![11, 22, 33, 44]);
+
+        let mut inp = inputs(2, a, VecVal::zero(4));
+        inp.rs1 = 3;
+        let out = u.execute(&inp).unwrap();
+        assert_eq!(out.vrd1.unwrap().to_i32s(), vec![3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn prefix_unit_carries_across_batches() {
+        let mut u = PrefixUnit::new(8);
+        let batch1 = VecVal::from_i32s(&[1, 1, 1, 1, 1, 1, 1, 1]);
+        let out1 = u.execute(&inputs(0, batch1, VecVal::zero(8))).unwrap();
+        assert_eq!(out1.latency, 4, "Fig. 7: log8 + carry stage");
+        assert_eq!(out1.vrd1.unwrap().to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let out2 = u.execute(&inputs(0, batch1, VecVal::zero(8))).unwrap();
+        assert_eq!(out2.vrd1.unwrap().to_i32s(), vec![9, 10, 11, 12, 13, 14, 15, 16]);
+        // Read and reset the carry.
+        let carry = u.execute(&inputs(2, VecVal::zero(8), VecVal::zero(8))).unwrap();
+        assert_eq!(carry.rd, Some(16));
+        u.execute(&inputs(1, VecVal::zero(8), VecVal::zero(8))).unwrap();
+        let carry = u.execute(&inputs(2, VecVal::zero(8), VecVal::zero(8))).unwrap();
+        assert_eq!(carry.rd, Some(0));
+    }
+
+    #[test]
+    fn mem_unit_issues_requests() {
+        let mut u = MemUnit::new(8);
+        let mut inp = inputs(4, VecVal::zero(8), VecVal::zero(8));
+        inp.rs1 = 0x1000;
+        inp.rs2 = 0x20;
+        let out = u.execute(&inp).unwrap();
+        assert_eq!(out.mem, Some(VecMemOp::Load { addr: 0x1020 }));
+        assert_eq!(out.latency, LOAD_PIPE_CYCLES);
+
+        let data = VecVal::from_i32s(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut inp = inputs(5, data, VecVal::zero(8));
+        inp.rs1 = 0x2000;
+        let out = u.execute(&inp).unwrap();
+        assert_eq!(out.mem, Some(VecMemOp::Store { addr: 0x2000, data }));
+    }
+
+    #[test]
+    fn bad_funct3_and_lanes_rejected() {
+        let mut u = SortUnit::new(8);
+        assert!(matches!(
+            u.execute(&inputs(3, VecVal::zero(8), VecVal::zero(8))),
+            Err(UnitError::BadFunct3 { .. })
+        ));
+        assert!(matches!(
+            u.execute(&inputs(0, VecVal::zero(4), VecVal::zero(4))),
+            Err(UnitError::BadLanes { .. })
+        ));
+    }
+
+    #[test]
+    fn standard_pool_is_fully_loaded() {
+        let pool = standard_pool(256);
+        for i in 0..4 {
+            assert!(pool.get(i).is_some(), "slot {i}");
+        }
+        assert!(pool.describe().contains("c2=sort"));
+    }
+
+    /// Sorting-unit output must match `sort_unstable` on many random
+    /// vectors — and sorting twice must be idempotent.
+    #[test]
+    fn sort_random_property() {
+        crate::util::proptest::check("sort unit == std sort", 64, |rng: &mut Xoshiro256| {
+            let mut u = SortUnit::new(8);
+            let vals = rng.vec_i32(8);
+            let mut expect = vals.clone();
+            expect.sort_unstable();
+            let out = u
+                .execute(&UnitInputs {
+                    funct3: 0,
+                    rs1: 0,
+                    rs2: 0,
+                    imm: 0,
+                    vrs1: VecVal::from_i32s(&vals),
+                    vrs2: VecVal::zero(8),
+                })
+                .unwrap();
+            let got = out.vrd1.unwrap().to_i32s();
+            crate::prop_assert_eq!(got, expect);
+            Ok(())
+        });
+    }
+
+    /// Merging with the unit must equal a functional merge for all sorted
+    /// input pairs, including duplicates and extremes.
+    #[test]
+    fn merge_random_property() {
+        crate::util::proptest::check("merge unit == std merge", 64, |rng: &mut Xoshiro256| {
+            let mut u = MergeUnit::new(8);
+            let mut a = rng.vec_i32(8);
+            let mut b = rng.vec_i32(8);
+            if rng.below(8) == 0 {
+                a = vec![i32::MIN; 8];
+            }
+            if rng.below(8) == 0 {
+                b = vec![i32::MAX; 8];
+            }
+            a.sort_unstable();
+            b.sort_unstable();
+            let mut expect: Vec<i32> = a.iter().chain(b.iter()).copied().collect();
+            expect.sort_unstable();
+            let out = u
+                .execute(&UnitInputs {
+                    funct3: 0,
+                    rs1: 0,
+                    rs2: 0,
+                    imm: 0,
+                    vrs1: VecVal::from_i32s(&a),
+                    vrs2: VecVal::from_i32s(&b),
+                })
+                .unwrap();
+            let mut got = out.vrd1.unwrap().to_i32s();
+            got.extend(out.vrd2.unwrap().to_i32s());
+            crate::prop_assert_eq!(got, expect);
+            Ok(())
+        });
+    }
+}

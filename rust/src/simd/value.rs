@@ -1,0 +1,153 @@
+//! Fixed-capacity vector register value.
+//!
+//! Vector registers are `VLEN` bits (= `VLEN/32` 32-bit lanes). The paper
+//! explores VLEN from 128 to 1024 bits (Fig. 3 right), so a value fits in
+//! 32 lanes; using a fixed inline array keeps the simulator's hot path
+//! allocation-free.
+
+use std::fmt;
+
+/// Maximum supported VLEN in bits (the paper's largest explored width).
+pub const MAX_VLEN_BITS: usize = 1024;
+pub const MAX_LANES: usize = MAX_VLEN_BITS / 32;
+
+/// A vector register value: `lanes` 32-bit words.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct VecVal {
+    words: [u32; MAX_LANES],
+    lanes: u8,
+}
+
+impl VecVal {
+    /// All-zero value with `lanes` lanes (lane count = VLEN/32).
+    pub fn zero(lanes: usize) -> Self {
+        assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
+        Self { words: [0; MAX_LANES], lanes: lanes as u8 }
+    }
+
+    pub fn from_words(words: &[u32]) -> Self {
+        let mut v = Self::zero(words.len());
+        v.words[..words.len()].copy_from_slice(words);
+        v
+    }
+
+    pub fn from_i32s(values: &[i32]) -> Self {
+        let mut v = Self::zero(values.len());
+        for (i, &x) in values.iter().enumerate() {
+            v.words[i] = x as u32;
+        }
+        v
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes as usize
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words[..self.lanes as usize]
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u32] {
+        &mut self.words[..self.lanes as usize]
+    }
+
+    pub fn to_i32s(&self) -> Vec<i32> {
+        self.words().iter().map(|&w| w as i32).collect()
+    }
+
+    /// Bytes (little-endian lane order) — the memory image of the value.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.lanes() * 4);
+        for w in self.words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len() % 4, 0);
+        let lanes = bytes.len() / 4;
+        let mut v = Self::zero(lanes);
+        for i in 0..lanes {
+            v.words[i] = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        v
+    }
+
+    /// Write this value's bytes into `buf` (must be exactly lanes*4 long).
+    pub fn write_bytes(&self, buf: &mut [u8]) {
+        assert_eq!(buf.len(), self.lanes() * 4);
+        for (i, w) in self.words().iter().enumerate() {
+            buf[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+    }
+}
+
+fn fmt_lanes(v: &VecVal, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "[")?;
+    for (i, w) in v.words().iter().enumerate() {
+        if i > 0 {
+            write!(f, ", ")?;
+        }
+        write!(f, "{}", *w as i32)?;
+    }
+    write!(f, "]")
+}
+
+impl fmt::Debug for VecVal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_lanes(self, f)
+    }
+}
+
+impl fmt::Display for VecVal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_lanes(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips() {
+        let v = VecVal::from_i32s(&[1, -2, 3, -4, 5, -6, 7, -8]);
+        assert_eq!(v.lanes(), 8);
+        assert_eq!(v.to_i32s(), vec![1, -2, 3, -4, 5, -6, 7, -8]);
+        let b = v.to_bytes();
+        assert_eq!(b.len(), 32);
+        assert_eq!(VecVal::from_bytes(&b), v);
+    }
+
+    #[test]
+    fn zero_lanes_bounds() {
+        let v = VecVal::zero(4);
+        assert_eq!(v.words(), &[0, 0, 0, 0]);
+        let v32 = VecVal::zero(32);
+        assert_eq!(v32.lanes(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn too_many_lanes_rejected() {
+        VecVal::zero(33);
+    }
+
+    #[test]
+    fn write_bytes_matches_to_bytes() {
+        let v = VecVal::from_words(&[0xdeadbeef, 0x01020304]);
+        let mut buf = [0u8; 8];
+        v.write_bytes(&mut buf);
+        assert_eq!(buf.to_vec(), v.to_bytes());
+    }
+
+    #[test]
+    fn display_is_signed() {
+        let v = VecVal::from_i32s(&[1, -1]);
+        assert_eq!(format!("{v}"), "[1, -1]");
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free utilities: deterministic PRNGs, statistics, and a
+//! minimal property-testing harness (external crates are unavailable in
+//! the offline build).
+
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+
+pub use prng::{SplitMix64, Xoshiro256};

@@ -1,0 +1,129 @@
+//! Shared helpers for the workload programs: buffer layout, host-side
+//! data initialisation and throughput accounting.
+
+use crate::core::{Core, RunResult, SimError};
+use crate::util::Xoshiro256;
+
+/// Base address for large workload buffers (above code + static data).
+pub const BUF_BASE: u32 = 0x0100_0000;
+
+/// Align `addr` up to `align` (power of two).
+pub const fn align_up(addr: u32, align: u32) -> u32 {
+    (addr + align - 1) & !(align - 1)
+}
+
+/// Layout `count` buffers of `bytes` each, LLC-block aligned (2 KiB holds
+/// for every explored LLC block size), starting at [`BUF_BASE`].
+pub fn layout_buffers(count: usize, bytes: usize) -> Vec<u32> {
+    let align = 64 * 1024; // generous: aligned for any explored LLC block
+    let mut addrs = Vec::with_capacity(count);
+    let mut a = BUF_BASE;
+    for _ in 0..count {
+        a = align_up(a, align);
+        addrs.push(a);
+        a += bytes as u32;
+    }
+    addrs
+}
+
+/// Fill DRAM at `addr` with `n` random i32 values; returns them.
+pub fn init_random_i32(core: &mut Core, addr: u32, n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let vals = rng.vec_i32(n);
+    let mut bytes = Vec::with_capacity(n * 4);
+    for v in &vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    core.mem.host_write(addr, &bytes);
+    vals
+}
+
+/// Fill DRAM at `addr` with `n` copies of an i32 value.
+pub fn init_const_i32(core: &mut Core, addr: u32, n: usize, value: i32) {
+    let bytes: Vec<u8> = value.to_le_bytes().repeat(n);
+    core.mem.host_write(addr, &bytes);
+}
+
+/// Read back `n` i32 values from DRAM (after `flush_all`).
+pub fn read_i32s(core: &Core, addr: u32, n: usize) -> Vec<i32> {
+    core.mem
+        .dram_slice(addr, n * 4)
+        .chunks(4)
+        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+        .collect()
+}
+
+/// Throughput of a run over `bytes_processed` at the core's clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub cycles: u64,
+    pub instret: u64,
+    pub bytes: u64,
+    pub fmax_mhz: f64,
+}
+
+impl Throughput {
+    pub fn from_run(core: &Core, run: &RunResult, bytes: u64) -> Self {
+        Self { cycles: run.cycles, instret: run.instret, bytes, fmax_mhz: core.cfg.fmax_mhz }
+    }
+
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes as f64 / self.cycles as f64
+    }
+
+    /// Bytes/second at the modelled clock (what Figs. 3–4 plot).
+    pub fn bytes_per_second(&self) -> f64 {
+        self.bytes_per_cycle() * self.fmax_mhz * 1e6
+    }
+
+    pub fn ipc(&self) -> f64 {
+        self.instret as f64 / self.cycles as f64
+    }
+}
+
+/// A watchdog budget generous enough for every scaled workload.
+pub const MAX_INSTRS: u64 = 20_000_000_000;
+
+/// Run the already-loaded core to completion and package the throughput.
+pub fn run_measuring(core: &mut Core, bytes: u64) -> Result<Throughput, SimError> {
+    let run = core.run(MAX_INSTRS)?;
+    Ok(Throughput::from_run(core, &run, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment() {
+        assert_eq!(align_up(0x1001, 0x1000), 0x2000);
+        assert_eq!(align_up(0x1000, 0x1000), 0x1000);
+    }
+
+    #[test]
+    fn buffer_layout_disjoint_and_aligned() {
+        let addrs = layout_buffers(3, 100_000);
+        for w in addrs.windows(2) {
+            assert!(w[1] >= w[0] + 100_000);
+        }
+        for a in addrs {
+            assert_eq!(a % (64 * 1024), 0);
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { cycles: 1000, instret: 500, bytes: 4600, fmax_mhz: 150.0 };
+        assert!((t.bytes_per_cycle() - 4.6).abs() < 1e-12);
+        assert!((t.bytes_per_second() - 4.6 * 150e6).abs() < 1.0);
+        assert!((t.ipc() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_init_roundtrip() {
+        let mut core = crate::core::Core::paper_default();
+        let vals = init_random_i32(&mut core, 0x10000, 64, 7);
+        let got = read_i32s(&core, 0x10000, 64);
+        assert_eq!(vals, got);
+    }
+}

@@ -1,0 +1,325 @@
+//! Table-2 CPU benchmarks: Dhrystone-like and CoreMark-like synthetic
+//! kernels.
+//!
+//! The paper reports 1.47 DMIPS/MHz and 2.26 CoreMark/MHz, noting the
+//! comparison is "indicative, not direct" (each row used a different
+//! FPGA + compiler). We cannot run GCC-compiled Dhrystone/CoreMark
+//! binaries (no compiler in the loop), so we do what the table needs:
+//! measure the core's **IPC** on kernels with the same instruction-class
+//! mix, then derive the scores with published instruction-count
+//! constants:
+//!
+//! - Dhrystone 2.1 on RV32IM at -O2 retires ≈ 330 instructions per
+//!   iteration ⇒ DMIPS/MHz = IPC × 10⁶ / (330 × 1757) ≈ IPC × 1.725.
+//! - CoreMark on RV32IM at -O2 retires ≈ 385 k instructions per
+//!   iteration ⇒ CoreMark/MHz ≈ IPC × 2.6.
+//!
+//! The kernels below are real programs with verified results, exercising
+//! the class mix of the originals (integer ALU, loads/stores, branches,
+//! calls; list walk + matrix multiply + state machine for CoreMark).
+
+use crate::asm::{Asm, Program};
+use crate::core::{Core, SimError};
+use crate::isa::reg::*;
+
+pub const DHRYSTONE_DERIVE: f64 = 1e6 / (330.0 * 1757.0);
+pub const COREMARK_DERIVE: f64 = 2.6;
+
+/// Build the Dhrystone-like kernel: `iters` iterations of a mix of
+/// record assignment (word copies), string-compare-style loops, small
+/// function calls and integer arithmetic. Returns (program, expected a0).
+pub fn build_dhrystone_like(iters: u32) -> (Program, u32) {
+    let mut a = Asm::new();
+    // Static data: two 16-word "records" and an 8-word "string".
+    let rec1 = a.words("rec1", &(0..16u32).map(|i| i * 3 + 1).collect::<Vec<_>>());
+    let rec2 = a.buffer("rec2", 64, 4);
+    let strbuf = a.words("str", &(0..8u32).map(|i| 0x4141_4141 + i).collect::<Vec<_>>());
+
+    let f_add3 = a.new_label("f_add3"); // a0 = a0*2 + 3
+    let f_mix = a.new_label("f_mix"); // a0 ^= a1; a0 += 7
+
+    a.li(S0, iters as i64); // loop counter
+    a.li(A0, 0); // checksum
+    a.la(S1, rec1);
+    a.la(S2, rec2);
+    a.la(S3, strbuf);
+
+    let iter_l = a.here("iter");
+    // (1) record assignment: copy 16 words rec1 -> rec2, sum them in.
+    for i in 0..16 {
+        a.lw(T0, i * 4, S1);
+        a.sw(T0, i * 4, S2);
+        a.add(A0, A0, T0);
+    }
+    // (2) string compare-ish loop: walk 8 words, branch on each.
+    {
+        let cmp_done = a.new_label("cmp_done");
+        let cmp_loop = a.new_label("cmp_loop");
+        a.li(T1, 0);
+        a.bind(cmp_loop);
+        a.slli(T2, T1, 2);
+        a.add(T2, T2, S3);
+        a.lw(T0, 0, T2);
+        a.andi(T3, T0, 1);
+        let even = a.new_label("even");
+        a.beqz(T3, even);
+        a.addi(A0, A0, 1);
+        a.bind(even);
+        a.addi(T1, T1, 1);
+        a.slti(T3, T1, 8);
+        a.bnez(T3, cmp_loop);
+        a.bind(cmp_done);
+    }
+    // (3) function calls.
+    a.call(f_add3);
+    a.li(A1, 0x55);
+    a.call(f_mix);
+    // (4) arithmetic mix with a multiply and shifts.
+    a.slli(T0, A0, 3);
+    a.srli(T1, A0, 5);
+    a.xor(A0, A0, T0);
+    a.add(A0, A0, T1);
+    a.li(T2, 2654435761u32 as i64);
+    a.mul(T3, A0, T2);
+    a.xor(A0, A0, T3);
+    // loop
+    a.addi(S0, S0, -1);
+    a.bnez(S0, iter_l);
+    a.halt();
+
+    a.bind(f_add3);
+    a.slli(A0, A0, 1);
+    a.addi(A0, A0, 3);
+    a.ret();
+    a.bind(f_mix);
+    a.xor(A0, A0, A1);
+    a.addi(A0, A0, 7);
+    a.ret();
+
+    // Host-side model of the same computation for verification.
+    let rec1_vals: Vec<u32> = (0..16u32).map(|i| i * 3 + 1).collect();
+    let str_vals: Vec<u32> = (0..8u32).map(|i| 0x4141_4141 + i).collect();
+    let mut chk: u32 = 0;
+    for _ in 0..iters {
+        for &v in &rec1_vals {
+            chk = chk.wrapping_add(v);
+        }
+        for &v in &str_vals {
+            if v & 1 == 1 {
+                chk = chk.wrapping_add(1);
+            }
+        }
+        chk = chk.wrapping_mul(2).wrapping_add(3);
+        chk = (chk ^ 0x55).wrapping_add(7);
+        let t0 = chk << 3;
+        let t1 = chk >> 5;
+        chk ^= t0;
+        chk = chk.wrapping_add(t1);
+        let t3 = chk.wrapping_mul(2654435761);
+        chk ^= t3;
+    }
+    (a.assemble().expect("dhrystone-like assembles"), chk)
+}
+
+/// Build the CoreMark-like kernel: linked-list walk + 4×4 integer matrix
+/// multiply + CRC-style state machine per iteration. Returns
+/// (program, expected a0).
+pub fn build_coremark_like(iters: u32) -> (Program, u32) {
+    let mut a = Asm::new();
+    // Linked list: 16 nodes of (value, next_offset) laid out shuffled.
+    let order: [u32; 16] = [3, 7, 1, 12, 0, 9, 14, 5, 2, 11, 8, 15, 6, 13, 4, 10];
+    let mut nodes = vec![0u32; 32];
+    for i in 0..16 {
+        let next = if i + 1 < 16 { order[i + 1] } else { u32::MAX };
+        nodes[(order[i] * 2) as usize] = order[i] * 17 + 5; // value
+        nodes[(order[i] * 2 + 1) as usize] = next; // next index (MAX = end)
+    }
+    let list = a.words("list", &nodes);
+    // Matrices: 4x4 A and B.
+    let ma: Vec<u32> = (0..16u32).map(|i| i + 1).collect();
+    let mb: Vec<u32> = (0..16u32).map(|i| (i * 7 + 3) % 13).collect();
+    let mat_a = a.words("mat_a", &ma);
+    let mat_b = a.words("mat_b", &mb);
+    let mat_c = a.buffer("mat_c", 64, 4);
+
+    a.li(S0, iters as i64);
+    a.li(A0, 0); // checksum
+    a.la(S1, list);
+    a.la(S2, mat_a);
+    a.la(S3, mat_b);
+    a.la(S4, mat_c);
+
+    let iter_l = a.here("iter");
+    // (1) list walk: follow next indices, sum values.
+    {
+        let walk = a.new_label("walk");
+        let walk_done = a.new_label("walk_done");
+        a.li(T0, 3); // head index (order[0])
+        a.bind(walk);
+        a.slli(T1, T0, 3); // node offset = idx * 8
+        a.add(T1, T1, S1);
+        a.lw(T2, 0, T1); // value
+        a.add(A0, A0, T2);
+        a.lw(T0, 4, T1); // next
+        a.li(T3, -1);
+        a.bne(T0, T3, walk);
+        a.bind(walk_done);
+    }
+    // (2) 4x4 matrix multiply C = A*B, sum diagonal into checksum.
+    for i in 0..4i32 {
+        for j in 0..4i32 {
+            a.li(T4, 0);
+            for k in 0..4i32 {
+                a.lw(T0, (i * 4 + k) * 4, S2);
+                a.lw(T1, (k * 4 + j) * 4, S3);
+                a.mul(T2, T0, T1);
+                a.add(T4, T4, T2);
+            }
+            a.sw(T4, (i * 4 + j) * 4, S4);
+            if i == j {
+                a.add(A0, A0, T4);
+            }
+        }
+    }
+    // (3) state machine: 16 steps of a branchy CRC-ish update.
+    {
+        let sm = a.new_label("sm");
+        a.li(T0, 16);
+        a.bind(sm);
+        a.andi(T1, A0, 3);
+        let s1 = a.new_label("s1");
+        let s2 = a.new_label("s2");
+        let s_end = a.new_label("s_end");
+        a.li(T2, 1);
+        a.beq(T1, T2, s1);
+        a.li(T2, 2);
+        a.beq(T1, T2, s2);
+        // state 0/3: shift-xor
+        a.srli(T3, A0, 1);
+        a.xor(A0, A0, T3);
+        a.addi(A0, A0, 13);
+        a.j(s_end);
+        a.bind(s1);
+        a.slli(T3, A0, 2);
+        a.add(A0, A0, T3);
+        a.j(s_end);
+        a.bind(s2);
+        a.xori(A0, A0, 0x2D);
+        a.bind(s_end);
+        a.addi(T0, T0, -1);
+        a.bnez(T0, sm);
+    }
+    a.addi(S0, S0, -1);
+    a.bnez(S0, iter_l);
+    a.halt();
+
+    // Host model.
+    let mut chk: u32 = 0;
+    for _ in 0..iters {
+        let mut idx = 3u32;
+        loop {
+            chk = chk.wrapping_add(nodes[(idx * 2) as usize]);
+            idx = nodes[(idx * 2 + 1) as usize];
+            if idx == u32::MAX {
+                break;
+            }
+        }
+        for i in 0..4usize {
+            for j in 0..4usize {
+                let mut acc = 0u32;
+                for k in 0..4usize {
+                    acc = acc.wrapping_add(ma[i * 4 + k].wrapping_mul(mb[k * 4 + j]));
+                }
+                if i == j {
+                    chk = chk.wrapping_add(acc);
+                }
+            }
+        }
+        for _ in 0..16 {
+            match chk & 3 {
+                1 => chk = chk.wrapping_add(chk << 2),
+                2 => chk ^= 0x2D,
+                _ => {
+                    chk = (chk ^ (chk >> 1)).wrapping_add(13);
+                }
+            }
+        }
+    }
+    (a.assemble().expect("coremark-like assembles"), chk)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CpuBenchResult {
+    pub ipc: f64,
+    pub cycles: u64,
+    pub instret: u64,
+    pub verified: bool,
+    /// DMIPS/MHz or CoreMark/MHz derived per module docs.
+    pub derived_score: f64,
+}
+
+pub fn run_dhrystone_like(core: &mut Core, iters: u32) -> Result<CpuBenchResult, SimError> {
+    let (prog, expect) = build_dhrystone_like(iters);
+    core.load(&prog);
+    let r = core.run(1_000_000_000)?;
+    Ok(CpuBenchResult {
+        ipc: r.ipc(),
+        cycles: r.cycles,
+        instret: r.instret,
+        verified: core.reg(A0) == expect,
+        derived_score: r.ipc() * DHRYSTONE_DERIVE,
+    })
+}
+
+pub fn run_coremark_like(core: &mut Core, iters: u32) -> Result<CpuBenchResult, SimError> {
+    let (prog, expect) = build_coremark_like(iters);
+    core.load(&prog);
+    let r = core.run(1_000_000_000)?;
+    Ok(CpuBenchResult {
+        ipc: r.ipc(),
+        cycles: r.cycles,
+        instret: r.instret,
+        verified: core.reg(A0) == expect,
+        derived_score: r.ipc() * COREMARK_DERIVE,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dhrystone_like_verifies_and_scores() {
+        let mut core = Core::paper_default();
+        let r = run_dhrystone_like(&mut core, 200).unwrap();
+        assert!(r.verified, "checksum mismatch");
+        // Paper: 1.47 DMIPS/MHz; band 1.1–2.0.
+        assert!(
+            (1.1..2.0).contains(&r.derived_score),
+            "DMIPS/MHz {:.2} (IPC {:.2})",
+            r.derived_score,
+            r.ipc
+        );
+    }
+
+    #[test]
+    fn coremark_like_verifies_and_scores() {
+        let mut core = Core::paper_default();
+        let r = run_coremark_like(&mut core, 100).unwrap();
+        assert!(r.verified, "checksum mismatch");
+        // Paper: 2.26 CoreMark/MHz; band 1.7–3.0.
+        assert!(
+            (1.7..3.0).contains(&r.derived_score),
+            "CoreMark/MHz {:.2} (IPC {:.2})",
+            r.derived_score,
+            r.ipc
+        );
+    }
+
+    #[test]
+    fn ipc_is_high_but_below_one() {
+        let mut core = Core::paper_default();
+        let r = run_dhrystone_like(&mut core, 100).unwrap();
+        assert!(r.ipc > 0.6 && r.ipc <= 1.0, "IPC {}", r.ipc);
+    }
+}

@@ -1,0 +1,158 @@
+//! Parallel selection (filter) — the database operation §4.3.2 motivates
+//! ("prefix sum ... has numerous applications in databases, including in
+//! radix hash joins and parallel filtering" [48]).
+//!
+//! Task: given `n` i32 values and a threshold, compact the values
+//! `< threshold` densely into an output array (predicate selectivity is
+//! data-dependent).
+//!
+//! - **scalar**: the obvious read–test–append loop.
+//! - **vector**: a single pass over the data with the `c1.vfilt`
+//!   compaction instruction (an exploration instruction this repo adds
+//!   in the spirit of the paper — the I′ type's 6 operands carry data
+//!   vector in, packed vector + count out): load a vector, compact the
+//!   selected lanes, store the packed vector at the running output
+//!   cursor (the next store overlaps the garbage tail), advance the
+//!   cursor by the count. This is the SIMD selection kernel of Zhang &
+//!   Ross [48] as *one instruction per vector*.
+
+use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use crate::asm::{Asm, Program};
+use crate::core::{Core, SimError};
+use crate::isa::reg::*;
+
+/// Scalar filter: out-append loop. Leaves the count in `a6`.
+pub fn build_scalar(src: u32, dst: u32, n: usize, threshold: i32) -> Program {
+    let mut a = Asm::new();
+    a.li(A0, src as i64);
+    a.li(A1, dst as i64);
+    a.li(A3, (src as usize + n * 4) as i64);
+    a.li(A4, threshold as i64);
+    a.li(A6, 0); // count
+    let l = a.here("loop");
+    let skip = a.new_label("skip");
+    a.lw(T0, 0, A0);
+    a.addi(A0, A0, 4);
+    a.bge(T0, A4, skip);
+    a.sw(T0, 0, A1);
+    a.addi(A1, A1, 4);
+    a.addi(A6, A6, 1);
+    a.bind(skip);
+    a.bne(A0, A3, l);
+    a.halt();
+    a.assemble().expect("scalar filter assembles")
+}
+
+/// Vector filter: one `c1.vfilt` per vector, packed stores at a running
+/// cursor. The destination buffer needs one vector of slack beyond the
+/// selected count (each packed store writes a full VLEN vector; the
+/// garbage tail is overwritten by the next store).
+pub fn build_vector(src: u32, dst: u32, n: usize, threshold: i32, vlen_bits: usize) -> Program {
+    let step = (vlen_bits / 8) as i32;
+    let lanes = vlen_bits / 32;
+    assert_eq!(n % lanes, 0);
+    let mut a = Asm::new();
+    a.li(A0, src as i64);
+    a.li(A1, dst as i64);
+    a.li(A3, (n * 4) as i64);
+    a.li(A4, threshold as i64);
+    a.li(T4, 0); // input byte offset
+    a.li(A5, 0); // output byte cursor
+    a.li(A6, 0); // total selected
+    let l = a.here("loop");
+    a.lv(V1, A0, T4);
+    a.vfilt(T0, V2, V1, A4); // pack lanes < threshold; count in t0
+    a.sv(V2, A1, A5); // store packed vector (tail garbage OK)
+    a.slli(T1, T0, 2);
+    a.add(A5, A5, T1);
+    a.add(A6, A6, T0);
+    a.addi(T4, T4, step);
+    a.bne(T4, A3, l);
+    a.halt();
+    a.assemble().expect("vector filter assembles")
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FilterResult {
+    pub throughput: Throughput,
+    pub verified: bool,
+    pub selected: u32,
+    pub cycles_per_elem: f64,
+}
+
+pub fn run(core: &mut Core, n: usize, vector: bool) -> Result<FilterResult, SimError> {
+    let threshold = 0i32; // ~50% selectivity on uniform random i32
+    let addrs = layout_buffers(2, n * 4 + 128);
+    let (src, dst) = (addrs[0], addrs[1]);
+    let prog = if vector {
+        build_vector(src, dst, n, threshold, core.cfg.vlen_bits)
+    } else {
+        build_scalar(src, dst, n, threshold)
+    };
+    core.load(&prog);
+    let input = init_random_i32(core, src, n, 0xF117E4);
+    let throughput = run_measuring(core, (n * 4) as u64)?;
+    core.mem.flush_all();
+    let expect: Vec<i32> = input.iter().copied().filter(|&x| x < threshold).collect();
+    let got = read_i32s(core, dst, expect.len());
+    let count = core.reg(A6);
+    let count_ok = !vector || count as usize == expect.len();
+    Ok(FilterResult {
+        throughput,
+        verified: got == expect && count_ok,
+        selected: count,
+        cycles_per_elem: throughput.cycles as f64 / n as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_filter_is_correct() {
+        let mut core = Core::paper_default();
+        let r = run(&mut core, 4096, false).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn vector_filter_is_correct_and_counts() {
+        let mut core = Core::paper_default();
+        let r = run(&mut core, 4096, true).unwrap();
+        assert!(r.verified);
+        assert!(r.selected > 1000 && r.selected < 3000, "≈50% selectivity, got {}", r.selected);
+    }
+
+    #[test]
+    fn vector_filter_other_vlens() {
+        for vlen in [128usize, 512] {
+            let mut core = Core::for_vlen(vlen);
+            let r = run(&mut core, 4096, true).unwrap();
+            assert!(r.verified, "vlen {vlen}");
+        }
+    }
+
+    #[test]
+    fn vfilt_beats_scalar_selection() {
+        // The vector version does strictly more *work* (flags pass +
+        // scatter pass) but the scan dependency chain runs on the fabric;
+        // it must not be slower than ~2× scalar, and the scan itself
+        // (measured via the prefix workload) is >3× faster — the
+        // end-to-end win grows with selectivity-aware refinements the
+        // framework enables.
+        let n = 32 * 1024;
+        let mut c1 = Core::paper_default();
+        let s = run(&mut c1, n, false).unwrap();
+        let mut c2 = Core::paper_default();
+        let v = run(&mut c2, n, true).unwrap();
+        assert!(s.verified && v.verified);
+        let speedup = s.cycles_per_elem / v.cycles_per_elem;
+        assert!(
+            speedup > 1.8,
+            "vfilt should win clearly: vector {:.1} c/e vs scalar {:.1} c/e ({speedup:.1}x)",
+            v.cycles_per_elem,
+            s.cycles_per_elem
+        );
+    }
+}

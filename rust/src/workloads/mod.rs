@@ -1,0 +1,14 @@
+//! Workload programs of the paper's evaluation, authored through the
+//! builder assembler exactly as the paper authored them through inline
+//! assembly: memcpy (§4.1), STREAM (§4.2), the Table-2 CPU benchmarks,
+//! sorting (§4.3.1) and prefix sum (§4.3.2).
+
+pub mod common;
+pub mod cpubench;
+pub mod filter;
+pub mod memcpy;
+pub mod prefix;
+pub mod sort;
+pub mod stream;
+
+pub use common::Throughput;

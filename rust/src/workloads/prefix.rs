@@ -1,0 +1,121 @@
+//! Prefix sum (§4.3.2): serial scalar baseline vs the `c3_prefix`
+//! custom instruction (Hillis-Steele network + carry accumulator, Fig. 7).
+
+use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use crate::asm::{Asm, Program};
+use crate::core::{Core, SimError};
+use crate::isa::reg::*;
+
+/// Serial prefix sum: out[i] = out[i-1] + in[i] — "trivial and easy for
+/// compiling efficient code" (§4.3.2). The GCC -O2 shape: a plain
+/// pointer-walking loop with the load scheduled ahead of its use (the
+/// pointer bumps fill the load-use slots).
+pub fn build_serial(src: u32, dst: u32, n: usize) -> Program {
+    let mut a = Asm::new();
+    a.li(A0, src as i64);
+    a.li(A1, dst as i64);
+    a.li(A3, (src as usize + n * 4) as i64); // end of src
+    a.li(T4, 0); // running sum
+    let l = a.here("loop");
+    a.lw(T0, 0, A0);
+    a.addi(A0, A0, 4); // scheduled into the load-use slots
+    a.addi(A1, A1, 4);
+    a.add(T4, T4, T0);
+    a.sw(T4, -4, A1);
+    a.bne(A0, A3, l);
+    a.halt();
+    a.assemble().expect("serial prefix assembles")
+}
+
+/// Vector prefix sum: one `c3.prefix` per vector, the unit's carry
+/// accumulator chaining batches (so the loop itself has no loop-carried
+/// scalar dependency — the paper's "pipelined and non-blocking" scan).
+pub fn build_vector(src: u32, dst: u32, n: usize, vlen_bits: usize) -> Program {
+    let step = (vlen_bits / 8) as i32;
+    assert_eq!((n * 4) % step as usize, 0);
+    let mut a = Asm::new();
+    a.li(A0, src as i64);
+    a.li(A1, dst as i64);
+    a.li(A2, 0);
+    a.li(A3, (n * 4) as i64);
+    a.prefix_reset();
+    let l = a.here("loop");
+    a.lv(V1, A0, A2);
+    a.prefix(V2, V1);
+    a.sv(V2, A1, A2);
+    a.addi(A2, A2, step);
+    a.bne(A2, A3, l);
+    a.halt();
+    a.assemble().expect("vector prefix assembles")
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixResult {
+    pub throughput: Throughput,
+    pub verified: bool,
+    pub cycles_per_elem: f64,
+}
+
+pub fn run(core: &mut Core, n: usize, vector: bool) -> Result<PrefixResult, SimError> {
+    let addrs = layout_buffers(2, n * 4);
+    let (src, dst) = (addrs[0], addrs[1]);
+    let prog = if vector {
+        build_vector(src, dst, n, core.cfg.vlen_bits)
+    } else {
+        build_serial(src, dst, n)
+    };
+    core.load(&prog);
+    let input = init_random_i32(core, src, n, 0xACC);
+    let throughput = run_measuring(core, (n * 4) as u64)?;
+    core.mem.flush_all();
+    let got = read_i32s(core, dst, n);
+    let mut acc = 0i32;
+    let verified = input.iter().zip(&got).all(|(&x, &y)| {
+        acc = acc.wrapping_add(x);
+        acc == y
+    });
+    Ok(PrefixResult {
+        throughput,
+        verified,
+        cycles_per_elem: throughput.cycles as f64 / n as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_prefix_is_correct() {
+        let mut core = Core::paper_default();
+        let r = run(&mut core, 1024, false).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn vector_prefix_is_correct() {
+        for vlen in [128usize, 256, 512] {
+            let mut core = Core::for_vlen(vlen);
+            let r = run(&mut core, 4096, true).unwrap();
+            assert!(r.verified, "vlen={vlen}");
+        }
+    }
+
+    #[test]
+    fn speedup_in_paper_band() {
+        // Paper: 4.1× over the serial softcore version (64 MiB input).
+        let n = 64 * 1024;
+        let mut c1 = Core::paper_default();
+        let s = run(&mut c1, n, false).unwrap();
+        let mut c2 = Core::paper_default();
+        let v = run(&mut c2, n, true).unwrap();
+        assert!(s.verified && v.verified);
+        let speedup = s.cycles_per_elem / v.cycles_per_elem;
+        assert!(
+            (2.5..7.0).contains(&speedup),
+            "prefix speedup {speedup:.1}× outside band (serial {:.2} c/e, vector {:.2} c/e)",
+            s.cycles_per_elem,
+            v.cycles_per_elem
+        );
+    }
+}

@@ -1,0 +1,360 @@
+//! Sorting (§4.3.1): the paper's flagship custom-SIMD use case.
+//!
+//! - **Baseline**: `qsort()` from C's standard library, modelled as an
+//!   iterative Hoare quicksort whose every comparison goes through an
+//!   indirect comparator call (`jalr` + compare + `ret`) — the defining
+//!   cost of the libc interface.
+//! - **Vector mergesort**: the paper's algorithm — first sort 2·L-element
+//!   chunks with two `c2_sort` calls and one `c1_merge` (the Fig. 6
+//!   loop), then log₂(N/2L) merge passes where each step merges two
+//!   sorted vectors with `c1_merge`, retires the low half and refills
+//!   from whichever run has the smaller head (the intrinsics merge
+//!   algorithm of Chhugani et al. [8], in hardware).
+//!
+//! Input sizes must be a power of two ≥ 4 lanes (the paper's 64 MiB
+//! input is 2²⁴ elements).
+
+use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use crate::asm::{Asm, Program};
+use crate::core::{Core, SimError};
+use crate::isa::reg::*;
+
+/// Build the qsort() model: sort `n` i32 values at `base` in place.
+///
+/// Faithful to the libc interface the paper benchmarks against: the
+/// comparator receives **pointers** (`int cmp(const void *a, const void
+/// *b)`), so every comparison pays an indirect call, two pointer loads
+/// inside the comparator and the call/return overhead — the defining
+/// cost of `qsort()` vs an inlined sort. The pivot is spilled to a stack
+/// slot so its address can be passed, as element comparisons in glibc's
+/// quicksort compare against an element in memory.
+pub fn build_qsort(base: u32, n: usize) -> Program {
+    assert!(n >= 2);
+    let mut a = Asm::new();
+    let outer = a.new_label("outer");
+    let done = a.new_label("done");
+    let skip = a.new_label("skip");
+    let part_loop = a.new_label("part_loop");
+    let inc_i = a.new_label("inc_i");
+    let dec_j = a.new_label("dec_j");
+    let split = a.new_label("split");
+    let cmp = a.new_label("cmp");
+
+    // Stack discipline: s11 holds the empty-stack sentinel sp value.
+    // s10 holds the address of the spilled pivot (a fixed stack slot).
+    a.mv(S11, SP);
+    a.addi(SP, SP, -16);
+    a.mv(S10, SP); // &pivot
+    // s7 = comparator function pointer (qsort's callback argument).
+    let cmp_ref = cmp;
+    a.la(S7, cmp_ref);
+    // push (lo = base, hi = base + 4*(n-1))
+    a.li(T0, base as i64);
+    a.li(T1, (base as i64) + 4 * (n as i64 - 1));
+    a.addi(SP, SP, -8);
+    a.sw(T0, 0, SP);
+    a.sw(T1, 4, SP);
+
+    a.bind(outer);
+    a.beq(SP, S11, done);
+    a.lw(S0, 0, SP); // lo
+    a.lw(S1, 4, SP); // hi
+    a.addi(SP, SP, 8);
+    a.bgeu(S0, S1, skip); // ranges of size <= 1 are sorted
+
+    // pivot = *(lo + (((hi - lo) / 8) * 4))  — middle element, spilled
+    // to the stack slot so comparisons can take its address.
+    a.sub(T0, S1, S0);
+    a.srli(T0, T0, 3);
+    a.slli(T0, T0, 2);
+    a.add(T0, T0, S0);
+    a.lw(T1, 0, T0);
+    a.sw(T1, 0, S10);
+    a.addi(S2, S0, -4); // i = lo - 4
+    a.addi(S3, S1, 4); // j = hi + 4
+
+    a.bind(part_loop);
+    a.bind(inc_i);
+    a.addi(S2, S2, 4);
+    a.mv(A0, S2); // &arr[i]
+    a.mv(A1, S10); // &pivot
+    a.jalr(RA, S7, 0); // indirect call through the comparator pointer
+    a.bltz(A0, inc_i);
+    a.bind(dec_j);
+    a.addi(S3, S3, -4);
+    a.mv(A0, S3);
+    a.mv(A1, S10);
+    a.jalr(RA, S7, 0);
+    a.bgtz(A0, dec_j);
+    a.bgeu(S2, S3, split);
+    // swap *i, *j
+    a.lw(T0, 0, S2);
+    a.lw(T1, 0, S3);
+    a.sw(T1, 0, S2);
+    a.sw(T0, 0, S3);
+    a.j(part_loop);
+
+    a.bind(split);
+    // push (lo, j) and (j+4, hi)
+    a.addi(SP, SP, -16);
+    a.sw(S0, 0, SP);
+    a.sw(S3, 4, SP);
+    a.addi(T0, S3, 4);
+    a.sw(T0, 8, SP);
+    a.sw(S1, 12, SP);
+    a.bind(skip);
+    a.j(outer);
+
+    a.bind(done);
+    a.halt();
+
+    // int cmp(const void *a, const void *b) {
+    //   int x = *(int*)a, y = *(int*)b; return (x > y) - (x < y);
+    // }
+    a.bind(cmp);
+    a.lw(T2, 0, A0);
+    a.lw(T3, 0, A1);
+    a.slt(T0, T2, T3);
+    a.slt(T1, T3, T2);
+    a.sub(A0, T1, T0);
+    a.ret();
+
+    a.assemble().expect("qsort assembles")
+}
+
+/// Metadata of an assembled vector mergesort.
+pub struct MergesortProgram {
+    pub program: Program,
+    /// Where the sorted output lands (src or scratch, by pass parity).
+    pub result_base: u32,
+    pub passes: u32,
+}
+
+/// Build the vector mergesort: sort `n` i32 values at `src` using
+/// `scratch` as the ping-pong buffer.
+pub fn build_vector_mergesort(
+    src: u32,
+    scratch: u32,
+    n: usize,
+    vlen_bits: usize,
+) -> MergesortProgram {
+    let lanes = vlen_bits / 32;
+    let vb = (vlen_bits / 8) as i32; // vector bytes
+    assert!(n.is_power_of_two() && n >= 4 * lanes, "n must be a power of two >= 4*lanes");
+    let total_bytes = (n * 4) as i64;
+    let chunk_bytes = 2 * vb; // sort-in-chunks granule (2 vectors)
+    let passes = (n / (2 * lanes)).trailing_zeros();
+
+    let mut a = Asm::new();
+
+    // ---- phase 1: sort in chunks of 2 vectors (Fig. 6 loop) ------------
+    a.li(S8, src as i64); // current source base
+    a.li(S9, scratch as i64); // current destination base
+    a.li(A2, 0); // offset
+    a.li(A3, total_bytes);
+    let chunk = a.here("chunk_loop");
+    a.lv(V1, S8, A2);
+    a.addi(T0, A2, vb);
+    a.lv(V2, S8, T0);
+    a.sort8(V1, V1);
+    a.sort8(V2, V2);
+    a.merge(V1, V2, V1, V2);
+    a.sv(V1, S8, A2);
+    a.sv(V2, S8, T0);
+    a.addi(A2, A2, chunk_bytes);
+    a.bne(A2, A3, chunk);
+
+    // ---- phase 2: merge passes ------------------------------------------
+    // s10 = run length in bytes, doubling each pass.
+    a.li(S10, chunk_bytes as i64);
+    let pass_loop = a.new_label("pass_loop");
+    let pass_done = a.new_label("pass_done");
+    a.bind(pass_loop);
+    a.bge(S10, A3, pass_done); // run length == total → sorted
+
+    // One pass: for each pair offset p, merge [p, p+R) with [p+R, p+2R).
+    a.li(A2, 0); // p
+    let pair_loop = a.here("pair_loop");
+    {
+        // idxA = p, endA = p+R, idxB = p+R, endB = p+2R, out = p
+        a.mv(S0, A2);
+        a.add(S1, A2, S10);
+        a.mv(S2, S1);
+        a.add(S3, S1, S10);
+        a.mv(S4, A2);
+
+        let mloop = a.new_label("mloop");
+        let choose = a.new_label("choose");
+        let load_a = a.new_label("load_a");
+        let load_b = a.new_label("load_b");
+        let a_empty = a.new_label("a_empty");
+        let flush = a.new_label("flush");
+        let pair_next = a.new_label("pair_next");
+
+        // Pre-load the first vector of each run.
+        a.lv(V1, S8, S0);
+        a.addi(S0, S0, vb);
+        a.lv(V2, S8, S2);
+        a.addi(S2, S2, vb);
+
+        a.bind(mloop);
+        a.merge(V1, V2, V1, V2);
+        a.sv(V1, S9, S4);
+        a.addi(S4, S4, vb);
+        a.j(choose);
+
+        a.bind(choose);
+        a.bgeu(S0, S1, a_empty);
+        a.bgeu(S2, S3, load_a); // B exhausted → take A
+        // Compare run heads (signed): take the smaller.
+        a.add(T0, S8, S0);
+        a.lw(T1, 0, T0);
+        a.add(T0, S8, S2);
+        a.lw(T2, 0, T0);
+        a.blt(T2, T1, load_b);
+        a.bind(load_a);
+        a.lv(V1, S8, S0);
+        a.addi(S0, S0, vb);
+        a.j(mloop);
+        a.bind(a_empty);
+        a.bgeu(S2, S3, flush); // both exhausted
+        a.bind(load_b);
+        a.lv(V1, S8, S2);
+        a.addi(S2, S2, vb);
+        a.j(mloop);
+
+        a.bind(flush);
+        a.sv(V2, S9, S4);
+        a.addi(S4, S4, vb);
+
+        a.bind(pair_next);
+        a.slli(T0, S10, 1);
+        a.add(A2, A2, T0);
+        a.bltu(A2, A3, pair_loop);
+    }
+
+    // Swap src/dst bases, double the run length.
+    a.mv(T0, S8);
+    a.mv(S8, S9);
+    a.mv(S9, T0);
+    a.slli(S10, S10, 1);
+    a.j(pass_loop);
+
+    a.bind(pass_done);
+    a.halt();
+
+    let result_base = if passes % 2 == 0 { src } else { scratch };
+    MergesortProgram { program: a.assemble().expect("mergesort assembles"), result_base, passes }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SortResult {
+    pub throughput: Throughput,
+    pub verified: bool,
+    /// Cycles per element (the headline unit for speedup ratios).
+    pub cycles_per_elem: f64,
+}
+
+/// Run the qsort() baseline over `n` random elements.
+pub fn run_qsort(core: &mut Core, n: usize) -> Result<SortResult, SimError> {
+    let addrs = layout_buffers(1, n * 4);
+    let prog = build_qsort(addrs[0], n);
+    core.load(&prog);
+    let mut expect = init_random_i32(core, addrs[0], n, 0xBEEF);
+    expect.sort_unstable();
+    let throughput = run_measuring(core, (n * 4) as u64)?;
+    core.mem.flush_all();
+    let got = read_i32s(core, addrs[0], n);
+    Ok(SortResult {
+        throughput,
+        verified: got == expect,
+        cycles_per_elem: throughput.cycles as f64 / n as f64,
+    })
+}
+
+/// Run the vector mergesort over `n` random elements.
+pub fn run_vector_mergesort(core: &mut Core, n: usize) -> Result<SortResult, SimError> {
+    let addrs = layout_buffers(2, n * 4);
+    let ms = build_vector_mergesort(addrs[0], addrs[1], n, core.cfg.vlen_bits);
+    core.load(&ms.program);
+    let mut expect = init_random_i32(core, addrs[0], n, 0xBEEF);
+    expect.sort_unstable();
+    let throughput = run_measuring(core, (n * 4) as u64)?;
+    core.mem.flush_all();
+    let got = read_i32s(core, ms.result_base, n);
+    Ok(SortResult {
+        throughput,
+        verified: got == expect,
+        cycles_per_elem: throughput.cycles as f64 / n as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qsort_sorts_small() {
+        let mut core = Core::paper_default();
+        let r = run_qsort(&mut core, 256).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn qsort_sorts_with_duplicates() {
+        // init_random_i32 over a small range would need custom init; use
+        // n large enough that the 32-bit random values contain runs after
+        // sorting anyway, plus check a constant array via direct build.
+        let mut core = Core::paper_default();
+        let addrs = layout_buffers(1, 64 * 4);
+        let prog = build_qsort(addrs[0], 64);
+        core.load(&prog);
+        let vals = vec![5i32; 64];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        core.mem.host_write(addrs[0], &bytes);
+        core.run(10_000_000).unwrap();
+        core.mem.flush_all();
+        assert_eq!(read_i32s(&core, addrs[0], 64), vals);
+    }
+
+    #[test]
+    fn vector_mergesort_sorts() {
+        let mut core = Core::paper_default();
+        for n in [32usize, 64, 256, 1024] {
+            let r = run_vector_mergesort(&mut core, n).unwrap();
+            assert!(r.verified, "n={n}");
+        }
+    }
+
+    #[test]
+    fn vector_mergesort_all_vlens() {
+        for vlen in [128usize, 256, 512, 1024] {
+            let mut core = Core::for_vlen(vlen);
+            let r = run_vector_mergesort(&mut core, 1024).unwrap();
+            assert!(r.verified, "vlen={vlen}");
+        }
+    }
+
+    #[test]
+    fn speedup_in_paper_band() {
+        // Paper: 12.1× over softcore qsort (64 MiB). At the scaled default
+        // size the band is wider but must still be near an order of
+        // magnitude.
+        let n = 16 * 1024;
+        let mut c1 = Core::paper_default();
+        let q = run_qsort(&mut c1, n).unwrap();
+        let mut c2 = Core::paper_default();
+        let m = run_vector_mergesort(&mut c2, n).unwrap();
+        assert!(q.verified && m.verified);
+        let speedup = q.cycles_per_elem / m.cycles_per_elem;
+        assert!(
+            (6.0..20.0).contains(&speedup),
+            "sort speedup {speedup:.1}× outside acceptance band (q {:.1} c/e, m {:.1} c/e)",
+            q.cycles_per_elem,
+            m.cycles_per_elem
+        );
+    }
+}

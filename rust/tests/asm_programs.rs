@@ -1,0 +1,284 @@
+//! A battery of small verified programs run end-to-end through the text
+//! assembler and the softcore — classic kernels exercising instruction
+//! semantics the unit tests don't reach in combination (bit tricks,
+//! nested loops, tables, mixed signed/unsigned arithmetic).
+
+use simdsoftcore::asm::assemble_text;
+use simdsoftcore::core::Core;
+use simdsoftcore::isa::reg::*;
+
+fn run(src: &str) -> Core {
+    let prog = assemble_text(src).expect("assembles");
+    let mut core = Core::paper_default();
+    core.load(&prog);
+    core.run(50_000_000).expect("runs to completion");
+    core
+}
+
+#[test]
+fn popcount_via_shifts() {
+    let c = run(r#"
+        main:
+            li   a0, 0xDEADBEEF
+            li   a1, 0          # count
+        loop:
+            beqz a0, done
+            andi t0, a0, 1
+            add  a1, a1, t0
+            srli a0, a0, 1
+            j    loop
+        done:
+            ecall
+    "#);
+    assert_eq!(c.reg(A1), 0xDEADBEEFu32.count_ones());
+}
+
+#[test]
+fn gcd_euclid() {
+    let c = run(r#"
+        main:
+            li a0, 1071
+            li a1, 462
+        loop:
+            beqz a1, done
+            remu t0, a0, a1
+            mv   a0, a1
+            mv   a1, t0
+            j    loop
+        done:
+            ecall
+    "#);
+    assert_eq!(c.reg(A0), 21);
+}
+
+#[test]
+fn collatz_steps() {
+    let c = run(r#"
+        main:
+            li a0, 27
+            li a1, 0
+        loop:
+            li   t0, 1
+            beq  a0, t0, done
+            andi t1, a0, 1
+            bnez t1, odd
+            srli a0, a0, 1
+            j    next
+        odd:
+            slli t2, a0, 1
+            add  a0, a0, t2     # 3n
+            addi a0, a0, 1      # 3n + 1
+        next:
+            addi a1, a1, 1
+            j    loop
+        done:
+            ecall
+    "#);
+    assert_eq!(c.reg(A1), 111, "Collatz(27) takes 111 steps");
+}
+
+#[test]
+fn matrix_3x3_multiply() {
+    let c = run(r#"
+        .data
+        a: .word 1, 2, 3, 4, 5, 6, 7, 8, 9
+        b: .word 9, 8, 7, 6, 5, 4, 3, 2, 1
+        c: .space 36
+        .text
+        main:
+            la s0, a
+            la s1, b
+            la s2, c
+            li s3, 0            # i
+        iloop:
+            li s4, 0            # j
+        jloop:
+            li t4, 0            # acc
+            li s5, 0            # k
+        kloop:
+            # a[i*3+k]
+            li  t0, 3
+            mul t1, s3, t0
+            add t1, t1, s5
+            slli t1, t1, 2
+            add t1, t1, s0
+            lw  t2, 0(t1)
+            # b[k*3+j]
+            mul t1, s5, t0
+            add t1, t1, s4
+            slli t1, t1, 2
+            add t1, t1, s1
+            lw  t3, 0(t1)
+            mul t2, t2, t3
+            add t4, t4, t2
+            addi s5, s5, 1
+            li  t0, 3
+            blt s5, t0, kloop
+            # c[i*3+j] = acc
+            mul t1, s3, t0
+            add t1, t1, s4
+            slli t1, t1, 2
+            add t1, t1, s2
+            sw  t4, 0(t1)
+            addi s4, s4, 1
+            blt s4, t0, jloop
+            addi s3, s3, 1
+            blt s3, t0, iloop
+            # checksum = c[0] + c[4] + c[8]
+            lw a0, 0(s2)
+            lw t0, 16(s2)
+            add a0, a0, t0
+            lw t0, 32(s2)
+            add a0, a0, t0
+            ecall
+    "#);
+    // C = A*B for these matrices: diag = 30, 69, 90 → 189.
+    assert_eq!(c.reg(A0), 189);
+}
+
+#[test]
+fn crc32_byte_loop() {
+    let c = run(r#"
+        .data
+        msg: .byte 0x31, 0x32, 0x33, 0x34   # "1234"
+        .text
+        main:
+            la   s0, msg
+            li   s1, 4          # length
+            li   a0, -1         # crc = 0xFFFFFFFF
+            li   s2, 0xEDB88320 # reversed poly
+        byte_loop:
+            beqz s1, done
+            lbu  t0, 0(s0)
+            xor  a0, a0, t0
+            li   t1, 8
+        bit_loop:
+            andi t2, a0, 1
+            srli a0, a0, 1
+            beqz t2, no_xor
+            xor  a0, a0, s2
+        no_xor:
+            addi t1, t1, -1
+            bnez t1, bit_loop
+            addi s0, s0, 1
+            addi s1, s1, -1
+            j byte_loop
+        done:
+            not  a0, a0
+            ecall
+    "#);
+    assert_eq!(c.reg(A0), 0x9be3e0a3, "CRC32 of '1234'");
+}
+
+#[test]
+fn unsigned_vs_signed_compare_semantics() {
+    let c = run(r#"
+        main:
+            li  t0, -1          # 0xFFFFFFFF
+            li  t1, 1
+            slt  a0, t0, t1     # signed: -1 < 1 => 1
+            sltu a1, t0, t1     # unsigned: 0xFFFFFFFF < 1 => 0
+            sltu a2, t1, t0     # 1 < 0xFFFFFFFF => 1
+            ecall
+    "#);
+    assert_eq!((c.reg(A0), c.reg(A1), c.reg(A2)), (1, 0, 1));
+}
+
+#[test]
+fn jump_table_dispatch() {
+    let c = run(r#"
+        main:
+            li   s0, 2          # select case 2
+            la   t0, table
+            slli t1, s0, 2
+            add  t0, t0, t1
+            lw   t1, 0(t0)
+            jr   t1
+        case0:
+            li a0, 100
+            ecall
+        case1:
+            li a0, 200
+            ecall
+        case2:
+            li a0, 300
+            ecall
+        table:
+            .word case0, case1, case2
+    "#);
+    assert_eq!(c.reg(A0), 300);
+}
+
+#[test]
+fn fig5_numeric_example_through_text_asm() {
+    // The Fig. 5 merge example driven entirely from assembly text.
+    let c = run(r#"
+        .data
+        la_: .word 2, 4, 6, 8, 10, 12, 14, 16
+        lb_: .word 1, 3, 5, 7, 9, 11, 13, 15
+        .text
+        main:
+            la a0, la_
+            la a1, lb_
+            c0.lv v1, a0, zero
+            c0.lv v2, a1, zero
+            c1.merge v1, v2, v1, v2
+            c0.sv v1, a0, zero
+            c0.sv v2, a1, zero
+            ecall
+    "#);
+    let mut core = c;
+    core.mem.flush_all();
+    let lo: Vec<i32> = core
+        .mem
+        .dram_slice(0x0010_0000, 32)
+        .chunks(4)
+        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    assert_eq!(lo, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+}
+
+#[test]
+fn deep_recursion_uses_stack_correctly() {
+    // sum(1..=200) via recursion: exercises 200 stack frames.
+    let c = run(r#"
+        main:
+            li a0, 200
+            call sum
+            ecall
+        sum:
+            beqz a0, zero_case
+            addi sp, sp, -8
+            sw   ra, 0(sp)
+            sw   a0, 4(sp)
+            addi a0, a0, -1
+            call sum
+            lw   t0, 4(sp)
+            add  a0, a0, t0
+            lw   ra, 0(sp)
+            addi sp, sp, 8
+            ret
+        zero_case:
+            ret
+    "#);
+    assert_eq!(c.reg(A0), 20100);
+}
+
+#[test]
+fn vfilt_from_text_assembler_generic_form() {
+    // The generic cN.iK syntax reaches instructions without named
+    // mnemonics: c1.i3 == vfilt (rd, vrd1, vrd2, rs1, vrs1, vrs2).
+    let c = run(r#"
+        .data
+        vals: .word 5, -3, 10, -7, 2, -1, 8, -9
+        .text
+        main:
+            la a0, vals
+            li a1, 0                        # threshold
+            c0.lv v1, a0, zero
+            c1.i3 a2, v2, v0, a1, v1, v0    # vfilt: count -> a2
+            ecall
+    "#);
+    assert_eq!(c.reg(A2), 4, "four negative lanes");
+    assert_eq!(c.vreg(V2).to_i32s()[..4], [-3, -7, -1, -9]);
+}

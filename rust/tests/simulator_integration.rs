@@ -1,0 +1,267 @@
+//! Whole-simulator integration tests: programs exercising every layer at
+//! once (assembler → core → caches → DRAM → custom units), plus
+//! differential properties between the softcore and the PicoRV32 model
+//! (same ISA ⇒ same architectural results, different timing).
+
+use simdsoftcore::asm::{assemble_text, Asm};
+use simdsoftcore::baseline::{PicoConfig, PicoCore};
+use simdsoftcore::core::{Core, CoreConfig};
+use simdsoftcore::isa::reg::*;
+use simdsoftcore::mem::MemConfig;
+use simdsoftcore::util::{proptest::check, Xoshiro256};
+use simdsoftcore::{prop_assert, prop_assert_eq};
+
+/// Fibonacci via a recursive function — exercises calls, the stack, and
+/// branch patterns.
+#[test]
+fn recursive_fibonacci() {
+    let prog = assemble_text(
+        r#"
+        main:
+            li   a0, 12
+            call fib
+            ecall
+        fib:                      # fib(n): n<2 -> n
+            li   t0, 2
+            blt  a0, t0, base
+            addi sp, sp, -12
+            sw   ra, 0(sp)
+            sw   s0, 4(sp)
+            sw   s1, 8(sp)
+            mv   s0, a0
+            addi a0, a0, -1
+            call fib
+            mv   s1, a0           # fib(n-1)
+            addi a0, s0, -2
+            call fib
+            add  a0, a0, s1
+            lw   ra, 0(sp)
+            lw   s0, 4(sp)
+            lw   s1, 8(sp)
+            addi sp, sp, 12
+            ret
+        base:
+            ret
+    "#,
+    )
+    .unwrap();
+    let mut core = Core::paper_default();
+    core.load(&prog);
+    core.run(10_000_000).unwrap();
+    assert_eq!(core.reg(A0), 144, "fib(12)");
+}
+
+/// The same scalar program must produce identical architectural results
+/// on the softcore and on the PicoRV32 model — they differ only in
+/// timing. Random arithmetic programs, differentially tested.
+#[test]
+fn softcore_and_picorv32_agree_architecturally() {
+    check("softcore == picorv32 (scalar)", 24, |rng: &mut Xoshiro256| {
+        let mut a = Asm::new();
+        let buf = a.buffer("buf", 256, 4);
+        a.la(S1, buf);
+        // Random straight-line arithmetic over a0..a5 with some memory.
+        a.li(A0, rng.next_u32() as i32 as i64);
+        a.li(A1, rng.next_u32() as i32 as i64);
+        for _ in 0..40 {
+            match rng.below(10) {
+                0 => a.add(A0, A0, A1),
+                1 => a.sub(A1, A1, A0),
+                2 => a.xor(A0, A0, A1),
+                3 => a.mul(A1, A1, A0),
+                4 => a.slli(A0, A0, (rng.below(31) + 1) as u8),
+                5 => a.srai(A1, A1, (rng.below(31) + 1) as u8),
+                6 => a.sw(A0, (rng.below(32) * 4) as i32, S1),
+                7 => a.lw(A1, (rng.below(32) * 4) as i32, S1),
+                8 => a.and(A0, A0, A1),
+                _ => a.or(A1, A1, A0),
+            }
+        }
+        a.add(A2, A0, A1);
+        a.halt();
+        let prog = a.assemble().map_err(|e| e.to_string())?;
+
+        let mut soft = Core::paper_default();
+        soft.load(&prog);
+        soft.run(10_000).map_err(|e| e.to_string())?;
+
+        let mut pico = PicoCore::new(PicoConfig::default());
+        pico.load(&prog);
+        pico.run(10_000).map_err(|e| e.to_string())?;
+
+        prop_assert_eq!(soft.reg(A2), pico.reg(A2));
+        prop_assert!(
+            pico.cycle() > soft.cycle(),
+            "pico ({}) must be slower than the softcore ({})",
+            pico.cycle(),
+            soft.cycle()
+        );
+        Ok(())
+    });
+}
+
+/// Vector state must survive arbitrary interleavings of scalar and
+/// vector work (scoreboard correctness): the final memory image equals a
+/// host-computed model.
+#[test]
+fn mixed_scalar_vector_program_property() {
+    check("mixed scalar/vector == model", 16, |rng: &mut Xoshiro256| {
+        let n_vec = 8usize; // vectors of 8 lanes
+        let mut a = Asm::new();
+        let vals: Vec<u32> = (0..32).map(|_| rng.next_u32()).collect();
+        let src = a.words("src", &vals);
+        a.dalign(32);
+        let dst = a.buffer("dst", 128, 32);
+        a.la(S1, src);
+        a.la(S2, dst);
+        // Sort each of the 4 vectors while doing scalar work in between.
+        for i in 0..4 {
+            let off = (i * n_vec * 4) as i32;
+            a.li(T0, off as i64);
+            a.lv(V1, S1, T0);
+            a.addi(A0, A0, 13); // scalar noise
+            a.sort8(V2, V1);
+            a.mul(A0, A0, A0);
+            a.sv(V2, S2, T0);
+        }
+        a.halt();
+        let prog = a.assemble().map_err(|e| e.to_string())?;
+        let mut core = Core::paper_default();
+        core.load(&prog);
+        core.run(100_000).map_err(|e| e.to_string())?;
+        core.mem.flush_all();
+        let out = core.mem.dram_slice(prog.sym("dst"), 128).to_vec();
+        // Host model: sort each 8-lane group as i32.
+        let mut expect = Vec::new();
+        for chunk in vals.chunks(8) {
+            let mut c: Vec<i32> = chunk.iter().map(|&x| x as i32).collect();
+            c.sort_unstable();
+            for v in c {
+                expect.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        prop_assert_eq!(out, expect);
+        Ok(())
+    });
+}
+
+/// Cycle counts must be deterministic: same program, same config ⇒ same
+/// cycles, across repeated runs and core reloads.
+#[test]
+fn deterministic_timing() {
+    let mut cycles = Vec::new();
+    for _ in 0..3 {
+        let mut core = Core::paper_default();
+        let r = simdsoftcore::workloads::memcpy::run(&mut core, 64 * 1024, true).unwrap();
+        cycles.push(r.throughput.cycles);
+    }
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{cycles:?}");
+}
+
+/// Timing monotonicity: a strictly larger copy takes strictly more
+/// cycles; a slower interconnect never makes it faster.
+#[test]
+fn timing_monotonicity_properties() {
+    let run_with = |bytes: usize, double_rate: bool| {
+        let mut mem = MemConfig::paper_default();
+        mem.dram.double_rate = double_rate;
+        let mut core = Core::new(CoreConfig::paper_default(), mem);
+        simdsoftcore::workloads::memcpy::run(&mut core, bytes, true)
+            .unwrap()
+            .throughput
+            .cycles
+    };
+    let small = run_with(64 * 1024, true);
+    let big = run_with(256 * 1024, true);
+    assert!(big > small * 3, "4× data ⇒ ~4× cycles ({small} vs {big})");
+    let single = run_with(256 * 1024, false);
+    assert!(single >= big, "single-rate AXI cannot be faster ({single} vs {big})");
+}
+
+/// Text-assembled and builder-assembled versions of the same program
+/// produce identical images.
+#[test]
+fn text_and_builder_assemblers_agree() {
+    let text = assemble_text(
+        r#"
+        main:
+            li   a0, 1000
+            li   a1, 0
+        loop:
+            add  a1, a1, a0
+            addi a0, a0, -1
+            bnez a0, loop
+            ecall
+    "#,
+    )
+    .unwrap();
+
+    let mut b = Asm::new();
+    b.li(A0, 1000);
+    b.li(A1, 0);
+    let l = b.here("loop");
+    b.add(A1, A1, A0);
+    b.addi(A0, A0, -1);
+    b.bnez(A0, l);
+    b.ecall();
+    let built = b.assemble().unwrap();
+
+    assert_eq!(text.text, built.text);
+
+    let mut core = Core::paper_default();
+    core.load(&text);
+    core.run(100_000).unwrap();
+    assert_eq!(core.reg(A1), 500500);
+}
+
+/// Running with a different VLEN changes vector granularity but not
+/// results (the mergesort test covers 128..1024 widths; here we check
+/// the cycle ordering: wider vectors ⇒ fewer cycles for memcpy).
+#[test]
+fn vlen_scaling_reduces_cycles() {
+    let mut last = u64::MAX;
+    for vlen in [128usize, 256, 512, 1024] {
+        let mut core = Core::for_vlen(vlen);
+        let r = simdsoftcore::workloads::memcpy::run(&mut core, 256 * 1024, true).unwrap();
+        assert!(r.verified);
+        assert!(
+            r.throughput.cycles < last,
+            "vlen {vlen}: {} !< {last}",
+            r.throughput.cycles
+        );
+        last = r.throughput.cycles;
+    }
+}
+
+/// Self-checking programs can read their own performance counters.
+#[test]
+fn program_visible_counters_match_host_view() {
+    let prog = assemble_text(
+        r#"
+        main:
+            rdcycle   s0
+            rdinstret s1
+            li  t0, 50
+        loop:
+            addi t0, t0, -1
+            bnez t0, loop
+            rdcycle   s2
+            rdinstret s3
+            sub a0, s2, s0     # elapsed cycles
+            sub a1, s3, s1     # retired instructions
+            ecall
+    "#,
+    )
+    .unwrap();
+    let mut core = Core::paper_default();
+    core.load(&prog);
+    core.run(10_000).unwrap();
+    let cycles = core.reg(A0);
+    let instrs = core.reg(A1);
+    // Between the two rdinstret reads: li + 2×50 loop instructions +
+    // the second rdcycle + the second rdinstret itself reading the
+    // pre-retire count = 103.
+    assert_eq!(instrs, 103);
+    assert!(cycles >= instrs, "cycles {cycles} >= instrs {instrs}");
+    assert!(cycles < instrs + 40, "loop should run near 1 IPC, got {cycles}");
+}
