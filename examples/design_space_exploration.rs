@@ -8,11 +8,10 @@
 //! ```
 
 use simdsoftcore::coordinator::{experiments, Scale};
-use simdsoftcore::core::{Core, CoreConfig};
-use simdsoftcore::mem::MemConfig;
+use simdsoftcore::machine::Machine;
 use simdsoftcore::workloads::memcpy;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let full = std::env::args().any(|a| a == "--full");
     let scale = Scale { full };
 
@@ -25,15 +24,11 @@ fn main() -> anyhow::Result<()> {
     // (without the §3.1.4 double-rate optimisation) cost at the selected
     // configuration?
     let bytes = if full { 64 * 1024 * 1024 } else { 8 * 1024 * 1024 };
-    let mut single = MemConfig::paper_default();
-    single.dram.size_bytes = 192 * 1024 * 1024;
-    single.dram.double_rate = false;
-    let mut core = Core::new(CoreConfig::paper_default(), single);
+    let dram = 192 * 1024 * 1024;
+    let mut core = Machine::paper_default().dram_bytes(dram).double_rate(false).build();
     let slow = memcpy::run(&mut core, bytes, true)?;
 
-    let mut dbl = MemConfig::paper_default();
-    dbl.dram.size_bytes = 192 * 1024 * 1024;
-    let mut core = Core::new(CoreConfig::paper_default(), dbl);
+    let mut core = Machine::paper_default().dram_bytes(dram).build();
     let fast = memcpy::run(&mut core, bytes, true)?;
 
     println!("== ablation: §3.1.4 double-rate interconnect ==");
@@ -47,12 +42,7 @@ fn main() -> anyhow::Result<()> {
     // And the NRU-vs-worst-case ablation: shrink LLC associativity to 1
     // (direct-mapped LLC) to show why the replacement/organisation
     // choices matter for streaming.
-    let mut dm = MemConfig::paper_default();
-    dm.dram.size_bytes = 192 * 1024 * 1024;
-    let cap = dm.llc.capacity_bytes();
-    dm.llc.ways = 1;
-    dm.llc.sets = cap / dm.llc.block_bytes();
-    let mut core = Core::new(CoreConfig::paper_default(), dm);
+    let mut core = Machine::paper_default().dram_bytes(dram).llc_ways(1).build();
     let dmr = memcpy::run(&mut core, bytes, true)?;
     println!(
         "direct-mapped LLC: {:.2} GB/s ({:.2}× vs 4-way NRU)",

@@ -11,7 +11,7 @@ use simdsoftcore::core::Core;
 use simdsoftcore::isa::reg::*;
 use simdsoftcore::workloads::prefix;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args
         .iter()

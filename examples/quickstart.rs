@@ -9,7 +9,7 @@ use simdsoftcore::asm::assemble_text;
 use simdsoftcore::core::Core;
 use simdsoftcore::isa::reg::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A program in the text-assembler syntax: load 8 integers into a
     // vector register, sort them with the c2 sorting-network instruction
     // (one instruction, 6 cycles — §6 of the paper), store them back.

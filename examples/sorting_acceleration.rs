@@ -15,7 +15,7 @@ use simdsoftcore::coordinator::experiments;
 use simdsoftcore::core::{Core, Trace};
 use simdsoftcore::workloads::sort;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args
         .iter()
@@ -23,7 +23,9 @@ fn main() -> anyhow::Result<()> {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(64 * 1024);
-    anyhow::ensure!(n.is_power_of_two() && n >= 32, "--n must be a power of two >= 32");
+    if !n.is_power_of_two() || n < 32 {
+        return Err("--n must be a power of two >= 32".into());
+    }
 
     println!("sorting {n} random 32-bit integers on the simulated softcore\n");
 

@@ -5,7 +5,47 @@ adversarial int32 inputs. Hypothesis drives the sweeps."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Hypothesis drives the adversarial sweeps but is not always installed in
+# the offline image; without it the deterministic tests still run and the
+# property tests skip with a note instead of breaking collection.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):  # type: ignore[misc]
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_k):  # type: ignore[misc]
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _St:  # minimal stand-ins so module-level strategies still build
+        @staticmethod
+        def integers(**_k):
+            return None
+
+        @staticmethod
+        def data():
+            return None
+
+        @staticmethod
+        def lists(*_a, **_k):
+            return None
+
+        @staticmethod
+        def sampled_from(_v):
+            return None
+
+    st = _St()  # type: ignore[assignment]
 
 from compile.kernels.merge import merge
 from compile.kernels.networks import (

@@ -23,22 +23,46 @@ use crate::isa::encode::{encode, EncodeError};
 use crate::isa::instr::{csr, CustomSlot, IPrime, Instr, SPrime};
 use crate::isa::reg::{Reg, VReg, RA, ZERO};
 use std::collections::HashMap;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AsmError {
-    #[error("label '{0}' used but never bound")]
     UnboundLabel(String),
-    #[error("label '{0}' bound twice")]
     DoubleBound(String),
-    #[error("branch to '{label}' out of range (offset {offset})")]
     BranchOutOfRange { label: String, offset: i64 },
-    #[error("jump to '{label}' out of range (offset {offset})")]
     JumpOutOfRange { label: String, offset: i64 },
-    #[error("encode error at instruction {index}: {source}")]
     Encode { index: usize, source: EncodeError },
-    #[error("text segment (ends {text_end:#x}) overlaps data segment (base {data_base:#x})")]
     SegmentOverlap { text_end: u32, data_base: u32 },
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::UnboundLabel(name) => write!(f, "label '{name}' used but never bound"),
+            AsmError::DoubleBound(name) => write!(f, "label '{name}' bound twice"),
+            AsmError::BranchOutOfRange { label, offset } => {
+                write!(f, "branch to '{label}' out of range (offset {offset})")
+            }
+            AsmError::JumpOutOfRange { label, offset } => {
+                write!(f, "jump to '{label}' out of range (offset {offset})")
+            }
+            AsmError::Encode { index, source } => {
+                write!(f, "encode error at instruction {index}: {source}")
+            }
+            AsmError::SegmentOverlap { text_end, data_base } => write!(
+                f,
+                "text segment (ends {text_end:#x}) overlaps data segment (base {data_base:#x})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AsmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AsmError::Encode { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// A (possibly not-yet-bound) position in the program.

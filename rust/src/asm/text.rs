@@ -24,14 +24,35 @@ use super::builder::{Asm, AsmError, Label};
 use crate::isa::instr::{CustomSlot, IPrime, Instr, SPrime};
 use crate::isa::reg::{Reg, VReg, ZERO};
 use std::collections::HashMap;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error("line {line}: {msg}")]
     Syntax { line: usize, msg: String },
-    #[error(transparent)]
-    Asm(#[from] AsmError),
+    Asm(AsmError),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Syntax { line, msg } => write!(f, "line {line}: {msg}"),
+            ParseError::Asm(e) => std::fmt::Display::fmt(e, f),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ParseError::Asm(e) => Some(e),
+            ParseError::Syntax { .. } => None,
+        }
+    }
+}
+
+impl From<AsmError> for ParseError {
+    fn from(e: AsmError) -> Self {
+        ParseError::Asm(e)
+    }
 }
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {

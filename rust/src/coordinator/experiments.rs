@@ -2,16 +2,25 @@
 //! (DESIGN.md §4 maps each to its modules). Every driver returns a
 //! [`Table`] whose rows mirror what the paper plots, with the paper's
 //! reference values carried in notes so reports are self-checking.
+//!
+//! Workload-backed figures are declarative: a (workload, grid) pair
+//! executed through [`Machine::run`] via [`parallel_map`] — no driver
+//! constructs a `Core` or lays out buffers by hand.
 
 use super::report::Table;
 use super::sweep::parallel_map;
 use crate::baseline::arm_a53;
-use crate::baseline::{PicoConfig, PicoCore};
+use crate::baseline::PicoConfig;
 use crate::core::{Core, CoreConfig, Trace};
 use crate::isa::reg::*;
+use crate::machine::{run_on_pico, Machine};
 use crate::mem::MemConfig;
 use crate::util::stats::fmt_rate;
-use crate::workloads::{common, cpubench, memcpy, prefix, sort, stream};
+use crate::workloads::cpubench::{CpuBench, CpuBenchKind};
+use crate::workloads::memcpy::Memcpy;
+use crate::workloads::sort::Sort;
+use crate::workloads::stream::{Kernel, Stream};
+use crate::workloads::{Scenario, Variant, WorkloadReport};
 
 /// Experiment scale: `full` reproduces the paper's sizes (256 MiB memcpy,
 /// 64 MiB sort inputs); default is scaled for CI-speed runs with the same
@@ -55,34 +64,21 @@ impl Scale {
             vec![4 * 1024, 16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024]
         }
     }
-
-    /// DRAM size covering `buffers` × `bytes` under the workload layout.
-    fn dram_bytes(&self, buffers: usize, bytes: usize) -> usize {
-        let need = common::BUF_BASE as usize + buffers * (bytes + 128 * 1024);
-        // Round to a 2 MiB multiple (covers every LLC block size).
-        need.div_ceil(2 * 1024 * 1024) * 2 * 1024 * 1024
-    }
 }
 
-fn core_with(vlen: usize, llc_block_bits: usize, dram_bytes: usize) -> Core {
-    let mut mem = MemConfig::for_vlen(vlen);
-    // Keep LLC capacity at 256 KiB while sweeping block size.
-    let capacity = mem.llc.capacity_bytes();
-    mem.llc.block_bits = llc_block_bits;
-    mem.llc.sets = capacity / (llc_block_bits / 8) / mem.llc.ways;
-    mem.dram.size_bytes = dram_bytes;
-    Core::new(CoreConfig::for_vlen(vlen), mem)
+/// Run vector memcpy of `bytes` on a (vlen, llc_block) machine point.
+fn memcpy_point(vlen: usize, llc_block_bits: usize, bytes: usize) -> WorkloadReport {
+    let machine = Machine::for_vlen(vlen).llc_block(llc_block_bits);
+    let mut w = Memcpy::new();
+    machine.run(&mut w, &Scenario::new(Variant::Vector, bytes)).expect("memcpy runs")
 }
 
 /// Fig. 3 (left): memcpy throughput vs LLC block size, VLEN = 256.
 pub fn fig3_left(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
-    let dram = scale.dram_bytes(2, bytes);
     let blocks = vec![2048usize, 4096, 8192, 16384];
     let results = parallel_map(blocks, |block_bits| {
-        let mut core = core_with(256, block_bits, dram);
-        let r = memcpy::run(&mut core, bytes, true).expect("memcpy runs");
-        (block_bits, r)
+        (block_bits, memcpy_point(256, block_bits, bytes))
     });
 
     let mut t = Table::new(
@@ -94,7 +90,7 @@ pub fn fig3_left(scale: Scale) -> Table {
             block_bits.to_string(),
             format!("{:.2}", r.throughput.bytes_per_second() / 1e9),
             format!("{:.2}", r.throughput.bytes_per_cycle()),
-            r.verified.to_string(),
+            r.verified_cell(),
         ]);
     }
     t.note("paper: improvement plateaus at ~8192-bit blocks; 16384-bit selected (Table 1)");
@@ -107,12 +103,10 @@ pub fn fig3_left(scale: Scale) -> Table {
 /// Fig. 3 (right): memcpy throughput vs vector register width.
 pub fn fig3_right(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
-    let dram = scale.dram_bytes(2, bytes);
     let vlens = vec![128usize, 256, 512, 1024];
     let results = parallel_map(vlens, |vlen| {
-        let mut core = core_with(vlen, 16384, dram);
-        let r = memcpy::run(&mut core, bytes, true).expect("memcpy runs");
-        (vlen, core.cfg.fmax_mhz, r)
+        let fmax = CoreConfig::for_vlen(vlen).fmax_mhz;
+        (vlen, fmax, memcpy_point(vlen, 16384, bytes))
     });
 
     let mut t = Table::new(
@@ -125,7 +119,7 @@ pub fn fig3_right(scale: Scale) -> Table {
             format!("{fmax:.0}"),
             format!("{:.2}", r.throughput.bytes_per_second() / 1e9),
             format!("{:.2}", r.throughput.bytes_per_cycle()),
-            r.verified.to_string(),
+            r.verified_cell(),
         ]);
     }
     t.note("paper: 0.69 GB/s at VLEN=256 (150 MHz); 1.37 GB/s at VLEN=1024 (125 MHz)");
@@ -159,10 +153,13 @@ pub fn table1() -> Table {
 
 /// Table 2: DMIPS/MHz & CoreMark/MHz vs literature rows.
 pub fn table2() -> Table {
-    let mut core = Core::paper_default();
-    let d = cpubench::run_dhrystone_like(&mut core, 300).expect("dhrystone runs");
-    let mut core = Core::paper_default();
-    let c = cpubench::run_coremark_like(&mut core, 100).expect("coremark runs");
+    let machine = Machine::paper_default();
+    let d = machine
+        .run(&mut CpuBench::dhrystone(), &Scenario::new(Variant::Scalar, 300))
+        .expect("dhrystone runs");
+    let c = machine
+        .run(&mut CpuBench::coremark(), &Scenario::new(Variant::Scalar, 100))
+        .expect("coremark runs");
 
     let mut t = Table::new(
         "Table 2: indicative comparison ignoring SIMD",
@@ -181,14 +178,17 @@ pub fn table2() -> Table {
     }
     t.row(&[
         "This work (simulated)".into(),
-        format!("{:.2}", d.derived_score),
-        format!("{:.2}", c.derived_score),
+        format!("{:.2}", d.throughput.ipc() * CpuBenchKind::Dhrystone.derive()),
+        format!("{:.2}", c.throughput.ipc() * CpuBenchKind::Coremark.derive()),
         "150".into(),
         "cycle-level model".into(),
     ]);
     t.note(format!(
         "measured IPC: dhrystone-like {:.3} (verified: {}), coremark-like {:.3} (verified: {})",
-        d.ipc, d.verified, c.ipc, c.verified
+        d.throughput.ipc(),
+        d.verified == Some(true),
+        c.throughput.ipc(),
+        c.verified == Some(true)
     ));
     t.note("paper: 1.47 DMIPS/MHz, 2.26 CoreMark/MHz; scores derived from IPC × published RV32 -O2 instruction counts (see workloads::cpubench)");
     t
@@ -202,18 +202,13 @@ pub fn fig4(scale: Scale) -> Table {
         &["array KiB", "Copy", "Scale", "Add", "Triad", "Pico Copy", "Pico Scale", "Pico Add", "Pico Triad"],
     );
     let rows = parallel_map(sizes, |n| {
+        // Softcore rows (DRAM auto-sizes to the 3-array footprint).
+        let machine = Machine::paper_default();
         let mut soft = Vec::new();
-        for k in stream::Kernel::ALL {
-            let mut core = Core::paper_default();
-            // STREAM needs 3 arrays; default DRAM (64 MiB) covers the
-            // scaled sizes; bump for the full 4M-element point.
-            if n >= 2 * 1024 * 1024 {
-                let mut mem = MemConfig::paper_default();
-                mem.dram.size_bytes = 256 * 1024 * 1024;
-                core = Core::new(CoreConfig::paper_default(), mem);
-            }
-            let r = stream::run(&mut core, k, n, false).expect("stream runs");
-            assert!(r.verified, "{} failed", k.name());
+        for k in Kernel::ALL {
+            let mut w = Stream::new(k);
+            let r = machine.run(&mut w, &Scenario::new(Variant::Scalar, n)).expect("stream runs");
+            assert!(r.verified == Some(true), "{} failed", k.name());
             soft.push(r.throughput.bytes_per_second() / 1e6);
         }
         // PicoRV32: sizes above its flat behaviour threshold simulate
@@ -221,18 +216,11 @@ pub fn fig4(scale: Scale) -> Table {
         // size-independent, so measure on a capped size.
         let pico_n = n.min(16 * 1024);
         let mut pico_rates = Vec::new();
-        for k in stream::Kernel::ALL {
-            let addrs = common::layout_buffers(3, pico_n * 4);
-            let prog = stream::build_scalar(k, addrs[0], addrs[1], addrs[2], pico_n);
-            let mut pico = PicoCore::new(PicoConfig::default());
-            pico.load(&prog);
-            // STREAM init: a=1, b=2, c=0.
-            pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(pico_n));
-            pico.host_write(addrs[1], &2i32.to_le_bytes().repeat(pico_n));
-            pico.host_write(addrs[2], &0i32.to_le_bytes().repeat(pico_n));
-            pico.run(common::MAX_INSTRS).expect("pico runs");
-            pico_rates
-                .push(pico.bytes_per_second(k.bytes_per_elem() * pico_n as u64) / 1e6);
+        for k in Kernel::ALL {
+            let mut w = Stream::new(k);
+            let r = run_on_pico(&mut w, PicoConfig::default(), &Scenario::new(Variant::Scalar, pico_n))
+                .expect("pico runs");
+            pico_rates.push(r.throughput.bytes_per_second() / 1e6);
         }
         (n, soft, pico_rates)
     });
@@ -249,14 +237,19 @@ pub fn fig4(scale: Scale) -> Table {
 /// §4.1/§4.2 ratios: 38× (STREAM Copy) and 144× (256-bit memcpy) over
 /// PicoRV32.
 pub fn fig4_ratios(scale: Scale) -> Table {
+    let machine = Machine::paper_default();
     // Softcore STREAM copy at a DRAM-resident size.
     let n = 1024 * 1024;
-    let mut core = Core::paper_default();
-    let soft = stream::run(&mut core, stream::Kernel::Copy, n, false).expect("stream");
+    let soft = machine
+        .run(&mut Stream::new(Kernel::Copy), &Scenario::new(Variant::Scalar, n))
+        .expect("stream");
     let soft_mbps = soft.throughput.bytes_per_second() / 1e6;
     // Softcore vector memcpy.
-    let mut core = Core::paper_default();
-    let vec = memcpy::run(&mut core, scale.memcpy_bytes().min(32 * 1024 * 1024), true)
+    let vec = machine
+        .run(
+            &mut Memcpy::new(),
+            &Scenario::new(Variant::Vector, scale.memcpy_bytes().min(32 * 1024 * 1024)),
+        )
         .expect("memcpy");
     // The paper's 144× is 0.69 GB/s (copied bytes) over 4.8 MB/s —
     // plain copied-byte rate, not the STREAM 2× convention.
@@ -264,13 +257,13 @@ pub fn fig4_ratios(scale: Scale) -> Table {
 
     // PicoRV32 copy.
     let pico_n = 16 * 1024;
-    let addrs = common::layout_buffers(3, pico_n * 4);
-    let prog = stream::build_scalar(stream::Kernel::Copy, addrs[0], addrs[1], addrs[2], pico_n);
-    let mut pico = PicoCore::new(PicoConfig::default());
-    pico.load(&prog);
-    pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(pico_n));
-    pico.run(common::MAX_INSTRS).expect("pico");
-    let pico_mbps = pico.bytes_per_second(8 * pico_n as u64) / 1e6;
+    let pico = run_on_pico(
+        &mut Stream::new(Kernel::Copy),
+        PicoConfig::default(),
+        &Scenario::new(Variant::Scalar, pico_n),
+    )
+    .expect("pico");
+    let pico_mbps = pico.throughput.bytes_per_second() / 1e6;
 
     let mut t = Table::new("§4.1–4.2 ratios vs PicoRV32", &["metric", "value"]);
     t.row(&["softcore STREAM Copy".into(), format!("{soft_mbps:.1} MB/s")]);
@@ -341,18 +334,12 @@ pub fn fig6() -> String {
 /// §4.3.1: sorting speedups (vs softcore qsort and vs ARM A53 qsort).
 pub fn sec43_sort(scale: Scale) -> Table {
     let n = scale.sort_n();
-    let dram = scale.dram_bytes(2, n * 4);
-    let results = parallel_map(vec![false, true], |vector| {
-        let mut mem = MemConfig::paper_default();
-        mem.dram.size_bytes = dram;
-        let mut core = Core::new(CoreConfig::paper_default(), mem);
-        if vector {
-            sort::run_vector_mergesort(&mut core, n).expect("mergesort")
-        } else {
-            sort::run_qsort(&mut core, n).expect("qsort")
-        }
+    let results = parallel_map(vec![Variant::Scalar, Variant::Vector], |variant| {
+        Machine::paper_default()
+            .run(&mut Sort::new(), &Scenario::new(variant, n))
+            .expect("sort runs")
     });
-    let (q, m) = (results[0], results[1]);
+    let (q, m) = (&results[0], &results[1]);
     let fmax = 150e6;
     let q_secs = q.throughput.cycles as f64 / fmax;
     let m_secs = m.throughput.cycles as f64 / fmax;
@@ -364,17 +351,17 @@ pub fn sec43_sort(scale: Scale) -> Table {
     );
     t.row(&[
         "qsort() on softcore".into(),
-        format!("{:.1}", q.cycles_per_elem),
+        format!("{:.1}", q.cycles_per_elem()),
         format!("{q_secs:.3}"),
         "1.0× (baseline)".into(),
-        q.verified.to_string(),
+        q.verified_cell(),
     ]);
     t.row(&[
         "vector mergesort (c2_sort + c1_merge)".into(),
-        format!("{:.1}", m.cycles_per_elem),
+        format!("{:.1}", m.cycles_per_elem()),
         format!("{m_secs:.3}"),
         format!("{:.1}×", q_secs / m_secs),
-        m.verified.to_string(),
+        m.verified_cell(),
     ]);
     t.row(&[
         "qsort() on ARM A53 @1.2 GHz (calibrated model)".into(),
@@ -390,14 +377,12 @@ pub fn sec43_sort(scale: Scale) -> Table {
 /// §4.3.2: prefix-sum speedups.
 pub fn sec43_prefix(scale: Scale) -> Table {
     let n = scale.prefix_n();
-    let dram = scale.dram_bytes(2, n * 4);
-    let results = parallel_map(vec![false, true], |vector| {
-        let mut mem = MemConfig::paper_default();
-        mem.dram.size_bytes = dram;
-        let mut core = Core::new(CoreConfig::paper_default(), mem);
-        prefix::run(&mut core, n, vector).expect("prefix")
+    let results = parallel_map(vec![Variant::Scalar, Variant::Vector], |variant| {
+        Machine::paper_default()
+            .run(&mut crate::workloads::prefix::Prefix::new(), &Scenario::new(variant, n))
+            .expect("prefix runs")
     });
-    let (s, v) = (results[0], results[1]);
+    let (s, v) = (&results[0], &results[1]);
     let fmax = 150e6;
     let s_secs = s.throughput.cycles as f64 / fmax;
     let v_secs = v.throughput.cycles as f64 / fmax;
@@ -409,17 +394,17 @@ pub fn sec43_prefix(scale: Scale) -> Table {
     );
     t.row(&[
         "serial on softcore".into(),
-        format!("{:.2}", s.cycles_per_elem),
+        format!("{:.2}", s.cycles_per_elem()),
         format!("{s_secs:.4}"),
         "1.0× (baseline)".into(),
-        s.verified.to_string(),
+        s.verified_cell(),
     ]);
     t.row(&[
         "c3_prefix vector".into(),
-        format!("{:.2}", v.cycles_per_elem),
+        format!("{:.2}", v.cycles_per_elem()),
         format!("{v_secs:.4}"),
         format!("{:.1}×", s_secs / v_secs),
-        v.verified.to_string(),
+        v.verified_cell(),
     ]);
     t.row(&[
         "serial on ARM A53 @1.2 GHz (calibrated model)".into(),
@@ -461,17 +446,14 @@ pub fn discussion() -> Table {
 /// memcpy() rate quoted in §4.1 prose at the default configuration.
 pub fn memcpy_headline(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
-    let dram = scale.dram_bytes(2, bytes);
-    let mut core = core_with(256, 16384, dram);
-    let r = memcpy::run(&mut core, bytes, true).expect("memcpy");
+    let r = memcpy_point(256, 16384, bytes);
     let mut t = Table::new("§4.1 headline memcpy (VLEN=256, LLC 16384-bit)", &["metric", "value"]);
     t.row(&["rate".into(), fmt_rate(r.throughput.bytes_per_second())]);
     t.row(&["bytes/cycle".into(), format!("{:.2}", r.throughput.bytes_per_cycle())]);
     t.row(&["IPC".into(), format!("{:.2}", r.throughput.ipc())]);
-    t.row(&["verified".into(), r.verified.to_string()]);
-    let ms = core.mem.stats();
-    t.row(&["DL1 alloc-no-fetch".into(), ms.dl1.alloc_no_fetch.to_string()]);
-    t.row(&["DRAM mean burst".into(), format!("{:.0} B", ms.dram.mean_burst_bytes())]);
+    t.row(&["verified".into(), r.verified_cell()]);
+    t.row(&["DL1 alloc-no-fetch".into(), r.mem.dl1.alloc_no_fetch.to_string()]);
+    t.row(&["DRAM mean burst".into(), format!("{:.0} B", r.mem.dram.mean_burst_bytes())]);
     t.note("paper: 0.69 GB/s at this configuration");
     t
 }

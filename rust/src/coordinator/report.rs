@@ -1,5 +1,6 @@
 //! Report tables: the experiment drivers produce `Table`s which render
-//! as aligned text (terminal) or markdown (EXPERIMENTS.md).
+//! as aligned text (terminal), markdown (EXPERIMENTS.md), or JSON
+//! (`--json`, for mechanical capture of bench trajectories).
 
 #[derive(Debug, Clone)]
 pub struct Table {
@@ -67,6 +68,31 @@ impl Table {
         out
     }
 
+    /// JSON rendering (for `--json` and BENCH_*.json capture): one
+    /// object with `title`, `headers`, `rows` (array of string arrays)
+    /// and `notes`. Hand-rolled — the default build carries no serde.
+    pub fn render_json(&self) -> String {
+        fn arr(items: &[String]) -> String {
+            let cells: Vec<String> =
+                items.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
+            format!("[{}]", cells.join(","))
+        }
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r.as_slice())).collect();
+        format!(
+            "{{\"title\":\"{}\",\"headers\":{},\"rows\":[{}],\"notes\":{}}}",
+            json_escape(&self.title),
+            arr(&self.headers),
+            rows.join(","),
+            arr(&self.notes),
+        )
+    }
+
+    /// JSON array of several tables (what `all --json` emits).
+    pub fn render_json_array(tables: &[Table]) -> String {
+        let items: Vec<String> = tables.iter().map(|t| t.render_json()).collect();
+        format!("[{}]", items.join(","))
+    }
+
     /// Markdown rendering (for EXPERIMENTS.md).
     pub fn render_markdown(&self) -> String {
         let mut out = String::new();
@@ -88,6 +114,25 @@ impl Table {
         out.push('\n');
         out
     }
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -124,5 +169,33 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("x", &["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = sample().render_json();
+        assert_eq!(
+            j,
+            "{\"title\":\"Demo\",\"headers\":[\"a\",\"bbbb\"],\
+             \"rows\":[[\"1\",\"2\"],[\"333\",\"4\"]],\"notes\":[\"a note\"]}"
+        );
+    }
+
+    #[test]
+    fn json_escapes_special_characters() {
+        let mut t = Table::new("q\"uote\\and\nnewline", &["h"]);
+        t.row(&["\t".into()]);
+        t.note("ctrl\u{1}");
+        let j = t.render_json();
+        assert!(j.contains("q\\\"uote\\\\and\\nnewline"), "{j}");
+        assert!(j.contains("[\"\\t\"]"), "{j}");
+        assert!(j.contains("ctrl\\u0001"), "{j}");
+    }
+
+    #[test]
+    fn json_array_wraps_tables() {
+        let j = Table::render_json_array(&[sample(), sample()]);
+        assert!(j.starts_with("[{") && j.ends_with("}]"), "{j}");
+        assert_eq!(j.matches("\"title\":\"Demo\"").count(), 2);
     }
 }

@@ -20,6 +20,46 @@ where
     })
 }
 
+/// Like [`parallel_map`], but runs at most `max_threads` workers pulling
+/// items from a shared queue — no per-item thread and no chunk barriers,
+/// so heterogeneous grids (the `run-workload` sweeps) keep every worker
+/// busy until the queue drains. Preserves input order in the output.
+pub fn parallel_map_bounded<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let inputs: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = max_threads.clamp(1, n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().expect("input lock").take().expect("taken once");
+                let r = f(item);
+                *outputs[i].lock().expect("output lock") = Some(r);
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().expect("worker finished").expect("slot filled"))
+        .collect()
+}
+
 /// Sequential fallback used when determinism of log interleaving matters.
 pub fn serial_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
@@ -53,5 +93,14 @@ mod tests {
     #[should_panic(expected = "sweep thread panicked")]
     fn propagates_panics() {
         parallel_map(vec![1], |_: i32| -> i32 { panic!("boom") });
+    }
+
+    #[test]
+    fn bounded_preserves_order_with_fewer_workers_than_items() {
+        let out = parallel_map_bounded((0..100).collect(), 3, |i: i32| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(parallel_map_bounded(Vec::new(), 4, |i: i32| i), Vec::<i32>::new());
+        // A worker count above the item count is clamped, not an error.
+        assert_eq!(parallel_map_bounded(vec![7], 64, |i: i32| i + 1), vec![8]);
     }
 }

@@ -24,20 +24,45 @@ use crate::isa::instr::csr;
 use crate::isa::{decode, DecodeError, Instr};
 use crate::mem::{MemConfig, MemSys};
 use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecVal};
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("illegal instruction at pc {pc:#010x}: {source}")]
     Illegal { pc: u32, source: DecodeError },
-    #[error("memory fault at pc {pc:#010x}: access {addr:#010x}+{len} outside DRAM ({size:#x} bytes)")]
     MemFault { pc: u32, addr: u32, len: usize, size: usize },
-    #[error("custom instruction fault at pc {pc:#010x}: {source}")]
     Unit { pc: u32, source: UnitError },
-    #[error("watchdog: exceeded {0} instructions without halting")]
     Watchdog(u64),
-    #[error("ebreak at pc {0:#010x}")]
     Break(u32),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Illegal { pc, source } => {
+                write!(f, "illegal instruction at pc {pc:#010x}: {source}")
+            }
+            SimError::MemFault { pc, addr, len, size } => write!(
+                f,
+                "memory fault at pc {pc:#010x}: access {addr:#010x}+{len} outside DRAM ({size:#x} bytes)"
+            ),
+            SimError::Unit { pc, source } => {
+                write!(f, "custom instruction fault at pc {pc:#010x}: {source}")
+            }
+            SimError::Watchdog(max) => {
+                write!(f, "watchdog: exceeded {max} instructions without halting")
+            }
+            SimError::Break(pc) => write!(f, "ebreak at pc {pc:#010x}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimError::Illegal { source, .. } => Some(source),
+            SimError::Unit { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// Retired-instruction class counters.

@@ -6,17 +6,32 @@
 use super::encode::{bits, sext};
 use super::instr::{CustomSlot, IPrime, Instr, SPrime};
 use super::reg::{Reg, VReg};
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("illegal instruction word {word:#010x}: unknown opcode {opcode:#09b}")]
     UnknownOpcode { word: u32, opcode: u32 },
-    #[error("illegal instruction word {word:#010x}: bad funct3/funct7 for opcode {opcode:#09b}")]
     BadFunct { word: u32, opcode: u32 },
-    #[error("unsupported system instruction {word:#010x}")]
     UnsupportedSystem { word: u32 },
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::UnknownOpcode { word, opcode } => {
+                write!(f, "illegal instruction word {word:#010x}: unknown opcode {opcode:#09b}")
+            }
+            DecodeError::BadFunct { word, opcode } => write!(
+                f,
+                "illegal instruction word {word:#010x}: bad funct3/funct7 for opcode {opcode:#09b}"
+            ),
+            DecodeError::UnsupportedSystem { word } => {
+                write!(f, "unsupported system instruction {word:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 #[inline]
 fn rd(w: u32) -> Reg {

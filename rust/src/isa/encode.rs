@@ -9,19 +9,35 @@
 
 use super::instr::{CustomSlot, IPrime, Instr, SPrime};
 use super::reg::Reg;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum EncodeError {
-    #[error("immediate {imm} out of range for {what} (range {lo}..={hi})")]
     ImmOutOfRange { what: &'static str, imm: i64, lo: i64, hi: i64 },
-    #[error("{what} offset {imm} must be a multiple of {align}")]
     Misaligned { what: &'static str, imm: i64, align: i64 },
-    #[error("shift amount {0} out of range (0..=31)")]
     BadShamt(u8),
-    #[error("funct3 {funct3} invalid for {what}: {why}")]
     BadFunct3 { what: &'static str, funct3: u8, why: &'static str },
 }
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::ImmOutOfRange { what, imm, lo, hi } => {
+                write!(f, "immediate {imm} out of range for {what} (range {lo}..={hi})")
+            }
+            EncodeError::Misaligned { what, imm, align } => {
+                write!(f, "{what} offset {imm} must be a multiple of {align}")
+            }
+            EncodeError::BadShamt(shamt) => {
+                write!(f, "shift amount {shamt} out of range (0..=31)")
+            }
+            EncodeError::BadFunct3 { what, funct3, why } => {
+                write!(f, "funct3 {funct3} invalid for {what}: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
 
 fn check_range(what: &'static str, imm: i64, lo: i64, hi: i64) -> Result<(), EncodeError> {
     if imm < lo || imm > hi {

@@ -4,14 +4,24 @@
 //! reconfigurable SIMD instructions" (Papaphilippou, Kelly, Luk; 2021)
 //! as a cycle-level softcore simulator whose reconfigurable instruction
 //! fabric is authored in JAX/Pallas and loaded as AOT-compiled XLA
-//! executables via PJRT. See DESIGN.md for the system inventory and the
-//! per-experiment index.
+//! executables via PJRT (behind the optional `pjrt` cargo feature).
+//!
+//! The user-facing surface is three pieces (see DESIGN.md at the repo
+//! root for the walkthrough and the per-experiment index):
+//!
+//! - [`workloads::Workload`] — one trait over every benchmark program
+//!   (build / init / verify / throughput accounting);
+//! - [`machine::Machine`] — a fluent builder that turns a configuration
+//!   into a ready core and runs workloads end to end;
+//! - [`workloads::registry`] — the string-keyed catalogue behind the
+//!   `simdsoftcore run-workload <name>` CLI subcommand and the sweeps.
 
 pub mod asm;
 pub mod baseline;
 pub mod coordinator;
 pub mod core;
 pub mod isa;
+pub mod machine;
 pub mod mem;
 pub mod runtime;
 pub mod simd;

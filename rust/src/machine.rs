@@ -1,0 +1,425 @@
+//! `Machine`: a fluent builder over the simulator configuration and the
+//! single entry point for running [`Workload`]s.
+//!
+//! Before this module, every driver hand-wired
+//! `Core::new(CoreConfig::for_vlen(v), mem_cfg)` + LLC-geometry math +
+//! `UnitPool::load` + buffer layout. A machine collapses that into:
+//!
+//! ```no_run
+//! use simdsoftcore::machine::Machine;
+//! use simdsoftcore::workloads::{Scenario, Variant};
+//!
+//! let machine = Machine::paper_default().vlen(512).llc_block(2048);
+//! let mut w = simdsoftcore::workloads::lookup("memcpy").unwrap();
+//! let report = machine
+//!     .run(&mut *w, &Scenario::new(Variant::Vector, 1024 * 1024))
+//!     .unwrap();
+//! println!("{:.2} GB/s", report.throughput.bytes_per_second() / 1e9);
+//! ```
+//!
+//! [`Machine::run`] performs build → load → init → run → verify →
+//! throughput accounting in one call and returns a uniform
+//! [`WorkloadReport`]. Simulated DRAM is auto-sized to the workload's
+//! buffer footprint (DRAM capacity never affects timing, only bounds
+//! checking). Custom units are installed through *factories* so one
+//! machine can be reused across the points of a sweep.
+
+use crate::baseline::{PicoConfig, PicoCore};
+use crate::core::{Core, CoreConfig, SimError};
+use crate::mem::{CacheGeometry, MemConfig, MemStats, Replacement};
+use crate::simd::CustomUnit;
+use crate::workloads::common::{self, Throughput};
+use crate::workloads::workload::{run_on, Scenario, Variant, Workload, WorkloadReport};
+
+/// Errors from [`Machine::run`] and [`run_on_pico`].
+#[derive(Debug)]
+pub enum MachineError {
+    /// The simulated core faulted or hit its watchdog.
+    Sim(SimError),
+    /// The scenario asked for a variant the workload does not implement.
+    UnsupportedVariant { workload: String, variant: Variant },
+    /// A required custom-unit slot is empty on this machine.
+    MissingUnit { workload: String, slot: usize },
+}
+
+impl std::fmt::Display for MachineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MachineError::Sim(e) => write!(f, "simulation failed: {e}"),
+            MachineError::UnsupportedVariant { workload, variant } => {
+                write!(f, "workload '{workload}' has no {variant} variant")
+            }
+            MachineError::MissingUnit { workload, slot } => {
+                write!(f, "workload '{workload}' needs a unit in slot c{slot}, which is empty")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MachineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MachineError::Sim(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimError> for MachineError {
+    fn from(e: SimError) -> Self {
+        MachineError::Sim(e)
+    }
+}
+
+/// Builds a custom unit for a machine; receives the lane count so one
+/// factory serves every vector width in a sweep.
+pub type UnitFactory = Box<dyn Fn(usize) -> Box<dyn CustomUnit>>;
+
+/// A reusable simulator configuration: core timing + memory geometry +
+/// custom-unit loadout. `build()` materialises a fresh [`Core`];
+/// `run()` executes a workload scenario end to end.
+pub struct Machine {
+    core: CoreConfig,
+    mem: MemConfig,
+    /// Set by an explicit `fmax_mhz()` call; survives later `vlen()`
+    /// changes (which would otherwise reset the clock to the
+    /// width-dependent default).
+    fmax_override: Option<f64>,
+    units: Vec<(usize, UnitFactory)>,
+    cleared: Vec<usize>,
+}
+
+impl Machine {
+    /// The paper's Table-1 configuration (VLEN = 256, 150 MHz,
+    /// 16384-bit LLC blocks, standard unit pool).
+    pub fn paper_default() -> Self {
+        Self::for_vlen(256)
+    }
+
+    /// Table-1-shaped machine at a given vector width.
+    pub fn for_vlen(vlen_bits: usize) -> Self {
+        Self {
+            core: CoreConfig::for_vlen(vlen_bits),
+            mem: MemConfig::for_vlen(vlen_bits),
+            fmax_override: None,
+            units: Vec::new(),
+            cleared: Vec::new(),
+        }
+    }
+
+    /// Change the vector width, preserving every override already
+    /// applied in the chain: LLC block/ways (and thus capacity), DRAM
+    /// settings, replacement policy, and an explicit `fmax_mhz`. Only
+    /// the width-derived parts (L1 geometry, default clock) re-derive.
+    pub fn vlen(mut self, vlen_bits: usize) -> Self {
+        let llc = self.mem.llc;
+        let capacity = llc.capacity_bytes();
+        let dram = self.mem.dram;
+        let replacement = self.mem.replacement;
+        self.core = CoreConfig::for_vlen(vlen_bits);
+        if let Some(f) = self.fmax_override {
+            self.core.fmax_mhz = f;
+        }
+        self.mem = MemConfig::for_vlen(vlen_bits);
+        self.mem.dram = dram;
+        self.mem.replacement = replacement;
+        self.mem.llc = CacheGeometry {
+            sets: capacity / (llc.block_bits / 8) / llc.ways,
+            ways: llc.ways,
+            block_bits: llc.block_bits,
+        };
+        self
+    }
+
+    /// LLC block size in bits, keeping the LLC capacity constant (the
+    /// Fig. 3 left sweep: set count scales inversely with block size).
+    pub fn llc_block(mut self, block_bits: usize) -> Self {
+        let capacity = self.mem.llc.capacity_bytes();
+        self.mem.llc.block_bits = block_bits;
+        self.mem.llc.sets = capacity / (block_bits / 8) / self.mem.llc.ways;
+        self
+    }
+
+    /// LLC associativity, keeping the LLC capacity constant.
+    pub fn llc_ways(mut self, ways: usize) -> Self {
+        let capacity = self.mem.llc.capacity_bytes();
+        self.mem.llc.ways = ways;
+        self.mem.llc.sets = capacity / self.mem.llc.block_bytes() / ways;
+        self
+    }
+
+    /// Simulated DRAM capacity in bytes ([`Machine::run`] grows this
+    /// automatically to fit a workload's buffers).
+    pub fn dram_bytes(mut self, bytes: usize) -> Self {
+        self.mem.dram.size_bytes = bytes;
+        self
+    }
+
+    /// Clock used for cycles → seconds conversion (overrides the
+    /// width-dependent default, also across later `vlen()` calls).
+    pub fn fmax_mhz(mut self, mhz: f64) -> Self {
+        self.core.fmax_mhz = mhz;
+        self.fmax_override = Some(mhz);
+        self
+    }
+
+    /// Cache replacement policy at DL1 and the LLC.
+    pub fn replacement(mut self, r: Replacement) -> Self {
+        self.mem.replacement = r;
+        self
+    }
+
+    /// §3.1.4 double-rate interconnect on/off.
+    pub fn double_rate(mut self, on: bool) -> Self {
+        self.mem.dram.double_rate = on;
+        self
+    }
+
+    /// Cycles to open a DRAM burst.
+    pub fn burst_setup(mut self, cycles: u64) -> Self {
+        self.mem.dram.burst_setup_cycles = cycles;
+        self
+    }
+
+    /// Load a custom unit into slot `c0..c3` (replacing the standard
+    /// unit there). The factory receives the machine's lane count.
+    pub fn with_unit(
+        mut self,
+        slot: usize,
+        make: impl Fn(usize) -> Box<dyn CustomUnit> + 'static,
+    ) -> Self {
+        assert!(slot < 4, "custom slots are c0..c3");
+        self.units.push((slot, Box::new(make)));
+        self
+    }
+
+    /// Leave slot `c0..c3` empty (model a fabric with the unit not
+    /// loaded; running a workload that requires it then errors).
+    pub fn without_unit(mut self, slot: usize) -> Self {
+        assert!(slot < 4, "custom slots are c0..c3");
+        self.cleared.push(slot);
+        self
+    }
+
+    pub fn core_config(&self) -> &CoreConfig {
+        &self.core
+    }
+
+    pub fn mem_config(&self) -> &MemConfig {
+        &self.mem
+    }
+
+    /// Materialise a ready core: standard unit pool for the configured
+    /// width, minus `without_unit` slots, plus `with_unit` overrides.
+    pub fn build(&self) -> Core {
+        self.build_with_mem(self.mem)
+    }
+
+    fn build_with_mem(&self, mem: MemConfig) -> Core {
+        let mut core = Core::new(self.core, mem);
+        for &slot in &self.cleared {
+            core.pool.unload(slot);
+        }
+        for (slot, make) in &self.units {
+            core.pool.load(*slot, make(self.core.lanes()));
+        }
+        core
+    }
+
+    /// Run one workload scenario end to end on a fresh core and report
+    /// uniform throughput/verification results. The scenario's
+    /// `vlen_bits` is taken from this machine's configuration.
+    pub fn run(&self, w: &mut dyn Workload, sc: &Scenario) -> Result<WorkloadReport, MachineError> {
+        if !w.variants().contains(&sc.variant) {
+            return Err(MachineError::UnsupportedVariant {
+                workload: w.name().to_string(),
+                variant: sc.variant,
+            });
+        }
+        let sc = Scenario { vlen_bits: self.core.vlen_bits, ..*sc };
+        let (buffers, bytes_each) = w.buffers(&sc);
+        let mut mem = self.mem;
+        mem.dram.size_bytes = mem.dram.size_bytes.max(dram_needed(buffers, bytes_each));
+        let mut core = self.build_with_mem(mem);
+        for &slot in w.required_units(sc.variant) {
+            if core.pool.get(slot).is_none() {
+                return Err(MachineError::MissingUnit { workload: w.name().to_string(), slot });
+            }
+        }
+        Ok(run_on(w, &mut core, &sc)?)
+    }
+}
+
+/// DRAM capacity covering `buffers` × `bytes_each` under the workload
+/// buffer layout, rounded to a 2 MiB multiple (covers every LLC block
+/// size).
+pub fn dram_needed(buffers: usize, bytes_each: usize) -> usize {
+    let need = common::BUF_BASE as usize + buffers * (bytes_each + 128 * 1024);
+    need.div_ceil(2 * 1024 * 1024) * 2 * 1024 * 1024
+}
+
+/// Run a scalar workload scenario on the PicoRV32 baseline model,
+/// reusing the workload's program and input image. Pico results cannot
+/// be verified through `Workload::verify` (it speaks `Core`), so
+/// `verified` is `None`.
+pub fn run_on_pico(
+    w: &mut dyn Workload,
+    cfg: PicoConfig,
+    sc: &Scenario,
+) -> Result<WorkloadReport, MachineError> {
+    if sc.variant != Variant::Scalar {
+        return Err(MachineError::UnsupportedVariant {
+            workload: w.name().to_string(),
+            variant: sc.variant,
+        });
+    }
+    let sc = Scenario { vlen_bits: 256, ..*sc };
+    let (buffers, bytes_each) = w.buffers(&sc);
+    let cfg =
+        PicoConfig { dram_size: cfg.dram_size.max(dram_needed(buffers, bytes_each)), ..cfg };
+    let prog = w.build(&sc);
+    let mut pico = PicoCore::new(cfg);
+    pico.load(&prog);
+    for (addr, bytes) in w.init_image() {
+        pico.host_write(*addr, bytes);
+    }
+    pico.run(common::MAX_INSTRS)?;
+    let throughput = Throughput {
+        cycles: pico.cycle(),
+        instret: pico.instret(),
+        bytes: w.bytes_moved(&sc),
+        fmax_mhz: cfg.fmax_mhz,
+    };
+    Ok(WorkloadReport {
+        workload: w.name().to_string(),
+        variant: sc.variant,
+        size: sc.size,
+        elems: w.elems(&sc),
+        throughput,
+        verified: None,
+        verify_error: None,
+        mem: MemStats::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::memcpy::Memcpy;
+    use crate::workloads::prefix::Prefix;
+
+    #[test]
+    fn builder_reproduces_paper_config() {
+        let m = Machine::paper_default();
+        assert_eq!(m.core_config().vlen_bits, 256);
+        assert_eq!(m.mem_config().llc.block_bits, 16384);
+        let core = m.build();
+        assert_eq!(core.cfg.vlen_bits, 256);
+        assert!(core.pool.get(0).is_some() && core.pool.get(3).is_some());
+    }
+
+    #[test]
+    fn llc_block_keeps_capacity() {
+        let m = Machine::paper_default().llc_block(2048);
+        let llc = m.mem_config().llc;
+        assert_eq!(llc.block_bits, 2048);
+        assert_eq!(llc.capacity_bytes(), 256 * 1024);
+    }
+
+    #[test]
+    fn vlen_preserves_overrides() {
+        let m = Machine::paper_default().llc_block(4096).dram_bytes(128 * 1024 * 1024).vlen(512);
+        assert_eq!(m.core_config().vlen_bits, 512);
+        assert_eq!(m.mem_config().llc.block_bits, 4096);
+        assert_eq!(m.mem_config().llc.capacity_bytes(), 256 * 1024);
+        assert_eq!(m.mem_config().dram.size_bytes, 128 * 1024 * 1024);
+        assert_eq!(m.mem_config().dl1.block_bits, 512, "L1 blocks track VLEN");
+    }
+
+    #[test]
+    fn vlen_is_order_independent_for_ways_and_fmax() {
+        // Regression: vlen() used to silently reset llc_ways and an
+        // explicit fmax override to the width defaults.
+        let m = Machine::paper_default().llc_ways(1).fmax_mhz(100.0).vlen(512);
+        assert_eq!(m.mem_config().llc.ways, 1);
+        assert_eq!(m.mem_config().llc.capacity_bytes(), 256 * 1024);
+        assert_eq!(m.core_config().fmax_mhz, 100.0);
+        // Without an explicit override the clock re-derives from width.
+        let m = Machine::paper_default().vlen(1024);
+        assert_eq!(m.core_config().fmax_mhz, 125.0);
+    }
+
+    #[test]
+    fn run_executes_and_verifies_a_workload() {
+        let m = Machine::paper_default();
+        let mut w = Memcpy::new();
+        let r = m.run(&mut w, &Scenario::new(Variant::Vector, 64 * 1024)).unwrap();
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.elems, 16 * 1024);
+        assert!(r.throughput.bytes_per_cycle() > 2.5);
+    }
+
+    #[test]
+    fn run_rejects_missing_units() {
+        let m = Machine::paper_default().without_unit(3);
+        let mut w = Prefix::new();
+        let err = m.run(&mut w, &Scenario::new(Variant::Vector, 1024)).unwrap_err();
+        assert!(matches!(err, MachineError::MissingUnit { slot: 3, .. }), "{err}");
+        // The scalar variant does not need c3 and still runs.
+        let r = m.run(&mut w, &Scenario::new(Variant::Scalar, 1024)).unwrap();
+        assert_eq!(r.verified, Some(true));
+    }
+
+    #[test]
+    fn run_rejects_unknown_variant() {
+        let m = Machine::paper_default();
+        let mut w = crate::workloads::cpubench::CpuBench::dhrystone();
+        let err = m.run(&mut w, &Scenario::new(Variant::Vector, 10)).unwrap_err();
+        assert!(matches!(err, MachineError::UnsupportedVariant { .. }), "{err}");
+    }
+
+    #[test]
+    fn dram_auto_sizes_to_workload() {
+        // 64 MiB of default DRAM cannot hold a 32 MiB copy (two buffers
+        // above BUF_BASE); run() must grow it rather than fault.
+        let m = Machine::paper_default();
+        let mut w = Memcpy::new();
+        let r = m.run(&mut w, &Scenario::new(Variant::Vector, 32 * 1024 * 1024)).unwrap();
+        assert_eq!(r.verified, Some(true));
+    }
+
+    #[test]
+    fn with_unit_overrides_a_slot() {
+        use crate::simd::{UnitError, UnitInputs, UnitOutput};
+        struct Nop;
+        impl CustomUnit for Nop {
+            fn name(&self) -> &'static str {
+                "nop"
+            }
+            fn describe(&self, _f3: u8) -> Option<&'static str> {
+                Some("no-op")
+            }
+            fn execute(&mut self, _inp: &UnitInputs) -> Result<UnitOutput, UnitError> {
+                Ok(UnitOutput::nothing(1))
+            }
+        }
+        let m = Machine::paper_default().with_unit(2, |_lanes| Box::new(Nop));
+        let core = m.build();
+        assert_eq!(core.pool.get(2).unwrap().name(), "nop");
+    }
+
+    #[test]
+    fn pico_harness_runs_scalar_workloads() {
+        let mut w = crate::workloads::stream::Stream::new(crate::workloads::stream::Kernel::Copy);
+        let r = run_on_pico(&mut w, PicoConfig::default(), &Scenario::new(Variant::Scalar, 1024))
+            .unwrap();
+        assert_eq!(r.verified, None);
+        assert!(r.throughput.cycles > 0);
+        // Pico is flat and slow: well under 1 B/cycle.
+        assert!(r.throughput.bytes_per_cycle() < 1.0);
+        let err =
+            run_on_pico(&mut w, PicoConfig::default(), &Scenario::new(Variant::Vector, 1024))
+                .unwrap_err();
+        assert!(matches!(err, MachineError::UnsupportedVariant { .. }));
+    }
+}

@@ -1,11 +1,19 @@
 //! `simdsoftcore` — CLI for the softcore framework: run programs on the
-//! simulated core, regenerate every table/figure of the paper, inspect
-//! the fabric artifacts.
+//! simulated core, run any registered workload across a configuration
+//! sweep, regenerate every table/figure of the paper, inspect the fabric
+//! artifacts.
 //!
 //! ```text
 //! simdsoftcore <command> [options]
 //!
-//! experiments:
+//! workloads:
+//!   run-workload <name> [--variant v] [--size N] [--vlen N]
+//!                [--llc-block N] [--sweep axis=a,b,c]... [--json]
+//!                                       run a registered workload; sweep
+//!                                       axes: variant, vlen, llc-block, size
+//!   list-workloads                      registry contents
+//!
+//! experiments (all accept --json):
 //!   fig3 [--side left|right] [--full]   memcpy design-space sweeps
 //!   fig4 [--full] [--ratios]            adapted STREAM vs PicoRV32
 //!   table1                              selected configuration
@@ -25,9 +33,10 @@
 //!   config                              print the Table-1 configuration
 //! ```
 
-use simdsoftcore::coordinator::{experiments as exp, Scale};
+use simdsoftcore::coordinator::{experiments as exp, Scale, Table};
 use simdsoftcore::core::{Core, Trace};
-use simdsoftcore::runtime::Fabric;
+use simdsoftcore::machine::Machine;
+use simdsoftcore::workloads::{registry, Scenario, Variant};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
@@ -36,79 +45,8 @@ fn main() -> ExitCode {
         eprintln!("{}", usage());
         return ExitCode::FAILURE;
     };
-    let flags: Vec<&str> = args[1..].iter().map(|s| s.as_str()).collect();
-    let has = |f: &str| flags.contains(&f);
-    let opt_val = |f: &str| -> Option<&str> {
-        flags.iter().position(|&a| a == f).and_then(|i| flags.get(i + 1).copied())
-    };
-    let scale = Scale { full: has("--full") };
-
-    let result: Result<(), String> = match cmd.as_str() {
-        "fig3" => {
-            let side = opt_val("--side").unwrap_or("both");
-            if side == "left" || side == "both" {
-                print!("{}", exp::fig3_left(scale).render());
-            }
-            if side == "right" || side == "both" {
-                print!("{}", exp::fig3_right(scale).render());
-            }
-            Ok(())
-        }
-        "fig4" => {
-            if has("--ratios") {
-                print!("{}", exp::fig4_ratios(scale).render());
-            } else {
-                print!("{}", exp::fig4(scale).render());
-            }
-            Ok(())
-        }
-        "table1" | "config" => {
-            print!("{}", exp::table1().render());
-            Ok(())
-        }
-        "table2" => {
-            print!("{}", exp::table2().render());
-            Ok(())
-        }
-        "fig5" => {
-            print!("{}", exp::fig5().render());
-            Ok(())
-        }
-        "fig6" => {
-            print!("{}", exp::fig6());
-            Ok(())
-        }
-        "memcpy" => {
-            print!("{}", exp::memcpy_headline(scale).render());
-            Ok(())
-        }
-        "sort-speedup" => {
-            print!("{}", exp::sec43_sort(scale).render());
-            Ok(())
-        }
-        "prefix-speedup" => {
-            print!("{}", exp::sec43_prefix(scale).render());
-            Ok(())
-        }
-        "discussion" => {
-            print!("{}", exp::discussion().render());
-            Ok(())
-        }
-        "all" => {
-            run_all(scale, has("--markdown"));
-            Ok(())
-        }
-        "run" => run_program(&flags),
-        "disasm" => disasm_program(&flags),
-        "fabric" => fabric_info(opt_val("--dir")),
-        "--help" | "help" | "-h" => {
-            println!("{}", usage());
-            Ok(())
-        }
-        other => Err(format!("unknown command '{other}'\n{}", usage())),
-    };
-
-    match result {
+    let flags = Flags::new(&args[1..]);
+    match dispatch(cmd, &flags) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e}");
@@ -117,13 +55,197 @@ fn main() -> ExitCode {
     }
 }
 
+fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
+    let scale = Scale { full: flags.has("--full") };
+    let json = flags.has("--json");
+    // Render one experiment table in the selected format.
+    let emit = |t: Table| {
+        if json {
+            println!("{}", t.render_json());
+        } else {
+            print!("{}", t.render());
+        }
+    };
+
+    match cmd {
+        "fig3" => {
+            let side = flags.opt_val("--side")?.unwrap_or("both");
+            if !["left", "right", "both"].contains(&side) {
+                return Err(format!("--side must be left|right|both, got '{side}'"));
+            }
+            let mut tables = Vec::new();
+            if side == "left" || side == "both" {
+                tables.push(exp::fig3_left(scale));
+            }
+            if side == "right" || side == "both" {
+                tables.push(exp::fig3_right(scale));
+            }
+            if json {
+                // Always one parseable document: fig3 emits an array
+                // (it can carry one or two tables depending on --side).
+                println!("{}", Table::render_json_array(&tables));
+            } else {
+                for t in tables {
+                    print!("{}", t.render());
+                }
+            }
+            Ok(())
+        }
+        "fig4" => {
+            if flags.has("--ratios") {
+                emit(exp::fig4_ratios(scale));
+            } else {
+                emit(exp::fig4(scale));
+            }
+            Ok(())
+        }
+        "table1" | "config" => {
+            emit(exp::table1());
+            Ok(())
+        }
+        "table2" => {
+            emit(exp::table2());
+            Ok(())
+        }
+        "fig5" => {
+            emit(exp::fig5());
+            Ok(())
+        }
+        "fig6" => {
+            if json {
+                println!("{}", fig6_table().render_json());
+            } else {
+                print!("{}", exp::fig6());
+            }
+            Ok(())
+        }
+        "memcpy" => {
+            emit(exp::memcpy_headline(scale));
+            Ok(())
+        }
+        "sort-speedup" => {
+            emit(exp::sec43_sort(scale));
+            Ok(())
+        }
+        "prefix-speedup" => {
+            emit(exp::sec43_prefix(scale));
+            Ok(())
+        }
+        "discussion" => {
+            emit(exp::discussion());
+            Ok(())
+        }
+        "all" => {
+            run_all(scale, flags.has("--markdown"), json);
+            Ok(())
+        }
+        "run-workload" => run_workload(flags, json),
+        "list-workloads" => {
+            list_workloads();
+            Ok(())
+        }
+        "run" => run_program(flags),
+        "disasm" => disasm_program(flags),
+        "fabric" => fabric_info(flags.opt_val("--dir")?),
+        "--help" | "help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
 fn usage() -> &'static str {
-    "usage: simdsoftcore <fig3|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fig3|fig4|table1|table2|fig5|fig6|memcpy|\
+     sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
      see the header of rust/src/main.rs for details"
 }
 
-fn run_all(scale: Scale, markdown: bool) {
-    let tables = vec![
+/// Command-line flags after the subcommand. `opt_val` is strict: a flag
+/// that takes a value errors out when the value is missing (e.g. the
+/// flag is the last argument) instead of being silently ignored.
+struct Flags {
+    args: Vec<String>,
+}
+
+impl Flags {
+    fn new(args: &[String]) -> Self {
+        Self { args: args.to_vec() }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+
+    /// The value following `flag`, if the flag is present. Errors when
+    /// the flag is given without a value.
+    fn opt_val(&self, flag: &str) -> Result<Option<&str>, String> {
+        match self.args.iter().position(|a| a == flag) {
+            None => Ok(None),
+            Some(i) => match self.args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => Ok(Some(v)),
+                _ => Err(format!("flag '{flag}' requires a value\n{}", usage())),
+            },
+        }
+    }
+
+    /// Every value of a repeatable flag (e.g. `--sweep`), with the same
+    /// missing-value check.
+    fn opt_vals(&self, flag: &str) -> Result<Vec<&str>, String> {
+        let mut out = Vec::new();
+        for (i, a) in self.args.iter().enumerate() {
+            if a == flag {
+                match self.args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => out.push(v.as_str()),
+                    _ => return Err(format!("flag '{flag}' requires a value\n{}", usage())),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional arguments: everything that is not a flag or the value
+    /// of one of `value_flags`.
+    fn positional(&self, value_flags: &[&str]) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut skip = false;
+        for a in &self.args {
+            if skip {
+                skip = false;
+                continue;
+            }
+            if value_flags.contains(&a.as_str()) {
+                skip = true;
+                continue;
+            }
+            if !a.starts_with("--") {
+                out.push(a.as_str());
+            }
+        }
+        out
+    }
+
+    fn parse_usize(&self, flag: &str) -> Result<Option<usize>, String> {
+        match self.opt_val(flag)? {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("flag '{flag}' needs an unsigned integer, got '{v}'")),
+        }
+    }
+}
+
+/// Fig. 6 is free-form text; for `--json` it is wrapped as a one-cell
+/// table so every experiment subcommand honours the flag.
+fn fig6_table() -> Table {
+    let mut t = Table::new("Fig. 6: pipeline trace (free-form text)", &["trace"]);
+    t.row(&[exp::fig6()]);
+    t
+}
+
+fn run_all(scale: Scale, markdown: bool, json: bool) {
+    let mut tables = vec![
         exp::table1(),
         exp::fig3_left(scale),
         exp::fig3_right(scale),
@@ -136,6 +258,11 @@ fn run_all(scale: Scale, markdown: bool) {
         exp::sec43_prefix(scale),
         exp::discussion(),
     ];
+    if json {
+        tables.push(fig6_table());
+        println!("{}", Table::render_json_array(&tables));
+        return;
+    }
     for t in tables {
         if markdown {
             print!("{}", t.render_markdown());
@@ -150,21 +277,212 @@ fn run_all(scale: Scale, markdown: bool) {
     }
 }
 
-fn run_program(flags: &[&str]) -> Result<(), String> {
-    let path = flags
-        .iter()
-        .find(|a| !a.starts_with("--"))
+fn list_workloads() {
+    println!("registered workloads (run with: simdsoftcore run-workload <name>):");
+    for entry in registry() {
+        let w = entry.make();
+        let variants: Vec<&str> = w.variants().iter().map(|v| v.name()).collect();
+        println!(
+            "  {:<14} [{}] {}  (default size {})",
+            entry.name,
+            variants.join(", "),
+            w.description(),
+            w.default_size(),
+        );
+    }
+}
+
+/// One point of a `run-workload` sweep grid.
+#[derive(Debug, Clone, Copy)]
+struct SweepPoint {
+    variant: Variant,
+    vlen: usize,
+    llc_block: usize,
+    size: usize,
+}
+
+/// Reject configuration values the simulator cannot represent before
+/// any thread is spawned (e.g. `--llc-block 0` would divide by zero in
+/// the LLC geometry math; `--vlen 100` fails cache-config validation).
+fn check_point(p: &SweepPoint) -> Result<(), String> {
+    use simdsoftcore::simd::MAX_VLEN_BITS;
+    if !p.vlen.is_power_of_two() || !(64..=MAX_VLEN_BITS).contains(&p.vlen) {
+        return Err(format!(
+            "vlen {} must be a power of two in 64..={MAX_VLEN_BITS}",
+            p.vlen
+        ));
+    }
+    if !p.llc_block.is_power_of_two() || p.llc_block < p.vlen || p.llc_block > 512 * 1024 {
+        return Err(format!(
+            "llc-block {} must be a power of two in {}..=524288 (>= vlen)",
+            p.llc_block, p.vlen
+        ));
+    }
+    if p.size == 0 {
+        return Err("size must be positive".into());
+    }
+    Machine::for_vlen(p.vlen)
+        .llc_block(p.llc_block)
+        .mem_config()
+        .validate()
+        .map_err(|e| format!("vlen {} / llc-block {}: {e}", p.vlen, p.llc_block))
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "workload panicked".to_string()
+    }
+}
+
+fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
+    const VALUE_FLAGS: &[&str] = &["--variant", "--size", "--vlen", "--llc-block", "--sweep"];
+    let positional = flags.positional(VALUE_FLAGS);
+    let Some(&name) = positional.first() else {
+        return Err(format!(
+            "run-workload needs a workload name; try `simdsoftcore list-workloads`\n{}",
+            usage()
+        ));
+    };
+    let Some(probe) = simdsoftcore::workloads::lookup(name) else {
+        let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
+        return Err(format!("unknown workload '{name}'; known: {}", names.join(", ")));
+    };
+
+    // Fixed-point defaults, overridable by --variant/--vlen/--llc-block/--size.
+    let mut variants: Vec<Variant> = probe.variants().to_vec();
+    if let Some(v) = flags.opt_val("--variant")? {
+        let v = Variant::parse(v)
+            .ok_or_else(|| format!("--variant must be scalar|vector, got '{v}'"))?;
+        if !probe.variants().contains(&v) {
+            return Err(format!("workload '{name}' has no {v} variant"));
+        }
+        variants = vec![v];
+    }
+    let mut vlens = vec![flags.parse_usize("--vlen")?.unwrap_or(256)];
+    let mut blocks = vec![flags.parse_usize("--llc-block")?.unwrap_or(16384)];
+    let mut sizes = vec![flags.parse_usize("--size")?.unwrap_or_else(|| probe.default_size())];
+
+    // Sweep axes replace the fixed point on their axis.
+    for spec in flags.opt_vals("--sweep")? {
+        let (axis, vals) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
+        let parse_list = |what: &str| -> Result<Vec<usize>, String> {
+            vals.split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse()
+                        .map_err(|_| format!("bad {what} value '{v}' in --sweep {spec}"))
+                })
+                .collect()
+        };
+        match axis {
+            "vlen" => vlens = parse_list("vlen")?,
+            "llc-block" | "llc_block" => blocks = parse_list("llc-block")?,
+            "size" => sizes = parse_list("size")?,
+            "variant" => {
+                variants = vals
+                    .split(',')
+                    .map(|v| {
+                        Variant::parse(v.trim())
+                            .ok_or_else(|| format!("bad variant '{v}' in --sweep {spec}"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            other => {
+                return Err(format!(
+                    "unknown sweep axis '{other}' (axes: variant, vlen, llc-block, size)"
+                ))
+            }
+        }
+    }
+
+    // Cartesian grid, validated up front (bad widths/blocks are usage
+    // errors, not panics inside sweep threads).
+    let mut points = Vec::new();
+    for &vlen in &vlens {
+        for &llc_block in &blocks {
+            for &size in &sizes {
+                for &variant in &variants {
+                    let p = SweepPoint { variant, vlen, llc_block, size };
+                    check_point(&p)?;
+                    points.push(p);
+                }
+            }
+        }
+    }
+    // Executed on a bounded worker pool (a grid can be large; one
+    // uncapped thread per point would oversubscribe the host).
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let results = simdsoftcore::coordinator::sweep::parallel_map_bounded(points, threads, |p| {
+        // Workload-specific size constraints are assertions; contain
+        // them to a failed row instead of a CLI abort.
+        let run = std::panic::catch_unwind(|| {
+            let mut w = simdsoftcore::workloads::lookup(name).expect("name checked above");
+            let machine = Machine::for_vlen(p.vlen).llc_block(p.llc_block);
+            machine.run(&mut *w, &Scenario::new(p.variant, p.size))
+        });
+        let r = match run {
+            Ok(r) => r.map_err(|e| e.to_string()),
+            Err(panic) => Err(panic_message(&panic)),
+        };
+        (p, r)
+    });
+
+    let mut t = Table::new(
+        format!("run-workload {name}"),
+        &["variant", "VLEN", "LLC block", "size", "cycles", "GB/s", "B/cycle", "cyc/elem", "IPC", "verified"],
+    );
+    let mut failed = false;
+    for (p, r) in results {
+        match r {
+            Ok(r) => t.row(&[
+                p.variant.to_string(),
+                p.vlen.to_string(),
+                p.llc_block.to_string(),
+                p.size.to_string(),
+                r.throughput.cycles.to_string(),
+                format!("{:.3}", r.throughput.bytes_per_second() / 1e9),
+                format!("{:.2}", r.throughput.bytes_per_cycle()),
+                format!("{:.2}", r.cycles_per_elem()),
+                format!("{:.3}", r.throughput.ipc()),
+                r.verified_cell(),
+            ]),
+            Err(e) => {
+                failed = true;
+                t.note(format!(
+                    "FAILED {} vlen={} llc-block={} size={}: {e}",
+                    p.variant, p.vlen, p.llc_block, p.size
+                ));
+            }
+        }
+    }
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+    if failed {
+        return Err("one or more sweep points failed (see notes above)".into());
+    }
+    Ok(())
+}
+
+fn run_program(flags: &Flags) -> Result<(), String> {
+    let path = *flags
+        .positional(&["--vlen"])
+        .first()
         .ok_or("run needs a .s file argument")?;
     let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let prog = simdsoftcore::asm::assemble_text(&src).map_err(|e| e.to_string())?;
-    let vlen: usize = flags
-        .iter()
-        .position(|&a| a == "--vlen")
-        .and_then(|i| flags.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(256);
+    let vlen: usize = flags.parse_usize("--vlen")?.unwrap_or(256);
     let mut core = Core::for_vlen(vlen);
-    if flags.contains(&"--trace") {
+    if flags.has("--trace") {
         core.trace = Trace::full();
     }
     core.load(&prog);
@@ -181,16 +499,16 @@ fn run_program(flags: &[&str]) -> Result<(), String> {
     for (name, r) in [("a0", A0), ("a1", A1), ("a2", A2), ("a3", A3)] {
         println!("  {name} = {:#010x} ({})", core.reg(r), core.reg(r) as i32);
     }
-    if flags.contains(&"--trace") {
+    if flags.has("--trace") {
         println!("{}", core.trace.render_pipeline());
     }
     Ok(())
 }
 
-fn disasm_program(flags: &[&str]) -> Result<(), String> {
-    let path = flags
-        .iter()
-        .find(|a| !a.starts_with("--"))
+fn disasm_program(flags: &Flags) -> Result<(), String> {
+    let path = *flags
+        .positional(&[])
+        .first()
         .ok_or("disasm needs a .s file argument")?;
     let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let prog = simdsoftcore::asm::assemble_text(&src).map_err(|e| e.to_string())?;
@@ -198,7 +516,9 @@ fn disasm_program(flags: &[&str]) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn fabric_info(dir: Option<&str>) -> Result<(), String> {
+    use simdsoftcore::runtime::Fabric;
     let dir = dir
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Fabric::default_dir);
@@ -216,4 +536,74 @@ fn fabric_info(dir: Option<&str>) -> Result<(), String> {
     let sorted = fabric.sort_rows(&vals, 1).map_err(|e| format!("{e:#}"))?;
     println!("smoke: sort{lanes} {vals:?} -> {sorted:?}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn fabric_info(dir: Option<&str>) -> Result<(), String> {
+    use simdsoftcore::runtime;
+    let dir = dir
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(runtime::default_artifact_dir);
+    let state = if runtime::artifacts_available(&dir) { "present" } else { "absent" };
+    Err(format!(
+        "this binary was built without the 'pjrt' feature (artifacts {state} at {dir:?}); \
+         rebuild with `cargo build --features pjrt` to load the fabric"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(args: &[&str]) -> Flags {
+        Flags::new(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn opt_val_returns_present_value() {
+        let f = flags(&["--side", "left", "--full"]);
+        assert_eq!(f.opt_val("--side").unwrap(), Some("left"));
+        assert_eq!(f.opt_val("--vlen").unwrap(), None);
+        assert!(f.has("--full"));
+    }
+
+    #[test]
+    fn opt_val_rejects_flag_as_last_argument() {
+        // Regression: `simdsoftcore fig3 --side` used to silently behave
+        // like no --side at all; it must be a usage error.
+        let f = flags(&["--full", "--side"]);
+        let err = f.opt_val("--side").unwrap_err();
+        assert!(err.contains("'--side' requires a value"), "{err}");
+    }
+
+    #[test]
+    fn opt_val_rejects_flag_followed_by_flag() {
+        let f = flags(&["--side", "--full"]);
+        assert!(f.opt_val("--side").is_err());
+    }
+
+    #[test]
+    fn opt_vals_collects_repeats_and_checks_values() {
+        let f = flags(&["--sweep", "vlen=128,256", "--sweep", "size=1024"]);
+        assert_eq!(f.opt_vals("--sweep").unwrap(), vec!["vlen=128,256", "size=1024"]);
+        let f = flags(&["--sweep", "vlen=128", "--sweep"]);
+        assert!(f.opt_vals("--sweep").is_err());
+    }
+
+    #[test]
+    fn positional_skips_flag_values() {
+        let f = flags(&["--vlen", "512", "prog.s", "--trace"]);
+        assert_eq!(f.positional(&["--vlen"]), vec!["prog.s"]);
+        // A sweep value like `vlen=128,256` must not look positional.
+        let f = flags(&["memcpy", "--sweep", "vlen=128,256"]);
+        assert_eq!(f.positional(&["--sweep"]), vec!["memcpy"]);
+    }
+
+    #[test]
+    fn parse_usize_validates() {
+        let f = flags(&["--vlen", "512"]);
+        assert_eq!(f.parse_usize("--vlen").unwrap(), Some(512));
+        let f = flags(&["--vlen", "lots"]);
+        assert!(f.parse_usize("--vlen").is_err());
+    }
 }

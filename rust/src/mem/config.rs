@@ -6,8 +6,6 @@
 //! 256 bits), AXI-style interconnect 128 bits wide at double rate
 //! (§3.1.4), softcore clocked at 150 MHz.
 
-use thiserror::Error;
-
 /// Block replacement policy for the set-associative caches (§3.1: the
 /// paper chooses NRU and notes a random policy "would stagnate the
 /// bandwidth for memory copying when the source and destination are
@@ -77,19 +75,39 @@ pub struct MemConfig {
     pub replacement: Replacement,
 }
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MemConfigError {
-    #[error("{what} must be a power of two (got {got})")]
     NotPowerOfTwo { what: &'static str, got: usize },
-    #[error("IL1 and DL1 block sizes must match the LLC sub-block size; got IL1={il1}, DL1={dl1} bits")]
     L1BlockMismatch { il1: usize, dl1: usize },
-    #[error("LLC block ({llc} bits) must be a multiple of the L1 block ({l1} bits)")]
     LlcBlockTooSmall { llc: usize, l1: usize },
-    #[error("block size {0} bits is not a multiple of 32")]
     BlockNotWordMultiple(usize),
-    #[error("DRAM size {0} bytes is not a multiple of the LLC block size")]
     DramNotBlockMultiple(usize),
 }
+
+impl std::fmt::Display for MemConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemConfigError::NotPowerOfTwo { what, got } => {
+                write!(f, "{what} must be a power of two (got {got})")
+            }
+            MemConfigError::L1BlockMismatch { il1, dl1 } => write!(
+                f,
+                "IL1 and DL1 block sizes must match the LLC sub-block size; got IL1={il1}, DL1={dl1} bits"
+            ),
+            MemConfigError::LlcBlockTooSmall { llc, l1 } => {
+                write!(f, "LLC block ({llc} bits) must be a multiple of the L1 block ({l1} bits)")
+            }
+            MemConfigError::BlockNotWordMultiple(bits) => {
+                write!(f, "block size {bits} bits is not a multiple of 32")
+            }
+            MemConfigError::DramNotBlockMultiple(bytes) => {
+                write!(f, "DRAM size {bytes} bytes is not a multiple of the LLC block size")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemConfigError {}
 
 impl MemConfig {
     /// Table 1 configuration (VLEN = 256 bits).

@@ -12,178 +12,229 @@
 //!
 //! Python never appears on this path: artifacts are plain HLO text files;
 //! loading and execution is rust + PJRT only.
+//!
+//! The PJRT path needs the `xla` bindings, which are unavailable in the
+//! default (offline, dependency-free) build, so everything that touches
+//! PJRT sits behind the **`pjrt` cargo feature**. The artifact-directory
+//! probes ([`artifacts_available`], [`default_artifact_dir`]) stay
+//! unconditional so feature-less builds can still report fabric status,
+//! and fabric-dependent tests skip-with-a-note when artifacts are absent.
 
+#[cfg(feature = "pjrt")]
 pub mod hlo_unit;
 
+#[cfg(feature = "pjrt")]
 pub use hlo_unit::hlo_pool;
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+pub use fabric::Fabric;
+
 use std::path::{Path, PathBuf};
 
 /// Default artifact directory (relative to the repo root).
 pub const ARTIFACT_DIR: &str = "artifacts";
 
-/// A loaded fabric: the PJRT client plus lazily-compiled executables.
-pub struct Fabric {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    /// name → artifact file (from manifest.txt).
-    files: HashMap<String, PathBuf>,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub lanes: usize,
+/// True if `dir` holds a built artifact set.
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.txt").exists()
 }
 
-impl Fabric {
-    /// True if `dir` holds a built artifact set.
-    pub fn available(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("manifest.txt").exists()
-    }
-
-    /// Locate the artifact dir from the current working directory or the
-    /// repo root (tests run from target subdirs).
-    pub fn default_dir() -> PathBuf {
-        for cand in [ARTIFACT_DIR, "../artifacts", "../../artifacts"] {
-            let p = PathBuf::from(cand);
-            if Self::available(&p) {
-                return p;
-            }
+/// Locate the artifact dir from the current working directory or the
+/// repo root (tests run from target subdirs).
+pub fn default_artifact_dir() -> PathBuf {
+    for cand in [ARTIFACT_DIR, "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if artifacts_available(&p) {
+            return p;
         }
-        PathBuf::from(ARTIFACT_DIR)
+    }
+    PathBuf::from(ARTIFACT_DIR)
+}
+
+#[cfg(feature = "pjrt")]
+mod fabric {
+    use super::{artifacts_available, default_artifact_dir};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// A loaded fabric: the PJRT client plus lazily-compiled executables.
+    pub struct Fabric {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        /// name → artifact file (from manifest.txt).
+        files: HashMap<String, PathBuf>,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub lanes: usize,
     }
 
-    /// Open the fabric: parse the manifest, create the PJRT client.
-    /// Executables are compiled on first use.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
-        let mut files = HashMap::new();
-        let mut lanes = 8usize;
-        for line in text.lines() {
-            if let Some(rest) = line.strip_prefix('#') {
-                if let Some(l) = rest.split("lanes=").nth(1) {
-                    lanes = l.trim().parse().unwrap_or(8);
+    impl Fabric {
+        /// True if `dir` holds a built artifact set.
+        pub fn available(dir: impl AsRef<Path>) -> bool {
+            artifacts_available(dir)
+        }
+
+        /// Locate the artifact dir from the current working directory or
+        /// the repo root (tests run from target subdirs).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+
+        /// Open the fabric: parse the manifest, create the PJRT client.
+        /// Executables are compiled on first use.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+            let mut files = HashMap::new();
+            let mut lanes = 8usize;
+            for line in text.lines() {
+                if let Some(rest) = line.strip_prefix('#') {
+                    if let Some(l) = rest.split("lanes=").nth(1) {
+                        lanes = l.trim().parse().unwrap_or(8);
+                    }
+                    continue;
                 }
-                continue;
+                let mut parts = line.split('\t');
+                if let (Some(name), Some(rel)) = (parts.next(), parts.next()) {
+                    files.insert(name.to_string(), dir.join(rel));
+                }
             }
-            let mut parts = line.split('\t');
-            if let (Some(name), Some(rel)) = (parts.next(), parts.next()) {
-                files.insert(name.to_string(), dir.join(rel));
+            if files.is_empty() {
+                bail!("manifest {manifest:?} lists no artifacts");
             }
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self { client, dir, files, exes: HashMap::new(), lanes })
         }
-        if files.is_empty() {
-            bail!("manifest {manifest:?} lists no artifacts");
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, dir, files, exes: HashMap::new(), lanes })
-    }
 
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Artifact names listed in the manifest.
-    pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.files.keys().cloned().collect();
-        v.sort();
-        v
-    }
-
-    /// Ensure `name` is compiled ("load the bitstream into the slot").
-    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
+        /// Artifact names listed in the manifest.
+        pub fn names(&self) -> Vec<String> {
+            let mut v: Vec<String> = self.files.keys().cloned().collect();
+            v.sort();
+            v
         }
-        let path = self
-            .files
-            .get(name)
-            .ok_or_else(|| anyhow!("fabric has no artifact '{name}'"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
+
+        /// Ensure `name` is compiled ("load the bitstream into the slot").
+        pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+            if self.exes.contains_key(name) {
+                return Ok(());
+            }
+            let path = self
+                .files
+                .get(name)
+                .ok_or_else(|| anyhow!("fabric has no artifact '{name}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute artifact `name` over i32 inputs with explicit dims;
+        /// returns each tuple element flattened.
+        pub fn run_i32(
+            &mut self,
+            name: &str,
+            inputs: &[(&[i32], &[i64])],
+        ) -> Result<Vec<Vec<i32>>> {
+            self.ensure_compiled(name)?;
+            let exe = self.exes.get(name).expect("just compiled");
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] == data.len() as i64 {
+                    lit
+                } else {
+                    lit.reshape(dims)?
+                };
+                lits.push(lit);
+            }
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<i32>().map_err(Into::into))
+                .collect()
+        }
+
+        // ---- typed wrappers over the standard artifact set --------------
+
+        fn batched(&self, base: &str, batch: usize) -> String {
+            format!("{base}_b{batch}")
+        }
+
+        /// c2_sort over a batch: `rows` is `batch × lanes` i32 values.
+        pub fn sort_rows(&mut self, rows: &[i32], batch: usize) -> Result<Vec<i32>> {
+            let lanes = self.lanes;
+            debug_assert_eq!(rows.len(), batch * lanes);
+            let name = self.batched("sort8", batch);
+            let out = self.run_i32(&name, &[(rows, &[batch as i64, lanes as i64])])?;
+            Ok(out.into_iter().next().expect("1-tuple"))
+        }
+
+        /// c1_merge over a batch; returns (low halves, high halves).
+        pub fn merge_rows(
+            &mut self,
+            a: &[i32],
+            b: &[i32],
+            batch: usize,
+        ) -> Result<(Vec<i32>, Vec<i32>)> {
+            let lanes = self.lanes;
+            debug_assert_eq!(a.len(), batch * lanes);
+            debug_assert_eq!(b.len(), batch * lanes);
+            let name = self.batched("merge", batch);
+            let dims = [batch as i64, lanes as i64];
+            let mut out = self.run_i32(&name, &[(a, &dims), (b, &dims)])?;
+            let hi = out.pop().ok_or_else(|| anyhow!("merge returned <2 results"))?;
+            let lo = out.pop().ok_or_else(|| anyhow!("merge returned <2 results"))?;
+            Ok((lo, hi))
+        }
+
+        /// c3_prefix over a batch with carry; returns (scanned, carry_out).
+        pub fn prefix(&mut self, x: &[i32], batch: usize, carry: i32) -> Result<(Vec<i32>, i32)> {
+            let lanes = self.lanes;
+            debug_assert_eq!(x.len(), batch * lanes);
+            let name = self.batched("prefix", batch);
+            let carry_in = [carry];
+            let mut out = self.run_i32(
+                &name,
+                &[(x, &[batch as i64, lanes as i64]), (&carry_in, &[1])],
+            )?;
+            let carry_out = out.pop().ok_or_else(|| anyhow!("prefix returned <2 results"))?;
+            let scanned = out.pop().ok_or_else(|| anyhow!("prefix returned <2 results"))?;
+            Ok((scanned, carry_out[0]))
+        }
+
+        /// The L2 whole-block sorter artifact (`sort_block_N`).
+        pub fn sort_block(&mut self, x: &[i32]) -> Result<Vec<i32>> {
+            let name = format!("sort_block_{}", x.len());
+            let out = self.run_i32(&name, &[(x, &[x.len() as i64])])?;
+            Ok(out.into_iter().next().expect("1-tuple"))
+        }
     }
 
-    /// Execute artifact `name` over i32 inputs with explicit dims; returns
-    /// each tuple element flattened.
-    pub fn run_i32(&mut self, name: &str, inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
-        self.ensure_compiled(name)?;
-        let exe = self.exes.get(name).expect("just compiled");
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] == data.len() as i64 {
-                lit
-            } else {
-                lit.reshape(dims)?
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Full end-to-end fabric tests live in
+        // rust/tests/fabric_crosscheck.rs (they need built artifacts).
+        // Here: error-path handling only.
+
+        #[test]
+        fn open_missing_dir_errors_helpfully() {
+            let err = match Fabric::open("/nonexistent/path") {
+                Err(e) => e,
+                Ok(_) => panic!("open should fail"),
             };
-            lits.push(lit);
+            assert!(format!("{err:#}").contains("make artifacts"), "{err}");
         }
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<i32>().map_err(Into::into))
-            .collect()
-    }
-
-    // ---- typed wrappers over the standard artifact set ------------------
-
-    fn batched(&self, base: &str, batch: usize) -> String {
-        format!("{base}_b{batch}")
-    }
-
-    /// c2_sort over a batch: `rows` is `batch × lanes` i32 values.
-    pub fn sort_rows(&mut self, rows: &[i32], batch: usize) -> Result<Vec<i32>> {
-        let lanes = self.lanes;
-        debug_assert_eq!(rows.len(), batch * lanes);
-        let name = self.batched("sort8", batch);
-        let out = self.run_i32(&name, &[(rows, &[batch as i64, lanes as i64])])?;
-        Ok(out.into_iter().next().expect("1-tuple"))
-    }
-
-    /// c1_merge over a batch; returns (low halves, high halves).
-    pub fn merge_rows(
-        &mut self,
-        a: &[i32],
-        b: &[i32],
-        batch: usize,
-    ) -> Result<(Vec<i32>, Vec<i32>)> {
-        let lanes = self.lanes;
-        debug_assert_eq!(a.len(), batch * lanes);
-        debug_assert_eq!(b.len(), batch * lanes);
-        let name = self.batched("merge", batch);
-        let dims = [batch as i64, lanes as i64];
-        let mut out = self.run_i32(&name, &[(a, &dims), (b, &dims)])?;
-        let hi = out.pop().ok_or_else(|| anyhow!("merge returned <2 results"))?;
-        let lo = out.pop().ok_or_else(|| anyhow!("merge returned <2 results"))?;
-        Ok((lo, hi))
-    }
-
-    /// c3_prefix over a batch with carry; returns (scanned, carry_out).
-    pub fn prefix(&mut self, x: &[i32], batch: usize, carry: i32) -> Result<(Vec<i32>, i32)> {
-        let lanes = self.lanes;
-        debug_assert_eq!(x.len(), batch * lanes);
-        let name = self.batched("prefix", batch);
-        let carry_in = [carry];
-        let mut out = self.run_i32(
-            &name,
-            &[(x, &[batch as i64, lanes as i64]), (&carry_in, &[1])],
-        )?;
-        let carry_out = out.pop().ok_or_else(|| anyhow!("prefix returned <2 results"))?;
-        let scanned = out.pop().ok_or_else(|| anyhow!("prefix returned <2 results"))?;
-        Ok((scanned, carry_out[0]))
-    }
-
-    /// The L2 whole-block sorter artifact (`sort_block_N`).
-    pub fn sort_block(&mut self, x: &[i32]) -> Result<Vec<i32>> {
-        let name = format!("sort_block_{}", x.len());
-        let out = self.run_i32(&name, &[(x, &[x.len() as i64])])?;
-        Ok(out.into_iter().next().expect("1-tuple"))
     }
 }
 
@@ -191,20 +242,16 @@ impl Fabric {
 mod tests {
     use super::*;
 
-    // Full end-to-end fabric tests live in rust/tests/fabric_crosscheck.rs
-    // (they need built artifacts). Here: path handling only.
-
     #[test]
     fn available_is_false_for_missing_dir() {
-        assert!(!Fabric::available("/nonexistent/path"));
+        assert!(!artifacts_available("/nonexistent/path"));
     }
 
     #[test]
-    fn open_missing_dir_errors_helpfully() {
-        let err = match Fabric::open("/nonexistent/path") {
-            Err(e) => e,
-            Ok(_) => panic!("open should fail"),
-        };
-        assert!(format!("{err:#}").contains("make artifacts"), "{err}");
+    fn default_dir_falls_back_to_artifact_dir_name() {
+        // In a checkout without built artifacts this returns the default
+        // name; with artifacts it returns an existing manifest dir.
+        let d = default_artifact_dir();
+        assert!(artifacts_available(&d) || d == PathBuf::from(ARTIFACT_DIR));
     }
 }

@@ -15,17 +15,29 @@
 //! the data cache.
 
 use super::value::VecVal;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum UnitError {
-    #[error("unit '{unit}' does not implement funct3={funct3}")]
     BadFunct3 { unit: &'static str, funct3: u8 },
-    #[error("unit '{unit}' requires VLEN with {expected} lanes, got {got}")]
     BadLanes { unit: &'static str, expected: usize, got: usize },
-    #[error("no unit loaded in slot c{0}")]
     EmptySlot(usize),
 }
+
+impl std::fmt::Display for UnitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UnitError::BadFunct3 { unit, funct3 } => {
+                write!(f, "unit '{unit}' does not implement funct3={funct3}")
+            }
+            UnitError::BadLanes { unit, expected, got } => {
+                write!(f, "unit '{unit}' requires VLEN with {expected} lanes, got {got}")
+            }
+            UnitError::EmptySlot(slot) => write!(f, "no unit loaded in slot c{slot}"),
+        }
+    }
+}
+
+impl std::error::Error for UnitError {}
 
 /// Operand values presented to a unit on issue (the template's input
 /// ports: `in_data`, `in_vdata1`, `in_vdata2`, plus S′'s second scalar).

@@ -1,7 +1,7 @@
 //! Shared helpers for the workload programs: buffer layout, host-side
 //! data initialisation and throughput accounting.
 
-use crate::core::{Core, RunResult, SimError};
+use crate::core::{Core, RunResult};
 use crate::util::Xoshiro256;
 
 /// Base address for large workload buffers (above code + static data).
@@ -26,22 +26,27 @@ pub fn layout_buffers(count: usize, bytes: usize) -> Vec<u32> {
     addrs
 }
 
-/// Fill DRAM at `addr` with `n` random i32 values; returns them.
-pub fn init_random_i32(core: &mut Core, addr: u32, n: usize, seed: u64) -> Vec<i32> {
-    let mut rng = Xoshiro256::seeded(seed);
-    let vals = rng.vec_i32(n);
-    let mut bytes = Vec::with_capacity(n * 4);
-    for v in &vals {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    core.mem.host_write(addr, &bytes);
-    vals
+/// `n` deterministic random i32 values for a seed (the host side of
+/// [`init_random_i32`]; workloads generate inputs at build time and
+/// replay them into a core at init time).
+pub fn random_i32s(n: usize, seed: u64) -> Vec<i32> {
+    Xoshiro256::seeded(seed).vec_i32(n)
 }
 
-/// Fill DRAM at `addr` with `n` copies of an i32 value.
-pub fn init_const_i32(core: &mut Core, addr: u32, n: usize, value: i32) {
-    let bytes: Vec<u8> = value.to_le_bytes().repeat(n);
-    core.mem.host_write(addr, &bytes);
+/// Little-endian byte image of a slice of i32 values.
+pub fn i32s_to_bytes(vals: &[i32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+/// Fill DRAM at `addr` with `n` random i32 values; returns them.
+pub fn init_random_i32(core: &mut Core, addr: u32, n: usize, seed: u64) -> Vec<i32> {
+    let vals = random_i32s(n, seed);
+    core.mem.host_write(addr, &i32s_to_bytes(&vals));
+    vals
 }
 
 /// Read back `n` i32 values from DRAM (after `flush_all`).
@@ -83,12 +88,6 @@ impl Throughput {
 
 /// A watchdog budget generous enough for every scaled workload.
 pub const MAX_INSTRS: u64 = 20_000_000_000;
-
-/// Run the already-loaded core to completion and package the throughput.
-pub fn run_measuring(core: &mut Core, bytes: u64) -> Result<Throughput, SimError> {
-    let run = core.run(MAX_INSTRS)?;
-    Ok(Throughput::from_run(core, &run, bytes))
-}
 
 #[cfg(test)]
 mod tests {

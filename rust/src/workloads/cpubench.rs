@@ -18,6 +18,7 @@
 //! the class mix of the originals (integer ALU, loads/stores, branches,
 //! calls; list walk + matrix multiply + state machine for CoreMark).
 
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -259,29 +260,145 @@ pub struct CpuBenchResult {
 }
 
 pub fn run_dhrystone_like(core: &mut Core, iters: u32) -> Result<CpuBenchResult, SimError> {
-    let (prog, expect) = build_dhrystone_like(iters);
-    core.load(&prog);
-    let r = core.run(1_000_000_000)?;
-    Ok(CpuBenchResult {
-        ipc: r.ipc(),
-        cycles: r.cycles,
-        instret: r.instret,
-        verified: core.reg(A0) == expect,
-        derived_score: r.ipc() * DHRYSTONE_DERIVE,
-    })
+    run_kind(core, CpuBenchKind::Dhrystone, iters)
 }
 
 pub fn run_coremark_like(core: &mut Core, iters: u32) -> Result<CpuBenchResult, SimError> {
-    let (prog, expect) = build_coremark_like(iters);
-    core.load(&prog);
-    let r = core.run(1_000_000_000)?;
+    run_kind(core, CpuBenchKind::Coremark, iters)
+}
+
+fn run_kind(core: &mut Core, kind: CpuBenchKind, iters: u32) -> Result<CpuBenchResult, SimError> {
+    let mut w = CpuBench::new(kind);
+    let report = run_on(&mut w, core, &Scenario::new(Variant::Scalar, iters as usize))?;
+    let ipc = report.throughput.ipc();
     Ok(CpuBenchResult {
-        ipc: r.ipc(),
-        cycles: r.cycles,
-        instret: r.instret,
-        verified: core.reg(A0) == expect,
-        derived_score: r.ipc() * COREMARK_DERIVE,
+        ipc,
+        cycles: report.throughput.cycles,
+        instret: report.throughput.instret,
+        verified: report.verified == Some(true),
+        derived_score: ipc * kind.derive(),
     })
+}
+
+/// Which Table-2 kernel a [`CpuBench`] workload runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuBenchKind {
+    Dhrystone,
+    Coremark,
+}
+
+impl CpuBenchKind {
+    /// IPC → score conversion constant (see module docs).
+    pub fn derive(self) -> f64 {
+        match self {
+            CpuBenchKind::Dhrystone => DHRYSTONE_DERIVE,
+            CpuBenchKind::Coremark => COREMARK_DERIVE,
+        }
+    }
+}
+
+/// A Table-2 CPU benchmark behind the [`Workload`] interface.
+/// `Scenario::size` is the iteration count; the workload is scalar-only
+/// (the paper's rows are explicitly "ignoring SIMD").
+pub struct CpuBench {
+    kind: CpuBenchKind,
+    expect: Option<u32>,
+}
+
+impl CpuBench {
+    pub fn new(kind: CpuBenchKind) -> Self {
+        Self { kind, expect: None }
+    }
+
+    pub fn dhrystone() -> Self {
+        Self::new(CpuBenchKind::Dhrystone)
+    }
+
+    pub fn coremark() -> Self {
+        Self::new(CpuBenchKind::Coremark)
+    }
+
+    fn expect(&self) -> u32 {
+        self.expect.expect("Workload::build must run first")
+    }
+}
+
+impl Workload for CpuBench {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            CpuBenchKind::Dhrystone => "dhrystone",
+            CpuBenchKind::Coremark => "coremark",
+        }
+    }
+
+    fn description(&self) -> &'static str {
+        match self.kind {
+            CpuBenchKind::Dhrystone => {
+                "Table-2 Dhrystone-like kernel (DMIPS/MHz from IPC); size = iterations"
+            }
+            CpuBenchKind::Coremark => {
+                "Table-2 CoreMark-like kernel (CoreMark/MHz from IPC); size = iterations"
+            }
+        }
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar]
+    }
+
+    fn required_units(&self, _variant: Variant) -> &'static [usize] {
+        &[]
+    }
+
+    fn default_size(&self) -> usize {
+        match self.kind {
+            CpuBenchKind::Dhrystone => 300,
+            CpuBenchKind::Coremark => 100,
+        }
+    }
+
+    fn smoke_size(&self) -> usize {
+        20
+    }
+
+    fn buffers(&self, _sc: &Scenario) -> (usize, usize) {
+        (0, 0) // static data only; no heap buffers
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let iters = sc.size as u32;
+        let (prog, expect) = match self.kind {
+            CpuBenchKind::Dhrystone => build_dhrystone_like(iters),
+            CpuBenchKind::Coremark => build_coremark_like(iters),
+        };
+        self.expect = Some(expect);
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &[] // inputs live in the program's data segment
+    }
+
+    fn bytes_moved(&self, _sc: &Scenario) -> u64 {
+        0 // IPC benchmark: no payload-byte accounting
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let expect = self.expect();
+        if core.reg(A0) == expect {
+            Ok(())
+        } else {
+            Err(VerifyError::new(format!(
+                "checksum {:#010x} != expected {:#010x}",
+                core.reg(A0),
+                expect
+            )))
+        }
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        vec![core.reg(A0) as i32]
+    }
 }
 
 #[cfg(test)]

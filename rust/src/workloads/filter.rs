@@ -16,7 +16,8 @@
 //!   cursor by the count. This is the SIMD selection kernel of Zhang &
 //!   Ross [48] as *one instruction per vector*.
 
-use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -81,28 +82,124 @@ pub struct FilterResult {
 }
 
 pub fn run(core: &mut Core, n: usize, vector: bool) -> Result<FilterResult, SimError> {
-    let threshold = 0i32; // ~50% selectivity on uniform random i32
-    let addrs = layout_buffers(2, n * 4 + 128);
-    let (src, dst) = (addrs[0], addrs[1]);
-    let prog = if vector {
-        build_vector(src, dst, n, threshold, core.cfg.vlen_bits)
-    } else {
-        build_scalar(src, dst, n, threshold)
-    };
-    core.load(&prog);
-    let input = init_random_i32(core, src, n, 0xF117E4);
-    let throughput = run_measuring(core, (n * 4) as u64)?;
-    core.mem.flush_all();
-    let expect: Vec<i32> = input.iter().copied().filter(|&x| x < threshold).collect();
-    let got = read_i32s(core, dst, expect.len());
-    let count = core.reg(A6);
-    let count_ok = !vector || count as usize == expect.len();
+    let variant = if vector { Variant::Vector } else { Variant::Scalar };
+    let mut w = Filter::new();
+    let report = run_on(&mut w, core, &Scenario::new(variant, n))?;
     Ok(FilterResult {
-        throughput,
-        verified: got == expect && count_ok,
-        selected: count,
-        cycles_per_elem: throughput.cycles as f64 / n as f64,
+        throughput: report.throughput,
+        verified: report.verified == Some(true),
+        selected: core.reg(A6),
+        cycles_per_elem: report.cycles_per_elem(),
     })
+}
+
+/// The parallel-selection workload behind the [`Workload`] interface.
+/// `Scenario::size` is the element count (a multiple of the lane count
+/// for the vector variant).
+pub struct Filter {
+    plan: Option<Plan>,
+}
+
+struct Plan {
+    dst: u32,
+    variant: Variant,
+    expect: Vec<i32>,
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl Filter {
+    pub fn new() -> Self {
+        Self { plan: None }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("Workload::build must run first")
+    }
+}
+
+impl Default for Filter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for Filter {
+    fn name(&self) -> &'static str {
+        "filter"
+    }
+
+    fn description(&self) -> &'static str {
+        "parallel selection (values < 0) via c1.vfilt vs a scalar loop; size = elements"
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar, Variant::Vector]
+    }
+
+    fn required_units(&self, variant: Variant) -> &'static [usize] {
+        match variant {
+            Variant::Scalar => &[],
+            Variant::Vector => &[0, 1],
+        }
+    }
+
+    fn default_size(&self) -> usize {
+        32 * 1024
+    }
+
+    fn smoke_size(&self) -> usize {
+        512
+    }
+
+    fn buffers(&self, sc: &Scenario) -> (usize, usize) {
+        (2, sc.size * 4 + 128)
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let threshold = 0i32; // ~50% selectivity on uniform random i32
+        let n = sc.size;
+        let addrs = layout_buffers(2, n * 4 + 128);
+        let (src, dst) = (addrs[0], addrs[1]);
+        let prog = match sc.variant {
+            Variant::Vector => build_vector(src, dst, n, threshold, sc.vlen_bits),
+            Variant::Scalar => build_scalar(src, dst, n, threshold),
+        };
+        let input = random_i32s(n, 0xF117E4);
+        let expect: Vec<i32> = input.iter().copied().filter(|&x| x < threshold).collect();
+        let image = vec![(src, i32s_to_bytes(&input))];
+        self.plan = Some(Plan { dst, variant: sc.variant, expect, image });
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.plan().image
+    }
+
+    fn bytes_moved(&self, sc: &Scenario) -> u64 {
+        (sc.size * 4) as u64
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let p = self.plan();
+        let got = read_i32s(core, p.dst, p.expect.len());
+        if got != p.expect {
+            return Err(VerifyError::new("packed output differs from host-side selection"));
+        }
+        // The vector variant also reports the selected count in a6.
+        if p.variant == Variant::Vector && core.reg(A6) as usize != p.expect.len() {
+            return Err(VerifyError::new(format!(
+                "selected count {} != expected {}",
+                core.reg(A6),
+                p.expect.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        let p = self.plan();
+        read_i32s(core, p.dst, p.expect.len())
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,8 @@
 //! - **scalar**: a `lw`/`sw` loop unrolled ×4 (what GCC -O3 emits for a
 //!   word-aligned copy), the baseline that isolates the vector win.
 
-use super::common::{init_random_i32, layout_buffers, run_measuring, Throughput};
+use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -69,20 +70,112 @@ pub struct MemcpyResult {
 /// Run memcpy on `core` and verify the copy. `bytes` counts the *copied*
 /// volume (the paper's Fig. 3 rate is copied bytes per second).
 pub fn run(core: &mut Core, bytes: usize, vector: bool) -> Result<MemcpyResult, SimError> {
-    let addrs = layout_buffers(2, bytes);
-    let (src, dst) = (addrs[0], addrs[1]);
-    let prog = if vector {
-        build_vector(src, dst, bytes, core.cfg.vlen_bits)
-    } else {
-        build_scalar(src, dst, bytes)
-    };
-    core.load(&prog);
-    let n = bytes / 4;
-    let expect = init_random_i32(core, src, n, 0x5EED);
-    let throughput = run_measuring(core, bytes as u64)?;
-    core.mem.flush_all();
-    let got = super::common::read_i32s(core, dst, n);
-    Ok(MemcpyResult { throughput, verified: got == expect })
+    let variant = if vector { Variant::Vector } else { Variant::Scalar };
+    let mut w = Memcpy::new();
+    let report = run_on(&mut w, core, &Scenario::new(variant, bytes))?;
+    Ok(MemcpyResult { throughput: report.throughput, verified: report.verified == Some(true) })
+}
+
+/// The §4.1 memcpy workload behind the [`Workload`] interface.
+/// `Scenario::size` is the copied volume in **bytes** (a multiple of the
+/// vector width for the vector variant, of 16 for the scalar one).
+pub struct Memcpy {
+    plan: Option<Plan>,
+}
+
+struct Plan {
+    dst: u32,
+    /// `[(src, input bytes)]` — also the expected content of `dst`.
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl Memcpy {
+    pub fn new() -> Self {
+        Self { plan: None }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("Workload::build must run first")
+    }
+}
+
+impl Default for Memcpy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for Memcpy {
+    fn name(&self) -> &'static str {
+        "memcpy"
+    }
+
+    fn description(&self) -> &'static str {
+        "§4.1 design-space memcpy; size = copied bytes"
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar, Variant::Vector]
+    }
+
+    fn required_units(&self, variant: Variant) -> &'static [usize] {
+        match variant {
+            Variant::Scalar => &[],
+            Variant::Vector => &[0],
+        }
+    }
+
+    fn default_size(&self) -> usize {
+        8 * 1024 * 1024
+    }
+
+    fn smoke_size(&self) -> usize {
+        16 * 1024
+    }
+
+    fn elems(&self, sc: &Scenario) -> usize {
+        sc.size / 4
+    }
+
+    fn buffers(&self, sc: &Scenario) -> (usize, usize) {
+        (2, sc.size)
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let addrs = layout_buffers(2, sc.size);
+        let (src, dst) = (addrs[0], addrs[1]);
+        let prog = match sc.variant {
+            Variant::Vector => build_vector(src, dst, sc.size, sc.vlen_bits),
+            Variant::Scalar => build_scalar(src, dst, sc.size),
+        };
+        let input = random_i32s(sc.size / 4, 0x5EED);
+        let image = vec![(src, i32s_to_bytes(&input))];
+        self.plan = Some(Plan { dst, image });
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.plan().image
+    }
+
+    fn bytes_moved(&self, sc: &Scenario) -> u64 {
+        sc.size as u64
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let p = self.plan();
+        let expect = &p.image[0].1;
+        if core.mem.dram_slice(p.dst, expect.len()) == expect.as_slice() {
+            Ok(())
+        } else {
+            Err(VerifyError::new("copied data differs from source"))
+        }
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        let p = self.plan();
+        read_i32s(core, p.dst, p.image[0].1.len() / 4)
+    }
 }
 
 #[cfg(test)]

@@ -1,14 +1,23 @@
 //! Workload programs of the paper's evaluation, authored through the
 //! builder assembler exactly as the paper authored them through inline
 //! assembly: memcpy (§4.1), STREAM (§4.2), the Table-2 CPU benchmarks,
-//! sorting (§4.3.1) and prefix sum (§4.3.2).
+//! sorting (§4.3.1), prefix sum (§4.3.2) and parallel selection.
+//!
+//! Every workload implements the [`Workload`] trait and is registered by
+//! name in [`registry()`]; run one on a configured machine with
+//! [`crate::machine::Machine::run`] or the `run-workload` CLI
+//! subcommand. See DESIGN.md for the API walkthrough.
 
 pub mod common;
 pub mod cpubench;
 pub mod filter;
 pub mod memcpy;
 pub mod prefix;
+pub mod registry;
 pub mod sort;
 pub mod stream;
+pub mod workload;
 
 pub use common::Throughput;
+pub use registry::{lookup, registry, RegistryEntry};
+pub use workload::{run_on, Scenario, Variant, VerifyError, Workload, WorkloadReport};

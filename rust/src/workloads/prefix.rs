@@ -1,7 +1,8 @@
 //! Prefix sum (§4.3.2): serial scalar baseline vs the `c3_prefix`
 //! custom instruction (Hillis-Steele network + carry accumulator, Fig. 7).
 
-use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -57,28 +58,121 @@ pub struct PrefixResult {
 }
 
 pub fn run(core: &mut Core, n: usize, vector: bool) -> Result<PrefixResult, SimError> {
-    let addrs = layout_buffers(2, n * 4);
-    let (src, dst) = (addrs[0], addrs[1]);
-    let prog = if vector {
-        build_vector(src, dst, n, core.cfg.vlen_bits)
-    } else {
-        build_serial(src, dst, n)
-    };
-    core.load(&prog);
-    let input = init_random_i32(core, src, n, 0xACC);
-    let throughput = run_measuring(core, (n * 4) as u64)?;
-    core.mem.flush_all();
-    let got = read_i32s(core, dst, n);
-    let mut acc = 0i32;
-    let verified = input.iter().zip(&got).all(|(&x, &y)| {
-        acc = acc.wrapping_add(x);
-        acc == y
-    });
+    let variant = if vector { Variant::Vector } else { Variant::Scalar };
+    let mut w = Prefix::new();
+    let report = run_on(&mut w, core, &Scenario::new(variant, n))?;
     Ok(PrefixResult {
-        throughput,
-        verified,
-        cycles_per_elem: throughput.cycles as f64 / n as f64,
+        throughput: report.throughput,
+        verified: report.verified == Some(true),
+        cycles_per_elem: report.cycles_per_elem(),
     })
+}
+
+/// The §4.3.2 prefix-sum workload behind the [`Workload`] interface.
+/// `Scenario::size` is the element count (vector bytes must divide
+/// `4 * size` for the vector variant).
+pub struct Prefix {
+    plan: Option<Plan>,
+}
+
+struct Plan {
+    dst: u32,
+    expect: Vec<i32>,
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl Prefix {
+    pub fn new() -> Self {
+        Self { plan: None }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("Workload::build must run first")
+    }
+}
+
+impl Default for Prefix {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for Prefix {
+    fn name(&self) -> &'static str {
+        "prefix"
+    }
+
+    fn description(&self) -> &'static str {
+        "§4.3.2 prefix sum: serial loop vs stateful c3_prefix; size = elements"
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar, Variant::Vector]
+    }
+
+    fn required_units(&self, variant: Variant) -> &'static [usize] {
+        match variant {
+            Variant::Scalar => &[],
+            Variant::Vector => &[0, 3],
+        }
+    }
+
+    fn default_size(&self) -> usize {
+        1024 * 1024
+    }
+
+    fn smoke_size(&self) -> usize {
+        512
+    }
+
+    fn buffers(&self, sc: &Scenario) -> (usize, usize) {
+        (2, sc.size * 4)
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let n = sc.size;
+        let addrs = layout_buffers(2, n * 4);
+        let (src, dst) = (addrs[0], addrs[1]);
+        let prog = match sc.variant {
+            Variant::Vector => build_vector(src, dst, n, sc.vlen_bits),
+            Variant::Scalar => build_serial(src, dst, n),
+        };
+        let input = random_i32s(n, 0xACC);
+        let mut acc = 0i32;
+        let expect: Vec<i32> = input
+            .iter()
+            .map(|&x| {
+                acc = acc.wrapping_add(x);
+                acc
+            })
+            .collect();
+        let image = vec![(src, i32s_to_bytes(&input))];
+        self.plan = Some(Plan { dst, expect, image });
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.plan().image
+    }
+
+    fn bytes_moved(&self, sc: &Scenario) -> u64 {
+        (sc.size * 4) as u64
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let p = self.plan();
+        let got = read_i32s(core, p.dst, p.expect.len());
+        if got == p.expect {
+            Ok(())
+        } else {
+            Err(VerifyError::new("running sums differ from the host-side scan"))
+        }
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        let p = self.plan();
+        read_i32s(core, p.dst, p.expect.len())
+    }
 }
 
 #[cfg(test)]

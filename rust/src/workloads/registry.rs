@@ -1,0 +1,74 @@
+//! String-keyed scenario registry: every workload in the repository,
+//! constructible by name. This is what the `run-workload` CLI subcommand
+//! and the sweep drivers enumerate — adding a workload here makes it
+//! reachable from every experiment surface at once.
+
+use super::cpubench::CpuBench;
+use super::filter::Filter;
+use super::memcpy::Memcpy;
+use super::prefix::Prefix;
+use super::sort::Sort;
+use super::stream::{Kernel, Stream};
+use super::workload::Workload;
+
+/// One registered workload: a stable name plus a constructor.
+pub struct RegistryEntry {
+    pub name: &'static str,
+    ctor: fn() -> Box<dyn Workload>,
+}
+
+impl RegistryEntry {
+    /// Construct a fresh instance of the workload.
+    pub fn make(&self) -> Box<dyn Workload> {
+        (self.ctor)()
+    }
+}
+
+/// All registered workloads, in presentation order. Names are unique
+/// (asserted by `rust/tests/workload_registry.rs`).
+pub fn registry() -> Vec<RegistryEntry> {
+    fn entry(name: &'static str, ctor: fn() -> Box<dyn Workload>) -> RegistryEntry {
+        RegistryEntry { name, ctor }
+    }
+    vec![
+        entry("memcpy", || Box::new(Memcpy::new())),
+        entry("stream-copy", || Box::new(Stream::new(Kernel::Copy))),
+        entry("stream-scale", || Box::new(Stream::new(Kernel::Scale))),
+        entry("stream-add", || Box::new(Stream::new(Kernel::Add))),
+        entry("stream-triad", || Box::new(Stream::new(Kernel::Triad))),
+        entry("sort", || Box::new(Sort::new())),
+        entry("prefix", || Box::new(Prefix::new())),
+        entry("filter", || Box::new(Filter::new())),
+        entry("dhrystone", || Box::new(CpuBench::dhrystone())),
+        entry("coremark", || Box::new(CpuBench::coremark())),
+    ]
+}
+
+/// Construct the workload registered under `name`, if any.
+pub fn lookup(name: &str) -> Option<Box<dyn Workload>> {
+    registry().into_iter().find(|e| e.name == name).map(|e| e.make())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_match_instances() {
+        let entries = registry();
+        for e in &entries {
+            assert_eq!(e.make().name(), e.name, "registry key must equal Workload::name");
+        }
+        let mut names: Vec<_> = entries.iter().map(|e| e.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), entries.len(), "registry names must be unique");
+    }
+
+    #[test]
+    fn lookup_finds_known_and_rejects_unknown() {
+        assert!(lookup("memcpy").is_some());
+        assert!(lookup("stream-triad").is_some());
+        assert!(lookup("no-such-workload").is_none());
+    }
+}

@@ -14,7 +14,8 @@
 //! Input sizes must be a power of two ≥ 4 lanes (the paper's 64 MiB
 //! input is 2²⁴ elements).
 
-use super::common::{init_random_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -257,36 +258,129 @@ pub struct SortResult {
 
 /// Run the qsort() baseline over `n` random elements.
 pub fn run_qsort(core: &mut Core, n: usize) -> Result<SortResult, SimError> {
-    let addrs = layout_buffers(1, n * 4);
-    let prog = build_qsort(addrs[0], n);
-    core.load(&prog);
-    let mut expect = init_random_i32(core, addrs[0], n, 0xBEEF);
-    expect.sort_unstable();
-    let throughput = run_measuring(core, (n * 4) as u64)?;
-    core.mem.flush_all();
-    let got = read_i32s(core, addrs[0], n);
-    Ok(SortResult {
-        throughput,
-        verified: got == expect,
-        cycles_per_elem: throughput.cycles as f64 / n as f64,
-    })
+    run_variant(core, n, Variant::Scalar)
 }
 
 /// Run the vector mergesort over `n` random elements.
 pub fn run_vector_mergesort(core: &mut Core, n: usize) -> Result<SortResult, SimError> {
-    let addrs = layout_buffers(2, n * 4);
-    let ms = build_vector_mergesort(addrs[0], addrs[1], n, core.cfg.vlen_bits);
-    core.load(&ms.program);
-    let mut expect = init_random_i32(core, addrs[0], n, 0xBEEF);
-    expect.sort_unstable();
-    let throughput = run_measuring(core, (n * 4) as u64)?;
-    core.mem.flush_all();
-    let got = read_i32s(core, ms.result_base, n);
+    run_variant(core, n, Variant::Vector)
+}
+
+fn run_variant(core: &mut Core, n: usize, variant: Variant) -> Result<SortResult, SimError> {
+    let mut w = Sort::new();
+    let report = run_on(&mut w, core, &Scenario::new(variant, n))?;
     Ok(SortResult {
-        throughput,
-        verified: got == expect,
-        cycles_per_elem: throughput.cycles as f64 / n as f64,
+        throughput: report.throughput,
+        verified: report.verified == Some(true),
+        cycles_per_elem: report.cycles_per_elem(),
     })
+}
+
+/// The §4.3.1 sorting workload behind the [`Workload`] interface:
+/// scalar = the qsort() model, vector = the c2_sort/c1_merge mergesort.
+/// `Scenario::size` is the element count (a power of two ≥ 4 lanes for
+/// the vector variant).
+pub struct Sort {
+    plan: Option<Plan>,
+}
+
+struct Plan {
+    result_base: u32,
+    expect: Vec<i32>,
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl Sort {
+    pub fn new() -> Self {
+        Self { plan: None }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("Workload::build must run first")
+    }
+}
+
+impl Default for Sort {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workload for Sort {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn description(&self) -> &'static str {
+        "§4.3.1 sorting: qsort() model vs c2_sort+c1_merge mergesort; size = elements (power of two)"
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar, Variant::Vector]
+    }
+
+    fn required_units(&self, variant: Variant) -> &'static [usize] {
+        match variant {
+            Variant::Scalar => &[],
+            Variant::Vector => &[0, 1, 2],
+        }
+    }
+
+    fn default_size(&self) -> usize {
+        64 * 1024
+    }
+
+    fn smoke_size(&self) -> usize {
+        256
+    }
+
+    fn buffers(&self, sc: &Scenario) -> (usize, usize) {
+        (2, sc.size * 4)
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let n = sc.size;
+        let addrs = layout_buffers(2, n * 4);
+        let (prog, result_base) = match sc.variant {
+            Variant::Scalar => (build_qsort(addrs[0], n), addrs[0]),
+            Variant::Vector => {
+                let ms = build_vector_mergesort(addrs[0], addrs[1], n, sc.vlen_bits);
+                (ms.program, ms.result_base)
+            }
+        };
+        let input = random_i32s(n, 0xBEEF);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        let image = vec![(addrs[0], i32s_to_bytes(&input))];
+        self.plan = Some(Plan { result_base, expect, image });
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.plan().image
+    }
+
+    fn bytes_moved(&self, sc: &Scenario) -> u64 {
+        (sc.size * 4) as u64
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let p = self.plan();
+        let got = read_i32s(core, p.result_base, p.expect.len());
+        if got == p.expect {
+            Ok(())
+        } else {
+            Err(VerifyError::new(format!(
+                "output at {:#010x} is not the sorted input",
+                p.result_base
+            )))
+        }
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        let p = self.plan();
+        read_i32s(core, p.result_base, p.expect.len())
+    }
 }
 
 #[cfg(test)]

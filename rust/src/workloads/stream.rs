@@ -6,7 +6,8 @@
 //! with the 2-cycle load-use stall). Vector variants (using the c0/c1
 //! units) are also provided for the extension experiments.
 
-use super::common::{init_const_i32, layout_buffers, read_i32s, run_measuring, Throughput};
+use super::common::{layout_buffers, read_i32s, Throughput};
+use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -160,22 +161,10 @@ pub struct StreamResult {
 
 /// Run one STREAM kernel over `n` elements on `core`.
 pub fn run(core: &mut Core, kernel: Kernel, n: usize, vector: bool) -> Result<StreamResult, SimError> {
-    let addrs = layout_buffers(kernel.n_arrays(), n * 4);
-    let (ab, bb, cb) = (addrs[0], addrs[1], addrs[2]);
-    let prog = if vector {
-        build_vector(kernel, ab, bb, cb, n, core.cfg.vlen_bits)
-    } else {
-        build_scalar(kernel, ab, bb, cb, n)
-    };
-    core.load(&prog);
-    // STREAM init: a=1, b=2, c=0 (integer adaptation).
-    init_const_i32(core, ab, n, 1);
-    init_const_i32(core, bb, n, 2);
-    init_const_i32(core, cb, n, 0);
-    let throughput = run_measuring(core, kernel.bytes_per_elem() * n as u64)?;
-    core.mem.flush_all();
-    let verified = verify(core, kernel, ab, bb, cb, n);
-    Ok(StreamResult { kernel, throughput, verified })
+    let variant = if vector { Variant::Vector } else { Variant::Scalar };
+    let mut w = Stream::new(kernel);
+    let report = run_on(&mut w, core, &Scenario::new(variant, n))?;
+    Ok(StreamResult { kernel, throughput: report.throughput, verified: report.verified == Some(true) })
 }
 
 fn verify(core: &Core, kernel: Kernel, ab: u32, bb: u32, cb: u32, n: usize) -> bool {
@@ -185,6 +174,120 @@ fn verify(core: &Core, kernel: Kernel, ab: u32, bb: u32, cb: u32, n: usize) -> b
         Kernel::Scale => probe.iter().all(|&i| read_i32s(core, bb + (i * 4) as u32, 1)[0] == 0),
         Kernel::Add => probe.iter().all(|&i| read_i32s(core, cb + (i * 4) as u32, 1)[0] == 3),
         Kernel::Triad => probe.iter().all(|&i| read_i32s(core, ab + (i * 4) as u32, 1)[0] == 2),
+    }
+}
+
+/// One adapted-STREAM kernel behind the [`Workload`] interface.
+/// `Scenario::size` is the element count per array.
+pub struct Stream {
+    kernel: Kernel,
+    plan: Option<Plan>,
+}
+
+struct Plan {
+    a: u32,
+    b: u32,
+    c: u32,
+    n: usize,
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl Stream {
+    pub fn new(kernel: Kernel) -> Self {
+        Self { kernel, plan: None }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("Workload::build must run first")
+    }
+}
+
+impl Workload for Stream {
+    fn name(&self) -> &'static str {
+        match self.kernel {
+            Kernel::Copy => "stream-copy",
+            Kernel::Scale => "stream-scale",
+            Kernel::Add => "stream-add",
+            Kernel::Triad => "stream-triad",
+        }
+    }
+
+    fn description(&self) -> &'static str {
+        match self.kernel {
+            Kernel::Copy => "§4.2 adapted STREAM Copy (c = a); size = elements/array",
+            Kernel::Scale => "§4.2 adapted STREAM Scale (b = q*c); size = elements/array",
+            Kernel::Add => "§4.2 adapted STREAM Add (c = a+b); size = elements/array",
+            Kernel::Triad => "§4.2 adapted STREAM Triad (a = b+q*c); size = elements/array",
+        }
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar, Variant::Vector]
+    }
+
+    fn required_units(&self, variant: Variant) -> &'static [usize] {
+        match (variant, self.kernel) {
+            (Variant::Scalar, _) => &[],
+            (Variant::Vector, Kernel::Copy) => &[0],
+            (Variant::Vector, _) => &[0, 1],
+        }
+    }
+
+    fn default_size(&self) -> usize {
+        256 * 1024
+    }
+
+    fn smoke_size(&self) -> usize {
+        1024
+    }
+
+    fn buffers(&self, sc: &Scenario) -> (usize, usize) {
+        (self.kernel.n_arrays(), sc.size * 4)
+    }
+
+    fn build(&mut self, sc: &Scenario) -> Program {
+        let n = sc.size;
+        let addrs = layout_buffers(self.kernel.n_arrays(), n * 4);
+        let (a, b, c) = (addrs[0], addrs[1], addrs[2]);
+        let prog = match sc.variant {
+            Variant::Vector => build_vector(self.kernel, a, b, c, n, sc.vlen_bits),
+            Variant::Scalar => build_scalar(self.kernel, a, b, c, n),
+        };
+        // STREAM init: a=1, b=2, c=0 (integer adaptation).
+        let image = vec![
+            (a, 1i32.to_le_bytes().repeat(n)),
+            (b, 2i32.to_le_bytes().repeat(n)),
+            (c, 0i32.to_le_bytes().repeat(n)),
+        ];
+        self.plan = Some(Plan { a, b, c, n, image });
+        prog
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.plan().image
+    }
+
+    fn bytes_moved(&self, sc: &Scenario) -> u64 {
+        self.kernel.bytes_per_elem() * sc.size as u64
+    }
+
+    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+        let p = self.plan();
+        if verify(core, self.kernel, p.a, p.b, p.c, p.n) {
+            Ok(())
+        } else {
+            Err(VerifyError::new(format!("{} probe values wrong", self.kernel.name())))
+        }
+    }
+
+    fn result_data(&self, core: &Core) -> Vec<i32> {
+        let p = self.plan();
+        let out = match self.kernel {
+            Kernel::Copy | Kernel::Add => p.c,
+            Kernel::Scale => p.b,
+            Kernel::Triad => p.a,
+        };
+        read_i32s(core, out, p.n)
     }
 }
 

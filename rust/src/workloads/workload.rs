@@ -1,0 +1,273 @@
+//! The `Workload` abstraction: one uniform surface over every benchmark
+//! program in this repository.
+//!
+//! Historically each workload module exported a bespoke pair of
+//! `build_*`/`run_*` free functions and every experiment driver
+//! hand-wired `Core::new` + buffer layout + verification. The paper's
+//! whole point is *exploration* — swapping reconfigurable SIMD
+//! instructions in and out and measuring many workload × configuration
+//! points — so the workload surface is now a trait:
+//!
+//! - [`Workload::build`] assembles the program for a [`Scenario`]
+//!   (variant + problem size + vector width) and records, inside the
+//!   workload value, everything verification needs (buffer addresses,
+//!   input data, expected results);
+//! - [`Workload::init`] writes the input image into a core's DRAM
+//!   (the default implementation replays [`Workload::init_image`], which
+//!   also lets baseline cores like `PicoCore` reuse the same image);
+//! - [`Workload::verify`] checks the architectural results after a run;
+//! - [`Workload::bytes_moved`] makes throughput accounting uniform, so
+//!   every driver reports GB/s the same way Figs. 3–4 do.
+//!
+//! Workloads are registered by name in [`super::registry`]; a configured
+//! simulator is built and driven through [`crate::machine::Machine`],
+//! whose `run` method performs the build → load → init → run → verify
+//! sequence in one call via [`run_on`].
+
+use super::common::{self, Throughput};
+use crate::asm::Program;
+use crate::core::{Core, SimError};
+use crate::mem::MemStats;
+
+/// Which implementation of a workload to run.
+///
+/// `Vector` is the custom-unit path: the program uses the reconfigurable
+/// SIMD instructions (`c0.lv`, `c2.sort`, …) of whatever units
+/// [`Workload::required_units`] names. `Scalar` is the plain RV32IM
+/// baseline the paper measures against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Scalar,
+    Vector,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 2] = [Variant::Scalar, Variant::Vector];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Vector => "vector",
+        }
+    }
+
+    /// Parse a CLI spelling ("scalar" / "vector").
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "scalar" => Some(Variant::Scalar),
+            "vector" => Some(Variant::Vector),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One point of the design space: what to run and at which size.
+///
+/// `size` is in the workload's natural unit — bytes for `memcpy`,
+/// elements for the array workloads, iterations for the Table-2 CPU
+/// benches (each workload documents its unit in its `description`).
+/// `vlen_bits` is filled in from the machine configuration when the
+/// scenario is executed through [`crate::machine::Machine::run`] or
+/// [`run_on`]; the value set here only matters when calling
+/// [`Workload::build`] directly.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub variant: Variant,
+    pub size: usize,
+    pub vlen_bits: usize,
+}
+
+impl Scenario {
+    pub fn new(variant: Variant, size: usize) -> Self {
+        Self { variant, size, vlen_bits: 256 }
+    }
+
+    pub fn with_vlen(mut self, vlen_bits: usize) -> Self {
+        self.vlen_bits = vlen_bits;
+        self
+    }
+}
+
+/// A failed [`Workload::verify`]: what differed from the expectation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError(pub String);
+
+impl VerifyError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "verification failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// A benchmark program with scalar and/or custom-SIMD implementations.
+///
+/// The lifecycle is: `build(&scenario)` (assemble + precompute expected
+/// results, stored in `self`) → `init(&mut core)` (write the input
+/// image) → run the core → `verify(&core)`. [`run_on`] drives the whole
+/// sequence; `build` must have been called before `init`/`verify`/
+/// `result_data` are meaningful.
+pub trait Workload {
+    /// Registry key, e.g. `"memcpy"` or `"stream-triad"`.
+    fn name(&self) -> &'static str;
+
+    /// One-line summary (shown by `simdsoftcore list-workloads`),
+    /// including the unit of `Scenario::size`.
+    fn description(&self) -> &'static str;
+
+    /// The implementations this workload provides.
+    fn variants(&self) -> &'static [Variant];
+
+    /// Custom-unit slots (c0..c3) a variant needs loaded. The machine
+    /// refuses to run a scenario whose required slots are empty.
+    fn required_units(&self, variant: Variant) -> &'static [usize];
+
+    /// Default `Scenario::size` for CLI runs (scaled for seconds-level
+    /// wall time, like `Scale::default`).
+    fn default_size(&self) -> usize;
+
+    /// A small size every variant accepts on any paper-shaped machine —
+    /// used by the registry self-test and CLI smoke runs.
+    fn smoke_size(&self) -> usize;
+
+    /// Element count of a scenario (for cycles/element reporting).
+    fn elems(&self, sc: &Scenario) -> usize {
+        sc.size
+    }
+
+    /// Large-buffer footprint as (buffer count, bytes per buffer), used
+    /// to auto-size simulated DRAM. Workloads with no heap buffers
+    /// return `(0, 0)`.
+    fn buffers(&self, sc: &Scenario) -> (usize, usize);
+
+    /// Assemble the program for `sc`, recording the run plan (buffer
+    /// addresses, inputs, expected outputs) inside `self`.
+    fn build(&mut self, sc: &Scenario) -> Program;
+
+    /// The input memory image produced by the last `build`, as
+    /// `(address, bytes)` pairs. Borrowed (full-scale images are
+    /// hundreds of MiB) and kept separate from [`Workload::init`] so
+    /// non-`Core` targets (the PicoRV32 baseline harness) can replay
+    /// the same image.
+    fn init_image(&self) -> &[(u32, Vec<u8>)];
+
+    /// Write the input image into the core's DRAM.
+    fn init(&mut self, core: &mut Core) {
+        for (addr, bytes) in self.init_image() {
+            core.mem.host_write(*addr, bytes);
+        }
+    }
+
+    /// Payload bytes a run of `sc` moves, as the paper counts them
+    /// (copied bytes for memcpy, STREAM convention for stream, array
+    /// bytes for sort/prefix/filter). Drives `Throughput`.
+    fn bytes_moved(&self, sc: &Scenario) -> u64;
+
+    /// Check the architectural results of the last run (the caller has
+    /// already flushed the caches).
+    fn verify(&self, core: &Core) -> Result<(), VerifyError>;
+
+    /// Canonical result data of the last run, for cross-variant
+    /// agreement checks (scalar and vector implementations of one
+    /// workload must produce identical data).
+    fn result_data(&self, core: &Core) -> Vec<i32>;
+}
+
+/// Uniform result of running one scenario (what `Machine::run` returns).
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub variant: Variant,
+    /// `Scenario::size` as requested.
+    pub size: usize,
+    /// Element count (`Workload::elems`).
+    pub elems: usize,
+    pub throughput: Throughput,
+    /// `Some(outcome)` when verification ran; `None` when the target
+    /// cannot be verified (the PicoRV32 baseline harness).
+    pub verified: Option<bool>,
+    /// Human-readable mismatch description when `verified == Some(false)`.
+    pub verify_error: Option<String>,
+    /// Memory-system counters at the end of the run.
+    pub mem: MemStats,
+}
+
+impl WorkloadReport {
+    pub fn cycles_per_elem(&self) -> f64 {
+        self.throughput.cycles as f64 / self.elems as f64
+    }
+
+    /// Table cell for the verification outcome: "true"/"false"/"-".
+    pub fn verified_cell(&self) -> String {
+        match self.verified {
+            Some(v) => v.to_string(),
+            None => "-".to_string(),
+        }
+    }
+}
+
+/// Run `w` on an already-configured core: build → load → init → run →
+/// flush → verify, packaging the uniform report. The scenario's
+/// `vlen_bits` is overridden by the core's configured width.
+pub fn run_on(
+    w: &mut dyn Workload,
+    core: &mut Core,
+    sc: &Scenario,
+) -> Result<WorkloadReport, SimError> {
+    let sc = Scenario { vlen_bits: core.cfg.vlen_bits, ..*sc };
+    let prog = w.build(&sc);
+    core.load(&prog);
+    w.init(core);
+    let run = core.run(common::MAX_INSTRS)?;
+    let throughput = Throughput::from_run(core, &run, w.bytes_moved(&sc));
+    core.mem.flush_all();
+    let verify = w.verify(core);
+    Ok(WorkloadReport {
+        workload: w.name().to_string(),
+        variant: sc.variant,
+        size: sc.size,
+        elems: w.elems(&sc),
+        throughput,
+        verified: Some(verify.is_ok()),
+        verify_error: verify.err().map(|e| e.to_string()),
+        mem: core.mem.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("simd"), None);
+    }
+
+    #[test]
+    fn scenario_defaults() {
+        let sc = Scenario::new(Variant::Vector, 4096);
+        assert_eq!(sc.vlen_bits, 256);
+        assert_eq!(sc.with_vlen(512).vlen_bits, 512);
+    }
+
+    #[test]
+    fn verify_error_displays() {
+        let e = VerifyError::new("dst mismatch at 3");
+        assert_eq!(e.to_string(), "verification failed: dst mismatch at 3");
+    }
+}

@@ -3,9 +3,12 @@
 //! through PJRT (`runtime`). Bit-identical results are required — this is
 //! the reproduction's analogue of validating a bitstream against RTL.
 //!
-//! These tests need `make artifacts` to have run; they skip (with a
+//! These tests need the `pjrt` cargo feature (the whole file compiles
+//! away without it) and `make artifacts` to have run; they skip (with a
 //! message) when the artifact directory is absent so plain `cargo test`
 //! stays green in a fresh checkout.
+
+#![cfg(feature = "pjrt")]
 
 use simdsoftcore::asm::Asm;
 use simdsoftcore::core::Core;

@@ -1,0 +1,124 @@
+//! Registry-wide property tests: every registered workload must build,
+//! run at a small size on the paper-default machine, and pass its own
+//! verification for every variant it declares — and where a workload has
+//! both scalar and vector implementations, they must agree on results.
+//!
+//! This is the contract that keeps `run-workload <name>` and the sweep
+//! drivers trustworthy as new scenarios are registered.
+
+use simdsoftcore::machine::Machine;
+use simdsoftcore::workloads::{registry, run_on, Scenario, Variant};
+
+#[test]
+fn registry_names_are_unique_and_self_describing() {
+    let entries = registry();
+    assert!(entries.len() >= 10, "expected the full workload catalogue");
+    let mut names: Vec<&str> = entries.iter().map(|e| e.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), entries.len(), "duplicate registry names");
+    for e in &entries {
+        let w = e.make();
+        assert_eq!(w.name(), e.name);
+        assert!(!w.description().is_empty(), "{}: empty description", e.name);
+        assert!(!w.variants().is_empty(), "{}: no variants", e.name);
+        assert!(w.smoke_size() > 0 && w.default_size() >= w.smoke_size(), "{}", e.name);
+    }
+}
+
+/// Every (workload, variant) point builds, runs and verifies on the
+/// paper-default machine at its smoke size.
+#[test]
+fn every_workload_runs_and_verifies_on_the_paper_default_machine() {
+    let machine = Machine::paper_default();
+    for entry in registry() {
+        let variants = entry.make().variants().to_vec();
+        for variant in variants {
+            let mut w = entry.make();
+            let sc = Scenario::new(variant, w.smoke_size());
+            let r = machine
+                .run(&mut *w, &sc)
+                .unwrap_or_else(|e| panic!("{} [{variant}]: {e}", entry.name));
+            assert_eq!(
+                r.verified,
+                Some(true),
+                "{} [{variant}]: {:?}",
+                entry.name,
+                r.verify_error
+            );
+            assert!(r.throughput.cycles > 0 && r.throughput.instret > 0);
+            assert_eq!(r.workload, entry.name);
+        }
+    }
+}
+
+/// Scalar and vector variants of one workload must produce identical
+/// result data (the custom units accelerate, never change, semantics).
+#[test]
+fn scalar_and_vector_variants_agree_on_results() {
+    for entry in registry() {
+        let variants = entry.make().variants().to_vec();
+        if variants.len() < 2 {
+            continue;
+        }
+        let mut results = Vec::new();
+        for variant in variants {
+            let mut w = entry.make();
+            let sc = Scenario::new(variant, w.smoke_size());
+            let mut core = Machine::paper_default().build();
+            let r = run_on(&mut *w, &mut core, &sc)
+                .unwrap_or_else(|e| panic!("{} [{variant}]: {e}", entry.name));
+            assert_eq!(r.verified, Some(true), "{} [{variant}]", entry.name);
+            let data = w.result_data(&core);
+            assert!(!data.is_empty(), "{} [{variant}]: no result data", entry.name);
+            results.push((variant, data));
+        }
+        let (v0, d0) = &results[0];
+        for (v, d) in &results[1..] {
+            assert_eq!(d, d0, "{}: {v} disagrees with {v0}", entry.name);
+        }
+    }
+}
+
+/// `required_units` is honest: stripping a required unit makes the
+/// variant fail to launch, while unaffected variants still run.
+#[test]
+fn required_units_gate_execution() {
+    for entry in registry() {
+        let variants = entry.make().variants().to_vec();
+        for variant in variants {
+            let probe = entry.make();
+            let slots = probe.required_units(variant).to_vec();
+            for slot in slots {
+                let machine = Machine::paper_default().without_unit(slot);
+                let mut w = entry.make();
+                let sc = Scenario::new(variant, w.smoke_size());
+                let err = machine.run(&mut *w, &sc).err().unwrap_or_else(|| {
+                    panic!("{} [{variant}] ran without required unit c{slot}", entry.name)
+                });
+                let msg = err.to_string();
+                assert!(msg.contains(&format!("c{slot}")), "{}: {msg}", entry.name);
+            }
+        }
+    }
+}
+
+/// The vector workloads hold up across the paper's explored widths, not
+/// just the Table-1 default.
+#[test]
+fn vector_variants_verify_across_vlens() {
+    for vlen in [128usize, 512] {
+        let machine = Machine::for_vlen(vlen);
+        for entry in registry() {
+            let mut w = entry.make();
+            if !w.variants().contains(&Variant::Vector) {
+                continue;
+            }
+            let sc = Scenario::new(Variant::Vector, w.smoke_size());
+            let r = machine
+                .run(&mut *w, &sc)
+                .unwrap_or_else(|e| panic!("{} @vlen {vlen}: {e}", entry.name));
+            assert_eq!(r.verified, Some(true), "{} @vlen {vlen}", entry.name);
+        }
+    }
+}
