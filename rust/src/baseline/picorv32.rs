@@ -62,6 +62,7 @@ impl PicoCore {
                 axi_width_bits: 32,
                 double_rate: false,
                 burst_setup_cycles: cfg.axi_latency,
+                channels: 1,
             }),
             regs: [0; 32],
             pc: 0,

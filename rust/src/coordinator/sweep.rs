@@ -2,6 +2,99 @@
 //! simulations, so they run on OS threads. Each thread constructs its own
 //! `Core` (cores are intentionally not `Send` because of the optional
 //! PJRT-backed units; the *inputs* to a sweep are plain data).
+//!
+//! [`MachinePoint`] is the registry of machine-configuration sweep axes
+//! (`vlen`, `llc-block`, `mshrs`, `prefetch`, `channels`): every surface
+//! that sweeps configurations — the `run-workload` CLI grid and the
+//! `mem-sweep` experiment — goes through it, so adding an axis here
+//! makes it sweepable everywhere at once.
+
+use crate::machine::Machine;
+
+/// One machine-configuration point of a sweep grid: the sweepable axes
+/// beyond workload/variant/size. `Default` is the paper's Table-1
+/// machine (blocking port, no prefetch, one DRAM channel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachinePoint {
+    /// Vector register width in bits.
+    pub vlen: usize,
+    /// LLC block size in bits (capacity held constant).
+    pub llc_block: usize,
+    /// MSHRs at DL1 and the LLC (1 = blocking).
+    pub mshrs: usize,
+    /// Next-N-line prefetch depth (0 = off).
+    pub prefetch: usize,
+    /// Independent DRAM channels.
+    pub channels: usize,
+}
+
+impl Default for MachinePoint {
+    fn default() -> Self {
+        Self { vlen: 256, llc_block: 16384, mshrs: 1, prefetch: 0, channels: 1 }
+    }
+}
+
+impl MachinePoint {
+    /// The machine-configuration axis names accepted by `--sweep`.
+    pub const AXES: &'static [&'static str] =
+        &["vlen", "llc-block", "mshrs", "prefetch", "channels"];
+
+    /// Set one axis by CLI name; `false` for an unknown axis.
+    pub fn set(&mut self, axis: &str, value: usize) -> bool {
+        match axis {
+            "vlen" => self.vlen = value,
+            "llc-block" | "llc_block" => self.llc_block = value,
+            "mshrs" => self.mshrs = value,
+            "prefetch" => self.prefetch = value,
+            "channels" => self.channels = value,
+            _ => return false,
+        }
+        true
+    }
+
+    /// Materialise the configured [`Machine`].
+    pub fn machine(&self) -> Machine {
+        Machine::for_vlen(self.vlen)
+            .llc_block(self.llc_block)
+            .mshrs(self.mshrs)
+            .prefetch_depth(self.prefetch)
+            .dram_channels(self.channels)
+    }
+
+    /// Reject values the simulator cannot represent, before any sweep
+    /// thread is spawned (e.g. `llc-block 0` would divide by zero in the
+    /// geometry math; `vlen 100` fails cache-config validation).
+    pub fn validate(&self) -> Result<(), String> {
+        use crate::simd::MAX_VLEN_BITS;
+        if !self.vlen.is_power_of_two() || !(64..=MAX_VLEN_BITS).contains(&self.vlen) {
+            return Err(format!(
+                "vlen {} must be a power of two in 64..={MAX_VLEN_BITS}",
+                self.vlen
+            ));
+        }
+        if !self.llc_block.is_power_of_two()
+            || self.llc_block < self.vlen
+            || self.llc_block > 512 * 1024
+        {
+            return Err(format!(
+                "llc-block {} must be a power of two in {}..=524288 (>= vlen)",
+                self.llc_block, self.vlen
+            ));
+        }
+        if self.mshrs == 0 || self.mshrs > 64 {
+            return Err(format!("mshrs {} must be in 1..=64", self.mshrs));
+        }
+        if self.prefetch > 64 {
+            return Err(format!("prefetch {} must be at most 64 lines", self.prefetch));
+        }
+        if self.channels == 0 || self.channels > 16 {
+            return Err(format!("channels {} must be in 1..=16", self.channels));
+        }
+        self.machine()
+            .validate()
+            .map_err(|e| format!("vlen {} / llc-block {}: {e}", self.vlen, self.llc_block))
+    }
+}
 
 /// Map `f` over `items` in parallel, preserving order. `f` runs on a
 /// fresh thread per item (sweeps have ≤ a dozen points; no pool needed).
@@ -93,6 +186,38 @@ mod tests {
     #[should_panic(expected = "sweep thread panicked")]
     fn propagates_panics() {
         parallel_map(vec![1], |_: i32| -> i32 { panic!("boom") });
+    }
+
+    #[test]
+    fn machine_point_axes_round_trip() {
+        let mut p = MachinePoint::default();
+        assert!(p.validate().is_ok(), "default point is the paper machine");
+        for (axis, v) in
+            [("vlen", 512), ("llc-block", 4096), ("mshrs", 4), ("prefetch", 2), ("channels", 2)]
+        {
+            assert!(MachinePoint::AXES.contains(&axis));
+            assert!(p.set(axis, v), "axis {axis} must be known");
+        }
+        assert!(p.validate().is_ok());
+        let m = p.machine();
+        assert_eq!(m.core_config().vlen_bits, 512);
+        assert_eq!(m.mem_config().llc.block_bits, 4096);
+        assert_eq!(m.mem_config().dl1_mshrs, 4);
+        assert_eq!(m.mem_config().prefetch_depth, 2);
+        assert_eq!(m.mem_config().dram.channels, 2);
+        assert!(!p.set("no-such-axis", 1));
+    }
+
+    #[test]
+    fn machine_point_rejects_unrepresentable_values() {
+        let bad = MachinePoint { vlen: 100, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = MachinePoint { llc_block: 128, ..Default::default() }; // < vlen
+        assert!(bad.validate().is_err());
+        let bad = MachinePoint { mshrs: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = MachinePoint { channels: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::trace::{Trace, TraceEvent};
 use crate::asm::Program;
 use crate::isa::instr::csr;
 use crate::isa::{decode, DecodeError, Instr};
-use crate::mem::{MemConfig, MemSys};
+use crate::mem::{MemConfig, MemConfigError, MemSys};
 use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecVal};
 
 #[derive(Debug)]
@@ -81,13 +81,26 @@ pub struct CoreCounters {
     pub raw_stall_cycles: u64,
     /// Cycles lost waiting on instruction fetch (IL1 misses).
     pub fetch_stall_cycles: u64,
-    /// Cycles lost waiting for the (blocking) data-memory port.
-    pub mem_port_stall_cycles: u64,
+    /// Cycles lost on the data port's structural hazard (an operation
+    /// issued the previous cycle). MSHR-full waits are NOT booked here:
+    /// they delay an access's completion and are counted per cache
+    /// level in `CacheStats::mshr_wait_cycles`.
+    pub mem_struct_stall_cycles: u64,
+    /// Cycles lost waiting for in-flight data on the blocking port
+    /// (bandwidth/latency exposure; zero once the port is non-blocking,
+    /// where the wait shows up as MSHR/queue statistics and RAW stalls
+    /// instead).
+    pub mem_bw_stall_cycles: u64,
 }
 
 impl CoreCounters {
     pub fn custom_total(&self) -> u64 {
         self.custom.iter().sum()
+    }
+
+    /// Total data-port stall (the former `mem_port_stall_cycles`).
+    pub fn mem_stall_cycles(&self) -> u64 {
+        self.mem_struct_stall_cycles + self.mem_bw_stall_cycles
     }
 }
 
@@ -122,9 +135,6 @@ pub struct Core {
     instret: u64,
     reg_ready: [u64; 32],
     vreg_ready: [u64; 8],
-    /// The blocking DL1 port: next memory operation may issue at this
-    /// cycle at the earliest.
-    mem_busy_until: u64,
     halted: bool,
 
     text_base: u32,
@@ -143,17 +153,31 @@ pub struct Core {
 }
 
 impl Core {
-    /// Core with the standard unit pool for its VLEN.
+    /// Core with the standard unit pool for its VLEN; panics on an
+    /// invalid memory configuration (use [`Core::try_new`] to handle
+    /// rejected configs gracefully).
     pub fn new(cfg: CoreConfig, mem_cfg: MemConfig) -> Self {
-        assert_eq!(
-            mem_cfg.dl1.block_bits, cfg.vlen_bits,
-            "§3.1.1: DL1 block size must equal the vector register width"
-        );
+        Self::try_new(cfg, mem_cfg).expect("invalid memory configuration")
+    }
+
+    /// Fallible constructor: rejects invalid memory configurations
+    /// (zero ways/MSHRs/channels, L1 block larger than the LLC block, a
+    /// DL1 block that does not match the vector width, …) instead of
+    /// panicking mid-build.
+    pub fn try_new(cfg: CoreConfig, mem_cfg: MemConfig) -> Result<Self, MemConfigError> {
+        if mem_cfg.dl1.block_bits != cfg.vlen_bits {
+            // §3.1.1: the DL1 block size must equal the vector register
+            // width — the no-fetch-on-full-write path depends on it.
+            return Err(MemConfigError::BlockVlenMismatch {
+                block_bits: mem_cfg.dl1.block_bits,
+                vlen_bits: cfg.vlen_bits,
+            });
+        }
         let lanes = cfg.lanes();
         let mem_block_bytes = mem_cfg.il1.block_bytes();
-        Self {
+        Ok(Self {
             cfg,
-            mem: MemSys::new(mem_cfg),
+            mem: MemSys::new(mem_cfg)?,
             pool: standard_pool(cfg.vlen_bits),
             trace: Trace::disabled(),
             regs: [0; 32],
@@ -163,7 +187,6 @@ impl Core {
             instret: 0,
             reg_ready: [0; 32],
             vreg_ready: [0; 8],
-            mem_busy_until: 0,
             halted: false,
             text_base: 0,
             decoded: Vec::new(),
@@ -171,7 +194,7 @@ impl Core {
             fetch_block_mask: !(mem_block_bytes as u32 - 1),
             fast_fetches: 0,
             counters: CoreCounters::default(),
-        }
+        })
     }
 
     /// Paper-default core (Table 1).
@@ -196,7 +219,6 @@ impl Core {
         self.instret = 0;
         self.reg_ready = [0; 32];
         self.vreg_ready = [0; 8];
-        self.mem_busy_until = 0;
         self.halted = false;
         self.counters = CoreCounters::default();
         self.text_base = prog.text_base;
@@ -426,12 +448,11 @@ impl Core {
                     _ => 4,
                 };
                 self.check_mem(addr, len)?;
-                if self.mem_busy_until > t {
-                    self.counters.mem_port_stall_cycles += self.mem_busy_until - t;
-                    t = self.mem_busy_until;
-                }
                 let mut buf = [0u8; 4];
-                let mem_ready = self.mem.read(addr, &mut buf[..len], t);
+                let access = self.mem.read(addr, &mut buf[..len], t);
+                self.counters.mem_struct_stall_cycles += access.struct_stall;
+                self.counters.mem_bw_stall_cycles += access.bw_stall;
+                t = access.issue;
                 let value = match instr {
                     Lb { .. } => buf[0] as i8 as i32 as u32,
                     Lbu { .. } => buf[0] as u32,
@@ -439,9 +460,8 @@ impl Core {
                     Lhu { .. } => u16::from_le_bytes([buf[0], buf[1]]) as u32,
                     _ => u32::from_le_bytes(buf),
                 };
-                let ready = (t + self.cfg.load_use_cycles).max(mem_ready + 2);
+                let ready = (t + self.cfg.load_use_cycles).max(access.ready + 2);
                 self.write_reg(rd, value, ready);
-                self.mem_busy_until = mem_ready.max(t + 1);
                 end = ready;
             }
             Sb { rs1, rs2, offset } | Sh { rs1, rs2, offset } | Sw { rs1, rs2, offset } => {
@@ -455,14 +475,12 @@ impl Core {
                     _ => 4,
                 };
                 self.check_mem(addr, len)?;
-                if self.mem_busy_until > t {
-                    self.counters.mem_port_stall_cycles += self.mem_busy_until - t;
-                    t = self.mem_busy_until;
-                }
                 let bytes = val.to_le_bytes();
-                let mem_ready = self.mem.write(addr, &bytes[..len], t);
-                self.mem_busy_until = mem_ready.max(t + 1);
-                end = mem_ready;
+                let access = self.mem.write(addr, &bytes[..len], t);
+                self.counters.mem_struct_stall_cycles += access.struct_stall;
+                self.counters.mem_bw_stall_cycles += access.bw_stall;
+                t = access.issue;
+                end = access.ready;
             }
             Addi { rd, rs1, imm } => {
                 self.counters.alu += 1;
@@ -712,30 +730,26 @@ impl Core {
             Some(VecMemOp::Load { addr }) => {
                 let len = self.cfg.vlen_bytes();
                 self.check_mem(addr, len)?;
-                if self.mem_busy_until > *t {
-                    self.counters.mem_port_stall_cycles += self.mem_busy_until - *t;
-                    *t = self.mem_busy_until;
-                }
                 // Stack buffer: the hot vector path must not allocate.
                 let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
-                let mem_ready = self.mem.read(addr, &mut buf[..len], *t);
-                let ready = (*t + out.latency).max(mem_ready + 2);
+                let access = self.mem.read(addr, &mut buf[..len], *t);
+                self.counters.mem_struct_stall_cycles += access.struct_stall;
+                self.counters.mem_bw_stall_cycles += access.bw_stall;
+                *t = access.issue;
+                let ready = (*t + out.latency).max(access.ready + 2);
                 self.write_vreg(vrd1, VecVal::from_bytes(&buf[..len]), ready);
-                self.mem_busy_until = mem_ready.max(*t + 1);
                 end = ready;
             }
             Some(VecMemOp::Store { addr, data }) => {
                 let len = self.cfg.vlen_bytes();
                 self.check_mem(addr, len)?;
-                if self.mem_busy_until > *t {
-                    self.counters.mem_port_stall_cycles += self.mem_busy_until - *t;
-                    *t = self.mem_busy_until;
-                }
                 let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
                 data.write_bytes(&mut buf[..len]);
-                let mem_ready = self.mem.write(addr, &buf[..len], *t);
-                self.mem_busy_until = mem_ready.max(*t + 1);
-                end = mem_ready;
+                let access = self.mem.write(addr, &buf[..len], *t);
+                self.counters.mem_struct_stall_cycles += access.struct_stall;
+                self.counters.mem_bw_stall_cycles += access.bw_stall;
+                *t = access.issue;
+                end = access.ready;
             }
             None => {
                 let ready = *t + out.latency;
@@ -1020,6 +1034,75 @@ mod tests {
         let got: Vec<i32> =
             b.chunks(4).map(|x| i32::from_le_bytes(x.try_into().unwrap())).collect();
         assert_eq!(got, vec![9, 10, 11, 12, 13, 14, 15, 16]);
+    }
+
+    #[test]
+    fn try_new_rejects_mismatched_configs_without_panicking() {
+        // DL1 block (256) != vlen (512): an Err, not a panic.
+        let err = Core::try_new(CoreConfig::for_vlen(512), MemConfig::paper_default()).unwrap_err();
+        assert!(matches!(
+            err,
+            MemConfigError::BlockVlenMismatch { block_bits: 256, vlen_bits: 512 }
+        ));
+        // Invalid memory internals propagate too.
+        let mut mem = MemConfig::paper_default();
+        mem.llc_mshrs = 0;
+        let err = Core::try_new(CoreConfig::paper_default(), mem).unwrap_err();
+        assert!(matches!(err, MemConfigError::ZeroMshrs { .. }));
+    }
+
+    #[test]
+    fn blocking_port_stall_is_bandwidth_classified() {
+        // Two back-to-back loads from different LLC blocks on the
+        // default (blocking) machine: the second waits on the port until
+        // the first miss's data returned — bandwidth exposure, not a
+        // structural hazard.
+        let mut a = Asm::new();
+        a.li(A1, 0x20000);
+        a.li(A2, 0x40000);
+        a.lw(A0, 0, A1);
+        a.lw(A3, 0, A2);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        let ctr = c.counters();
+        assert!(ctr.mem_bw_stall_cycles > 0, "second load waited on the blocking port");
+        assert_eq!(
+            ctr.mem_stall_cycles(),
+            ctr.mem_struct_stall_cycles + ctr.mem_bw_stall_cycles
+        );
+    }
+
+    #[test]
+    fn nonblocking_core_overlaps_independent_misses() {
+        // The same two-load program on a blocking vs a non-blocking
+        // (4 MSHRs, 2 channels) machine: overlapping the misses must
+        // save cycles end to end.
+        let mut a = Asm::new();
+        a.li(A1, 0x20000);
+        a.li(A2, 0x40000);
+        a.lw(A0, 0, A1);
+        a.lw(A3, 0, A2);
+        a.lw(A4, 4, A1);
+        a.lw(A5, 4, A2);
+        a.halt();
+        let p = a.assemble().unwrap();
+
+        let mut blocking = Core::paper_default();
+        blocking.load(&p);
+        let slow = blocking.run(100).unwrap().cycles;
+
+        let mut mem = MemConfig::paper_default();
+        mem.dl1_mshrs = 4;
+        mem.llc_mshrs = 4;
+        mem.dram.channels = 2;
+        let mut nb = Core::new(CoreConfig::paper_default(), mem);
+        nb.load(&p);
+        let fast = nb.run(100).unwrap().cycles;
+        assert!(fast < slow, "overlapped misses must be faster ({fast} vs {slow})");
+        assert_eq!(nb.counters().mem_bw_stall_cycles, 0, "non-blocking port never holds data");
     }
 
     #[test]

@@ -53,6 +53,20 @@ impl Trace {
         self.events.push(ev);
     }
 
+    /// Stable text serialisation for golden-trace regression tests: one
+    /// line per retired instruction, `pc: disassembly`. Deliberately
+    /// **architectural only** — no cycle numbers — so golden files pin
+    /// down instruction flow (what executed, in which order) while
+    /// timing-model refactors (MSHRs, prefetching, channel counts) stay
+    /// free to move cycles around.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let _ = writeln!(out, "{:#010x}: {}", e.pc, e.instr);
+        }
+        out
+    }
+
     /// Render an ASCII pipeline diagram in the style of Fig. 6: one row
     /// per instruction, `#` spans from issue to completion.
     pub fn render_pipeline(&self) -> String {
@@ -116,5 +130,17 @@ mod tests {
     #[test]
     fn empty_render() {
         assert!(Trace::full().render_pipeline().contains("empty"));
+    }
+
+    #[test]
+    fn render_text_is_architectural_only() {
+        let mut t = Trace::full();
+        t.record(0, TraceEvent { start: 7, end: 13, pc: 0x40, instr: ev(0, 1).instr });
+        let s = t.render_text();
+        assert_eq!(s, "0x00000040: addi a0, a0, 1\n");
+        // Different timing, identical serialisation.
+        let mut t2 = Trace::full();
+        t2.record(0, TraceEvent { start: 99, end: 250, pc: 0x40, instr: ev(0, 1).instr });
+        assert_eq!(t2.render_text(), s);
     }
 }

@@ -25,8 +25,8 @@
 //! machine can be reused across the points of a sweep.
 
 use crate::baseline::{PicoConfig, PicoCore};
-use crate::core::{Core, CoreConfig, SimError};
-use crate::mem::{CacheGeometry, MemConfig, MemStats, Replacement};
+use crate::core::{Core, CoreConfig, CoreCounters, SimError};
+use crate::mem::{CacheGeometry, MemConfig, MemConfigError, MemModel, MemStats, Replacement};
 use crate::simd::CustomUnit;
 use crate::workloads::common::{self, Throughput};
 use crate::workloads::workload::{run_on, Scenario, Variant, Workload, WorkloadReport};
@@ -40,6 +40,10 @@ pub enum MachineError {
     UnsupportedVariant { workload: String, variant: Variant },
     /// A required custom-unit slot is empty on this machine.
     MissingUnit { workload: String, slot: usize },
+    /// The configured memory system is invalid (zero ways/MSHRs, L1
+    /// block larger than the LLC block, …) — reported instead of
+    /// panicking mid-build.
+    Config(MemConfigError),
 }
 
 impl std::fmt::Display for MachineError {
@@ -52,6 +56,7 @@ impl std::fmt::Display for MachineError {
             MachineError::MissingUnit { workload, slot } => {
                 write!(f, "workload '{workload}' needs a unit in slot c{slot}, which is empty")
             }
+            MachineError::Config(e) => write!(f, "invalid machine configuration: {e}"),
         }
     }
 }
@@ -60,6 +65,7 @@ impl std::error::Error for MachineError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             MachineError::Sim(e) => Some(e),
+            MachineError::Config(e) => Some(e),
             _ => None,
         }
     }
@@ -68,6 +74,12 @@ impl std::error::Error for MachineError {
 impl From<SimError> for MachineError {
     fn from(e: SimError) -> Self {
         MachineError::Sim(e)
+    }
+}
+
+impl From<MemConfigError> for MachineError {
+    fn from(e: MemConfigError) -> Self {
+        MachineError::Config(e)
     }
 }
 
@@ -116,6 +128,9 @@ impl Machine {
         let capacity = llc.capacity_bytes();
         let dram = self.mem.dram;
         let replacement = self.mem.replacement;
+        let (dl1_mshrs, llc_mshrs) = (self.mem.dl1_mshrs, self.mem.llc_mshrs);
+        let prefetch_depth = self.mem.prefetch_depth;
+        let model = self.mem.model;
         self.core = CoreConfig::for_vlen(vlen_bits);
         if let Some(f) = self.fmax_override {
             self.core.fmax_mhz = f;
@@ -123,6 +138,10 @@ impl Machine {
         self.mem = MemConfig::for_vlen(vlen_bits);
         self.mem.dram = dram;
         self.mem.replacement = replacement;
+        self.mem.dl1_mshrs = dl1_mshrs;
+        self.mem.llc_mshrs = llc_mshrs;
+        self.mem.prefetch_depth = prefetch_depth;
+        self.mem.model = model;
         self.mem.llc = CacheGeometry {
             sets: capacity / (llc.block_bits / 8) / llc.ways,
             ways: llc.ways,
@@ -140,11 +159,15 @@ impl Machine {
         self
     }
 
-    /// LLC associativity, keeping the LLC capacity constant.
+    /// LLC associativity, keeping the LLC capacity constant. A zero way
+    /// count is carried through so `validate()`/`run()` report it as a
+    /// configuration error rather than dividing by zero here.
     pub fn llc_ways(mut self, ways: usize) -> Self {
         let capacity = self.mem.llc.capacity_bytes();
         self.mem.llc.ways = ways;
-        self.mem.llc.sets = capacity / self.mem.llc.block_bytes() / ways;
+        if ways > 0 {
+            self.mem.llc.sets = capacity / self.mem.llc.block_bytes() / ways;
+        }
         self
     }
 
@@ -179,6 +202,40 @@ impl Machine {
     pub fn burst_setup(mut self, cycles: u64) -> Self {
         self.mem.dram.burst_setup_cycles = cycles;
         self
+    }
+
+    /// MSHR count at DL1 *and* the LLC. `1` (the default) is the paper's
+    /// fully-blocking port; `>= 2` makes the hierarchy non-blocking —
+    /// hits proceed under misses and up to `n` misses overlap.
+    pub fn mshrs(mut self, n: usize) -> Self {
+        self.mem.dl1_mshrs = n;
+        self.mem.llc_mshrs = n;
+        self
+    }
+
+    /// Next-N-line stream prefetch depth on the LLC fill path (0 = off;
+    /// needs `mshrs >= 2` to have a free fill MSHR to ride on).
+    pub fn prefetch_depth(mut self, n: usize) -> Self {
+        self.mem.prefetch_depth = n;
+        self
+    }
+
+    /// Independent DRAM channels (1 = the paper's single AXI port).
+    pub fn dram_channels(mut self, n: usize) -> Self {
+        self.mem.dram.channels = n;
+        self
+    }
+
+    /// Swap the cache hierarchy for the flat single-cycle magic-memory
+    /// oracle (differential testing; identical architectural results).
+    pub fn magic_memory(mut self, on: bool) -> Self {
+        self.mem.model = if on { MemModel::Flat } else { MemModel::Cached };
+        self
+    }
+
+    /// Validate the configured memory system without building a core.
+    pub fn validate(&self) -> Result<(), MemConfigError> {
+        self.mem.validate()
     }
 
     /// Load a custom unit into slot `c0..c3` (replacing the standard
@@ -240,6 +297,9 @@ impl Machine {
         let (buffers, bytes_each) = w.buffers(&sc);
         let mut mem = self.mem;
         mem.dram.size_bytes = mem.dram.size_bytes.max(dram_needed(buffers, bytes_each));
+        // Reject invalid configurations up front (a sweep point like
+        // `--llc-ways 0` becomes an error row, not a thread panic).
+        mem.validate()?;
         let mut core = self.build_with_mem(mem);
         for &slot in w.required_units(sc.variant) {
             if core.pool.get(slot).is_none() {
@@ -299,6 +359,7 @@ pub fn run_on_pico(
         verified: None,
         verify_error: None,
         mem: MemStats::default(),
+        counters: CoreCounters::default(),
     })
 }
 
@@ -376,6 +437,60 @@ mod tests {
         let mut w = crate::workloads::cpubench::CpuBench::dhrystone();
         let err = m.run(&mut w, &Scenario::new(Variant::Vector, 10)).unwrap_err();
         assert!(matches!(err, MachineError::UnsupportedVariant { .. }), "{err}");
+    }
+
+    #[test]
+    fn invalid_configs_error_instead_of_panicking() {
+        let mut w = Memcpy::new();
+        let sc = Scenario::new(Variant::Vector, 16 * 1024);
+
+        let err = Machine::paper_default().llc_ways(0).run(&mut w, &sc).unwrap_err();
+        assert!(matches!(err, MachineError::Config(MemConfigError::ZeroWays { .. })), "{err}");
+
+        let err = Machine::paper_default().mshrs(0).run(&mut w, &sc).unwrap_err();
+        assert!(matches!(err, MachineError::Config(MemConfigError::ZeroMshrs { .. })), "{err}");
+
+        // L1 block (VLEN) larger than the LLC block.
+        let err = Machine::for_vlen(512).llc_block(256).run(&mut w, &sc).unwrap_err();
+        assert!(
+            matches!(err, MachineError::Config(MemConfigError::LlcBlockTooSmall { .. })),
+            "{err}"
+        );
+        assert!(Machine::paper_default().validate().is_ok());
+    }
+
+    #[test]
+    fn magic_memory_machine_verifies_workloads() {
+        let m = Machine::paper_default().magic_memory(true);
+        let mut w = Memcpy::new();
+        let r = m.run(&mut w, &Scenario::new(Variant::Vector, 64 * 1024)).unwrap();
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.mem.dram.bursts(), 0, "flat model never bursts");
+    }
+
+    #[test]
+    fn nonblocking_axes_survive_vlen_and_speed_up_memcpy() {
+        let m = Machine::paper_default().mshrs(4).prefetch_depth(4).dram_channels(2).vlen(512);
+        assert_eq!(m.mem_config().dl1_mshrs, 4);
+        assert_eq!(m.mem_config().llc_mshrs, 4);
+        assert_eq!(m.mem_config().prefetch_depth, 4);
+        assert_eq!(m.mem_config().dram.channels, 2);
+
+        let sc = Scenario::new(Variant::Vector, 256 * 1024);
+        let blocking = Machine::paper_default().run(&mut Memcpy::new(), &sc).unwrap();
+        let nb = Machine::paper_default()
+            .mshrs(4)
+            .prefetch_depth(4)
+            .run(&mut Memcpy::new(), &sc)
+            .unwrap();
+        assert_eq!(nb.verified, Some(true));
+        assert!(
+            nb.throughput.cycles < blocking.throughput.cycles,
+            "prefetch + MSHRs must speed up streaming memcpy ({} vs {})",
+            nb.throughput.cycles,
+            blocking.throughput.cycles
+        );
+        assert!(nb.mem.llc.prefetches > 0, "prefetcher actually ran");
     }
 
     #[test]

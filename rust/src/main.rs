@@ -8,13 +8,20 @@
 //!
 //! workloads:
 //!   run-workload <name> [--variant v] [--size N] [--vlen N]
-//!                [--llc-block N] [--sweep axis=a,b,c]... [--json]
+//!                [--llc-block N] [--mshrs N] [--prefetch N]
+//!                [--channels N] [--sweep axis=a,b,c]... [--json]
 //!                                       run a registered workload; sweep
-//!                                       axes: variant, vlen, llc-block, size
+//!                                       axes: variant, size, vlen,
+//!                                       llc-block, mshrs, prefetch,
+//!                                       channels (mshrs=1 is the paper's
+//!                                       blocking port; >=2 non-blocking)
 //!   list-workloads                      registry contents
 //!
 //! experiments (all accept --json):
 //!   fig3 [--side left|right] [--full]   memcpy design-space sweeps
+//!   mem-sweep [--full]                  streaming bandwidth vs LLC block
+//!                                       x MSHRs/prefetch/channels
+//!                                       (CI captures --json as BENCH_mem.json)
 //!   fig4 [--full] [--ratios]            adapted STREAM vs PicoRV32
 //!   table1                              selected configuration
 //!   table2                              DMIPS/CoreMark comparison
@@ -33,9 +40,9 @@
 //!   config                              print the Table-1 configuration
 //! ```
 
+use simdsoftcore::coordinator::sweep::MachinePoint;
 use simdsoftcore::coordinator::{experiments as exp, Scale, Table};
 use simdsoftcore::core::{Core, Trace};
-use simdsoftcore::machine::Machine;
 use simdsoftcore::workloads::{registry, Scenario, Variant};
 use std::process::ExitCode;
 
@@ -123,6 +130,10 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
             emit(exp::memcpy_headline(scale));
             Ok(())
         }
+        "mem-sweep" => {
+            emit(exp::mem_sweep(scale));
+            Ok(())
+        }
         "sort-speedup" => {
             emit(exp::sec43_sort(scale));
             Ok(())
@@ -156,8 +167,9 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fig3|fig4|table1|table2|fig5|fig6|memcpy|\
-     sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fig3|mem-sweep|fig4|table1|table2|fig5|fig6|\
+     memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+     sweep axes for run-workload: variant, size, vlen, llc-block, mshrs, prefetch, channels\n\
      see the header of rust/src/main.rs for details"
 }
 
@@ -292,40 +304,24 @@ fn list_workloads() {
     }
 }
 
-/// One point of a `run-workload` sweep grid.
+/// One point of a `run-workload` sweep grid: the machine-configuration
+/// axes (from the [`simdsoftcore::coordinator::sweep::MachinePoint`]
+/// axis registry) plus the workload-level variant/size axes.
 #[derive(Debug, Clone, Copy)]
 struct SweepPoint {
     variant: Variant,
-    vlen: usize,
-    llc_block: usize,
     size: usize,
+    mp: MachinePoint,
 }
 
 /// Reject configuration values the simulator cannot represent before
 /// any thread is spawned (e.g. `--llc-block 0` would divide by zero in
 /// the LLC geometry math; `--vlen 100` fails cache-config validation).
 fn check_point(p: &SweepPoint) -> Result<(), String> {
-    use simdsoftcore::simd::MAX_VLEN_BITS;
-    if !p.vlen.is_power_of_two() || !(64..=MAX_VLEN_BITS).contains(&p.vlen) {
-        return Err(format!(
-            "vlen {} must be a power of two in 64..={MAX_VLEN_BITS}",
-            p.vlen
-        ));
-    }
-    if !p.llc_block.is_power_of_two() || p.llc_block < p.vlen || p.llc_block > 512 * 1024 {
-        return Err(format!(
-            "llc-block {} must be a power of two in {}..=524288 (>= vlen)",
-            p.llc_block, p.vlen
-        ));
-    }
     if p.size == 0 {
         return Err("size must be positive".into());
     }
-    Machine::for_vlen(p.vlen)
-        .llc_block(p.llc_block)
-        .mem_config()
-        .validate()
-        .map_err(|e| format!("vlen {} / llc-block {}: {e}", p.vlen, p.llc_block))
+    p.mp.validate()
 }
 
 /// Best-effort text of a caught panic payload.
@@ -340,7 +336,10 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 }
 
 fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
-    const VALUE_FLAGS: &[&str] = &["--variant", "--size", "--vlen", "--llc-block", "--sweep"];
+    const VALUE_FLAGS: &[&str] = &[
+        "--variant", "--size", "--vlen", "--llc-block", "--mshrs", "--prefetch", "--channels",
+        "--sweep",
+    ];
     let positional = flags.positional(VALUE_FLAGS);
     let Some(&name) = positional.first() else {
         return Err(format!(
@@ -353,7 +352,8 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
         return Err(format!("unknown workload '{name}'; known: {}", names.join(", ")));
     };
 
-    // Fixed-point defaults, overridable by --variant/--vlen/--llc-block/--size.
+    // Fixed-point defaults, overridable by --variant/--size and one flag
+    // per machine axis (--vlen/--llc-block/--mshrs/--prefetch/--channels).
     let mut variants: Vec<Variant> = probe.variants().to_vec();
     if let Some(v) = flags.opt_val("--variant")? {
         let v = Variant::parse(v)
@@ -363,11 +363,18 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
         }
         variants = vec![v];
     }
-    let mut vlens = vec![flags.parse_usize("--vlen")?.unwrap_or(256)];
-    let mut blocks = vec![flags.parse_usize("--llc-block")?.unwrap_or(16384)];
+    let mut base = MachinePoint::default();
+    for &axis in MachinePoint::AXES {
+        if let Some(v) = flags.parse_usize(&format!("--{axis}"))? {
+            base.set(axis, v);
+        }
+    }
+    let mut grid = vec![base];
     let mut sizes = vec![flags.parse_usize("--size")?.unwrap_or_else(|| probe.default_size())];
 
-    // Sweep axes replace the fixed point on their axis.
+    // Sweep axes replace the fixed point on their axis. Machine axes
+    // come from the MachinePoint registry; variant/size are
+    // workload-level.
     for spec in flags.opt_vals("--sweep")? {
         let (axis, vals) = spec
             .split_once('=')
@@ -382,8 +389,6 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
                 .collect()
         };
         match axis {
-            "vlen" => vlens = parse_list("vlen")?,
-            "llc-block" | "llc_block" => blocks = parse_list("llc-block")?,
             "size" => sizes = parse_list("size")?,
             "variant" => {
                 variants = vals
@@ -394,9 +399,22 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
                     })
                     .collect::<Result<Vec<_>, _>>()?;
             }
+            axis if MachinePoint::AXES.contains(&axis) || axis == "llc_block" => {
+                let values = parse_list(axis)?;
+                let mut expanded = Vec::with_capacity(grid.len() * values.len());
+                for mp in &grid {
+                    for &v in &values {
+                        let mut mp = *mp;
+                        mp.set(axis, v);
+                        expanded.push(mp);
+                    }
+                }
+                grid = expanded;
+            }
             other => {
                 return Err(format!(
-                    "unknown sweep axis '{other}' (axes: variant, vlen, llc-block, size)"
+                    "unknown sweep axis '{other}' (axes: variant, size, {})",
+                    MachinePoint::AXES.join(", ")
                 ))
             }
         }
@@ -405,14 +423,12 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     // Cartesian grid, validated up front (bad widths/blocks are usage
     // errors, not panics inside sweep threads).
     let mut points = Vec::new();
-    for &vlen in &vlens {
-        for &llc_block in &blocks {
-            for &size in &sizes {
-                for &variant in &variants {
-                    let p = SweepPoint { variant, vlen, llc_block, size };
-                    check_point(&p)?;
-                    points.push(p);
-                }
+    for &mp in &grid {
+        for &size in &sizes {
+            for &variant in &variants {
+                let p = SweepPoint { variant, size, mp };
+                check_point(&p)?;
+                points.push(p);
             }
         }
     }
@@ -424,8 +440,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
         // them to a failed row instead of a CLI abort.
         let run = std::panic::catch_unwind(|| {
             let mut w = simdsoftcore::workloads::lookup(name).expect("name checked above");
-            let machine = Machine::for_vlen(p.vlen).llc_block(p.llc_block);
-            machine.run(&mut *w, &Scenario::new(p.variant, p.size))
+            p.mp.machine().run(&mut *w, &Scenario::new(p.variant, p.size))
         });
         let r = match run {
             Ok(r) => r.map_err(|e| e.to_string()),
@@ -436,15 +451,19 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
 
     let mut t = Table::new(
         format!("run-workload {name}"),
-        &["variant", "VLEN", "LLC block", "size", "cycles", "GB/s", "B/cycle", "cyc/elem", "IPC", "verified"],
+        &["variant", "VLEN", "LLC block", "MSHRs", "pf", "ch", "size", "cycles", "GB/s",
+          "B/cycle", "cyc/elem", "IPC", "verified"],
     );
     let mut failed = false;
     for (p, r) in results {
         match r {
             Ok(r) => t.row(&[
                 p.variant.to_string(),
-                p.vlen.to_string(),
-                p.llc_block.to_string(),
+                p.mp.vlen.to_string(),
+                p.mp.llc_block.to_string(),
+                p.mp.mshrs.to_string(),
+                p.mp.prefetch.to_string(),
+                p.mp.channels.to_string(),
                 p.size.to_string(),
                 r.throughput.cycles.to_string(),
                 format!("{:.3}", r.throughput.bytes_per_second() / 1e9),
@@ -456,8 +475,14 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
             Err(e) => {
                 failed = true;
                 t.note(format!(
-                    "FAILED {} vlen={} llc-block={} size={}: {e}",
-                    p.variant, p.vlen, p.llc_block, p.size
+                    "FAILED {} vlen={} llc-block={} mshrs={} prefetch={} channels={} size={}: {e}",
+                    p.variant,
+                    p.mp.vlen,
+                    p.mp.llc_block,
+                    p.mp.mshrs,
+                    p.mp.prefetch,
+                    p.mp.channels,
+                    p.size
                 ));
             }
         }

@@ -18,6 +18,18 @@ pub enum Replacement {
     Random,
 }
 
+/// Which model backs a [`super::MemSys`]: the full cache hierarchy of
+/// the paper, or a flat single-cycle "magic memory" with identical
+/// architectural behaviour and trivial timing — the reference model the
+/// differential test suite (`rust/tests/mem_differential.rs`) compares
+/// the hierarchy against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemModel {
+    #[default]
+    Cached,
+    Flat,
+}
+
 /// Geometry of one cache level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeometry {
@@ -51,6 +63,12 @@ pub struct DramConfig {
     /// Fixed cycles to open a burst (arbitration + DRAM access time,
     /// in core clocks).
     pub burst_setup_cycles: u64,
+    /// Independent DRAM channels. A burst occupies exactly one channel;
+    /// the controller places each burst on the earliest-free channel, so
+    /// concurrent fills/write-backs contend for aggregate bandwidth
+    /// instead of serialising on a single `busy_until` (1 = the paper's
+    /// single AXI port).
+    pub channels: usize,
 }
 
 impl DramConfig {
@@ -73,6 +91,22 @@ pub struct MemConfig {
     pub llc_hit_cycles: u64,
     /// Replacement policy for DL1 and LLC (IL1 is direct-mapped).
     pub replacement: Replacement,
+    /// DL1 MSHR count. `1` models the original fully-blocking data port
+    /// (the port register *is* the single MSHR: the next access may not
+    /// start before the previous one's data returned). `>= 2` makes the
+    /// port non-blocking: hits proceed under outstanding misses and up
+    /// to this many DL1 misses overlap (hit-under-miss and
+    /// miss-under-miss).
+    pub dl1_mshrs: usize,
+    /// LLC MSHR count: outstanding DRAM fills (demand + prefetch). As at
+    /// DL1, `1` keeps the legacy blocking fill path.
+    pub llc_mshrs: usize,
+    /// Next-N-line stream prefetcher depth on the LLC fill path: a
+    /// demand miss on block B also fetches B+1..B+N when a fill MSHR is
+    /// free (0 = prefetching off, the paper's configuration).
+    pub prefetch_depth: usize,
+    /// Cache hierarchy vs flat magic-memory oracle.
+    pub model: MemModel,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -82,6 +116,13 @@ pub enum MemConfigError {
     LlcBlockTooSmall { llc: usize, l1: usize },
     BlockNotWordMultiple(usize),
     DramNotBlockMultiple(usize),
+    ZeroWays { what: &'static str },
+    ZeroMshrs { what: &'static str },
+    ZeroChannels,
+    /// §3.1.1 contract between core and memory: the DL1/IL1 block size
+    /// must equal the core's vector register width (checked by
+    /// `Core::try_new`, which knows both configs).
+    BlockVlenMismatch { block_bits: usize, vlen_bits: usize },
 }
 
 impl std::fmt::Display for MemConfigError {
@@ -103,6 +144,19 @@ impl std::fmt::Display for MemConfigError {
             MemConfigError::DramNotBlockMultiple(bytes) => {
                 write!(f, "DRAM size {bytes} bytes is not a multiple of the LLC block size")
             }
+            MemConfigError::ZeroWays { what } => {
+                write!(f, "{what} must have at least one way")
+            }
+            MemConfigError::ZeroMshrs { what } => {
+                write!(f, "{what} needs at least one MSHR (1 = blocking port)")
+            }
+            MemConfigError::ZeroChannels => {
+                write!(f, "DRAM needs at least one channel")
+            }
+            MemConfigError::BlockVlenMismatch { block_bits, vlen_bits } => write!(
+                f,
+                "§3.1.1: DL1 block size ({block_bits} bits) must equal VLEN ({vlen_bits} bits)"
+            ),
         }
     }
 }
@@ -145,9 +199,14 @@ impl MemConfig {
                 axi_width_bits: 128,
                 double_rate: true,
                 burst_setup_cycles: 20,
+                channels: 1,
             },
             llc_hit_cycles: 1,
             replacement: Replacement::Nru,
+            dl1_mshrs: 1,
+            llc_mshrs: 1,
+            prefetch_depth: 0,
+            model: MemModel::Cached,
         }
     }
 
@@ -157,6 +216,23 @@ impl MemConfig {
     }
 
     pub fn validate(&self) -> Result<(), MemConfigError> {
+        // Zero-resource checks first: a zero way/MSHR/channel count is
+        // the clearer diagnosis when derived values (set counts) are
+        // degenerate too.
+        for (what, ways) in [("IL1", self.il1.ways), ("DL1", self.dl1.ways), ("LLC", self.llc.ways)]
+        {
+            if ways == 0 {
+                return Err(MemConfigError::ZeroWays { what });
+            }
+        }
+        for (what, mshrs) in [("DL1", self.dl1_mshrs), ("LLC", self.llc_mshrs)] {
+            if mshrs == 0 {
+                return Err(MemConfigError::ZeroMshrs { what });
+            }
+        }
+        if self.dram.channels == 0 {
+            return Err(MemConfigError::ZeroChannels);
+        }
         for (what, got) in [
             ("IL1 sets", self.il1.sets),
             ("DL1 sets", self.dl1.sets),
@@ -247,5 +323,33 @@ mod tests {
         let mut c = MemConfig::paper_default();
         c.llc.block_bits = 128;
         assert!(matches!(c.validate(), Err(MemConfigError::LlcBlockTooSmall { .. })));
+    }
+
+    #[test]
+    fn validation_rejects_zero_ways_mshrs_channels() {
+        let mut c = MemConfig::paper_default();
+        c.llc.ways = 0;
+        assert!(matches!(c.validate(), Err(MemConfigError::ZeroWays { what: "LLC" })));
+
+        let mut c = MemConfig::paper_default();
+        c.dl1_mshrs = 0;
+        assert!(matches!(c.validate(), Err(MemConfigError::ZeroMshrs { what: "DL1" })));
+
+        let mut c = MemConfig::paper_default();
+        c.llc_mshrs = 0;
+        assert!(matches!(c.validate(), Err(MemConfigError::ZeroMshrs { what: "LLC" })));
+
+        let mut c = MemConfig::paper_default();
+        c.dram.channels = 0;
+        assert!(matches!(c.validate(), Err(MemConfigError::ZeroChannels)));
+    }
+
+    #[test]
+    fn paper_default_is_blocking_and_unprefetched() {
+        // The Table-1 machine reproduces the paper: single-MSHR blocking
+        // port, no prefetcher, one AXI channel.
+        let c = MemConfig::paper_default();
+        assert_eq!((c.dl1_mshrs, c.llc_mshrs, c.prefetch_depth, c.dram.channels), (1, 1, 0, 1));
+        assert_eq!(c.model, MemModel::Cached);
     }
 }

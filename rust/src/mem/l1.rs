@@ -12,6 +12,7 @@
 use super::config::{CacheGeometry, Replacement};
 use super::dram::Dram;
 use super::llc::Llc;
+use super::mshr::MshrFile;
 use super::stats::CacheStats;
 
 /// Largest supported L1 block (VLEN 1024 → 128 bytes); lets miss paths
@@ -33,6 +34,10 @@ pub struct L1Cache {
     dirty: Vec<bool>,
     ru: Vec<bool>,
     data: Vec<u8>,
+
+    /// Outstanding-miss tracking; single-entry = the legacy blocking
+    /// port (gating is then the port's job, see `mem::mshr`).
+    mshrs: MshrFile,
 
     stats: CacheStats,
 }
@@ -58,8 +63,15 @@ impl L1Cache {
             dirty: vec![false; blocks],
             ru: vec![false; blocks],
             data: vec![0; blocks * geom.block_bytes()],
+            mshrs: MshrFile::new(1),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Set the MSHR count (builder-style; 1 = blocking, the default).
+    pub fn with_mshrs(mut self, count: usize) -> Self {
+        self.mshrs = MshrFile::new(count.max(1));
+        self
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -203,11 +215,16 @@ impl L1Cache {
             }
             None => {
                 self.stats.misses += 1;
-                let slot = self.evict_and_claim(addr, llc, dram, now);
+                // A miss needs an MSHR; with a multi-entry file it may
+                // start while earlier misses are still in flight.
+                let (mshr, issue) = self.mshrs.acquire(now);
+                self.stats.mshr_wait_cycles += issue - now;
+                let slot = self.evict_and_claim(addr, llc, dram, issue);
                 let base = slot * bb;
                 let block_addr = self.block_base(addr);
                 let ready =
-                    llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, now);
+                    llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, issue);
+                self.mshrs.complete(mshr, ready);
                 (slot, ready)
             }
         };
@@ -244,17 +261,22 @@ impl L1Cache {
             }
             None => {
                 self.stats.misses += 1;
-                let slot = self.evict_and_claim(addr, llc, dram, now);
                 if full_block {
                     // §3.1.1: the whole block is about to be overwritten —
-                    // no need to wait for a fetch.
+                    // no need to wait for a fetch (and no MSHR: nothing
+                    // is outstanding).
+                    let slot = self.evict_and_claim(addr, llc, dram, now);
                     self.stats.alloc_no_fetch += 1;
                     (slot, now + 1)
                 } else {
+                    let (mshr, issue) = self.mshrs.acquire(now);
+                    self.stats.mshr_wait_cycles += issue - now;
+                    let slot = self.evict_and_claim(addr, llc, dram, issue);
                     let base = slot * bb;
                     let block_addr = self.block_base(addr);
                     let ready =
-                        llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, now);
+                        llc.read_sub(block_addr, &mut self.data[base..base + bb], dram, issue);
+                    self.mshrs.complete(mshr, ready);
                     (slot, ready + 1)
                 }
             }
@@ -284,11 +306,13 @@ impl L1Cache {
         }
     }
 
-    /// Invalidate everything without writing back (IL1 refill / tests).
+    /// Invalidate everything without writing back (IL1 refill / tests);
+    /// also forgets in-flight misses.
     pub fn invalidate_all(&mut self) {
         self.valid.iter_mut().for_each(|v| *v = false);
         self.dirty.iter_mut().for_each(|v| *v = false);
         self.ru.iter_mut().for_each(|v| *v = false);
+        self.mshrs.reset();
     }
 
     /// Hierarchy-aware host read of one byte.
@@ -405,6 +429,24 @@ mod tests {
         let mut dram =
             Dram::new(crate::mem::config::DramConfig { size_bytes: 1 << 20, ..cfg.dram });
         il1.write(0, &[0u8; 4], &mut llc, &mut dram, 0);
+    }
+
+    #[test]
+    fn dl1_mshr_file_bounds_overlap() {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        let mut dl1 = L1Cache::with_policy(cfg.dl1, true, cfg.replacement).with_mshrs(2);
+        let mut llc = Llc::new(&cfg);
+        let mut dram = Dram::new(cfg.dram);
+        let mut buf = [0u8; 4];
+        // Two misses to different LLC blocks fit in the two MSHRs…
+        dl1.read(0x0000, &mut buf, &mut llc, &mut dram, 0);
+        dl1.read(0x10000, &mut buf, &mut llc, &mut dram, 1);
+        assert_eq!(dl1.stats().mshr_wait_cycles, 0);
+        // …the third must wait for a slot to free.
+        dl1.read(0x20000, &mut buf, &mut llc, &mut dram, 2);
+        assert!(dl1.stats().mshr_wait_cycles > 0, "third miss waited for an MSHR");
+        assert_eq!(dl1.stats().misses, 3);
     }
 
     #[test]

@@ -14,9 +14,20 @@
 //! - **Critical-sub-block-first** (§3.1.3): on a fetch, the requested L1
 //!   block is forwarded as soon as its beats land, before the burst
 //!   finishes; the channel stays busy until the burst completes.
+//!
+//! Beyond the paper, the LLC is non-blocking: DRAM fills are tracked in
+//! an [`MshrFile`] (`MemConfig::llc_mshrs`), so with two or more MSHRs
+//! several fills overlap on the DRAM channels, and a next-N-line stream
+//! prefetcher (`MemConfig::prefetch_depth`) rides the fill path — a
+//! demand miss on block B also fetches B+1..B+N when a fill MSHR is
+//! free. In-flight blocks carry a per-slot `ready_at` cycle; a hit on a
+//! block whose fill has not landed yet waits for it (a "late prefetch"
+//! is cheaper than a miss but not free). The default single-MSHR,
+//! depth-0 configuration reproduces the paper's blocking timing exactly.
 
 use super::config::{CacheGeometry, MemConfig, Replacement};
 use super::dram::Dram;
+use super::mshr::MshrFile;
 use super::stats::CacheStats;
 
 pub struct Llc {
@@ -43,7 +54,22 @@ pub struct Llc {
     /// Per-block sub-block valid bitmap (≤128 sub-blocks per block in any
     /// valid configuration: 16384-bit block / 128-bit sub-block).
     sub_valid: Vec<u128>,
+    /// Cycle at which the block's last fill lands (0 when not in
+    /// flight): hits on an in-flight block wait for it.
+    ready_at: Vec<u64>,
+    /// Tagged prefetching: set on prefetched blocks, cleared on their
+    /// first demand hit, which re-arms the stream (fetches the next
+    /// lines) so a steady stream pays one demand miss, not one per
+    /// `prefetch_depth` blocks.
+    prefetched: Vec<bool>,
     data: Vec<u8>,
+
+    /// Outstanding-fill tracking; single-entry = legacy blocking fills.
+    mshrs: MshrFile,
+    /// Next-N-line prefetch depth on the fill path (0 = off).
+    prefetch_depth: usize,
+    /// DRAM capacity — the prefetcher must not run past it.
+    dram_limit: usize,
 
     stats: CacheStats,
 }
@@ -72,7 +98,12 @@ impl Llc {
             dirty: vec![false; blocks],
             ru: vec![false; blocks],
             sub_valid: vec![0; blocks],
+            ready_at: vec![0; blocks],
+            prefetched: vec![false; blocks],
             data: vec![0; blocks * geom.block_bytes()],
+            mshrs: MshrFile::new(cfg.llc_mshrs.max(1)),
+            prefetch_depth: cfg.prefetch_depth,
+            dram_limit: cfg.dram.size_bytes,
             stats: CacheStats::default(),
         }
     }
@@ -215,14 +246,29 @@ impl Llc {
         self.valid[slot] = true;
         self.dirty[slot] = false;
         self.sub_valid[slot] = 0;
+        self.ready_at[slot] = 0;
+        self.prefetched[slot] = false;
         self.ru[slot] = false;
         slot
+    }
+
+    #[inline]
+    fn full_sub_mask(&self) -> u128 {
+        if self.subs_per_block == 128 {
+            u128::MAX
+        } else {
+            (1u128 << self.subs_per_block) - 1
+        }
     }
 
     /// Burst-fetch all *invalid* sub-blocks of `slot` from DRAM (one
     /// whole-block burst; valid — possibly dirty — sub-blocks are
     /// preserved). Returns the cycle the critical sub-block is ready.
     fn fill(&mut self, slot: usize, addr: u32, dram: &mut Dram, now: u64) -> u64 {
+        // A demand fill needs a fill MSHR; with a multi-entry file the
+        // burst may start before earlier fills have landed.
+        let (mshr, issue) = self.mshrs.acquire(now);
+        self.stats.mshr_wait_cycles += issue - now;
         let block_addr = self.block_base(addr);
         let critical = addr as usize & (self.block_bytes() - 1);
         let bb = self.geom.block_bytes();
@@ -231,10 +277,10 @@ impl Llc {
         let timing = if mask == 0 {
             // Common case (fresh allocation): burst straight into the
             // cache array — no staging copy.
-            dram.read_burst(block_addr, &mut self.data[base..base + bb], critical, now)
+            dram.read_burst(block_addr, &mut self.data[base..base + bb], critical, issue)
         } else {
             // Partially-valid block: stage, then fill only invalid subs.
-            let timing = dram.read_burst(block_addr, &mut self.fill_buf, critical, now);
+            let timing = dram.read_burst(block_addr, &mut self.fill_buf, critical, issue);
             for i in 0..self.subs_per_block {
                 if mask >> i & 1 == 0 {
                     let lo = i * self.sub_bytes;
@@ -244,12 +290,46 @@ impl Llc {
             }
             timing
         };
-        self.sub_valid[slot] = if self.subs_per_block == 128 {
-            u128::MAX
-        } else {
-            (1u128 << self.subs_per_block) - 1
-        };
+        self.mshrs.complete(mshr, timing.done);
+        self.sub_valid[slot] = self.full_sub_mask();
+        self.ready_at[slot] = timing.critical_ready;
         timing.critical_ready
+    }
+
+    /// Next-N-line stream prefetch after a demand miss on the block
+    /// containing `addr`: fetch following blocks that are absent, inside
+    /// DRAM, and for which a fill MSHR is free *right now* — the
+    /// prefetcher never delays demand traffic (and is therefore inert
+    /// with a single, blocking MSHR). Prefetched blocks become usable at
+    /// their burst's end (`ready_at`), not critical-sub-first.
+    fn prefetch_next(&mut self, addr: u32, dram: &mut Dram, now: u64) {
+        if self.prefetch_depth == 0 {
+            return;
+        }
+        let bb = self.block_bytes() as u64;
+        let base = self.block_base(addr) as u64;
+        for i in 1..=self.prefetch_depth as u64 {
+            let pa = base + i * bb;
+            if pa + bb > self.dram_limit as u64 {
+                break;
+            }
+            let pa = pa as u32;
+            if self.lookup(pa).is_some() {
+                continue;
+            }
+            let Some(mshr) = self.mshrs.try_acquire(now) else { break };
+            let slot = self.allocate(pa, dram, now);
+            let set = self.set_of(pa);
+            self.touch(set, slot);
+            let bbu = self.geom.block_bytes();
+            let dbase = slot * bbu;
+            let timing = dram.read_burst(pa, &mut self.data[dbase..dbase + bbu], 0, now);
+            self.mshrs.complete(mshr, timing.done);
+            self.sub_valid[slot] = self.full_sub_mask();
+            self.ready_at[slot] = timing.done;
+            self.prefetched[slot] = true;
+            self.stats.prefetches += 1;
+        }
     }
 
     /// Read one L1 block (sub-block granularity). `buf.len()` must equal
@@ -259,19 +339,30 @@ impl Llc {
         debug_assert_eq!(buf.len(), self.sub_bytes);
         debug_assert_eq!(addr as usize % self.sub_bytes, 0);
         let sub = self.sub_index(addr);
+        let mut missed = false;
         let ready = if let Some(slot) = self.lookup(addr) {
             let set = self.set_of(addr);
             self.touch(set, slot);
             if self.sub_valid[slot] >> sub & 1 == 1 {
                 self.stats.hits += 1;
-                now + self.hit_cycles
+                if self.prefetched[slot] {
+                    // First demand hit on a prefetched block: re-arm the
+                    // stream so it stays `prefetch_depth` lines ahead.
+                    self.prefetched[slot] = false;
+                    missed = true;
+                }
+                // An in-flight (prefetched) block is only usable once its
+                // burst lands; a landed block costs the plain hit latency.
+                now.max(self.ready_at[slot]) + self.hit_cycles
             } else {
+                missed = true;
                 // Block allocated by writes, requested sub not yet valid:
                 // fetch the remainder of the block.
                 self.stats.misses += 1;
                 self.fill(slot, addr, dram, now) + self.hit_cycles
             }
         } else {
+            missed = true;
             self.stats.misses += 1;
             let slot = self.allocate(addr, dram, now);
             let set = self.set_of(addr);
@@ -281,6 +372,12 @@ impl Llc {
         let slot = self.lookup(addr).expect("block just ensured");
         let base = slot * self.block_bytes() + sub * self.sub_bytes;
         buf.copy_from_slice(&self.data[base..base + self.sub_bytes]);
+        // Stream prefetch rides the demand-miss fill path and re-arms on
+        // prefetch hits (after the copy-out: a prefetch allocation must
+        // never displace the data being returned).
+        if missed {
+            self.prefetch_next(addr, dram, now);
+        }
         ready
     }
 
@@ -337,12 +434,16 @@ impl Llc {
         b[0]
     }
 
-    /// Invalidate everything (drops dirty data — test helper).
+    /// Invalidate everything (drops dirty data — program (re)load and
+    /// test helper); also forgets in-flight fills.
     pub fn invalidate_all(&mut self) {
         self.valid.iter_mut().for_each(|v| *v = false);
         self.sub_valid.iter_mut().for_each(|v| *v = 0);
         self.dirty.iter_mut().for_each(|v| *v = false);
         self.ru.iter_mut().for_each(|v| *v = false);
+        self.ready_at.iter_mut().for_each(|v| *v = 0);
+        self.prefetched.iter_mut().for_each(|v| *v = false);
+        self.mshrs.reset();
     }
 }
 
@@ -464,6 +565,80 @@ mod tests {
             }
         }
         assert_eq!(misses_after_warmup, 0, "src and dst blocks must coexist");
+    }
+
+    fn mk_prefetch(mshrs: usize, depth: usize) -> (Llc, Dram) {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        cfg.llc_mshrs = mshrs;
+        cfg.prefetch_depth = depth;
+        (Llc::new(&cfg), Dram::new(cfg.dram))
+    }
+
+    #[test]
+    fn prefetcher_hides_the_next_blocks() {
+        let (mut llc, mut dram) = mk_prefetch(4, 2);
+        let mut buf = vec![0u8; SUB];
+        // Demand miss on block 0 prefetches blocks 1 and 2.
+        llc.read_sub(0, &mut buf, &mut dram, 0);
+        assert_eq!(llc.stats().prefetches, 2);
+        // A read of block 1 after its burst landed is a plain hit…
+        let r = llc.read_sub(2048, &mut buf, &mut dram, 10_000);
+        assert_eq!(r, 10_001);
+        assert_eq!(llc.stats().misses, 1, "block 1 was prefetched, not missed");
+        // …and that first hit re-armed the stream (block 3 fetched).
+        assert_eq!(llc.stats().prefetches, 3);
+    }
+
+    #[test]
+    fn prefetched_data_is_functionally_correct() {
+        let (mut llc, mut dram) = mk_prefetch(8, 3);
+        for blk in 0u8..4 {
+            dram.host_write(blk as u32 * 2048, &vec![0xC0 + blk; 2048]);
+        }
+        let mut buf = vec![0u8; SUB];
+        llc.read_sub(0, &mut buf, &mut dram, 0);
+        assert_eq!(dram.stats().read_bursts, 4, "demand block + 3 prefetched blocks");
+        for blk in 1u8..4 {
+            llc.read_sub(blk as u32 * 2048 + 64, &mut buf, &mut dram, 10_000);
+            assert_eq!(buf, vec![0xC0 + blk; SUB], "block {blk}");
+        }
+        assert_eq!(llc.stats().misses, 1, "blocks 1..3 were prefetched, not missed");
+    }
+
+    #[test]
+    fn late_prefetch_hit_waits_for_its_burst() {
+        let (mut llc, mut dram) = mk_prefetch(4, 1);
+        let mut buf = vec![0u8; SUB];
+        let demand_ready = llc.read_sub(0, &mut buf, &mut dram, 0);
+        assert_eq!(demand_ready, 22, "setup 20 + 1 beat + 1 hit cycle");
+        // The prefetch of block 1 queued behind the demand burst (done at
+        // 84, prefetch burst done at 168): reading it right after the
+        // demand data arrives waits for the in-flight burst.
+        let r = llc.read_sub(2048, &mut buf, &mut dram, demand_ready);
+        assert_eq!(r, 168 + 1, "late prefetch is cheaper than a miss but not free");
+    }
+
+    #[test]
+    fn single_blocking_mshr_disables_prefetch() {
+        let (mut llc, mut dram) = mk_prefetch(1, 4);
+        let mut buf = vec![0u8; SUB];
+        llc.read_sub(0, &mut buf, &mut dram, 0);
+        assert_eq!(llc.stats().prefetches, 0, "no free MSHR to ride on");
+    }
+
+    #[test]
+    fn mshrs_bound_outstanding_fills() {
+        // Two MSHRs: a third concurrent fill must wait for the first
+        // fill's burst to land before it may even start.
+        let (mut llc, mut dram) = mk_prefetch(2, 0);
+        let mut buf = vec![0u8; SUB];
+        llc.read_sub(0x0000, &mut buf, &mut dram, 0);
+        llc.read_sub(0x10000, &mut buf, &mut dram, 1);
+        let before = llc.stats().mshr_wait_cycles;
+        assert_eq!(before, 0);
+        llc.read_sub(0x20000, &mut buf, &mut dram, 2);
+        assert!(llc.stats().mshr_wait_cycles > 0, "third fill waited for an MSHR");
     }
 
     #[test]

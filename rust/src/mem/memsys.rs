@@ -1,12 +1,43 @@
 //! The assembled memory system: IL1 + DL1 over a unified LLC over DRAM
 //! (Fig. 2 of the paper). This is the object the simulated core talks to.
+//!
+//! The data port is modelled here, not in the core: every access goes
+//! through [`MemSys::read`] / [`MemSys::write`] and returns an
+//! [`Access`] splitting *issue* (when the port accepted the operation)
+//! from *ready* (when its data is available / the store retired). With
+//! the default single DL1 MSHR the port is **blocking** — it holds until
+//! the previous access's data returned, reproducing the paper model
+//! cycle for cycle. With `dl1_mshrs >= 2` the port frees one cycle after
+//! issue: hits proceed under outstanding misses and misses overlap up to
+//! the MSHR counts (the non-blocking hierarchy).
+//!
+//! `MemConfig::model == MemModel::Flat` swaps the whole hierarchy for a
+//! flat single-cycle "magic memory" with identical architectural
+//! behaviour — the oracle the differential test suite runs every
+//! workload against.
 
-use super::config::MemConfig;
+use super::config::{MemConfig, MemConfigError, MemModel};
 use super::dram::Dram;
 use super::l1::L1Cache;
 use super::llc::Llc;
 use super::stats::MemStats;
 use crate::asm::Program;
+
+/// Timing of one data-port access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// Cycle the port accepted the operation (>= the request cycle).
+    pub issue: u64,
+    /// Cycle the load data is available / the store retired.
+    pub ready: u64,
+    /// Portion of `issue - request` spent waiting for the port register
+    /// itself (structural hazard: an operation issued last cycle).
+    pub struct_stall: u64,
+    /// Portion of `issue - request` spent waiting for in-flight data on
+    /// the blocking port (bandwidth/latency exposure). Zero on a
+    /// non-blocking port, where waiting moves into MSHR/queue stats.
+    pub bw_stall: u64,
+}
 
 pub struct MemSys {
     pub cfg: MemConfig,
@@ -14,22 +45,39 @@ pub struct MemSys {
     dl1: L1Cache,
     llc: Llc,
     dram: Dram,
+    /// Cycle the next data-port operation may start.
+    port_free: u64,
+    /// The structural part of `port_free` (previous issue + 1); the
+    /// remainder up to `port_free` is blocking-mode data hold.
+    port_free_struct: u64,
+    /// Blocking port semantics (single DL1 MSHR).
+    blocking: bool,
 }
 
 impl MemSys {
-    pub fn new(cfg: MemConfig) -> Self {
-        cfg.validate().expect("invalid memory configuration");
-        Self {
+    /// Build a memory system, rejecting invalid configurations (zero
+    /// ways/MSHRs/channels, mismatched block sizes, …).
+    pub fn new(cfg: MemConfig) -> Result<Self, MemConfigError> {
+        cfg.validate()?;
+        Ok(Self {
             cfg,
             il1: L1Cache::new(cfg.il1, false),
-            dl1: L1Cache::with_policy(cfg.dl1, true, cfg.replacement),
+            dl1: L1Cache::with_policy(cfg.dl1, true, cfg.replacement).with_mshrs(cfg.dl1_mshrs),
             llc: Llc::new(&cfg),
             dram: Dram::new(cfg.dram),
-        }
+            port_free: 0,
+            port_free_struct: 0,
+            blocking: cfg.dl1_mshrs <= 1,
+        })
+    }
+
+    #[inline]
+    fn flat(&self) -> bool {
+        self.cfg.model == MemModel::Flat
     }
 
     /// Copy a program image into DRAM (host-side, no timing) and drop any
-    /// cached state.
+    /// cached state, in-flight misses and channel occupancy.
     pub fn load_program(&mut self, prog: &Program) {
         let mut text_bytes = Vec::with_capacity(prog.text.len() * 4);
         for w in &prog.text {
@@ -42,47 +90,91 @@ impl MemSys {
         self.il1.invalidate_all();
         self.dl1.invalidate_all();
         self.llc.invalidate_all();
+        self.reset_timing();
+    }
+
+    /// Forget all timing state (port, in-flight DRAM bursts) without
+    /// touching cache contents.
+    pub fn reset_timing(&mut self) {
+        self.port_free = 0;
+        self.port_free_struct = 0;
+        self.dram.reset_timing();
     }
 
     /// Instruction fetch through IL1. Hit: instruction available this
     /// cycle (the IL1 is "implemented in registers", §3.1). Returns
     /// `(word, ready_cycle)`.
     pub fn fetch(&mut self, pc: u32, now: u64) -> (u32, u64) {
+        if self.flat() {
+            let mut buf = [0u8; 4];
+            self.dram.host_read(pc, &mut buf);
+            return (u32::from_le_bytes(buf), now);
+        }
         let mut buf = [0u8; 4];
         let ready = self.il1.read(pc, &mut buf, &mut self.llc, &mut self.dram, now);
         (u32::from_le_bytes(buf), ready)
     }
 
+    /// Accept a data-port operation requested at `now`: apply the port
+    /// hold, classify the wait, and return the issue cycle.
+    fn accept(&self, now: u64) -> (u64, u64, u64) {
+        let issue = now.max(self.port_free);
+        let struct_stall = self.port_free_struct.clamp(now, issue) - now;
+        let bw_stall = (issue - now) - struct_stall;
+        (issue, struct_stall, bw_stall)
+    }
+
+    /// Release the port after an operation issued at `issue` whose data
+    /// is ready at `ready`.
+    fn release(&mut self, issue: u64, ready: u64) {
+        self.port_free_struct = issue + 1;
+        self.port_free = if self.blocking { ready.max(issue + 1) } else { issue + 1 };
+    }
+
     /// Data read through DL1; splits block-crossing accesses.
-    pub fn read(&mut self, addr: u32, buf: &mut [u8], now: u64) -> u64 {
+    pub fn read(&mut self, addr: u32, buf: &mut [u8], now: u64) -> Access {
+        if self.flat() {
+            self.dram.host_read(addr, buf);
+            return Access { issue: now, ready: now, struct_stall: 0, bw_stall: 0 };
+        }
+        let (issue, struct_stall, bw_stall) = self.accept(now);
         let bb = self.dl1.block_bytes();
-        let mut ready = now;
+        let mut ready = issue;
         let mut done = 0usize;
         while done < buf.len() {
             let a = addr + done as u32;
             let room = bb - (a as usize % bb);
             let chunk = room.min(buf.len() - done);
-            let r = self.dl1.read(a, &mut buf[done..done + chunk], &mut self.llc, &mut self.dram, now);
+            let chunk_buf = &mut buf[done..done + chunk];
+            let r = self.dl1.read(a, chunk_buf, &mut self.llc, &mut self.dram, issue);
             ready = ready.max(r);
             done += chunk;
         }
-        ready
+        self.release(issue, ready);
+        Access { issue, ready, struct_stall, bw_stall }
     }
 
     /// Data write through DL1; splits block-crossing accesses.
-    pub fn write(&mut self, addr: u32, data: &[u8], now: u64) -> u64 {
+    pub fn write(&mut self, addr: u32, data: &[u8], now: u64) -> Access {
+        if self.flat() {
+            self.dram.host_write(addr, data);
+            return Access { issue: now, ready: now, struct_stall: 0, bw_stall: 0 };
+        }
+        let (issue, struct_stall, bw_stall) = self.accept(now);
         let bb = self.dl1.block_bytes();
-        let mut ready = now;
+        let mut ready = issue;
         let mut done = 0usize;
         while done < data.len() {
             let a = addr + done as u32;
             let room = bb - (a as usize % bb);
             let chunk = room.min(data.len() - done);
-            let r = self.dl1.write(a, &data[done..done + chunk], &mut self.llc, &mut self.dram, now);
+            let r =
+                self.dl1.write(a, &data[done..done + chunk], &mut self.llc, &mut self.dram, issue);
             ready = ready.max(r);
             done += chunk;
         }
-        ready
+        self.release(issue, ready);
+        Access { issue, ready, struct_stall, bw_stall }
     }
 
     /// Write all dirty state down to DRAM (host-side, end of run).
@@ -148,7 +240,14 @@ mod tests {
     fn mk() -> MemSys {
         let mut cfg = MemConfig::paper_default();
         cfg.dram.size_bytes = 1 << 20;
-        MemSys::new(cfg)
+        MemSys::new(cfg).unwrap()
+    }
+
+    fn mk_with(f: impl FnOnce(&mut MemConfig)) -> MemSys {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dram.size_bytes = 1 << 20;
+        f(&mut cfg);
+        MemSys::new(cfg).unwrap()
     }
 
     #[test]
@@ -161,6 +260,21 @@ mod tests {
         m.load_program(&p);
         let (w, _) = m.fetch(p.text_base, 0);
         assert_eq!(crate::isa::decode(w).unwrap().to_string(), "addi a0, zero, 7");
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        let mut cfg = MemConfig::paper_default();
+        cfg.dl1.ways = 0;
+        assert!(matches!(MemSys::new(cfg), Err(MemConfigError::ZeroWays { .. })));
+
+        let mut cfg = MemConfig::paper_default();
+        cfg.llc.block_bits = cfg.dl1.block_bits / 2; // block > LLC block
+        assert!(matches!(MemSys::new(cfg), Err(MemConfigError::LlcBlockTooSmall { .. })));
+
+        let mut cfg = MemConfig::paper_default();
+        cfg.dl1_mshrs = 0;
+        assert!(matches!(MemSys::new(cfg), Err(MemConfigError::ZeroMshrs { .. })));
     }
 
     #[test]
@@ -188,12 +302,13 @@ mod tests {
                 let addr = (rng.below((1 << 16) - 64) as usize / len * len) as u32;
                 if rng.below(2) == 0 {
                     let data = rng.vec_u8(len);
-                    now = m.write(addr, &data, now).max(now) + 1;
+                    now = m.write(addr, &data, now).ready.max(now) + 1;
                     shadow[addr as usize..addr as usize + len].copy_from_slice(&data);
                 } else {
                     let mut buf = vec![0u8; len];
-                    now = m.read(addr, &mut buf, now).max(now) + 1;
-                    crate::prop_assert_eq!(buf, shadow[addr as usize..addr as usize + len].to_vec());
+                    now = m.read(addr, &mut buf, now).ready.max(now) + 1;
+                    let want = shadow[addr as usize..addr as usize + len].to_vec();
+                    crate::prop_assert_eq!(buf, want);
                 }
             }
             // After a flush, DRAM must equal the shadow exactly.
@@ -202,6 +317,55 @@ mod tests {
             crate::prop_assert!(dram == &shadow[..], "post-flush DRAM differs from shadow");
             Ok(())
         });
+    }
+
+    /// Unaligned/block-crossing traffic, cross-checked against BOTH the
+    /// flat shadow and the magic-memory oracle model, under blocking and
+    /// non-blocking (MSHR + prefetch + 2-channel) configurations — the
+    /// read/write splitting in `MemSys` and `L1Cache` must be purely a
+    /// timing concern.
+    #[test]
+    fn unaligned_random_traffic_matches_flat_reference() {
+        for nonblocking in [false, true] {
+            crate::util::proptest::check("unaligned memsys vs flat", 8, |rng: &mut Xoshiro256| {
+                let mut m = mk_with(|cfg| {
+                    if nonblocking {
+                        cfg.dl1_mshrs = 4;
+                        cfg.llc_mshrs = 8;
+                        cfg.prefetch_depth = 2;
+                        cfg.dram.channels = 2;
+                    }
+                });
+                let mut flat = mk_with(|cfg| cfg.model = MemModel::Flat);
+                let mut shadow = vec![0u8; 1 << 16];
+                let mut now = 0u64;
+                for _ in 0..1500 {
+                    let len = 1 + rng.below(64) as usize;
+                    let addr = rng.below((1 << 16) - 64);
+                    if rng.below(2) == 0 {
+                        let data = rng.vec_u8(len);
+                        now = m.write(addr, &data, now).ready.max(now) + 1;
+                        flat.write(addr, &data, now);
+                        shadow[addr as usize..addr as usize + len].copy_from_slice(&data);
+                    } else {
+                        let mut buf = vec![0u8; len];
+                        let mut fbuf = vec![0u8; len];
+                        now = m.read(addr, &mut buf, now).ready.max(now) + 1;
+                        flat.read(addr, &mut fbuf, now);
+                        let want = &shadow[addr as usize..addr as usize + len];
+                        crate::prop_assert_eq!(&buf[..], want);
+                        crate::prop_assert_eq!(&fbuf[..], want);
+                    }
+                }
+                m.flush_all();
+                flat.flush_all();
+                crate::prop_assert!(
+                    m.dram_slice(0, 1 << 16) == flat.dram_slice(0, 1 << 16),
+                    "cached and flat DRAM images diverged"
+                );
+                Ok(())
+            });
+        }
     }
 
     #[test]
@@ -215,8 +379,8 @@ mod tests {
         let mut now = 0u64;
         for off in (0..n).step_by(32) {
             let mut v = [0u8; 32];
-            now = m.read(src + off, &mut v, now);
-            now = m.write(dst + off, &v, now);
+            now = m.read(src + off, &mut v, now).ready;
+            now = m.write(dst + off, &v, now).ready;
         }
         m.flush_all();
         let s = m.stats();
@@ -224,6 +388,72 @@ mod tests {
         assert_eq!(s.dram.read_bursts, blocks, "one src fetch per LLC block");
         assert_eq!(s.dram.write_bursts, blocks, "one dst write-back per LLC block");
         assert_eq!(s.dl1.alloc_no_fetch, (n / 32) as u64, "every vector store skips fetch");
+    }
+
+    #[test]
+    fn blocking_port_holds_until_data_returns() {
+        // Default (1 MSHR): a hit right after a miss stalls on the port
+        // until the miss's data came back — the legacy model.
+        let mut m = mk();
+        let miss = m.read(0x4000, &mut [0u8; 4], 0);
+        assert!(miss.ready > 20, "cold miss pays the burst setup");
+        // Warm the second line, then miss + hit back to back.
+        m.read(0x4000, &mut [0u8; 4], 1000); // hit, port free quickly
+        let miss = m.read(0x10000, &mut [0u8; 4], 2000);
+        let hit = m.read(0x4000, &mut [0u8; 4], 2001);
+        assert!(hit.issue >= miss.ready, "blocking port holds the hit");
+        assert!(hit.bw_stall > 0, "the wait is bandwidth exposure, not structural");
+    }
+
+    #[test]
+    fn nonblocking_port_allows_hit_under_miss() {
+        let mut m = mk_with(|cfg| {
+            cfg.dl1_mshrs = 4;
+            cfg.llc_mshrs = 4;
+        });
+        m.read(0x4000, &mut [0u8; 4], 0); // warm a line
+        let miss = m.read(0x10000, &mut [0u8; 4], 2000);
+        assert!(miss.ready > 2020, "cold miss still pays DRAM latency");
+        let hit = m.read(0x4000, &mut [0u8; 4], 2001);
+        assert_eq!(hit.issue, 2001, "hit proceeds under the outstanding miss");
+        assert_eq!(hit.ready, 2001, "DL1 hit has no memory stall");
+        assert_eq!(hit.bw_stall, 0);
+    }
+
+    #[test]
+    fn nonblocking_misses_overlap_across_channels() {
+        // Two independent misses with two DRAM channels available: the
+        // blocking port still serialises them (the second may not even
+        // issue before the first's data returned), while 2+ MSHRs let
+        // the second burst start immediately on the free channel.
+        let mut blocking = mk_with(|cfg| cfg.dram.channels = 2);
+        blocking.read(0x00000, &mut [0u8; 4], 0);
+        let b = blocking.read(0x10000, &mut [0u8; 4], 1);
+        let mut nb = mk_with(|cfg| {
+            cfg.dl1_mshrs = 4;
+            cfg.llc_mshrs = 4;
+            cfg.dram.channels = 2;
+        });
+        nb.read(0x00000, &mut [0u8; 4], 0);
+        let b2 = nb.read(0x10000, &mut [0u8; 4], 1);
+        assert_eq!(b2.issue, 1, "miss-under-miss issues immediately");
+        assert!(b.issue > 20, "blocking port waits for the first miss");
+        assert!(b2.ready < b.ready, "overlapped miss must finish earlier ({b2:?} vs {b:?})");
+    }
+
+    #[test]
+    fn flat_model_is_single_cycle_and_correct() {
+        let mut m = mk_with(|cfg| cfg.model = MemModel::Flat);
+        let data: Vec<u8> = (0..64).collect();
+        let w = m.write(0x1f3, &data, 5);
+        assert_eq!((w.issue, w.ready), (5, 5));
+        let mut got = vec![0u8; 64];
+        let r = m.read(0x1f3, &mut got, 9);
+        assert_eq!((r.issue, r.ready), (9, 9));
+        assert_eq!(got, data);
+        // Fetch is immediate too, and flush is a no-op (data already flat).
+        m.flush_all();
+        assert_eq!(m.dram_slice(0x1f3, 64), &data[..]);
     }
 
     #[test]

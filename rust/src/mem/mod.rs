@@ -1,18 +1,30 @@
 //! Memory-hierarchy substrate (§3.1 of the paper): IL1 (direct-mapped,
 //! register-backed), DL1 (set-associative write-back, block = VLEN), a
 //! unified wide-block sub-blocked LLC with NRU replacement, and an
-//! AXI-style burst DRAM model with an optional double-rate interconnect.
+//! AXI-style burst DRAM model with an optional double-rate interconnect
+//! and one or more independent channels.
+//!
+//! The hierarchy is non-blocking when configured so: MSHR files at DL1
+//! and the LLC (`MemConfig::{dl1_mshrs, llc_mshrs}`) bound how many
+//! misses overlap, a next-N-line stream prefetcher
+//! (`MemConfig::prefetch_depth`) rides the LLC fill path, and
+//! `DramConfig::channels` models aggregate DRAM bandwidth. The defaults
+//! (1 MSHR, depth 0, 1 channel) reproduce the paper's blocking model
+//! cycle for cycle. A flat magic-memory oracle
+//! (`MemConfig::model = MemModel::Flat`) backs the differential tests.
 
 pub mod config;
 pub mod dram;
 pub mod l1;
 pub mod llc;
 pub mod memsys;
+pub mod mshr;
 pub mod stats;
 
-pub use config::{CacheGeometry, DramConfig, MemConfig, MemConfigError, Replacement};
+pub use config::{CacheGeometry, DramConfig, MemConfig, MemConfigError, MemModel, Replacement};
 pub use dram::{BurstTiming, Dram};
 pub use l1::L1Cache;
 pub use llc::Llc;
-pub use memsys::MemSys;
+pub use memsys::{Access, MemSys};
+pub use mshr::MshrFile;
 pub use stats::{CacheStats, DramStats, MemStats};

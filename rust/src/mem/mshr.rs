@@ -1,0 +1,117 @@
+//! Miss-status-holding registers: the bounded set of outstanding misses
+//! a cache level may have in flight. This is what turns the hierarchy
+//! non-blocking — a miss only has to wait when every MSHR is already
+//! tracking an earlier miss, so up to `capacity` misses overlap on the
+//! DRAM channels (miss-under-miss) while hits proceed immediately
+//! (hit-under-miss).
+//!
+//! The file tracks occupancy only; callers account the wait they
+//! observe (`issue - now` from [`MshrFile::acquire`]) into their own
+//! `CacheStats::mshr_wait_cycles` — one counter, owned by the cache
+//! level, resettable with the rest of its stats.
+//!
+//! A **single-entry** file is special-cased as the legacy blocking
+//! model: there the port register itself is the one MSHR and the port's
+//! hold-until-data-returns ordering already serialises misses, so
+//! [`MshrFile::acquire`] applies no extra gating (gating on the burst
+//! *end* would double-count the latency the port already exposed and
+//! change the calibrated Table-1 timing).
+
+/// Busy-until cycle per MSHR slot.
+#[derive(Debug, Clone)]
+pub struct MshrFile {
+    slots: Vec<u64>,
+}
+
+impl MshrFile {
+    /// `capacity >= 1` (validated by `MemConfig::validate`).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "an MSHR file needs at least one slot");
+        Self { slots: vec![0; capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Begin tracking a miss arriving at `now`: returns `(slot, issue)`
+    /// where `issue >= now` is the cycle the miss may actually start
+    /// (when the earliest slot frees). The caller must follow up with
+    /// [`MshrFile::complete`] once the miss's finish time is known.
+    /// Single-entry files never gate (see module docs).
+    pub fn acquire(&mut self, now: u64) -> (usize, u64) {
+        if self.slots.len() == 1 {
+            return (0, now);
+        }
+        let (slot, &busy) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &busy)| busy)
+            .expect("file is non-empty");
+        (slot, now.max(busy))
+    }
+
+    /// Mark `slot` busy until `done` (the miss's data has landed).
+    pub fn complete(&mut self, slot: usize, done: u64) {
+        if self.slots.len() > 1 {
+            self.slots[slot] = self.slots[slot].max(done);
+        }
+    }
+
+    /// A slot that is already free at `now`, if any — used by the
+    /// prefetcher, which must never delay a demand miss to get a slot.
+    pub fn try_acquire(&mut self, now: u64) -> Option<usize> {
+        if self.slots.len() == 1 {
+            return None;
+        }
+        self.slots.iter().position(|&busy| busy <= now)
+    }
+
+    /// Drop all in-flight state (program load / test reset).
+    pub fn reset(&mut self) {
+        self.slots.iter_mut().for_each(|s| *s = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_entry_never_gates() {
+        let mut m = MshrFile::new(1);
+        let (_, issue) = m.acquire(5);
+        assert_eq!(issue, 5);
+        m.complete(0, 100);
+        let (_, issue) = m.acquire(6);
+        assert_eq!(issue, 6, "blocking-port mode leaves gating to the port");
+        assert_eq!(m.try_acquire(0), None, "prefetch disabled at capacity 1");
+    }
+
+    #[test]
+    fn misses_overlap_up_to_capacity() {
+        let mut m = MshrFile::new(2);
+        let (s0, i0) = m.acquire(0);
+        m.complete(s0, 50);
+        let (s1, i1) = m.acquire(1);
+        m.complete(s1, 60);
+        assert_eq!((i0, i1), (0, 1), "two misses in flight, no wait");
+        // Third miss must wait for the earliest slot (busy until 50).
+        let (_, i2) = m.acquire(2);
+        assert_eq!(i2, 50, "all MSHRs busy: gated to the first release");
+    }
+
+    #[test]
+    fn try_acquire_only_returns_free_slots() {
+        let mut m = MshrFile::new(2);
+        let (s0, _) = m.acquire(0);
+        m.complete(s0, 50);
+        let s1 = m.try_acquire(0).expect("one slot still free");
+        m.complete(s1, 80);
+        assert_eq!(m.try_acquire(10), None, "both busy");
+        assert!(m.try_acquire(60).is_some(), "slot 0 freed at 50");
+        m.reset();
+        assert!(m.try_acquire(0).is_some());
+    }
+}

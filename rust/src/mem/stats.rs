@@ -12,6 +12,11 @@ pub struct CacheStats {
     pub writebacks: u64,
     /// §3.1.1: vector-store misses that allocated without fetching.
     pub alloc_no_fetch: u64,
+    /// Blocks fetched speculatively by the next-N-line prefetcher (LLC
+    /// only; demand fills are counted in `misses`).
+    pub prefetches: u64,
+    /// Cycles misses spent waiting for a free MSHR (all-outstanding).
+    pub mshr_wait_cycles: u64,
 }
 
 impl CacheStats {
@@ -35,8 +40,13 @@ pub struct DramStats {
     pub write_bursts: u64,
     pub bytes_read: u64,
     pub bytes_written: u64,
-    /// Core cycles the interconnect spent busy (setup + beats).
+    /// Core cycles the interconnect spent busy (setup + beats), summed
+    /// over channels.
     pub busy_cycles: u64,
+    /// Cycles bursts waited for a free channel (bandwidth contention):
+    /// the gap between a burst's arrival and the earliest channel
+    /// becoming free, summed over bursts.
+    pub queue_cycles: u64,
 }
 
 impl DramStats {
@@ -71,7 +81,8 @@ impl MemStats {
     pub fn report(&self) -> String {
         format!(
             "IL1 {:>10} acc {:>6.2}% hit | DL1 {:>10} acc {:>6.2}% hit ({} wb, {} anf) | \
-             LLC {:>10} acc {:>6.2}% hit ({} wb) | DRAM {} rd + {} wr bursts, {} B, {} busy cyc",
+             LLC {:>10} acc {:>6.2}% hit ({} wb, {} pf) | DRAM {} rd + {} wr bursts, {} B, \
+             {} busy cyc, {} queued cyc",
             self.il1.accesses(),
             self.il1.hit_rate() * 100.0,
             self.dl1.accesses(),
@@ -81,10 +92,12 @@ impl MemStats {
             self.llc.accesses(),
             self.llc.hit_rate() * 100.0,
             self.llc.writebacks,
+            self.llc.prefetches,
             self.dram.read_bursts,
             self.dram.write_bursts,
             self.dram.bytes(),
             self.dram.busy_cycles,
+            self.dram.queue_cycles,
         )
     }
 }
@@ -108,6 +121,7 @@ mod tests {
             bytes_read: 4096,
             bytes_written: 4096,
             busy_cycles: 100,
+            queue_cycles: 0,
         };
         assert_eq!(d.bursts(), 4);
         assert_eq!(d.bytes(), 8192);

@@ -187,7 +187,7 @@ mod tests {
         let mut core = Core::paper_default();
         let r = run(&mut core, 64 * 1024, true).unwrap();
         assert!(r.verified, "copy must be exact");
-        // Calibration band (DESIGN.md §6): ≥ 2.5 B/cycle for the 256-bit
+        // Calibration band (DESIGN.md §7): ≥ 2.5 B/cycle for the 256-bit
         // configuration (paper: 4.6 B/cycle at 0.69 GB/s / 150 MHz).
         let bpc = r.throughput.bytes_per_cycle();
         assert!(bpc > 2.5, "vector memcpy too slow: {bpc:.2} B/cycle");

@@ -26,7 +26,7 @@
 
 use super::common::{self, Throughput};
 use crate::asm::Program;
-use crate::core::{Core, SimError};
+use crate::core::{Core, CoreCounters, SimError};
 use crate::mem::MemStats;
 
 /// Which implementation of a workload to run.
@@ -202,6 +202,9 @@ pub struct WorkloadReport {
     pub verify_error: Option<String>,
     /// Memory-system counters at the end of the run.
     pub mem: MemStats,
+    /// Core-side retired-instruction and stall counters (zeroed for
+    /// targets that do not expose them, like the PicoRV32 harness).
+    pub counters: CoreCounters,
 }
 
 impl WorkloadReport {
@@ -243,6 +246,7 @@ pub fn run_on(
         verified: Some(verify.is_ok()),
         verify_error: verify.err().map(|e| e.to_string()),
         mem: core.mem.stats(),
+        counters: run.counters,
     })
 }
 

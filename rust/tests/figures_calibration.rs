@@ -1,5 +1,5 @@
 //! Calibration tests: every figure/table driver must land inside the
-//! acceptance bands of DESIGN.md §6 at the scaled default sizes. These
+//! acceptance bands of DESIGN.md §7 at the scaled default sizes. These
 //! are the "shape of the paper" guarantees: who wins, by what factor,
 //! where the knees fall.
 

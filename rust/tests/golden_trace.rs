@@ -1,0 +1,109 @@
+//! Golden-trace regression tests: the first ~200 retired instructions
+//! of the quickstart program and of a SIMD workload are snapshotted
+//! (architecturally only — pc + disassembly, no cycle numbers, see
+//! `Trace::render_text`) under `rust/tests/golden/`. Timing refactors
+//! are free to move cycles around; silently changing *what executes* is
+//! what these tests catch.
+//!
+//! Regenerate intentionally-changed goldens with `GOLDEN_UPDATE=1 cargo
+//! test`. A missing golden file is bootstrapped on first run.
+//!
+//! As a stored-file-independent check, every trace is also produced a
+//! second time on a non-blocking machine (8 MSHRs, prefetch, two DRAM
+//! channels) and must be byte-identical — the serialisation is
+//! timing-invariant by construction.
+
+use simdsoftcore::asm::assemble_text;
+use simdsoftcore::core::{Core, Trace};
+use simdsoftcore::machine::Machine;
+use simdsoftcore::workloads::{lookup, Scenario, Variant};
+use std::fs;
+use std::path::PathBuf;
+
+const LINES: u64 = 200;
+
+const QUICKSTART: &str = r#"
+    .data
+    input:  .word 42, -7, 100, 3, -50, 8, 0, 21
+    output: .space 32
+    .text
+    main:
+        la   a0, input
+        la   a1, output
+        c0.lv   v1, a0, zero
+        c2.sort v2, v1
+        c0.sv   v2, a1, zero
+        rdcycle a2
+        ecall
+"#;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_dir().join(name);
+    let update = std::env::var("GOLDEN_UPDATE").is_ok();
+    if update || !path.exists() {
+        fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        fs::write(&path, actual).expect("write golden file");
+        if !update {
+            eprintln!("golden {name}: bootstrapped snapshot at {}", path.display());
+        }
+        return;
+    }
+    let expect = fs::read_to_string(&path).expect("read golden file");
+    assert_eq!(
+        actual, expect,
+        "golden trace '{name}' diverged — architectural behaviour changed. \
+         If intended, regenerate with GOLDEN_UPDATE=1 cargo test"
+    );
+}
+
+/// Trace the first `LINES` instructions of `prog` on `core`.
+fn traced_text(core: &mut Core, prog: &simdsoftcore::asm::Program) -> String {
+    core.load(prog);
+    core.trace = Trace::windowed(0, LINES);
+    core.run(1_000_000).expect("traced program runs");
+    core.trace.render_text()
+}
+
+#[test]
+fn quickstart_trace_matches_golden() {
+    let prog = assemble_text(QUICKSTART).expect("quickstart assembles");
+    let mut core = Core::paper_default();
+    let text = traced_text(&mut core, &prog);
+    assert!(text.lines().count() >= 7, "quickstart trace suspiciously short:\n{text}");
+    assert!(text.contains("c2.sort"), "SIMD instruction missing from trace:\n{text}");
+
+    // Timing-invariance: a non-blocking machine retires the identical
+    // instruction sequence.
+    let mut nb = Machine::paper_default().mshrs(8).prefetch_depth(4).dram_channels(2).build();
+    assert_eq!(traced_text(&mut nb, &prog), text, "trace depends on the timing model");
+
+    check_golden("quickstart.trace", &text);
+}
+
+#[test]
+fn simd_sort_workload_trace_matches_golden() {
+    let run_traced = |machine: Machine| {
+        let mut w = lookup("sort").expect("sort registered");
+        let sc = Scenario::new(Variant::Vector, w.smoke_size());
+        let prog = w.build(&sc);
+        let mut core = machine.build();
+        core.load(&prog);
+        w.init(&mut core);
+        core.trace = Trace::windowed(0, LINES);
+        core.run(simdsoftcore::workloads::common::MAX_INSTRS).expect("sort runs");
+        core.trace.render_text()
+    };
+    let text = run_traced(Machine::paper_default());
+    assert!(text.lines().count() >= 50, "sort smoke trace suspiciously short:\n{text}");
+    assert!(text.contains("c2.") || text.contains("c1."), "vector sort uses custom units:\n{text}");
+
+    let nb_text =
+        run_traced(Machine::paper_default().mshrs(8).prefetch_depth(4).dram_channels(2));
+    assert_eq!(nb_text, text, "trace depends on the timing model");
+
+    check_golden("sort_vector.trace", &text);
+}

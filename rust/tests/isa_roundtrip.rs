@@ -181,6 +181,59 @@ fn disassemble_reassemble_roundtrip() {
     assert!(checked > 300, "roundtripped {checked} instructions");
 }
 
+/// Exhaustive round-trip of every memory-access form the data-port
+/// issue/complete timing split touches — scalar loads/stores at
+/// boundary offsets plus the custom I′/S′ vector load/store encodings.
+/// The non-blocking rework must not disturb the codecs these paths
+/// decode through.
+#[test]
+fn memory_access_forms_roundtrip_exhaustively() {
+    use Instr::*;
+    let rd = Reg(10);
+    let rs1 = Reg(11);
+    let rs2 = Reg(12);
+    let mut cases: Vec<Instr> = Vec::new();
+    for offset in [-2048i32, -1, 0, 1, 4, 2047] {
+        cases.extend([
+            Lb { rd, rs1, offset },
+            Lh { rd, rs1, offset },
+            Lw { rd, rs1, offset },
+            Lbu { rd, rs1, offset },
+            Lhu { rd, rs1, offset },
+            Sb { rs1, rs2, offset },
+            Sh { rs1, rs2, offset },
+            Sw { rs1, rs2, offset },
+        ]);
+    }
+    // c0.lv / c0.sv: the vector memory ops routed through the same port.
+    for funct3 in 0u8..4 {
+        cases.push(CustomI {
+            slot: CustomSlot::from_index(0).unwrap(),
+            funct3,
+            ops: IPrime {
+                vrs1: VReg(1),
+                vrd1: VReg(2),
+                vrs2: VReg(3),
+                vrd2: VReg(0),
+                rs1,
+                rd,
+            },
+        });
+    }
+    for funct3 in 4u8..8 {
+        cases.push(CustomS {
+            slot: CustomSlot::from_index(0).unwrap(),
+            funct3,
+            ops: SPrime { vrs1: VReg(1), vrd1: VReg(2), imm: 1, rs2, rs1, rd },
+        });
+    }
+    for instr in cases {
+        let word = encode(&instr).unwrap_or_else(|e| panic!("encode {instr:?}: {e}"));
+        let back = decode(word).unwrap_or_else(|e| panic!("decode {instr:?}: {e}"));
+        assert_eq!(back, instr, "round-trip of {instr:?}");
+    }
+}
+
 #[test]
 fn prop_assert_macros_compose() {
     check("macros work", 4, |rng| {

@@ -1,0 +1,97 @@
+//! Differential memory oracle: every registered workload runs twice —
+//! once through the full cache hierarchy, once through the flat
+//! "magic memory" reference model (`MemModel::Flat`) — and must produce
+//! **identical architectural results**: the same verify() outcome, the
+//! same retired-instruction count, and bit-identical final memory
+//! images. Only cycle counts may differ. This pins down the invariant
+//! that lets timing-model refactors (MSHRs, prefetching, channel
+//! counts) proceed freely: caches are a timing concern, never a
+//! correctness one.
+
+use simdsoftcore::core::Core;
+use simdsoftcore::machine::{dram_needed, Machine};
+use simdsoftcore::workloads::{lookup, registry, run_on, Scenario, Variant, WorkloadReport};
+
+/// Run `name`/`variant` at its smoke size on a machine derived from
+/// `configure(Machine::paper_default())`, returning the report and the
+/// finished (flushed) core for memory-image comparison.
+fn run_model(
+    name: &str,
+    variant: Variant,
+    configure: impl FnOnce(Machine) -> Machine,
+) -> (WorkloadReport, Core) {
+    let mut w = lookup(name).expect("registered workload");
+    let sc = Scenario::new(variant, w.smoke_size());
+    let (buffers, bytes_each) = w.buffers(&sc);
+    // Mirror Machine::run's DRAM sizing so cached and flat runs get
+    // byte-identical address spaces.
+    let dram = dram_needed(buffers, bytes_each).max(64 * 1024 * 1024);
+    let machine = configure(Machine::paper_default().dram_bytes(dram));
+    let mut core = machine.build();
+    let report = run_on(&mut *w, &mut core, &sc)
+        .unwrap_or_else(|e| panic!("{name} {variant} failed to run: {e}"));
+    (report, core)
+}
+
+fn assert_matches_oracle(name: &str, variant: Variant, configure: fn(Machine) -> Machine) {
+    let (r_cached, cached) = run_model(name, variant, configure);
+    let (r_flat, flat) = run_model(name, variant, |m| m.magic_memory(true));
+
+    assert_eq!(r_cached.verified, Some(true), "{name} {variant}: cached run failed verify");
+    assert_eq!(r_flat.verified, Some(true), "{name} {variant}: flat run failed verify");
+    assert_eq!(
+        r_cached.throughput.instret, r_flat.throughput.instret,
+        "{name} {variant}: instruction count depends on the memory model"
+    );
+
+    // run_on already flushed the cached hierarchy; the DRAM images must
+    // now be bit-identical.
+    let n = cached.mem.dram_size();
+    assert_eq!(n, flat.mem.dram_size(), "{name} {variant}: DRAM sizes differ");
+    assert!(
+        cached.mem.dram_slice(0, n) == flat.mem.dram_slice(0, n),
+        "{name} {variant}: final memory images differ between hierarchy and oracle"
+    );
+}
+
+/// Every (workload, variant) in the registry against the oracle, on the
+/// paper-default (blocking) hierarchy.
+#[test]
+fn every_workload_matches_the_magic_memory_oracle() {
+    for entry in registry() {
+        let probe = entry.make();
+        for &variant in probe.variants() {
+            assert_matches_oracle(entry.name, variant, |m| m);
+        }
+    }
+}
+
+/// The non-blocking configuration (MSHRs + prefetcher + two DRAM
+/// channels) must be architecturally indistinguishable too — the whole
+/// point of the differential suite.
+#[test]
+fn nonblocking_hierarchy_matches_the_oracle() {
+    for name in ["memcpy", "stream-copy", "stream-triad", "sort", "prefix", "filter"] {
+        let probe = lookup(name).expect("registered");
+        for &variant in probe.variants() {
+            assert_matches_oracle(name, variant, |m| {
+                m.mshrs(8).prefetch_depth(4).dram_channels(2)
+            });
+        }
+    }
+}
+
+/// Cycle counts are the one thing that MAY differ — and for a streaming
+/// workload the hierarchy must actually be slower than magic memory,
+/// otherwise the timing model is vacuous.
+#[test]
+fn hierarchy_pays_real_cycles_over_the_oracle() {
+    let (r_cached, _) = run_model("memcpy", Variant::Vector, |m| m);
+    let (r_flat, _) = run_model("memcpy", Variant::Vector, |m| m.magic_memory(true));
+    assert!(
+        r_cached.throughput.cycles > r_flat.throughput.cycles,
+        "cached {} cycles should exceed magic-memory {} cycles",
+        r_cached.throughput.cycles,
+        r_flat.throughput.cycles
+    );
+}
