@@ -1,0 +1,106 @@
+//! Bench: reference-ISS vs timed-core instruction throughput (host
+//! side). The acceptance bar for the differential subsystem is that the
+//! architectural-only ISS executes the full workload registry at >= 10x
+//! the simulated-instructions-per-host-second of the timed core in
+//! `--release` — that margin is what makes lockstep fuzzing and the
+//! ISS functional backend cheap enough to run everywhere.
+//!
+//! `cargo bench --bench iss_throughput`
+
+use simdsoftcore::machine::{Backend, Machine};
+use simdsoftcore::util::stats::fmt_count;
+use simdsoftcore::workloads::{registry, Scenario};
+use std::time::Instant;
+
+struct Row {
+    name: String,
+    variant: &'static str,
+    instrs: u64,
+    timed_secs: f64,
+    iss_secs: f64,
+}
+
+/// Best-of-3 per backend (min is the least-biased estimator on a noisy
+/// shared host).
+fn measure(machine: &Machine, name: &'static str, sc: &Scenario) -> (u64, f64) {
+    let mut best = f64::INFINITY;
+    let mut instrs = 0;
+    for _ in 0..3 {
+        let mut w = simdsoftcore::workloads::lookup(name).expect("registered");
+        let t0 = Instant::now();
+        let r = machine.run(&mut *w, sc).expect("workload runs");
+        best = best.min(t0.elapsed().as_secs_f64());
+        assert_eq!(r.verified, Some(true), "{name} must verify on every backend");
+        instrs = r.throughput.instret;
+    }
+    (instrs, best)
+}
+
+fn main() {
+    let timed = Machine::paper_default();
+    let iss = Machine::paper_default().backend(Backend::RefIss);
+
+    let mut rows = Vec::new();
+    for entry in registry() {
+        let probe = entry.make();
+        for &variant in probe.variants() {
+            // Default sizes are seconds-scale on the timed core; run
+            // the registry at a quarter of that (still far beyond cache
+            // capacities) so the full matrix stays benchable.
+            let size = (probe.default_size() / 4).max(probe.smoke_size());
+            let sc = Scenario::new(variant, size);
+            let (instrs, timed_secs) = measure(&timed, entry.name, &sc);
+            let (iss_instrs, iss_secs) = measure(&iss, entry.name, &sc);
+            assert_eq!(instrs, iss_instrs, "{}: backends disagree on instret", entry.name);
+            rows.push(Row {
+                name: entry.name.to_string(),
+                variant: variant.name(),
+                instrs,
+                timed_secs,
+                iss_secs,
+            });
+        }
+    }
+
+    println!("== reference ISS vs timed core throughput (full registry) ==");
+    println!(
+        "{:<24} {:>8} {:>14} {:>12} {:>12} {:>8}",
+        "workload", "variant", "sim instrs", "core Mi/s", "iss Mi/s", "ratio"
+    );
+    let (mut total_i, mut total_timed, mut total_iss) = (0u64, 0f64, 0f64);
+    for r in &rows {
+        total_i += r.instrs;
+        total_timed += r.timed_secs;
+        total_iss += r.iss_secs;
+        let core_rate = r.instrs as f64 / r.timed_secs / 1e6;
+        let iss_rate = r.instrs as f64 / r.iss_secs / 1e6;
+        println!(
+            "{:<24} {:>8} {:>14} {:>12.1} {:>12.1} {:>7.1}x",
+            r.name,
+            r.variant,
+            fmt_count(r.instrs),
+            core_rate,
+            iss_rate,
+            iss_rate / core_rate
+        );
+    }
+    let core_rate = total_i as f64 / total_timed / 1e6;
+    let iss_rate = total_i as f64 / total_iss / 1e6;
+    let ratio = iss_rate / core_rate;
+    println!(
+        "{:<24} {:>8} {:>14} {:>12.1} {:>12.1} {:>7.1}x",
+        "TOTAL",
+        "-",
+        fmt_count(total_i),
+        core_rate,
+        iss_rate,
+        ratio
+    );
+    println!();
+    if ratio >= 10.0 {
+        println!("PASS: ISS runs the registry {ratio:.1}x faster than the timed core (bar: 10x)");
+    } else {
+        println!("FAIL: ISS/core throughput ratio {ratio:.1}x is below the 10x acceptance bar");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,106 @@
+//! `ArchState` — the architectural-state surface shared by every
+//! execution backend.
+//!
+//! The differential-verification subsystem (DESIGN.md §9) needs to ask
+//! "what are your registers / vector registers / memory bytes" of two
+//! very different machines: the cycle-level [`crate::core::Core`] and
+//! the timing-free reference ISS ([`crate::ref_iss::RefIss`]). Workload
+//! verification ([`crate::workloads::Workload::verify`]) and the
+//! lockstep comparator ([`crate::cosim`]) are written against this
+//! trait, so a workload verifies identically on either backend and a
+//! new backend only has to expose its architectural state to join every
+//! existing test surface.
+//!
+//! The contract is *architectural only*: registers, vector registers,
+//! pc, instret and the memory image. Cycle counts, stall counters and
+//! cache statistics are deliberately absent — they are allowed to
+//! differ between backends (see the ISS architectural contract in
+//! DESIGN.md §9).
+
+use crate::isa::{Reg, VReg};
+use crate::simd::VecVal;
+
+/// Read-only view of a machine's architectural state.
+///
+/// For [`crate::core::Core`] the memory accessors reflect DRAM, so
+/// callers must flush the cache hierarchy first (`core.mem.flush_all()`)
+/// — the workload runners and the lockstep driver do this before
+/// comparing. The reference ISS has no caches; its view is always
+/// current.
+pub trait ArchState {
+    /// Base register value (`x0` reads as 0).
+    fn reg(&self, r: Reg) -> u32;
+
+    /// Vector register value (`v0` reads as the zero vector).
+    fn vreg(&self, v: VReg) -> VecVal;
+
+    /// Current program counter.
+    fn pc(&self) -> u32;
+
+    /// Retired-instruction count.
+    fn instret(&self) -> u64;
+
+    /// Whether the machine has executed its halting `ecall`.
+    fn halted(&self) -> bool;
+
+    /// Size of the flat memory image in bytes.
+    fn mem_size(&self) -> usize;
+
+    /// Borrow `len` bytes of the memory image at `addr`.
+    fn mem_slice(&self, addr: u32, len: usize) -> &[u8];
+}
+
+impl ArchState for crate::core::Core {
+    fn reg(&self, r: Reg) -> u32 {
+        Self::reg(self, r)
+    }
+
+    fn vreg(&self, v: VReg) -> VecVal {
+        Self::vreg(self, v)
+    }
+
+    fn pc(&self) -> u32 {
+        Self::pc(self)
+    }
+
+    fn instret(&self) -> u64 {
+        Self::instret(self)
+    }
+
+    fn halted(&self) -> bool {
+        Self::halted(self)
+    }
+
+    fn mem_size(&self) -> usize {
+        self.mem.dram_size()
+    }
+
+    fn mem_slice(&self, addr: u32, len: usize) -> &[u8] {
+        self.mem.dram_slice(addr, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Core;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn core_exposes_arch_state() {
+        let mut core = Core::paper_default();
+        let mut a = crate::asm::Asm::new();
+        a.li(A0, 42);
+        a.halt();
+        let p = a.assemble().unwrap();
+        core.load(&p);
+        core.run(100).unwrap();
+        core.mem.flush_all();
+        let arch: &dyn ArchState = &core;
+        assert_eq!(arch.reg(A0), 42);
+        assert_eq!(arch.reg(ZERO), 0);
+        assert!(arch.halted());
+        assert!(arch.instret() >= 2);
+        assert_eq!(arch.mem_size(), core.mem.dram_size());
+    }
+}

@@ -4,11 +4,12 @@
 //! reference values carried in notes so reports are self-checking.
 //!
 //! Workload-backed figures are declarative: a (workload, grid) pair
-//! executed through [`Machine::run`] via [`parallel_map`] — no driver
-//! constructs a `Core` or lays out buffers by hand.
+//! executed through [`Machine::run`] on the bounded sweep pool
+//! ([`parallel_map_bounded`] with the global `--jobs` width) — no
+//! driver constructs a `Core` or lays out buffers by hand.
 
 use super::report::Table;
-use super::sweep::{parallel_map, parallel_map_bounded, MachinePoint};
+use super::sweep::{jobs, parallel_map_bounded, MachinePoint};
 use crate::baseline::arm_a53;
 use crate::baseline::PicoConfig;
 use crate::core::{Core, CoreConfig, Trace};
@@ -95,7 +96,7 @@ fn memcpy_point(vlen: usize, llc_block_bits: usize, bytes: usize) -> WorkloadRep
 pub fn fig3_left(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
     let blocks = vec![2048usize, 4096, 8192, 16384];
-    let results = parallel_map(blocks, |block_bits| {
+    let results = parallel_map_bounded(blocks, jobs(), |block_bits| {
         (block_bits, memcpy_point(256, block_bits, bytes))
     });
 
@@ -122,7 +123,7 @@ pub fn fig3_left(scale: Scale) -> Table {
 pub fn fig3_right(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
     let vlens = vec![128usize, 256, 512, 1024];
-    let results = parallel_map(vlens, |vlen| {
+    let results = parallel_map_bounded(vlens, jobs(), |vlen| {
         let fmax = CoreConfig::for_vlen(vlen).fmax_mhz;
         (vlen, fmax, memcpy_point(vlen, 16384, bytes))
     });
@@ -219,7 +220,7 @@ pub fn fig4(scale: Scale) -> Table {
         "Fig. 4: adapted STREAM (no SIMD), MB/s",
         &["array KiB", "Copy", "Scale", "Add", "Triad", "Pico Copy", "Pico Scale", "Pico Add", "Pico Triad"],
     );
-    let rows = parallel_map(sizes, |n| {
+    let rows = parallel_map_bounded(sizes, jobs(), |n| {
         // Softcore rows (DRAM auto-sizes to the 3-array footprint).
         let machine = Machine::paper_default();
         let mut soft = Vec::new();
@@ -352,7 +353,7 @@ pub fn fig6() -> String {
 /// §4.3.1: sorting speedups (vs softcore qsort and vs ARM A53 qsort).
 pub fn sec43_sort(scale: Scale) -> Table {
     let n = scale.sort_n();
-    let results = parallel_map(vec![Variant::Scalar, Variant::Vector], |variant| {
+    let results = parallel_map_bounded(vec![Variant::Scalar, Variant::Vector], jobs(), |variant| {
         Machine::paper_default()
             .run(&mut Sort::new(), &Scenario::new(variant, n))
             .expect("sort runs")
@@ -395,7 +396,7 @@ pub fn sec43_sort(scale: Scale) -> Table {
 /// §4.3.2: prefix-sum speedups.
 pub fn sec43_prefix(scale: Scale) -> Table {
     let n = scale.prefix_n();
-    let results = parallel_map(vec![Variant::Scalar, Variant::Vector], |variant| {
+    let results = parallel_map_bounded(vec![Variant::Scalar, Variant::Vector], jobs(), |variant| {
         Machine::paper_default()
             .run(&mut crate::workloads::prefix::Prefix::new(), &Scenario::new(variant, n))
             .expect("prefix runs")
@@ -495,8 +496,7 @@ fn mem_sweep_sized(memcpy_bytes: usize, elems: usize) -> Table {
             }
         }
     }
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let results = parallel_map_bounded(points, threads, |p| {
+    let results = parallel_map_bounded(points, jobs(), |p| {
         let mut w = crate::workloads::lookup(p.workload).expect("registered workload");
         let r = p.mp.machine().run(&mut *w, &Scenario::new(Variant::Vector, p.size));
         (p, r.expect("mem-sweep point runs"))

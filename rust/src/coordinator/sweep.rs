@@ -96,27 +96,33 @@ impl MachinePoint {
     }
 }
 
-/// Map `f` over `items` in parallel, preserving order. `f` runs on a
-/// fresh thread per item (sweeps have ≤ a dozen points; no pool needed).
-pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
-where
-    T: Send,
-    R: Send,
-    F: Fn(T) -> R + Sync,
-{
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = items
-            .into_iter()
-            .map(|item| scope.spawn(|| f(item)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("sweep thread panicked")).collect()
-    })
+/// Process-wide worker-pool width for every sweep surface. `0` (the
+/// default) means "use the host's available parallelism"; the CLI's
+/// global `--jobs N` flag overrides it via [`set_jobs`].
+static JOBS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Override the default sweep worker count (the CLI's `--jobs` flag).
+/// `0` restores the available-parallelism default.
+pub fn set_jobs(n: usize) {
+    JOBS.store(n, std::sync::atomic::Ordering::Relaxed);
 }
 
-/// Like [`parallel_map`], but runs at most `max_threads` workers pulling
-/// items from a shared queue — no per-item thread and no chunk barriers,
-/// so heterogeneous grids (the `run-workload` sweeps) keep every worker
+/// The worker count every sweep call-site passes to
+/// [`parallel_map_bounded`]: the `--jobs` override if set, otherwise
+/// the host's available parallelism.
+pub fn jobs() -> usize {
+    match JOBS.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n,
+    }
+}
+
+/// Run `f` over `items` on at most `max_threads` workers pulling items
+/// from a shared queue — no per-item thread and no chunk barriers, so
+/// heterogeneous grids (the `run-workload` sweeps) keep every worker
 /// busy until the queue drains. Preserves input order in the output.
+/// Every sweep call-site in the repository routes through this function
+/// (with [`jobs`] as the width), so `--jobs 1` serialises everything.
 pub fn parallel_map_bounded<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -153,39 +159,43 @@ where
         .collect()
 }
 
-/// Sequential fallback used when determinism of log interleaving matters.
-pub fn serial_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
-where
-    F: Fn(T) -> R,
-{
-    items.into_iter().map(f).collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn preserves_order() {
-        let out = parallel_map((0..16).collect(), |i: i32| i * i);
+        let out = parallel_map_bounded((0..16).collect(), jobs(), |i: i32| i * i);
         assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
     }
 
     #[test]
-    fn runs_simulations_in_threads() {
+    fn runs_simulations_in_bounded_pool_preserving_order() {
         use crate::core::Core;
-        let out = parallel_map(vec![128usize, 256], |vlen| {
+        // Two workers over four heterogeneous simulation points: results
+        // must come back in input order regardless of finish order.
+        let vlens = vec![128usize, 256, 512, 1024];
+        let out = parallel_map_bounded(vlens.clone(), 2, |vlen| {
             let mut core = Core::for_vlen(vlen);
             let r = crate::workloads::memcpy::run(&mut core, 16 * 1024, true).unwrap();
             (vlen, r.verified)
         });
+        assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vlens);
         assert!(out.iter().all(|(_, ok)| *ok));
     }
 
     #[test]
-    #[should_panic(expected = "sweep thread panicked")]
-    fn propagates_panics() {
-        parallel_map(vec![1], |_: i32| -> i32 { panic!("boom") });
+    fn single_worker_is_fully_serial_and_ordered() {
+        let out = parallel_map_bounded((0..32).collect(), 1, |i: i32| i + 100);
+        assert_eq!(out, (0..32).map(|i| i + 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_override_roundtrip() {
+        set_jobs(3);
+        assert_eq!(jobs(), 3);
+        set_jobs(0);
+        assert!(jobs() >= 1, "default derives from available parallelism");
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Lockstep co-simulation: step the timed [`Core`] and the reference
+//! [`RefIss`] instruction by instruction and report the **first**
+//! architectural divergence.
+//!
+//! Both machines are loaded with the same program and input image by the
+//! caller; [`run_lockstep`] then retires one instruction on each side
+//! per iteration and compares pc, instret, all 32 base registers and all
+//! 8 vector registers. When the run completes (both sides halted, or
+//! both sides faulted identically) the final memory images are compared
+//! byte for byte. The only sanctioned difference is *time*: after a
+//! cycle/time CSR read the timed core's value is injected into the ISS
+//! (`RefIss::force_reg`) so downstream dataflow still compares exactly —
+//! see the architectural contract in DESIGN.md §9.
+//!
+//! On divergence the driver produces a [`Divergence`] report: where it
+//! happened (pc, instret), every mismatched register with both values,
+//! the first mismatched memory byte if any, and a disassembly context
+//! window of the instructions leading up to the divergence — everything
+//! needed to triage a fuzz failure from the CI artifact alone.
+
+use crate::arch::ArchState;
+use crate::core::{Core, SimError};
+use crate::isa::instr::csr;
+use crate::isa::{Instr, Reg, VReg};
+use crate::ref_iss::RefIss;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// How far back the disassembly context window reaches.
+const CONTEXT_WINDOW: usize = 12;
+
+/// How a divergence-free lockstep run ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LockstepOutcome {
+    /// Both sides executed the halting `ecall`.
+    Halted,
+    /// Both sides faulted with the same error at the same pc (a program
+    /// bug, not a simulator divergence).
+    Faulted(String),
+    /// Neither side halted within the instruction budget.
+    Watchdog(u64),
+}
+
+/// A completed, divergence-free lockstep run.
+#[derive(Debug, Clone)]
+pub struct LockstepReport {
+    pub outcome: LockstepOutcome,
+    /// Instructions retired (per side — they are equal by construction).
+    pub instret: u64,
+}
+
+/// The first architectural divergence between the two machines.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    /// Retired-instruction index at which the state first differed.
+    pub instret: u64,
+    pub core_pc: u32,
+    pub iss_pc: u32,
+    /// One line per mismatched piece of state
+    /// (`"a0: core=0x… iss=0x…"`).
+    pub deltas: Vec<String>,
+    /// `pc: disassembly` lines for the instructions leading up to (and
+    /// including) the diverging one.
+    pub context: Vec<String>,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "architectural divergence at instret {} (core pc {:#010x}, iss pc {:#010x})",
+            self.instret, self.core_pc, self.iss_pc
+        )?;
+        for d in &self.deltas {
+            writeln!(f, "  {d}")?;
+        }
+        writeln!(f, "  context (most recent last):")?;
+        for c in &self.context {
+            writeln!(f, "    {c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Divergence {}
+
+fn error_key(e: &SimError) -> String {
+    // Compare faults by kind + location; the embedded sources carry the
+    // same data on both sides when the fault is genuinely identical.
+    match e {
+        SimError::Illegal { pc, source } => format!("illegal@{pc:#010x}:{source}"),
+        SimError::MemFault { pc, addr, len, .. } => {
+            format!("memfault@{pc:#010x}:{addr:#010x}+{len}")
+        }
+        SimError::Unit { pc, source } => format!("unit@{pc:#010x}:{source}"),
+        SimError::Watchdog(n) => format!("watchdog:{n}"),
+        SimError::Break(pc) => format!("ebreak@{pc:#010x}"),
+    }
+}
+
+/// Compare every piece of per-step architectural state; `deltas` is left
+/// empty when the machines agree.
+fn compare_state(core: &Core, iss: &RefIss, deltas: &mut Vec<String>) {
+    if ArchState::pc(core) != ArchState::pc(iss) {
+        deltas.push(format!(
+            "pc: core={:#010x} iss={:#010x}",
+            ArchState::pc(core),
+            ArchState::pc(iss)
+        ));
+    }
+    if ArchState::instret(core) != ArchState::instret(iss) {
+        deltas.push(format!(
+            "instret: core={} iss={}",
+            ArchState::instret(core),
+            ArchState::instret(iss)
+        ));
+    }
+    for n in 1..32u8 {
+        let r = Reg(n);
+        let (c, i) = (ArchState::reg(core, r), ArchState::reg(iss, r));
+        if c != i {
+            deltas.push(format!("{r}: core={c:#010x} iss={i:#010x}"));
+        }
+    }
+    for n in 1..8u8 {
+        let v = VReg(n);
+        let (c, i) = (ArchState::vreg(core, v), ArchState::vreg(iss, v));
+        if c != i {
+            deltas.push(format!("{v}: core={c} iss={i}"));
+        }
+    }
+}
+
+/// Compare the full memory images (the core side must be flushed first).
+fn compare_memory(core: &Core, iss: &RefIss, deltas: &mut Vec<String>) {
+    let n = ArchState::mem_size(core).min(ArchState::mem_size(iss));
+    if ArchState::mem_size(core) != ArchState::mem_size(iss) {
+        deltas.push(format!(
+            "memory size: core={} iss={}",
+            ArchState::mem_size(core),
+            ArchState::mem_size(iss)
+        ));
+    }
+    let (a, b) = (ArchState::mem_slice(core, 0, n), ArchState::mem_slice(iss, 0, n));
+    if a == b {
+        return; // the common case: one memcmp, no byte scan
+    }
+    if let Some(at) = (0..n).find(|&i| a[i] != b[i]) {
+        deltas.push(format!(
+            "memory[{:#010x}]: core={:#04x} iss={:#04x} (first of {} differing bytes)",
+            at,
+            a[at],
+            b[at],
+            (at..n).filter(|&i| a[i] != b[i]).count()
+        ));
+    }
+}
+
+fn divergence(
+    core: &Core,
+    iss: &RefIss,
+    deltas: Vec<String>,
+    window: &VecDeque<(u32, Instr)>,
+) -> Box<Divergence> {
+    Box::new(Divergence {
+        instret: ArchState::instret(iss),
+        core_pc: ArchState::pc(core),
+        iss_pc: ArchState::pc(iss),
+        deltas,
+        context: window.iter().map(|(pc, i)| format!("{pc:#010x}: {i}")).collect(),
+    })
+}
+
+/// Step both machines in lockstep until they halt, fault identically,
+/// or exhaust `max_instrs`; returns the first divergence otherwise.
+///
+/// Caller contract: both machines are freshly loaded with the same
+/// program and the same input image, and their memory sizes are equal
+/// (use the core's `dram_size()` when constructing the ISS).
+pub fn run_lockstep(
+    core: &mut Core,
+    iss: &mut RefIss,
+    max_instrs: u64,
+) -> Result<LockstepReport, Box<Divergence>> {
+    let mut window: VecDeque<(u32, Instr)> = VecDeque::with_capacity(CONTEXT_WINDOW + 1);
+    let mut deltas = Vec::new();
+    compare_state(core, iss, &mut deltas);
+    if !deltas.is_empty() {
+        return Err(divergence(core, iss, deltas, &window));
+    }
+    let mut retired = 0u64;
+    loop {
+        match (core.halted(), ArchState::halted(iss)) {
+            (true, true) => break,
+            (false, false) => {}
+            (c, _) => {
+                let deltas = vec![format!(
+                    "halt state: core={} iss={}",
+                    if c { "halted" } else { "running" },
+                    if c { "running" } else { "halted" }
+                )];
+                return Err(divergence(core, iss, deltas, &window));
+            }
+        }
+        if retired >= max_instrs {
+            return Ok(LockstepReport {
+                outcome: LockstepOutcome::Watchdog(max_instrs),
+                instret: retired,
+            });
+        }
+        let iss_pc = ArchState::pc(iss);
+        let core_res = core.step();
+        let iss_res = iss.step();
+        match (&core_res, &iss_res) {
+            (Ok(()), Ok(instr)) => {
+                window.push_back((iss_pc, *instr));
+                if window.len() > CONTEXT_WINDOW {
+                    window.pop_front();
+                }
+                // The one architecturally timing-dependent value: after
+                // a cycle/time CSR read, adopt the timed core's value so
+                // downstream dataflow stays comparable.
+                if let Instr::Csrrs { rd, csr: c, .. } = *instr {
+                    if matches!(c, csr::CYCLE | csr::TIME | csr::CYCLEH | csr::TIMEH) {
+                        iss.force_reg(rd, core.reg(rd));
+                    }
+                }
+                retired += 1;
+            }
+            (Err(ce), Err(ie)) => {
+                let (ck, ik) = (error_key(ce), error_key(ie));
+                if ck == ik {
+                    // Both sides faulted identically: architectural
+                    // agreement on a program fault.
+                    core.flush_fetch_credits();
+                    core.mem.flush_all();
+                    let mut deltas = Vec::new();
+                    compare_memory(core, iss, &mut deltas);
+                    if !deltas.is_empty() {
+                        return Err(divergence(core, iss, deltas, &window));
+                    }
+                    return Ok(LockstepReport {
+                        outcome: LockstepOutcome::Faulted(ck),
+                        instret: retired,
+                    });
+                }
+                let deltas = vec![format!("fault: core={ck} iss={ik}")];
+                return Err(divergence(core, iss, deltas, &window));
+            }
+            (Ok(()), Err(ie)) => {
+                let deltas = vec![format!("fault: core=<none> iss={}", error_key(ie))];
+                return Err(divergence(core, iss, deltas, &window));
+            }
+            (Err(ce), Ok(_)) => {
+                let deltas = vec![format!("fault: core={} iss=<none>", error_key(ce))];
+                return Err(divergence(core, iss, deltas, &window));
+            }
+        }
+        let mut deltas = Vec::new();
+        compare_state(core, iss, &mut deltas);
+        if !deltas.is_empty() {
+            return Err(divergence(core, iss, deltas, &window));
+        }
+    }
+    // Both halted: the final memory images must be bit-identical.
+    core.flush_fetch_credits();
+    core.mem.flush_all();
+    let mut deltas = Vec::new();
+    compare_memory(core, iss, &mut deltas);
+    if !deltas.is_empty() {
+        return Err(divergence(core, iss, deltas, &window));
+    }
+    Ok(LockstepReport { outcome: LockstepOutcome::Halted, instret: retired })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+
+    const MEM: usize = 2 * 1024 * 1024;
+
+    fn pair(build: impl FnOnce(&mut Asm)) -> (Core, RefIss) {
+        let mut a = Asm::new();
+        build(&mut a);
+        let p = a.assemble().unwrap();
+        let mut mem = crate::mem::MemConfig::paper_default();
+        mem.dram.size_bytes = MEM;
+        let mut core = Core::new(crate::core::CoreConfig::paper_default(), mem);
+        core.load(&p);
+        let mut iss = RefIss::paper_default(core.mem.dram_size());
+        iss.load(&p);
+        (core, iss)
+    }
+
+    #[test]
+    fn agreeing_run_reports_halted() {
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, 7);
+            let l = a.new_label("l");
+            a.li(A1, 0);
+            a.bind(l);
+            a.add(A1, A1, A0);
+            a.addi(A0, A0, -1);
+            a.bnez(A0, l);
+            a.rdcycle(S0); // timing-dependent read: synced, not a divergence
+            a.slli(S1, S0, 1); // ... and its dataflow must still agree
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 10_000).expect("no divergence");
+        assert_eq!(r.outcome, LockstepOutcome::Halted);
+        assert_eq!(r.instret, core.instret());
+        assert_eq!(iss.reg(S1), core.reg(S0) << 1);
+    }
+
+    #[test]
+    fn vector_run_agrees_including_memory() {
+        let (mut core, mut iss) = pair(|a| {
+            let d = a.words("d", &[9, 8, 7, 6, 5, 4, 3, 2].map(|x: i32| x as u32));
+            a.dalign(32);
+            let out = a.buffer("out", 32, 32);
+            a.la(A0, d);
+            a.la(A1, out);
+            a.lv(V1, A0, ZERO);
+            a.sort8(V2, V1);
+            a.sv(V2, A1, ZERO);
+            a.prefix_reset();
+            a.prefix(V3, V2);
+            a.sv(V3, A0, ZERO);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 10_000).expect("no divergence");
+        assert_eq!(r.outcome, LockstepOutcome::Halted);
+    }
+
+    #[test]
+    fn injected_register_corruption_is_reported() {
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, 5);
+            a.addi(A0, A0, 1);
+            a.halt();
+        });
+        iss.force_reg(S3, 0xDEAD);
+        let d = run_lockstep(&mut core, &mut iss, 100).expect_err("must diverge");
+        assert!(d.deltas.iter().any(|s| s.contains("s3")), "{d}");
+        let text = d.to_string();
+        assert!(text.contains("divergence at instret"), "{text}");
+    }
+
+    #[test]
+    fn injected_memory_corruption_is_reported() {
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, 5);
+            a.halt();
+        });
+        iss.host_write(0x4_0000, &[0xAB]);
+        let d = run_lockstep(&mut core, &mut iss, 100).expect_err("must diverge");
+        assert!(d.deltas.iter().any(|s| s.contains("memory[0x00040000]")), "{d}");
+    }
+
+    #[test]
+    fn identical_faults_agree() {
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, 0x7fff_f000u32 as i64);
+            a.lw(A1, 0, A0);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 100).expect("identical faults agree");
+        assert!(matches!(r.outcome, LockstepOutcome::Faulted(_)), "{:?}", r.outcome);
+    }
+
+    #[test]
+    fn watchdog_is_not_a_divergence() {
+        let (mut core, mut iss) = pair(|a| {
+            let l = a.here("forever");
+            a.j(l);
+        });
+        let r = run_lockstep(&mut core, &mut iss, 50).expect("lockstep watchdog");
+        assert_eq!(r.outcome, LockstepOutcome::Watchdog(50));
+    }
+}

@@ -1,0 +1,631 @@
+//! riscv-dv-style deterministic random program generation + the
+//! differential fuzz campaign driver.
+//!
+//! [`generate`] builds a random — but **reproducible** (seeded
+//! [`Xoshiro256`]) and **guaranteed-terminating** — program over
+//! [`crate::asm::Asm`], mixing the op classes of the ISA under
+//! configurable [`OpWeights`]: scalar ALU, control flow, mul/div,
+//! loads/stores, and the paper's I′/S′ custom SIMD instructions
+//! (including the stateful `c3.prefix`). Termination is structural, not
+//! statistical:
+//!
+//! - conditional branches and `jal` only ever target *forward* labels a
+//!   few ops ahead;
+//! - `jalr` appears as an `auipc`+`jalr` pair whose target is the next
+//!   instruction (exact forward target, exercising the indirect-jump
+//!   datapath);
+//! - backward branches exist only inside a self-contained counted-loop
+//!   construct with a dedicated counter register that nothing else
+//!   writes, and forward-branch targets can never land inside it;
+//! - every program ends in the halting `ecall`.
+//!
+//! Memory traffic stays inside a 4 KiB random-initialised data window
+//! whose base lives in a reserved register, so no generated program can
+//! fault — any fault, watchdog or architectural divergence observed by
+//! [`run_case`] is therefore a real bug (in the timed core, the ISS, or
+//! this generator) and is reported as a [`FuzzFailure`] carrying the
+//! full assembly listing and the lockstep divergence report.
+//!
+//! [`run_campaign`] crosses seeds with machine-configuration points
+//! ([`MachinePoint`] — the same axis registry every sweep surface uses,
+//! so the `fuzz` CLI can sweep VLEN/MSHRs/prefetch/channels) and runs
+//! the cases on a bounded worker pool.
+
+use crate::asm::{Asm, Label, Program};
+use crate::coordinator::sweep::{self, MachinePoint};
+use crate::cosim::{run_lockstep, LockstepOutcome};
+use crate::isa::reg::*;
+use crate::isa::VReg;
+use crate::ref_iss::RefIss;
+use crate::util::Xoshiro256;
+
+/// Bytes of the random-initialised data window all loads/stores hit.
+pub const DATA_BYTES: usize = 4096;
+
+/// Simulated DRAM per fuzz case (text + data + untouched stack top).
+pub const FUZZ_DRAM_BYTES: usize = 2 * 1024 * 1024;
+
+/// Registers the generator reserves (never in the operand pools):
+/// `s11` = data-window base, `s10` = loop counter, `t6` = scratch for
+/// vector-memory offsets and the `auipc`+`jalr` pair; `sp`/`gp`/`tp`/
+/// `ra` stay untouched entirely.
+const DEST_POOL: [crate::isa::Reg; 24] = [
+    T0, T1, T2, S0, S1, A0, A1, A2, A3, A4, A5, A6, A7, S2, S3, S4, S5, S6, S7, S8, S9, T3, T4,
+    T5,
+];
+
+/// Relative frequencies of the generator's op classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpWeights {
+    pub alu: u32,
+    pub branch: u32,
+    pub muldiv: u32,
+    pub mem: u32,
+    pub vec: u32,
+    pub vecmem: u32,
+}
+
+impl OpWeights {
+    /// Everything in proportion (the default preset).
+    pub fn balanced() -> Self {
+        Self { alu: 6, branch: 2, muldiv: 1, mem: 3, vec: 2, vecmem: 2 }
+    }
+
+    /// RV32IM only — no custom SIMD instructions at all.
+    pub fn scalar() -> Self {
+        Self { alu: 6, branch: 2, muldiv: 2, mem: 4, vec: 0, vecmem: 0 }
+    }
+
+    /// Custom-unit heavy (I′/S′ mixes dominate).
+    pub fn vector() -> Self {
+        Self { alu: 3, branch: 1, muldiv: 1, mem: 1, vec: 5, vecmem: 4 }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.alu + self.branch + self.muldiv + self.mem + self.vec + self.vecmem
+    }
+
+    /// Parse the CLI spelling `alu=4,branch=1,muldiv=1,mem=2,vec=2,vecmem=2`
+    /// (unnamed classes keep the balanced default's value).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut w = Self::balanced();
+        for part in spec.split(',') {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--weights expects class=N pairs, got '{part}'"))?;
+            let val: u32 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad weight value '{val}' for class '{key}'"))?;
+            match key.trim() {
+                "alu" => w.alu = val,
+                "branch" => w.branch = val,
+                "muldiv" => w.muldiv = val,
+                "mem" => w.mem = val,
+                "vec" => w.vec = val,
+                "vecmem" => w.vecmem = val,
+                other => {
+                    return Err(format!(
+                        "unknown op class '{other}' (classes: alu, branch, muldiv, mem, vec, vecmem)"
+                    ))
+                }
+            }
+        }
+        if w.total() == 0 {
+            return Err("at least one op-class weight must be positive".into());
+        }
+        Ok(w)
+    }
+
+    /// The preset rotation used when no explicit `--weights` is given:
+    /// seeds cycle through balanced / scalar-only / vector-heavy mixes
+    /// so one campaign covers all three.
+    pub fn preset_for_seed(seed: u64) -> (&'static str, Self) {
+        match seed % 3 {
+            0 => ("balanced", Self::balanced()),
+            1 => ("scalar", Self::scalar()),
+            _ => ("vector", Self::vector()),
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum OpClass {
+    Alu,
+    Branch,
+    MulDiv,
+    Mem,
+    Vec,
+    VecMem,
+}
+
+fn pick_class(rng: &mut Xoshiro256, w: &OpWeights) -> OpClass {
+    let mut x = rng.below(w.total());
+    for (class, wt) in [
+        (OpClass::Alu, w.alu),
+        (OpClass::Branch, w.branch),
+        (OpClass::MulDiv, w.muldiv),
+        (OpClass::Mem, w.mem),
+        (OpClass::Vec, w.vec),
+        (OpClass::VecMem, w.vecmem),
+    ] {
+        if x < wt {
+            return class;
+        }
+        x -= wt;
+    }
+    unreachable!("weights sum to total")
+}
+
+fn dest(rng: &mut Xoshiro256) -> crate::isa::Reg {
+    DEST_POOL[rng.below(DEST_POOL.len() as u32) as usize]
+}
+
+/// Source pool = dest pool + `zero` + the data base (read-only).
+fn src(rng: &mut Xoshiro256) -> crate::isa::Reg {
+    match rng.below(DEST_POOL.len() as u32 + 2) {
+        n if (n as usize) < DEST_POOL.len() => DEST_POOL[n as usize],
+        n if n as usize == DEST_POOL.len() => ZERO,
+        _ => S11,
+    }
+}
+
+fn vdest(rng: &mut Xoshiro256) -> VReg {
+    VReg(1 + rng.below(7) as u8)
+}
+
+fn vsrc(rng: &mut Xoshiro256) -> VReg {
+    VReg(rng.below(8) as u8)
+}
+
+fn imm12(rng: &mut Xoshiro256) -> i32 {
+    rng.below(4096) as i32 - 2048
+}
+
+fn emit_alu(a: &mut Asm, rng: &mut Xoshiro256) {
+    let (rd, r1, r2) = (dest(rng), src(rng), src(rng));
+    match rng.below(22) {
+        0 => a.addi(rd, r1, imm12(rng)),
+        1 => a.slti(rd, r1, imm12(rng)),
+        2 => a.sltiu(rd, r1, imm12(rng)),
+        3 => a.xori(rd, r1, imm12(rng)),
+        4 => a.ori(rd, r1, imm12(rng)),
+        5 => a.andi(rd, r1, imm12(rng)),
+        6 => a.slli(rd, r1, rng.below(32) as u8),
+        7 => a.srli(rd, r1, rng.below(32) as u8),
+        8 => a.srai(rd, r1, rng.below(32) as u8),
+        9 => a.lui(rd, (rng.next_u32() & 0xffff_f000) as i32),
+        10 => a.auipc(rd, (rng.next_u32() & 0xffff_f000) as i32),
+        11 => a.add(rd, r1, r2),
+        12 => a.sub(rd, r1, r2),
+        13 => a.sll(rd, r1, r2),
+        14 => a.slt(rd, r1, r2),
+        15 => a.sltu(rd, r1, r2),
+        16 => a.xor(rd, r1, r2),
+        17 => a.srl(rd, r1, r2),
+        18 => a.sra(rd, r1, r2),
+        19 => a.or(rd, r1, r2),
+        20 => a.and(rd, r1, r2),
+        _ => {
+            // Counter CSR reads; cycle/time values are timing-dependent
+            // and get synced by the lockstep driver.
+            if rng.below(4) == 0 {
+                a.rdcycle(rd);
+            } else {
+                a.rdinstret(rd);
+            }
+        }
+    }
+}
+
+fn emit_muldiv(a: &mut Asm, rng: &mut Xoshiro256) {
+    let (rd, r1, r2) = (dest(rng), src(rng), src(rng));
+    match rng.below(8) {
+        0 => a.mul(rd, r1, r2),
+        1 => a.mulh(rd, r1, r2),
+        2 => a.mulhsu(rd, r1, r2),
+        3 => a.mulhu(rd, r1, r2),
+        4 => a.div(rd, r1, r2),
+        5 => a.divu(rd, r1, r2),
+        6 => a.rem(rd, r1, r2),
+        _ => a.remu(rd, r1, r2),
+    }
+}
+
+fn emit_mem(a: &mut Asm, rng: &mut Xoshiro256) {
+    // Always based at the data window; offsets leave room for the
+    // widest (4-byte) scalar access. Unaligned accesses are allowed —
+    // the hierarchy must split them identically to the flat reference.
+    let off = rng.below((DATA_BYTES - 4) as u32 + 1) as i32;
+    match rng.below(8) {
+        0 => a.lb(dest(rng), off, S11),
+        1 => a.lh(dest(rng), off, S11),
+        2 => a.lw(dest(rng), off, S11),
+        3 => a.lbu(dest(rng), off, S11),
+        4 => a.lhu(dest(rng), off, S11),
+        5 => a.sb(src(rng), off, S11),
+        6 => a.sh(src(rng), off, S11),
+        _ => a.sw(src(rng), off, S11),
+    }
+}
+
+fn emit_vec(a: &mut Asm, rng: &mut Xoshiro256) {
+    match rng.below(8) {
+        0 => a.sort8(vdest(rng), vsrc(rng)),
+        1 => a.merge(vdest(rng), vdest(rng), vsrc(rng), vsrc(rng)),
+        2 => a.vadd(vdest(rng), vsrc(rng), vsrc(rng)),
+        3 => a.vscale(vdest(rng), vsrc(rng), src(rng)),
+        4 => a.vfilt(dest(rng), vdest(rng), vsrc(rng), src(rng)),
+        5 => a.prefix(vdest(rng), vsrc(rng)),
+        6 => a.prefix_reset(),
+        _ => a.prefix_carry(dest(rng)),
+    }
+}
+
+fn emit_vecmem(a: &mut Asm, rng: &mut Xoshiro256, vlen_bits: usize) {
+    let vb = vlen_bits / 8;
+    // Any offset (aligned or not) that keeps the full vector in-window.
+    let off = rng.below((DATA_BYTES - vb) as u32 + 1) as i64;
+    a.li(T6, off);
+    if rng.below(2) == 0 {
+        a.lv(vdest(rng), S11, T6);
+    } else {
+        a.sv(vsrc(rng), S11, T6);
+    }
+}
+
+fn emit_branch(
+    a: &mut Asm,
+    rng: &mut Xoshiro256,
+    pending: &mut Vec<(Label, usize)>,
+) {
+    match rng.below(8) {
+        0..=3 => {
+            // Forward conditional branch over the next few ops.
+            let target = a.new_label("fwd");
+            let (r1, r2) = (src(rng), src(rng));
+            match rng.below(6) {
+                0 => a.beq(r1, r2, target),
+                1 => a.bne(r1, r2, target),
+                2 => a.blt(r1, r2, target),
+                3 => a.bge(r1, r2, target),
+                4 => a.bltu(r1, r2, target),
+                _ => a.bgeu(r1, r2, target),
+            }
+            pending.push((target, 2 + rng.below(6) as usize));
+        }
+        4 | 5 => {
+            // Forward jal (link register drawn from the pool).
+            let target = a.new_label("jfwd");
+            a.jal(dest(rng), target);
+            pending.push((target, 2 + rng.below(6) as usize));
+        }
+        6 => {
+            // auipc+jalr pair targeting the very next instruction:
+            // exact forward target, exercises the indirect jump.
+            a.auipc(T6, 0);
+            a.jalr(dest(rng), T6, 8);
+        }
+        _ => {
+            // Self-contained counted loop on the reserved counter s10.
+            // Forward-branch targets can never land inside (labels only
+            // bind at op boundaries, and this whole construct is one op).
+            let iters = 1 + rng.below(5) as i64;
+            let body_ops = 1 + rng.below(4);
+            a.li(S10, iters);
+            let head = a.here("loop");
+            for _ in 0..body_ops {
+                let (rd, r1, r2) = (dest(rng), src(rng), src(rng));
+                match rng.below(4) {
+                    0 => a.add(rd, r1, r2),
+                    1 => a.sub(rd, r1, r2),
+                    2 => a.xor(rd, r1, r2),
+                    _ => a.addi(rd, r1, imm12(rng)),
+                }
+            }
+            a.addi(S10, S10, -1);
+            a.bnez(S10, head);
+        }
+    }
+}
+
+/// Generate the deterministic random program for `(seed, ops, weights)`
+/// at a vector width. The 4 KiB data window is part of the program
+/// image (seeded random words), so loading the program fully
+/// initialises both machines identically.
+pub fn generate(seed: u64, ops: usize, w: &OpWeights, vlen_bits: usize) -> Program {
+    assert!(w.total() > 0, "op weights must not all be zero");
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut a = Asm::new();
+    let words = rng.vec_u32(DATA_BYTES / 4);
+    let data = a.words("fuzz_data", &words);
+    a.la(S11, data);
+    let mut pending: Vec<(Label, usize)> = Vec::new();
+    for _ in 0..ops {
+        for p in pending.iter_mut() {
+            p.1 -= 1;
+        }
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].1 == 0 {
+                let (l, _) = pending.remove(i);
+                a.bind(l);
+            } else {
+                i += 1;
+            }
+        }
+        match pick_class(&mut rng, w) {
+            OpClass::Alu => emit_alu(&mut a, &mut rng),
+            OpClass::Branch => emit_branch(&mut a, &mut rng, &mut pending),
+            OpClass::MulDiv => emit_muldiv(&mut a, &mut rng),
+            OpClass::Mem => emit_mem(&mut a, &mut rng),
+            OpClass::Vec => emit_vec(&mut a, &mut rng),
+            OpClass::VecMem => emit_vecmem(&mut a, &mut rng, vlen_bits),
+        }
+    }
+    for (l, _) in pending.drain(..) {
+        a.bind(l);
+    }
+    a.halt();
+    a.assemble().expect("fuzz program assembles")
+}
+
+/// Instruction budget for a case: generous versus the worst-case loop
+/// expansion, so hitting it always means a termination bug.
+pub fn max_instrs_for(ops: usize) -> u64 {
+    ops as u64 * 64 + 4096
+}
+
+/// The stressed memory configuration the acceptance run pairs with the
+/// default machine: non-blocking port (8 MSHRs), prefetch on, 2 DRAM
+/// channels.
+pub fn stressed_point() -> MachinePoint {
+    MachinePoint { mshrs: 8, prefetch: 4, channels: 2, ..Default::default() }
+}
+
+/// Why a fuzz case failed (structural, so campaign stats never depend
+/// on report wording).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The two backends architecturally disagreed — the bug class the
+    /// campaign hunts.
+    Divergence,
+    /// Both sides faulted identically: a generator invariant violation.
+    Fault,
+    /// Neither side halted within the budget: the termination
+    /// guarantee is broken.
+    Watchdog,
+}
+
+/// One failing fuzz case, with everything triage needs.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    pub seed: u64,
+    pub ops: usize,
+    pub weights_name: String,
+    pub point: MachinePoint,
+    pub kind: FailureKind,
+    /// Assembly listing of the generated program.
+    pub listing: String,
+    /// Human-readable divergence / fault / watchdog report.
+    pub report: String,
+}
+
+/// A fuzz campaign: `seeds` cases starting at `base_seed`, each run on
+/// every machine point.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    pub seeds: u64,
+    pub base_seed: u64,
+    pub ops: usize,
+    /// `None` rotates the balanced/scalar/vector presets per seed.
+    pub weights: Option<OpWeights>,
+    pub points: Vec<MachinePoint>,
+    pub jobs: usize,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        Self {
+            seeds: 100,
+            base_seed: 1,
+            ops: 300,
+            weights: None,
+            points: vec![MachinePoint::default(), stressed_point()],
+            jobs: 0, // 0 = available parallelism
+        }
+    }
+}
+
+/// Campaign outcome.
+#[derive(Debug)]
+pub struct FuzzSummary {
+    /// (seed, point) cases executed.
+    pub cases: u64,
+    /// Instructions retired in lockstep across all cases.
+    pub instrs: u64,
+    /// Cases that ended in an identical fault on both sides (a
+    /// generator invariant violation — reported as failures too, but
+    /// counted separately for the report).
+    pub faulted: u64,
+    pub failures: Vec<FuzzFailure>,
+}
+
+impl FuzzSummary {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Run one (seed, point) case in lockstep; `weights` as selected by the
+/// campaign. Returns retired instructions on agreement.
+pub fn run_case(
+    seed: u64,
+    ops: usize,
+    weights_name: &str,
+    w: &OpWeights,
+    mp: &MachinePoint,
+) -> Result<u64, Box<FuzzFailure>> {
+    let prog = generate(seed, ops, w, mp.vlen);
+    let fail = |listing: &Program, kind: FailureKind, report: String| {
+        Box::new(FuzzFailure {
+            seed,
+            ops,
+            weights_name: weights_name.to_string(),
+            point: *mp,
+            kind,
+            listing: listing.disassemble(),
+            report,
+        })
+    };
+    let mut core = mp.machine().dram_bytes(FUZZ_DRAM_BYTES).build();
+    let mut iss = RefIss::new(mp.vlen, core.mem.dram_size());
+    core.load(&prog);
+    iss.load(&prog);
+    match run_lockstep(&mut core, &mut iss, max_instrs_for(ops)) {
+        Ok(r) => match r.outcome {
+            LockstepOutcome::Halted => Ok(r.instret),
+            LockstepOutcome::Faulted(what) => Err(fail(
+                &prog,
+                FailureKind::Fault,
+                format!(
+                    "program faulted identically on both sides ({what}) — the generator \
+                     must never produce faulting programs"
+                ),
+            )),
+            LockstepOutcome::Watchdog(n) => Err(fail(
+                &prog,
+                FailureKind::Watchdog,
+                format!(
+                    "neither side halted within {n} instructions — the generator's \
+                     termination guarantee is broken"
+                ),
+            )),
+        },
+        Err(divergence) => Err(fail(&prog, FailureKind::Divergence, divergence.to_string())),
+    }
+}
+
+/// Run the full campaign on a bounded worker pool.
+pub fn run_campaign(cfg: &FuzzConfig) -> FuzzSummary {
+    let mut cases = Vec::new();
+    for s in 0..cfg.seeds {
+        let seed = cfg.base_seed + s;
+        let (name, w) = match &cfg.weights {
+            Some(w) => ("custom", *w),
+            None => OpWeights::preset_for_seed(seed),
+        };
+        for &mp in &cfg.points {
+            cases.push((seed, name, w, mp));
+        }
+    }
+    let jobs = if cfg.jobs == 0 { sweep::jobs() } else { cfg.jobs };
+    let n_cases = cases.len() as u64;
+    let results = sweep::parallel_map_bounded(cases, jobs, |(seed, name, w, mp)| {
+        run_case(seed, cfg.ops, name, &w, &mp)
+    });
+    let mut summary = FuzzSummary { cases: n_cases, instrs: 0, faulted: 0, failures: Vec::new() };
+    for r in results {
+        match r {
+            Ok(instrs) => summary.instrs += instrs,
+            Err(f) => {
+                if f.kind == FailureKind::Fault {
+                    summary.faulted += 1;
+                }
+                summary.failures.push(*f);
+            }
+        }
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode, Instr};
+
+    #[test]
+    fn generation_is_deterministic() {
+        let w = OpWeights::balanced();
+        let a = generate(42, 200, &w, 256);
+        let b = generate(42, 200, &w, 256);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.data, b.data);
+        let c = generate(43, 200, &w, 256);
+        assert_ne!(a.text, c.text, "different seeds give different programs");
+    }
+
+    #[test]
+    fn every_generated_word_decodes() {
+        for seed in 0..12 {
+            let (_, w) = OpWeights::preset_for_seed(seed);
+            let p = generate(seed, 150, &w, 256);
+            for (i, &word) in p.text.iter().enumerate() {
+                decode(word).unwrap_or_else(|e| {
+                    panic!("seed {seed} word {i} ({word:#010x}) does not decode: {e}")
+                });
+            }
+            assert!(matches!(decode(*p.text.last().unwrap()).unwrap(), Instr::Ecall));
+        }
+    }
+
+    #[test]
+    fn scalar_preset_emits_no_custom_instructions() {
+        let p = generate(7, 300, &OpWeights::scalar(), 256);
+        for &word in &p.text {
+            let i = decode(word).unwrap();
+            assert!(
+                !matches!(i, Instr::CustomI { .. } | Instr::CustomS { .. }),
+                "scalar preset produced {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn vector_preset_emits_custom_instructions() {
+        let p = generate(8, 300, &OpWeights::vector(), 256);
+        let customs = p
+            .text
+            .iter()
+            .filter(|&&w| {
+                matches!(decode(w), Ok(Instr::CustomI { .. }) | Ok(Instr::CustomS { .. }))
+            })
+            .count();
+        assert!(customs > 30, "vector preset emitted only {customs} custom instructions");
+    }
+
+    #[test]
+    fn weights_parse_roundtrip_and_errors() {
+        let w = OpWeights::parse("alu=9,vec=0,vecmem=0").unwrap();
+        assert_eq!(w.alu, 9);
+        assert_eq!(w.vec, 0);
+        assert_eq!(w.branch, OpWeights::balanced().branch, "unnamed classes keep defaults");
+        assert!(OpWeights::parse("bogus=1").is_err());
+        assert!(OpWeights::parse("alu").is_err());
+        assert!(OpWeights::parse("alu=x").is_err());
+        assert!(
+            OpWeights::parse("alu=0,branch=0,muldiv=0,mem=0,vec=0,vecmem=0").is_err(),
+            "all-zero weights rejected"
+        );
+    }
+
+    #[test]
+    fn smoke_campaign_has_zero_divergences() {
+        let cfg = FuzzConfig { seeds: 9, base_seed: 1000, ops: 200, ..Default::default() };
+        let summary = run_campaign(&cfg);
+        assert_eq!(summary.cases, 18, "9 seeds x (default + stressed)");
+        for f in &summary.failures {
+            eprintln!("seed {} on {:?}:\n{}\n{}", f.seed, f.point, f.report, f.listing);
+        }
+        assert!(summary.ok(), "{} fuzz failures", summary.failures.len());
+        assert!(summary.instrs > 1000, "campaign actually executed instructions");
+    }
+
+    #[test]
+    fn fuzz_terminates_at_wide_vlen() {
+        let mp = MachinePoint { vlen: 1024, ..Default::default() };
+        assert!(mp.validate().is_ok());
+        let r = run_case(5, 150, "balanced", &OpWeights::balanced(), &mp);
+        assert!(r.is_ok(), "{}", r.unwrap_err().report);
+    }
+}

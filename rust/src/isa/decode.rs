@@ -210,10 +210,19 @@ pub fn decode(w: u32) -> Result<Instr, DecodeError> {
                 _ => return Err(DecodeError::BadFunct { word: w, opcode }),
             }
         }
-        0b000_1111 => Fence,
+        0b000_1111 => match funct3(w) {
+            // funct3=0 is FENCE (fm/pred/succ/rs1/rd are hints, legal to
+            // ignore); funct3=1 would be FENCE.I (Zifencei, not
+            // implemented) and 2..=7 are reserved — all must trap, not
+            // silently alias to a plain fence.
+            0b000 => Fence,
+            _ => return Err(DecodeError::BadFunct { word: w, opcode }),
+        },
         0b111_0011 => match (funct3(w), bits(w, 31, 20)) {
-            (0b000, 0) => Ecall,
-            (0b000, 1) => Ebreak,
+            // ECALL/EBREAK require rd = rs1 = 0; other bit patterns in
+            // those fields are reserved system encodings.
+            (0b000, 0) if rd(w) == Reg(0) && rs1(w) == Reg(0) => Ecall,
+            (0b000, 1) if rd(w) == Reg(0) && rs1(w) == Reg(0) => Ebreak,
             (0b010, csr) => Csrrs { rd: rd(w), csr: csr as u16, rs1: rs1(w) },
             _ => return Err(DecodeError::UnsupportedSystem { word: w }),
         },
@@ -254,6 +263,62 @@ mod tests {
         assert!(matches!(decode(0xffff_ffff), Err(DecodeError::UnknownOpcode { .. }) | Err(_)));
         // R-type with funct7 junk
         assert!(matches!(decode(0x7000_0033), Err(DecodeError::BadFunct { .. })));
+    }
+
+    #[test]
+    fn reserved_fence_and_system_patterns_trap() {
+        // Plain fence (funct3=0) decodes, including nonzero pred/succ
+        // hint bits (a real `fence rw, rw` word).
+        assert_eq!(decode(0x0000_000f).unwrap(), Instr::Fence);
+        assert_eq!(decode(0x0330_000f).unwrap(), Instr::Fence);
+        // FENCE.I (funct3=1) and reserved funct3 values must trap, not
+        // alias to fence.
+        assert!(matches!(decode(0x0000_100f), Err(DecodeError::BadFunct { .. })));
+        assert!(matches!(decode(0x0000_700f), Err(DecodeError::BadFunct { .. })));
+        // ECALL/EBREAK with nonzero rd or rs1 are reserved system words
+        // (previously they silently aliased to ecall/ebreak).
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+        assert_eq!(decode(0x0010_0073).unwrap(), Instr::Ebreak);
+        for w in [0x0000_00f3u32, 0x0000_8073, 0x0010_00f3, 0x0018_0073] {
+            assert!(
+                matches!(decode(w), Err(DecodeError::UnsupportedSystem { .. })),
+                "{w:#010x} must trap"
+            );
+        }
+    }
+
+    /// Satellite invariant: `decode` is total — it never panics, for
+    /// every one of 4 billion possible words (sampled densely), and
+    /// every successful decode re-encodes to a word that decodes to the
+    /// same instruction (canonicalisation round-trip).
+    #[test]
+    fn sampled_decode_never_panics_and_reencodes() {
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::seeded(0xDEC0DE);
+        let mut decoded_ok = 0u32;
+        for i in 0..200_000u32 {
+            // Half uniform words, half words with a valid major opcode
+            // (so the funct/reserved-field paths are hit densely).
+            let w = if i % 2 == 0 {
+                rng.next_u32()
+            } else {
+                let opcodes = [
+                    0b011_0111u32, 0b001_0111, 0b110_1111, 0b110_0111, 0b110_0011, 0b000_0011,
+                    0b010_0011, 0b001_0011, 0b011_0011, 0b000_1111, 0b111_0011, 0b000_1011,
+                    0b010_1011, 0b101_1011, 0b111_1011,
+                ];
+                (rng.next_u32() & !0x7f) | opcodes[(i / 2) as usize % opcodes.len()]
+            };
+            if let Ok(instr) = decode(w) {
+                decoded_ok += 1;
+                // Decoded instructions are always encodable, and the
+                // canonical encoding decodes back to the same thing.
+                let back = encode(&instr)
+                    .unwrap_or_else(|e| panic!("decode({w:#010x}) = {instr} unencodable: {e}"));
+                assert_eq!(decode(back).unwrap(), instr, "word {w:#010x} → {instr}");
+            }
+        }
+        assert!(decoded_ok > 50_000, "sampling should hit many valid words ({decoded_ok})");
     }
 
     #[test]

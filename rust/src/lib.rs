@@ -15,14 +15,25 @@
 //!   into a ready core and runs workloads end to end;
 //! - [`workloads::registry`] — the string-keyed catalogue behind the
 //!   `simdsoftcore run-workload <name>` CLI subcommand and the sweeps.
+//!
+//! Correctness is pinned by the differential-verification subsystem
+//! (DESIGN.md §9): [`ref_iss::RefIss`] is an independent,
+//! architectural-only reference ISS, [`cosim::run_lockstep`] steps it
+//! against the timed core instruction by instruction, and [`fuzz`]
+//! generates deterministic random programs (the `fuzz` CLI subcommand)
+//! across scalar and I′/S′ op mixes and machine configurations.
 
+pub mod arch;
 pub mod asm;
 pub mod baseline;
 pub mod coordinator;
 pub mod core;
+pub mod cosim;
+pub mod fuzz;
 pub mod isa;
 pub mod machine;
 pub mod mem;
+pub mod ref_iss;
 pub mod runtime;
 pub mod simd;
 pub mod util;

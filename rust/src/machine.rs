@@ -27,9 +27,10 @@
 use crate::baseline::{PicoConfig, PicoCore};
 use crate::core::{Core, CoreConfig, CoreCounters, SimError};
 use crate::mem::{CacheGeometry, MemConfig, MemConfigError, MemModel, MemStats, Replacement};
+use crate::ref_iss::RefIss;
 use crate::simd::CustomUnit;
 use crate::workloads::common::{self, Throughput};
-use crate::workloads::workload::{run_on, Scenario, Variant, Workload, WorkloadReport};
+use crate::workloads::workload::{run_on, run_on_iss, Scenario, Variant, Workload, WorkloadReport};
 
 /// Errors from [`Machine::run`] and [`run_on_pico`].
 #[derive(Debug)]
@@ -87,12 +88,28 @@ impl From<MemConfigError> for MachineError {
 /// factory serves every vector width in a sweep.
 pub type UnitFactory = Box<dyn Fn(usize) -> Box<dyn CustomUnit>>;
 
+/// Which execution backend [`Machine::run`] drives.
+///
+/// `Timed` is the cycle-level [`Core`] (the default — every performance
+/// number comes from it). `RefIss` is the architectural-only reference
+/// ISS ([`crate::ref_iss::RefIss`]): same registers/memory/instret,
+/// no timing state at all, an order of magnitude faster — the
+/// functional backend the differential suites compare the core against
+/// (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    Timed,
+    RefIss,
+}
+
 /// A reusable simulator configuration: core timing + memory geometry +
 /// custom-unit loadout. `build()` materialises a fresh [`Core`];
 /// `run()` executes a workload scenario end to end.
 pub struct Machine {
     core: CoreConfig,
     mem: MemConfig,
+    backend: Backend,
     /// Set by an explicit `fmax_mhz()` call; survives later `vlen()`
     /// changes (which would otherwise reset the clock to the
     /// width-dependent default).
@@ -113,6 +130,7 @@ impl Machine {
         Self {
             core: CoreConfig::for_vlen(vlen_bits),
             mem: MemConfig::for_vlen(vlen_bits),
+            backend: Backend::default(),
             fmax_override: None,
             units: Vec::new(),
             cleared: Vec::new(),
@@ -233,6 +251,15 @@ impl Machine {
         self
     }
 
+    /// Select the execution backend `run()` drives (default:
+    /// [`Backend::Timed`]). `Backend::RefIss` runs workloads on the
+    /// reference ISS — same architectural results, no cycle accounting
+    /// (the report's `cycles` equals `instret`).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
     /// Validate the configured memory system without building a core.
     pub fn validate(&self) -> Result<(), MemConfigError> {
         self.mem.validate()
@@ -283,6 +310,26 @@ impl Machine {
         core
     }
 
+    /// Materialise the reference ISS with this machine's vector width,
+    /// clock (for report accounting only), unit loadout and memory
+    /// capacity. The cache geometry is irrelevant to the ISS — memory
+    /// is a flat image of the DRAM size.
+    pub fn build_iss(&self) -> RefIss {
+        self.build_iss_with_bytes(self.mem.dram.size_bytes)
+    }
+
+    fn build_iss_with_bytes(&self, mem_bytes: usize) -> RefIss {
+        let mut iss = RefIss::new(self.core.vlen_bits, mem_bytes);
+        iss.fmax_mhz = self.core.fmax_mhz;
+        for &slot in &self.cleared {
+            iss.pool.unload(slot);
+        }
+        for (slot, make) in &self.units {
+            iss.pool.load(*slot, make(self.core.lanes()));
+        }
+        iss
+    }
+
     /// Run one workload scenario end to end on a fresh core and report
     /// uniform throughput/verification results. The scenario's
     /// `vlen_bits` is taken from this machine's configuration.
@@ -300,13 +347,32 @@ impl Machine {
         // Reject invalid configurations up front (a sweep point like
         // `--llc-ways 0` becomes an error row, not a thread panic).
         mem.validate()?;
-        let mut core = self.build_with_mem(mem);
-        for &slot in w.required_units(sc.variant) {
-            if core.pool.get(slot).is_none() {
-                return Err(MachineError::MissingUnit { workload: w.name().to_string(), slot });
+        match self.backend {
+            Backend::Timed => {
+                let mut core = self.build_with_mem(mem);
+                for &slot in w.required_units(sc.variant) {
+                    if core.pool.get(slot).is_none() {
+                        return Err(MachineError::MissingUnit {
+                            workload: w.name().to_string(),
+                            slot,
+                        });
+                    }
+                }
+                Ok(run_on(w, &mut core, &sc)?)
+            }
+            Backend::RefIss => {
+                let mut iss = self.build_iss_with_bytes(mem.dram.size_bytes);
+                for &slot in w.required_units(sc.variant) {
+                    if iss.pool.get(slot).is_none() {
+                        return Err(MachineError::MissingUnit {
+                            workload: w.name().to_string(),
+                            slot,
+                        });
+                    }
+                }
+                Ok(run_on_iss(w, &mut iss, &sc)?)
             }
         }
-        Ok(run_on(w, &mut core, &sc)?)
     }
 }
 
@@ -319,9 +385,10 @@ pub fn dram_needed(buffers: usize, bytes_each: usize) -> usize {
 }
 
 /// Run a scalar workload scenario on the PicoRV32 baseline model,
-/// reusing the workload's program and input image. Pico results cannot
-/// be verified through `Workload::verify` (it speaks `Core`), so
-/// `verified` is `None`.
+/// reusing the workload's program and input image. The Pico model does
+/// not implement [`crate::arch::ArchState`] (it has no vector state and
+/// keeps its memory private), so `Workload::verify` cannot run against
+/// it and `verified` is `None`.
 pub fn run_on_pico(
     w: &mut dyn Workload,
     cfg: PicoConfig,
@@ -457,6 +524,30 @@ mod tests {
             "{err}"
         );
         assert!(Machine::paper_default().validate().is_ok());
+    }
+
+    #[test]
+    fn ref_iss_backend_verifies_workloads_and_matches_instret() {
+        let sc = Scenario::new(Variant::Vector, 64 * 1024);
+        let timed = Machine::paper_default().run(&mut Memcpy::new(), &sc).unwrap();
+        let iss = Machine::paper_default()
+            .backend(Backend::RefIss)
+            .run(&mut Memcpy::new(), &sc)
+            .unwrap();
+        assert_eq!(iss.verified, Some(true));
+        assert_eq!(
+            iss.throughput.instret, timed.throughput.instret,
+            "instruction count must not depend on the backend"
+        );
+        assert_eq!(iss.throughput.cycles, iss.throughput.instret, "ISS reports nominal CPI 1");
+        assert_eq!(iss.mem.dram.bursts(), 0, "the ISS has no memory hierarchy");
+    }
+
+    #[test]
+    fn ref_iss_backend_rejects_missing_units() {
+        let m = Machine::paper_default().backend(Backend::RefIss).without_unit(3);
+        let err = m.run(&mut Prefix::new(), &Scenario::new(Variant::Vector, 1024)).unwrap_err();
+        assert!(matches!(err, MachineError::MissingUnit { slot: 3, .. }), "{err}");
     }
 
     #[test]

@@ -17,6 +17,25 @@
 //!                                       blocking port; >=2 non-blocking)
 //!   list-workloads                      registry contents
 //!
+//! verification:
+//!   fuzz [--seeds N] [--base-seed S] [--ops M]
+//!        [--weights alu=..,branch=..,muldiv=..,mem=..,vec=..,vecmem=..]
+//!        [--sweep axis=a,b,c]... [--artifact-dir DIR] [--json]
+//!                                       differential fuzzing: random
+//!                                       programs run in lockstep on the
+//!                                       timed core and the reference ISS;
+//!                                       default grid = paper machine +
+//!                                       stressed memory (mshrs=8,
+//!                                       prefetch, 2 channels); --sweep
+//!                                       uses the machine axes above; on
+//!                                       failure the program listing and
+//!                                       divergence report land in
+//!                                       --artifact-dir (default
+//!                                       fuzz-artifacts/)
+//!
+//! Every command accepts the global `--jobs N` flag bounding the sweep
+//! worker pool (default: available parallelism).
+//!
 //! experiments (all accept --json):
 //!   fig3 [--side left|right] [--full]   memcpy design-space sweeps
 //!   mem-sweep [--full]                  streaming bandwidth vs LLC block
@@ -40,9 +59,10 @@
 //!   config                              print the Table-1 configuration
 //! ```
 
-use simdsoftcore::coordinator::sweep::MachinePoint;
+use simdsoftcore::coordinator::sweep::{self, MachinePoint};
 use simdsoftcore::coordinator::{experiments as exp, Scale, Table};
 use simdsoftcore::core::{Core, Trace};
+use simdsoftcore::fuzz::{self, FuzzConfig, OpWeights};
 use simdsoftcore::workloads::{registry, Scenario, Variant};
 use std::process::ExitCode;
 
@@ -65,6 +85,14 @@ fn main() -> ExitCode {
 fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
     let scale = Scale { full: flags.has("--full") };
     let json = flags.has("--json");
+    // Global worker-pool bound: every sweep surface (run-workload grids,
+    // experiment drivers, the fuzz campaign) pulls its width from here.
+    if let Some(jobs) = flags.parse_usize("--jobs")? {
+        if jobs == 0 {
+            return Err("--jobs must be at least 1".into());
+        }
+        sweep::set_jobs(jobs);
+    }
     // Render one experiment table in the selected format.
     let emit = |t: Table| {
         if json {
@@ -151,6 +179,7 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
             Ok(())
         }
         "run-workload" => run_workload(flags, json),
+        "fuzz" => run_fuzz(flags, json),
         "list-workloads" => {
             list_workloads();
             Ok(())
@@ -167,9 +196,10 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fig3|mem-sweep|fig4|table1|table2|fig5|fig6|\
-     memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
-     sweep axes for run-workload: variant, size, vlen, llc-block, mshrs, prefetch, channels\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|fig3|mem-sweep|fig4|table1|table2|fig5|\
+     fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+     sweep axes for run-workload and fuzz: variant, size, vlen, llc-block, mshrs, prefetch, \
+     channels; the global --jobs N flag bounds every sweep worker pool\n\
      see the header of rust/src/main.rs for details"
 }
 
@@ -338,7 +368,7 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     const VALUE_FLAGS: &[&str] = &[
         "--variant", "--size", "--vlen", "--llc-block", "--mshrs", "--prefetch", "--channels",
-        "--sweep",
+        "--sweep", "--jobs",
     ];
     let positional = flags.positional(VALUE_FLAGS);
     let Some(&name) = positional.first() else {
@@ -369,27 +399,27 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
             base.set(axis, v);
         }
     }
-    let mut grid = vec![base];
     let mut sizes = vec![flags.parse_usize("--size")?.unwrap_or_else(|| probe.default_size())];
 
     // Sweep axes replace the fixed point on their axis. Machine axes
-    // come from the MachinePoint registry; variant/size are
-    // workload-level.
+    // come from the MachinePoint registry (expanded by `machine_grid`,
+    // shared with the fuzz subcommand); variant/size are workload-level.
+    let mut machine_specs: Vec<&str> = Vec::new();
     for spec in flags.opt_vals("--sweep")? {
         let (axis, vals) = spec
             .split_once('=')
             .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
-        let parse_list = |what: &str| -> Result<Vec<usize>, String> {
-            vals.split(',')
-                .map(|v| {
-                    v.trim()
-                        .parse()
-                        .map_err(|_| format!("bad {what} value '{v}' in --sweep {spec}"))
-                })
-                .collect()
-        };
         match axis {
-            "size" => sizes = parse_list("size")?,
+            "size" => {
+                sizes = vals
+                    .split(',')
+                    .map(|v| {
+                        v.trim()
+                            .parse()
+                            .map_err(|_| format!("bad size value '{v}' in --sweep {spec}"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
             "variant" => {
                 variants = vals
                     .split(',')
@@ -400,16 +430,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
                     .collect::<Result<Vec<_>, _>>()?;
             }
             axis if MachinePoint::AXES.contains(&axis) || axis == "llc_block" => {
-                let values = parse_list(axis)?;
-                let mut expanded = Vec::with_capacity(grid.len() * values.len());
-                for mp in &grid {
-                    for &v in &values {
-                        let mut mp = *mp;
-                        mp.set(axis, v);
-                        expanded.push(mp);
-                    }
-                }
-                grid = expanded;
+                machine_specs.push(spec);
             }
             other => {
                 return Err(format!(
@@ -419,6 +440,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
             }
         }
     }
+    let grid = machine_grid(base, &machine_specs)?;
 
     // Cartesian grid, validated up front (bad widths/blocks are usage
     // errors, not panics inside sweep threads).
@@ -434,8 +456,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     }
     // Executed on a bounded worker pool (a grid can be large; one
     // uncapped thread per point would oversubscribe the host).
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let results = simdsoftcore::coordinator::sweep::parallel_map_bounded(points, threads, |p| {
+    let results = sweep::parallel_map_bounded(points, sweep::jobs(), |p| {
         // Workload-specific size constraints are assertions; contain
         // them to a failed row instead of a CLI abort.
         let run = std::panic::catch_unwind(|| {
@@ -498,9 +519,153 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     Ok(())
 }
 
+/// Expand `--sweep axis=v1,v2` specs (machine axes only) into a grid of
+/// machine points, starting from `base`.
+fn machine_grid(base: MachinePoint, sweeps: &[&str]) -> Result<Vec<MachinePoint>, String> {
+    let mut grid = vec![base];
+    for spec in sweeps {
+        let (axis, vals) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
+        if !(MachinePoint::AXES.contains(&axis) || axis == "llc_block") {
+            return Err(format!(
+                "unknown machine sweep axis '{axis}' (axes: {})",
+                MachinePoint::AXES.join(", ")
+            ));
+        }
+        let values: Vec<usize> = vals
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .map_err(|_| format!("bad {axis} value '{v}' in --sweep {spec}"))
+            })
+            .collect::<Result<_, _>>()?;
+        let mut expanded = Vec::with_capacity(grid.len() * values.len());
+        for mp in &grid {
+            for &v in &values {
+                let mut mp = *mp;
+                mp.set(axis, v);
+                expanded.push(mp);
+            }
+        }
+        grid = expanded;
+    }
+    Ok(grid)
+}
+
+/// The `fuzz` subcommand: differential lockstep fuzzing of the timed
+/// core against the reference ISS (DESIGN.md §9).
+fn run_fuzz(flags: &Flags, json: bool) -> Result<(), String> {
+    let seeds = flags.parse_usize("--seeds")?.unwrap_or(100) as u64;
+    if seeds == 0 {
+        return Err("--seeds must be at least 1".into());
+    }
+    let base_seed = flags.parse_usize("--base-seed")?.unwrap_or(1) as u64;
+    let ops = flags.parse_usize("--ops")?.unwrap_or(300);
+    if ops == 0 || ops > 50_000 {
+        return Err(format!("--ops must be in 1..=50000, got {ops}"));
+    }
+    let weights = match flags.opt_val("--weights")? {
+        Some(spec) => Some(OpWeights::parse(spec)?),
+        None => None,
+    };
+    let sweeps = flags.opt_vals("--sweep")?;
+    let points = if sweeps.is_empty() {
+        // Default grid: the paper machine plus the stressed memory
+        // configuration (non-blocking port, prefetch, 2 DRAM channels).
+        vec![MachinePoint::default(), fuzz::stressed_point()]
+    } else {
+        machine_grid(MachinePoint::default(), &sweeps)?
+    };
+    for mp in &points {
+        mp.validate()?;
+    }
+
+    let cfg = FuzzConfig {
+        seeds,
+        base_seed,
+        ops,
+        weights,
+        points: points.clone(),
+        jobs: 0, // run_campaign reads the global sweep::jobs()
+    };
+    let summary = fuzz::run_campaign(&cfg);
+
+    let mut t = Table::new("fuzz: lockstep differential campaign", &["metric", "value"]);
+    t.row(&["seeds".into(), format!("{seeds} (base {base_seed})")]);
+    t.row(&["ops/program".into(), ops.to_string()]);
+    t.row(&[
+        "op mix".into(),
+        match &cfg.weights {
+            Some(w) => format!("{w:?}"),
+            None => "preset rotation (balanced / scalar / vector)".into(),
+        },
+    ]);
+    for (i, mp) in points.iter().enumerate() {
+        t.row(&[
+            format!("machine[{i}]"),
+            format!(
+                "vlen={} llc-block={} mshrs={} prefetch={} channels={}",
+                mp.vlen, mp.llc_block, mp.mshrs, mp.prefetch, mp.channels
+            ),
+        ]);
+    }
+    t.row(&["cases".into(), summary.cases.to_string()]);
+    t.row(&["lockstep instructions".into(), summary.instrs.to_string()]);
+    t.row(&["divergences".into(), summary.failures.len().to_string()]);
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+
+    if summary.ok() {
+        return Ok(());
+    }
+    // Persist triage artifacts (CI uploads these on failure).
+    let dir = flags.opt_val("--artifact-dir")?.unwrap_or("fuzz-artifacts");
+    std::fs::create_dir_all(dir).map_err(|e| format!("creating {dir}: {e}"))?;
+    for f in summary.failures.iter().take(16) {
+        let stem = format!(
+            "{dir}/seed{}-vlen{}-llc{}-mshrs{}-pf{}-ch{}",
+            f.seed,
+            f.point.vlen,
+            f.point.llc_block,
+            f.point.mshrs,
+            f.point.prefetch,
+            f.point.channels
+        );
+        std::fs::write(format!("{stem}.s"), &f.listing)
+            .map_err(|e| format!("writing {stem}.s: {e}"))?;
+        let header = format!(
+            "seed {} | ops {} | weights {} | vlen={} llc-block={} mshrs={} prefetch={} channels={}\n\n",
+            f.seed,
+            f.ops,
+            f.weights_name,
+            f.point.vlen,
+            f.point.llc_block,
+            f.point.mshrs,
+            f.point.prefetch,
+            f.point.channels
+        );
+        std::fs::write(format!("{stem}.report.txt"), format!("{header}{}", f.report))
+            .map_err(|e| format!("writing {stem}.report.txt: {e}"))?;
+        eprintln!("fuzz failure artifacts: {stem}.s, {stem}.report.txt");
+    }
+    Err(format!(
+        "{} of {} fuzz cases diverged — artifacts in {dir}/ (replay one with: \
+         simdsoftcore fuzz --seeds 1 --base-seed <seed> --ops {ops}, repeating your \
+         --weights/--sweep flags; each .report.txt header records the op mix and \
+         machine point of its case)",
+        summary.failures.len(),
+        summary.cases
+    ))
+}
+
 fn run_program(flags: &Flags) -> Result<(), String> {
     let path = *flags
-        .positional(&["--vlen"])
+        .positional(&["--vlen", "--jobs"])
         .first()
         .ok_or("run needs a .s file argument")?;
     let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
@@ -532,7 +697,7 @@ fn run_program(flags: &Flags) -> Result<(), String> {
 
 fn disasm_program(flags: &Flags) -> Result<(), String> {
     let path = *flags
-        .positional(&[])
+        .positional(&["--jobs"])
         .first()
         .ok_or("disasm needs a .s file argument")?;
     let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;

@@ -1,0 +1,709 @@
+//! Reference instruction-set simulator (ISS): a second, architectural-only
+//! implementation of RV32IM + the paper's I′/S′ custom SIMD types.
+//!
+//! Until this module existed, the only oracle for the timed
+//! [`crate::core::Core`] was the flat-memory mode of the *same* core — a
+//! decode or execute bug would sail through every suite because both
+//! sides of the comparison shared the buggy `step()`. `RefIss` is an
+//! independent execute implementation (its own instruction match, its
+//! own register file and flat byte-array memory, zero timing state) that
+//! shares only the pieces whose semantics are *defined* to be common:
+//!
+//! - [`crate::isa::decode`] / [`crate::isa::Instr`] — the instruction
+//!   encoding is the specification both machines implement;
+//! - [`crate::simd::UnitPool`] — a custom unit IS the architectural
+//!   definition of its instruction (the paper's reconfigurable-slot
+//!   model), so both backends execute the same unit object; the ISS
+//!   ignores the unit's latency output entirely.
+//!
+//! Because there is no scoreboard, no cache model and no cycle
+//! accounting, the ISS also serves as a high-throughput functional
+//! backend (`Machine::backend(Backend::RefIss)`), executing the full
+//! workload registry an order of magnitude faster than the timed core
+//! (`cargo bench --bench iss_throughput`).
+//!
+//! Architectural contract vs the timed core (DESIGN.md §9): registers,
+//! vector registers, pc, instret and the memory image must match
+//! instruction for instruction. Cycle counts do not exist here; reads of
+//! the cycle/time CSRs return `instret` (a monotonic counter), and the
+//! lockstep driver ([`crate::cosim`]) injects the timed core's value so
+//! downstream dataflow still compares exactly.
+
+use crate::arch::ArchState;
+use crate::asm::Program;
+use crate::core::SimError;
+use crate::isa::instr::csr;
+use crate::isa::{decode, Instr, Reg, VReg};
+use crate::simd::{standard_pool, UnitInputs, UnitPool, VecMemOp, VecVal};
+
+/// Result of a completed ISS run (no cycle counts by construction).
+#[derive(Debug, Clone, Copy)]
+pub struct IssRunResult {
+    pub instret: u64,
+}
+
+/// The architectural-only reference simulator.
+pub struct RefIss {
+    vlen_bits: usize,
+    /// Cycles → seconds clock used only when the ISS backs a
+    /// `WorkloadReport` (the ISS itself never counts cycles).
+    pub fmax_mhz: f64,
+    pub pool: UnitPool,
+    regs: [u32; 32],
+    vregs: [VecVal; 8],
+    pc: u32,
+    instret: u64,
+    halted: bool,
+    mem: Vec<u8>,
+    text_base: u32,
+    decoded: Vec<Option<Instr>>,
+}
+
+impl RefIss {
+    /// ISS with the standard unit pool for `vlen_bits` and a flat memory
+    /// of `mem_bytes`.
+    pub fn new(vlen_bits: usize, mem_bytes: usize) -> Self {
+        let lanes = vlen_bits / 32;
+        Self {
+            vlen_bits,
+            fmax_mhz: 150.0,
+            pool: standard_pool(vlen_bits),
+            regs: [0; 32],
+            vregs: [VecVal::zero(lanes); 8],
+            pc: 0,
+            instret: 0,
+            halted: false,
+            mem: vec![0; mem_bytes],
+            text_base: 0,
+            decoded: Vec::new(),
+        }
+    }
+
+    /// Paper-shaped ISS (VLEN = 256) over `mem_bytes` of memory.
+    pub fn paper_default(mem_bytes: usize) -> Self {
+        Self::new(256, mem_bytes)
+    }
+
+    pub fn vlen_bits(&self) -> usize {
+        self.vlen_bits
+    }
+
+    fn lanes(&self) -> usize {
+        self.vlen_bits / 32
+    }
+
+    fn vlen_bytes(&self) -> usize {
+        self.vlen_bits / 8
+    }
+
+    /// Load a program and reset architectural state, mirroring
+    /// [`crate::core::Core::load`]: registers cleared, `sp` at the top
+    /// of memory (16-byte aligned), pc at the entry point. Memory
+    /// outside the program image is left as-is (a fresh ISS is
+    /// all-zero, like fresh simulated DRAM).
+    pub fn load(&mut self, prog: &Program) {
+        let lanes = self.lanes();
+        for (i, w) in prog.text.iter().enumerate() {
+            let at = prog.text_base as usize + i * 4;
+            self.mem[at..at + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        if !prog.data.is_empty() {
+            let at = prog.data_base as usize;
+            self.mem[at..at + prog.data.len()].copy_from_slice(&prog.data);
+        }
+        self.regs = [0; 32];
+        self.vregs = [VecVal::zero(lanes); 8];
+        self.regs[2] = (self.mem.len() as u32) & !15; // sp
+        self.pc = prog.entry;
+        self.instret = 0;
+        self.halted = false;
+        self.text_base = prog.text_base;
+        self.decoded = vec![None; prog.text.len()];
+        self.pool.reset_all();
+    }
+
+    /// Host-side memory write (workload input images).
+    pub fn host_write(&mut self, addr: u32, data: &[u8]) {
+        let at = addr as usize;
+        self.mem[at..at + data.len()].copy_from_slice(data);
+    }
+
+    /// Overwrite one base register (the lockstep driver uses this to
+    /// inject the timed core's value after a cycle/time CSR read, the
+    /// one architecturally timing-dependent instruction).
+    pub fn force_reg(&mut self, r: Reg, v: u32) {
+        if r.num() != 0 {
+            self.regs[r.num() as usize] = v;
+        }
+    }
+
+    #[inline]
+    fn write_reg(&mut self, r: Reg, v: u32) {
+        if r.num() != 0 {
+            self.regs[r.num() as usize] = v;
+        }
+    }
+
+    #[inline]
+    fn write_vreg(&mut self, v: VReg, val: VecVal) {
+        if v.num() != 0 {
+            self.vregs[v.num() as usize] = val;
+        }
+    }
+
+    #[inline]
+    fn check_mem(&self, addr: u32, len: usize) -> Result<(), SimError> {
+        if (addr as usize).checked_add(len).is_none_or(|end| end > self.mem.len()) {
+            return Err(SimError::MemFault { pc: self.pc, addr, len, size: self.mem.len() });
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn load_u32(&self, addr: u32) -> u32 {
+        let at = addr as usize;
+        u32::from_le_bytes(self.mem[at..at + 4].try_into().unwrap())
+    }
+
+    /// Decode (with per-index caching over the text segment) the
+    /// instruction at `pc`. The cache is only consulted for
+    /// word-aligned pcs: a misaligned pc (reachable through `jalr`,
+    /// which clears only bit 0) decodes the raw bytes at that address,
+    /// so it can never alias an aligned slot — if the timed core's
+    /// index-truncating cache ever disagrees here, lockstep reports it
+    /// instead of both sides inheriting the same shortcut.
+    fn fetch_decode(&mut self, pc: u32) -> Result<Instr, SimError> {
+        let off = pc.wrapping_sub(self.text_base);
+        if off % 4 == 0 {
+            let idx = off as usize / 4;
+            if let Some(slot) = self.decoded.get(idx) {
+                if let Some(i) = slot {
+                    return Ok(*i);
+                }
+                self.check_mem(pc, 4)?;
+                let i = decode(self.load_u32(pc))
+                    .map_err(|source| SimError::Illegal { pc, source })?;
+                self.decoded[idx] = Some(i);
+                return Ok(i);
+            }
+        }
+        self.check_mem(pc, 4)?;
+        decode(self.load_u32(pc)).map_err(|source| SimError::Illegal { pc, source })
+    }
+
+    /// Execute one instruction; returns the retired instruction (the
+    /// lockstep driver inspects it to spot timing-dependent CSR reads).
+    pub fn step(&mut self) -> Result<Instr, SimError> {
+        debug_assert!(!self.halted, "step() after halt");
+        let pc = self.pc;
+        let instr = self.fetch_decode(pc)?;
+        let mut next_pc = pc.wrapping_add(4);
+        use Instr::*;
+        match instr {
+            Lui { rd, imm } => self.write_reg(rd, imm as u32),
+            Auipc { rd, imm } => self.write_reg(rd, pc.wrapping_add(imm as u32)),
+            Jal { rd, offset } => {
+                self.write_reg(rd, pc.wrapping_add(4));
+                next_pc = pc.wrapping_add(offset as u32);
+            }
+            Jalr { rd, rs1, offset } => {
+                let base = self.regs[rs1.num() as usize];
+                self.write_reg(rd, pc.wrapping_add(4));
+                next_pc = base.wrapping_add(offset as u32) & !1;
+            }
+            Beq { rs1, rs2, offset }
+            | Bne { rs1, rs2, offset }
+            | Blt { rs1, rs2, offset }
+            | Bge { rs1, rs2, offset }
+            | Bltu { rs1, rs2, offset }
+            | Bgeu { rs1, rs2, offset } => {
+                let a = self.regs[rs1.num() as usize];
+                let b = self.regs[rs2.num() as usize];
+                let take = match instr {
+                    Beq { .. } => a == b,
+                    Bne { .. } => a != b,
+                    Blt { .. } => (a as i32) < (b as i32),
+                    Bge { .. } => (a as i32) >= (b as i32),
+                    Bltu { .. } => a < b,
+                    Bgeu { .. } => a >= b,
+                    _ => unreachable!(),
+                };
+                if take {
+                    next_pc = pc.wrapping_add(offset as u32);
+                }
+            }
+            Lb { rd, rs1, offset }
+            | Lh { rd, rs1, offset }
+            | Lw { rd, rs1, offset }
+            | Lbu { rd, rs1, offset }
+            | Lhu { rd, rs1, offset } => {
+                let addr = self.regs[rs1.num() as usize].wrapping_add(offset as u32);
+                let len = match instr {
+                    Lb { .. } | Lbu { .. } => 1,
+                    Lh { .. } | Lhu { .. } => 2,
+                    _ => 4,
+                };
+                self.check_mem(addr, len)?;
+                let at = addr as usize;
+                let value = match instr {
+                    Lb { .. } => self.mem[at] as i8 as i32 as u32,
+                    Lbu { .. } => self.mem[at] as u32,
+                    Lh { .. } => i16::from_le_bytes([self.mem[at], self.mem[at + 1]]) as i32 as u32,
+                    Lhu { .. } => u16::from_le_bytes([self.mem[at], self.mem[at + 1]]) as u32,
+                    _ => self.load_u32(addr),
+                };
+                self.write_reg(rd, value);
+            }
+            Sb { rs1, rs2, offset } | Sh { rs1, rs2, offset } | Sw { rs1, rs2, offset } => {
+                let addr = self.regs[rs1.num() as usize].wrapping_add(offset as u32);
+                let len = match instr {
+                    Sb { .. } => 1,
+                    Sh { .. } => 2,
+                    _ => 4,
+                };
+                self.check_mem(addr, len)?;
+                let bytes = self.regs[rs2.num() as usize].to_le_bytes();
+                let at = addr as usize;
+                self.mem[at..at + len].copy_from_slice(&bytes[..len]);
+            }
+            Addi { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a.wrapping_add(imm as u32));
+            }
+            Slti { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, ((a as i32) < imm) as u32);
+            }
+            Sltiu { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, (a < imm as u32) as u32);
+            }
+            Xori { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a ^ imm as u32);
+            }
+            Ori { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a | imm as u32);
+            }
+            Andi { rd, rs1, imm } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a & imm as u32);
+            }
+            Slli { rd, rs1, shamt } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a << shamt);
+            }
+            Srli { rd, rs1, shamt } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, a >> shamt);
+            }
+            Srai { rd, rs1, shamt } => {
+                let a = self.regs[rs1.num() as usize];
+                self.write_reg(rd, ((a as i32) >> shamt) as u32);
+            }
+            Add { rd, rs1, rs2 }
+            | Sub { rd, rs1, rs2 }
+            | Sll { rd, rs1, rs2 }
+            | Slt { rd, rs1, rs2 }
+            | Sltu { rd, rs1, rs2 }
+            | Xor { rd, rs1, rs2 }
+            | Srl { rd, rs1, rs2 }
+            | Sra { rd, rs1, rs2 }
+            | Or { rd, rs1, rs2 }
+            | And { rd, rs1, rs2 } => {
+                let a = self.regs[rs1.num() as usize];
+                let b = self.regs[rs2.num() as usize];
+                let v = match instr {
+                    Add { .. } => a.wrapping_add(b),
+                    Sub { .. } => a.wrapping_sub(b),
+                    Sll { .. } => a << (b & 31),
+                    Slt { .. } => ((a as i32) < (b as i32)) as u32,
+                    Sltu { .. } => (a < b) as u32,
+                    Xor { .. } => a ^ b,
+                    Srl { .. } => a >> (b & 31),
+                    Sra { .. } => ((a as i32) >> (b & 31)) as u32,
+                    Or { .. } => a | b,
+                    And { .. } => a & b,
+                    _ => unreachable!(),
+                };
+                self.write_reg(rd, v);
+            }
+            Mul { rd, rs1, rs2 }
+            | Mulh { rd, rs1, rs2 }
+            | Mulhsu { rd, rs1, rs2 }
+            | Mulhu { rd, rs1, rs2 } => {
+                let a = self.regs[rs1.num() as usize];
+                let b = self.regs[rs2.num() as usize];
+                let v = match instr {
+                    Mul { .. } => a.wrapping_mul(b),
+                    Mulh { .. } => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+                    Mulhsu { .. } => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+                    Mulhu { .. } => (((a as u64) * (b as u64)) >> 32) as u32,
+                    _ => unreachable!(),
+                };
+                self.write_reg(rd, v);
+            }
+            Div { rd, rs1, rs2 }
+            | Divu { rd, rs1, rs2 }
+            | Rem { rd, rs1, rs2 }
+            | Remu { rd, rs1, rs2 } => {
+                let a = self.regs[rs1.num() as usize];
+                let b = self.regs[rs2.num() as usize];
+                let v = match instr {
+                    Div { .. } => {
+                        if b == 0 {
+                            u32::MAX
+                        } else if a == 0x8000_0000 && b == u32::MAX {
+                            a
+                        } else {
+                            ((a as i32).wrapping_div(b as i32)) as u32
+                        }
+                    }
+                    Divu { .. } => {
+                        if b == 0 {
+                            u32::MAX
+                        } else {
+                            a / b
+                        }
+                    }
+                    Rem { .. } => {
+                        if b == 0 {
+                            a
+                        } else if a == 0x8000_0000 && b == u32::MAX {
+                            0
+                        } else {
+                            ((a as i32).wrapping_rem(b as i32)) as u32
+                        }
+                    }
+                    Remu { .. } => {
+                        if b == 0 {
+                            a
+                        } else {
+                            a % b
+                        }
+                    }
+                    _ => unreachable!(),
+                };
+                self.write_reg(rd, v);
+            }
+            Fence => {}
+            Ecall => {
+                self.halted = true;
+            }
+            Ebreak => {
+                return Err(SimError::Break(pc));
+            }
+            Csrrs { rd, csr: c, rs1: _ } => {
+                // No cycles exist here; the cycle/time counters read as
+                // instret (monotonic, like real time would be). The
+                // lockstep driver overrides the value with the timed
+                // core's — see DESIGN.md §9.
+                let v = match c {
+                    csr::CYCLE | csr::TIME | csr::INSTRET => self.instret as u32,
+                    csr::CYCLEH | csr::TIMEH | csr::INSTRETH => (self.instret >> 32) as u32,
+                    _ => 0,
+                };
+                self.write_reg(rd, v);
+            }
+            CustomI { slot, funct3, ops } => {
+                self.exec_custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    None,
+                    0,
+                    ops.vrs1,
+                    ops.vrs2,
+                    ops.rd,
+                    ops.vrd1,
+                    ops.vrd2,
+                )?;
+            }
+            CustomS { slot, funct3, ops } => {
+                self.exec_custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    Some(ops.rs2),
+                    ops.imm,
+                    ops.vrs1,
+                    crate::isa::reg::V0,
+                    ops.rd,
+                    ops.vrd1,
+                    crate::isa::reg::V0,
+                )?;
+            }
+        }
+        self.pc = next_pc;
+        self.instret += 1;
+        Ok(instr)
+    }
+
+    /// Execute a custom instruction through the shared unit pool,
+    /// performing any memory request on the flat image.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_custom(
+        &mut self,
+        pc: u32,
+        slot: usize,
+        funct3: u8,
+        rs1: Reg,
+        rs2: Option<Reg>,
+        imm: u8,
+        vrs1: VReg,
+        vrs2: VReg,
+        rd: Reg,
+        vrd1: VReg,
+        vrd2: VReg,
+    ) -> Result<(), SimError> {
+        let inputs = UnitInputs {
+            funct3,
+            rs1: self.regs[rs1.num() as usize],
+            rs2: rs2.map(|r| self.regs[r.num() as usize]).unwrap_or(0),
+            imm,
+            vrs1: self.vregs[vrs1.num() as usize],
+            vrs2: self.vregs[vrs2.num() as usize],
+        };
+        let out = self
+            .pool
+            .get_mut(slot)
+            .and_then(|u| u.execute(&inputs))
+            .map_err(|source| SimError::Unit { pc, source })?;
+        match out.mem {
+            Some(VecMemOp::Load { addr }) => {
+                let len = self.vlen_bytes();
+                self.check_mem(addr, len)?;
+                let at = addr as usize;
+                let val = VecVal::from_bytes(&self.mem[at..at + len]);
+                self.write_vreg(vrd1, val);
+            }
+            Some(VecMemOp::Store { addr, data }) => {
+                let len = self.vlen_bytes();
+                self.check_mem(addr, len)?;
+                let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
+                data.write_bytes(&mut buf[..len]);
+                let at = addr as usize;
+                self.mem[at..at + len].copy_from_slice(&buf[..len]);
+            }
+            None => {
+                if let Some(v) = out.vrd1 {
+                    self.write_vreg(vrd1, v);
+                }
+                if let Some(v) = out.vrd2 {
+                    self.write_vreg(vrd2, v);
+                }
+                if let Some(v) = out.rd {
+                    self.write_reg(rd, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run until `ecall` or the instruction budget is exhausted.
+    pub fn run(&mut self, max_instrs: u64) -> Result<IssRunResult, SimError> {
+        let start = self.instret;
+        while !self.halted {
+            if self.instret - start >= max_instrs {
+                return Err(SimError::Watchdog(max_instrs));
+            }
+            self.step()?;
+        }
+        Ok(IssRunResult { instret: self.instret })
+    }
+}
+
+impl ArchState for RefIss {
+    fn reg(&self, r: Reg) -> u32 {
+        self.regs[r.num() as usize]
+    }
+
+    fn vreg(&self, v: VReg) -> VecVal {
+        self.vregs[v.num() as usize]
+    }
+
+    fn pc(&self) -> u32 {
+        self.pc
+    }
+
+    fn instret(&self) -> u64 {
+        self.instret
+    }
+
+    fn halted(&self) -> bool {
+        self.halted
+    }
+
+    fn mem_size(&self) -> usize {
+        self.mem.len()
+    }
+
+    fn mem_slice(&self, addr: u32, len: usize) -> &[u8] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+
+    const MEM: usize = 2 * 1024 * 1024;
+
+    fn run_asm(build: impl FnOnce(&mut Asm)) -> RefIss {
+        let mut a = Asm::new();
+        build(&mut a);
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p);
+        iss.run(1_000_000).unwrap();
+        iss
+    }
+
+    #[test]
+    fn arithmetic_and_halt() {
+        let iss = run_asm(|a| {
+            a.li(A0, 20);
+            a.li(A1, 22);
+            a.add(A2, A0, A1);
+            a.halt();
+        });
+        assert_eq!(iss.reg(A2), 42);
+        assert!(iss.halted());
+    }
+
+    #[test]
+    fn x0_and_v0_are_hardwired_zero() {
+        let iss = run_asm(|a| {
+            a.li(ZERO, 99);
+            a.mv(A0, ZERO);
+            a.halt();
+        });
+        assert_eq!(iss.reg(A0), 0);
+        assert_eq!(iss.vreg(V0), VecVal::zero(8));
+    }
+
+    #[test]
+    fn loops_loads_stores_and_muldiv() {
+        let mut a = Asm::new();
+        let buf = a.buffer("buf", 64, 8);
+        a.la(A1, buf);
+        a.li(A0, -2);
+        a.sb(A0, 0, A1);
+        a.lb(A2, 0, A1);
+        a.lbu(A3, 0, A1);
+        a.li(T0, -6);
+        a.li(T1, 4);
+        a.mul(A4, T0, T1);
+        a.div(A5, T0, T1);
+        a.rem(A6, T0, T1);
+        let l = a.new_label("loop");
+        a.li(S0, 10);
+        a.li(S1, 0);
+        a.bind(l);
+        a.add(S1, S1, S0);
+        a.addi(S0, S0, -1);
+        a.bnez(S0, l);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p);
+        iss.run(10_000).unwrap();
+        assert_eq!(iss.reg(A2) as i32, -2);
+        assert_eq!(iss.reg(A3), 0xFE);
+        assert_eq!(iss.reg(A4) as i32, -24);
+        assert_eq!(iss.reg(A5) as i32, -1);
+        assert_eq!(iss.reg(A6) as i32, -2);
+        assert_eq!(iss.reg(S1), 55);
+    }
+
+    #[test]
+    fn vector_load_sort_store() {
+        let mut a = Asm::new();
+        let data = a.words("data", &[5, 3, 8, 1, 9, 2, 7, 4].map(|x: i32| x as u32));
+        a.dalign(32);
+        let out = a.buffer("out", 32, 32);
+        a.la(A0, data);
+        a.la(A1, out);
+        a.lv(V1, A0, ZERO);
+        a.sort8(V2, V1);
+        a.sv(V2, A1, ZERO);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p);
+        iss.run(100).unwrap();
+        let got: Vec<i32> = iss
+            .mem_slice(p.sym("out"), 32)
+            .chunks(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 7, 8, 9]);
+    }
+
+    #[test]
+    fn prefix_state_carries_and_resets_on_load() {
+        let mut a = Asm::new();
+        let d = a.words("d", &[1u32; 8]);
+        a.la(A0, d);
+        a.lv(V1, A0, ZERO);
+        a.prefix_reset();
+        a.prefix(V2, V1);
+        a.prefix(V3, V1);
+        a.prefix_carry(A5);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p);
+        iss.run(100).unwrap();
+        assert_eq!(iss.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(iss.vreg(V3).to_i32s(), vec![9, 10, 11, 12, 13, 14, 15, 16]);
+        assert_eq!(iss.reg(A5), 16);
+        // Reloading resets the carry (pool.reset_all, as Core::load does).
+        iss.load(&p);
+        iss.run(100).unwrap();
+        assert_eq!(iss.reg(A5), 16);
+    }
+
+    #[test]
+    fn watchdog_break_and_fault_mirror_the_core() {
+        let mut a = Asm::new();
+        let l = a.here("forever");
+        a.j(l);
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p);
+        assert!(matches!(iss.run(1000), Err(SimError::Watchdog(1000))));
+
+        let mut a = Asm::new();
+        a.ebreak();
+        let p = a.assemble().unwrap();
+        iss.load(&p);
+        assert!(matches!(iss.run(10), Err(SimError::Break(_))));
+
+        let mut a = Asm::new();
+        a.li(A0, 0x7fff_f000u32 as i64);
+        a.lw(A1, 0, A0);
+        a.halt();
+        let p = a.assemble().unwrap();
+        iss.load(&p);
+        assert!(matches!(iss.run(10), Err(SimError::MemFault { .. })));
+    }
+
+    #[test]
+    fn cycle_csr_reads_instret() {
+        let iss = run_asm(|a| {
+            a.nop();
+            a.nop();
+            a.rdcycle(S0);
+            a.rdinstret(S1);
+            a.halt();
+        });
+        assert_eq!(iss.reg(S0), 2, "cycle CSR reads as instret on the ISS");
+        assert_eq!(iss.reg(S1), 3);
+    }
+}

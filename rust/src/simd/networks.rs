@@ -267,4 +267,102 @@ mod tests {
         run_network(&mut v, &net);
         assert_eq!(v, (0..16).collect::<Vec<i32>>());
     }
+
+    /// Property: the bitonic sorter equals `slice::sort` for every
+    /// power-of-two width 2..=256 on PRNG inputs (not just the lane
+    /// counts the units instantiate — the structural generator must be
+    /// correct for any width a future VLEN explores).
+    #[test]
+    fn bitonic_equals_std_sort_all_widths() {
+        for n in (1..=8).map(|k| 1usize << k) {
+            let net = bitonic_sort_network(n);
+            validate_layers(n, &net)
+                .unwrap_or_else(|l| panic!("bitonic n={n}: layer {l} not single-cycle"));
+            crate::util::proptest::check(&format!("bitonic n={n} == sort"), 24, |rng| {
+                let mut v = rng.vec_i32(n);
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                run_network(&mut v, &net);
+                crate::prop_assert_eq!(v, expect);
+                Ok(())
+            });
+        }
+    }
+
+    /// Property: the merge block equals a functional merge for every
+    /// power-of-two width 2..=256, on PRNG inputs with duplicate-heavy
+    /// and extreme-value cases mixed in.
+    #[test]
+    fn merge_equals_std_merge_all_widths() {
+        for two_m in (1..=8).map(|k| 1usize << k) {
+            let net = merge_block_network(two_m);
+            validate_layers(two_m, &net)
+                .unwrap_or_else(|l| panic!("merge n={two_m}: layer {l} not single-cycle"));
+            crate::util::proptest::check(&format!("merge n={two_m} == sort"), 24, |rng| {
+                let m = two_m / 2;
+                let mut v = match rng.below(4) {
+                    0 => vec![rng.next_u32() as i32 % 3; two_m], // duplicates
+                    1 => {
+                        let mut v = rng.vec_i32(two_m);
+                        v[0] = i32::MIN;
+                        v[two_m - 1] = i32::MAX;
+                        v
+                    }
+                    _ => rng.vec_i32(two_m),
+                };
+                v[..m].sort_unstable();
+                v[m..].sort_unstable();
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                run_network(&mut v, &net);
+                crate::prop_assert_eq!(v, expect);
+                Ok(())
+            });
+        }
+    }
+
+    /// `validate_layers` must reject every class of mutation that would
+    /// break the single-cycle property: duplicated indices within a
+    /// layer, self-CAS pairs, and out-of-range wires.
+    #[test]
+    fn validate_layers_rejects_mutated_networks() {
+        for n in [8usize, 32, 256] {
+            for make in [bitonic_sort_network, merge_block_network] {
+                let good = make(n);
+                assert_eq!(validate_layers(n, &good), Ok(()));
+
+                // Duplicate an existing CAS inside its own layer: the
+                // touched indices collide.
+                let mut dup = good.clone();
+                let cas = dup[0][0];
+                dup[0].push(cas);
+                assert_eq!(validate_layers(n, &dup), Err(0), "duplicate CAS n={n}");
+
+                // A self-compare (a, a) is not a valid CAS.
+                let mut selfcas = good.clone();
+                let last = selfcas.len() - 1;
+                selfcas[last].push((1, 1));
+                assert_eq!(validate_layers(n, &selfcas), Err(last), "self CAS n={n}");
+
+                // An out-of-range wire.
+                let mut oob = good.clone();
+                oob[0].push((0, n)); // n is one past the last index
+                assert!(validate_layers(n, &oob).is_err(), "out-of-range wire n={n}");
+
+                // Two CAS pairs sharing one endpoint in the same layer.
+                let mut shared = good.clone();
+                let (a, b) = shared[0][0];
+                // Find an index not yet used by layer 0 to pair with `a`.
+                let used: Vec<usize> = shared[0].iter().flat_map(|&(x, y)| [x, y]).collect();
+                if let Some(free) = (0..n).find(|i| !used.contains(i)) {
+                    shared[0].push((a, free));
+                    assert_eq!(
+                        validate_layers(n, &shared),
+                        Err(0),
+                        "shared endpoint n={n} ({a},{b})+({a},{free})"
+                    );
+                }
+            }
+        }
+    }
 }

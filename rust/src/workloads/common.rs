@@ -1,6 +1,7 @@
 //! Shared helpers for the workload programs: buffer layout, host-side
 //! data initialisation and throughput accounting.
 
+use crate::arch::ArchState;
 use crate::core::{Core, RunResult};
 use crate::util::Xoshiro256;
 
@@ -49,10 +50,10 @@ pub fn init_random_i32(core: &mut Core, addr: u32, n: usize, seed: u64) -> Vec<i
     vals
 }
 
-/// Read back `n` i32 values from DRAM (after `flush_all`).
-pub fn read_i32s(core: &Core, addr: u32, n: usize) -> Vec<i32> {
-    core.mem
-        .dram_slice(addr, n * 4)
+/// Read back `n` i32 values from the architectural memory image of any
+/// backend (for a cached `Core`, after `flush_all`).
+pub fn read_i32s(arch: &(impl ArchState + ?Sized), addr: u32, n: usize) -> Vec<i32> {
+    arch.mem_slice(addr, n * 4)
         .chunks(4)
         .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
         .collect()

@@ -19,6 +19,7 @@
 //! calls; list walk + matrix multiply + state machine for CoreMark).
 
 use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
+use crate::arch::ArchState;
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -383,21 +384,21 @@ impl Workload for CpuBench {
         0 // IPC benchmark: no payload-byte accounting
     }
 
-    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
         let expect = self.expect();
-        if core.reg(A0) == expect {
+        if arch.reg(A0) == expect {
             Ok(())
         } else {
             Err(VerifyError::new(format!(
                 "checksum {:#010x} != expected {:#010x}",
-                core.reg(A0),
+                arch.reg(A0),
                 expect
             )))
         }
     }
 
-    fn result_data(&self, core: &Core) -> Vec<i32> {
-        vec![core.reg(A0) as i32]
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
+        vec![arch.reg(A0) as i32]
     }
 }
 

@@ -18,6 +18,7 @@
 
 use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
 use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
+use crate::arch::ArchState;
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -179,26 +180,26 @@ impl Workload for Filter {
         (sc.size * 4) as u64
     }
 
-    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
         let p = self.plan();
-        let got = read_i32s(core, p.dst, p.expect.len());
+        let got = read_i32s(arch, p.dst, p.expect.len());
         if got != p.expect {
             return Err(VerifyError::new("packed output differs from host-side selection"));
         }
         // The vector variant also reports the selected count in a6.
-        if p.variant == Variant::Vector && core.reg(A6) as usize != p.expect.len() {
+        if p.variant == Variant::Vector && arch.reg(A6) as usize != p.expect.len() {
             return Err(VerifyError::new(format!(
                 "selected count {} != expected {}",
-                core.reg(A6),
+                arch.reg(A6),
                 p.expect.len()
             )));
         }
         Ok(())
     }
 
-    fn result_data(&self, core: &Core) -> Vec<i32> {
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
         let p = self.plan();
-        read_i32s(core, p.dst, p.expect.len())
+        read_i32s(arch, p.dst, p.expect.len())
     }
 }
 

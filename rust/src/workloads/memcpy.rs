@@ -10,6 +10,7 @@
 
 use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
 use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
+use crate::arch::ArchState;
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -162,19 +163,19 @@ impl Workload for Memcpy {
         sc.size as u64
     }
 
-    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
         let p = self.plan();
         let expect = &p.image[0].1;
-        if core.mem.dram_slice(p.dst, expect.len()) == expect.as_slice() {
+        if arch.mem_slice(p.dst, expect.len()) == expect.as_slice() {
             Ok(())
         } else {
             Err(VerifyError::new("copied data differs from source"))
         }
     }
 
-    fn result_data(&self, core: &Core) -> Vec<i32> {
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
         let p = self.plan();
-        read_i32s(core, p.dst, p.image[0].1.len() / 4)
+        read_i32s(arch, p.dst, p.image[0].1.len() / 4)
     }
 }
 

@@ -3,6 +3,7 @@
 
 use super::common::{i32s_to_bytes, layout_buffers, random_i32s, read_i32s, Throughput};
 use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
+use crate::arch::ArchState;
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -159,9 +160,9 @@ impl Workload for Prefix {
         (sc.size * 4) as u64
     }
 
-    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
         let p = self.plan();
-        let got = read_i32s(core, p.dst, p.expect.len());
+        let got = read_i32s(arch, p.dst, p.expect.len());
         if got == p.expect {
             Ok(())
         } else {
@@ -169,9 +170,9 @@ impl Workload for Prefix {
         }
     }
 
-    fn result_data(&self, core: &Core) -> Vec<i32> {
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
         let p = self.plan();
-        read_i32s(core, p.dst, p.expect.len())
+        read_i32s(arch, p.dst, p.expect.len())
     }
 }
 

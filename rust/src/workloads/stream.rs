@@ -8,6 +8,7 @@
 
 use super::common::{layout_buffers, read_i32s, Throughput};
 use super::workload::{run_on, Scenario, Variant, VerifyError, Workload};
+use crate::arch::ArchState;
 use crate::asm::{Asm, Program};
 use crate::core::{Core, SimError};
 use crate::isa::reg::*;
@@ -167,13 +168,13 @@ pub fn run(core: &mut Core, kernel: Kernel, n: usize, vector: bool) -> Result<St
     Ok(StreamResult { kernel, throughput: report.throughput, verified: report.verified == Some(true) })
 }
 
-fn verify(core: &Core, kernel: Kernel, ab: u32, bb: u32, cb: u32, n: usize) -> bool {
+fn verify(arch: &dyn ArchState, kernel: Kernel, ab: u32, bb: u32, cb: u32, n: usize) -> bool {
     let probe = [0usize, n / 2, n - 1];
     match kernel {
-        Kernel::Copy => probe.iter().all(|&i| read_i32s(core, cb + (i * 4) as u32, 1)[0] == 1),
-        Kernel::Scale => probe.iter().all(|&i| read_i32s(core, bb + (i * 4) as u32, 1)[0] == 0),
-        Kernel::Add => probe.iter().all(|&i| read_i32s(core, cb + (i * 4) as u32, 1)[0] == 3),
-        Kernel::Triad => probe.iter().all(|&i| read_i32s(core, ab + (i * 4) as u32, 1)[0] == 2),
+        Kernel::Copy => probe.iter().all(|&i| read_i32s(arch, cb + (i * 4) as u32, 1)[0] == 1),
+        Kernel::Scale => probe.iter().all(|&i| read_i32s(arch, bb + (i * 4) as u32, 1)[0] == 0),
+        Kernel::Add => probe.iter().all(|&i| read_i32s(arch, cb + (i * 4) as u32, 1)[0] == 3),
+        Kernel::Triad => probe.iter().all(|&i| read_i32s(arch, ab + (i * 4) as u32, 1)[0] == 2),
     }
 }
 
@@ -271,23 +272,23 @@ impl Workload for Stream {
         self.kernel.bytes_per_elem() * sc.size as u64
     }
 
-    fn verify(&self, core: &Core) -> Result<(), VerifyError> {
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
         let p = self.plan();
-        if verify(core, self.kernel, p.a, p.b, p.c, p.n) {
+        if verify(arch, self.kernel, p.a, p.b, p.c, p.n) {
             Ok(())
         } else {
             Err(VerifyError::new(format!("{} probe values wrong", self.kernel.name())))
         }
     }
 
-    fn result_data(&self, core: &Core) -> Vec<i32> {
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
         let p = self.plan();
         let out = match self.kernel {
             Kernel::Copy | Kernel::Add => p.c,
             Kernel::Scale => p.b,
             Kernel::Triad => p.a,
         };
-        read_i32s(core, out, p.n)
+        read_i32s(arch, out, p.n)
     }
 }
 

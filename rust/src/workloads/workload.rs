@@ -25,9 +25,11 @@
 //! sequence in one call via [`run_on`].
 
 use super::common::{self, Throughput};
+use crate::arch::ArchState;
 use crate::asm::Program;
 use crate::core::{Core, CoreCounters, SimError};
 use crate::mem::MemStats;
+use crate::ref_iss::RefIss;
 
 /// Which implementation of a workload to run.
 ///
@@ -175,14 +177,17 @@ pub trait Workload {
     /// bytes for sort/prefix/filter). Drives `Throughput`.
     fn bytes_moved(&self, sc: &Scenario) -> u64;
 
-    /// Check the architectural results of the last run (the caller has
-    /// already flushed the caches).
-    fn verify(&self, core: &Core) -> Result<(), VerifyError>;
+    /// Check the architectural results of the last run on any backend
+    /// (for a cached `Core` the caller has already flushed the caches;
+    /// the reference ISS is always current). Verification is written
+    /// against [`ArchState`] so the timed core and the reference ISS
+    /// share one oracle — the differential suites depend on this.
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError>;
 
-    /// Canonical result data of the last run, for cross-variant
-    /// agreement checks (scalar and vector implementations of one
-    /// workload must produce identical data).
-    fn result_data(&self, core: &Core) -> Vec<i32>;
+    /// Canonical result data of the last run, for cross-variant and
+    /// cross-backend agreement checks (scalar and vector
+    /// implementations of one workload must produce identical data).
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32>;
 }
 
 /// Uniform result of running one scenario (what `Machine::run` returns).
@@ -236,7 +241,7 @@ pub fn run_on(
     let run = core.run(common::MAX_INSTRS)?;
     let throughput = Throughput::from_run(core, &run, w.bytes_moved(&sc));
     core.mem.flush_all();
-    let verify = w.verify(core);
+    let verify = w.verify(&*core);
     Ok(WorkloadReport {
         workload: w.name().to_string(),
         variant: sc.variant,
@@ -247,6 +252,43 @@ pub fn run_on(
         verify_error: verify.err().map(|e| e.to_string()),
         mem: core.mem.stats(),
         counters: run.counters,
+    })
+}
+
+/// Run `w` on the architectural-only reference ISS: build → load →
+/// init → run → verify, mirroring [`run_on`]. The ISS has no cycle
+/// counter, so the report's `cycles` equals `instret` (nominal CPI 1 —
+/// a *functional* backend; use the timed core for performance numbers)
+/// and the memory/stall counters are zero.
+pub fn run_on_iss(
+    w: &mut dyn Workload,
+    iss: &mut RefIss,
+    sc: &Scenario,
+) -> Result<WorkloadReport, SimError> {
+    let sc = Scenario { vlen_bits: iss.vlen_bits(), ..*sc };
+    let prog = w.build(&sc);
+    iss.load(&prog);
+    for (addr, bytes) in w.init_image() {
+        iss.host_write(*addr, bytes);
+    }
+    let run = iss.run(common::MAX_INSTRS)?;
+    let throughput = Throughput {
+        cycles: run.instret,
+        instret: run.instret,
+        bytes: w.bytes_moved(&sc),
+        fmax_mhz: iss.fmax_mhz,
+    };
+    let verify = w.verify(&*iss);
+    Ok(WorkloadReport {
+        workload: w.name().to_string(),
+        variant: sc.variant,
+        size: sc.size,
+        elems: w.elems(&sc),
+        throughput,
+        verified: Some(verify.is_ok()),
+        verify_error: verify.err().map(|e| e.to_string()),
+        mem: MemStats::default(),
+        counters: CoreCounters::default(),
     })
 }
 

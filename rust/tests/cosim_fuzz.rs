@@ -1,0 +1,134 @@
+//! Differential-verification suite: the timed core vs the independent
+//! reference ISS, in lockstep, over both hand-written programs and the
+//! riscv-dv-style random program generator.
+//!
+//! This is the tier-1 slice of the fuzz campaign (a few dozen seeds so
+//! `cargo test` stays fast); CI additionally runs the 500-seed
+//! `fuzz-smoke` job and the acceptance target is
+//! `simdsoftcore fuzz --seeds 2000`.
+
+use simdsoftcore::arch::ArchState;
+use simdsoftcore::coordinator::sweep::MachinePoint;
+use simdsoftcore::cosim::{run_lockstep, LockstepOutcome};
+use simdsoftcore::fuzz::{self, FuzzConfig, OpWeights};
+use simdsoftcore::machine::{Backend, Machine};
+use simdsoftcore::ref_iss::RefIss;
+use simdsoftcore::workloads::{lookup, Scenario, Variant};
+
+/// Every workload program (at smoke size) retires identically on the
+/// timed core and the ISS when run in lockstep — a denser check than
+/// end-state comparison because it pins each intermediate register
+/// state too.
+#[test]
+fn workload_programs_agree_in_lockstep() {
+    for (name, variant) in [
+        ("memcpy", Variant::Vector),
+        ("memcpy", Variant::Scalar),
+        ("sort", Variant::Vector),
+        ("prefix", Variant::Vector),
+        ("filter", Variant::Vector),
+        ("dhrystone", Variant::Scalar),
+    ] {
+        let mut w = lookup(name).expect("registered workload");
+        let sc = Scenario::new(variant, w.smoke_size());
+        let machine = Machine::paper_default().dram_bytes(64 * 1024 * 1024);
+        let mut core = machine.build();
+        let mut iss = machine.build_iss();
+        let prog = w.build(&Scenario { vlen_bits: 256, ..sc });
+        core.load(&prog);
+        iss.load(&prog);
+        for (addr, bytes) in w.init_image() {
+            core.mem.host_write(*addr, bytes);
+            iss.host_write(*addr, bytes);
+        }
+        let r = run_lockstep(&mut core, &mut iss, 50_000_000)
+            .unwrap_or_else(|d| panic!("{name} {variant} diverged:\n{d}"));
+        assert_eq!(r.outcome, LockstepOutcome::Halted, "{name} {variant}");
+        assert!(w.verify(&iss).is_ok(), "{name} {variant}: ISS-side verify");
+        assert!(w.verify(&core).is_ok(), "{name} {variant}: core-side verify");
+    }
+}
+
+/// The tier-1 fuzz slice: 24 seeds x (default + stressed memory) across
+/// the rotating balanced/scalar/vector op-mix presets.
+#[test]
+fn random_programs_agree_on_default_and_stressed_machines() {
+    let cfg = FuzzConfig { seeds: 24, base_seed: 1, ops: 250, ..Default::default() };
+    assert_eq!(cfg.points.len(), 2, "default grid = paper machine + stressed memory");
+    assert_eq!(cfg.points[1], fuzz::stressed_point());
+    let summary = fuzz::run_campaign(&cfg);
+    for f in &summary.failures {
+        eprintln!(
+            "== seed {} ({}, {:?}) ==\n{}\n{}",
+            f.seed, f.weights_name, f.point, f.report, f.listing
+        );
+    }
+    assert!(summary.ok(), "{} divergences (see stderr)", summary.failures.len());
+    assert_eq!(summary.cases, 48);
+    assert_eq!(summary.faulted, 0, "generated programs must never fault");
+}
+
+/// Fuzzing across the VLEN axis (the sweep integration the coordinator
+/// exposes to the CLI): program generation adapts to the lane count and
+/// every width agrees.
+#[test]
+fn random_programs_agree_across_vlen_sweep() {
+    let points: Vec<MachinePoint> = [128usize, 512]
+        .iter()
+        .map(|&vlen| MachinePoint { vlen, ..Default::default() })
+        .collect();
+    for mp in &points {
+        mp.validate().expect("sweepable point");
+    }
+    let cfg = FuzzConfig { seeds: 6, base_seed: 77, ops: 200, points, ..Default::default() };
+    let summary = fuzz::run_campaign(&cfg);
+    assert!(summary.ok(), "{} divergences across VLEN sweep", summary.failures.len());
+    assert_eq!(summary.cases, 12);
+}
+
+/// A seeded divergence is actually caught and usefully reported: plant
+/// a wrong value in the ISS register file and check the report carries
+/// the register delta and a disassembly context window.
+#[test]
+fn planted_divergence_produces_actionable_report() {
+    let prog = fuzz::generate(3, 120, &OpWeights::scalar(), 256);
+    let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
+    let mut core = machine.build();
+    let mut iss = RefIss::new(256, core.mem.dram_size());
+    core.load(&prog);
+    iss.load(&prog);
+    // Corrupt a pool register the generator writes early and often.
+    iss.force_reg(simdsoftcore::isa::reg::A0, 0x1234_5678);
+    let d = run_lockstep(&mut core, &mut iss, 100_000).expect_err("must diverge");
+    let text = d.to_string();
+    assert!(text.contains("core=") && text.contains("iss="), "{text}");
+    assert!(text.contains("context"), "report carries a context window: {text}");
+}
+
+/// The ISS functional backend executes the entire registry with the
+/// same verify outcome and instruction count as the timed core — the
+/// `Backend::RefIss` face of the same differential invariant.
+#[test]
+fn ref_iss_backend_matches_timed_core_across_registry() {
+    for entry in simdsoftcore::workloads::registry() {
+        let probe = entry.make();
+        for &variant in probe.variants() {
+            let mut w_timed = entry.make();
+            let mut w_iss = entry.make();
+            let sc = Scenario::new(variant, probe.smoke_size());
+            let timed =
+                Machine::paper_default().run(&mut *w_timed, &sc).expect("timed run");
+            let iss = Machine::paper_default()
+                .backend(Backend::RefIss)
+                .run(&mut *w_iss, &sc)
+                .expect("iss run");
+            assert_eq!(timed.verified, Some(true), "{} {variant} timed", entry.name);
+            assert_eq!(iss.verified, Some(true), "{} {variant} iss", entry.name);
+            assert_eq!(
+                timed.throughput.instret, iss.throughput.instret,
+                "{} {variant}: backends retire different instruction counts",
+                entry.name
+            );
+        }
+    }
+}

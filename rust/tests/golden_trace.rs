@@ -74,7 +74,9 @@ fn quickstart_trace_matches_golden() {
     let mut core = Core::paper_default();
     let text = traced_text(&mut core, &prog);
     assert!(text.lines().count() >= 7, "quickstart trace suspiciously short:\n{text}");
-    assert!(text.contains("c2.sort"), "SIMD instruction missing from trace:\n{text}");
+    // The architectural serialisation prints the generic I'-type form
+    // (`c2.i0` is the sort unit's funct3=0 operation).
+    assert!(text.contains("c2.i0"), "SIMD instruction missing from trace:\n{text}");
 
     // Timing-invariance: a non-blocking machine retires the identical
     // instruction sequence.

@@ -1,16 +1,23 @@
-//! Differential memory oracle: every registered workload runs twice —
-//! once through the full cache hierarchy, once through the flat
-//! "magic memory" reference model (`MemModel::Flat`) — and must produce
-//! **identical architectural results**: the same verify() outcome, the
-//! same retired-instruction count, and bit-identical final memory
-//! images. Only cycle counts may differ. This pins down the invariant
-//! that lets timing-model refactors (MSHRs, prefetching, channel
-//! counts) proceed freely: caches are a timing concern, never a
-//! correctness one.
+//! Differential memory oracle: every registered workload runs three
+//! ways — through the full cache hierarchy, through the flat
+//! "magic memory" reference model (`MemModel::Flat`), and on the
+//! independent reference ISS (`RefIss`) — and must produce **identical
+//! architectural results**: the same verify() outcome, the same
+//! retired-instruction count, and bit-identical final memory images.
+//! Only cycle counts may differ. This pins down the invariant that lets
+//! timing-model refactors (MSHRs, prefetching, channel counts) proceed
+//! freely: caches are a timing concern, never a correctness one — and
+//! since the ISS column shares no execute logic with the core, a
+//! decode/execute bug can no longer hide on both sides of the
+//! comparison.
 
+use simdsoftcore::arch::ArchState;
 use simdsoftcore::core::Core;
 use simdsoftcore::machine::{dram_needed, Machine};
-use simdsoftcore::workloads::{lookup, registry, run_on, Scenario, Variant, WorkloadReport};
+use simdsoftcore::ref_iss::RefIss;
+use simdsoftcore::workloads::{
+    lookup, registry, run_on, run_on_iss, Scenario, Variant, WorkloadReport,
+};
 
 /// Run `name`/`variant` at its smoke size on a machine derived from
 /// `configure(Machine::paper_default())`, returning the report and the
@@ -54,6 +61,19 @@ fn assert_matches_oracle(name: &str, variant: Variant, configure: fn(Machine) ->
     );
 }
 
+/// Like `run_model`, but on the reference ISS backend (the third
+/// column of the differential matrix).
+fn run_iss(name: &str, variant: Variant) -> (WorkloadReport, RefIss) {
+    let mut w = lookup(name).expect("registered workload");
+    let sc = Scenario::new(variant, w.smoke_size());
+    let (buffers, bytes_each) = w.buffers(&sc);
+    let dram = dram_needed(buffers, bytes_each).max(64 * 1024 * 1024);
+    let mut iss = Machine::paper_default().dram_bytes(dram).build_iss();
+    let report = run_on_iss(&mut *w, &mut iss, &sc)
+        .unwrap_or_else(|e| panic!("{name} {variant} failed on the ISS: {e}"));
+    (report, iss)
+}
+
 /// Every (workload, variant) in the registry against the oracle, on the
 /// paper-default (blocking) hierarchy.
 #[test]
@@ -62,6 +82,36 @@ fn every_workload_matches_the_magic_memory_oracle() {
         let probe = entry.make();
         for &variant in probe.variants() {
             assert_matches_oracle(entry.name, variant, |m| m);
+        }
+    }
+}
+
+/// The ISS column: for all 10 registry workloads (every variant), the
+/// independent reference ISS must reach the same verify outcome, the
+/// same instret, and a bit-identical final memory image as the timed
+/// cached core.
+#[test]
+fn every_workload_matches_the_reference_iss() {
+    for entry in registry() {
+        let probe = entry.make();
+        for &variant in probe.variants() {
+            let name = entry.name;
+            let (r_cached, cached) = run_model(name, variant, |m| m);
+            let (r_iss, iss) = run_iss(name, variant);
+
+            assert_eq!(r_cached.verified, Some(true), "{name} {variant}: cached verify");
+            assert_eq!(r_iss.verified, Some(true), "{name} {variant}: ISS verify");
+            assert_eq!(
+                r_cached.throughput.instret, r_iss.throughput.instret,
+                "{name} {variant}: instruction count differs between core and ISS"
+            );
+
+            let n = cached.mem.dram_size();
+            assert_eq!(n, iss.mem_size(), "{name} {variant}: memory sizes differ");
+            assert!(
+                cached.mem.dram_slice(0, n) == iss.mem_slice(0, n),
+                "{name} {variant}: final memory images differ between core and ISS"
+            );
         }
     }
 }
