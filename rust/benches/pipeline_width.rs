@@ -1,0 +1,64 @@
+//! Bench: simulated cycle counts vs issue width (the `pipe-sweep`
+//! curve, bench-shaped). Width 1 is the paper's single-issue pipeline;
+//! the acceptance bar is a >= 15% cycle reduction at width 2 on the
+//! dhrystone-like cpubench kernel and scalar STREAM copy, with
+//! architectural results (instret, verify) identical at every width.
+//!
+//! `cargo bench --bench pipeline_width`
+
+use simdsoftcore::machine::Machine;
+use simdsoftcore::workloads::{lookup, Scenario, Variant};
+
+fn main() {
+    let rows: [(&str, Variant, usize); 5] = [
+        ("dhrystone", Variant::Scalar, 300),
+        ("coremark", Variant::Scalar, 100),
+        ("stream-copy", Variant::Scalar, 256 * 1024),
+        ("memcpy", Variant::Vector, 4 * 1024 * 1024),
+        ("prefix", Variant::Vector, 256 * 1024),
+    ];
+
+    println!("== cycles vs issue width ==");
+    println!(
+        "{:<14} {:>8} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "workload", "variant", "w1 cycles", "w2 cycles", "w4 cycles", "w2 gain", "w4 gain"
+    );
+    let mut ok = true;
+    for (name, variant, size) in rows {
+        let sc = Scenario::new(variant, size);
+        let run = |width: usize| {
+            let mut w = lookup(name).expect("registered workload");
+            let r = Machine::paper_default()
+                .issue_width(width)
+                .run(&mut *w, &sc)
+                .expect("workload runs");
+            assert_eq!(r.verified, Some(true), "{name} width {width}");
+            r.throughput
+        };
+        let (w1, w2, w4) = (run(1), run(2), run(4));
+        assert_eq!(w1.instret, w2.instret, "{name}: instret must not depend on width");
+        assert_eq!(w1.instret, w4.instret, "{name}: instret must not depend on width");
+        let gain2 = 1.0 - w2.cycles as f64 / w1.cycles as f64;
+        let gain4 = 1.0 - w4.cycles as f64 / w1.cycles as f64;
+        println!(
+            "{:<14} {:>8} {:>12} {:>12} {:>12} {:>7.1}% {:>7.1}%",
+            name,
+            variant.name(),
+            w1.cycles,
+            w2.cycles,
+            w4.cycles,
+            gain2 * 100.0,
+            gain4 * 100.0
+        );
+        if matches!(name, "dhrystone" | "stream-copy") && gain2 < 0.15 {
+            ok = false;
+        }
+    }
+    println!();
+    if ok {
+        println!("PASS: dual issue saves >= 15% on dhrystone and stream-copy (bar: 15%)");
+    } else {
+        println!("FAIL: dual issue saved < 15% on dhrystone or stream-copy");
+        std::process::exit(1);
+    }
+}

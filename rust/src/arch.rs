@@ -20,6 +20,15 @@
 use crate::isa::{Reg, VReg};
 use crate::simd::VecVal;
 
+/// Initial stack pointer for a memory of `mem_bytes`: the top of
+/// memory, 16-byte aligned. Capped at `0xFFFF_FFF0` so a full 4 GiB
+/// memory cannot wrap `sp` to zero through the `u32` cast (the
+/// truncation bug this replaces); both execution backends use this one
+/// definition so their register files stay comparable.
+pub fn sp_init(mem_bytes: usize) -> u32 {
+    ((mem_bytes as u64).min(0xFFFF_FFF0) as u32) & !15
+}
+
 /// Read-only view of a machine's architectural state.
 ///
 /// For [`crate::core::Core`] the memory accessors reflect DRAM, so
@@ -85,6 +94,17 @@ mod tests {
     use super::*;
     use crate::core::Core;
     use crate::isa::reg::*;
+
+    #[test]
+    fn sp_init_is_top_of_memory_without_wrapping() {
+        assert_eq!(sp_init(64 * 1024 * 1024), 64 * 1024 * 1024);
+        assert_eq!(sp_init(100), 96, "16-byte aligned");
+        // The seed model computed `(size as u32) & !15`, which wraps a
+        // 4 GiB memory to sp = 0; the cap keeps sp at the address-space
+        // top instead.
+        assert_eq!(sp_init(1 << 32), 0xFFFF_FFF0);
+        assert_eq!(sp_init(usize::MAX), 0xFFFF_FFF0);
+    }
 
     #[test]
     fn core_exposes_arch_state() {

@@ -4,9 +4,10 @@
 //! PJRT-backed units; the *inputs* to a sweep are plain data).
 //!
 //! [`MachinePoint`] is the registry of machine-configuration sweep axes
-//! (`vlen`, `llc-block`, `mshrs`, `prefetch`, `channels`): every surface
-//! that sweeps configurations — the `run-workload` CLI grid and the
-//! `mem-sweep` experiment — goes through it, so adding an axis here
+//! (`vlen`, `llc-block`, `mshrs`, `prefetch`, `channels`,
+//! `issue-width`): every surface that sweeps configurations — the
+//! `run-workload` CLI grid, the `mem-sweep`/`pipe-sweep` experiments
+//! and the fuzz campaign grid — goes through it, so adding an axis here
 //! makes it sweepable everywhere at once.
 
 use crate::machine::Machine;
@@ -26,18 +27,28 @@ pub struct MachinePoint {
     pub prefetch: usize,
     /// Independent DRAM channels.
     pub channels: usize,
+    /// In-order issue width of the core pipeline (1 = the paper's
+    /// single-issue model; 2/4 = the superscalar issue-group model).
+    pub issue_width: usize,
 }
 
 impl Default for MachinePoint {
     fn default() -> Self {
-        Self { vlen: 256, llc_block: 16384, mshrs: 1, prefetch: 0, channels: 1 }
+        Self { vlen: 256, llc_block: 16384, mshrs: 1, prefetch: 0, channels: 1, issue_width: 1 }
     }
 }
 
 impl MachinePoint {
     /// The machine-configuration axis names accepted by `--sweep`.
     pub const AXES: &'static [&'static str] =
-        &["vlen", "llc-block", "mshrs", "prefetch", "channels"];
+        &["vlen", "llc-block", "mshrs", "prefetch", "channels", "issue-width"];
+
+    /// Whether `axis` names a machine axis, including the underscore
+    /// spellings (`llc_block`, `issue_width`) the `--sweep` parser also
+    /// accepts.
+    pub fn is_axis(axis: &str) -> bool {
+        Self::AXES.contains(&axis) || axis == "llc_block" || axis == "issue_width"
+    }
 
     /// Set one axis by CLI name; `false` for an unknown axis.
     pub fn set(&mut self, axis: &str, value: usize) -> bool {
@@ -47,6 +58,7 @@ impl MachinePoint {
             "mshrs" => self.mshrs = value,
             "prefetch" => self.prefetch = value,
             "channels" => self.channels = value,
+            "issue-width" | "issue_width" => self.issue_width = value,
             _ => return false,
         }
         true
@@ -59,6 +71,7 @@ impl MachinePoint {
             .mshrs(self.mshrs)
             .prefetch_depth(self.prefetch)
             .dram_channels(self.channels)
+            .issue_width(self.issue_width)
     }
 
     /// Reject values the simulator cannot represent, before any sweep
@@ -89,6 +102,9 @@ impl MachinePoint {
         }
         if self.channels == 0 || self.channels > 16 {
             return Err(format!("channels {} must be in 1..=16", self.channels));
+        }
+        if ![1, 2, 4].contains(&self.issue_width) {
+            return Err(format!("issue-width {} must be 1, 2 or 4", self.issue_width));
         }
         self.machine()
             .validate()
@@ -202,10 +218,16 @@ mod tests {
     fn machine_point_axes_round_trip() {
         let mut p = MachinePoint::default();
         assert!(p.validate().is_ok(), "default point is the paper machine");
-        for (axis, v) in
-            [("vlen", 512), ("llc-block", 4096), ("mshrs", 4), ("prefetch", 2), ("channels", 2)]
-        {
+        for (axis, v) in [
+            ("vlen", 512),
+            ("llc-block", 4096),
+            ("mshrs", 4),
+            ("prefetch", 2),
+            ("channels", 2),
+            ("issue-width", 2),
+        ] {
             assert!(MachinePoint::AXES.contains(&axis));
+            assert!(MachinePoint::is_axis(axis));
             assert!(p.set(axis, v), "axis {axis} must be known");
         }
         assert!(p.validate().is_ok());
@@ -215,7 +237,13 @@ mod tests {
         assert_eq!(m.mem_config().dl1_mshrs, 4);
         assert_eq!(m.mem_config().prefetch_depth, 2);
         assert_eq!(m.mem_config().dram.channels, 2);
+        assert_eq!(m.core_config().issue_width, 2);
         assert!(!p.set("no-such-axis", 1));
+        assert!(!MachinePoint::is_axis("no-such-axis"));
+        // Underscore spellings work everywhere the dash forms do.
+        assert!(MachinePoint::is_axis("issue_width") && MachinePoint::is_axis("llc_block"));
+        assert!(p.set("issue_width", 4));
+        assert_eq!(p.issue_width, 4);
     }
 
     #[test]
@@ -228,6 +256,10 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = MachinePoint { channels: 0, ..Default::default() };
         assert!(bad.validate().is_err());
+        for issue_width in [0, 3, 8] {
+            let bad = MachinePoint { issue_width, ..Default::default() };
+            assert!(bad.validate().is_err(), "issue-width {issue_width} must be rejected");
+        }
     }
 
     #[test]

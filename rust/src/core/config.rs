@@ -25,6 +25,15 @@ pub struct CoreConfig {
     /// PicoRV32 baseline model reuses the core with ~4 (its documented
     /// CPI ballpark) and no caches.
     pub base_cpi: u64,
+    /// In-order issue width: how many instructions may enter the
+    /// pipeline per cycle. `1` (the default, also how `0` behaves) is
+    /// the paper's single-issue model, reproduced cycle for cycle.
+    /// `2`/`4` enable the superscalar issue-group model (DESIGN.md §5):
+    /// same-cycle instructions must be independent (scoreboard), share
+    /// the single data port and each SIMD unit's one-issue-per-cycle
+    /// slot, `div`/`rem` issue alone, and a taken branch or jump ends
+    /// its issue group.
+    pub issue_width: usize,
 }
 
 impl CoreConfig {
@@ -44,6 +53,7 @@ impl CoreConfig {
             mul_cycles: 1,
             branch_taken_penalty: 0,
             base_cpi: 1,
+            issue_width: 1,
         }
     }
 
@@ -73,6 +83,7 @@ mod tests {
         assert_eq!(c.lanes(), 8);
         assert_eq!(c.vlen_bytes(), 32);
         assert_eq!(c.load_use_cycles, 3);
+        assert_eq!(c.issue_width, 1, "the paper machine is single-issue");
     }
 
     #[test]

@@ -15,7 +15,15 @@
 //!   effect Fig. 6 visualises;
 //! - dependency tracking is by per-register ready times (scoreboard), the
 //!   simulator equivalent of the template's delayed destination-name
-//!   shift register.
+//!   shift register;
+//! - `issue_width > 1` (DESIGN.md §5 "Pipeline model") opens an in-order
+//!   superscalar issue group per cycle: up to `issue_width` independent
+//!   instructions issue together, subject to the scoreboard, one
+//!   data-port access per cycle, one issue per SIMD unit per cycle,
+//!   div/rem issuing alone and a taken branch/jump ending its group.
+//!   Scalar stores consume their data operand at commit (store-buffer
+//!   model), not at issue. `issue_width = 1` bypasses all of this and
+//!   reproduces the original timestamp model cycle for cycle.
 
 use super::config::CoreConfig;
 use super::trace::{Trace, TraceEvent};
@@ -29,6 +37,12 @@ use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecV
 pub enum SimError {
     Illegal { pc: u32, source: DecodeError },
     MemFault { pc: u32, addr: u32, len: usize, size: usize },
+    /// Instruction fetch outside DRAM (a wild `jalr`/branch target).
+    FetchFault { pc: u32, size: usize },
+    /// Instruction fetch from a non-word-aligned pc (reachable through
+    /// `jalr`, which clears only bit 0, and through branch offsets that
+    /// are multiples of 2 but not 4).
+    FetchMisaligned { pc: u32 },
     Unit { pc: u32, source: UnitError },
     Watchdog(u64),
     Break(u32),
@@ -44,6 +58,12 @@ impl std::fmt::Display for SimError {
                 f,
                 "memory fault at pc {pc:#010x}: access {addr:#010x}+{len} outside DRAM ({size:#x} bytes)"
             ),
+            SimError::FetchFault { pc, size } => {
+                write!(f, "fetch fault: pc {pc:#010x} outside DRAM ({size:#x} bytes)")
+            }
+            SimError::FetchMisaligned { pc } => {
+                write!(f, "misaligned fetch: pc {pc:#010x} is not word-aligned")
+            }
             SimError::Unit { pc, source } => {
                 write!(f, "custom instruction fault at pc {pc:#010x}: {source}")
             }
@@ -78,7 +98,13 @@ pub struct CoreCounters {
     pub div: u64,
     pub custom: [u64; 4],
     /// Cycles lost waiting on source operands (RAW hazards).
+    /// Write-ordering waits are NOT booked here — they are
+    /// `waw_stall_cycles` (the seed model lumped both together,
+    /// inflating the RAW-hazard count on vector code).
     pub raw_stall_cycles: u64,
+    /// Cycles a custom instruction waited for a prior writer of its
+    /// destination vreg (in-order writeback, WAW hazard).
+    pub waw_stall_cycles: u64,
     /// Cycles lost waiting on instruction fetch (IL1 misses).
     pub fetch_stall_cycles: u64,
     /// Cycles lost on the data port's structural hazard (an operation
@@ -91,6 +117,14 @@ pub struct CoreCounters {
     /// where the wait shows up as MSHR/queue statistics and RAW stalls
     /// instead).
     pub mem_bw_stall_cycles: u64,
+    /// Instructions that issued in the same cycle as at least one
+    /// earlier instruction (always 0 at `issue_width = 1`). At width 2
+    /// this equals the number of dual-issued cycles.
+    pub dual_issue_pairs: u64,
+    /// Unused issue slots in cycles where at least one instruction
+    /// issued (always 0 at `issue_width = 1`; cycles where *nothing*
+    /// issued are covered by the stall counters instead).
+    pub issue_slots_wasted: u64,
 }
 
 impl CoreCounters {
@@ -148,6 +182,13 @@ pub struct Core {
     /// IL1 hits skipped via the line buffer (credited to IL1 stats at
     /// the end of run()).
     fast_fetches: u64,
+    /// Superscalar issue-group bookkeeping (`issue_width > 1` only):
+    /// instructions already issued at cycle `self.cycle`.
+    issue_used: u64,
+    /// Last cycle each SIMD unit slot accepted an instruction — each
+    /// unit is fully pipelined but single-issue (initiation interval 1),
+    /// so two custom instructions on one slot cannot share a cycle.
+    unit_issue_cycle: [u64; 4],
 
     counters: CoreCounters,
 }
@@ -193,6 +234,8 @@ impl Core {
             fetch_block_base: u32::MAX,
             fetch_block_mask: !(mem_block_bytes as u32 - 1),
             fast_fetches: 0,
+            issue_used: 0,
+            unit_issue_cycle: [u64::MAX; 4],
             counters: CoreCounters::default(),
         })
     }
@@ -208,12 +251,13 @@ impl Core {
     }
 
     /// Load a program and reset architectural state. The stack pointer is
-    /// initialised to the top of DRAM (16-byte aligned).
+    /// initialised to the top of DRAM (16-byte aligned, capped at the
+    /// 32-bit address-space limit — see [`crate::arch::sp_init`]).
     pub fn load(&mut self, prog: &Program) {
         self.mem.load_program(prog);
         self.regs = [0; 32];
         self.vregs = [VecVal::zero(self.cfg.lanes()); 8];
-        self.regs[2] = (self.mem.dram_size() as u32) & !15; // sp
+        self.regs[2] = crate::arch::sp_init(self.mem.dram_size());
         self.pc = prog.entry;
         self.cycle = 0;
         self.instret = 0;
@@ -225,6 +269,8 @@ impl Core {
         self.decoded = vec![None; prog.text.len()];
         self.fetch_block_base = u32::MAX;
         self.fast_fetches = 0;
+        self.issue_used = 0;
+        self.unit_issue_cycle = [u64::MAX; 4];
         self.pool.reset_all();
     }
 
@@ -364,6 +410,19 @@ impl Core {
     pub fn step(&mut self) -> Result<(), SimError> {
         debug_assert!(!self.halted, "step() after halt");
         let pc = self.pc;
+        // Misaligned fetch faults before any array/cache indexing: a
+        // wild `jalr` (bit 0 cleared, bit 1 live) or a branch offset of
+        // 4k+2 must report, not truncate into the decode cache or read
+        // across an IL1 block boundary.
+        if pc % 4 != 0 {
+            return Err(SimError::FetchMisaligned { pc });
+        }
+        let width = self.cfg.issue_width as u64;
+        if width > 1 && self.issue_used >= width {
+            // The open issue group is full: start the next cycle.
+            self.cycle += self.cfg.base_cpi;
+            self.issue_used = 0;
+        }
         // Fast path: same IL1 block as the previous fetch and already
         // decoded — an IL1 hit is timing-neutral, so skip the model.
         let idx = pc.wrapping_sub(self.text_base) as usize / 4;
@@ -373,10 +432,17 @@ impl Core {
                 *i
             }
             _ => {
-                self.check_mem(pc, 4)?;
+                if (pc as usize).checked_add(4).is_none_or(|end| end > self.mem.dram_size()) {
+                    return Err(SimError::FetchFault { pc, size: self.mem.dram_size() });
+                }
                 let (word, fetch_ready) = self.mem.fetch(pc, self.cycle);
                 if fetch_ready > self.cycle {
                     self.counters.fetch_stall_cycles += fetch_ready - self.cycle;
+                    if width > 1 && self.issue_used > 0 {
+                        // The IL1 miss closes the open issue group.
+                        self.counters.issue_slots_wasted += width - self.issue_used;
+                        self.issue_used = 0;
+                    }
                     self.cycle = fetch_ready;
                 }
                 self.fetch_block_base = pc & self.fetch_block_mask;
@@ -384,10 +450,30 @@ impl Core {
             }
         };
 
+        // Serialising classes issue alone: the iterative divider (and a
+        // multi-cycle multiplier, if configured) blocks the pipeline.
+        use Instr::*;
+        let serial = width > 1
+            && match instr {
+                Div { .. } | Divu { .. } | Rem { .. } | Remu { .. } => true,
+                Mul { .. } | Mulh { .. } | Mulhsu { .. } | Mulhu { .. } => self.cfg.mul_cycles > 1,
+                _ => false,
+            };
+        if serial && self.issue_used > 0 {
+            self.counters.issue_slots_wasted += width - self.issue_used;
+            self.cycle += self.cfg.base_cpi;
+            self.issue_used = 0;
+        }
+
+        let group_cycle = self.cycle; // the issue group this instruction tries to join
         let mut t = self.cycle; // issue time after operand stalls
         let mut next_pc = pc.wrapping_add(4);
+        // Control-flow redirect (taken branch or jump). Tracked
+        // explicitly rather than by comparing next_pc to pc + 4: a jump
+        // *targeting* pc + 4 still redirects fetch and must end its
+        // issue group at width > 1.
+        let mut redirect = false;
         let mut end = t + 1; // completion time for the trace
-        use Instr::*;
         match instr {
             Lui { rd, imm } => {
                 self.counters.alu += 1;
@@ -401,6 +487,7 @@ impl Core {
                 self.counters.jumps += 1;
                 self.write_reg(rd, pc.wrapping_add(4), t + 1);
                 next_pc = pc.wrapping_add(offset as u32);
+                redirect = true;
                 t += self.cfg.branch_taken_penalty;
             }
             Jalr { rd, rs1, offset } => {
@@ -408,6 +495,7 @@ impl Core {
                 let base = self.read_reg_stalling(rs1, &mut t);
                 self.write_reg(rd, pc.wrapping_add(4), t + 1);
                 next_pc = base.wrapping_add(offset as u32) & !1;
+                redirect = true;
                 t += self.cfg.branch_taken_penalty;
             }
             Beq { rs1, rs2, offset }
@@ -431,6 +519,7 @@ impl Core {
                 if take {
                     self.counters.taken_branches += 1;
                     next_pc = pc.wrapping_add(offset as u32);
+                    redirect = true;
                     t += self.cfg.branch_taken_penalty;
                 }
             }
@@ -467,7 +556,15 @@ impl Core {
             Sb { rs1, rs2, offset } | Sh { rs1, rs2, offset } | Sw { rs1, rs2, offset } => {
                 self.counters.stores += 1;
                 let base = self.read_reg_stalling(rs1, &mut t);
-                let val = self.read_reg_stalling(rs2, &mut t);
+                // Superscalar widths model a store buffer: the data
+                // operand is consumed at commit, not at issue, so the
+                // store does not stall on a still-in-flight value. The
+                // width-1 model reads it at issue, as the seed did.
+                let val = if width > 1 {
+                    self.regs[rs2.num() as usize]
+                } else {
+                    self.read_reg_stalling(rs2, &mut t)
+                };
                 let addr = base.wrapping_add(offset as u32);
                 let len = match instr {
                     Sb { .. } => 1,
@@ -680,8 +777,43 @@ impl Core {
         }
 
         self.pc = next_pc;
-        self.cycle = t + self.cfg.base_cpi;
         self.instret += 1;
+        if width <= 1 {
+            // The original single-issue timestamp model, untouched.
+            self.cycle = t + self.cfg.base_cpi;
+        } else if serial {
+            // Issued alone; the divider occupied the pipeline through
+            // `t`, and nothing shares its issue cycle.
+            self.counters.issue_slots_wasted += width - 1;
+            self.cycle = t + self.cfg.base_cpi;
+            self.issue_used = 0;
+        } else {
+            if t == group_cycle {
+                // No stall: the instruction joined the open group.
+                self.issue_used += 1;
+                if self.issue_used > 1 {
+                    self.counters.dual_issue_pairs += 1;
+                }
+            } else {
+                // Stalled past the open group (scoreboard, data port or
+                // unit slot): close it and open a new group at the
+                // actual issue cycle.
+                if self.issue_used > 0 {
+                    self.counters.issue_slots_wasted += width - self.issue_used;
+                }
+                self.cycle = t;
+                self.issue_used = 1;
+            }
+            if redirect || self.halted {
+                // A taken branch/jump ends its issue group (the
+                // redirected fetch arrives next cycle); the halting
+                // ecall closes and charges the final group so run()
+                // reports consumed cycles in the width-1 convention.
+                self.counters.issue_slots_wasted += width - self.issue_used;
+                self.cycle = t + self.cfg.base_cpi;
+                self.issue_used = 0;
+            }
+        }
         Ok(())
     }
 
@@ -709,13 +841,25 @@ impl Core {
         let rs2_v = rs2.map(|r| self.read_reg_stalling(r, t)).unwrap_or(0);
         let vrs1_v = self.read_vreg_stalling(vrs1, t);
         let vrs2_v = self.read_vreg_stalling(vrs2, t);
-        // WAW: results write in order; wait until prior writers are done.
+        // WAW: results write in order; wait until prior writers are
+        // done. Booked as waw_stall_cycles — the seed misbooked these
+        // waits as RAW-hazard stalls.
         for reg in [vrd1, vrd2] {
             let n = reg.num() as usize;
             if n != 0 && self.vreg_ready[n] > *t {
-                self.counters.raw_stall_cycles += self.vreg_ready[n] - *t;
+                self.counters.waw_stall_cycles += self.vreg_ready[n] - *t;
                 *t = self.vreg_ready[n];
             }
+        }
+        // Structural rule at issue_width > 1: a unit is fully pipelined
+        // but accepts one instruction per cycle, so a second custom op
+        // on the same slot waits a cycle. (At width 1 consecutive issue
+        // times are strictly increasing, so this never fires.)
+        if self.cfg.issue_width > 1 {
+            if self.unit_issue_cycle[slot] == *t {
+                *t += 1;
+            }
+            self.unit_issue_cycle[slot] = *t;
         }
 
         let inputs = UnitInputs { funct3, rs1: rs1_v, rs2: rs2_v, imm, vrs1: vrs1_v, vrs2: vrs2_v };
@@ -998,6 +1142,31 @@ mod tests {
     }
 
     #[test]
+    fn waw_waits_are_not_booked_as_raw_stalls() {
+        // Two sorts writing the same destination vreg: the second waits
+        // for the first's writeback (WAW), which must land in
+        // waw_stall_cycles, not inflate the RAW-hazard counter (the
+        // seed lumped them together).
+        let mut a = Asm::new();
+        let d = a.words("d", &[8, 7, 6, 5, 4, 3, 2, 1]);
+        a.la(A0, d);
+        a.lv(V1, A0, ZERO);
+        a.sort8(V2, V1);
+        a.sort8(V2, V1);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        c.run(100).unwrap();
+        assert_eq!(c.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(
+            c.counters().waw_stall_cycles > 0,
+            "second sort must wait on the first's V2 writeback: {:?}",
+            c.counters()
+        );
+    }
+
+    #[test]
     fn custom_sort_is_pipelined() {
         // Two independent sorts issue back-to-back; their latencies
         // overlap (Fig. 6's pipelining effect). Total runtime must be well
@@ -1136,6 +1305,157 @@ mod tests {
         let mut c = Core::paper_default();
         c.load(&p);
         assert!(matches!(c.run(10), Err(SimError::MemFault { .. })));
+    }
+
+    #[test]
+    fn wild_jalr_outside_dram_is_a_fetch_fault() {
+        // Used to index past the decode cache / read DRAM-relative; a
+        // wild jump must be a reported fault, not a panic.
+        let mut a = Asm::new();
+        a.li(A0, 0xF000_0000u32 as i64);
+        a.jalr(RA, A0, 0);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        match c.run(10) {
+            Err(SimError::FetchFault { pc, .. }) => assert_eq!(pc, 0xF000_0000),
+            other => panic!("expected FetchFault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn misaligned_jalr_target_is_a_misaligned_fetch_fault() {
+        // pc + 2 crosses into the middle of an instruction; the seed
+        // model truncated the decode-cache index (or tripped the L1's
+        // block-crossing assertion at a block edge) instead of
+        // faulting.
+        let mut a = Asm::new();
+        a.auipc(A0, 0);
+        a.jalr(RA, A0, 6); // target = auipc pc + 6 -> pc % 4 == 2
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        match c.run(10) {
+            Err(SimError::FetchMisaligned { pc }) => assert_eq!(pc % 4, 2),
+            other => panic!("expected FetchMisaligned, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn misaligned_branch_target_is_a_misaligned_fetch_fault() {
+        // A branch offset of 4k+2 encodes fine (offsets are multiples
+        // of 2) but lands between instructions; taking it must fault.
+        use crate::isa::{encode, Instr};
+        let mut a = Asm::new();
+        a.nop();
+        a.halt();
+        let mut p = a.assemble().unwrap();
+        // Overwrite the nop with `beq zero, zero, +6` (raw encoding; the
+        // assembler's label API only produces aligned targets).
+        p.text[0] = encode(&Instr::Beq { rs1: ZERO, rs2: ZERO, offset: 6 }).unwrap();
+        let mut c = Core::paper_default();
+        c.load(&p);
+        assert!(matches!(c.run(10), Err(SimError::FetchMisaligned { .. })));
+    }
+
+    #[test]
+    fn dual_issue_pairs_independent_alu_ops() {
+        // 400 pairs of independent addis: width 2 retires two per
+        // cycle on the hit path (cold-fill and IL1-boundary stalls are
+        // identical for both widths, so the bound is kept loose).
+        let mut a = Asm::new();
+        for _ in 0..400 {
+            a.addi(A0, A0, 1);
+            a.addi(A1, A1, 1);
+        }
+        a.halt();
+        let p = a.assemble().unwrap();
+        let run_width = |width: usize| {
+            let mut cfg = CoreConfig::paper_default();
+            cfg.issue_width = width;
+            let mut c = Core::new(cfg, MemConfig::paper_default());
+            c.load(&p);
+            c.run(10_000).unwrap();
+            c
+        };
+        let single = run_width(1);
+        let dual = run_width(2);
+        assert_eq!(single.reg(A0), 400);
+        assert_eq!(dual.reg(A0), 400);
+        assert_eq!(dual.reg(A1), single.reg(A1), "architectural state is width-independent");
+        assert!(
+            dual.cycle() * 4 < single.cycle() * 3,
+            "independent ALU pairs must dual-issue ({} vs {})",
+            dual.cycle(),
+            single.cycle()
+        );
+        assert!(dual.counters().dual_issue_pairs >= 350, "{:?}", dual.counters());
+        assert_eq!(single.counters().dual_issue_pairs, 0);
+        assert_eq!(single.counters().issue_slots_wasted, 0);
+    }
+
+    #[test]
+    fn dual_issue_serialises_dependent_chains() {
+        // 100 dependent addis cannot pair: width 2 keeps CPI >= 1 on
+        // the chain and wastes a slot per single-instruction group.
+        let mut a = Asm::new();
+        for _ in 0..100 {
+            a.addi(A0, A0, 1);
+        }
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut cfg = CoreConfig::paper_default();
+        cfg.issue_width = 2;
+        let mut dual = Core::new(cfg, MemConfig::paper_default());
+        dual.load(&p);
+        dual.run(10_000).unwrap();
+        let mut single = Core::paper_default();
+        single.load(&p);
+        single.run(10_000).unwrap();
+        assert_eq!(dual.reg(A0), 100);
+        assert_eq!(dual.counters().dual_issue_pairs, 0, "a RAW chain never pairs");
+        assert!(dual.cycle() >= 100, "the chain keeps CPI >= 1 at any width");
+        assert!(dual.cycle() <= single.cycle(), "width 2 must not be slower");
+        assert!(dual.counters().issue_slots_wasted >= 100);
+    }
+
+    #[test]
+    fn dual_issue_div_issues_alone_and_taken_branch_ends_group() {
+        let mut a = Asm::new();
+        a.li(A0, 100);
+        a.li(A1, 7);
+        a.divu(A2, A0, A1);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut cfg = CoreConfig::paper_default();
+        cfg.issue_width = 4;
+        let mut c = Core::new(cfg, MemConfig::paper_default());
+        c.load(&p);
+        c.run(100).unwrap();
+        assert_eq!(c.reg(A2), 14);
+        // The div issued alone: its cycle wasted width-1 = 3 slots.
+        assert!(c.counters().issue_slots_wasted >= 3, "{:?}", c.counters());
+
+        // A taken-branch loop at width 2 still makes forward progress
+        // and matches the architectural result of width 1.
+        let mut a = Asm::new();
+        let l = a.new_label("loop");
+        a.li(A0, 10);
+        a.li(A1, 0);
+        a.bind(l);
+        a.add(A1, A1, A0);
+        a.addi(A0, A0, -1);
+        a.bnez(A0, l);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut cfg = CoreConfig::paper_default();
+        cfg.issue_width = 2;
+        let mut c = Core::new(cfg, MemConfig::paper_default());
+        c.load(&p);
+        c.run(1000).unwrap();
+        assert_eq!(c.reg(A1), 55);
     }
 
     #[test]

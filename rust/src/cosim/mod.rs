@@ -92,10 +92,20 @@ fn error_key(e: &SimError) -> String {
         SimError::MemFault { pc, addr, len, .. } => {
             format!("memfault@{pc:#010x}:{addr:#010x}+{len}")
         }
+        SimError::FetchFault { pc, .. } => format!("fetchfault@{pc:#010x}"),
+        SimError::FetchMisaligned { pc } => format!("fetchmisaligned@{pc:#010x}"),
         SimError::Unit { pc, source } => format!("unit@{pc:#010x}:{source}"),
         SimError::Watchdog(n) => format!("watchdog:{n}"),
         SimError::Break(pc) => format!("ebreak@{pc:#010x}"),
     }
+}
+
+/// Whether a [`LockstepOutcome::Faulted`] key names an instruction-fetch
+/// fault (wild or misaligned jump target). Kept next to [`error_key`]
+/// so the two stay in sync — the fuzz campaign uses this to sanction
+/// wild-jump cases instead of matching key prefixes by hand.
+pub fn is_fetch_fault_key(key: &str) -> bool {
+    key.starts_with("fetchfault@") || key.starts_with("fetchmisaligned@")
 }
 
 /// Compare every piece of per-step architectural state; `deltas` is left
@@ -357,6 +367,19 @@ mod tests {
         iss.host_write(0x4_0000, &[0xAB]);
         let d = run_lockstep(&mut core, &mut iss, 100).expect_err("must diverge");
         assert!(d.deltas.iter().any(|s| s.contains("memory[0x00040000]")), "{d}");
+    }
+
+    #[test]
+    fn fetch_fault_keys_are_recognised() {
+        assert!(is_fetch_fault_key(&error_key(&SimError::FetchFault { pc: 0x10, size: 4 })));
+        assert!(is_fetch_fault_key(&error_key(&SimError::FetchMisaligned { pc: 0x12 })));
+        assert!(!is_fetch_fault_key(&error_key(&SimError::Break(0x10))));
+        assert!(!is_fetch_fault_key(&error_key(&SimError::MemFault {
+            pc: 0x10,
+            addr: 0x20,
+            len: 4,
+            size: 64,
+        })));
     }
 
     #[test]

@@ -26,6 +26,14 @@
 //! this generator) and is reported as a [`FuzzFailure`] carrying the
 //! full assembly listing and the lockstep divergence report.
 //!
+//! The one sanctioned exception is the opt-in **wild-jump** op class
+//! (`OpWeights::wildjump`, 0 in every preset): it emits `jalr`s to
+//! out-of-DRAM or non-word-aligned targets, which must end the program
+//! in a fetch fault reported *identically* by both backends (the
+//! simulator used to panic instead). With the class enabled,
+//! [`run_case`] accepts an identical fetch-fault outcome as agreement;
+//! data faults and watchdogs stay failures.
+//!
 //! [`run_campaign`] crosses seeds with machine-configuration points
 //! ([`MachinePoint`] — the same axis registry every sweep surface uses,
 //! so the `fuzz` CLI can sweep VLEN/MSHRs/prefetch/channels) and runs
@@ -63,29 +71,42 @@ pub struct OpWeights {
     pub mem: u32,
     pub vec: u32,
     pub vecmem: u32,
+    /// Wild jumps (`jalr` to out-of-DRAM or misaligned targets). 0 in
+    /// every preset: a wild jump deterministically ends the program in
+    /// a fetch fault, so the class is opt-in (`--weights wildjump=N`)
+    /// and [`run_case`] then accepts identical fetch faults.
+    pub wildjump: u32,
 }
 
 impl OpWeights {
     /// Everything in proportion (the default preset).
     pub fn balanced() -> Self {
-        Self { alu: 6, branch: 2, muldiv: 1, mem: 3, vec: 2, vecmem: 2 }
+        Self { alu: 6, branch: 2, muldiv: 1, mem: 3, vec: 2, vecmem: 2, wildjump: 0 }
     }
 
     /// RV32IM only — no custom SIMD instructions at all.
     pub fn scalar() -> Self {
-        Self { alu: 6, branch: 2, muldiv: 2, mem: 4, vec: 0, vecmem: 0 }
+        Self { vec: 0, vecmem: 0, muldiv: 2, mem: 4, ..Self::balanced() }
     }
 
     /// Custom-unit heavy (I′/S′ mixes dominate).
     pub fn vector() -> Self {
-        Self { alu: 3, branch: 1, muldiv: 1, mem: 1, vec: 5, vecmem: 4 }
+        Self { alu: 3, branch: 1, muldiv: 1, mem: 1, vec: 5, vecmem: 4, wildjump: 0 }
+    }
+
+    /// The balanced mix plus wild jumps — every case ends in either the
+    /// halting `ecall` or a fetch fault both backends must report
+    /// identically.
+    pub fn wild() -> Self {
+        Self { wildjump: 2, ..Self::balanced() }
     }
 
     pub fn total(&self) -> u32 {
-        self.alu + self.branch + self.muldiv + self.mem + self.vec + self.vecmem
+        self.alu + self.branch + self.muldiv + self.mem + self.vec + self.vecmem + self.wildjump
     }
 
-    /// Parse the CLI spelling `alu=4,branch=1,muldiv=1,mem=2,vec=2,vecmem=2`
+    /// Parse the CLI spelling
+    /// `alu=4,branch=1,muldiv=1,mem=2,vec=2,vecmem=2,wildjump=0`
     /// (unnamed classes keep the balanced default's value).
     pub fn parse(spec: &str) -> Result<Self, String> {
         let mut w = Self::balanced();
@@ -104,9 +125,11 @@ impl OpWeights {
                 "mem" => w.mem = val,
                 "vec" => w.vec = val,
                 "vecmem" => w.vecmem = val,
+                "wildjump" => w.wildjump = val,
                 other => {
                     return Err(format!(
-                        "unknown op class '{other}' (classes: alu, branch, muldiv, mem, vec, vecmem)"
+                        "unknown op class '{other}' (classes: alu, branch, muldiv, mem, vec, \
+                         vecmem, wildjump)"
                     ))
                 }
             }
@@ -137,6 +160,7 @@ enum OpClass {
     Mem,
     Vec,
     VecMem,
+    WildJump,
 }
 
 fn pick_class(rng: &mut Xoshiro256, w: &OpWeights) -> OpClass {
@@ -148,6 +172,7 @@ fn pick_class(rng: &mut Xoshiro256, w: &OpWeights) -> OpClass {
         (OpClass::Mem, w.mem),
         (OpClass::Vec, w.vec),
         (OpClass::VecMem, w.vecmem),
+        (OpClass::WildJump, w.wildjump),
     ] {
         if x < wt {
             return class;
@@ -262,6 +287,37 @@ fn emit_vec(a: &mut Asm, rng: &mut Xoshiro256) {
     }
 }
 
+/// Emit a wild jump: a `jalr` whose target deterministically faults at
+/// the next fetch — either outside DRAM ([`SimError::FetchFault`]) or
+/// non-word-aligned ([`SimError::FetchMisaligned`]). Everything after
+/// it is dead code unless a forward branch skipped the jump.
+fn emit_wildjump(a: &mut Asm, rng: &mut Xoshiro256) {
+    match rng.below(4) {
+        0 => {
+            // Far beyond any fuzz DRAM (aligned): a fetch fault.
+            let target = 0xF000_0000u32 + 16 * rng.below(1024);
+            a.li(T6, target as i64);
+            a.jalr(dest(rng), T6, 0);
+        }
+        1 => {
+            // Just past the end of DRAM (aligned).
+            a.li(T6, FUZZ_DRAM_BYTES as i64);
+            a.jalr(dest(rng), T6, 0);
+        }
+        2 => {
+            // Misaligned in-text target: pc + 6 (bit 1 set).
+            a.auipc(T6, 0);
+            a.jalr(dest(rng), T6, 6);
+        }
+        _ => {
+            // Odd offset: jalr clears bit 0, leaving pc + 6 — the bit-0
+            // masking path followed by the misaligned-fetch fault.
+            a.auipc(T6, 0);
+            a.jalr(dest(rng), T6, 7);
+        }
+    }
+}
+
 fn emit_vecmem(a: &mut Asm, rng: &mut Xoshiro256, vlen_bits: usize) {
     let vb = vlen_bits / 8;
     // Any offset (aligned or not) that keeps the full vector in-window.
@@ -361,6 +417,7 @@ pub fn generate(seed: u64, ops: usize, w: &OpWeights, vlen_bits: usize) -> Progr
             OpClass::Mem => emit_mem(&mut a, &mut rng),
             OpClass::Vec => emit_vec(&mut a, &mut rng),
             OpClass::VecMem => emit_vecmem(&mut a, &mut rng, vlen_bits),
+            OpClass::WildJump => emit_wildjump(&mut a, &mut rng),
         }
     }
     for (l, _) in pending.drain(..) {
@@ -376,11 +433,12 @@ pub fn max_instrs_for(ops: usize) -> u64 {
     ops as u64 * 64 + 4096
 }
 
-/// The stressed memory configuration the acceptance run pairs with the
+/// The stressed machine configuration the acceptance run pairs with the
 /// default machine: non-blocking port (8 MSHRs), prefetch on, 2 DRAM
-/// channels.
+/// channels, dual-issue pipeline — every timing feature at once, while
+/// the architectural results must stay bit-identical to the ISS.
 pub fn stressed_point() -> MachinePoint {
-    MachinePoint { mshrs: 8, prefetch: 4, channels: 2, ..Default::default() }
+    MachinePoint { mshrs: 8, prefetch: 4, channels: 2, issue_width: 2, ..Default::default() }
 }
 
 /// Why a fuzz case failed (structural, so campaign stats never depend
@@ -485,14 +543,25 @@ pub fn run_case(
     match run_lockstep(&mut core, &mut iss, max_instrs_for(ops)) {
         Ok(r) => match r.outcome {
             LockstepOutcome::Halted => Ok(r.instret),
-            LockstepOutcome::Faulted(what) => Err(fail(
-                &prog,
-                FailureKind::Fault,
-                format!(
-                    "program faulted identically on both sides ({what}) — the generator \
-                     must never produce faulting programs"
-                ),
-            )),
+            LockstepOutcome::Faulted(what) => {
+                // With the wild-jump class enabled, an identical fetch
+                // fault IS the expected outcome: both backends refused
+                // the wild target the same way. Anything else (data
+                // faults, or any fault without the class) remains a
+                // generator invariant violation.
+                if w.wildjump > 0 && crate::cosim::is_fetch_fault_key(&what) {
+                    return Ok(r.instret);
+                }
+                Err(fail(
+                    &prog,
+                    FailureKind::Fault,
+                    format!(
+                        "program faulted identically on both sides ({what}) — the generator \
+                         must never produce faulting programs (wild-jump fetch faults are \
+                         only sanctioned when the wildjump class is enabled)"
+                    ),
+                ))
+            }
             LockstepOutcome::Watchdog(n) => Err(fail(
                 &prog,
                 FailureKind::Watchdog,
@@ -600,6 +669,8 @@ mod tests {
         assert_eq!(w.alu, 9);
         assert_eq!(w.vec, 0);
         assert_eq!(w.branch, OpWeights::balanced().branch, "unnamed classes keep defaults");
+        assert_eq!(w.wildjump, 0, "wild jumps are opt-in");
+        assert_eq!(OpWeights::parse("wildjump=3").unwrap().wildjump, 3);
         assert!(OpWeights::parse("bogus=1").is_err());
         assert!(OpWeights::parse("alu").is_err());
         assert!(OpWeights::parse("alu=x").is_err());
@@ -607,6 +678,56 @@ mod tests {
             OpWeights::parse("alu=0,branch=0,muldiv=0,mem=0,vec=0,vecmem=0").is_err(),
             "all-zero weights rejected"
         );
+    }
+
+    #[test]
+    fn presets_never_emit_wild_jumps() {
+        for seed in 0..3 {
+            let (_, w) = OpWeights::preset_for_seed(seed);
+            assert_eq!(w.wildjump, 0);
+        }
+    }
+
+    #[test]
+    fn wildjump_campaign_faults_symmetrically_without_panics() {
+        // Wild jumps used to panic the timed core (misaligned fetch
+        // across an IL1 block; unchecked text indexing). With the class
+        // enabled, every case must end in a halt or an identical fetch
+        // fault on both backends — never a divergence, data fault,
+        // watchdog or panic.
+        let cfg = FuzzConfig {
+            seeds: 16,
+            base_seed: 4000,
+            ops: 150,
+            weights: Some(OpWeights::wild()),
+            ..Default::default()
+        };
+        let summary = run_campaign(&cfg);
+        for f in &summary.failures {
+            eprintln!("seed {} on {:?}:\n{}\n{}", f.seed, f.point, f.report, f.listing);
+        }
+        assert!(summary.ok(), "{} wild-jump failures", summary.failures.len());
+        assert_eq!(summary.cases, 32, "16 seeds x (default + stressed)");
+    }
+
+    #[test]
+    fn wildjump_weight_actually_emits_wild_targets() {
+        // At weight 2 over 150 ops, the deterministic generator emits
+        // at least one wild jalr — distinguishable from the benign
+        // auipc+jalr branch pair by its offset (0/6/7 vs 8).
+        let p = generate(4001, 150, &OpWeights::wild(), 256);
+        let wilds = p
+            .text
+            .iter()
+            .filter(|&&w| {
+                matches!(
+                    decode(w),
+                    Ok(Instr::Jalr { rs1, offset, .. })
+                        if rs1 == T6 && matches!(offset, 0 | 6 | 7)
+                )
+            })
+            .count();
+        assert!(wilds > 0, "wild preset emitted no wild jalr:\n{}", p.disassemble());
     }
 
     #[test]

@@ -149,7 +149,9 @@ impl Machine {
         let (dl1_mshrs, llc_mshrs) = (self.mem.dl1_mshrs, self.mem.llc_mshrs);
         let prefetch_depth = self.mem.prefetch_depth;
         let model = self.mem.model;
+        let issue_width = self.core.issue_width;
         self.core = CoreConfig::for_vlen(vlen_bits);
+        self.core.issue_width = issue_width;
         if let Some(f) = self.fmax_override {
             self.core.fmax_mhz = f;
         }
@@ -201,6 +203,20 @@ impl Machine {
     pub fn fmax_mhz(mut self, mhz: f64) -> Self {
         self.core.fmax_mhz = mhz;
         self.fmax_override = Some(mhz);
+        self
+    }
+
+    /// In-order issue width of the core pipeline (survives later
+    /// `vlen()` calls). `1` (the default) is the paper's single-issue
+    /// model, cycle-for-cycle identical to the seed; `2`/`4` enable the
+    /// superscalar issue-group model — a timing-only change, the
+    /// architectural results are identical at every width (DESIGN.md
+    /// §5). The library accepts any width (`0` behaves as `1`, other
+    /// values model an N-wide group); the sweep surface
+    /// (`MachinePoint::validate`) restricts the design space to
+    /// {1, 2, 4}.
+    pub fn issue_width(mut self, n: usize) -> Self {
+        self.core.issue_width = n;
         self
     }
 
@@ -462,6 +478,15 @@ mod tests {
         assert_eq!(m.mem_config().llc.capacity_bytes(), 256 * 1024);
         assert_eq!(m.mem_config().dram.size_bytes, 128 * 1024 * 1024);
         assert_eq!(m.mem_config().dl1.block_bits, 512, "L1 blocks track VLEN");
+    }
+
+    #[test]
+    fn issue_width_survives_vlen_and_defaults_to_one() {
+        let m = Machine::paper_default();
+        assert_eq!(m.core_config().issue_width, 1);
+        let m = Machine::paper_default().issue_width(2).vlen(512);
+        assert_eq!(m.core_config().issue_width, 2);
+        assert_eq!(m.build().cfg.issue_width, 2);
     }
 
     #[test]

@@ -9,12 +9,16 @@
 //! workloads:
 //!   run-workload <name> [--variant v] [--size N] [--vlen N]
 //!                [--llc-block N] [--mshrs N] [--prefetch N]
-//!                [--channels N] [--sweep axis=a,b,c]... [--json]
+//!                [--channels N] [--issue-width N]
+//!                [--sweep axis=a,b,c]... [--json]
 //!                                       run a registered workload; sweep
 //!                                       axes: variant, size, vlen,
 //!                                       llc-block, mshrs, prefetch,
-//!                                       channels (mshrs=1 is the paper's
-//!                                       blocking port; >=2 non-blocking)
+//!                                       channels, issue-width (mshrs=1
+//!                                       is the paper's blocking port,
+//!                                       >=2 non-blocking; issue-width=1
+//!                                       is the paper's single-issue
+//!                                       pipeline, 2/4 superscalar)
 //!   list-workloads                      registry contents
 //!
 //! verification:
@@ -41,6 +45,10 @@
 //!   mem-sweep [--full]                  streaming bandwidth vs LLC block
 //!                                       x MSHRs/prefetch/channels
 //!                                       (CI captures --json as BENCH_mem.json)
+//!   pipe-sweep [--full]                 cycles vs issue width (1/2/4) for
+//!                                       cpubench + streaming kernels
+//!                                       (CI captures --json as
+//!                                       BENCH_pipeline.json)
 //!   fig4 [--full] [--ratios]            adapted STREAM vs PicoRV32
 //!   table1                              selected configuration
 //!   table2                              DMIPS/CoreMark comparison
@@ -162,6 +170,10 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
             emit(exp::mem_sweep(scale));
             Ok(())
         }
+        "pipe-sweep" => {
+            emit(exp::pipe_sweep(scale));
+            Ok(())
+        }
         "sort-speedup" => {
             emit(exp::sec43_sort(scale));
             Ok(())
@@ -196,10 +208,11 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fuzz|fig3|mem-sweep|fig4|table1|table2|fig5|\
-     fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|fig3|mem-sweep|pipe-sweep|fig4|table1|\
+     table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> \
+     [options]\n\
      sweep axes for run-workload and fuzz: variant, size, vlen, llc-block, mshrs, prefetch, \
-     channels; the global --jobs N flag bounds every sweep worker pool\n\
+     channels, issue-width; the global --jobs N flag bounds every sweep worker pool\n\
      see the header of rust/src/main.rs for details"
 }
 
@@ -368,7 +381,7 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     const VALUE_FLAGS: &[&str] = &[
         "--variant", "--size", "--vlen", "--llc-block", "--mshrs", "--prefetch", "--channels",
-        "--sweep", "--jobs",
+        "--issue-width", "--sweep", "--jobs",
     ];
     let positional = flags.positional(VALUE_FLAGS);
     let Some(&name) = positional.first() else {
@@ -429,7 +442,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
                     })
                     .collect::<Result<Vec<_>, _>>()?;
             }
-            axis if MachinePoint::AXES.contains(&axis) || axis == "llc_block" => {
+            axis if MachinePoint::is_axis(axis) => {
                 machine_specs.push(spec);
             }
             other => {
@@ -472,7 +485,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
 
     let mut t = Table::new(
         format!("run-workload {name}"),
-        &["variant", "VLEN", "LLC block", "MSHRs", "pf", "ch", "size", "cycles", "GB/s",
+        &["variant", "VLEN", "LLC block", "MSHRs", "pf", "ch", "IW", "size", "cycles", "GB/s",
           "B/cycle", "cyc/elem", "IPC", "verified"],
     );
     let mut failed = false;
@@ -485,6 +498,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
                 p.mp.mshrs.to_string(),
                 p.mp.prefetch.to_string(),
                 p.mp.channels.to_string(),
+                p.mp.issue_width.to_string(),
                 p.size.to_string(),
                 r.throughput.cycles.to_string(),
                 format!("{:.3}", r.throughput.bytes_per_second() / 1e9),
@@ -496,13 +510,15 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
             Err(e) => {
                 failed = true;
                 t.note(format!(
-                    "FAILED {} vlen={} llc-block={} mshrs={} prefetch={} channels={} size={}: {e}",
+                    "FAILED {} vlen={} llc-block={} mshrs={} prefetch={} channels={} \
+                     issue-width={} size={}: {e}",
                     p.variant,
                     p.mp.vlen,
                     p.mp.llc_block,
                     p.mp.mshrs,
                     p.mp.prefetch,
                     p.mp.channels,
+                    p.mp.issue_width,
                     p.size
                 ));
             }
@@ -527,7 +543,7 @@ fn machine_grid(base: MachinePoint, sweeps: &[&str]) -> Result<Vec<MachinePoint>
         let (axis, vals) = spec
             .split_once('=')
             .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
-        if !(MachinePoint::AXES.contains(&axis) || axis == "llc_block") {
+        if !MachinePoint::is_axis(axis) {
             return Err(format!(
                 "unknown machine sweep axis '{axis}' (axes: {})",
                 MachinePoint::AXES.join(", ")
@@ -606,8 +622,8 @@ fn run_fuzz(flags: &Flags, json: bool) -> Result<(), String> {
         t.row(&[
             format!("machine[{i}]"),
             format!(
-                "vlen={} llc-block={} mshrs={} prefetch={} channels={}",
-                mp.vlen, mp.llc_block, mp.mshrs, mp.prefetch, mp.channels
+                "vlen={} llc-block={} mshrs={} prefetch={} channels={} issue-width={}",
+                mp.vlen, mp.llc_block, mp.mshrs, mp.prefetch, mp.channels, mp.issue_width
             ),
         ]);
     }

@@ -116,6 +116,11 @@ pub enum MemConfigError {
     LlcBlockTooSmall { llc: usize, l1: usize },
     BlockNotWordMultiple(usize),
     DramNotBlockMultiple(usize),
+    /// DRAM larger than the RV32 core can address: the stack pointer is
+    /// initialised to the top of memory, so anything past
+    /// `4 GiB - 16` (the 16-byte stack alignment) would silently wrap
+    /// `sp` through the 32-bit cast.
+    DramTooLarge { got: usize },
     ZeroWays { what: &'static str },
     ZeroMshrs { what: &'static str },
     ZeroChannels,
@@ -144,6 +149,13 @@ impl std::fmt::Display for MemConfigError {
             MemConfigError::DramNotBlockMultiple(bytes) => {
                 write!(f, "DRAM size {bytes} bytes is not a multiple of the LLC block size")
             }
+            MemConfigError::DramTooLarge { got } => {
+                write!(
+                    f,
+                    "DRAM size {got} bytes exceeds the RV32 addressable limit ({} bytes)",
+                    MemConfig::MAX_DRAM_BYTES
+                )
+            }
             MemConfigError::ZeroWays { what } => {
                 write!(f, "{what} must have at least one way")
             }
@@ -164,6 +176,11 @@ impl std::fmt::Display for MemConfigError {
 impl std::error::Error for MemConfigError {}
 
 impl MemConfig {
+    /// Largest representable DRAM: the 32-bit address space minus the
+    /// 16-byte stack alignment, so `sp = top of memory` stays a valid
+    /// `u32` (see [`crate::arch::sp_init`]).
+    pub const MAX_DRAM_BYTES: u64 = (1u64 << 32) - 16;
+
     /// Table 1 configuration (VLEN = 256 bits).
     pub fn paper_default() -> Self {
         Self::for_vlen(256)
@@ -263,6 +280,9 @@ impl MemConfig {
                 return Err(MemConfigError::BlockNotWordMultiple(bits));
             }
         }
+        if self.dram.size_bytes as u64 > Self::MAX_DRAM_BYTES {
+            return Err(MemConfigError::DramTooLarge { got: self.dram.size_bytes });
+        }
         if self.dram.size_bytes % self.llc.block_bytes() != 0 {
             return Err(MemConfigError::DramNotBlockMultiple(self.dram.size_bytes));
         }
@@ -323,6 +343,20 @@ mod tests {
         let mut c = MemConfig::paper_default();
         c.llc.block_bits = 128;
         assert!(matches!(c.validate(), Err(MemConfigError::LlcBlockTooSmall { .. })));
+    }
+
+    #[test]
+    fn validation_rejects_unaddressable_dram() {
+        // A 4 GiB DRAM would wrap sp to 0 through the u32 cast; it must
+        // be a rejected configuration, not a silent truncation.
+        let mut c = MemConfig::paper_default();
+        c.dram.size_bytes = 1 << 32;
+        assert!(matches!(c.validate(), Err(MemConfigError::DramTooLarge { .. })));
+        // The largest valid size is block-aligned and accepted.
+        let mut c = MemConfig::paper_default();
+        c.dram.size_bytes = (1 << 32) - 2 * c.llc.block_bytes();
+        assert!(c.dram.size_bytes as u64 <= MemConfig::MAX_DRAM_BYTES);
+        c.validate().unwrap();
     }
 
     #[test]

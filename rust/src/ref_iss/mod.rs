@@ -113,7 +113,7 @@ impl RefIss {
         }
         self.regs = [0; 32];
         self.vregs = [VecVal::zero(lanes); 8];
-        self.regs[2] = (self.mem.len() as u32) & !15; // sp
+        self.regs[2] = crate::arch::sp_init(self.mem.len());
         self.pc = prog.entry;
         self.instret = 0;
         self.halted = false;
@@ -166,13 +166,19 @@ impl RefIss {
     }
 
     /// Decode (with per-index caching over the text segment) the
-    /// instruction at `pc`. The cache is only consulted for
-    /// word-aligned pcs: a misaligned pc (reachable through `jalr`,
-    /// which clears only bit 0) decodes the raw bytes at that address,
-    /// so it can never alias an aligned slot — if the timed core's
-    /// index-truncating cache ever disagrees here, lockstep reports it
-    /// instead of both sides inheriting the same shortcut.
+    /// instruction at `pc`. Mirrors the timed core's fetch fault order
+    /// exactly (DESIGN.md §9): a non-word-aligned pc (reachable through
+    /// `jalr`, which clears only bit 0, or a branch offset of 4k+2) is
+    /// a misaligned-fetch fault, a pc outside memory is a fetch fault —
+    /// both raised before any decode-cache indexing so the truncating
+    /// `/ 4` can never alias an aligned slot.
     fn fetch_decode(&mut self, pc: u32) -> Result<Instr, SimError> {
+        if pc % 4 != 0 {
+            return Err(SimError::FetchMisaligned { pc });
+        }
+        if (pc as usize).checked_add(4).is_none_or(|end| end > self.mem.len()) {
+            return Err(SimError::FetchFault { pc, size: self.mem.len() });
+        }
         let off = pc.wrapping_sub(self.text_base);
         if off % 4 == 0 {
             let idx = off as usize / 4;
@@ -180,14 +186,12 @@ impl RefIss {
                 if let Some(i) = slot {
                     return Ok(*i);
                 }
-                self.check_mem(pc, 4)?;
                 let i = decode(self.load_u32(pc))
                     .map_err(|source| SimError::Illegal { pc, source })?;
                 self.decoded[idx] = Some(i);
                 return Ok(i);
             }
         }
-        self.check_mem(pc, 4)?;
         decode(self.load_u32(pc)).map_err(|source| SimError::Illegal { pc, source })
     }
 

@@ -86,6 +86,78 @@ fn random_programs_agree_across_vlen_sweep() {
     assert_eq!(summary.cases, 12);
 }
 
+/// Wild jumps fault **identically** on both backends — the timed core
+/// used to panic (decode-cache truncation / misaligned fetch across an
+/// IL1 block edge) where the ISS reported or silently decoded raw
+/// bytes. Out-of-DRAM targets are a fetch fault, non-word-aligned
+/// targets a misaligned-fetch fault, and lockstep treats the identical
+/// pair as agreement.
+#[test]
+fn wild_jumps_fault_identically_on_both_backends() {
+    use simdsoftcore::asm::Asm;
+    use simdsoftcore::isa::reg::{A0, RA};
+
+    let run_pair = |build: &dyn Fn(&mut Asm)| {
+        let mut a = Asm::new();
+        build(&mut a);
+        let prog = a.assemble().expect("wild-jump program assembles");
+        let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
+        let mut core = machine.build();
+        let mut iss = RefIss::new(256, core.mem.dram_size());
+        core.load(&prog);
+        iss.load(&prog);
+        run_lockstep(&mut core, &mut iss, 1000).expect("identical faults are agreement")
+    };
+
+    let r = run_pair(&|a| {
+        a.li(A0, 0xF000_0000u32 as i64);
+        a.jalr(RA, A0, 0);
+        a.halt();
+    });
+    match r.outcome {
+        LockstepOutcome::Faulted(ref what) => {
+            assert!(what.starts_with("fetchfault@"), "{what}")
+        }
+        other => panic!("expected identical fetch fault, got {other:?}"),
+    }
+
+    let r = run_pair(&|a| {
+        a.auipc(A0, 0);
+        a.jalr(RA, A0, 6); // target % 4 == 2
+        a.halt();
+    });
+    match r.outcome {
+        LockstepOutcome::Faulted(ref what) => {
+            assert!(what.starts_with("fetchmisaligned@"), "{what}")
+        }
+        other => panic!("expected identical misaligned fault, got {other:?}"),
+    }
+}
+
+/// The wild-jump fuzz class (tier-1 slice of the 500-seed CI job): with
+/// `wildjump` weighted in, every case must end in a halt or an
+/// identical fetch fault — never a divergence, data fault, watchdog or
+/// panic — on the default and stressed (dual-issue) machines.
+#[test]
+fn wildjump_fuzz_slice_runs_clean() {
+    let cfg = FuzzConfig {
+        seeds: 24,
+        base_seed: 1,
+        ops: 200,
+        weights: Some(OpWeights::wild()),
+        ..Default::default()
+    };
+    let summary = fuzz::run_campaign(&cfg);
+    for f in &summary.failures {
+        eprintln!(
+            "== seed {} ({}, {:?}) ==\n{}\n{}",
+            f.seed, f.weights_name, f.point, f.report, f.listing
+        );
+    }
+    assert!(summary.ok(), "{} wild-jump failures (see stderr)", summary.failures.len());
+    assert_eq!(summary.cases, 48);
+}
+
 /// A seeded divergence is actually caught and usefully reported: plant
 /// a wrong value in the ISS register file and check the report carries
 /// the register delta and a disassembly context window.

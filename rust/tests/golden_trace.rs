@@ -9,9 +9,9 @@
 //! test`. A missing golden file is bootstrapped on first run.
 //!
 //! As a stored-file-independent check, every trace is also produced a
-//! second time on a non-blocking machine (8 MSHRs, prefetch, two DRAM
-//! channels) and must be byte-identical — the serialisation is
-//! timing-invariant by construction.
+//! second time on a non-blocking dual-issue machine (8 MSHRs, prefetch,
+//! two DRAM channels, issue width 2) and must be byte-identical — the
+//! serialisation is timing-invariant by construction.
 
 use simdsoftcore::asm::assemble_text;
 use simdsoftcore::core::{Core, Trace};
@@ -78,9 +78,14 @@ fn quickstart_trace_matches_golden() {
     // (`c2.i0` is the sort unit's funct3=0 operation).
     assert!(text.contains("c2.i0"), "SIMD instruction missing from trace:\n{text}");
 
-    // Timing-invariance: a non-blocking machine retires the identical
-    // instruction sequence.
-    let mut nb = Machine::paper_default().mshrs(8).prefetch_depth(4).dram_channels(2).build();
+    // Timing-invariance: a non-blocking dual-issue machine retires the
+    // identical instruction sequence.
+    let mut nb = Machine::paper_default()
+        .mshrs(8)
+        .prefetch_depth(4)
+        .dram_channels(2)
+        .issue_width(2)
+        .build();
     assert_eq!(traced_text(&mut nb, &prog), text, "trace depends on the timing model");
 
     check_golden("quickstart.trace", &text);
@@ -103,8 +108,9 @@ fn simd_sort_workload_trace_matches_golden() {
     assert!(text.lines().count() >= 50, "sort smoke trace suspiciously short:\n{text}");
     assert!(text.contains("c2.") || text.contains("c1."), "vector sort uses custom units:\n{text}");
 
-    let nb_text =
-        run_traced(Machine::paper_default().mshrs(8).prefetch_depth(4).dram_channels(2));
+    let nb_text = run_traced(
+        Machine::paper_default().mshrs(8).prefetch_depth(4).dram_channels(2).issue_width(2),
+    );
     assert_eq!(nb_text, text, "trace depends on the timing model");
 
     check_golden("sort_vector.trace", &text);
