@@ -5,7 +5,7 @@ use simdsoftcore::coordinator::{experiments, Scale};
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let t0 = std::time::Instant::now();
-    let table = experiments::fig3_left(Scale { full });
+    let table = experiments::fig3_left(Scale { full, ..Default::default() });
     print!("{}", table.render());
     println!("(host wall time: {:.2?})", t0.elapsed());
 }

@@ -5,8 +5,8 @@ use simdsoftcore::coordinator::{experiments, Scale};
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let t0 = std::time::Instant::now();
-    let table = experiments::fig3_right(Scale { full });
+    let table = experiments::fig3_right(Scale { full, ..Default::default() });
     print!("{}", table.render());
-    print!("{}", experiments::memcpy_headline(Scale { full }).render());
+    print!("{}", experiments::memcpy_headline(Scale { full, ..Default::default() }).render());
     println!("(host wall time: {:.2?})", t0.elapsed());
 }

@@ -6,7 +6,7 @@ use simdsoftcore::coordinator::{experiments, Scale};
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let t0 = std::time::Instant::now();
-    print!("{}", experiments::fig4(Scale { full }).render());
-    print!("{}", experiments::fig4_ratios(Scale { full }).render());
+    print!("{}", experiments::fig4(Scale { full, ..Default::default() }).render());
+    print!("{}", experiments::fig4_ratios(Scale { full, ..Default::default() }).render());
     println!("(host wall time: {:.2?})", t0.elapsed());
 }

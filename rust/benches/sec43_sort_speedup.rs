@@ -7,6 +7,6 @@ use simdsoftcore::coordinator::{experiments, Scale};
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let t0 = std::time::Instant::now();
-    print!("{}", experiments::sec43_sort(Scale { full }).render());
+    print!("{}", experiments::sec43_sort(Scale { full, ..Default::default() }).render());
     println!("(host wall time: {:.2?})", t0.elapsed());
 }

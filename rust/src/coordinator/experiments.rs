@@ -5,30 +5,39 @@
 //!
 //! Workload-backed figures are declarative: a (workload, grid) pair
 //! executed through [`Machine::run`] on the bounded sweep pool
-//! ([`parallel_map_bounded`] with the global `--jobs` width) — no
-//! driver constructs a `Core` or lays out buffers by hand.
+//! ([`parallel_map_bounded`] with the [`Scale`]'s `jobs` width) — no
+//! driver constructs a `Core` or lays out buffers by hand. The
+//! `mem-sweep`/`pipe-sweep` grids additionally route through the sweep
+//! service's job queue ([`crate::service::run_grid`]), so running them
+//! against a persistent result store turns repeated invocations into
+//! cache hits (see [`mem_sweep_stored`]/[`pipe_sweep_stored`]).
 
 use super::report::Table;
-use super::sweep::{jobs, parallel_map_bounded, MachinePoint};
+use super::sweep::{parallel_map_bounded, MachinePoint, Parallelism};
 use crate::baseline::arm_a53;
 use crate::baseline::PicoConfig;
 use crate::core::{Core, CoreConfig, Trace};
 use crate::isa::reg::*;
 use crate::machine::{run_on_pico, Machine};
 use crate::mem::MemConfig;
+use crate::service::{self, GridOptions, Job, JobKind, Outcome, Progress, ResultStore};
 use crate::util::stats::fmt_rate;
 use crate::workloads::cpubench::{CpuBench, CpuBenchKind};
 use crate::workloads::memcpy::Memcpy;
 use crate::workloads::sort::Sort;
 use crate::workloads::stream::{Kernel, Stream};
 use crate::workloads::{Scenario, Variant, WorkloadReport};
+use std::sync::Mutex;
 
 /// Experiment scale: `full` reproduces the paper's sizes (256 MiB memcpy,
 /// 64 MiB sort inputs); default is scaled for CI-speed runs with the same
-/// asymptotic behaviour (all sizes far exceed the 256 KiB LLC).
+/// asymptotic behaviour (all sizes far exceed the 256 KiB LLC). `jobs`
+/// is the sweep-pool width (the `--jobs` flag), carried by value so
+/// concurrent drivers can hold different widths.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Scale {
     pub full: bool,
+    pub jobs: Parallelism,
 }
 
 impl Scale {
@@ -96,7 +105,7 @@ fn memcpy_point(vlen: usize, llc_block_bits: usize, bytes: usize) -> WorkloadRep
 pub fn fig3_left(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
     let blocks = vec![2048usize, 4096, 8192, 16384];
-    let results = parallel_map_bounded(blocks, jobs(), |block_bits| {
+    let results = parallel_map_bounded(blocks, scale.jobs.workers(), |block_bits| {
         (block_bits, memcpy_point(256, block_bits, bytes))
     });
 
@@ -123,7 +132,7 @@ pub fn fig3_left(scale: Scale) -> Table {
 pub fn fig3_right(scale: Scale) -> Table {
     let bytes = scale.memcpy_bytes();
     let vlens = vec![128usize, 256, 512, 1024];
-    let results = parallel_map_bounded(vlens, jobs(), |vlen| {
+    let results = parallel_map_bounded(vlens, scale.jobs.workers(), |vlen| {
         let fmax = CoreConfig::for_vlen(vlen).fmax_mhz;
         (vlen, fmax, memcpy_point(vlen, 16384, bytes))
     });
@@ -220,7 +229,7 @@ pub fn fig4(scale: Scale) -> Table {
         "Fig. 4: adapted STREAM (no SIMD), MB/s",
         &["array KiB", "Copy", "Scale", "Add", "Triad", "Pico Copy", "Pico Scale", "Pico Add", "Pico Triad"],
     );
-    let rows = parallel_map_bounded(sizes, jobs(), |n| {
+    let rows = parallel_map_bounded(sizes, scale.jobs.workers(), |n| {
         // Softcore rows (DRAM auto-sizes to the 3-array footprint).
         let machine = Machine::paper_default();
         let mut soft = Vec::new();
@@ -353,7 +362,8 @@ pub fn fig6() -> String {
 /// §4.3.1: sorting speedups (vs softcore qsort and vs ARM A53 qsort).
 pub fn sec43_sort(scale: Scale) -> Table {
     let n = scale.sort_n();
-    let results = parallel_map_bounded(vec![Variant::Scalar, Variant::Vector], jobs(), |variant| {
+    let variants = vec![Variant::Scalar, Variant::Vector];
+    let results = parallel_map_bounded(variants, scale.jobs.workers(), |variant| {
         Machine::paper_default()
             .run(&mut Sort::new(), &Scenario::new(variant, n))
             .expect("sort runs")
@@ -396,7 +406,8 @@ pub fn sec43_sort(scale: Scale) -> Table {
 /// §4.3.2: prefix-sum speedups.
 pub fn sec43_prefix(scale: Scale) -> Table {
     let n = scale.prefix_n();
-    let results = parallel_map_bounded(vec![Variant::Scalar, Variant::Vector], jobs(), |variant| {
+    let variants = vec![Variant::Scalar, Variant::Vector];
+    let results = parallel_map_bounded(variants, scale.jobs.workers(), |variant| {
         Machine::paper_default()
             .run(&mut crate::workloads::prefix::Prefix::new(), &Scenario::new(variant, n))
             .expect("prefix runs")
@@ -462,6 +473,49 @@ pub fn discussion() -> Table {
     t
 }
 
+/// Run a sweep grid through the service queue against `store`, in
+/// input order, panicking on any failed point (these grids are healthy
+/// by construction — a failure is a bug, exactly as the old inline
+/// `.expect` was). Returns the outcomes plus how many points were
+/// served from the store instead of simulated.
+fn run_sweep_jobs(
+    jobs: Vec<Job>,
+    width: Parallelism,
+    store: &Mutex<ResultStore>,
+) -> (Vec<Outcome>, u64) {
+    let hits0 = store.lock().expect("store lock").hits();
+    let progress = Progress::new(jobs.len() as u64);
+    let opts = GridOptions { parallelism: width, retries: 0, ..Default::default() };
+    let recs = service::run_grid(jobs, store, &progress, &opts, &service::default_exec(), |_| {});
+    let outcomes = recs
+        .into_iter()
+        .map(|r| {
+            let r = r.expect("sweep grids run to completion");
+            match r.outcome {
+                Some(o) => o,
+                None => panic!("sweep point failed: {} ({:?})", r.job.label(), r.error),
+            }
+        })
+        .collect();
+    let hits = store.lock().expect("store lock").hits() - hits0;
+    (outcomes, hits)
+}
+
+/// The workload (and variant) of a sweep-grid job.
+fn sim_fields(job: &Job) -> (&str, Variant) {
+    match &job.kind {
+        JobKind::Sim { workload, variant, .. } => (workload, *variant),
+        _ => unreachable!("sweep grids contain only sim jobs"),
+    }
+}
+
+fn outcome_verified_cell(o: &Outcome) -> String {
+    match o.verified {
+        Some(v) => v.to_string(),
+        None => "-".into(),
+    }
+}
+
 /// The streaming-bandwidth curve behind the non-blocking memory
 /// hierarchy: stream/memcpy/prefix (vector variants) swept over LLC
 /// block width × memory-port configuration (MSHR count, prefetch depth,
@@ -470,37 +524,42 @@ pub fn discussion() -> Table {
 /// over the blocking row of the same (workload, block) pair. `--json`
 /// output of this table is what CI captures as `BENCH_mem.json`.
 pub fn mem_sweep(scale: Scale) -> Table {
-    mem_sweep_sized(scale.mem_sweep_bytes(), scale.mem_sweep_elems())
+    mem_sweep_stored(scale, &Mutex::new(ResultStore::in_memory()))
 }
 
-fn mem_sweep_sized(memcpy_bytes: usize, elems: usize) -> Table {
-    #[derive(Clone, Copy)]
-    struct Point {
-        workload: &'static str,
-        size: usize,
-        mp: MachinePoint,
-    }
+/// [`mem_sweep`] against a caller-owned result store: points already in
+/// the store are served from cache instead of simulated (the table's
+/// last note reports the hit count), so re-running after a crash — or
+/// a second invocation against a persistent store — only simulates
+/// what is missing.
+pub fn mem_sweep_stored(scale: Scale, store: &Mutex<ResultStore>) -> Table {
+    mem_sweep_sized(scale.mem_sweep_bytes(), scale.mem_sweep_elems(), scale.jobs, store)
+}
+
+fn mem_sweep_sized(
+    memcpy_bytes: usize,
+    elems: usize,
+    width: Parallelism,
+    store: &Mutex<ResultStore>,
+) -> Table {
     let workloads = [("memcpy", memcpy_bytes), ("stream-copy", elems), ("prefix", elems)];
     let blocks = [2048usize, 16384];
     // (mshrs, prefetch, channels): blocking baseline, non-blocking with
     // prefetch, and non-blocking with doubled DRAM bandwidth.
     let ports = [(1usize, 0usize, 1usize), (4, 4, 1), (8, 8, 2)];
 
-    let mut points = Vec::new();
+    let mut jobs = Vec::new();
     for &(workload, size) in &workloads {
         for &llc_block in &blocks {
             for &(mshrs, prefetch, channels) in &ports {
                 let mp =
                     MachinePoint { llc_block, mshrs, prefetch, channels, ..Default::default() };
-                points.push(Point { workload, size, mp });
+                jobs.push(Job::sim(mp, workload, Variant::Vector, size));
             }
         }
     }
-    let results = parallel_map_bounded(points, jobs(), |p| {
-        let mut w = crate::workloads::lookup(p.workload).expect("registered workload");
-        let r = p.mp.machine().run(&mut *w, &Scenario::new(Variant::Vector, p.size));
-        (p, r.expect("mem-sweep point runs"))
-    });
+    let (outcomes, hits) = run_sweep_jobs(jobs.clone(), width, store);
+    let results: Vec<(&Job, &Outcome)> = jobs.iter().zip(outcomes.iter()).collect();
 
     let mut t = Table::new(
         format!(
@@ -511,39 +570,43 @@ fn mem_sweep_sized(memcpy_bytes: usize, elems: usize) -> Table {
         &["workload", "LLC block", "MSHRs", "prefetch", "channels", "cycles", "B/cycle",
           "GB/s", "LLC pf", "DRAM queue cyc", "struct/bw stall", "verified", "Δcyc vs blocking"],
     );
-    for (p, r) in &results {
+    for (job, r) in &results {
+        let wl = sim_fields(job).0;
         // The blocking counterpart: same workload + block, mshrs = 1.
         let base = results
             .iter()
             .find(|(q, _)| {
-                q.workload == p.workload && q.mp.llc_block == p.mp.llc_block && q.mp.mshrs == 1
+                sim_fields(q).0 == wl
+                    && q.point.llc_block == job.point.llc_block
+                    && q.point.mshrs == 1
             })
-            .map(|(_, r)| r.throughput.cycles)
-            .unwrap_or(r.throughput.cycles);
-        let delta = if p.mp.mshrs == 1 {
+            .map(|(_, r)| r.cycles)
+            .unwrap_or(r.cycles);
+        let delta = if job.point.mshrs == 1 {
             "baseline".to_string()
         } else {
-            format!("{:+.1}%", (1.0 - r.throughput.cycles as f64 / base as f64) * 100.0)
+            format!("{:+.1}%", (1.0 - r.cycles as f64 / base as f64) * 100.0)
         };
         t.row(&[
-            p.workload.to_string(),
-            p.mp.llc_block.to_string(),
-            p.mp.mshrs.to_string(),
-            p.mp.prefetch.to_string(),
-            p.mp.channels.to_string(),
-            r.throughput.cycles.to_string(),
-            format!("{:.2}", r.throughput.bytes_per_cycle()),
-            format!("{:.3}", r.throughput.bytes_per_second() / 1e9),
-            r.mem.llc.prefetches.to_string(),
-            r.mem.dram.queue_cycles.to_string(),
-            format!("{}/{}", r.counters.mem_struct_stall_cycles, r.counters.mem_bw_stall_cycles),
-            r.verified_cell(),
+            wl.to_string(),
+            job.point.llc_block.to_string(),
+            job.point.mshrs.to_string(),
+            job.point.prefetch.to_string(),
+            job.point.channels.to_string(),
+            r.cycles.to_string(),
+            format!("{:.2}", r.bytes_per_cycle()),
+            format!("{:.3}", r.bytes_per_second() / 1e9),
+            r.metric("llc_prefetches").to_string(),
+            r.metric("dram_queue_cycles").to_string(),
+            format!("{}/{}", r.metric("mem_struct_stall_cycles"), r.metric("mem_bw_stall_cycles")),
+            outcome_verified_cell(r),
             delta,
         ]);
     }
     t.note("mshrs=1 rows are the paper's blocking port; Δcyc is the reduction vs that row");
     t.note("narrow (2048-bit) LLC blocks expose the most miss latency — MSHRs + prefetch win there");
     t.note("the paper's 16384-bit blocks already amortise much of the miss cost by design");
+    t.note(format!("result store: {hits} cache hits / {} points", results.len()));
     t
 }
 
@@ -555,8 +618,21 @@ fn mem_sweep_sized(memcpy_bytes: usize, elems: usize) -> Table {
 /// of the same workload. `--json` output of this table is what CI
 /// captures as `BENCH_pipeline.json`.
 pub fn pipe_sweep(scale: Scale) -> Table {
+    pipe_sweep_stored(scale, &Mutex::new(ResultStore::in_memory()))
+}
+
+/// [`pipe_sweep`] against a caller-owned result store — the same
+/// cache/resume semantics as [`mem_sweep_stored`].
+pub fn pipe_sweep_stored(scale: Scale, store: &Mutex<ResultStore>) -> Table {
     let m = if scale.full { 8 } else { 1 };
-    pipe_sweep_sized(300 * m, 100 * m, scale.mem_sweep_elems(), scale.mem_sweep_bytes())
+    pipe_sweep_sized(
+        300 * m,
+        100 * m,
+        scale.mem_sweep_elems(),
+        scale.mem_sweep_bytes(),
+        scale.jobs,
+        store,
+    )
 }
 
 fn pipe_sweep_sized(
@@ -564,14 +640,9 @@ fn pipe_sweep_sized(
     coremark_iters: usize,
     elems: usize,
     memcpy_bytes: usize,
+    width: Parallelism,
+    store: &Mutex<ResultStore>,
 ) -> Table {
-    #[derive(Clone, Copy)]
-    struct Point {
-        workload: &'static str,
-        variant: Variant,
-        size: usize,
-        issue_width: usize,
-    }
     let rows = [
         ("dhrystone", Variant::Scalar, dhrystone_iters),
         ("coremark", Variant::Scalar, coremark_iters),
@@ -579,18 +650,15 @@ fn pipe_sweep_sized(
         ("memcpy", Variant::Vector, memcpy_bytes),
         ("prefix", Variant::Vector, elems),
     ];
-    let mut points = Vec::new();
+    let mut jobs = Vec::new();
     for &(workload, variant, size) in &rows {
         for issue_width in [1usize, 2, 4] {
-            points.push(Point { workload, variant, size, issue_width });
+            let mp = MachinePoint { issue_width, ..Default::default() };
+            jobs.push(Job::sim(mp, workload, variant, size));
         }
     }
-    let results = parallel_map_bounded(points, jobs(), |p| {
-        let mut w = crate::workloads::lookup(p.workload).expect("registered workload");
-        let machine = MachinePoint { issue_width: p.issue_width, ..Default::default() }.machine();
-        let r = machine.run(&mut *w, &Scenario::new(p.variant, p.size));
-        (p, r.expect("pipe-sweep point runs"))
-    });
+    let (outcomes, hits) = run_sweep_jobs(jobs.clone(), width, store);
+    let results: Vec<(&Job, &Outcome)> = jobs.iter().zip(outcomes.iter()).collect();
 
     let mut t = Table::new(
         format!(
@@ -602,28 +670,29 @@ fn pipe_sweep_sized(
         &["workload", "variant", "issue width", "cycles", "instret", "IPC", "dual-issue",
           "slots wasted", "verified", "Δcyc vs width 1"],
     );
-    for (p, r) in &results {
+    for (job, r) in &results {
+        let (wl, variant) = sim_fields(job);
         // The single-issue counterpart: same workload, width 1.
         let base = results
             .iter()
-            .find(|(q, _)| q.workload == p.workload && q.issue_width == 1)
-            .map(|(_, r)| r.throughput.cycles)
-            .unwrap_or(r.throughput.cycles);
-        let delta = if p.issue_width == 1 {
+            .find(|(q, _)| sim_fields(q).0 == wl && q.point.issue_width == 1)
+            .map(|(_, r)| r.cycles)
+            .unwrap_or(r.cycles);
+        let delta = if job.point.issue_width == 1 {
             "baseline".to_string()
         } else {
-            format!("{:+.1}%", (1.0 - r.throughput.cycles as f64 / base as f64) * 100.0)
+            format!("{:+.1}%", (1.0 - r.cycles as f64 / base as f64) * 100.0)
         };
         t.row(&[
-            p.workload.to_string(),
-            p.variant.to_string(),
-            p.issue_width.to_string(),
-            r.throughput.cycles.to_string(),
-            r.throughput.instret.to_string(),
-            format!("{:.3}", r.throughput.ipc()),
-            r.counters.dual_issue_pairs.to_string(),
-            r.counters.issue_slots_wasted.to_string(),
-            r.verified_cell(),
+            wl.to_string(),
+            variant.to_string(),
+            job.point.issue_width.to_string(),
+            r.cycles.to_string(),
+            r.instret.to_string(),
+            format!("{:.3}", r.ipc()),
+            r.metric("dual_issue_pairs").to_string(),
+            r.metric("issue_slots_wasted").to_string(),
+            outcome_verified_cell(r),
             delta,
         ]);
     }
@@ -631,6 +700,7 @@ fn pipe_sweep_sized(
     t.note("Δcyc is the cycle reduction vs the width-1 row; instret is identical by construction");
     t.note("rules: in-order, scoreboarded; one data-port access and one issue per SIMD unit per \
             cycle; div/rem issue alone; a taken branch ends its group (DESIGN.md §5)");
+    t.note(format!("result store: {hits} cache hits / {} points", results.len()));
     t
 }
 
@@ -685,12 +755,15 @@ mod tests {
         // the calibrated improvement bands live in
         // rust/tests/mem_bandwidth.rs and the full curve in CI's
         // BENCH_mem.json.
-        let t = mem_sweep_sized(256 * 1024, 16 * 1024);
+        let store = Mutex::new(ResultStore::in_memory());
+        let t = mem_sweep_sized(256 * 1024, 16 * 1024, Parallelism::auto(), &store);
         let r = t.render();
         assert!(r.contains("memcpy") && r.contains("stream-copy") && r.contains("prefix"));
         assert!(r.contains("baseline"));
         assert!(r.contains('%'), "non-blocking rows carry a Δcyc percentage");
         assert!(!r.contains("false"), "every point must verify");
+        assert!(r.contains("0 cache hits / 18 points"), "first run simulates everything:\n{r}");
+        assert_eq!(store.lock().unwrap().completed(), 18, "every point lands in the store");
     }
 
     #[test]
@@ -698,12 +771,23 @@ mod tests {
         // Tiny sizes: a smoke test of the grid/derived columns; the
         // calibrated >=15% bands live in rust/tests/pipeline.rs and the
         // full curve in CI's BENCH_pipeline.json.
-        let t = pipe_sweep_sized(40, 10, 4 * 1024, 256 * 1024);
+        let store = Mutex::new(ResultStore::in_memory());
+        let t = pipe_sweep_sized(40, 10, 4 * 1024, 256 * 1024, Parallelism::auto(), &store);
         let r = t.render();
         assert!(r.contains("dhrystone") && r.contains("stream-copy") && r.contains("memcpy"));
         assert!(r.contains("baseline"));
         assert!(r.contains('%'), "superscalar rows carry a Δcyc percentage");
         assert!(!r.contains("false"), "every point must verify");
+
+        // Re-running against the same store is pure cache: no point
+        // simulates twice, and every derived column reproduces exactly.
+        let t2 = pipe_sweep_sized(40, 10, 4 * 1024, 256 * 1024, Parallelism::auto(), &store);
+        let r2 = t2.render();
+        assert!(r2.contains("15 cache hits / 15 points"), "{r2}");
+        let body = |s: &str| {
+            s.lines().filter(|l| !l.contains("cache hits")).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(body(&r), body(&r2), "cached rerun reproduces the table");
     }
 
     #[test]

@@ -116,8 +116,9 @@ impl Table {
     }
 }
 
-/// Escape a string for inclusion in a JSON string literal.
-fn json_escape(s: &str) -> String {
+/// Escape a string for inclusion in a JSON string literal (shared with
+/// the service's wire protocol and result store, `crate::service`).
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

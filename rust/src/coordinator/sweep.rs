@@ -74,6 +74,34 @@ impl MachinePoint {
             .issue_width(self.issue_width)
     }
 
+    /// Stable canonical serialization of this point: a JSON object with
+    /// the keys in sorted order and integer values only (no floats, so
+    /// no formatting drift across Rust versions or platforms). This is
+    /// the byte string the service hashes to key its content-addressed
+    /// result store ([`crate::service`]), so its exact shape is pinned
+    /// by a unit test — changing it invalidates every stored result.
+    pub fn canonical(&self) -> String {
+        format!(
+            "{{\"channels\":{},\"issue_width\":{},\"llc_block\":{},\"mshrs\":{},\
+             \"prefetch\":{},\"vlen\":{}}}",
+            self.channels, self.issue_width, self.llc_block, self.mshrs, self.prefetch, self.vlen
+        )
+    }
+
+    /// Parse a point back out of the object produced by
+    /// [`MachinePoint::canonical`] (used by the result store when
+    /// re-loading persisted records).
+    pub fn from_canonical_fields(
+        mut get: impl FnMut(&str) -> Option<usize>,
+    ) -> Result<Self, String> {
+        let mut p = MachinePoint::default();
+        for axis in ["channels", "issue_width", "llc_block", "mshrs", "prefetch", "vlen"] {
+            let v = get(axis).ok_or_else(|| format!("machine point missing field '{axis}'"))?;
+            assert!(p.set(axis, v), "canonical field names are valid axes");
+        }
+        Ok(p)
+    }
+
     /// Reject values the simulator cannot represent, before any sweep
     /// thread is spawned (e.g. `llc-block 0` would divide by zero in the
     /// geometry math; `vlen 100` fails cache-config validation).
@@ -112,25 +140,89 @@ impl MachinePoint {
     }
 }
 
-/// Process-wide worker-pool width for every sweep surface. `0` (the
-/// default) means "use the host's available parallelism"; the CLI's
-/// global `--jobs N` flag overrides it via [`set_jobs`].
-static JOBS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+/// Worker-pool width for a sweep surface, threaded *by value* through
+/// every call-site (experiment drivers via [`super::Scale`], the fuzz
+/// campaign via `FuzzConfig`, the service via its grid options).
+///
+/// This used to be a process-global `set_jobs`/`jobs` atomic; with the
+/// long-running service mode, concurrent surfaces (service workers and
+/// a one-shot CLI invocation, or two submissions with different
+/// widths) must not fight over shared mutable state, so the value now
+/// travels with the request. The CLI's `--jobs N` flag behaviour is
+/// unchanged: it produces `Parallelism::fixed(n)`, the default is
+/// [`Parallelism::auto`] (the host's available parallelism).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Parallelism(usize);
 
-/// Override the default sweep worker count (the CLI's `--jobs` flag).
-/// `0` restores the available-parallelism default.
-pub fn set_jobs(n: usize) {
-    JOBS.store(n, std::sync::atomic::Ordering::Relaxed);
+impl Parallelism {
+    /// Use the host's available parallelism (the default).
+    pub fn auto() -> Self {
+        Self(0)
+    }
+
+    /// Exactly `n` workers (the `--jobs N` flag); `0` behaves as auto.
+    pub fn fixed(n: usize) -> Self {
+        Self(n)
+    }
+
+    /// The worker count to pass to [`parallel_map_bounded`].
+    pub fn workers(self) -> usize {
+        match self.0 {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            n => n,
+        }
+    }
 }
 
-/// The worker count every sweep call-site passes to
-/// [`parallel_map_bounded`]: the `--jobs` override if set, otherwise
-/// the host's available parallelism.
-pub fn jobs() -> usize {
-    match JOBS.load(std::sync::atomic::Ordering::Relaxed) {
-        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-        n => n,
+/// 64-bit FNV-1a over `bytes`: the stable, dependency-free hash behind
+/// the service's content-addressed result store. The constants are the
+/// published FNV parameters, so the digest of a canonical job string is
+/// identical across platforms, Rust versions, and process runs
+/// (`std::hash` makes none of those promises).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
+    h
+}
+
+/// Expand `axis=v1,v2,...` sweep specs (machine axes only) into a grid
+/// of machine points, starting from `base`. Shared by the
+/// `run-workload`/`fuzz`/`sweep-grid` CLI surfaces and the service's
+/// JSON `submit` handler.
+pub fn machine_grid(base: MachinePoint, sweeps: &[&str]) -> Result<Vec<MachinePoint>, String> {
+    let mut grid = vec![base];
+    for spec in sweeps {
+        let (axis, vals) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("sweep spec expects axis=v1,v2,..., got '{spec}'"))?;
+        if !MachinePoint::is_axis(axis) {
+            return Err(format!(
+                "unknown machine sweep axis '{axis}' (axes: {})",
+                MachinePoint::AXES.join(", ")
+            ));
+        }
+        let values: Vec<usize> = vals
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .map_err(|_| format!("bad {axis} value '{v}' in sweep spec '{spec}'"))
+            })
+            .collect::<Result<_, _>>()?;
+        let mut expanded = Vec::with_capacity(grid.len() * values.len());
+        for mp in &grid {
+            for &v in &values {
+                let mut mp = *mp;
+                mp.set(axis, v);
+                expanded.push(mp);
+            }
+        }
+        grid = expanded;
+    }
+    Ok(grid)
 }
 
 /// Run `f` over `items` on at most `max_threads` workers pulling items
@@ -138,7 +230,8 @@ pub fn jobs() -> usize {
 /// heterogeneous grids (the `run-workload` sweeps) keep every worker
 /// busy until the queue drains. Preserves input order in the output.
 /// Every sweep call-site in the repository routes through this function
-/// (with [`jobs`] as the width), so `--jobs 1` serialises everything.
+/// (with [`Parallelism::workers`] as the width), so `--jobs 1`
+/// serialises everything.
 pub fn parallel_map_bounded<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -181,7 +274,9 @@ mod tests {
 
     #[test]
     fn preserves_order() {
-        let out = parallel_map_bounded((0..16).collect(), jobs(), |i: i32| i * i);
+        let out = parallel_map_bounded((0..16).collect(), Parallelism::auto().workers(), |i: i32| {
+            i * i
+        });
         assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
     }
 
@@ -207,11 +302,65 @@ mod tests {
     }
 
     #[test]
-    fn jobs_override_roundtrip() {
-        set_jobs(3);
-        assert_eq!(jobs(), 3);
-        set_jobs(0);
-        assert!(jobs() >= 1, "default derives from available parallelism");
+    fn parallelism_is_a_value_not_a_global() {
+        assert_eq!(Parallelism::fixed(3).workers(), 3);
+        assert!(Parallelism::auto().workers() >= 1, "default derives from available parallelism");
+        assert_eq!(Parallelism::fixed(0), Parallelism::auto(), "0 behaves as auto");
+        // Two surfaces can hold different widths at once — the exact
+        // property the old process-global `set_jobs` could not provide.
+        let (a, b) = (Parallelism::fixed(1), Parallelism::fixed(7));
+        assert_eq!((a.workers(), b.workers()), (1, 7));
+        assert_eq!(Parallelism::default(), Parallelism::auto());
+    }
+
+    #[test]
+    fn canonical_point_serialization_is_sorted_and_integer_only() {
+        let p = MachinePoint::default();
+        assert_eq!(
+            p.canonical(),
+            "{\"channels\":1,\"issue_width\":1,\"llc_block\":16384,\"mshrs\":1,\
+             \"prefetch\":0,\"vlen\":256}"
+        );
+        // Round-trips through the canonical field reader.
+        let q = MachinePoint::from_canonical_fields(|axis| match axis {
+            "channels" => Some(1),
+            "issue_width" => Some(1),
+            "llc_block" => Some(16384),
+            "mshrs" => Some(1),
+            "prefetch" => Some(0),
+            "vlen" => Some(256),
+            _ => None,
+        })
+        .unwrap();
+        assert_eq!(p, q);
+        assert!(MachinePoint::from_canonical_fields(|_| None).is_err());
+    }
+
+    #[test]
+    fn default_paper_machine_hash_is_pinned() {
+        // The content-addressed store keys on this digest: if it moves,
+        // every persisted result silently misses. Pin the exact value
+        // for the default paper machine (Table 1).
+        let digest = fnv1a64(MachinePoint::default().canonical().as_bytes());
+        assert_eq!(
+            digest, 0xaa5d_a4e6_15c8_15af,
+            "canonical hash of the paper machine moved: {digest:#018x} — this invalidates \
+             every existing result store; bump service::CODE_VERSION if intentional"
+        );
+        // FNV-1a sanity against published test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn machine_grid_expands_cartesian_products() {
+        let grid = machine_grid(MachinePoint::default(), &["vlen=128,256", "mshrs=1,4"]).unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0], MachinePoint { vlen: 128, mshrs: 1, ..Default::default() });
+        assert_eq!(grid[3], MachinePoint { vlen: 256, mshrs: 4, ..Default::default() });
+        assert!(machine_grid(MachinePoint::default(), &["bogus=1"]).is_err());
+        assert!(machine_grid(MachinePoint::default(), &["vlen=x"]).is_err());
+        assert!(machine_grid(MachinePoint::default(), &["vlen"]).is_err());
     }
 
     #[test]

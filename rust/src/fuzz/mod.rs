@@ -40,7 +40,7 @@
 //! the cases on a bounded worker pool.
 
 use crate::asm::{Asm, Label, Program};
-use crate::coordinator::sweep::{self, MachinePoint};
+use crate::coordinator::sweep::{self, MachinePoint, Parallelism};
 use crate::cosim::{run_lockstep, LockstepOutcome};
 use crate::isa::reg::*;
 use crate::isa::VReg;
@@ -479,7 +479,7 @@ pub struct FuzzConfig {
     /// `None` rotates the balanced/scalar/vector presets per seed.
     pub weights: Option<OpWeights>,
     pub points: Vec<MachinePoint>,
-    pub jobs: usize,
+    pub jobs: Parallelism,
 }
 
 impl Default for FuzzConfig {
@@ -490,7 +490,7 @@ impl Default for FuzzConfig {
             ops: 300,
             weights: None,
             points: vec![MachinePoint::default(), stressed_point()],
-            jobs: 0, // 0 = available parallelism
+            jobs: Parallelism::auto(),
         }
     }
 }
@@ -575,6 +575,27 @@ pub fn run_case(
     }
 }
 
+/// Expand a seed range into content-addressed service jobs — one
+/// [`crate::service::Job`] per (machine point, seed) — so a fuzz
+/// campaign can flow through the sweep service's queue and result
+/// store like any other grid (`serve` fuzz submissions are built from
+/// this).
+pub fn seed_jobs(
+    points: &[MachinePoint],
+    base_seed: u64,
+    seeds: u64,
+    ops: usize,
+    weights: &str,
+) -> Vec<crate::service::Job> {
+    let mut jobs = Vec::with_capacity(points.len() * seeds as usize);
+    for &point in points {
+        for s in 0..seeds {
+            jobs.push(crate::service::Job::fuzz(point, base_seed + s, ops, weights));
+        }
+    }
+    jobs
+}
+
 /// Run the full campaign on a bounded worker pool.
 pub fn run_campaign(cfg: &FuzzConfig) -> FuzzSummary {
     let mut cases = Vec::new();
@@ -588,9 +609,8 @@ pub fn run_campaign(cfg: &FuzzConfig) -> FuzzSummary {
             cases.push((seed, name, w, mp));
         }
     }
-    let jobs = if cfg.jobs == 0 { sweep::jobs() } else { cfg.jobs };
     let n_cases = cases.len() as u64;
-    let results = sweep::parallel_map_bounded(cases, jobs, |(seed, name, w, mp)| {
+    let results = sweep::parallel_map_bounded(cases, cfg.jobs.workers(), |(seed, name, w, mp)| {
         run_case(seed, cfg.ops, name, &w, &mp)
     });
     let mut summary = FuzzSummary { cases: n_cases, instrs: 0, faulted: 0, failures: Vec::new() };
@@ -740,6 +760,16 @@ mod tests {
         }
         assert!(summary.ok(), "{} fuzz failures", summary.failures.len());
         assert!(summary.instrs > 1000, "campaign actually executed instructions");
+    }
+
+    #[test]
+    fn seed_ranges_expand_into_distinct_service_jobs() {
+        let points = [MachinePoint::default(), stressed_point()];
+        let jobs = seed_jobs(&points, 100, 3, 250, "balanced");
+        assert_eq!(jobs.len(), 6, "every (point, seed) pair becomes a job");
+        let keys: std::collections::BTreeSet<u64> = jobs.iter().map(|j| j.key()).collect();
+        assert_eq!(keys.len(), 6, "each job has a distinct content address");
+        assert!(jobs.iter().all(|j| j.validate().is_ok()));
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! against the timed core instruction by instruction, and [`fuzz`]
 //! generates deterministic random programs (the `fuzz` CLI subcommand)
 //! across scalar and I′/S′ op mixes and machine configurations.
+//!
+//! Fleet-scale exploration runs through [`service`] (DESIGN.md §10): a
+//! job queue over the machine grid with deterministic sharding, a
+//! content-addressed result store with resumable checkpoints, and the
+//! `serve` line-delimited JSON API.
 
 pub mod arch;
 pub mod asm;
@@ -35,6 +40,7 @@ pub mod machine;
 pub mod mem;
 pub mod ref_iss;
 pub mod runtime;
+pub mod service;
 pub mod simd;
 pub mod util;
 pub mod workloads;

@@ -30,7 +30,9 @@ use crate::mem::{CacheGeometry, MemConfig, MemConfigError, MemModel, MemStats, R
 use crate::ref_iss::RefIss;
 use crate::simd::CustomUnit;
 use crate::workloads::common::{self, Throughput};
-use crate::workloads::workload::{run_on, run_on_iss, Scenario, Variant, Workload, WorkloadReport};
+use crate::workloads::workload::{
+    run_on_budget, run_on_iss, Scenario, Variant, Workload, WorkloadReport,
+};
 
 /// Errors from [`Machine::run`] and [`run_on_pico`].
 #[derive(Debug)]
@@ -350,6 +352,18 @@ impl Machine {
     /// uniform throughput/verification results. The scenario's
     /// `vlen_bits` is taken from this machine's configuration.
     pub fn run(&self, w: &mut dyn Workload, sc: &Scenario) -> Result<WorkloadReport, MachineError> {
+        self.run_budget(w, sc, crate::workloads::common::MAX_INSTRS)
+    }
+
+    /// [`Machine::run`] with an explicit retired-instruction budget
+    /// (the sweep service's per-point watchdog; see
+    /// [`crate::workloads::workload::run_on_budget`]).
+    pub fn run_budget(
+        &self,
+        w: &mut dyn Workload,
+        sc: &Scenario,
+        max_instrs: u64,
+    ) -> Result<WorkloadReport, MachineError> {
         if !w.variants().contains(&sc.variant) {
             return Err(MachineError::UnsupportedVariant {
                 workload: w.name().to_string(),
@@ -374,7 +388,7 @@ impl Machine {
                         });
                     }
                 }
-                Ok(run_on(w, &mut core, &sc)?)
+                Ok(run_on_budget(w, &mut core, &sc, max_instrs)?)
             }
             Backend::RefIss => {
                 let mut iss = self.build_iss_with_bytes(mem.dram.size_bytes);

@@ -37,8 +37,31 @@
 //!                                       --artifact-dir (default
 //!                                       fuzz-artifacts/)
 //!
-//! Every command accepts the global `--jobs N` flag bounding the sweep
-//! worker pool (default: available parallelism).
+//! Every command accepts the `--jobs N` flag bounding its sweep worker
+//! pool (default: available parallelism).
+//!
+//! sweep service (DESIGN.md §10):
+//!   sweep-grid <workload>... [--variant v] [--size N]
+//!              [--sweep axis=a,b,c]... [--store FILE.jsonl]
+//!              [--shards N --shard I] [--timeout-ms T] [--retries R]
+//!              [--budget N] [--expect-all-cached] [--json]
+//!                                       run a workload grid through the
+//!                                       service queue; with --store,
+//!                                       completed points are served from
+//!                                       the content-addressed result
+//!                                       store on re-runs (crash-resume);
+//!                                       --expect-all-cached fails unless
+//!                                       every point was a cache hit (CI
+//!                                       uses it to prove cache
+//!                                       effectiveness)
+//!   serve [--store FILE.jsonl] [--listen ADDR] [--timeout-ms T]
+//!         [--retries R]
+//!                                       long-running service: line-
+//!                                       delimited JSON API over stdio
+//!                                       (or a TCP socket with --listen);
+//!                                       commands: ping, submit,
+//!                                       progress, shutdown (protocol in
+//!                                       rust/src/service/server.rs)
 //!
 //! experiments (all accept --json):
 //!   fig3 [--side left|right] [--full]   memcpy design-space sweeps
@@ -67,12 +90,17 @@
 //!   config                              print the Table-1 configuration
 //! ```
 
-use simdsoftcore::coordinator::sweep::{self, MachinePoint};
+use simdsoftcore::coordinator::sweep::{self, machine_grid, MachinePoint, Parallelism};
 use simdsoftcore::coordinator::{experiments as exp, Scale, Table};
 use simdsoftcore::core::{Core, Trace};
 use simdsoftcore::fuzz::{self, FuzzConfig, OpWeights};
+use simdsoftcore::service::{
+    self, GridOptions, Job, JobKind, JobStatus, Progress, ResultStore, ServeConfig,
+};
 use simdsoftcore::workloads::{registry, Scenario, Variant};
 use std::process::ExitCode;
+use std::sync::Mutex;
+use std::time::Duration;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -91,16 +119,16 @@ fn main() -> ExitCode {
 }
 
 fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
-    let scale = Scale { full: flags.has("--full") };
+    // Sweep worker-pool bound: every sweep surface (run-workload grids,
+    // experiment drivers, the fuzz campaign, the service queue) takes
+    // this value explicitly — there is no process-global width.
+    let jobs = match flags.parse_usize("--jobs")? {
+        None => Parallelism::auto(),
+        Some(0) => return Err("--jobs must be at least 1".into()),
+        Some(n) => Parallelism::fixed(n),
+    };
+    let scale = Scale { full: flags.has("--full"), jobs };
     let json = flags.has("--json");
-    // Global worker-pool bound: every sweep surface (run-workload grids,
-    // experiment drivers, the fuzz campaign) pulls its width from here.
-    if let Some(jobs) = flags.parse_usize("--jobs")? {
-        if jobs == 0 {
-            return Err("--jobs must be at least 1".into());
-        }
-        sweep::set_jobs(jobs);
-    }
     // Render one experiment table in the selected format.
     let emit = |t: Table| {
         if json {
@@ -190,8 +218,10 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
             run_all(scale, flags.has("--markdown"), json);
             Ok(())
         }
-        "run-workload" => run_workload(flags, json),
-        "fuzz" => run_fuzz(flags, json),
+        "run-workload" => run_workload(flags, json, jobs),
+        "fuzz" => run_fuzz(flags, json, jobs),
+        "sweep-grid" => run_sweep_grid(flags, json, jobs),
+        "serve" => run_serve(flags, jobs),
         "list-workloads" => {
             list_workloads();
             Ok(())
@@ -208,11 +238,13 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fuzz|fig3|mem-sweep|pipe-sweep|fig4|table1|\
-     table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|run|disasm|fabric|config> \
-     [options]\n\
-     sweep axes for run-workload and fuzz: variant, size, vlen, llc-block, mshrs, prefetch, \
-     channels, issue-width; the global --jobs N flag bounds every sweep worker pool\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|sweep-grid|serve|fig3|mem-sweep|\
+     pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|\
+     run|disasm|fabric|config> [options]\n\
+     sweep axes for run-workload, fuzz and sweep-grid: variant, size, vlen, llc-block, mshrs, \
+     prefetch, channels, issue-width; the --jobs N flag bounds every sweep worker pool\n\
+     sweep-grid/serve run through the service queue: --store FILE.jsonl persists results and \
+     serves completed points from cache on re-runs\n\
      see the header of rust/src/main.rs for details"
 }
 
@@ -378,7 +410,7 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
+fn run_workload(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> {
     const VALUE_FLAGS: &[&str] = &[
         "--variant", "--size", "--vlen", "--llc-block", "--mshrs", "--prefetch", "--channels",
         "--issue-width", "--sweep", "--jobs",
@@ -469,7 +501,7 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     }
     // Executed on a bounded worker pool (a grid can be large; one
     // uncapped thread per point would oversubscribe the host).
-    let results = sweep::parallel_map_bounded(points, sweep::jobs(), |p| {
+    let results = sweep::parallel_map_bounded(points, jobs.workers(), |p| {
         // Workload-specific size constraints are assertions; contain
         // them to a failed row instead of a CLI abort.
         let run = std::panic::catch_unwind(|| {
@@ -535,44 +567,9 @@ fn run_workload(flags: &Flags, json: bool) -> Result<(), String> {
     Ok(())
 }
 
-/// Expand `--sweep axis=v1,v2` specs (machine axes only) into a grid of
-/// machine points, starting from `base`.
-fn machine_grid(base: MachinePoint, sweeps: &[&str]) -> Result<Vec<MachinePoint>, String> {
-    let mut grid = vec![base];
-    for spec in sweeps {
-        let (axis, vals) = spec
-            .split_once('=')
-            .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
-        if !MachinePoint::is_axis(axis) {
-            return Err(format!(
-                "unknown machine sweep axis '{axis}' (axes: {})",
-                MachinePoint::AXES.join(", ")
-            ));
-        }
-        let values: Vec<usize> = vals
-            .split(',')
-            .map(|v| {
-                v.trim()
-                    .parse()
-                    .map_err(|_| format!("bad {axis} value '{v}' in --sweep {spec}"))
-            })
-            .collect::<Result<_, _>>()?;
-        let mut expanded = Vec::with_capacity(grid.len() * values.len());
-        for mp in &grid {
-            for &v in &values {
-                let mut mp = *mp;
-                mp.set(axis, v);
-                expanded.push(mp);
-            }
-        }
-        grid = expanded;
-    }
-    Ok(grid)
-}
-
 /// The `fuzz` subcommand: differential lockstep fuzzing of the timed
 /// core against the reference ISS (DESIGN.md §9).
-fn run_fuzz(flags: &Flags, json: bool) -> Result<(), String> {
+fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> {
     let seeds = flags.parse_usize("--seeds")?.unwrap_or(100) as u64;
     if seeds == 0 {
         return Err("--seeds must be at least 1".into());
@@ -598,14 +595,7 @@ fn run_fuzz(flags: &Flags, json: bool) -> Result<(), String> {
         mp.validate()?;
     }
 
-    let cfg = FuzzConfig {
-        seeds,
-        base_seed,
-        ops,
-        weights,
-        points: points.clone(),
-        jobs: 0, // run_campaign reads the global sweep::jobs()
-    };
+    let cfg = FuzzConfig { seeds, base_seed, ops, weights, points: points.clone(), jobs };
     let summary = fuzz::run_campaign(&cfg);
 
     let mut t = Table::new("fuzz: lockstep differential campaign", &["metric", "value"]);
@@ -677,6 +667,180 @@ fn run_fuzz(flags: &Flags, json: bool) -> Result<(), String> {
         summary.failures.len(),
         summary.cases
     ))
+}
+
+/// The `sweep-grid` subcommand: run a workload grid through the sweep
+/// service queue (DESIGN.md §10). With `--store` the grid is resumable:
+/// completed points are served from the content-addressed result store,
+/// so re-running after a crash (or a second identical invocation) only
+/// simulates what is missing.
+fn run_sweep_grid(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> {
+    const VALUE_FLAGS: &[&str] = &[
+        "--variant", "--size", "--sweep", "--jobs", "--store", "--shards", "--shard",
+        "--timeout-ms", "--retries", "--budget",
+    ];
+    let names = flags.positional(VALUE_FLAGS);
+    if names.is_empty() {
+        return Err(format!(
+            "sweep-grid needs at least one workload name; try `simdsoftcore list-workloads`\n{}",
+            usage()
+        ));
+    }
+    let variant = match flags.opt_val("--variant")? {
+        Some(v) => Some(
+            Variant::parse(v).ok_or_else(|| format!("--variant must be scalar|vector, got '{v}'"))?,
+        ),
+        None => None,
+    };
+    let size = flags.parse_usize("--size")?;
+    let budget = flags.parse_usize("--budget")?.map(|b| b as u64);
+    let sweeps = flags.opt_vals("--sweep")?;
+    let grid = machine_grid(MachinePoint::default(), &sweeps)?;
+
+    let mut grid_jobs = Vec::new();
+    for &name in &names {
+        let Some(probe) = simdsoftcore::workloads::lookup(name) else {
+            let known: Vec<&str> = registry().iter().map(|e| e.name).collect();
+            return Err(format!("unknown workload '{name}'; known: {}", known.join(", ")));
+        };
+        let variants: Vec<Variant> = match variant {
+            Some(v) => vec![v],
+            None => probe.variants().to_vec(),
+        };
+        let sz = size.unwrap_or_else(|| probe.default_size());
+        for &mp in &grid {
+            for &v in &variants {
+                let mut job = Job::sim(mp, name, v, sz);
+                job.budget = budget;
+                job.validate()?;
+                grid_jobs.push(job);
+            }
+        }
+    }
+    // Deterministic shard selection: independent processes given the
+    // same grid and --shards N partition it without coordination.
+    if let Some(shards) = flags.parse_usize("--shards")? {
+        let shard = flags.parse_usize("--shard")?.unwrap_or(0);
+        if shard >= shards.max(1) {
+            return Err(format!("--shard {shard} out of range for --shards {shards}"));
+        }
+        grid_jobs = service::shard_filter(grid_jobs, shard as u64, shards as u64);
+    }
+
+    let store = match flags.opt_val("--store")? {
+        Some(path) => ResultStore::open(path)?,
+        None => ResultStore::in_memory(),
+    };
+    let opts = GridOptions {
+        parallelism: jobs,
+        timeout: flags.parse_usize("--timeout-ms")?.map(|ms| Duration::from_millis(ms as u64)),
+        retries: flags.parse_usize("--retries")?.unwrap_or(1) as u32,
+        stop_after: None,
+    };
+    let progress = Progress::new(grid_jobs.len() as u64);
+    let store = Mutex::new(store);
+    let recs =
+        service::run_grid(grid_jobs, &store, &progress, &opts, &service::default_exec(), |_| {});
+    let store = store.into_inner().expect("store lock");
+    let snap = progress.snapshot();
+
+    let mut t = Table::new(
+        "sweep-grid (service queue)",
+        &["workload", "variant", "size", "VLEN", "LLC block", "MSHRs", "pf", "ch", "IW",
+          "cycles", "GB/s", "IPC", "verified", "status", "attempts", "cached"],
+    );
+    let mut failed = 0usize;
+    for rec in recs.into_iter().flatten() {
+        let JobKind::Sim { workload, variant, size } = &rec.job.kind else {
+            continue; // sweep-grid only submits sim jobs
+        };
+        let (cycles, gbs, ipc, verified) = match &rec.outcome {
+            Some(o) => (
+                o.cycles.to_string(),
+                format!("{:.3}", o.bytes_per_second() / 1e9),
+                format!("{:.3}", o.ipc()),
+                match o.verified {
+                    Some(v) => v.to_string(),
+                    None => "-".to_string(),
+                },
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        if rec.status == JobStatus::Failed {
+            failed += 1;
+            t.note(format!("FAILED {}: {}", rec.job.label(), rec.error.as_deref().unwrap_or("?")));
+        }
+        let mp = &rec.job.point;
+        t.row(&[
+            workload.clone(),
+            variant.to_string(),
+            size.to_string(),
+            mp.vlen.to_string(),
+            mp.llc_block.to_string(),
+            mp.mshrs.to_string(),
+            mp.prefetch.to_string(),
+            mp.channels.to_string(),
+            mp.issue_width.to_string(),
+            cycles,
+            gbs,
+            ipc,
+            verified,
+            rec.status.name().to_string(),
+            rec.attempts.to_string(),
+            rec.from_cache.to_string(),
+        ]);
+    }
+    t.note(format!(
+        "store: {} records ({} ok), {} cache hits this run, {} torn lines skipped",
+        store.len(),
+        store.completed(),
+        snap.cached,
+        store.skipped_lines()
+    ));
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+    if flags.has("--expect-all-cached") && snap.cached < snap.total {
+        return Err(format!(
+            "--expect-all-cached: only {}/{} points were served from the store",
+            snap.cached, snap.total
+        ));
+    }
+    if failed > 0 {
+        return Err(format!("{failed} sweep points failed (see notes above)"));
+    }
+    Ok(())
+}
+
+/// The `serve` subcommand: the long-running sweep service. Speaks the
+/// line-delimited JSON protocol (rust/src/service/server.rs) over stdio
+/// by default, or over a TCP socket with `--listen ADDR`.
+fn run_serve(flags: &Flags, jobs: Parallelism) -> Result<(), String> {
+    let store = match flags.opt_val("--store")? {
+        Some(path) => ResultStore::open(path)?,
+        None => ResultStore::in_memory(),
+    };
+    let cfg = ServeConfig {
+        parallelism: jobs,
+        timeout: flags.parse_usize("--timeout-ms")?.map(|ms| Duration::from_millis(ms as u64)),
+        retries: flags.parse_usize("--retries")?.unwrap_or(1) as u32,
+    };
+    match flags.opt_val("--listen")? {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| format!("binding {addr}: {e}"))?;
+            let local = listener.local_addr().map_err(|e| e.to_string())?;
+            eprintln!("serving line-delimited JSON on {local} (store: {:?})", store.path());
+            service::serve_tcp(&listener, store, &cfg);
+        }
+        None => {
+            let stdin = std::io::stdin();
+            service::serve(stdin.lock(), std::io::stdout(), store, &cfg);
+        }
+    }
+    Ok(())
 }
 
 fn run_program(flags: &Flags) -> Result<(), String> {

@@ -1,0 +1,411 @@
+//! Minimal JSON values for the service wire protocol and the result
+//! store. The default build carries no serde (Cargo.toml keeps it
+//! dependency-free on purpose), and the service only needs flat
+//! objects of numbers/strings plus one level of nesting for machine
+//! points and sweep specs — a few hundred lines of recursive descent
+//! cover that with exact, deterministic output formatting (which the
+//! content-addressed store depends on).
+
+use std::collections::BTreeMap;
+
+pub use crate::coordinator::report::json_escape;
+
+/// A parsed JSON value. Objects use a [`BTreeMap`], so re-rendering a
+/// value always produces sorted keys — the canonical form the store
+/// hashes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Parse one JSON document, rejecting trailing garbage.
+    pub fn parse(s: &str) -> Result<Value, String> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing characters at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as an exact unsigned integer (rejects fractions,
+    /// negatives, and magnitudes above 2^53 where f64 loses exactness).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Render back to JSON text: object keys sorted (BTreeMap order),
+    /// integers without a fractional part — deterministic for the
+    /// value shapes the service produces.
+    pub fn render(&self) -> String {
+        match self {
+            Value::Null => "null".into(),
+            Value::Bool(b) => b.to_string(),
+            Value::Num(n) => fmt_num(*n),
+            Value::Str(s) => format!("\"{}\"", json_escape(s)),
+            Value::Arr(a) => {
+                let items: Vec<String> = a.iter().map(|v| v.render()).collect();
+                format!("[{}]", items.join(","))
+            }
+            Value::Obj(m) => {
+                let items: Vec<String> = m
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\":{}", json_escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", items.join(","))
+            }
+        }
+    }
+}
+
+/// Integers render without a trailing `.0`; other finite numbers use
+/// Rust's shortest-roundtrip `Display`. Non-finite values have no JSON
+/// spelling and become null.
+pub fn fmt_num(n: f64) -> String {
+    if !n.is_finite() {
+        "null".into()
+    } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected character '{}' at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(m));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(a));
+        }
+        loop {
+            self.skip_ws();
+            a.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(a));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("truncated \\u escape")?;
+                            let hex = std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                            self.i += 4;
+                            // Surrogate pairs are not needed by any
+                            // service producer; map them to U+FFFD
+                            // rather than erroring on foreign input.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => return Err(format!("unknown escape '\\{}'", c as char)),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is &str, so the
+                    // byte stream is valid UTF-8).
+                    let rest = std::str::from_utf8(&self.b[self.i..]).expect("input was &str");
+                    let c = rest.chars().next().expect("peeked non-empty");
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii slice");
+        text.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("bad number '{text}' at byte {start}"))
+    }
+}
+
+/// Incremental builder for one flat JSON object line (insertion order
+/// preserved — the writers pass keys already sorted where canonical
+/// output matters).
+pub struct ObjWriter {
+    parts: Vec<String>,
+}
+
+impl ObjWriter {
+    pub fn new() -> Self {
+        Self { parts: Vec::new() }
+    }
+
+    pub fn field_raw(&mut self, key: &str, raw_json: &str) -> &mut Self {
+        self.parts.push(format!("\"{}\":{}", json_escape(key), raw_json));
+        self
+    }
+
+    pub fn field_str(&mut self, key: &str, v: &str) -> &mut Self {
+        let quoted = format!("\"{}\"", json_escape(v));
+        self.field_raw(key, &quoted)
+    }
+
+    pub fn field_u64(&mut self, key: &str, v: u64) -> &mut Self {
+        self.field_raw(key, &v.to_string())
+    }
+
+    pub fn field_f64(&mut self, key: &str, v: f64) -> &mut Self {
+        let s = fmt_num(v);
+        self.field_raw(key, &s)
+    }
+
+    pub fn field_bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.field_raw(key, if v { "true" } else { "false" })
+    }
+
+    pub fn finish(&self) -> String {
+        format!("{{{}}}", self.parts.join(","))
+    }
+}
+
+impl Default for ObjWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse(" true ").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("-12.5").unwrap(), Value::Num(-12.5));
+        assert_eq!(Value::parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+        let v = Value::parse("[1, 2, [3]]").unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 3);
+        let v = Value::parse("{\"a\": 1, \"b\": {\"c\": [true, null]}}").unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "\"unterminated", "1 2", "{\"a\" 1}"] {
+            assert!(Value::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let v = Value::parse("\"a\\\"b\\\\c\\n\\t\\u0041\"").unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c\n\tA"));
+        let rendered = Value::Str("a\"b\\c\n".into()).render();
+        assert_eq!(Value::parse(&rendered).unwrap().as_str(), Some("a\"b\\c\n"));
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_numbers() {
+        assert_eq!(Value::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Value::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Value::parse("4096").unwrap().as_u64(), Some(4096));
+    }
+
+    #[test]
+    fn render_sorts_object_keys() {
+        let v = Value::parse("{\"b\":2,\"a\":1}").unwrap();
+        assert_eq!(v.render(), "{\"a\":1,\"b\":2}");
+        assert_eq!(Value::parse("[1,2.5]").unwrap().render(), "[1,2.5]");
+    }
+
+    #[test]
+    fn obj_writer_builds_lines() {
+        let mut w = ObjWriter::new();
+        w.field_str("cmd", "submit").field_u64("n", 3).field_bool("ok", true);
+        let line = w.finish();
+        assert_eq!(line, "{\"cmd\":\"submit\",\"n\":3,\"ok\":true}");
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.get("cmd").unwrap().as_str(), Some("submit"));
+    }
+
+    #[test]
+    fn fmt_num_is_integer_exact() {
+        assert_eq!(fmt_num(150.0), "150");
+        assert_eq!(fmt_num(0.25), "0.25");
+        assert_eq!(fmt_num(f64::NAN), "null");
+    }
+}

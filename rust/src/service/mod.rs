@@ -1,0 +1,384 @@
+//! Fleet-scale sweep service: the orchestration layer that turns the
+//! one-shot sweep CLI into a long-running simulation service
+//! (ROADMAP "heavy traffic"; DESIGN.md §10 is the contract).
+//!
+//! The existing coordinator executes a grid with
+//! [`crate::coordinator::sweep::parallel_map_bounded`] and throws the
+//! results away with the process. This module adds everything around
+//! that execution kernel:
+//!
+//! - **[`Job`]** — one unit of work: a [`MachinePoint`] plus either a
+//!   workload scenario ([`JobKind::Sim`]) or a fuzz seed
+//!   ([`JobKind::Fuzz`]). Jobs are *content-addressed*: [`Job::key`] is
+//!   the FNV-1a digest of a canonical JSON serialization that includes
+//!   the code version, so the same point never executes twice across
+//!   runs, processes, or machines sharing a store.
+//! - **[`store::ResultStore`]** — an append-only JSONL file indexed by
+//!   job key. Re-submitting a grid is a cache hit for every point
+//!   already present; a crashed run resumes by reopening the store
+//!   (a truncated trailing line from the crash is tolerated).
+//! - **[`queue`]** — deterministic shard assignment
+//!   ([`queue::shard_of`]) and the worker pool ([`queue::run_grid`])
+//!   with per-point wall-clock timeout, bounded retry, and progress
+//!   accounting — a wedged point fails; it does not stall its shard.
+//! - **[`server`]** — the `--serve` mode: a line-delimited JSON API
+//!   over stdio or a local TCP socket for submitting grids, polling
+//!   [`progress`], and streaming results as they land.
+//!
+//! The `mem-sweep`/`pipe-sweep` experiments route through this layer
+//! (see [`crate::coordinator::experiments::mem_sweep_stored`]), so the
+//! existing BENCH trajectories gain persistence and caching for free.
+
+pub mod json;
+pub mod progress;
+pub mod queue;
+pub mod server;
+pub mod store;
+
+use crate::coordinator::sweep::{fnv1a64, MachinePoint};
+use crate::fuzz::{self, OpWeights};
+use crate::workloads::{self, Scenario, Variant, WorkloadReport};
+use std::collections::BTreeMap;
+
+pub use progress::{Progress, ProgressSnapshot};
+pub use queue::{default_exec, run_grid, shard_filter, shard_of, Exec, GridOptions};
+pub use server::{serve, serve_tcp, ServeConfig};
+pub use store::{JobStatus, ResultRecord, ResultStore};
+
+/// Version tag folded into every job key. Bump the `+timingN` suffix
+/// whenever a change alters simulated timing or architectural results:
+/// old store entries then simply stop matching (the store is
+/// append-only; stale records are never served, never deleted).
+pub const CODE_VERSION: &str = concat!("simdsoftcore-", env!("CARGO_PKG_VERSION"), "+timing1");
+
+/// What a [`Job`] executes at its machine point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobKind {
+    /// One registered workload scenario (the sweep grids).
+    Sim { workload: String, variant: Variant, size: usize },
+    /// One differential-fuzz case: a seed run in lockstep against the
+    /// reference ISS. `weights` is a preset name (`balanced`, `scalar`,
+    /// `vector`, `wild`) or a `class=N,...` spec.
+    Fuzz { seed: u64, ops: usize, weights: String },
+}
+
+/// One unit of service work: a machine configuration plus what to run
+/// on it. Plain data (`Send`), cheap to clone; the worker thread builds
+/// the core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub point: MachinePoint,
+    pub kind: JobKind,
+    /// Retired-instruction watchdog for `Sim` jobs (`None` = the
+    /// generous `workloads::common::MAX_INSTRS`). Part of the job
+    /// identity: a budget-limited run is a different experiment from an
+    /// unlimited one.
+    pub budget: Option<u64>,
+}
+
+impl Job {
+    pub fn sim(
+        point: MachinePoint,
+        workload: impl Into<String>,
+        variant: Variant,
+        size: usize,
+    ) -> Self {
+        let kind = JobKind::Sim { workload: workload.into(), variant, size };
+        Self { point, kind, budget: None }
+    }
+
+    pub fn fuzz(point: MachinePoint, seed: u64, ops: usize, weights: impl Into<String>) -> Self {
+        Self { point, kind: JobKind::Fuzz { seed, ops, weights: weights.into() }, budget: None }
+    }
+
+    pub fn with_budget(mut self, max_instrs: u64) -> Self {
+        self.budget = Some(max_instrs);
+        self
+    }
+
+    /// Stable canonical serialization of the full job identity —
+    /// `(machine point, work, code version)` — with sorted keys and no
+    /// float formatting anywhere. [`Job::key`] hashes these bytes;
+    /// cache correctness across processes depends on this string being
+    /// bit-stable, so its shape is pinned by unit tests.
+    pub fn canonical(&self) -> String {
+        let mut s = String::from("{");
+        if let Some(b) = self.budget {
+            s.push_str(&format!("\"budget\":{b},"));
+        }
+        s.push_str(&format!("\"code\":\"{}\",", json::json_escape(CODE_VERSION)));
+        match &self.kind {
+            JobKind::Sim { workload, variant, size } => {
+                s.push_str(&format!(
+                    "\"kind\":\"sim\",\"point\":{},\"size\":{},\"variant\":\"{}\",\
+                     \"workload\":\"{}\"",
+                    self.point.canonical(),
+                    size,
+                    variant.name(),
+                    json::json_escape(workload)
+                ));
+            }
+            JobKind::Fuzz { seed, ops, weights } => {
+                s.push_str(&format!(
+                    "\"kind\":\"fuzz\",\"ops\":{},\"point\":{},\"seed\":{},\"weights\":\"{}\"",
+                    ops,
+                    self.point.canonical(),
+                    seed,
+                    json::json_escape(weights)
+                ));
+            }
+        }
+        s.push('}');
+        s
+    }
+
+    /// The content address of this job in the result store.
+    pub fn key(&self) -> u64 {
+        fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// Short human-readable label for logs and the `result` events.
+    pub fn label(&self) -> String {
+        let p = &self.point;
+        let mp = format!(
+            "vlen={} llc={} mshrs={} pf={} ch={} iw={}",
+            p.vlen, p.llc_block, p.mshrs, p.prefetch, p.channels, p.issue_width
+        );
+        match &self.kind {
+            JobKind::Sim { workload, variant, size } => {
+                format!("{workload}/{variant}/{size} [{mp}]")
+            }
+            JobKind::Fuzz { seed, ops, weights } => {
+                format!("fuzz/seed{seed}/{ops}ops/{weights} [{mp}]")
+            }
+        }
+    }
+
+    /// Reject jobs the executor cannot run, before they enter a queue.
+    pub fn validate(&self) -> Result<(), String> {
+        self.point.validate()?;
+        match &self.kind {
+            JobKind::Sim { workload, variant, size } => {
+                let Some(probe) = workloads::lookup(workload) else {
+                    let names: Vec<&str> = workloads::registry().iter().map(|e| e.name).collect();
+                    return Err(format!(
+                        "unknown workload '{workload}' (known: {})",
+                        names.join(", ")
+                    ));
+                };
+                if !probe.variants().contains(variant) {
+                    return Err(format!("workload '{workload}' has no {variant} variant"));
+                }
+                if *size == 0 {
+                    return Err("size must be positive".into());
+                }
+            }
+            JobKind::Fuzz { ops, weights, .. } => {
+                if *ops == 0 || *ops > 50_000 {
+                    return Err(format!("fuzz ops must be in 1..=50000, got {ops}"));
+                }
+                resolve_weights(weights)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Uniform measured result of a completed job — everything the sweep
+/// tables and the JSON API report, in integer counters plus the clock.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Outcome {
+    pub cycles: u64,
+    pub instret: u64,
+    pub bytes: u64,
+    pub fmax_mhz: f64,
+    /// `Some(outcome)` when verification ran (always for `Sim`; for
+    /// `Fuzz`, agreement with the reference ISS).
+    pub verified: Option<bool>,
+    /// Named auxiliary counters (stall/prefetch/issue statistics) the
+    /// experiment tables render.
+    pub metrics: BTreeMap<String, u64>,
+}
+
+impl Outcome {
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn bytes_per_second(&self) -> f64 {
+        self.bytes_per_cycle() * self.fmax_mhz * 1e6
+    }
+
+    pub fn ipc(&self) -> f64 {
+        self.instret as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn metric(&self, name: &str) -> u64 {
+        self.metrics.get(name).copied().unwrap_or(0)
+    }
+
+    fn from_report(r: &WorkloadReport) -> Self {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("dl1_misses".into(), r.mem.dl1.misses);
+        metrics.insert("dram_queue_cycles".into(), r.mem.dram.queue_cycles);
+        metrics.insert("dual_issue_pairs".into(), r.counters.dual_issue_pairs);
+        metrics.insert("issue_slots_wasted".into(), r.counters.issue_slots_wasted);
+        metrics.insert("llc_prefetches".into(), r.mem.llc.prefetches);
+        metrics.insert("mem_bw_stall_cycles".into(), r.counters.mem_bw_stall_cycles);
+        metrics.insert("mem_struct_stall_cycles".into(), r.counters.mem_struct_stall_cycles);
+        Self {
+            cycles: r.throughput.cycles,
+            instret: r.throughput.instret,
+            bytes: r.throughput.bytes,
+            fmax_mhz: r.throughput.fmax_mhz,
+            verified: r.verified,
+            metrics,
+        }
+    }
+}
+
+/// Resolve a weights string: a preset name or a `class=N,...` spec.
+pub fn resolve_weights(spec: &str) -> Result<OpWeights, String> {
+    match spec {
+        "balanced" => Ok(OpWeights::balanced()),
+        "scalar" => Ok(OpWeights::scalar()),
+        "vector" => Ok(OpWeights::vector()),
+        "wild" => Ok(OpWeights::wild()),
+        other => OpWeights::parse(other),
+    }
+}
+
+/// Execute one job to completion in the calling thread. This is the
+/// service's execution kernel: [`queue::run_grid`] calls it (via
+/// [`default_exec`]) from its workers; a failed run — simulation
+/// fault, watchdog, verify failure of a fuzz case — is an `Err` the
+/// queue retries up to its bound.
+pub fn execute(job: &Job) -> Result<Outcome, String> {
+    match &job.kind {
+        JobKind::Sim { workload, variant, size } => {
+            let mut w = workloads::lookup(workload)
+                .ok_or_else(|| format!("unknown workload '{workload}'"))?;
+            let budget = job.budget.unwrap_or(crate::workloads::common::MAX_INSTRS);
+            let report = job
+                .point
+                .machine()
+                .run_budget(&mut *w, &Scenario::new(*variant, *size), budget)
+                .map_err(|e| e.to_string())?;
+            Ok(Outcome::from_report(&report))
+        }
+        JobKind::Fuzz { seed, ops, weights } => {
+            let w = resolve_weights(weights)?;
+            match fuzz::run_case(*seed, *ops, weights, &w, &job.point) {
+                Ok(instrs) => Ok(Outcome {
+                    cycles: 0,
+                    instret: instrs,
+                    bytes: 0,
+                    fmax_mhz: 0.0,
+                    verified: Some(true),
+                    metrics: BTreeMap::new(),
+                }),
+                Err(f) => Err(format!("fuzz case diverged/failed: {}", f.report)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_canonical_form_is_pinned() {
+        // The store's cache keys hash this string: its exact shape is
+        // load-bearing (DESIGN.md §10 documents it).
+        let j = Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 65536);
+        assert_eq!(
+            j.canonical(),
+            format!(
+                "{{\"code\":\"{CODE_VERSION}\",\"kind\":\"sim\",\"point\":{},\"size\":65536,\
+                 \"variant\":\"vector\",\"workload\":\"memcpy\"}}",
+                MachinePoint::default().canonical()
+            )
+        );
+        let f = Job::fuzz(MachinePoint::default(), 7, 100, "balanced");
+        assert_eq!(
+            f.canonical(),
+            format!(
+                "{{\"code\":\"{CODE_VERSION}\",\"kind\":\"fuzz\",\"ops\":100,\"point\":{},\
+                 \"seed\":7,\"weights\":\"balanced\"}}",
+                MachinePoint::default().canonical()
+            )
+        );
+        // A budget changes the identity (prefix position: sorted keys).
+        let b = j.clone().with_budget(1000);
+        assert!(b.canonical().starts_with("{\"budget\":1000,\"code\":"));
+        assert_ne!(b.key(), j.key());
+    }
+
+    #[test]
+    fn job_keys_separate_points_workloads_and_code_version() {
+        let base = Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 4096);
+        let other_point = Job::sim(
+            MachinePoint { vlen: 512, ..Default::default() },
+            "memcpy",
+            Variant::Vector,
+            4096,
+        );
+        let other_wl = Job::sim(MachinePoint::default(), "prefix", Variant::Vector, 4096);
+        let other_variant = Job::sim(MachinePoint::default(), "memcpy", Variant::Scalar, 4096);
+        let keys = [base.key(), other_point.key(), other_wl.key(), other_variant.key()];
+        for (i, a) in keys.iter().enumerate() {
+            for b in keys.iter().skip(i + 1) {
+                assert_ne!(a, b, "distinct jobs must have distinct keys");
+            }
+        }
+        // Same job → same key, every time (content addressing).
+        let again = Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 4096);
+        assert_eq!(base.key(), again.key());
+        assert!(base.canonical().contains(CODE_VERSION), "key covers the code version");
+    }
+
+    #[test]
+    fn job_validation_rejects_garbage() {
+        let good = Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 4096);
+        assert!(good.validate().is_ok());
+        assert!(Job::sim(MachinePoint::default(), "nope", Variant::Vector, 1).validate().is_err());
+        assert!(Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 0)
+            .validate()
+            .is_err());
+        // dhrystone is scalar-only.
+        assert!(Job::sim(MachinePoint::default(), "dhrystone", Variant::Vector, 10)
+            .validate()
+            .is_err());
+        let bad_point = MachinePoint { vlen: 100, ..Default::default() };
+        assert!(Job::sim(bad_point, "memcpy", Variant::Vector, 4096).validate().is_err());
+        assert!(Job::fuzz(MachinePoint::default(), 1, 0, "balanced").validate().is_err());
+        assert!(Job::fuzz(MachinePoint::default(), 1, 100, "bogus").validate().is_err());
+        assert!(Job::fuzz(MachinePoint::default(), 1, 100, "alu=4,vec=1").validate().is_ok());
+    }
+
+    #[test]
+    fn execute_runs_sim_and_fuzz_jobs() {
+        let r = execute(&Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 16 * 1024))
+            .unwrap();
+        assert_eq!(r.verified, Some(true));
+        assert!(r.cycles > 0 && r.instret > 0 && r.bytes == 16 * 1024);
+        assert!(r.bytes_per_cycle() > 0.0);
+        assert!(r.metrics.contains_key("dual_issue_pairs"));
+
+        let f = execute(&Job::fuzz(MachinePoint::default(), 3, 60, "balanced")).unwrap();
+        assert_eq!(f.verified, Some(true));
+        assert!(f.instret > 0);
+    }
+
+    #[test]
+    fn execute_reports_wedged_points_as_errors() {
+        // A tiny instruction budget turns a healthy point into the
+        // "wedged simulation" shape: the watchdog trips and the job
+        // fails instead of running forever.
+        let j = Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 64 * 1024)
+            .with_budget(100);
+        let err = execute(&j).unwrap_err();
+        assert!(err.to_lowercase().contains("watchdog"), "{err}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Shared progress accounting for a grid run: lock-free counters the
+//! workers bump and the `--serve` `progress` command snapshots. One
+//! [`Progress`] value covers one submission; the server keeps one per
+//! submission id.
+
+use super::json::ObjWriter;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counters for one submitted grid. All methods take `&self` (atomics),
+/// so the value sits in an `Arc` shared by every worker.
+#[derive(Debug)]
+pub struct Progress {
+    total: AtomicU64,
+    completed: AtomicU64,
+    cached: AtomicU64,
+    failed: AtomicU64,
+    running: AtomicU64,
+    started: Instant,
+}
+
+impl Progress {
+    pub fn new(total: u64) -> Self {
+        Self {
+            total: AtomicU64::new(total),
+            completed: AtomicU64::new(0),
+            cached: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            running: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Grow the job universe (a second submission against the same
+    /// progress value).
+    pub fn add_total(&self, n: u64) {
+        self.total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn start_point(&self) {
+        self.running.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point finished executing. `ok == false` also counts `failed`.
+    pub fn finish_point(&self, ok: bool) {
+        self.running.fetch_sub(1, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A point served from the result store (counts as completed too —
+    /// the grid's work, not the machine's).
+    pub fn cache_hit(&self) {
+        self.cached.fetch_add(1, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point skipped without a terminal record (shutdown mid-grid).
+    pub fn abandon_point(&self) {
+        self.running.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            total: self.total.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            cached: self.cached.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            running: self.running.load(Ordering::Relaxed),
+            elapsed_ms: self.started.elapsed().as_millis() as u64,
+        }
+    }
+}
+
+/// One consistent-enough view of a [`Progress`] (individual counters
+/// are exact; the set is racy by a point or two while workers run —
+/// fine for a progress API).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    pub total: u64,
+    /// Terminal points: executed (ok or failed) + cached.
+    pub completed: u64,
+    pub cached: u64,
+    pub failed: u64,
+    pub running: u64,
+    pub elapsed_ms: u64,
+}
+
+impl ProgressSnapshot {
+    pub fn done(&self) -> bool {
+        self.completed >= self.total
+    }
+
+    /// Terminal points per second of wall clock (cache hits included:
+    /// the consumer cares about grid completion speed).
+    pub fn points_per_sec(&self) -> f64 {
+        if self.elapsed_ms == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * 1000.0 / self.elapsed_ms as f64
+    }
+
+    /// The progress object of the JSON API.
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_u64("cached", self.cached);
+        w.field_u64("completed", self.completed);
+        w.field_u64("elapsed_ms", self.elapsed_ms);
+        w.field_u64("failed", self.failed);
+        // points_per_sec rounds to 3 decimals so the line stays stable
+        // enough to eyeball; the raw counters carry the exact state.
+        w.field_f64("points_per_sec", (self.points_per_sec() * 1000.0).round() / 1000.0);
+        w.field_u64("running", self.running);
+        w.field_u64("total", self.total);
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::json::Value;
+
+    #[test]
+    fn counters_track_the_point_lifecycle() {
+        let p = Progress::new(4);
+        p.start_point();
+        let s = p.snapshot();
+        assert_eq!((s.total, s.running, s.completed), (4, 1, 0));
+        p.finish_point(true);
+        p.cache_hit();
+        p.start_point();
+        p.finish_point(false);
+        let s = p.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.cached, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.running, 0);
+        assert!(!s.done());
+        p.cache_hit();
+        assert!(p.snapshot().done());
+    }
+
+    #[test]
+    fn abandoned_points_leave_completion_untouched() {
+        let p = Progress::new(2);
+        p.start_point();
+        p.abandon_point();
+        let s = p.snapshot();
+        assert_eq!((s.running, s.completed), (0, 0));
+        p.add_total(3);
+        assert_eq!(p.snapshot().total, 5);
+    }
+
+    #[test]
+    fn snapshot_renders_valid_sorted_json() {
+        let p = Progress::new(10);
+        p.cache_hit();
+        let j = p.snapshot().to_json();
+        let v = Value::parse(&j).unwrap();
+        assert_eq!(v.get("total").unwrap().as_u64(), Some(10));
+        assert_eq!(v.get("cached").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("completed").unwrap().as_u64(), Some(1));
+        assert!(v.get("points_per_sec").unwrap().as_f64().is_some());
+        assert!(j.starts_with("{\"cached\":"), "sorted keys: {j}");
+    }
+
+    #[test]
+    fn rate_is_zero_before_any_time_passes() {
+        let s = ProgressSnapshot {
+            total: 1,
+            completed: 1,
+            cached: 0,
+            failed: 0,
+            running: 0,
+            elapsed_ms: 0,
+        };
+        assert_eq!(s.points_per_sec(), 0.0);
+        let s = ProgressSnapshot { elapsed_ms: 500, ..s };
+        assert_eq!(s.points_per_sec(), 2.0);
+    }
+}

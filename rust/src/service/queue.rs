@@ -1,0 +1,395 @@
+//! The job queue: deterministic shard assignment plus the grid runner
+//! that drains a shard with caching, per-point timeouts, bounded retry
+//! and progress accounting.
+//!
+//! Execution itself reuses the repo-wide bounded worker pool
+//! ([`crate::coordinator::sweep::parallel_map_bounded`]); what this
+//! module adds is the service policy around each point:
+//!
+//! 1. consult the [`ResultStore`] — a hit is returned without running
+//!    anything (and counted, so resume tests can assert on it);
+//! 2. execute with an optional wall-clock timeout (the attempt runs on
+//!    a detached thread so an abandoned simulation cannot wedge the
+//!    worker) and a bounded number of retries;
+//! 3. append the terminal record to the store *before* reporting it —
+//!    a crash never loses an acknowledged result.
+//!
+//! Sharding is pure arithmetic on the content hash ([`shard_of`]), so
+//! independent processes given `--shards N --shard I` partition any
+//! grid deterministically with no coordination beyond sharing nothing.
+
+use super::progress::Progress;
+use super::store::{ResultRecord, ResultStore};
+use super::{Job, Outcome};
+use crate::coordinator::sweep::{parallel_map_bounded, Parallelism};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Deterministic shard assignment: a job belongs to shard
+/// `key mod shards`. Stable across processes and runs because the key
+/// is the FNV-1a content hash — every worker computes the same
+/// partition independently.
+pub fn shard_of(key: u64, shards: u64) -> u64 {
+    key % shards.max(1)
+}
+
+/// Keep only the jobs belonging to `shard` of `shards`.
+pub fn shard_filter(jobs: Vec<Job>, shard: u64, shards: u64) -> Vec<Job> {
+    jobs.into_iter().filter(|j| shard_of(j.key(), shards) == shard).collect()
+}
+
+/// Policy knobs for one grid run.
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    pub parallelism: Parallelism,
+    /// Wall-clock limit per *attempt* (`None` = unbounded; the
+    /// retired-instruction budget on the job still applies).
+    pub timeout: Option<Duration>,
+    /// Re-executions after a failed first attempt (attempts =
+    /// `retries + 1`).
+    pub retries: u32,
+    /// Stop starting points after this many have been *executed*
+    /// (cache hits excluded). Used to simulate a crash mid-grid in the
+    /// resume tests; unfinished points come back as `None`.
+    pub stop_after: Option<usize>,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self { parallelism: Parallelism::auto(), timeout: None, retries: 1, stop_after: None }
+    }
+}
+
+/// An executor: turns a job into an outcome. Shared (`Arc`) because
+/// timed attempts run on detached threads that may outlive the grid
+/// call. [`default_exec`] wraps [`super::execute`]; tests substitute
+/// stubs.
+pub type Exec = Arc<dyn Fn(&Job) -> Result<Outcome, String> + Send + Sync + 'static>;
+
+/// The production executor: run the simulation/fuzz case in-process.
+pub fn default_exec() -> Exec {
+    Arc::new(|job: &Job| super::execute(job))
+}
+
+/// One attempt, optionally under a wall-clock limit. With a timeout the
+/// attempt runs on a detached thread: `recv_timeout` abandons it on
+/// expiry (the thread parks on a dead channel when it eventually
+/// finishes and exits — detached, so nobody joins on it). A panicking
+/// attempt surfaces as an error either way.
+fn attempt(exec: &Exec, job: &Job, timeout: Option<Duration>) -> Result<Outcome, String> {
+    match timeout {
+        None => catch_unwind(AssertUnwindSafe(|| exec(job)))
+            .unwrap_or_else(|p| Err(format!("executor panicked: {}", panic_text(&p)))),
+        Some(limit) => {
+            let (tx, rx) = mpsc::channel();
+            let exec = Arc::clone(exec);
+            let job = job.clone();
+            std::thread::spawn(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| exec(&job)))
+                    .unwrap_or_else(|p| Err(format!("executor panicked: {}", panic_text(&p))));
+                let _ = tx.send(r); // receiver may have timed out; fine
+            });
+            match rx.recv_timeout(limit) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    Err(format!("timeout: attempt exceeded {} ms", limit.as_millis()))
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err("executor thread died before reporting".to_string())
+                }
+            }
+        }
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Drain a grid of jobs: serve each point from `store` when possible,
+/// execute the rest under the options' timeout/retry policy, append
+/// every terminal record to the store, and call `on_result` as each
+/// point lands (the serve loop streams these as `result` events).
+///
+/// Returns one entry per input job, in input order; `None` marks a
+/// point abandoned by `stop_after` (the simulated crash). The caller
+/// is responsible for setting `progress.add_total` — this function
+/// only moves points through the running/completed/cached/failed
+/// states.
+pub fn run_grid(
+    jobs: Vec<Job>,
+    store: &Mutex<ResultStore>,
+    progress: &Progress,
+    opts: &GridOptions,
+    exec: &Exec,
+    on_result: impl Fn(&ResultRecord) + Sync,
+) -> Vec<Option<ResultRecord>> {
+    let cancelled = AtomicBool::new(false);
+    let executed = AtomicUsize::new(0);
+    let workers = opts.parallelism.workers();
+    parallel_map_bounded(jobs, workers, |job| {
+        if cancelled.load(Ordering::Relaxed) {
+            return None;
+        }
+        // Invalid jobs become failed records up front — a bad point in
+        // a thousand-point grid is a row in the report, not a panic.
+        if let Err(e) = job.validate() {
+            let rec = ResultRecord::failed(job, format!("invalid job: {e}"), 0, 0);
+            let _ = store.lock().expect("store lock").record(&rec);
+            progress.start_point();
+            progress.finish_point(false);
+            on_result(&rec);
+            return Some(rec);
+        }
+        let key = job.key();
+        if let Some(hit) = store.lock().expect("store lock").lookup(key) {
+            progress.cache_hit();
+            on_result(&hit);
+            return Some(hit);
+        }
+        progress.start_point();
+        let attempts = opts.retries + 1;
+        let mut last_err = String::new();
+        for n in 1..=attempts {
+            if cancelled.load(Ordering::Relaxed) {
+                progress.abandon_point();
+                return None;
+            }
+            let t0 = Instant::now();
+            let result = attempt(exec, &job, opts.timeout);
+            let wall_ms = t0.elapsed().as_millis() as u64;
+            match result {
+                Ok(outcome) => {
+                    let rec = ResultRecord::ok(job, outcome, n, wall_ms);
+                    let _ = store.lock().expect("store lock").record(&rec);
+                    progress.finish_point(true);
+                    on_result(&rec);
+                    bump_executed(&executed, &cancelled, opts.stop_after);
+                    return Some(rec);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        let rec = ResultRecord::failed(job, last_err, attempts, 0);
+        let _ = store.lock().expect("store lock").record(&rec);
+        progress.finish_point(false);
+        on_result(&rec);
+        bump_executed(&executed, &cancelled, opts.stop_after);
+        Some(rec)
+    })
+}
+
+fn bump_executed(executed: &AtomicUsize, cancelled: &AtomicBool, stop_after: Option<usize>) {
+    let n = executed.fetch_add(1, Ordering::Relaxed) + 1;
+    if let Some(limit) = stop_after {
+        if n >= limit {
+            cancelled.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::MachinePoint;
+    use crate::workloads::Variant;
+
+    fn grid(n: usize) -> Vec<Job> {
+        // n distinct, valid jobs (sizes 1KiB, 2KiB, ...).
+        (1..=n)
+            .map(|i| Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, i * 1024))
+            .collect()
+    }
+
+    /// Instant fake executor so queue-policy tests don't simulate.
+    fn stub_exec() -> Exec {
+        Arc::new(|job: &Job| {
+            Ok(Outcome {
+                cycles: job.key() | 1, // nonzero, job-dependent
+                instret: 1,
+                bytes: 1,
+                fmax_mhz: 150.0,
+                verified: Some(true),
+                metrics: Default::default(),
+            })
+        })
+    }
+
+    fn opts_serial() -> GridOptions {
+        GridOptions { parallelism: Parallelism::fixed(1), ..Default::default() }
+    }
+
+    #[test]
+    fn sharding_is_deterministic_disjoint_and_complete() {
+        let jobs = grid(40);
+        assert_eq!(shard_of(10, 3), shard_of(10, 3));
+        assert_eq!(shard_of(5, 0), 0, "zero shards behaves as one");
+        let shards = 3u64;
+        let parts: Vec<Vec<Job>> =
+            (0..shards).map(|s| shard_filter(jobs.clone(), s, shards)).collect();
+        let total: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total, jobs.len(), "shards partition the grid");
+        for (i, part) in parts.iter().enumerate() {
+            for job in part {
+                assert_eq!(shard_of(job.key(), shards), i as u64);
+                // Disjoint: the job appears in no other shard.
+                for (k, other) in parts.iter().enumerate() {
+                    assert_eq!(other.contains(job), k == i);
+                }
+            }
+        }
+        // Stability across calls (pure function of content hash).
+        assert_eq!(shard_filter(jobs.clone(), 1, shards), parts[1].clone());
+    }
+
+    #[test]
+    fn run_grid_executes_then_serves_from_cache() {
+        let store = Mutex::new(ResultStore::in_memory());
+        let jobs = grid(5);
+        let progress = Progress::new(jobs.len() as u64);
+        let first = run_grid(jobs.clone(), &store, &progress, &opts_serial(), &stub_exec(), |_| {});
+        assert_eq!(first.len(), 5);
+        assert!(first.iter().all(|r| r.as_ref().is_some_and(|r| !r.from_cache)));
+        assert_eq!(store.lock().unwrap().hits(), 0);
+        assert!(progress.snapshot().done());
+
+        // Same grid, same store: 100% cache hits, zero executions.
+        let p2 = Progress::new(jobs.len() as u64);
+        let streamed = AtomicUsize::new(0);
+        let second = run_grid(jobs.clone(), &store, &p2, &opts_serial(), &stub_exec(), |r| {
+            assert!(r.from_cache);
+            streamed.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(second.iter().all(|r| r.as_ref().is_some_and(|r| r.from_cache)));
+        assert_eq!(store.lock().unwrap().hits(), 5);
+        assert_eq!(streamed.load(Ordering::Relaxed), 5);
+        assert_eq!(p2.snapshot().cached, 5);
+        // Order preserved: outcome matches each job's own key.
+        for (job, rec) in jobs.iter().zip(&second) {
+            assert_eq!(rec.as_ref().unwrap().outcome.as_ref().unwrap().cycles, job.key() | 1);
+        }
+    }
+
+    #[test]
+    fn retries_are_bounded_and_success_after_retry_sticks() {
+        // Fails twice, then succeeds.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let flaky: Exec = Arc::new(move |_job: &Job| {
+            if c.fetch_add(1, Ordering::Relaxed) < 2 {
+                Err("transient".to_string())
+            } else {
+                Ok(Outcome { cycles: 1, ..Default::default() })
+            }
+        });
+        let store = Mutex::new(ResultStore::in_memory());
+        let opts = GridOptions { retries: 2, ..opts_serial() };
+        let out = run_grid(grid(1), &store, &Progress::new(1), &opts, &flaky, |_| {});
+        let rec = out[0].as_ref().unwrap();
+        assert_eq!(rec.status, super::super::JobStatus::Ok);
+        assert_eq!(rec.attempts, 3);
+
+        // Always failing: bounded at retries + 1 attempts, marked failed.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let broken: Exec = Arc::new(move |_job: &Job| {
+            c.fetch_add(1, Ordering::Relaxed);
+            Err("hard failure".to_string())
+        });
+        let store = Mutex::new(ResultStore::in_memory());
+        let progress = Progress::new(1);
+        let out = run_grid(grid(1), &store, &progress, &opts, &broken, |_| {});
+        let rec = out[0].as_ref().unwrap();
+        assert_eq!(rec.status, super::super::JobStatus::Failed);
+        assert_eq!(rec.attempts, 3);
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        assert_eq!(rec.error.as_deref(), Some("hard failure"));
+        assert_eq!(progress.snapshot().failed, 1);
+        // Failed records are persisted but not cache-servable.
+        assert_eq!(store.lock().unwrap().len(), 1);
+        assert_eq!(store.lock().unwrap().completed(), 0);
+    }
+
+    #[test]
+    fn wall_clock_timeout_fails_the_point_without_stalling_the_shard() {
+        let sleeper: Exec = Arc::new(|_job: &Job| {
+            std::thread::sleep(Duration::from_secs(30));
+            Ok(Outcome::default())
+        });
+        let store = Mutex::new(ResultStore::in_memory());
+        let opts = GridOptions {
+            timeout: Some(Duration::from_millis(40)),
+            retries: 0,
+            ..opts_serial()
+        };
+        let t0 = Instant::now();
+        let out = run_grid(grid(2), &store, &Progress::new(2), &opts, &sleeper, |_| {});
+        assert!(t0.elapsed() < Duration::from_secs(10), "timeout must abandon the attempt");
+        for rec in out.iter().map(|r| r.as_ref().unwrap()) {
+            assert_eq!(rec.status, super::super::JobStatus::Failed);
+            assert!(rec.error.as_deref().unwrap().contains("timeout"), "{:?}", rec.error);
+            assert_eq!(rec.attempts, 1);
+        }
+    }
+
+    #[test]
+    fn panicking_executor_becomes_a_failed_record() {
+        let bomb: Exec = Arc::new(|_job: &Job| panic!("executor bug"));
+        let store = Mutex::new(ResultStore::in_memory());
+        let opts = GridOptions { retries: 0, ..opts_serial() };
+        let out = run_grid(grid(1), &store, &Progress::new(1), &opts, &bomb, |_| {});
+        let rec = out[0].as_ref().unwrap();
+        assert_eq!(rec.status, super::super::JobStatus::Failed);
+        assert!(rec.error.as_deref().unwrap().contains("executor bug"), "{:?}", rec.error);
+    }
+
+    #[test]
+    fn invalid_jobs_fail_fast_without_executing() {
+        let exec_calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&exec_calls);
+        let counting: Exec = Arc::new(move |_job: &Job| {
+            c.fetch_add(1, Ordering::Relaxed);
+            Ok(Outcome::default())
+        });
+        let store = Mutex::new(ResultStore::in_memory());
+        let bad = vec![Job::sim(MachinePoint::default(), "no-such-workload", Variant::Vector, 1)];
+        let out = run_grid(bad, &store, &Progress::new(1), &opts_serial(), &counting, |_| {});
+        let rec = out[0].as_ref().unwrap();
+        assert_eq!(rec.status, super::super::JobStatus::Failed);
+        assert!(rec.error.as_deref().unwrap().contains("unknown workload"));
+        assert_eq!(exec_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stop_after_simulates_a_crash_and_resume_serves_the_survivors() {
+        let store = Mutex::new(ResultStore::in_memory());
+        let jobs = grid(6);
+        // "Crash" after 2 executed points (serial, so exactly 2).
+        let crash = GridOptions { stop_after: Some(2), ..opts_serial() };
+        let out = run_grid(jobs.clone(), &store, &Progress::new(6), &crash, &stub_exec(), |_| {});
+        assert_eq!(out.iter().filter(|r| r.is_some()).count(), 2);
+        assert_eq!(out.iter().filter(|r| r.is_none()).count(), 4);
+        assert_eq!(store.lock().unwrap().len(), 2);
+
+        // Restart against the same store: survivors come from cache,
+        // the rest execute; the final result set is complete.
+        let progress = Progress::new(6);
+        let resumed = run_grid(jobs, &store, &progress, &opts_serial(), &stub_exec(), |_| {});
+        assert!(resumed.iter().all(Option::is_some));
+        assert_eq!(store.lock().unwrap().hits(), 2);
+        let s = progress.snapshot();
+        assert_eq!((s.cached, s.completed), (2, 6));
+        assert_eq!(
+            resumed.iter().filter(|r| r.as_ref().unwrap().from_cache).count(),
+            2
+        );
+    }
+}

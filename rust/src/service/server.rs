@@ -1,0 +1,632 @@
+//! `--serve` mode: a line-delimited JSON API over stdio or a local TCP
+//! socket. One JSON object per line in, one per line out; background
+//! grid runs stream `result` events interleaved with command replies
+//! (every line is self-describing, so clients just parse each line and
+//! dispatch on `ok`/`event`).
+//!
+//! ## Protocol
+//!
+//! Requests (`cmd` field):
+//!
+//! - `{"cmd":"ping"}` → `{"ok":true,"reply":"pong","version":...}`
+//! - `{"cmd":"submit", ...}` — build a job grid and start running it in
+//!   the background. Fields:
+//!   - `"sim": {"workloads":[...], "variants":[...], "size":N}` —
+//!     scenario jobs (variants defaults to each workload's supported
+//!     set; size to its default size);
+//!   - `"fuzz": {"base_seed":N, "seeds":N, "ops":N, "weights":"..."}` —
+//!     differential-fuzz jobs, one per seed;
+//!   - `"point": {"mshrs":4, ...}` — base machine-point overrides;
+//!   - `"sweep": {"vlen":[128,256], ...}` — machine axes to cross
+//!     (cartesian product);
+//!   - `"budget"`, `"timeout_ms"`, `"retries"` — per-point policy
+//!     overrides; `"shards"`/`"shard"` — deterministic partition
+//!     selection ([`super::shard_of`]).
+//!
+//!   Replies `{"id":N,"jobs":J,"ok":true}` immediately, then emits one
+//!   `{"cached":...,"event":"result","id":N,"label":...,"record":{...}}`
+//!   per terminal point and a final `{"event":"done","id":N,
+//!   "progress":{...}}`.
+//! - `{"cmd":"progress"}` / `{"cmd":"progress","id":N}` — snapshot(s)
+//!   of submission progress (completed/cached/failed/running and
+//!   points/sec).
+//! - `{"cmd":"shutdown"}` — drain every running submission, reply
+//!   `{"ok":true,"reply":"bye"}`, close the session. EOF drains too
+//!   (results already acknowledged are in the store either way).
+//!
+//! Malformed input never kills the session: it produces
+//! `{"error":...,"ok":false}`.
+//!
+//! Two concurrent submissions of the *same* grid may both execute a
+//! point (each missed the cache before the other recorded); the store
+//! appends both records and serves the latest — duplicated work, never
+//! wrong results.
+
+use super::json::{ObjWriter, Value};
+use super::progress::Progress;
+use super::queue::{self, GridOptions};
+use super::store::ResultStore;
+use super::Job;
+use crate::coordinator::sweep::{MachinePoint, Parallelism};
+use crate::workloads::{self, Variant};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Server-side defaults for submissions that don't override them.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub parallelism: Parallelism,
+    /// Default per-attempt wall-clock limit.
+    pub timeout: Option<Duration>,
+    /// Default retry bound.
+    pub retries: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { parallelism: Parallelism::auto(), timeout: None, retries: 1 }
+    }
+}
+
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+fn emit(w: &SharedWriter, line: &str) {
+    let mut g = w.lock().expect("writer lock");
+    let _ = writeln!(g, "{line}");
+    let _ = g.flush();
+}
+
+fn error_line(msg: &str) -> String {
+    let mut w = ObjWriter::new();
+    w.field_str("error", msg).field_bool("ok", false);
+    w.finish()
+}
+
+/// Serve one session over arbitrary reader/writer (the `--serve` stdio
+/// mode, and every test harness). Consumes the store; returns it when
+/// the session ends so a caller can inspect or reuse it.
+pub fn serve(
+    input: impl BufRead,
+    output: impl Write + Send + 'static,
+    store: ResultStore,
+    cfg: &ServeConfig,
+) -> ResultStore {
+    let store = Arc::new(Mutex::new(store));
+    let writer: SharedWriter = Arc::new(Mutex::new(Box::new(output)));
+    let next_id = AtomicU64::new(1);
+    serve_conn(input, &writer, &store, cfg, &next_id);
+    Arc::try_unwrap(store)
+        .unwrap_or_else(|_| panic!("submissions drained, no store refs remain"))
+        .into_inner()
+        .expect("store lock")
+}
+
+/// Serve TCP clients sequentially until one sends `shutdown`. Local
+/// tooling speaks the same protocol as stdio; binding is the caller's
+/// responsibility (use `127.0.0.1:0` and print the port for tests).
+pub fn serve_tcp(listener: &TcpListener, store: ResultStore, cfg: &ServeConfig) -> ResultStore {
+    let store = Arc::new(Mutex::new(store));
+    let next_id = AtomicU64::new(1);
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        let reader = BufReader::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => continue,
+        });
+        let writer: SharedWriter = Arc::new(Mutex::new(Box::new(stream)));
+        if serve_conn(reader, &writer, &store, cfg, &next_id) {
+            break;
+        }
+    }
+    Arc::try_unwrap(store)
+        .unwrap_or_else(|_| panic!("submissions drained, no store refs remain"))
+        .into_inner()
+        .expect("store lock")
+}
+
+/// One client session. Returns `true` when the client asked the server
+/// to shut down (vs just disconnecting).
+fn serve_conn(
+    input: impl BufRead,
+    writer: &SharedWriter,
+    store: &Arc<Mutex<ResultStore>>,
+    cfg: &ServeConfig,
+    next_id: &AtomicU64,
+) -> bool {
+    let mut running: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut submissions: HashMap<u64, Arc<Progress>> = HashMap::new();
+    let mut shutdown = false;
+    for line in input.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = match Value::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                emit(writer, &error_line(&format!("bad request: {e}")));
+                continue;
+            }
+        };
+        match v.get("cmd").and_then(Value::as_str) {
+            Some("ping") => {
+                let mut w = ObjWriter::new();
+                w.field_bool("ok", true)
+                    .field_str("reply", "pong")
+                    .field_str("version", super::CODE_VERSION);
+                emit(writer, &w.finish());
+            }
+            Some("submit") => match parse_submit(&v) {
+                Err(e) => emit(writer, &error_line(&e)),
+                Ok(jobs) => {
+                    let id = next_id.fetch_add(1, Ordering::Relaxed);
+                    let progress = Arc::new(Progress::new(jobs.len() as u64));
+                    submissions.insert(id, Arc::clone(&progress));
+                    let mut w = ObjWriter::new();
+                    w.field_u64("id", id)
+                        .field_u64("jobs", jobs.len() as u64)
+                        .field_bool("ok", true);
+                    emit(writer, &w.finish());
+                    let opts = submit_options(&v, cfg);
+                    let store = Arc::clone(store);
+                    let out = Arc::clone(writer);
+                    running.push(std::thread::spawn(move || {
+                        run_submission(id, jobs, &store, &progress, &opts, &out);
+                    }));
+                }
+            },
+            Some("progress") => match v.get("id").and_then(Value::as_u64) {
+                Some(id) => match submissions.get(&id) {
+                    None => emit(writer, &error_line(&format!("unknown submission id {id}"))),
+                    Some(p) => {
+                        let mut w = ObjWriter::new();
+                        w.field_u64("id", id)
+                            .field_bool("ok", true)
+                            .field_raw("progress", &p.snapshot().to_json());
+                        emit(writer, &w.finish());
+                    }
+                },
+                None => {
+                    let mut ids: Vec<&u64> = submissions.keys().collect();
+                    ids.sort_unstable();
+                    let subs: Vec<String> = ids
+                        .into_iter()
+                        .map(|id| {
+                            let mut w = ObjWriter::new();
+                            w.field_u64("id", *id)
+                                .field_raw("progress", &submissions[id].snapshot().to_json());
+                            w.finish()
+                        })
+                        .collect();
+                    let mut w = ObjWriter::new();
+                    w.field_bool("ok", true)
+                        .field_raw("submissions", &format!("[{}]", subs.join(",")));
+                    emit(writer, &w.finish());
+                }
+            },
+            Some("shutdown") => {
+                for h in running.drain(..) {
+                    let _ = h.join();
+                }
+                let mut w = ObjWriter::new();
+                w.field_bool("ok", true).field_str("reply", "bye");
+                emit(writer, &w.finish());
+                shutdown = true;
+                break;
+            }
+            Some(other) => {
+                emit(writer, &error_line(&format!("unknown cmd '{other}'")));
+            }
+            None => emit(writer, &error_line("request needs a string 'cmd' field")),
+        }
+    }
+    // EOF or shutdown: drain outstanding submissions either way so the
+    // store is quiescent when the session ends.
+    for h in running {
+        let _ = h.join();
+    }
+    shutdown
+}
+
+/// Run one submission's grid, streaming `result` events and the final
+/// `done` event.
+fn run_submission(
+    id: u64,
+    jobs: Vec<Job>,
+    store: &Mutex<ResultStore>,
+    progress: &Progress,
+    opts: &GridOptions,
+    out: &SharedWriter,
+) {
+    let exec = queue::default_exec();
+    queue::run_grid(jobs, store, progress, opts, &exec, |rec| {
+        let mut w = ObjWriter::new();
+        w.field_bool("cached", rec.from_cache)
+            .field_str("event", "result")
+            .field_u64("id", id)
+            .field_str("label", &rec.job.label())
+            .field_raw("record", &rec.to_json());
+        emit(out, &w.finish());
+    });
+    let mut w = ObjWriter::new();
+    w.field_str("event", "done")
+        .field_u64("id", id)
+        .field_raw("progress", &progress.snapshot().to_json());
+    emit(out, &w.finish());
+}
+
+/// Grid policy for one submission: server defaults plus per-submission
+/// overrides.
+fn submit_options(v: &Value, cfg: &ServeConfig) -> GridOptions {
+    GridOptions {
+        parallelism: cfg.parallelism,
+        timeout: v
+            .get("timeout_ms")
+            .and_then(Value::as_u64)
+            .map(Duration::from_millis)
+            .or(cfg.timeout),
+        retries: v.get("retries").and_then(Value::as_u64).map(|n| n as u32).unwrap_or(cfg.retries),
+        stop_after: None,
+    }
+}
+
+/// Expand a `submit` request into its job list (validated enough to
+/// reject whole-request mistakes up front; per-point validation happens
+/// again in the queue).
+fn parse_submit(v: &Value) -> Result<Vec<Job>, String> {
+    // Base machine point + sweep axes → point grid.
+    let mut base = MachinePoint::default();
+    if let Some(overrides) = v.get("point") {
+        let obj = overrides.as_obj().ok_or("'point' must be an object")?;
+        for (axis, val) in obj {
+            let n = val.as_usize().ok_or_else(|| format!("bad value for point axis '{axis}'"))?;
+            if !base.set(axis, n) {
+                return Err(format!(
+                    "unknown machine axis '{axis}' (axes: {})",
+                    MachinePoint::AXES.join(", ")
+                ));
+            }
+        }
+    }
+    let mut grid = vec![base];
+    if let Some(sweep) = v.get("sweep") {
+        let obj = sweep.as_obj().ok_or("'sweep' must be an object of axis:[values]")?;
+        for (axis, vals) in obj {
+            if !MachinePoint::is_axis(axis) {
+                return Err(format!(
+                    "unknown sweep axis '{axis}' (axes: {})",
+                    MachinePoint::AXES.join(", ")
+                ));
+            }
+            let vals: Vec<usize> = vals
+                .as_arr()
+                .ok_or_else(|| format!("sweep axis '{axis}' must map to an array"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| format!("bad value in sweep axis '{axis}'")))
+                .collect::<Result<_, _>>()?;
+            if vals.is_empty() {
+                return Err(format!("sweep axis '{axis}' has no values"));
+            }
+            let mut expanded = Vec::with_capacity(grid.len() * vals.len());
+            for p in &grid {
+                for &val in &vals {
+                    let mut p = *p;
+                    p.set(axis, val);
+                    expanded.push(p);
+                }
+            }
+            grid = expanded;
+        }
+    }
+
+    let budget = match v.get("budget") {
+        None => None,
+        Some(b) => Some(b.as_u64().ok_or("'budget' must be a non-negative integer")?),
+    };
+
+    let mut jobs = Vec::new();
+    if let Some(sim) = v.get("sim") {
+        let names: Vec<String> = sim
+            .get("workloads")
+            .and_then(Value::as_arr)
+            .ok_or("'sim' needs a 'workloads' array")?
+            .iter()
+            .map(|w| {
+                w.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "workload names must be strings".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let requested: Option<Vec<Variant>> = match sim.get("variants") {
+            None => None,
+            Some(arr) => Some(
+                arr.as_arr()
+                    .ok_or("'variants' must be an array")?
+                    .iter()
+                    .map(|s| {
+                        s.as_str()
+                            .and_then(Variant::parse)
+                            .ok_or_else(|| "variants are \"scalar\" or \"vector\"".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+            ),
+        };
+        for name in &names {
+            let probe = workloads::lookup(name)
+                .ok_or_else(|| format!("unknown workload '{name}'"))?;
+            let variants: Vec<Variant> = match &requested {
+                // Unspecified: everything the workload implements.
+                None => probe.variants().to_vec(),
+                Some(req) => req.clone(),
+            };
+            let size = match sim.get("size") {
+                None => probe.default_size(),
+                Some(s) => s.as_usize().ok_or("'size' must be a positive integer")?,
+            };
+            for &point in &grid {
+                for &variant in &variants {
+                    let mut job = Job::sim(point, name.clone(), variant, size);
+                    job.budget = budget;
+                    jobs.push(job);
+                }
+            }
+        }
+    }
+    if let Some(fz) = v.get("fuzz") {
+        if fz.as_obj().is_none() {
+            return Err("'fuzz' must be an object".to_string());
+        }
+        let u = |field: &str, default: u64| -> Result<u64, String> {
+            match fz.get(field) {
+                None => Ok(default),
+                Some(x) => x.as_u64().ok_or_else(|| format!("bad 'fuzz.{field}'")),
+            }
+        };
+        let base_seed = u("base_seed", 1)?;
+        let seeds = u("seeds", 16)?;
+        let ops = u("ops", 300)? as usize;
+        let weights = match fz.get("weights") {
+            None => "balanced".to_string(),
+            Some(w) => w.as_str().ok_or("'fuzz.weights' must be a string")?.to_string(),
+        };
+        super::resolve_weights(&weights)?;
+        for mut job in crate::fuzz::seed_jobs(&grid, base_seed, seeds, ops, &weights) {
+            job.budget = budget;
+            jobs.push(job);
+        }
+    }
+    if jobs.is_empty() {
+        return Err("submit needs a 'sim' and/or 'fuzz' section producing at least one job".into());
+    }
+
+    // Deterministic shard selection, if requested.
+    if let Some(shards) = v.get("shards").and_then(Value::as_u64) {
+        let shard = v.get("shard").and_then(Value::as_u64).unwrap_or(0);
+        if shard >= shards.max(1) {
+            return Err(format!("shard {shard} out of range for {shards} shards"));
+        }
+        jobs = queue::shard_filter(jobs, shard, shards);
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A `Write` the test can read back after `serve` returns.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn run_session(script: &str, store: ResultStore) -> (Vec<Value>, ResultStore) {
+        let out = SharedBuf::default();
+        let store =
+            serve(Cursor::new(script.to_string()), out.clone(), store, &ServeConfig::default());
+        let bytes = out.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines = text
+            .lines()
+            .map(|l| Value::parse(l).unwrap_or_else(|e| panic!("bad output line '{l}': {e}")))
+            .collect();
+        (lines, store)
+    }
+
+    fn count_events(lines: &[Value], kind: &str) -> usize {
+        lines
+            .iter()
+            .filter(|l| l.get("event").and_then(Value::as_str) == Some(kind))
+            .count()
+    }
+
+    #[test]
+    fn scripted_session_pings_submits_and_streams_results() {
+        let script = "\
+            {\"cmd\":\"ping\"}\n\
+            {\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\"variants\":[\"vector\"],\
+             \"size\":4096},\"sweep\":{\"vlen\":[128,256]}}\n\
+            {\"cmd\":\"shutdown\"}\n";
+        let (lines, store) = run_session(script, ResultStore::in_memory());
+        // Command replies in order: pong, submit ack, bye.
+        assert_eq!(lines[0].get("reply").and_then(Value::as_str), Some("pong"));
+        assert!(lines[0].get("version").and_then(Value::as_str).is_some());
+        let ack = lines
+            .iter()
+            .find(|l| l.get("jobs").is_some())
+            .expect("submit acknowledgement");
+        assert_eq!(ack.get("jobs").and_then(Value::as_u64), Some(2));
+        assert_eq!(ack.get("ok").and_then(Value::as_bool), Some(true));
+        // Two result events + one done event, then bye last.
+        assert_eq!(count_events(&lines, "result"), 2);
+        assert_eq!(count_events(&lines, "done"), 1);
+        assert_eq!(lines.last().unwrap().get("reply").and_then(Value::as_str), Some("bye"));
+        let done = lines
+            .iter()
+            .find(|l| l.get("event").and_then(Value::as_str) == Some("done"))
+            .unwrap();
+        let p = done.get("progress").unwrap();
+        assert_eq!(p.get("completed").and_then(Value::as_u64), Some(2));
+        assert_eq!(p.get("failed").and_then(Value::as_u64), Some(0));
+        // Results landed in the store.
+        assert_eq!(store.completed(), 2);
+    }
+
+    #[test]
+    fn malformed_and_unknown_requests_get_error_replies_not_disconnects() {
+        let script = "\
+            this is not json\n\
+            {\"cmd\":\"frobnicate\"}\n\
+            {\"nocmd\":1}\n\
+            {\"cmd\":\"submit\"}\n\
+            {\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"nope\"]}}\n\
+            {\"cmd\":\"progress\",\"id\":99}\n\
+            {\"cmd\":\"ping\"}\n";
+        let (lines, _) = run_session(script, ResultStore::in_memory());
+        assert_eq!(lines.len(), 7, "every request gets exactly one reply");
+        for l in &lines[..6] {
+            assert_eq!(l.get("ok").and_then(Value::as_bool), Some(false), "{l:?}");
+            assert!(l.get("error").and_then(Value::as_str).is_some());
+        }
+        // The session survived to answer the final ping.
+        assert_eq!(lines[6].get("reply").and_then(Value::as_str), Some("pong"));
+    }
+
+    #[test]
+    fn resubmitting_a_grid_against_a_persisted_store_is_all_cache_hits() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("simdsoftcore_serve_cache_{}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let submit = "{\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\
+                      \"variants\":[\"vector\"],\"size\":4096},\
+                      \"sweep\":{\"mshrs\":[1,4]}}\n{\"cmd\":\"shutdown\"}\n";
+        let (first, _) = run_session(submit, ResultStore::open(&path).unwrap());
+        assert_eq!(count_events(&first, "result"), 2);
+        let cached_first = first
+            .iter()
+            .filter(|l| l.get("cached").and_then(Value::as_bool) == Some(true))
+            .count();
+        assert_eq!(cached_first, 0);
+
+        // Fresh session, same store file: everything is served cached.
+        let (second, store) = run_session(submit, ResultStore::open(&path).unwrap());
+        assert_eq!(count_events(&second, "result"), 2);
+        let cached_second = second
+            .iter()
+            .filter(|l| {
+                l.get("event").and_then(Value::as_str) == Some("result")
+                    && l.get("cached").and_then(Value::as_bool) == Some(true)
+            })
+            .count();
+        assert_eq!(cached_second, 2, "second run must be 100% cache hits");
+        assert_eq!(store.hits(), 2);
+        let done = second
+            .iter()
+            .find(|l| l.get("event").and_then(Value::as_str) == Some("done"))
+            .unwrap();
+        assert_eq!(done.get("progress").unwrap().get("cached").and_then(Value::as_u64), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn progress_command_reports_submissions() {
+        // Progress for a finished submission (drained by shutdown) and
+        // the aggregate form.
+        let script = "{\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\
+                      \"variants\":[\"vector\"],\"size\":4096}}\n\
+                      {\"cmd\":\"progress\",\"id\":1}\n\
+                      {\"cmd\":\"progress\"}\n\
+                      {\"cmd\":\"shutdown\"}\n";
+        let (lines, _) = run_session(script, ResultStore::in_memory());
+        let by_id = lines
+            .iter()
+            .find(|l| l.get("id").is_some() && l.get("progress").is_some())
+            .expect("progress reply");
+        assert_eq!(by_id.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(
+            by_id.get("progress").unwrap().get("total").and_then(Value::as_u64),
+            Some(1)
+        );
+        let agg = lines
+            .iter()
+            .find(|l| l.get("submissions").is_some())
+            .expect("aggregate progress reply");
+        assert_eq!(agg.get("submissions").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fuzz_submissions_run_seed_ranges_as_jobs() {
+        let script = "{\"cmd\":\"submit\",\"fuzz\":{\"base_seed\":5,\"seeds\":3,\"ops\":60}}\n\
+                      {\"cmd\":\"shutdown\"}\n";
+        let (lines, store) = run_session(script, ResultStore::in_memory());
+        let ack = lines.iter().find(|l| l.get("jobs").is_some()).unwrap();
+        assert_eq!(ack.get("jobs").and_then(Value::as_u64), Some(3));
+        assert_eq!(count_events(&lines, "result"), 3);
+        assert_eq!(store.completed(), 3, "all fuzz seeds agreed with the reference ISS");
+    }
+
+    #[test]
+    fn sharded_submissions_partition_the_grid() {
+        // The same submission with shards=2, shard 0 and 1 must cover
+        // the full 4-point grid exactly once between them.
+        let sub = |shard: u64| {
+            format!(
+                "{{\"cmd\":\"submit\",\"sim\":{{\"workloads\":[\"memcpy\"],\
+                 \"variants\":[\"vector\"],\"size\":4096}},\
+                 \"sweep\":{{\"vlen\":[128,256],\"mshrs\":[1,4]}},\
+                 \"shards\":2,\"shard\":{shard}}}\n{{\"cmd\":\"shutdown\"}}\n"
+            )
+        };
+        let (l0, s0) = run_session(&sub(0), ResultStore::in_memory());
+        let (l1, s1) = run_session(&sub(1), ResultStore::in_memory());
+        let j0 = l0.iter().find_map(|l| l.get("jobs").and_then(Value::as_u64)).unwrap();
+        let j1 = l1.iter().find_map(|l| l.get("jobs").and_then(Value::as_u64)).unwrap();
+        assert_eq!(j0 + j1, 4, "shards partition the grid ({j0} + {j1})");
+        assert_eq!(s0.completed() + s1.completed(), 4);
+        // Out-of-range shard is rejected.
+        let bad = "{\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\"size\":64},\
+                   \"shards\":2,\"shard\":5}\n";
+        let (lines, _) = run_session(bad, ResultStore::in_memory());
+        assert_eq!(lines[0].get("ok").and_then(Value::as_bool), Some(false));
+    }
+
+    #[test]
+    fn tcp_sessions_speak_the_same_protocol() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpStream;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            serve_tcp(&listener, ResultStore::in_memory(), &ServeConfig::default())
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(
+            b"{\"cmd\":\"ping\"}\n{\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\
+              \"variants\":[\"vector\"],\"size\":4096}}\n{\"cmd\":\"shutdown\"}\n",
+        )
+        .unwrap();
+        let mut lines = Vec::new();
+        for line in BufReader::new(conn.try_clone().unwrap()).lines() {
+            let Ok(line) = line else { break };
+            lines.push(Value::parse(&line).unwrap());
+        }
+        let store = server.join().unwrap();
+        assert_eq!(lines[0].get("reply").and_then(Value::as_str), Some("pong"));
+        assert!(lines.iter().any(|l| l.get("event").and_then(Value::as_str) == Some("result")));
+        assert_eq!(lines.last().unwrap().get("reply").and_then(Value::as_str), Some("bye"));
+        assert_eq!(store.completed(), 1);
+    }
+}

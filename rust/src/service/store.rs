@@ -1,0 +1,564 @@
+//! Content-addressed result store: one append-only JSONL file, one line
+//! per completed job, indexed by [`Job::key`].
+//!
+//! The store is the service's durability and caching layer in one
+//! mechanism. Records are only ever appended (a line per result, flushed
+//! immediately), so a crash loses at most the line being written — and
+//! [`ResultStore::open`] tolerates exactly that by skipping an
+//! unparseable trailing line. Re-submitting a grid against the same
+//! store turns every already-completed point into a cache hit; a
+//! crashed run resumes by reopening the store and executing only the
+//! missing points.
+//!
+//! Cache-correctness rules:
+//!
+//! - Lookups match on the **stored** key, which was computed by the
+//!   binary that produced the record. [`super::CODE_VERSION`] is part of
+//!   the hashed canonical string, so records written by an older code
+//!   version simply never match a current key — stale results are never
+//!   served and never deleted.
+//! - Only `status == ok` records are served from cache. Failed records
+//!   are persisted (they carry the error and attempt count for
+//!   reporting), but a resume re-executes them — a transient failure
+//!   must not become permanent by being cached.
+
+use super::json::{self, ObjWriter, Value};
+use super::{Job, JobKind, Outcome};
+use crate::coordinator::sweep::MachinePoint;
+use crate::workloads::Variant;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+/// Terminal state of a stored job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// The job executed and verified (where applicable).
+    Ok,
+    /// The job exhausted its retries (simulation fault, watchdog,
+    /// timeout, or fuzz divergence).
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Ok => "ok",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "ok" => Ok(JobStatus::Ok),
+            "failed" => Ok(JobStatus::Failed),
+            other => Err(format!("unknown status '{other}'")),
+        }
+    }
+}
+
+/// One line of the store: a job, its terminal status, and (for `Ok`)
+/// the measured outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultRecord {
+    /// [`Job::key`] as computed by the producing binary.
+    pub key: u64,
+    pub job: Job,
+    pub status: JobStatus,
+    /// Last attempt's error for `Failed` records.
+    pub error: Option<String>,
+    pub outcome: Option<Outcome>,
+    /// Executions it took to reach the terminal status (1 = first try).
+    pub attempts: u32,
+    /// Wall-clock time of the *successful* (or final) attempt.
+    pub wall_ms: u64,
+    /// Runtime-only: `true` when this record was served from the store
+    /// rather than executed. Never serialized.
+    pub from_cache: bool,
+}
+
+impl ResultRecord {
+    pub fn ok(job: Job, outcome: Outcome, attempts: u32, wall_ms: u64) -> Self {
+        let key = job.key();
+        Self {
+            key,
+            job,
+            status: JobStatus::Ok,
+            error: None,
+            outcome: Some(outcome),
+            attempts,
+            wall_ms,
+            from_cache: false,
+        }
+    }
+
+    pub fn failed(job: Job, error: String, attempts: u32, wall_ms: u64) -> Self {
+        let key = job.key();
+        Self {
+            key,
+            job,
+            status: JobStatus::Failed,
+            error: Some(error),
+            outcome: None,
+            attempts,
+            wall_ms,
+            from_cache: false,
+        }
+    }
+
+    /// Serialize as one JSONL line (no trailing newline). Top-level keys
+    /// are emitted in sorted order; `key` is a 16-digit hex string (a
+    /// JSON number would lose u64 exactness past 2^53), and so is the
+    /// fuzz `seed`.
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_u64("attempts", self.attempts as u64);
+        if let Some(b) = self.job.budget {
+            w.field_u64("budget", b);
+        }
+        if let Some(e) = &self.error {
+            w.field_str("error", e);
+        }
+        w.field_str("key", &format!("{:016x}", self.key));
+        match &self.job.kind {
+            JobKind::Sim { .. } => w.field_str("kind", "sim"),
+            JobKind::Fuzz { .. } => w.field_str("kind", "fuzz"),
+        };
+        if let JobKind::Fuzz { ops, .. } = &self.job.kind {
+            w.field_u64("ops", *ops as u64);
+        }
+        if let Some(o) = &self.outcome {
+            w.field_raw("outcome", &outcome_to_json(o));
+        }
+        w.field_raw("point", &self.job.point.canonical());
+        match &self.job.kind {
+            JobKind::Sim { size, .. } => {
+                w.field_u64("size", *size as u64);
+            }
+            JobKind::Fuzz { seed, .. } => {
+                w.field_str("seed", &format!("{seed:016x}"));
+            }
+        }
+        w.field_str("status", self.status.name());
+        if let JobKind::Sim { variant, .. } = &self.job.kind {
+            w.field_str("variant", variant.name());
+        }
+        w.field_u64("wall_ms", self.wall_ms);
+        if let JobKind::Fuzz { weights, .. } = &self.job.kind {
+            w.field_str("weights", weights);
+        }
+        if let JobKind::Sim { workload, .. } = &self.job.kind {
+            w.field_str("workload", workload);
+        }
+        w.finish()
+    }
+
+    /// Parse one store line back into a record.
+    pub fn from_json(line: &str) -> Result<Self, String> {
+        let v = Value::parse(line)?;
+        let str_field = |name: &str| -> Result<&str, String> {
+            v.get(name)
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("record missing string field '{name}'"))
+        };
+        let u64_field = |name: &str| -> Result<u64, String> {
+            v.get(name)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("record missing integer field '{name}'"))
+        };
+        let key = u64::from_str_radix(str_field("key")?, 16)
+            .map_err(|_| "bad hex in 'key'".to_string())?;
+        let point = MachinePoint::from_canonical_fields(|axis| {
+            v.get("point").and_then(|p| p.get(axis)).and_then(Value::as_usize)
+        })?;
+        let kind = match str_field("kind")? {
+            "sim" => {
+                let variant = Variant::parse(str_field("variant")?)
+                    .ok_or_else(|| "bad 'variant'".to_string())?;
+                JobKind::Sim {
+                    workload: str_field("workload")?.to_string(),
+                    variant,
+                    size: u64_field("size")? as usize,
+                }
+            }
+            "fuzz" => JobKind::Fuzz {
+                seed: u64::from_str_radix(str_field("seed")?, 16)
+                    .map_err(|_| "bad hex in 'seed'".to_string())?,
+                ops: u64_field("ops")? as usize,
+                weights: str_field("weights")?.to_string(),
+            },
+            other => return Err(format!("unknown job kind '{other}'")),
+        };
+        let budget = match v.get("budget") {
+            None => None,
+            Some(b) => Some(b.as_u64().ok_or_else(|| "bad 'budget'".to_string())?),
+        };
+        let status = JobStatus::parse(str_field("status")?)?;
+        let outcome = match v.get("outcome") {
+            None => None,
+            Some(o) => Some(outcome_from_json(o)?),
+        };
+        let error = match v.get("error") {
+            None => None,
+            Some(e) => {
+                Some(e.as_str().ok_or_else(|| "bad 'error'".to_string())?.to_string())
+            }
+        };
+        Ok(Self {
+            key,
+            job: Job { point, kind, budget },
+            status,
+            error,
+            outcome,
+            attempts: u64_field("attempts")? as u32,
+            wall_ms: u64_field("wall_ms")?,
+            from_cache: false,
+        })
+    }
+
+    /// Timing-independent identity of the *result*: the serialized
+    /// record with wall-clock time and attempt count zeroed. Two runs
+    /// of the same deterministic grid — interrupted or not, cached or
+    /// executed — must produce equal fingerprints.
+    pub fn fingerprint(&self) -> String {
+        Self { wall_ms: 0, attempts: 0, ..self.clone() }.to_json()
+    }
+}
+
+/// Outcome as a nested JSON object with sorted keys. `metrics` keys are
+/// already sorted (BTreeMap); `verified` is `true`/`false`/`null`.
+fn outcome_to_json(o: &Outcome) -> String {
+    let mut w = ObjWriter::new();
+    w.field_u64("bytes", o.bytes);
+    w.field_u64("cycles", o.cycles);
+    w.field_f64("fmax_mhz", o.fmax_mhz);
+    w.field_u64("instret", o.instret);
+    let metrics: Vec<String> = o
+        .metrics
+        .iter()
+        .map(|(k, v)| format!("\"{}\":{}", json::json_escape(k), v))
+        .collect();
+    w.field_raw("metrics", &format!("{{{}}}", metrics.join(",")));
+    match o.verified {
+        Some(b) => w.field_bool("verified", b),
+        None => w.field_raw("verified", "null"),
+    };
+    w.finish()
+}
+
+fn outcome_from_json(v: &Value) -> Result<Outcome, String> {
+    let u64_field = |name: &str| -> Result<u64, String> {
+        v.get(name)
+            .and_then(Value::as_u64)
+            .ok_or_else(|| format!("outcome missing integer field '{name}'"))
+    };
+    let mut metrics = BTreeMap::new();
+    if let Some(m) = v.get("metrics").and_then(Value::as_obj) {
+        for (k, val) in m {
+            metrics.insert(
+                k.clone(),
+                val.as_u64().ok_or_else(|| format!("bad metric '{k}'"))?,
+            );
+        }
+    }
+    let verified = match v.get("verified") {
+        None | Some(Value::Null) => None,
+        Some(b) => Some(b.as_bool().ok_or_else(|| "bad 'verified'".to_string())?),
+    };
+    Ok(Outcome {
+        cycles: u64_field("cycles")?,
+        instret: u64_field("instret")?,
+        bytes: u64_field("bytes")?,
+        fmax_mhz: v
+            .get("fmax_mhz")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "outcome missing 'fmax_mhz'".to_string())?,
+        verified,
+        metrics,
+    })
+}
+
+/// The append-only JSONL store with an in-memory index over the `Ok`
+/// records. All mutation goes through `&mut self`; concurrent surfaces
+/// (the grid runner's workers, the serve loop) share it behind a
+/// `Mutex`.
+pub struct ResultStore {
+    path: Option<PathBuf>,
+    file: Option<File>,
+    records: Vec<ResultRecord>,
+    /// key → index into `records` of the latest `Ok` record. Failed
+    /// records are never indexed (never served from cache).
+    ok_index: BTreeMap<u64, usize>,
+    /// Store lines that did not parse on open (a crash-truncated tail,
+    /// or records from a foreign schema) — skipped, counted, kept on
+    /// disk.
+    skipped_lines: usize,
+    hits: u64,
+}
+
+impl ResultStore {
+    /// A store with no backing file (tests, ad-hoc grids).
+    pub fn in_memory() -> Self {
+        Self {
+            path: None,
+            file: None,
+            records: Vec::new(),
+            ok_index: BTreeMap::new(),
+            skipped_lines: 0,
+            hits: 0,
+        }
+    }
+
+    /// Open (or create) the JSONL store at `path`, loading every
+    /// parseable record. Unparseable lines — e.g. the torn final line
+    /// of a crashed writer — are skipped and counted, never fatal.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, String> {
+        let path = path.as_ref();
+        let mut store = Self::in_memory();
+        store.path = Some(path.to_path_buf());
+        if path.exists() {
+            let f = File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+            for line in BufReader::new(f).lines() {
+                let line = line.map_err(|e| format!("read {}: {e}", path.display()))?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match ResultRecord::from_json(&line) {
+                    Ok(rec) => store.insert(rec),
+                    Err(_) => store.skipped_lines += 1,
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("append-open {}: {e}", path.display()))?;
+        store.file = Some(file);
+        Ok(store)
+    }
+
+    fn insert(&mut self, rec: ResultRecord) {
+        if rec.status == JobStatus::Ok {
+            self.ok_index.insert(rec.key, self.records.len());
+        }
+        self.records.push(rec);
+    }
+
+    /// Serve `key` from cache if a completed (`Ok`) record exists.
+    /// Counts a hit and returns a clone flagged `from_cache`.
+    pub fn lookup(&mut self, key: u64) -> Option<ResultRecord> {
+        let idx = *self.ok_index.get(&key)?;
+        self.hits += 1;
+        let mut rec = self.records[idx].clone();
+        rec.from_cache = true;
+        Some(rec)
+    }
+
+    /// Append a terminal record: one JSONL line, flushed before the
+    /// index is updated (crash durability — an indexed record is always
+    /// on disk).
+    pub fn record(&mut self, rec: &ResultRecord) -> Result<(), String> {
+        if let Some(f) = &mut self.file {
+            let path = self.path.as_deref().unwrap_or(Path::new("<store>"));
+            writeln!(f, "{}", rec.to_json())
+                .and_then(|()| f.flush())
+                .map_err(|e| format!("append {}: {e}", path.display()))?;
+        }
+        self.insert(rec.clone());
+        Ok(())
+    }
+
+    /// Cache hits served so far (the crash-resume tests assert on this).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Records loaded + recorded (including `Failed` ones).
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Completed (`Ok`, cache-servable) record count.
+    pub fn completed(&self) -> usize {
+        self.ok_index.len()
+    }
+
+    /// Lines skipped on open (torn tail / foreign schema).
+    pub fn skipped_lines(&self) -> usize {
+        self.skipped_lines
+    }
+
+    pub fn records(&self) -> &[ResultRecord] {
+        &self.records
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Variant;
+    use std::collections::BTreeMap;
+
+    fn sample_outcome() -> Outcome {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("llc_prefetches".to_string(), 42u64);
+        metrics.insert("dram_queue_cycles".to_string(), 7u64);
+        Outcome {
+            cycles: 1000,
+            instret: 800,
+            bytes: 65536,
+            fmax_mhz: 150.0,
+            verified: Some(true),
+            metrics,
+        }
+    }
+
+    fn sim_job() -> Job {
+        Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, 65536)
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("simdsoftcore_store_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn records_round_trip_through_jsonl() {
+        let ok = ResultRecord::ok(sim_job(), sample_outcome(), 1, 123);
+        let line = ok.to_json();
+        let back = ResultRecord::from_json(&line).unwrap();
+        assert_eq!(back, ok);
+        assert!(!back.from_cache);
+
+        let failed = ResultRecord::failed(
+            sim_job().with_budget(100),
+            "simulation failed: watchdog: exceeded 100 instructions".into(),
+            3,
+            55,
+        );
+        let back = ResultRecord::from_json(&failed.to_json()).unwrap();
+        assert_eq!(back, failed);
+        assert_eq!(back.job.budget, Some(100));
+
+        let fuzz = ResultRecord::ok(
+            Job::fuzz(MachinePoint::default(), u64::MAX - 1, 300, "balanced"),
+            Outcome { instret: 299, verified: Some(true), ..Default::default() },
+            1,
+            9,
+        );
+        let back = ResultRecord::from_json(&fuzz.to_json()).unwrap();
+        assert_eq!(back, fuzz, "u64-range seeds survive the hex encoding");
+    }
+
+    #[test]
+    fn record_lines_have_sorted_keys_and_hex_key() {
+        let line = ResultRecord::ok(sim_job(), sample_outcome(), 1, 123).to_json();
+        assert!(line.starts_with("{\"attempts\":1,\"key\":\""), "{line}");
+        assert!(line.contains(&format!("\"key\":\"{:016x}\"", sim_job().key())), "{line}");
+        // Top-level keys come out in sorted order.
+        let parsed = Value::parse(&line).unwrap();
+        let stored_keys: Vec<&str> = parsed.as_obj().unwrap().keys().map(String::as_str).collect();
+        let mut sorted = stored_keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(stored_keys, sorted);
+        // Re-rendering the parsed value (BTreeMap = sorted keys) gives
+        // back the exact line: the writer IS canonical.
+        assert_eq!(parsed.render(), line);
+    }
+
+    #[test]
+    fn store_appends_reopens_and_serves_cache_hits() {
+        let path = tmp_path("reopen");
+        let _ = std::fs::remove_file(&path);
+        let job = sim_job();
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            assert!(s.is_empty());
+            s.record(&ResultRecord::ok(job.clone(), sample_outcome(), 1, 10)).unwrap();
+            assert_eq!(s.len(), 1);
+            assert_eq!(s.completed(), 1);
+        }
+        let mut s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.hits(), 0);
+        let hit = s.lookup(job.key()).expect("reopened store must serve the record");
+        assert!(hit.from_cache);
+        assert_eq!(hit.outcome.as_ref().unwrap().cycles, 1000);
+        assert_eq!(s.hits(), 1);
+        assert!(s.lookup(0xdead_beef).is_none());
+        assert_eq!(s.hits(), 1, "misses are not hits");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_records_are_stored_but_never_served() {
+        let mut s = ResultStore::in_memory();
+        let job = sim_job();
+        s.record(&ResultRecord::failed(job.clone(), "boom".into(), 2, 5)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.completed(), 0);
+        assert!(s.lookup(job.key()).is_none(), "failures must be re-executed on resume");
+        // A later success for the same key becomes servable.
+        s.record(&ResultRecord::ok(job.clone(), sample_outcome(), 3, 8)).unwrap();
+        let hit = s.lookup(job.key()).unwrap();
+        assert_eq!(hit.status, JobStatus::Ok);
+        assert_eq!(hit.attempts, 3);
+    }
+
+    #[test]
+    fn torn_tail_lines_are_skipped_not_fatal() {
+        let path = tmp_path("torn");
+        let _ = std::fs::remove_file(&path);
+        let good = ResultRecord::ok(sim_job(), sample_outcome(), 1, 10).to_json();
+        // A crash mid-write leaves a truncated final line.
+        std::fs::write(&path, format!("{good}\n{}", &good[..good.len() / 2])).unwrap();
+        let mut s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.skipped_lines(), 1);
+        assert!(s.lookup(sim_job().key()).is_some());
+        // The store remains appendable after a torn tail.
+        s.record(&ResultRecord::failed(
+            Job::sim(MachinePoint::default(), "memcpy", Variant::Scalar, 64),
+            "x".into(),
+            1,
+            1,
+        ))
+        .unwrap();
+        assert_eq!(ResultStore::open(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_code_version_records_never_match_live_keys() {
+        // A record whose key was computed by a different code version
+        // sits in the store under the *old* digest: the live job's key
+        // differs, so lookup misses and the point re-executes.
+        let mut s = ResultStore::in_memory();
+        let mut old = ResultRecord::ok(sim_job(), sample_outcome(), 1, 10);
+        old.key ^= 0x1; // simulate a digest from another CODE_VERSION
+        s.record(&old).unwrap();
+        assert!(s.lookup(sim_job().key()).is_none());
+    }
+
+    #[test]
+    fn fingerprint_ignores_timing_but_not_results() {
+        let a = ResultRecord::ok(sim_job(), sample_outcome(), 1, 10);
+        let b = ResultRecord::ok(sim_job(), sample_outcome(), 2, 99);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut different = sample_outcome();
+        different.cycles += 1;
+        let c = ResultRecord::ok(sim_job(), different, 1, 10);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -234,11 +234,25 @@ pub fn run_on(
     core: &mut Core,
     sc: &Scenario,
 ) -> Result<WorkloadReport, SimError> {
+    run_on_budget(w, core, sc, common::MAX_INSTRS)
+}
+
+/// [`run_on`] with an explicit retired-instruction budget. The sweep
+/// service uses this as its per-point simulation budget: a pathological
+/// configuration that blows the budget surfaces as
+/// [`SimError`]::Watchdog — a failed point — instead of wedging its
+/// worker for hours.
+pub fn run_on_budget(
+    w: &mut dyn Workload,
+    core: &mut Core,
+    sc: &Scenario,
+    max_instrs: u64,
+) -> Result<WorkloadReport, SimError> {
     let sc = Scenario { vlen_bits: core.cfg.vlen_bits, ..*sc };
     let prog = w.build(&sc);
     core.load(&prog);
     w.init(core);
-    let run = core.run(common::MAX_INSTRS)?;
+    let run = core.run(max_instrs)?;
     let throughput = Throughput::from_run(core, &run, w.bytes_moved(&sc));
     core.mem.flush_all();
     let verify = w.verify(&*core);

@@ -1,0 +1,154 @@
+//! End-to-end sweep-service tests with the real executor (DESIGN.md
+//! §10): crash-resume against a persistent JSONL store, the wedged-point
+//! retry bound, and `serve` sessions sharing one store across restarts.
+//!
+//! The queue-policy unit tests (rust/src/service/queue.rs) use stub
+//! executors; everything here simulates for real, so a resumed run is
+//! checked for *result* equality — not just bookkeeping — against an
+//! uninterrupted one.
+
+use simdsoftcore::coordinator::sweep::{MachinePoint, Parallelism};
+use simdsoftcore::service::{
+    self, default_exec, GridOptions, Job, JobStatus, Progress, ResultStore, ServeConfig,
+};
+use simdsoftcore::workloads::Variant;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+fn tmp_path(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("simdsoftcore-{name}-{}.jsonl", std::process::id()));
+    p
+}
+
+fn memcpy_grid(n: usize) -> Vec<Job> {
+    (1..=n)
+        .map(|i| Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, i * 4096))
+        .collect()
+}
+
+fn serial() -> GridOptions {
+    GridOptions { parallelism: Parallelism::fixed(1), retries: 0, ..Default::default() }
+}
+
+#[test]
+fn crash_resume_completes_the_grid_from_the_store() {
+    let jobs = memcpy_grid(6);
+    let exec = default_exec();
+
+    // Uninterrupted reference run (in-memory store).
+    let ref_store = Mutex::new(ResultStore::in_memory());
+    let reference: Vec<_> =
+        service::run_grid(jobs.clone(), &ref_store, &Progress::new(6), &serial(), &exec, |_| {})
+            .into_iter()
+            .map(Option::unwrap)
+            .collect();
+
+    // "Crash" after 2 executed points, against a persistent store.
+    let path = tmp_path("resume");
+    let _ = std::fs::remove_file(&path);
+    {
+        let store = Mutex::new(ResultStore::open(&path).unwrap());
+        let crash = GridOptions { stop_after: Some(2), ..serial() };
+        let out = service::run_grid(jobs.clone(), &store, &Progress::new(6), &crash, &exec, |_| {});
+        assert_eq!(out.iter().filter(|r| r.is_some()).count(), 2, "crash left 4 points unrun");
+    } // store dropped: the process is "dead"
+
+    // Restart: reopen the same file. The two completed points must be
+    // served from the store; only the missing four execute.
+    let store = Mutex::new(ResultStore::open(&path).unwrap());
+    assert_eq!(store.lock().unwrap().completed(), 2, "survivors loaded from disk");
+    let progress = Progress::new(6);
+    let resumed = service::run_grid(jobs, &store, &progress, &serial(), &exec, |_| {});
+    let snap = progress.snapshot();
+    assert_eq!(snap.cached, 2, "crash survivors are cache hits, not re-simulations");
+    assert_eq!(store.lock().unwrap().hits(), 2);
+    assert_eq!(snap.completed, 6);
+    assert_eq!(snap.failed, 0);
+
+    // The resumed run's results equal the uninterrupted run's, point
+    // for point (timing/attempt metadata aside).
+    for (a, b) in reference.iter().zip(resumed.iter()) {
+        assert_eq!(a.fingerprint(), b.as_ref().unwrap().fingerprint());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn wedged_points_fail_bounded_without_stalling_the_shard() {
+    // A pathological instruction budget turns the middle point into a
+    // wedged simulation: the watchdog trips every attempt. It must be
+    // marked failed after exactly retries + 1 attempts while its
+    // neighbours complete normally.
+    let healthy = |size: usize| Job::sim(MachinePoint::default(), "memcpy", Variant::Vector, size);
+    let wedged = healthy(64 * 1024).with_budget(50);
+    let jobs = vec![healthy(4096), wedged.clone(), healthy(8192)];
+    let store = Mutex::new(ResultStore::in_memory());
+    let opts = GridOptions { retries: 2, ..serial() };
+    let progress = Progress::new(3);
+    let out = service::run_grid(jobs, &store, &progress, &opts, &default_exec(), |_| {});
+    let recs: Vec<_> = out.into_iter().map(Option::unwrap).collect();
+
+    assert_eq!(recs[0].status, JobStatus::Ok);
+    assert_eq!(recs[2].status, JobStatus::Ok, "the shard drained past the wedged point");
+    assert_eq!(recs[1].status, JobStatus::Failed);
+    assert_eq!(recs[1].attempts, 3, "bounded retry: retries + 1 attempts, then give up");
+    let err = recs[1].error.as_deref().unwrap();
+    assert!(err.contains("watchdog"), "{err}");
+    let snap = progress.snapshot();
+    assert_eq!((snap.completed, snap.failed, snap.running), (3, 1, 0));
+
+    // Failed records persist for the report but are never servable: a
+    // re-submission retries the point instead of caching the failure.
+    let p2 = Progress::new(1);
+    let out2 = service::run_grid(vec![wedged], &store, &p2, &opts, &default_exec(), |_| {});
+    assert_eq!(out2[0].as_ref().unwrap().status, JobStatus::Failed);
+    assert_eq!(p2.snapshot().cached, 0, "failures are retried, not served from the store");
+}
+
+/// `Write` handle the serve loop can own while the test keeps a view.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn serve_session(store_path: &Path, script: &str) -> String {
+    let buf = SharedBuf::default();
+    let store = ResultStore::open(store_path).unwrap();
+    let cfg = ServeConfig { parallelism: Parallelism::fixed(2), ..Default::default() };
+    service::serve(std::io::Cursor::new(script.to_string()), buf.clone(), store, &cfg);
+    let bytes = buf.0.lock().unwrap().clone();
+    String::from_utf8(bytes).unwrap()
+}
+
+#[test]
+fn serve_sessions_share_one_store_across_restarts() {
+    let path = tmp_path("serve-restart");
+    let _ = std::fs::remove_file(&path);
+    let script = "{\"cmd\":\"submit\",\"sim\":{\"workloads\":[\"memcpy\"],\
+                  \"variants\":[\"vector\"],\"size\":16384},\
+                  \"sweep\":{\"vlen\":[128,256]}}\n\
+                  {\"cmd\":\"shutdown\"}\n";
+
+    // First session simulates both points and persists them.
+    let out1 = serve_session(&path, script);
+    assert_eq!(out1.matches("\"cached\":false").count(), 2, "{out1}");
+    assert_eq!(out1.matches("\"cached\":true").count(), 0);
+
+    // A fresh session on the same store serves the identical submission
+    // entirely from cache.
+    let out2 = serve_session(&path, script);
+    assert_eq!(out2.matches("\"cached\":true").count(), 2, "{out2}");
+    assert_eq!(out2.matches("\"cached\":false").count(), 0);
+    let _ = std::fs::remove_file(&path);
+}
