@@ -15,7 +15,7 @@
 
 use crate::asm::Program;
 use crate::core::SimError;
-use crate::isa::{decode, Instr};
+use crate::isa::{decode, DecodeCache, Instr};
 use crate::mem::{Dram, DramConfig};
 
 #[derive(Debug, Clone, Copy)]
@@ -46,11 +46,11 @@ pub struct PicoCore {
     cycle: u64,
     instret: u64,
     halted: bool,
-    /// Fetch cache of decoded text (PicoRV32 has no I-cache, but decoding
-    /// is a simulator concern, not a timing one — every fetch still pays
-    /// the AXI transaction).
-    text_base: u32,
-    decoded: Vec<Option<Instr>>,
+    /// Predecoded text view (PicoRV32 has no I-cache, but decoding is a
+    /// simulator concern, not a timing one — every fetch still pays the
+    /// AXI transaction). Stores over the text range invalidate it, the
+    /// same contract the timed core and the reference ISS follow.
+    text: DecodeCache,
 }
 
 impl PicoCore {
@@ -69,8 +69,7 @@ impl PicoCore {
             cycle: 0,
             instret: 0,
             halted: false,
-            text_base: 0,
-            decoded: Vec::new(),
+            text: DecodeCache::empty(),
         }
     }
 
@@ -89,12 +88,14 @@ impl PicoCore {
         self.cycle = 0;
         self.instret = 0;
         self.halted = false;
-        self.text_base = prog.text_base;
-        self.decoded = vec![None; prog.text.len()];
+        self.text.predecode(prog.text_base, &prog.text);
     }
 
     pub fn host_write(&mut self, addr: u32, data: &[u8]) {
         self.dram.host_write(addr, data);
+        if self.text.overlaps(addr, data.len()) {
+            self.text.invalidate(addr, data.len());
+        }
     }
 
     pub fn dram_slice(&self, addr: u32, len: usize) -> &[u8] {
@@ -160,6 +161,9 @@ impl PicoCore {
         cur = (cur & !mask) | ((value << shift) & mask);
         let done = self.dram.write_word_single(aligned, cur, self.cfg.axi_latency, self.cycle);
         self.cycle = done;
+        if self.text.overlaps(addr, len) {
+            self.text.invalidate(addr, len);
+        }
         Ok(())
     }
 
@@ -167,15 +171,16 @@ impl PicoCore {
         let pc = self.pc;
         // Instruction fetch: one AXI transaction.
         let word = self.mem_read(pc, 4)?;
-        let idx = pc.wrapping_sub(self.text_base) as usize / 4;
-        let instr = if let Some(Some(i)) = self.decoded.get(idx) {
-            *i
-        } else {
-            let i = decode(word).map_err(|source| SimError::Illegal { pc, source })?;
-            if idx < self.decoded.len() {
-                self.decoded[idx] = Some(i);
-            }
-            i
+        let instr = match self.text.word_index(pc) {
+            Some(idx) => match self.text.get(idx) {
+                Some(i) => i,
+                None => {
+                    let i = decode(word).map_err(|source| SimError::Illegal { pc, source })?;
+                    self.text.put(idx, i);
+                    i
+                }
+            },
+            None => decode(word).map_err(|source| SimError::Illegal { pc, source })?,
         };
 
         let mut next_pc = pc.wrapping_add(4);
@@ -407,6 +412,31 @@ mod tests {
         // data transactions. Cycle ratio ≈ 3.
         let ratio = c2.cycle() as f64 / c1.cycle() as f64;
         assert!(ratio > 2.0, "mem/alu cycle ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn store_over_text_invalidates_decoded_view() {
+        // Same SMC regression as the core/ISS: a two-iteration loop
+        // patches its own already-executed first instruction; the second
+        // iteration must run the patched word, not the stale decode.
+        let patch = crate::isa::encode(&Instr::Addi { rd: A0, rs1: A0, imm: 100 }).unwrap();
+        let mut a = Asm::new();
+        a.li(A0, 0);
+        a.li(S10, 2);
+        a.li(T1, patch as i64);
+        let head = a.new_label("head");
+        a.bind(head);
+        a.addi(A0, A0, 1);
+        a.la(T0, head);
+        a.sw(T1, 0, T0);
+        a.addi(S10, S10, -1);
+        a.bnez(S10, head);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = PicoCore::new(PicoConfig::default());
+        c.load(&p);
+        c.run(1000).unwrap();
+        assert_eq!(c.reg(A0), 101, "PicoRV32 executed a stale cached decode");
     }
 
     #[test]

@@ -29,7 +29,7 @@ use super::config::CoreConfig;
 use super::trace::{Trace, TraceEvent};
 use crate::asm::Program;
 use crate::isa::instr::csr;
-use crate::isa::{decode, DecodeError, Instr};
+use crate::isa::{decode, DecodeCache, DecodeError, Instr};
 use crate::mem::{MemConfig, MemConfigError, MemSys};
 use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecVal};
 
@@ -46,6 +46,10 @@ pub enum SimError {
     Unit { pc: u32, source: UnitError },
     Watchdog(u64),
     Break(u32),
+    /// A host-side image write (`RefIss::load` / `RefIss::host_write`)
+    /// outside simulated DRAM — the image is rejected instead of
+    /// panicking on the slice copy.
+    ImageFault { addr: u32, len: usize, size: usize },
 }
 
 impl std::fmt::Display for SimError {
@@ -71,6 +75,10 @@ impl std::fmt::Display for SimError {
                 write!(f, "watchdog: exceeded {max} instructions without halting")
             }
             SimError::Break(pc) => write!(f, "ebreak at pc {pc:#010x}"),
+            SimError::ImageFault { addr, len, size } => write!(
+                f,
+                "image fault: host write {addr:#010x}+{len} outside DRAM ({size:#x} bytes)"
+            ),
         }
     }
 }
@@ -171,12 +179,15 @@ pub struct Core {
     vreg_ready: [u64; 8],
     halted: bool,
 
-    text_base: u32,
-    decoded: Vec<Option<Instr>>,
+    /// Predecoded text segment (shared contract with the reference ISS:
+    /// decode once per word, invalidate on stores overlapping the text
+    /// range — see `crate::isa::predecode`).
+    text: DecodeCache,
     /// Fetch line buffer: base address of the IL1 block the last fetch
     /// came from. Fetches within the same block with an already-decoded
     /// instruction skip the IL1 model entirely (a hit is timing-neutral:
-    /// ready == now) — the dominant fast path. Invalidated on load().
+    /// ready == now) — the dominant fast path. Invalidated on load()
+    /// and on any store into the text range.
     fetch_block_base: u32,
     fetch_block_mask: u32,
     /// IL1 hits skipped via the line buffer (credited to IL1 stats at
@@ -229,8 +240,7 @@ impl Core {
             reg_ready: [0; 32],
             vreg_ready: [0; 8],
             halted: false,
-            text_base: 0,
-            decoded: Vec::new(),
+            text: DecodeCache::empty(),
             fetch_block_base: u32::MAX,
             fetch_block_mask: !(mem_block_bytes as u32 - 1),
             fast_fetches: 0,
@@ -265,8 +275,7 @@ impl Core {
         self.vreg_ready = [0; 8];
         self.halted = false;
         self.counters = CoreCounters::default();
-        self.text_base = prog.text_base;
-        self.decoded = vec![None; prog.text.len()];
+        self.text.predecode(prog.text_base, &prog.text);
         self.fetch_block_base = u32::MAX;
         self.fast_fetches = 0;
         self.issue_used = 0;
@@ -391,19 +400,35 @@ impl Core {
         }
     }
 
-    /// Decode (with caching) the instruction at `pc` whose fetched word is
-    /// `word`.
+    /// Decode the instruction at `pc` whose fetched word is `word`,
+    /// through the predecoded text cache. Text words are predecoded at
+    /// `load()`; this path only decodes words that were undecodable at
+    /// load time or have been invalidated by a store into the text
+    /// range, plus any fetch from outside the text segment.
     fn decode_at(&mut self, pc: u32, word: u32) -> Result<Instr, SimError> {
-        let idx = pc.wrapping_sub(self.text_base) as usize / 4;
-        if let Some(slot) = self.decoded.get(idx) {
-            if let Some(i) = slot {
-                return Ok(*i);
+        if let Some(idx) = self.text.word_index(pc) {
+            if let Some(i) = self.text.get(idx) {
+                return Ok(i);
             }
             let i = decode(word).map_err(|source| SimError::Illegal { pc, source })?;
-            self.decoded[idx] = Some(i);
+            self.text.put(idx, i);
             return Ok(i);
         }
         decode(word).map_err(|source| SimError::Illegal { pc, source })
+    }
+
+    /// A store (scalar or vector) wrote into `[addr, addr+len)`, which
+    /// overlaps the text segment: drop the stale decodes, clear the
+    /// fetch line buffer (the buffered IL1 block may hold the old
+    /// bytes), and make the memory hierarchy coherent for instruction
+    /// fetch. The hierarchy sync is host-side (no cycles booked): after
+    /// self-modifying code the refetch is modeled as cold, which is the
+    /// conservative choice and changes nothing for programs that never
+    /// store to text (the golden traces pin this).
+    fn invalidate_text(&mut self, addr: u32, len: usize) {
+        self.text.invalidate(addr, len);
+        self.fetch_block_base = u32::MAX;
+        self.mem.sync_fetch();
     }
 
     /// Execute one instruction.
@@ -425,13 +450,17 @@ impl Core {
         }
         // Fast path: same IL1 block as the previous fetch and already
         // decoded — an IL1 hit is timing-neutral, so skip the model.
-        let idx = pc.wrapping_sub(self.text_base) as usize / 4;
-        let instr = match self.decoded.get(idx) {
-            Some(Some(i)) if (pc & self.fetch_block_mask) == self.fetch_block_base => {
+        let cached = if (pc & self.fetch_block_mask) == self.fetch_block_base {
+            self.text.word_index(pc).and_then(|idx| self.text.get(idx))
+        } else {
+            None
+        };
+        let instr = match cached {
+            Some(i) => {
                 self.fast_fetches += 1;
-                *i
+                i
             }
-            _ => {
+            None => {
                 if (pc as usize).checked_add(4).is_none_or(|end| end > self.mem.dram_size()) {
                     return Err(SimError::FetchFault { pc, size: self.mem.dram_size() });
                 }
@@ -578,6 +607,9 @@ impl Core {
                 self.counters.mem_bw_stall_cycles += access.bw_stall;
                 t = access.issue;
                 end = access.ready;
+                if self.text.overlaps(addr, len) {
+                    self.invalidate_text(addr, len);
+                }
             }
             Addi { rd, rs1, imm } => {
                 self.counters.alu += 1;
@@ -894,6 +926,9 @@ impl Core {
                 self.counters.mem_bw_stall_cycles += access.bw_stall;
                 *t = access.issue;
                 end = access.ready;
+                if self.text.overlaps(addr, len) {
+                    self.invalidate_text(addr, len);
+                }
             }
             None => {
                 let ready = *t + out.latency;

@@ -97,6 +97,9 @@ fn error_key(e: &SimError) -> String {
         SimError::Unit { pc, source } => format!("unit@{pc:#010x}:{source}"),
         SimError::Watchdog(n) => format!("watchdog:{n}"),
         SimError::Break(pc) => format!("ebreak@{pc:#010x}"),
+        SimError::ImageFault { addr, len, .. } => {
+            format!("imagefault:{addr:#010x}+{len}")
+        }
     }
 }
 
@@ -300,7 +303,7 @@ mod tests {
         let mut core = Core::new(crate::core::CoreConfig::paper_default(), mem);
         core.load(&p);
         let mut iss = RefIss::paper_default(core.mem.dram_size());
-        iss.load(&p);
+        iss.load(&p).unwrap();
         (core, iss)
     }
 
@@ -364,7 +367,7 @@ mod tests {
             a.li(A0, 5);
             a.halt();
         });
-        iss.host_write(0x4_0000, &[0xAB]);
+        iss.host_write(0x4_0000, &[0xAB]).unwrap();
         let d = run_lockstep(&mut core, &mut iss, 100).expect_err("must diverge");
         assert!(d.deltas.iter().any(|s| s.contains("memory[0x00040000]")), "{d}");
     }

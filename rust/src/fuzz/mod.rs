@@ -34,6 +34,15 @@
 //! [`run_case`] accepts an identical fetch-fault outcome as agreement;
 //! data faults and watchdogs stay failures.
 //!
+//! A second opt-in class, **smc** (`OpWeights::smc`, 0 in every
+//! preset), emits self-modifying stores: an encoded ALU instruction is
+//! written over the program's own text — both over a word execution has
+//! not yet reached and over one it has already executed — and the
+//! patched slot is then executed. Both backends predecode text at load,
+//! so the class exercises their decode/block-cache invalidation paths;
+//! a stale cache diverges in lockstep. SMC programs still terminate
+//! normally, so `run_case` needs no special handling for the class.
+//!
 //! [`run_campaign`] crosses seeds with machine-configuration points
 //! ([`MachinePoint`] — the same axis registry every sweep surface uses,
 //! so the `fuzz` CLI can sweep VLEN/MSHRs/prefetch/channels) and runs
@@ -76,12 +85,21 @@ pub struct OpWeights {
     /// a fetch fault, so the class is opt-in (`--weights wildjump=N`)
     /// and [`run_case`] then accepts identical fetch faults.
     pub wildjump: u32,
+    /// Self-modifying stores (opt-in, `--weights smc=N`): patch an
+    /// encoded instruction over the program's own text — both a word
+    /// the program has *not yet* reached and one it has *already*
+    /// executed (and therefore predecoded) — then execute the patched
+    /// word. Any stale decode or block cache in either backend shows up
+    /// as an architectural lockstep divergence. 0 in every preset
+    /// because SMC deliberately defeats the decode caches the normal
+    /// campaign assumes are transparent.
+    pub smc: u32,
 }
 
 impl OpWeights {
     /// Everything in proportion (the default preset).
     pub fn balanced() -> Self {
-        Self { alu: 6, branch: 2, muldiv: 1, mem: 3, vec: 2, vecmem: 2, wildjump: 0 }
+        Self { alu: 6, branch: 2, muldiv: 1, mem: 3, vec: 2, vecmem: 2, wildjump: 0, smc: 0 }
     }
 
     /// RV32IM only — no custom SIMD instructions at all.
@@ -91,7 +109,7 @@ impl OpWeights {
 
     /// Custom-unit heavy (I′/S′ mixes dominate).
     pub fn vector() -> Self {
-        Self { alu: 3, branch: 1, muldiv: 1, mem: 1, vec: 5, vecmem: 4, wildjump: 0 }
+        Self { alu: 3, branch: 1, muldiv: 1, mem: 1, vec: 5, vecmem: 4, wildjump: 0, smc: 0 }
     }
 
     /// The balanced mix plus wild jumps — every case ends in either the
@@ -101,8 +119,22 @@ impl OpWeights {
         Self { wildjump: 2, ..Self::balanced() }
     }
 
+    /// The balanced mix plus self-modifying stores — every decode /
+    /// block cache in both backends must invalidate on stores over
+    /// text, or lockstep diverges.
+    pub fn smc() -> Self {
+        Self { smc: 2, ..Self::balanced() }
+    }
+
     pub fn total(&self) -> u32 {
-        self.alu + self.branch + self.muldiv + self.mem + self.vec + self.vecmem + self.wildjump
+        self.alu
+            + self.branch
+            + self.muldiv
+            + self.mem
+            + self.vec
+            + self.vecmem
+            + self.wildjump
+            + self.smc
     }
 
     /// Parse the CLI spelling
@@ -126,10 +158,11 @@ impl OpWeights {
                 "vec" => w.vec = val,
                 "vecmem" => w.vecmem = val,
                 "wildjump" => w.wildjump = val,
+                "smc" => w.smc = val,
                 other => {
                     return Err(format!(
                         "unknown op class '{other}' (classes: alu, branch, muldiv, mem, vec, \
-                         vecmem, wildjump)"
+                         vecmem, wildjump, smc)"
                     ))
                 }
             }
@@ -161,6 +194,7 @@ enum OpClass {
     Vec,
     VecMem,
     WildJump,
+    Smc,
 }
 
 fn pick_class(rng: &mut Xoshiro256, w: &OpWeights) -> OpClass {
@@ -173,6 +207,7 @@ fn pick_class(rng: &mut Xoshiro256, w: &OpWeights) -> OpClass {
         (OpClass::Vec, w.vec),
         (OpClass::VecMem, w.vecmem),
         (OpClass::WildJump, w.wildjump),
+        (OpClass::Smc, w.smc),
     ] {
         if x < wt {
             return class;
@@ -318,6 +353,65 @@ fn emit_wildjump(a: &mut Asm, rng: &mut Xoshiro256) {
     }
 }
 
+/// Encode a benign pool-register ALU instruction to use as an SMC
+/// patch word. Its architectural effect differs from the word it
+/// replaces, so a backend that keeps executing the stale cached decode
+/// diverges in lockstep instead of silently agreeing.
+fn smc_patch_word(rng: &mut Xoshiro256) -> u32 {
+    use crate::isa::Instr;
+    let (rd, r1, r2) = (dest(rng), src(rng), src(rng));
+    let i = match rng.below(4) {
+        0 => Instr::Addi { rd, rs1: r1, imm: imm12(rng) },
+        1 => Instr::Xor { rd, rs1: r1, rs2: r2 },
+        2 => Instr::Add { rd, rs1: r1, rs2: r2 },
+        _ => Instr::Sub { rd, rs1: r1, rs2: r2 },
+    };
+    crate::isa::encode(&i).expect("smc patch instruction encodes")
+}
+
+/// Emit a self-modifying-code construct (opt-in, `--weights smc=N`).
+/// Both shapes store an encoded ALU instruction over the program's own
+/// text and then execute the patched slot, exercising the decode-cache
+/// and block-cache invalidation paths of both backends:
+///
+/// - **forward**: the `sw` lands on a placeholder four slots past the
+///   `auipc` anchor — a word that is predecoded at load but has not yet
+///   been reached by execution;
+/// - **backward**: a two-iteration counted loop whose first instruction
+///   sits at `t6 - 4`; iteration one executes (and caches) the original
+///   word, the store overwrites it, and iteration two must re-decode.
+///
+/// The patch word is materialised with a fixed two-slot `lui`+`addi`
+/// pair (never `li`, whose length depends on the value) so the store
+/// offsets relative to the `auipc` anchor hold for every patch word.
+fn emit_smc(a: &mut Asm, rng: &mut Xoshiro256) {
+    let rd = dest(rng);
+    let patch = smc_patch_word(rng);
+    let hi = patch.wrapping_add(0x800) & 0xffff_f000;
+    let lo = patch.wrapping_sub(hi) as i32;
+    if rng.below(2) == 0 {
+        a.auipc(T6, 0);
+        a.lui(rd, hi as i32);
+        a.addi(rd, rd, lo);
+        a.sw(rd, 16, T6);
+        // Placeholder at t6+16, overwritten by the `sw` just above
+        // before the front end reaches it.
+        a.addi(dest(rng), src(rng), imm12(rng));
+    } else {
+        a.li(S10, 2);
+        let head = a.here("smc");
+        // Executed as-emitted on iteration one, as the patch word on
+        // iteration two.
+        a.addi(dest(rng), src(rng), imm12(rng));
+        a.auipc(T6, 0);
+        a.lui(rd, hi as i32);
+        a.addi(rd, rd, lo);
+        a.sw(rd, -4, T6);
+        a.addi(S10, S10, -1);
+        a.bnez(S10, head);
+    }
+}
+
 fn emit_vecmem(a: &mut Asm, rng: &mut Xoshiro256, vlen_bits: usize) {
     let vb = vlen_bits / 8;
     // Any offset (aligned or not) that keeps the full vector in-window.
@@ -418,6 +512,7 @@ pub fn generate(seed: u64, ops: usize, w: &OpWeights, vlen_bits: usize) -> Progr
             OpClass::Vec => emit_vec(&mut a, &mut rng),
             OpClass::VecMem => emit_vecmem(&mut a, &mut rng, vlen_bits),
             OpClass::WildJump => emit_wildjump(&mut a, &mut rng),
+            OpClass::Smc => emit_smc(&mut a, &mut rng),
         }
     }
     for (l, _) in pending.drain(..) {
@@ -539,7 +634,7 @@ pub fn run_case(
     let mut core = mp.machine().dram_bytes(FUZZ_DRAM_BYTES).build();
     let mut iss = RefIss::new(mp.vlen, core.mem.dram_size());
     core.load(&prog);
-    iss.load(&prog);
+    iss.load(&prog).expect("fuzz image fits the fuzz DRAM");
     match run_lockstep(&mut core, &mut iss, max_instrs_for(ops)) {
         Ok(r) => match r.outcome {
             LockstepOutcome::Halted => Ok(r.instret),
@@ -690,7 +785,9 @@ mod tests {
         assert_eq!(w.vec, 0);
         assert_eq!(w.branch, OpWeights::balanced().branch, "unnamed classes keep defaults");
         assert_eq!(w.wildjump, 0, "wild jumps are opt-in");
+        assert_eq!(w.smc, 0, "self-modifying stores are opt-in");
         assert_eq!(OpWeights::parse("wildjump=3").unwrap().wildjump, 3);
+        assert_eq!(OpWeights::parse("smc=3").unwrap().smc, 3);
         assert!(OpWeights::parse("bogus=1").is_err());
         assert!(OpWeights::parse("alu").is_err());
         assert!(OpWeights::parse("alu=x").is_err());
@@ -705,6 +802,7 @@ mod tests {
         for seed in 0..3 {
             let (_, w) = OpWeights::preset_for_seed(seed);
             assert_eq!(w.wildjump, 0);
+            assert_eq!(w.smc, 0);
         }
     }
 
@@ -748,6 +846,48 @@ mod tests {
             })
             .count();
         assert!(wilds > 0, "wild preset emitted no wild jalr:\n{}", p.disassemble());
+    }
+
+    #[test]
+    fn smc_weight_actually_emits_text_stores() {
+        // Both construct shapes anchor the patch store on t6 via
+        // `auipc`, at offset 16 (forward placeholder) or -4 (backward
+        // loop head) — distinguishable from data stores, which are
+        // always based on s11.
+        let p = generate(5001, 150, &OpWeights::smc(), 256);
+        let patches = p
+            .text
+            .iter()
+            .filter(|&&w| {
+                matches!(
+                    decode(w),
+                    Ok(Instr::Sw { rs1, offset, .. })
+                        if rs1 == T6 && matches!(offset, 16 | -4)
+                )
+            })
+            .count();
+        assert!(patches > 0, "smc preset emitted no text patch:\n{}", p.disassemble());
+    }
+
+    #[test]
+    fn smc_campaign_agrees_in_lockstep_without_divergence() {
+        // Self-modifying stores hit the decode-cache and block-cache
+        // invalidation paths of both backends: every case must halt
+        // with bit-identical architectural state — a stale cached
+        // decode on either side is an instant divergence.
+        let cfg = FuzzConfig {
+            seeds: 16,
+            base_seed: 5000,
+            ops: 150,
+            weights: Some(OpWeights::smc()),
+            ..Default::default()
+        };
+        let summary = run_campaign(&cfg);
+        for f in &summary.failures {
+            eprintln!("seed {} on {:?}:\n{}\n{}", f.seed, f.point, f.report, f.listing);
+        }
+        assert!(summary.ok(), "{} smc failures", summary.failures.len());
+        assert_eq!(summary.cases, 32, "16 seeds x (default + stressed)");
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! - [`instr`] — the decoded [`instr::Instr`] form shared by all layers.
 //! - [`encode`] / [`decode`] — machine-word codecs; `decode ∘ encode = id`
 //!   is enforced by property tests.
+//! - [`predecode`] — the decode-once text-segment cache (with its
+//!   store-invalidation contract) shared by both execution backends.
 
 pub mod decode;
 pub mod encode;
 pub mod instr;
+pub mod predecode;
 pub mod reg;
 
 pub use decode::{decode, DecodeError};
 pub use encode::{encode, EncodeError};
 pub use instr::{csr, CustomSlot, IPrime, Instr, SPrime};
+pub use predecode::DecodeCache;
 pub use reg::{Reg, VReg};

@@ -1,0 +1,179 @@
+//! Predecoded text segment: one decode per text word, shared by both
+//! backends.
+//!
+//! Both the timed [`crate::core::Core`] and the architectural
+//! [`crate::ref_iss::RefIss`] decode each text word at most once and
+//! then dispatch on the cached [`Instr`]. [`DecodeCache`] is that shared
+//! map plus the piece the seed version of both backends was missing: an
+//! **invalidation contract**. A store whose byte range overlaps the text
+//! segment must call [`DecodeCache::invalidate`] so self-modifying code
+//! re-decodes the new word instead of silently executing the stale one
+//! (DESIGN.md §11).
+//!
+//! Words that do not decode are left empty rather than failing the whole
+//! load: an illegal word only faults if it is actually fetched, and it
+//! must fault *at its pc* at execution time, exactly like the
+//! decode-on-demand path did.
+
+use super::{decode, Instr};
+
+/// Per-word decoded view of the text segment `[base, base + 4*len)`.
+#[derive(Debug, Default)]
+pub struct DecodeCache {
+    base: u32,
+    slots: Vec<Option<Instr>>,
+}
+
+impl DecodeCache {
+    /// An empty cache (no program loaded).
+    pub fn empty() -> Self {
+        Self { base: 0, slots: Vec::new() }
+    }
+
+    /// Predecode a freshly loaded text segment. Undecodable words keep an
+    /// empty slot (see module docs).
+    pub fn predecode(&mut self, base: u32, words: &[u32]) {
+        self.base = base;
+        self.slots.clear();
+        self.slots.extend(words.iter().map(|&w| decode(w).ok()));
+    }
+
+    pub fn base(&self) -> u32 {
+        self.base
+    }
+
+    /// Number of text words covered.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Word index of `pc`, if `pc` lies in the text segment and is
+    /// word-aligned *relative to the text base*. Callers must have
+    /// already raised misaligned-fetch faults: a pc at `base + 4k + 2`
+    /// returns `None` here so the truncating division can never alias an
+    /// aligned slot.
+    #[inline]
+    pub fn word_index(&self, pc: u32) -> Option<usize> {
+        let off = pc.wrapping_sub(self.base);
+        if off % 4 != 0 {
+            return None;
+        }
+        let idx = (off / 4) as usize;
+        (idx < self.slots.len()).then_some(idx)
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> Option<Instr> {
+        self.slots[idx]
+    }
+
+    /// Cache a decode performed on demand (after an invalidation, or for
+    /// a word that was undecodable at load time and has been rewritten).
+    #[inline]
+    pub fn put(&mut self, idx: usize, i: Instr) {
+        self.slots[idx] = Some(i);
+    }
+
+    /// Does the byte range `[addr, addr + len)` overlap the text
+    /// segment? Widths are carried in `u64` so a range reaching the top
+    /// of the 32-bit address space cannot wrap.
+    #[inline]
+    pub fn overlaps(&self, addr: u32, len: usize) -> bool {
+        if self.slots.is_empty() || len == 0 {
+            return false;
+        }
+        let end = addr as u64 + len as u64;
+        let text_end = self.base as u64 + self.slots.len() as u64 * 4;
+        (addr as u64) < text_end && end > self.base as u64
+    }
+
+    /// Drop every decoded word the byte range `[addr, addr + len)`
+    /// touches. Returns the inclusive word-index span cleared, so the
+    /// caller can also invalidate derived state (block caches), or
+    /// `None` when the range misses the text segment entirely.
+    pub fn invalidate(&mut self, addr: u32, len: usize) -> Option<(usize, usize)> {
+        if !self.overlaps(addr, len) {
+            return None;
+        }
+        let start = (addr as u64).max(self.base as u64) - self.base as u64;
+        let end = (addr as u64 + len as u64).min(self.base as u64 + self.slots.len() as u64 * 4)
+            - self.base as u64;
+        let first = (start / 4) as usize;
+        let last = ((end - 1) / 4) as usize;
+        for slot in &mut self.slots[first..=last] {
+            *slot = None;
+        }
+        Some((first, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode;
+    use crate::isa::reg::*;
+
+    fn cache_of(words: &[u32]) -> DecodeCache {
+        let mut c = DecodeCache::empty();
+        c.predecode(0x100, words);
+        c
+    }
+
+    fn addi_word() -> u32 {
+        encode(&Instr::Addi { rd: A0, rs1: A0, imm: 1 }).unwrap()
+    }
+
+    #[test]
+    fn predecode_fills_slots_and_tolerates_illegal_words() {
+        let c = cache_of(&[addi_word(), 0xffff_ffff, addi_word()]);
+        assert_eq!(c.len(), 3);
+        assert!(c.get(0).is_some());
+        assert!(c.get(1).is_none(), "illegal word stays empty, faults only if fetched");
+        assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn word_index_rejects_unaligned_and_out_of_range() {
+        let c = cache_of(&[addi_word(), addi_word()]);
+        assert_eq!(c.word_index(0x100), Some(0));
+        assert_eq!(c.word_index(0x104), Some(1));
+        assert_eq!(c.word_index(0x102), None, "base+2 must not alias slot 0");
+        assert_eq!(c.word_index(0x108), None);
+        assert_eq!(c.word_index(0xFC), None);
+    }
+
+    #[test]
+    fn overlap_and_invalidate_spans() {
+        let mut c = cache_of(&[addi_word(); 4]); // text = [0x100, 0x110)
+        assert!(!c.overlaps(0xF0, 16));
+        assert!(c.overlaps(0xFD, 4), "straddling the base overlaps");
+        assert!(c.overlaps(0x10F, 1));
+        assert!(!c.overlaps(0x110, 64));
+        assert!(!c.overlaps(0x104, 0));
+
+        // A 1-byte store into the middle word clears exactly that word.
+        assert_eq!(c.invalidate(0x105, 1), Some((1, 1)));
+        assert!(c.get(1).is_none());
+        assert!(c.get(0).is_some() && c.get(2).is_some());
+
+        // An unaligned 4-byte store straddles two words.
+        assert_eq!(c.invalidate(0x109, 4), Some((2, 3)));
+        assert!(c.get(2).is_none() && c.get(3).is_none());
+
+        // A huge range clamps to the text bounds.
+        c.predecode(0x100, &[addi_word(); 4]);
+        assert_eq!(c.invalidate(0, 0x1000), Some((0, 3)));
+        assert_eq!(c.invalidate(0x200, 4), None);
+    }
+
+    #[test]
+    fn overlap_near_address_space_top_does_not_wrap() {
+        let mut c = DecodeCache::empty();
+        c.predecode(0x100, &[addi_word()]);
+        assert!(!c.overlaps(0xffff_fff0, 0x20));
+    }
+}

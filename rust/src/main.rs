@@ -23,7 +23,7 @@
 //!
 //! verification:
 //!   fuzz [--seeds N] [--base-seed S] [--ops M]
-//!        [--weights alu=..,branch=..,muldiv=..,mem=..,vec=..,vecmem=..]
+//!        [--weights alu=..,branch=..,muldiv=..,mem=..,vec=..,vecmem=..,wildjump=..,smc=..]
 //!        [--sweep axis=a,b,c]... [--artifact-dir DIR] [--json]
 //!                                       differential fuzzing: random
 //!                                       programs run in lockstep on the

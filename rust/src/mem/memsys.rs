@@ -183,6 +183,23 @@ impl MemSys {
         self.llc.flush(&mut self.dram);
     }
 
+    /// Make the instruction-fetch path coherent after a store hit the
+    /// text segment (self-modifying code): push dirty data down to DRAM
+    /// and drop the IL1, so the next fetch of the written line sees the
+    /// new bytes. Host-side — no cycles are booked; the post-SMC refetch
+    /// is simply modeled as cold (there is no hardware coherence between
+    /// the write path and the IL1 on this core, matching the `fence.i`
+    /// cost model being "a full refetch"). A no-op on the flat memory
+    /// model, where stores and fetches already share one image.
+    pub fn sync_fetch(&mut self) {
+        if self.flat() {
+            return;
+        }
+        self.dl1.flush(&mut self.llc, &mut self.dram);
+        self.llc.flush(&mut self.dram);
+        self.il1.invalidate_all();
+    }
+
     /// Hierarchy-aware host read (no timing, no state change).
     pub fn peek(&self, addr: u32) -> u8 {
         self.dl1.peek(addr, &self.llc, &self.dram)

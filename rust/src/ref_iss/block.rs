@@ -1,0 +1,375 @@
+//! Basic-block micro-op cache for the reference ISS.
+//!
+//! The per-instruction interpreter pays fetch bookkeeping (alignment and
+//! bounds checks, decode-cache indexing) and pc/instret updates on every
+//! instruction. This module lowers each basic block once into a straight
+//! run of [`Uop`]s with every pc-relative quantity **precomputed**: an
+//! `auipc` becomes a constant load, a branch carries its absolute target,
+//! a `jal` carries both its link value and its target. The block executor
+//! in [`super::RefIss::run`] then touches no pc at all on the
+//! straight-line path.
+//!
+//! Block formation rules (DESIGN.md §11):
+//! - a block starts at any word the interpreter jumps to and extends
+//!   through consecutive decodable text words;
+//! - it ends at the first control-flow or halting instruction
+//!   (branch/jal/jalr/ecall/ebreak), at the first undecodable word
+//!   (which must fault *at its own pc*, at execution time), at the end
+//!   of the text segment, or at [`MAX_BLOCK_UOPS`];
+//! - blocks may overlap: a jump into the middle of an existing block
+//!   simply forms a new suffix block at that word.
+//!
+//! Rare or stateful instructions (CSR reads, `mulh`-family, `div`/`rem`,
+//! fences, `ecall`/`ebreak`, custom SIMD) are *not* re-implemented: they
+//! lower to [`Uop::Sys`], which routes through the same
+//! `RefIss::exec` the per-instruction engines use, so their semantics
+//! cannot diverge between engines.
+//!
+//! Invalidation: the owning `RefIss` clears blocks whose uop span
+//! overlaps any invalidated text word ([`BlockCache::invalidate_span`]).
+//! The executing block is held by `Rc`, so a store that invalidates the
+//! block currently running cannot free it mid-run; the executor instead
+//! aborts the block at the store and re-enters through a fresh lookup.
+
+use std::rc::Rc;
+
+use crate::isa::Instr;
+
+/// Upper bound on uops per block. Bounds both lowering cost on huge
+/// straight-line regions and how far back
+/// [`BlockCache::invalidate_span`] must look for overlapping blocks.
+pub(crate) const MAX_BLOCK_UOPS: usize = 64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum AluIOp {
+    Add,
+    Slt,
+    Sltu,
+    Xor,
+    Or,
+    And,
+    Sll,
+    Srl,
+    Sra,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum AluROp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    Mul,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum LoadKind {
+    B,
+    H,
+    W,
+    Bu,
+    Hu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum StoreKind {
+    B,
+    H,
+    W,
+}
+
+impl StoreKind {
+    #[inline]
+    pub(crate) fn len(self) -> usize {
+        match self {
+            StoreKind::B => 1,
+            StoreKind::H => 2,
+            StoreKind::W => 4,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BrCond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// One predecoded micro-op. Register numbers are raw `u8` indices and
+/// every pc-relative value is folded in at lowering time.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Uop {
+    /// Constant destination value: `lui`, and `auipc` with its pc folded.
+    Li { rd: u8, v: u32 },
+    AluImm { op: AluIOp, rd: u8, rs1: u8, imm: u32 },
+    AluReg { op: AluROp, rd: u8, rs1: u8, rs2: u8 },
+    Load { kind: LoadKind, rd: u8, rs1: u8, imm: u32 },
+    Store { kind: StoreKind, rs1: u8, rs2: u8, imm: u32 },
+    /// Conditional branch; `target` is the absolute taken-path pc.
+    Br { cond: BrCond, rs1: u8, rs2: u8, target: u32 },
+    Jal { rd: u8, link: u32, target: u32 },
+    Jalr { rd: u8, rs1: u8, imm: u32, link: u32 },
+    /// Fallback: execute through `RefIss::exec` (see module docs).
+    Sys(Instr),
+}
+
+/// Lower one decoded instruction at `pc` into a micro-op.
+pub(crate) fn lower(i: Instr, pc: u32) -> Uop {
+    use Instr::*;
+    match i {
+        Lui { rd, imm } => Uop::Li { rd: rd.num(), v: imm as u32 },
+        Auipc { rd, imm } => Uop::Li { rd: rd.num(), v: pc.wrapping_add(imm as u32) },
+        Jal { rd, offset } => Uop::Jal {
+            rd: rd.num(),
+            link: pc.wrapping_add(4),
+            target: pc.wrapping_add(offset as u32),
+        },
+        Jalr { rd, rs1, offset } => Uop::Jalr {
+            rd: rd.num(),
+            rs1: rs1.num(),
+            imm: offset as u32,
+            link: pc.wrapping_add(4),
+        },
+        Beq { rs1, rs2, offset }
+        | Bne { rs1, rs2, offset }
+        | Blt { rs1, rs2, offset }
+        | Bge { rs1, rs2, offset }
+        | Bltu { rs1, rs2, offset }
+        | Bgeu { rs1, rs2, offset } => {
+            let cond = match i {
+                Beq { .. } => BrCond::Eq,
+                Bne { .. } => BrCond::Ne,
+                Blt { .. } => BrCond::Lt,
+                Bge { .. } => BrCond::Ge,
+                Bltu { .. } => BrCond::Ltu,
+                _ => BrCond::Geu,
+            };
+            Uop::Br {
+                cond,
+                rs1: rs1.num(),
+                rs2: rs2.num(),
+                target: pc.wrapping_add(offset as u32),
+            }
+        }
+        Lb { rd, rs1, offset }
+        | Lh { rd, rs1, offset }
+        | Lw { rd, rs1, offset }
+        | Lbu { rd, rs1, offset }
+        | Lhu { rd, rs1, offset } => {
+            let kind = match i {
+                Lb { .. } => LoadKind::B,
+                Lh { .. } => LoadKind::H,
+                Lw { .. } => LoadKind::W,
+                Lbu { .. } => LoadKind::Bu,
+                _ => LoadKind::Hu,
+            };
+            Uop::Load { kind, rd: rd.num(), rs1: rs1.num(), imm: offset as u32 }
+        }
+        Sb { rs1, rs2, offset } | Sh { rs1, rs2, offset } | Sw { rs1, rs2, offset } => {
+            let kind = match i {
+                Sb { .. } => StoreKind::B,
+                Sh { .. } => StoreKind::H,
+                _ => StoreKind::W,
+            };
+            Uop::Store { kind, rs1: rs1.num(), rs2: rs2.num(), imm: offset as u32 }
+        }
+        Addi { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::Add, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Slti { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::Slt, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Sltiu { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::Sltu, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Xori { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::Xor, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Ori { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::Or, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Andi { rd, rs1, imm } => {
+            Uop::AluImm { op: AluIOp::And, rd: rd.num(), rs1: rs1.num(), imm: imm as u32 }
+        }
+        Slli { rd, rs1, shamt } => {
+            Uop::AluImm { op: AluIOp::Sll, rd: rd.num(), rs1: rs1.num(), imm: shamt as u32 }
+        }
+        Srli { rd, rs1, shamt } => {
+            Uop::AluImm { op: AluIOp::Srl, rd: rd.num(), rs1: rs1.num(), imm: shamt as u32 }
+        }
+        Srai { rd, rs1, shamt } => {
+            Uop::AluImm { op: AluIOp::Sra, rd: rd.num(), rs1: rs1.num(), imm: shamt as u32 }
+        }
+        Add { rd, rs1, rs2 }
+        | Sub { rd, rs1, rs2 }
+        | Sll { rd, rs1, rs2 }
+        | Slt { rd, rs1, rs2 }
+        | Sltu { rd, rs1, rs2 }
+        | Xor { rd, rs1, rs2 }
+        | Srl { rd, rs1, rs2 }
+        | Sra { rd, rs1, rs2 }
+        | Or { rd, rs1, rs2 }
+        | And { rd, rs1, rs2 }
+        | Mul { rd, rs1, rs2 } => {
+            let op = match i {
+                Add { .. } => AluROp::Add,
+                Sub { .. } => AluROp::Sub,
+                Sll { .. } => AluROp::Sll,
+                Slt { .. } => AluROp::Slt,
+                Sltu { .. } => AluROp::Sltu,
+                Xor { .. } => AluROp::Xor,
+                Srl { .. } => AluROp::Srl,
+                Sra { .. } => AluROp::Sra,
+                Or { .. } => AluROp::Or,
+                And { .. } => AluROp::And,
+                _ => AluROp::Mul,
+            };
+            Uop::AluReg { op, rd: rd.num(), rs1: rs1.num(), rs2: rs2.num() }
+        }
+        // Everything else stays on the shared `exec` path: upper
+        // multiplies and div/rem (corner-case heavy), CSR reads
+        // (instret-dependent), fences, ecall/ebreak, custom SIMD.
+        other => Uop::Sys(other),
+    }
+}
+
+/// Does `i` end the basic block it appears in?
+#[inline]
+pub(crate) fn ends_block(i: &Instr) -> bool {
+    i.is_branch_or_jump() || matches!(i, Instr::Ecall | Instr::Ebreak)
+}
+
+/// One lowered basic block. Cheap to clone (the uops are shared), so the
+/// executor can keep the block alive across an invalidation of its own
+/// cache slot.
+#[derive(Clone)]
+pub(crate) struct Block {
+    pub uops: Rc<[Uop]>,
+}
+
+/// Blocks keyed by their starting text-word index.
+#[derive(Default)]
+pub(crate) struct BlockCache {
+    slots: Vec<Option<Block>>,
+}
+
+impl BlockCache {
+    pub(crate) fn empty() -> Self {
+        Self { slots: Vec::new() }
+    }
+
+    /// Drop all blocks and re-size for a freshly loaded text segment.
+    pub(crate) fn reset(&mut self, words: usize) {
+        self.slots.clear();
+        self.slots.resize(words, None);
+    }
+
+    #[inline]
+    pub(crate) fn get(&self, idx: usize) -> Option<&Block> {
+        self.slots[idx].as_ref()
+    }
+
+    pub(crate) fn put(&mut self, idx: usize, b: Block) {
+        self.slots[idx] = Some(b);
+    }
+
+    /// Invalidate every block whose uop range covers any word in the
+    /// inclusive span `[first, last]` (as returned by
+    /// [`crate::isa::DecodeCache::invalidate`]). A block starting at `s`
+    /// with `n` uops covers words `[s, s + n)`; only starts within
+    /// `MAX_BLOCK_UOPS - 1` words before `first` can reach it.
+    pub(crate) fn invalidate_span(&mut self, first: usize, last: usize) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let lo = first.saturating_sub(MAX_BLOCK_UOPS - 1);
+        let hi = last.min(self.slots.len() - 1);
+        for s in lo..=hi {
+            if let Some(b) = &self.slots[s] {
+                if s + b.uops.len() > first {
+                    self.slots[s] = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+
+    #[test]
+    fn lowering_precomputes_pc_relative_values() {
+        let pc = 0x1000;
+        match lower(Instr::Auipc { rd: A0, imm: 0x2000 }, pc) {
+            Uop::Li { rd, v } => {
+                assert_eq!(rd, A0.num());
+                assert_eq!(v, 0x3000);
+            }
+            other => panic!("unexpected lowering: {other:?}"),
+        }
+        match lower(Instr::Jal { rd: RA, offset: -16 }, pc) {
+            Uop::Jal { link, target, .. } => {
+                assert_eq!(link, 0x1004);
+                assert_eq!(target, 0xFF0);
+            }
+            other => panic!("unexpected lowering: {other:?}"),
+        }
+        match lower(Instr::Bne { rs1: A0, rs2: A1, offset: 8 }, pc) {
+            Uop::Br { cond, target, .. } => {
+                assert_eq!(cond, BrCond::Ne);
+                assert_eq!(target, 0x1008);
+            }
+            other => panic!("unexpected lowering: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rare_instructions_fall_back_to_sys() {
+        for i in [
+            Instr::Div { rd: A0, rs1: A1, rs2: A2 },
+            Instr::Mulh { rd: A0, rs1: A1, rs2: A2 },
+            Instr::Csrrs { rd: A0, csr: 0xC00, rs1: ZERO },
+            Instr::Fence,
+            Instr::Ecall,
+        ] {
+            assert!(matches!(lower(i, 0), Uop::Sys(_)), "{i:?} should lower to Sys");
+        }
+    }
+
+    #[test]
+    fn terminators() {
+        assert!(ends_block(&Instr::Jal { rd: ZERO, offset: 8 }));
+        assert!(ends_block(&Instr::Ecall));
+        assert!(ends_block(&Instr::Ebreak));
+        assert!(!ends_block(&Instr::Csrrs { rd: A0, csr: 0xC00, rs1: ZERO }));
+        assert!(!ends_block(&Instr::Addi { rd: A0, rs1: A0, imm: 1 }));
+    }
+
+    #[test]
+    fn invalidate_span_clears_overlapping_blocks_only() {
+        let mut c = BlockCache::empty();
+        c.reset(32);
+        let blk = |n: usize| Block { uops: vec![Uop::Sys(Instr::Fence); n].into() };
+        c.put(0, blk(4)); // words 0..4
+        c.put(4, blk(2)); // words 4..6
+        c.put(10, blk(1)); // word 10
+        c.invalidate_span(5, 5);
+        assert!(c.get(0).is_some(), "block [0,4) does not reach word 5");
+        assert!(c.get(4).is_none(), "block [4,6) covers word 5");
+        assert!(c.get(10).is_some());
+        c.invalidate_span(0, 0);
+        assert!(c.get(0).is_none());
+    }
+}

@@ -11,6 +11,9 @@
 //!
 //! - [`crate::isa::decode`] / [`crate::isa::Instr`] — the instruction
 //!   encoding is the specification both machines implement;
+//! - [`crate::isa::DecodeCache`] — the predecoded text segment, with its
+//!   store-invalidation contract (a store overlapping the text range
+//!   drops the stale decodes, so self-modifying code re-decodes);
 //! - [`crate::simd::UnitPool`] — a custom unit IS the architectural
 //!   definition of its instruction (the paper's reconfigurable-slot
 //!   model), so both backends execute the same unit object; the ISS
@@ -18,9 +21,22 @@
 //!
 //! Because there is no scoreboard, no cache model and no cycle
 //! accounting, the ISS also serves as a high-throughput functional
-//! backend (`Machine::backend(Backend::RefIss)`), executing the full
-//! workload registry an order of magnitude faster than the timed core
-//! (`cargo bench --bench iss_throughput`).
+//! backend (`Machine::backend(Backend::RefIss)`). It offers three
+//! [`ExecEngine`]s (DESIGN.md §11):
+//!
+//! - **`Blocks`** (default): basic blocks are lowered once into straight
+//!   runs of predecoded micro-ops ([`block`]) and executed with no
+//!   per-instruction fetch bookkeeping — several times faster than
+//!   per-instruction dispatch (`cargo bench --bench iss_throughput`);
+//! - **`PerInstr`**: classic decode-cached one-instruction `step()`
+//!   dispatch (the lockstep cosim driver steps this way);
+//! - **`Uncached`**: decodes every instruction fresh from memory bytes —
+//!   the cacheless oracle the invalidation property tests compare
+//!   against.
+//!
+//! All three engines share one `exec()` and are bit-identical in
+//! architectural results (`tests/exec_blocks.rs` proves it across the
+//! workload registry and the fuzz corpus).
 //!
 //! Architectural contract vs the timed core (DESIGN.md §9): registers,
 //! vector registers, pc, instret and the memory image must match
@@ -29,17 +45,35 @@
 //! lockstep driver ([`crate::cosim`]) injects the timed core's value so
 //! downstream dataflow still compares exactly.
 
+mod block;
+
 use crate::arch::ArchState;
 use crate::asm::Program;
 use crate::core::SimError;
 use crate::isa::instr::csr;
-use crate::isa::{decode, Instr, Reg, VReg};
+use crate::isa::{decode, DecodeCache, Instr, Reg, VReg};
 use crate::simd::{standard_pool, UnitInputs, UnitPool, VecMemOp, VecVal};
+
+use block::{
+    ends_block, lower, AluIOp, AluROp, Block, BlockCache, BrCond, LoadKind, Uop, MAX_BLOCK_UOPS,
+};
 
 /// Result of a completed ISS run (no cycle counts by construction).
 #[derive(Debug, Clone, Copy)]
 pub struct IssRunResult {
     pub instret: u64,
+}
+
+/// Which execution engine [`RefIss::run_with`] uses (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecEngine {
+    /// Cached basic-block micro-op execution (the default).
+    Blocks,
+    /// Per-instruction dispatch over the per-word decode cache.
+    PerInstr,
+    /// Decode every instruction fresh from memory — the slow cacheless
+    /// oracle for differential tests.
+    Uncached,
 }
 
 /// The architectural-only reference simulator.
@@ -55,8 +89,13 @@ pub struct RefIss {
     instret: u64,
     halted: bool,
     mem: Vec<u8>,
-    text_base: u32,
-    decoded: Vec<Option<Instr>>,
+    /// Predecoded text segment (shared contract with the timed core).
+    text: DecodeCache,
+    /// Lowered basic blocks, keyed by starting text-word index.
+    blocks: BlockCache,
+    /// Bumped on every text-range invalidation; the block executor uses
+    /// it to notice that a store may have rewritten its own block.
+    text_epoch: u64,
 }
 
 impl RefIss {
@@ -74,8 +113,9 @@ impl RefIss {
             instret: 0,
             halted: false,
             mem: vec![0; mem_bytes],
-            text_base: 0,
-            decoded: Vec::new(),
+            text: DecodeCache::empty(),
+            blocks: BlockCache::empty(),
+            text_epoch: 0,
         }
     }
 
@@ -100,8 +140,31 @@ impl RefIss {
     /// [`crate::core::Core::load`]: registers cleared, `sp` at the top
     /// of memory (16-byte aligned), pc at the entry point. Memory
     /// outside the program image is left as-is (a fresh ISS is
-    /// all-zero, like fresh simulated DRAM).
-    pub fn load(&mut self, prog: &Program) {
+    /// all-zero, like fresh simulated DRAM). The whole text segment is
+    /// predecoded here; undecodable words fault lazily, at their own pc,
+    /// only if fetched.
+    ///
+    /// An image that does not fit in memory is rejected with
+    /// [`SimError::ImageFault`] (mirroring the core's `checked_add`
+    /// bounds pattern) and leaves the ISS unloaded rather than
+    /// panicking.
+    pub fn load(&mut self, prog: &Program) -> Result<(), SimError> {
+        let size = self.mem.len();
+        let text_len = prog.text.len() * 4;
+        if (prog.text_base as usize).checked_add(text_len).is_none_or(|end| end > size) {
+            return Err(SimError::ImageFault { addr: prog.text_base, len: text_len, size });
+        }
+        if !prog.data.is_empty()
+            && (prog.data_base as usize)
+                .checked_add(prog.data.len())
+                .is_none_or(|end| end > size)
+        {
+            return Err(SimError::ImageFault {
+                addr: prog.data_base,
+                len: prog.data.len(),
+                size,
+            });
+        }
         let lanes = self.lanes();
         for (i, w) in prog.text.iter().enumerate() {
             let at = prog.text_base as usize + i * 4;
@@ -117,15 +180,27 @@ impl RefIss {
         self.pc = prog.entry;
         self.instret = 0;
         self.halted = false;
-        self.text_base = prog.text_base;
-        self.decoded = vec![None; prog.text.len()];
+        self.text.predecode(prog.text_base, &prog.text);
+        self.blocks.reset(prog.text.len());
+        self.text_epoch = 0;
         self.pool.reset_all();
+        Ok(())
     }
 
-    /// Host-side memory write (workload input images).
-    pub fn host_write(&mut self, addr: u32, data: &[u8]) {
+    /// Host-side memory write (workload input images). Out-of-range
+    /// writes are rejected with [`SimError::ImageFault`]; writes that
+    /// land on the text segment invalidate the decoded view, like a
+    /// store would.
+    pub fn host_write(&mut self, addr: u32, data: &[u8]) -> Result<(), SimError> {
+        if (addr as usize).checked_add(data.len()).is_none_or(|end| end > self.mem.len()) {
+            return Err(SimError::ImageFault { addr, len: data.len(), size: self.mem.len() });
+        }
         let at = addr as usize;
         self.mem[at..at + data.len()].copy_from_slice(data);
+        if self.text.overlaps(addr, data.len()) {
+            self.invalidate_text(addr, data.len());
+        }
+        Ok(())
     }
 
     /// Overwrite one base register (the lockstep driver uses this to
@@ -144,6 +219,20 @@ impl RefIss {
         }
     }
 
+    /// Register read by raw micro-op index (always 0..=31).
+    #[inline]
+    fn reg8(&self, n: u8) -> u32 {
+        self.regs[(n & 31) as usize]
+    }
+
+    /// Register write by raw micro-op index (x0 stays hardwired zero).
+    #[inline]
+    fn set_reg8(&mut self, n: u8, v: u32) {
+        if n != 0 {
+            self.regs[(n & 31) as usize] = v;
+        }
+    }
+
     #[inline]
     fn write_vreg(&mut self, v: VReg, val: VecVal) {
         if v.num() != 0 {
@@ -152,9 +241,14 @@ impl RefIss {
     }
 
     #[inline]
-    fn check_mem(&self, addr: u32, len: usize) -> Result<(), SimError> {
-        if (addr as usize).checked_add(len).is_none_or(|end| end > self.mem.len()) {
-            return Err(SimError::MemFault { pc: self.pc, addr, len, size: self.mem.len() });
+    fn mem_ok(&self, addr: u32, len: usize) -> bool {
+        (addr as usize).checked_add(len).is_some_and(|end| end <= self.mem.len())
+    }
+
+    #[inline]
+    fn check_mem(&self, pc: u32, addr: u32, len: usize) -> Result<(), SimError> {
+        if !self.mem_ok(addr, len) {
+            return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
         }
         Ok(())
     }
@@ -165,32 +259,37 @@ impl RefIss {
         u32::from_le_bytes(self.mem[at..at + 4].try_into().unwrap())
     }
 
-    /// Decode (with per-index caching over the text segment) the
-    /// instruction at `pc`. Mirrors the timed core's fetch fault order
-    /// exactly (DESIGN.md §9): a non-word-aligned pc (reachable through
-    /// `jalr`, which clears only bit 0, or a branch offset of 4k+2) is
-    /// a misaligned-fetch fault, a pc outside memory is a fetch fault —
-    /// both raised before any decode-cache indexing so the truncating
-    /// `/ 4` can never alias an aligned slot.
+    /// Drop decoded state covering `[addr, addr+len)`: the per-word
+    /// decode cache, every lowered block that spans an invalidated word,
+    /// and the epoch the block executor watches.
+    fn invalidate_text(&mut self, addr: u32, len: usize) {
+        if let Some((first, last)) = self.text.invalidate(addr, len) {
+            self.blocks.invalidate_span(first, last);
+            self.text_epoch = self.text_epoch.wrapping_add(1);
+        }
+    }
+
+    /// Decode (through the predecoded text cache) the instruction at
+    /// `pc`. Mirrors the timed core's fetch fault order exactly
+    /// (DESIGN.md §9): a non-word-aligned pc (reachable through `jalr`,
+    /// which clears only bit 0, or a branch offset of 4k+2) is a
+    /// misaligned-fetch fault, a pc outside memory is a fetch fault —
+    /// both raised before any cache indexing so a truncating word index
+    /// can never alias an aligned slot.
     fn fetch_decode(&mut self, pc: u32) -> Result<Instr, SimError> {
         if pc % 4 != 0 {
             return Err(SimError::FetchMisaligned { pc });
         }
-        if (pc as usize).checked_add(4).is_none_or(|end| end > self.mem.len()) {
+        if !self.mem_ok(pc, 4) {
             return Err(SimError::FetchFault { pc, size: self.mem.len() });
         }
-        let off = pc.wrapping_sub(self.text_base);
-        if off % 4 == 0 {
-            let idx = off as usize / 4;
-            if let Some(slot) = self.decoded.get(idx) {
-                if let Some(i) = slot {
-                    return Ok(*i);
-                }
-                let i = decode(self.load_u32(pc))
-                    .map_err(|source| SimError::Illegal { pc, source })?;
-                self.decoded[idx] = Some(i);
+        if let Some(idx) = self.text.word_index(pc) {
+            if let Some(i) = self.text.get(idx) {
                 return Ok(i);
             }
+            let i = decode(self.load_u32(pc)).map_err(|source| SimError::Illegal { pc, source })?;
+            self.text.put(idx, i);
+            return Ok(i);
         }
         decode(self.load_u32(pc)).map_err(|source| SimError::Illegal { pc, source })
     }
@@ -201,6 +300,35 @@ impl RefIss {
         debug_assert!(!self.halted, "step() after halt");
         let pc = self.pc;
         let instr = self.fetch_decode(pc)?;
+        let next = self.exec(pc, instr)?;
+        self.pc = next;
+        self.instret += 1;
+        Ok(instr)
+    }
+
+    /// [`RefIss::step`] with no decode caching at all (the `Uncached`
+    /// oracle engine).
+    fn step_uncached(&mut self) -> Result<Instr, SimError> {
+        debug_assert!(!self.halted, "step() after halt");
+        let pc = self.pc;
+        if pc % 4 != 0 {
+            return Err(SimError::FetchMisaligned { pc });
+        }
+        if !self.mem_ok(pc, 4) {
+            return Err(SimError::FetchFault { pc, size: self.mem.len() });
+        }
+        let instr = decode(self.load_u32(pc)).map_err(|source| SimError::Illegal { pc, source })?;
+        let next = self.exec(pc, instr)?;
+        self.pc = next;
+        self.instret += 1;
+        Ok(instr)
+    }
+
+    /// Execute one decoded instruction at `pc`, returning the next pc.
+    /// Does not touch `self.pc`/`self.instret` — every engine drives
+    /// this one implementation with its own bookkeeping, so instruction
+    /// semantics cannot diverge between engines.
+    fn exec(&mut self, pc: u32, instr: Instr) -> Result<u32, SimError> {
         let mut next_pc = pc.wrapping_add(4);
         use Instr::*;
         match instr {
@@ -247,7 +375,7 @@ impl RefIss {
                     Lh { .. } | Lhu { .. } => 2,
                     _ => 4,
                 };
-                self.check_mem(addr, len)?;
+                self.check_mem(pc, addr, len)?;
                 let at = addr as usize;
                 let value = match instr {
                     Lb { .. } => self.mem[at] as i8 as i32 as u32,
@@ -265,10 +393,13 @@ impl RefIss {
                     Sh { .. } => 2,
                     _ => 4,
                 };
-                self.check_mem(addr, len)?;
+                self.check_mem(pc, addr, len)?;
                 let bytes = self.regs[rs2.num() as usize].to_le_bytes();
                 let at = addr as usize;
                 self.mem[at..at + len].copy_from_slice(&bytes[..len]);
+                if self.text.overlaps(addr, len) {
+                    self.invalidate_text(addr, len);
+                }
             }
             Addi { rd, rs1, imm } => {
                 let a = self.regs[rs1.num() as usize];
@@ -441,9 +572,7 @@ impl RefIss {
                 )?;
             }
         }
-        self.pc = next_pc;
-        self.instret += 1;
-        Ok(instr)
+        Ok(next_pc)
     }
 
     /// Execute a custom instruction through the shared unit pool,
@@ -479,18 +608,21 @@ impl RefIss {
         match out.mem {
             Some(VecMemOp::Load { addr }) => {
                 let len = self.vlen_bytes();
-                self.check_mem(addr, len)?;
+                self.check_mem(pc, addr, len)?;
                 let at = addr as usize;
                 let val = VecVal::from_bytes(&self.mem[at..at + len]);
                 self.write_vreg(vrd1, val);
             }
             Some(VecMemOp::Store { addr, data }) => {
                 let len = self.vlen_bytes();
-                self.check_mem(addr, len)?;
+                self.check_mem(pc, addr, len)?;
                 let mut buf = [0u8; crate::simd::MAX_VLEN_BITS / 8];
                 data.write_bytes(&mut buf[..len]);
                 let at = addr as usize;
                 self.mem[at..at + len].copy_from_slice(&buf[..len]);
+                if self.text.overlaps(addr, len) {
+                    self.invalidate_text(addr, len);
+                }
             }
             None => {
                 if let Some(v) = out.vrd1 {
@@ -507,8 +639,42 @@ impl RefIss {
         Ok(())
     }
 
-    /// Run until `ecall` or the instruction budget is exhausted.
+    // ---- execution engines ------------------------------------------------
+
+    /// Run until `ecall` or the instruction budget is exhausted, with the
+    /// default (block) engine.
     pub fn run(&mut self, max_instrs: u64) -> Result<IssRunResult, SimError> {
+        self.run_with(max_instrs, ExecEngine::Blocks)
+    }
+
+    /// [`RefIss::run`] with an explicit engine. All engines produce
+    /// bit-identical architectural results (registers, pc, instret,
+    /// memory image, fault identity).
+    pub fn run_with(
+        &mut self,
+        max_instrs: u64,
+        engine: ExecEngine,
+    ) -> Result<IssRunResult, SimError> {
+        match engine {
+            ExecEngine::Blocks => self.run_blocks(max_instrs),
+            ExecEngine::PerInstr => self.run_stepwise(max_instrs),
+            ExecEngine::Uncached => self.run_uncached(max_instrs),
+        }
+    }
+
+    fn run_blocks(&mut self, max_instrs: u64) -> Result<IssRunResult, SimError> {
+        let start = self.instret;
+        while !self.halted {
+            let used = self.instret - start;
+            if used >= max_instrs {
+                return Err(SimError::Watchdog(max_instrs));
+            }
+            self.run_block(max_instrs - used)?;
+        }
+        Ok(IssRunResult { instret: self.instret })
+    }
+
+    fn run_stepwise(&mut self, max_instrs: u64) -> Result<IssRunResult, SimError> {
         let start = self.instret;
         while !self.halted {
             if self.instret - start >= max_instrs {
@@ -517,6 +683,216 @@ impl RefIss {
             self.step()?;
         }
         Ok(IssRunResult { instret: self.instret })
+    }
+
+    fn run_uncached(&mut self, max_instrs: u64) -> Result<IssRunResult, SimError> {
+        let start = self.instret;
+        while !self.halted {
+            if self.instret - start >= max_instrs {
+                return Err(SimError::Watchdog(max_instrs));
+            }
+            self.step_uncached()?;
+        }
+        Ok(IssRunResult { instret: self.instret })
+    }
+
+    /// Execute (at most `budget` instructions of) the basic block at the
+    /// current pc. Off-text and undecodable starts fall back to a single
+    /// [`RefIss::step`], which raises exactly the faults the
+    /// per-instruction engine would.
+    fn run_block(&mut self, budget: u64) -> Result<(), SimError> {
+        let pc0 = self.pc;
+        let Some(idx) = self.text.word_index(pc0) else {
+            self.step()?;
+            return Ok(());
+        };
+        let block = match self.blocks.get(idx) {
+            Some(b) => b.clone(),
+            None => match self.form_block(idx) {
+                Some(b) => b,
+                None => {
+                    self.step()?;
+                    return Ok(());
+                }
+            },
+        };
+        let uops = block.uops;
+        let n = (uops.len() as u64).min(budget) as usize;
+        let epoch = self.text_epoch;
+        let mut k = 0usize;
+        while k < n {
+            match uops[k] {
+                Uop::Li { rd, v } => self.set_reg8(rd, v),
+                Uop::AluImm { op, rd, rs1, imm } => {
+                    let a = self.reg8(rs1);
+                    let v = match op {
+                        AluIOp::Add => a.wrapping_add(imm),
+                        AluIOp::Slt => (((a as i32) < (imm as i32)) as u32),
+                        AluIOp::Sltu => ((a < imm) as u32),
+                        AluIOp::Xor => a ^ imm,
+                        AluIOp::Or => a | imm,
+                        AluIOp::And => a & imm,
+                        AluIOp::Sll => a << (imm & 31),
+                        AluIOp::Srl => a >> (imm & 31),
+                        AluIOp::Sra => ((a as i32) >> (imm & 31)) as u32,
+                    };
+                    self.set_reg8(rd, v);
+                }
+                Uop::AluReg { op, rd, rs1, rs2 } => {
+                    let a = self.reg8(rs1);
+                    let b = self.reg8(rs2);
+                    let v = match op {
+                        AluROp::Add => a.wrapping_add(b),
+                        AluROp::Sub => a.wrapping_sub(b),
+                        AluROp::Sll => a << (b & 31),
+                        AluROp::Slt => (((a as i32) < (b as i32)) as u32),
+                        AluROp::Sltu => ((a < b) as u32),
+                        AluROp::Xor => a ^ b,
+                        AluROp::Srl => a >> (b & 31),
+                        AluROp::Sra => ((a as i32) >> (b & 31)) as u32,
+                        AluROp::Or => a | b,
+                        AluROp::And => a & b,
+                        AluROp::Mul => a.wrapping_mul(b),
+                    };
+                    self.set_reg8(rd, v);
+                }
+                Uop::Load { kind, rd, rs1, imm } => {
+                    let addr = self.reg8(rs1).wrapping_add(imm);
+                    let len = match kind {
+                        LoadKind::B | LoadKind::Bu => 1,
+                        LoadKind::H | LoadKind::Hu => 2,
+                        LoadKind::W => 4,
+                    };
+                    if !self.mem_ok(addr, len) {
+                        let pc = pc0.wrapping_add(4 * k as u32);
+                        self.pc = pc;
+                        return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
+                    }
+                    let at = addr as usize;
+                    let v = match kind {
+                        LoadKind::B => self.mem[at] as i8 as i32 as u32,
+                        LoadKind::Bu => self.mem[at] as u32,
+                        LoadKind::H => {
+                            i16::from_le_bytes([self.mem[at], self.mem[at + 1]]) as i32 as u32
+                        }
+                        LoadKind::Hu => u16::from_le_bytes([self.mem[at], self.mem[at + 1]]) as u32,
+                        LoadKind::W => self.load_u32(addr),
+                    };
+                    self.set_reg8(rd, v);
+                }
+                Uop::Store { kind, rs1, rs2, imm } => {
+                    let addr = self.reg8(rs1).wrapping_add(imm);
+                    let len = kind.len();
+                    if !self.mem_ok(addr, len) {
+                        let pc = pc0.wrapping_add(4 * k as u32);
+                        self.pc = pc;
+                        return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
+                    }
+                    let bytes = self.reg8(rs2).to_le_bytes();
+                    let at = addr as usize;
+                    self.mem[at..at + len].copy_from_slice(&bytes[..len]);
+                    if self.text.overlaps(addr, len) {
+                        self.invalidate_text(addr, len);
+                        // The store may have rewritten a later uop of
+                        // this very block: retire it, then abort the
+                        // block and re-enter through a fresh lookup.
+                        self.instret += 1;
+                        self.pc = pc0.wrapping_add(4 * (k as u32 + 1));
+                        return Ok(());
+                    }
+                }
+                Uop::Br { cond, rs1, rs2, target } => {
+                    let a = self.reg8(rs1);
+                    let b = self.reg8(rs2);
+                    let take = match cond {
+                        BrCond::Eq => a == b,
+                        BrCond::Ne => a != b,
+                        BrCond::Lt => (a as i32) < (b as i32),
+                        BrCond::Ge => (a as i32) >= (b as i32),
+                        BrCond::Ltu => a < b,
+                        BrCond::Geu => a >= b,
+                    };
+                    if take {
+                        self.instret += 1;
+                        self.pc = target;
+                        return Ok(());
+                    }
+                }
+                Uop::Jal { rd, link, target } => {
+                    self.set_reg8(rd, link);
+                    self.instret += 1;
+                    self.pc = target;
+                    return Ok(());
+                }
+                Uop::Jalr { rd, rs1, imm, link } => {
+                    let target = self.reg8(rs1).wrapping_add(imm) & !1;
+                    self.set_reg8(rd, link);
+                    self.instret += 1;
+                    self.pc = target;
+                    return Ok(());
+                }
+                Uop::Sys(instr) => {
+                    let pc = pc0.wrapping_add(4 * k as u32);
+                    match self.exec(pc, instr) {
+                        Ok(next) => {
+                            // A halt, a redirect or a text invalidation
+                            // (custom vector store over code) ends the
+                            // block here.
+                            if self.halted
+                                || next != pc.wrapping_add(4)
+                                || self.text_epoch != epoch
+                            {
+                                self.instret += 1;
+                                self.pc = next;
+                                return Ok(());
+                            }
+                        }
+                        Err(e) => {
+                            self.pc = pc;
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+            self.instret += 1;
+            k += 1;
+        }
+        self.pc = pc0.wrapping_add(4 * n as u32);
+        Ok(())
+    }
+
+    /// Lower the basic block starting at text-word `idx` (see
+    /// [`block`] for the formation rules) and cache it. Returns `None`
+    /// when the very first word is undecodable — the caller falls back
+    /// to [`RefIss::step`], which reports the illegal-instruction fault
+    /// at the right pc.
+    fn form_block(&mut self, idx: usize) -> Option<Block> {
+        let mut uops = Vec::with_capacity(8);
+        let mut k = idx;
+        while k < self.text.len() && uops.len() < MAX_BLOCK_UOPS {
+            let pc = self.text.base().wrapping_add(4 * k as u32);
+            let i = match self.text.get(k) {
+                Some(i) => i,
+                None => match decode(self.load_u32(pc)) {
+                    Ok(i) => {
+                        self.text.put(k, i);
+                        i
+                    }
+                    Err(_) => break,
+                },
+            };
+            uops.push(lower(i, pc));
+            if ends_block(&i) {
+                break;
+            }
+            k += 1;
+        }
+        if uops.is_empty() {
+            return None;
+        }
+        let b = Block { uops: uops.into() };
+        self.blocks.put(idx, b.clone());
+        Some(b)
     }
 }
 
@@ -555,6 +931,7 @@ mod tests {
     use super::*;
     use crate::asm::Asm;
     use crate::isa::reg::*;
+    use crate::isa::{encode, Instr};
 
     const MEM: usize = 2 * 1024 * 1024;
 
@@ -563,7 +940,7 @@ mod tests {
         build(&mut a);
         let p = a.assemble().unwrap();
         let mut iss = RefIss::paper_default(MEM);
-        iss.load(&p);
+        iss.load(&p).unwrap();
         iss.run(1_000_000).unwrap();
         iss
     }
@@ -615,7 +992,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut iss = RefIss::paper_default(MEM);
-        iss.load(&p);
+        iss.load(&p).unwrap();
         iss.run(10_000).unwrap();
         assert_eq!(iss.reg(A2) as i32, -2);
         assert_eq!(iss.reg(A3), 0xFE);
@@ -639,7 +1016,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut iss = RefIss::paper_default(MEM);
-        iss.load(&p);
+        iss.load(&p).unwrap();
         iss.run(100).unwrap();
         let got: Vec<i32> = iss
             .mem_slice(p.sym("out"), 32)
@@ -662,13 +1039,13 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut iss = RefIss::paper_default(MEM);
-        iss.load(&p);
+        iss.load(&p).unwrap();
         iss.run(100).unwrap();
         assert_eq!(iss.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
         assert_eq!(iss.vreg(V3).to_i32s(), vec![9, 10, 11, 12, 13, 14, 15, 16]);
         assert_eq!(iss.reg(A5), 16);
         // Reloading resets the carry (pool.reset_all, as Core::load does).
-        iss.load(&p);
+        iss.load(&p).unwrap();
         iss.run(100).unwrap();
         assert_eq!(iss.reg(A5), 16);
     }
@@ -680,13 +1057,13 @@ mod tests {
         a.j(l);
         let p = a.assemble().unwrap();
         let mut iss = RefIss::paper_default(MEM);
-        iss.load(&p);
+        iss.load(&p).unwrap();
         assert!(matches!(iss.run(1000), Err(SimError::Watchdog(1000))));
 
         let mut a = Asm::new();
         a.ebreak();
         let p = a.assemble().unwrap();
-        iss.load(&p);
+        iss.load(&p).unwrap();
         assert!(matches!(iss.run(10), Err(SimError::Break(_))));
 
         let mut a = Asm::new();
@@ -694,7 +1071,7 @@ mod tests {
         a.lw(A1, 0, A0);
         a.halt();
         let p = a.assemble().unwrap();
-        iss.load(&p);
+        iss.load(&p).unwrap();
         assert!(matches!(iss.run(10), Err(SimError::MemFault { .. })));
     }
 
@@ -709,5 +1086,154 @@ mod tests {
         });
         assert_eq!(iss.reg(S0), 2, "cycle CSR reads as instret on the ISS");
         assert_eq!(iss.reg(S1), 3);
+    }
+
+    #[test]
+    fn oversized_images_are_rejected_not_panics() {
+        let mut a = Asm::new();
+        a.halt();
+        let p = a.assemble().unwrap();
+        // Image fits 2 MiB but not 16 bytes of DRAM.
+        let mut tiny = RefIss::paper_default(16);
+        assert!(matches!(tiny.load(&p), Err(SimError::ImageFault { .. })));
+
+        let mut a = Asm::new();
+        a.words("blob", &vec![0u32; 64]);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut tiny = RefIss::paper_default(64);
+        assert!(matches!(tiny.load(&p), Err(SimError::ImageFault { .. })));
+    }
+
+    #[test]
+    fn host_write_out_of_range_is_rejected_not_a_panic() {
+        let mut iss = RefIss::paper_default(1024);
+        assert!(iss.host_write(0, &[1, 2, 3]).is_ok());
+        assert!(matches!(
+            iss.host_write(1022, &[1, 2, 3]),
+            Err(SimError::ImageFault { addr: 1022, len: 3, size: 1024 })
+        ));
+        assert!(matches!(
+            iss.host_write(u32::MAX, &[0; 8]),
+            Err(SimError::ImageFault { .. })
+        ));
+    }
+
+    /// The confirmed stale-decode bug: overwrite an instruction that has
+    /// already executed (and is therefore cached, both as a decoded word
+    /// and inside a lowered block) and assert the *new* instruction runs
+    /// on the next loop iteration.
+    fn smc_patch_backward(engine: ExecEngine) -> RefIss {
+        let patch = encode(&Instr::Addi { rd: A0, rs1: A0, imm: 100 }).unwrap();
+        let mut a = Asm::new();
+        a.li(A0, 0);
+        a.li(S10, 2);
+        a.li(T1, patch as i64);
+        let head = a.new_label("head");
+        let target = a.new_label("target");
+        a.bind(head);
+        a.bind(target);
+        a.addi(A0, A0, 1); // overwritten after the first iteration
+        a.la(T0, target);
+        a.sw(T1, 0, T0);
+        a.addi(S10, S10, -1);
+        a.bnez(S10, head);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p).unwrap();
+        iss.run_with(10_000, engine).unwrap();
+        iss
+    }
+
+    #[test]
+    fn smc_store_over_executed_instruction_invalidates_decode_cache() {
+        for engine in [ExecEngine::Blocks, ExecEngine::PerInstr, ExecEngine::Uncached] {
+            let iss = smc_patch_backward(engine);
+            assert_eq!(
+                iss.reg(A0),
+                101,
+                "{engine:?}: second iteration must run the patched addi (1 + 100)"
+            );
+        }
+    }
+
+    /// Forward patch: rewrite an instruction that has *not* executed yet.
+    /// With load-time predecode this also requires invalidation.
+    #[test]
+    fn smc_store_over_not_yet_executed_instruction() {
+        let patch = encode(&Instr::Addi { rd: A0, rs1: A0, imm: 100 }).unwrap();
+        for engine in [ExecEngine::Blocks, ExecEngine::PerInstr, ExecEngine::Uncached] {
+            let mut a = Asm::new();
+            a.li(A0, 0);
+            a.li(T1, patch as i64);
+            let target = a.new_label("target");
+            a.la(T0, target);
+            a.sw(T1, 0, T0);
+            a.bind(target);
+            a.nop(); // patched to `addi a0, a0, 100` before first execution
+            a.halt();
+            let p = a.assemble().unwrap();
+            let mut iss = RefIss::paper_default(MEM);
+            iss.load(&p).unwrap();
+            iss.run_with(10_000, engine).unwrap();
+            assert_eq!(iss.reg(A0), 100, "{engine:?}: patched instruction must execute");
+        }
+    }
+
+    /// host_write over text must invalidate too (it is a store from the
+    /// harness's point of view).
+    #[test]
+    fn host_write_over_text_invalidates_decode_cache() {
+        let patch = encode(&Instr::Addi { rd: A0, rs1: ZERO, imm: 77 }).unwrap();
+        let mut a = Asm::new();
+        a.nop();
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p).unwrap();
+        // Prime the block cache, then patch the nop and re-run.
+        iss.run(10).unwrap();
+        iss.load(&p).unwrap();
+        iss.host_write(p.text_base, &patch.to_le_bytes()).unwrap();
+        iss.run(10).unwrap();
+        assert_eq!(iss.reg(A0), 77);
+    }
+
+    #[test]
+    fn engines_agree_on_fault_pc_and_instret() {
+        // A block whose 3rd instruction faults: pc/instret must match
+        // the per-instruction engines exactly.
+        let build = || {
+            let mut a = Asm::new();
+            a.li(A0, 0x7fff_f000u32 as i64);
+            a.nop();
+            a.lw(A1, 0, A0);
+            a.halt();
+            a.assemble().unwrap()
+        };
+        let mut results = Vec::new();
+        for engine in [ExecEngine::Blocks, ExecEngine::PerInstr, ExecEngine::Uncached] {
+            let mut iss = RefIss::paper_default(MEM);
+            iss.load(&build()).unwrap();
+            let err = iss.run_with(100, engine).unwrap_err();
+            results.push((format!("{err}"), iss.pc(), iss.instret()));
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn block_budget_slices_retire_exactly_max_instrs() {
+        let mut a = Asm::new();
+        let l = a.here("forever");
+        a.addi(A0, A0, 1);
+        a.addi(A1, A1, 1);
+        a.j(l);
+        let p = a.assemble().unwrap();
+        let mut iss = RefIss::paper_default(MEM);
+        iss.load(&p).unwrap();
+        assert!(matches!(iss.run(7), Err(SimError::Watchdog(7))));
+        assert_eq!(iss.instret(), 7, "block engine must not overrun the budget");
     }
 }

@@ -20,4 +20,7 @@ pub mod workload;
 
 pub use common::Throughput;
 pub use registry::{lookup, registry, RegistryEntry};
-pub use workload::{run_on, run_on_iss, Scenario, Variant, VerifyError, Workload, WorkloadReport};
+pub use workload::{
+    run_on, run_on_iss, run_on_iss_engine, Scenario, Variant, VerifyError, Workload,
+    WorkloadReport,
+};

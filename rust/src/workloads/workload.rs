@@ -29,7 +29,7 @@ use crate::arch::ArchState;
 use crate::asm::Program;
 use crate::core::{Core, CoreCounters, SimError};
 use crate::mem::MemStats;
-use crate::ref_iss::RefIss;
+use crate::ref_iss::{ExecEngine, RefIss};
 
 /// Which implementation of a workload to run.
 ///
@@ -279,13 +279,25 @@ pub fn run_on_iss(
     iss: &mut RefIss,
     sc: &Scenario,
 ) -> Result<WorkloadReport, SimError> {
+    run_on_iss_engine(w, iss, sc, ExecEngine::Blocks)
+}
+
+/// [`run_on_iss`] with an explicit [`ExecEngine`]. The throughput bench
+/// and the engine-identity tests drive this to compare block execution
+/// against per-instruction dispatch on the same workload builds.
+pub fn run_on_iss_engine(
+    w: &mut dyn Workload,
+    iss: &mut RefIss,
+    sc: &Scenario,
+    engine: ExecEngine,
+) -> Result<WorkloadReport, SimError> {
     let sc = Scenario { vlen_bits: iss.vlen_bits(), ..*sc };
     let prog = w.build(&sc);
-    iss.load(&prog);
+    iss.load(&prog)?;
     for (addr, bytes) in w.init_image() {
-        iss.host_write(*addr, bytes);
+        iss.host_write(*addr, bytes)?;
     }
-    let run = iss.run(common::MAX_INSTRS)?;
+    let run = iss.run_with(common::MAX_INSTRS, engine)?;
     let throughput = Throughput {
         cycles: run.instret,
         instret: run.instret,

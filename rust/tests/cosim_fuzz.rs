@@ -36,10 +36,10 @@ fn workload_programs_agree_in_lockstep() {
         let mut iss = machine.build_iss();
         let prog = w.build(&Scenario { vlen_bits: 256, ..sc });
         core.load(&prog);
-        iss.load(&prog);
+        iss.load(&prog).unwrap();
         for (addr, bytes) in w.init_image() {
             core.mem.host_write(*addr, bytes);
-            iss.host_write(*addr, bytes);
+            iss.host_write(*addr, bytes).unwrap();
         }
         let r = run_lockstep(&mut core, &mut iss, 50_000_000)
             .unwrap_or_else(|d| panic!("{name} {variant} diverged:\n{d}"));
@@ -105,7 +105,7 @@ fn wild_jumps_fault_identically_on_both_backends() {
         let mut core = machine.build();
         let mut iss = RefIss::new(256, core.mem.dram_size());
         core.load(&prog);
-        iss.load(&prog);
+        iss.load(&prog).unwrap();
         run_lockstep(&mut core, &mut iss, 1000).expect("identical faults are agreement")
     };
 
@@ -168,7 +168,7 @@ fn planted_divergence_produces_actionable_report() {
     let mut core = machine.build();
     let mut iss = RefIss::new(256, core.mem.dram_size());
     core.load(&prog);
-    iss.load(&prog);
+    iss.load(&prog).unwrap();
     // Corrupt a pool register the generator writes early and often.
     iss.force_reg(simdsoftcore::isa::reg::A0, 0x1234_5678);
     let d = run_lockstep(&mut core, &mut iss, 100_000).expect_err("must diverge");

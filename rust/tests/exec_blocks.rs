@@ -1,0 +1,194 @@
+//! Execution-engine identity suite: the ISS's cached basic-block
+//! engine must be architecturally indistinguishable from per-instruction
+//! dispatch and from the cacheless decode-fresh oracle — across the
+//! whole workload registry, the fuzz corpus, and adversarial
+//! self-modifying-code sequences that attack the block cache's
+//! invalidation contract (DESIGN.md §11). The timed core's side of the
+//! same contract (store-over-text invalidates its predecoded text and
+//! fetch line buffer) is pinned here too.
+
+use simdsoftcore::arch::ArchState;
+use simdsoftcore::asm::Asm;
+use simdsoftcore::fuzz::{self, OpWeights};
+use simdsoftcore::isa::reg::*;
+use simdsoftcore::isa::{encode, Instr, Reg, VReg};
+use simdsoftcore::machine::Machine;
+use simdsoftcore::ref_iss::{ExecEngine, RefIss};
+use simdsoftcore::workloads::{registry, run_on_iss_engine, Scenario};
+
+const ENGINES: [ExecEngine; 3] =
+    [ExecEngine::Blocks, ExecEngine::PerInstr, ExecEngine::Uncached];
+
+/// Full architectural state of a finished (or faulted) ISS run, for
+/// exact cross-engine comparison — registers, vector registers, pc,
+/// instret, halt flag and the error rendering if any.
+fn arch_fingerprint(iss: &RefIss, err: Option<String>) -> (Vec<u32>, Vec<Vec<i32>>, u32, u64, bool, Option<String>) {
+    let regs = (0..32).map(|n| iss.reg(Reg(n))).collect();
+    let vregs = (0..8).map(|n| iss.vreg(VReg(n)).to_i32s()).collect();
+    (regs, vregs, iss.pc(), iss.instret(), iss.halted(), err)
+}
+
+/// Every registry workload, on every variant, produces bit-identical
+/// results (verify outcome, retired instructions, final registers and
+/// the complete memory image) on all three engines.
+#[test]
+fn engines_agree_on_every_registry_workload() {
+    for entry in registry() {
+        let probe = entry.make();
+        for &variant in probe.variants() {
+            let sc = Scenario::new(variant, probe.smoke_size());
+            let machine = Machine::paper_default().dram_bytes(64 * 1024 * 1024);
+            let mut runs = Vec::new();
+            for engine in ENGINES {
+                let mut w = entry.make();
+                let mut iss = machine.build_iss();
+                let report = run_on_iss_engine(&mut *w, &mut iss, &sc, engine)
+                    .unwrap_or_else(|e| panic!("{} {variant} on {engine:?}: {e}", entry.name));
+                assert_eq!(
+                    report.verified,
+                    Some(true),
+                    "{} {variant} fails verification on {engine:?}",
+                    entry.name
+                );
+                runs.push((engine, report.throughput.instret, iss));
+            }
+            let (_, instret0, iss0) = &runs[0];
+            for (engine, instret, iss) in &runs[1..] {
+                assert_eq!(
+                    instret, instret0,
+                    "{} {variant}: {engine:?} retires a different instruction count",
+                    entry.name
+                );
+                assert_eq!(
+                    arch_fingerprint(iss, None),
+                    arch_fingerprint(iss0, None),
+                    "{} {variant}: {engine:?} architectural state differs",
+                    entry.name
+                );
+                assert!(
+                    iss.mem_slice(0, iss.mem_size()) == iss0.mem_slice(0, iss0.mem_size()),
+                    "{} {variant}: {engine:?} memory image differs",
+                    entry.name
+                );
+            }
+        }
+    }
+}
+
+/// Run one generated program on a fresh ISS with the given engine and
+/// return its full fingerprint plus memory image.
+fn run_fuzz_program(
+    seed: u64,
+    ops: usize,
+    w: &OpWeights,
+    engine: ExecEngine,
+) -> ((Vec<u32>, Vec<Vec<i32>>, u32, u64, bool, Option<String>), Vec<u8>) {
+    let prog = fuzz::generate(seed, ops, w, 256);
+    let mut iss = RefIss::new(256, fuzz::FUZZ_DRAM_BYTES);
+    iss.load(&prog).expect("fuzz image fits");
+    let err = iss.run_with(fuzz::max_instrs_for(ops), engine).err().map(|e| e.to_string());
+    let mem = iss.mem_slice(0, iss.mem_size()).to_vec();
+    (arch_fingerprint(&iss, err), mem)
+}
+
+/// The fuzz corpus (rotating balanced/scalar/vector presets, the same
+/// generator as the tier-1 cosim slice) is engine-invariant: registers,
+/// vector registers, pc, instret, halt/fault identity and the entire
+/// memory image all match across the three engines.
+#[test]
+fn engines_agree_on_fuzz_corpus() {
+    for seed in 0..12u64 {
+        let (name, w) = OpWeights::preset_for_seed(seed);
+        let baseline = run_fuzz_program(seed, 250, &w, ExecEngine::Uncached);
+        for engine in [ExecEngine::Blocks, ExecEngine::PerInstr] {
+            let got = run_fuzz_program(seed, 250, &w, engine);
+            assert_eq!(
+                got.0, baseline.0,
+                "seed {seed} ({name}): {engine:?} state differs from the uncached oracle"
+            );
+            assert!(
+                got.1 == baseline.1,
+                "seed {seed} ({name}): {engine:?} memory image differs from the uncached oracle"
+            );
+        }
+    }
+}
+
+/// The block-cache invalidation property test: programs heavy in
+/// self-modifying stores (random store-over-text sequences, both over
+/// already-executed and not-yet-executed words) must leave the block
+/// engine bit-identical to the decode-fresh oracle, which has no cache
+/// to go stale.
+#[test]
+fn block_cache_invalidation_matches_uncached_oracle_under_smc() {
+    let w = OpWeights { smc: 4, ..OpWeights::balanced() };
+    for seed in 5100..5124u64 {
+        let baseline = run_fuzz_program(seed, 200, &w, ExecEngine::Uncached);
+        let blocks = run_fuzz_program(seed, 200, &w, ExecEngine::Blocks);
+        assert_eq!(
+            blocks.0, baseline.0,
+            "seed {seed}: stale block survived a store over text"
+        );
+        assert!(blocks.1 == baseline.1, "seed {seed}: memory image differs");
+    }
+}
+
+/// Assemble the backward-patch SMC regression program: a two-iteration
+/// loop whose first instruction (`addi a0, a0, 1`) is overwritten with
+/// `addi a0, a0, 100` after iteration one. A backend with a stale
+/// decode cache computes 2; correct invalidation computes 101.
+fn backward_patch_program() -> simdsoftcore::asm::Program {
+    let patch = encode(&Instr::Addi { rd: A0, rs1: A0, imm: 100 }).unwrap();
+    let mut a = Asm::new();
+    a.li(A0, 0);
+    a.li(S10, 2);
+    a.li(T1, patch as i64);
+    let head = a.new_label("head");
+    a.bind(head);
+    a.addi(A0, A0, 1);
+    a.la(T0, head);
+    a.sw(T1, 0, T0);
+    a.addi(S10, S10, -1);
+    a.bnez(S10, head);
+    a.halt();
+    a.assemble().unwrap()
+}
+
+/// The timed core's half of the stale-`decoded`-cache bugfix: a store
+/// over an already-executed instruction must invalidate the core's
+/// predecoded text AND its fetch line buffer, so the refetch decodes
+/// the patched word. (The ISS half lives in `src/ref_iss` unit tests.)
+#[test]
+fn timed_core_reexecutes_patched_instruction_after_text_store() {
+    for issue_width in [1usize, 2] {
+        let mut core = Machine::paper_default()
+            .dram_bytes(fuzz::FUZZ_DRAM_BYTES)
+            .issue_width(issue_width)
+            .build();
+        core.load(&backward_patch_program());
+        core.run(10_000).unwrap_or_else(|e| panic!("issue_width {issue_width}: {e}"));
+        assert_eq!(
+            core.reg(A0),
+            101,
+            "issue_width {issue_width}: core executed a stale cached decode"
+        );
+    }
+}
+
+/// The same SMC program in lockstep: both backends invalidate and
+/// re-decode identically, instruction by instruction.
+#[test]
+fn smc_program_agrees_in_lockstep() {
+    use simdsoftcore::cosim::{run_lockstep, LockstepOutcome};
+    let prog = backward_patch_program();
+    let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
+    let mut core = machine.build();
+    let mut iss = machine.build_iss();
+    core.load(&prog);
+    iss.load(&prog).unwrap();
+    let r = run_lockstep(&mut core, &mut iss, 10_000)
+        .unwrap_or_else(|d| panic!("SMC program diverged:\n{d}"));
+    assert_eq!(r.outcome, LockstepOutcome::Halted);
+    assert_eq!(core.reg(A0), 101);
+    assert_eq!(iss.reg(A0), 101);
+}
