@@ -1,0 +1,409 @@
+//! Control-flow graph recovery over a predecoded text segment.
+//!
+//! The CFG is built from the same [`DecodeCache`] view both execution
+//! backends fetch from (DESIGN.md §12): leaders are the entry pc, every
+//! direct branch/jal target, every statically resolved jalr target, the
+//! word after every block terminator, and every undecodable word. A
+//! basic block runs from a leader to the next terminator or leader.
+//!
+//! Indirect jumps (`jalr`) get an edge only when constant propagation
+//! pins their target (see [`crate::analysis::dataflow`]); an unresolved
+//! `jalr` is a CFG sink, which is the analyzer's main documented source
+//! of unsoundness (unreachable-block findings downstream of it are
+//! conservative, never the absence of an error finding on a path the
+//! CFG does know about).
+
+use std::collections::HashMap;
+
+use crate::isa::{DecodeCache, Instr};
+
+/// Why a basic block ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Terminator {
+    /// Conditional branch; falls through to the next word when not taken.
+    Branch { target: u32 },
+    /// Unconditional `jal`.
+    Jump { target: u32 },
+    /// `jalr`. `resolved` is the post-mask (`& !1`) target when constant
+    /// propagation pinned the base register, else `None`.
+    Indirect { resolved: Option<u32> },
+    /// `ecall` — clean halt.
+    Halt,
+    /// `ebreak` — raises a Break fault.
+    Break,
+    /// The block is a single undecodable word; fetching it faults.
+    Illegal,
+    /// The next word is a leader of another block.
+    FallThrough,
+    /// The last text word is not a terminator: execution runs off the
+    /// end of the text segment.
+    FallOff,
+}
+
+/// A basic block of `ninstr` decoded instructions starting at word
+/// index `start`. An [`Terminator::Illegal`] block has `ninstr == 0`
+/// and spans exactly one (undecodable) word.
+#[derive(Debug, Clone)]
+pub struct BasicBlock {
+    pub start: usize,
+    pub ninstr: usize,
+    pub term: Terminator,
+    pub succs: Vec<usize>,
+    pub reachable: bool,
+}
+
+impl BasicBlock {
+    /// Words consumed by the block.
+    pub fn span(&self) -> usize {
+        self.ninstr.max(1)
+    }
+
+    /// pc of the first word.
+    pub fn pc(&self, base: u32) -> u32 {
+        base.wrapping_add((self.start as u32) * 4)
+    }
+
+    /// pc of the terminator instruction (or of the undecodable word for
+    /// an [`Terminator::Illegal`] block).
+    pub fn term_pc(&self, base: u32) -> u32 {
+        let last = self.start + self.ninstr.saturating_sub(1);
+        base.wrapping_add((last as u32) * 4)
+    }
+}
+
+/// Recovered control-flow graph.
+#[derive(Debug)]
+pub struct Cfg {
+    pub blocks: Vec<BasicBlock>,
+    /// Owning block id for every text word.
+    pub block_at: Vec<usize>,
+    /// Block containing the entry pc, if the entry is a valid text pc.
+    pub entry_block: Option<usize>,
+    pub base: u32,
+    pub nwords: usize,
+}
+
+/// Direct control-transfer target of `i` at `pc`, if it is a branch or
+/// jal (jalr is indirect and returns `None`).
+pub fn direct_target(i: &Instr, pc: u32) -> Option<u32> {
+    use Instr::*;
+    match *i {
+        Jal { offset, .. }
+        | Beq { offset, .. }
+        | Bne { offset, .. }
+        | Blt { offset, .. }
+        | Bge { offset, .. }
+        | Bltu { offset, .. }
+        | Bgeu { offset, .. } => Some(pc.wrapping_add(offset as u32)),
+        _ => None,
+    }
+}
+
+fn classify(
+    i: &Instr,
+    pc: u32,
+    jalr_targets: &HashMap<usize, u32>,
+    idx: usize,
+) -> Option<Terminator> {
+    use Instr::*;
+    match *i {
+        Jal { offset, .. } => Some(Terminator::Jump { target: pc.wrapping_add(offset as u32) }),
+        Jalr { .. } => Some(Terminator::Indirect { resolved: jalr_targets.get(&idx).copied() }),
+        Beq { offset, .. }
+        | Bne { offset, .. }
+        | Blt { offset, .. }
+        | Bge { offset, .. }
+        | Bltu { offset, .. }
+        | Bgeu { offset, .. } => {
+            Some(Terminator::Branch { target: pc.wrapping_add(offset as u32) })
+        }
+        Ecall => Some(Terminator::Halt),
+        Ebreak => Some(Terminator::Break),
+        _ => None,
+    }
+}
+
+impl Cfg {
+    /// Recover the CFG from `cache`, entering at `entry`.
+    /// `extra_leaders` are resolved jalr targets from a previous
+    /// constant-propagation round; `jalr_targets` maps the word index of
+    /// a `jalr` to its resolved (masked) target.
+    pub fn build(
+        cache: &DecodeCache,
+        entry: u32,
+        extra_leaders: &[u32],
+        jalr_targets: &HashMap<usize, u32>,
+    ) -> Cfg {
+        let n = cache.len();
+        let base = cache.base();
+        let mut leader = vec![false; n];
+        let mark = |leader: &mut Vec<bool>, pc: u32| {
+            if let Some(idx) = cache.word_index(pc) {
+                leader[idx] = true;
+            }
+        };
+        mark(&mut leader, entry);
+        for &pc in extra_leaders {
+            mark(&mut leader, pc);
+        }
+        for idx in 0..n {
+            let pc = base.wrapping_add((idx as u32) * 4);
+            match cache.get(idx) {
+                None => {
+                    // Undecodable words form their own single-word blocks.
+                    leader[idx] = true;
+                    if idx + 1 < n {
+                        leader[idx + 1] = true;
+                    }
+                }
+                Some(i) => {
+                    if classify(&i, pc, jalr_targets, idx).is_some() {
+                        if idx + 1 < n {
+                            leader[idx + 1] = true;
+                        }
+                        if let Some(t) = direct_target(&i, pc) {
+                            mark(&mut leader, t);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Form blocks by linear sweep.
+        let mut blocks: Vec<BasicBlock> = Vec::new();
+        let mut block_at = vec![0usize; n];
+        let mut idx = 0;
+        while idx < n {
+            let start = idx;
+            let id = blocks.len();
+            let term;
+            let mut ninstr = 0;
+            if cache.get(idx).is_none() {
+                term = Terminator::Illegal;
+                idx += 1;
+            } else {
+                loop {
+                    let pc = base.wrapping_add((idx as u32) * 4);
+                    // A decoded run never crosses a leader, so `get` is Some.
+                    let i = cache.get(idx).expect("leader marking keeps runs decodable");
+                    ninstr += 1;
+                    idx += 1;
+                    if let Some(t) = classify(&i, pc, jalr_targets, idx - 1) {
+                        term = t;
+                        break;
+                    }
+                    if idx == n {
+                        term = Terminator::FallOff;
+                        break;
+                    }
+                    if leader[idx] {
+                        term = Terminator::FallThrough;
+                        break;
+                    }
+                }
+            }
+            for w in start..idx {
+                block_at[w] = id;
+            }
+            blocks.push(BasicBlock { start, ninstr, term, succs: Vec::new(), reachable: false });
+        }
+
+        // Successor edges. Every valid in-text target is a leader by
+        // construction, so its word index is a block start.
+        let text_block = |pc: u32| -> Option<usize> { cache.word_index(pc).map(|w| block_at[w]) };
+        for b in blocks.iter_mut() {
+            let end = b.start + b.span();
+            let mut succs = Vec::new();
+            match b.term {
+                Terminator::Branch { target } => {
+                    if let Some(t) = text_block(target) {
+                        succs.push(t);
+                    }
+                    if end < n {
+                        succs.push(block_at[end]);
+                    }
+                }
+                Terminator::Jump { target } => {
+                    if let Some(t) = text_block(target) {
+                        succs.push(t);
+                    }
+                }
+                Terminator::Indirect { resolved: Some(t) } => {
+                    if let Some(t) = text_block(t) {
+                        succs.push(t);
+                    }
+                }
+                Terminator::FallThrough => {
+                    succs.push(block_at[end]);
+                }
+                Terminator::Indirect { resolved: None }
+                | Terminator::Halt
+                | Terminator::Break
+                | Terminator::Illegal
+                | Terminator::FallOff => {}
+            }
+            succs.dedup();
+            b.succs = succs;
+        }
+
+        let entry_block = cache.word_index(entry).map(|w| block_at[w]);
+        let mut cfg = Cfg { blocks, block_at, entry_block, base, nwords: n };
+        cfg.mark_reachable();
+        cfg
+    }
+
+    fn mark_reachable(&mut self) {
+        let Some(e) = self.entry_block else { return };
+        let mut stack = vec![e];
+        while let Some(b) = stack.pop() {
+            if self.blocks[b].reachable {
+                continue;
+            }
+            self.blocks[b].reachable = true;
+            stack.extend(self.blocks[b].succs.iter().copied());
+        }
+    }
+
+    /// Decoded instructions of `b` with their pcs.
+    pub fn instrs<'a>(
+        &'a self,
+        cache: &'a DecodeCache,
+        b: &'a BasicBlock,
+    ) -> impl Iterator<Item = (u32, Instr)> + 'a {
+        (b.start..b.start + b.ninstr).map(move |w| {
+            let pc = self.base.wrapping_add((w as u32) * 4);
+            (pc, cache.get(w).expect("block instr decoded"))
+        })
+    }
+
+    /// pc one past the last text word.
+    pub fn text_end(&self) -> u32 {
+        self.base.wrapping_add((self.nwords as u32) * 4)
+    }
+
+    /// True when the exit state of `b` cannot be summarized by its CFG
+    /// successors (halt, fault, unresolved indirect, or a possible
+    /// transfer outside the text segment). Liveness treats every
+    /// register as live across such exits.
+    pub fn exit_unknown(&self, b: &BasicBlock) -> bool {
+        let in_text = |pc: u32| -> bool { pc % 4 == 0 && self.in_text(pc) };
+        match b.term {
+            Terminator::Halt | Terminator::Break | Terminator::Illegal | Terminator::FallOff => {
+                true
+            }
+            Terminator::Indirect { resolved } => !resolved.is_some_and(in_text),
+            Terminator::Branch { target } => !in_text(target) || b.start + b.span() >= self.nwords,
+            Terminator::Jump { target } => !in_text(target),
+            Terminator::FallThrough => false,
+        }
+    }
+
+    fn in_text(&self, pc: u32) -> bool {
+        let off = pc.wrapping_sub(self.base);
+        off % 4 == 0 && (off / 4) < self.nwords as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+
+    fn cfg_of(text: &[u32], base: u32) -> Cfg {
+        let mut cache = DecodeCache::empty();
+        cache.predecode(base, text);
+        Cfg::build(&cache, base, &[], &HashMap::new())
+    }
+
+    fn assemble(f: impl FnOnce(&mut Asm)) -> (DecodeCache, Cfg) {
+        let mut a = Asm::new();
+        f(&mut a);
+        let prog = a.assemble().expect("fixture assembles");
+        let mut cache = DecodeCache::empty();
+        cache.predecode(prog.text_base, &prog.text);
+        let cfg = Cfg::build(&cache, prog.entry, &[], &HashMap::new());
+        (cache, cfg)
+    }
+
+    #[test]
+    fn straight_line_is_one_block() {
+        let (_, cfg) = assemble(|a| {
+            a.li(A0, 7);
+            a.li(A1, 9);
+            a.halt();
+        });
+        assert_eq!(cfg.blocks.len(), 1);
+        let b = &cfg.blocks[0];
+        assert!(b.reachable);
+        assert_eq!(b.term, Terminator::Halt);
+    }
+
+    #[test]
+    fn branch_splits_blocks_and_links_edges() {
+        let (_, cfg) = assemble(|a| {
+            let skip = a.new_label("skip");
+            a.li(A0, 1);
+            a.bnez(A0, skip);
+            a.li(A1, 2);
+            a.bind(skip);
+            a.halt();
+        });
+        // li-block+bnez | li a1 | halt
+        assert_eq!(cfg.blocks.len(), 3);
+        let head = &cfg.blocks[0];
+        assert!(matches!(head.term, Terminator::Branch { .. }));
+        assert_eq!(head.succs.len(), 2);
+        assert!(cfg.blocks.iter().all(|b| b.reachable));
+    }
+
+    #[test]
+    fn jal_skipped_code_is_unreachable() {
+        let (_, cfg) = assemble(|a| {
+            let end = a.new_label("end");
+            a.j(end);
+            a.li(A0, 1); // skipped
+            a.bind(end);
+            a.halt();
+        });
+        let unreachable: Vec<_> = cfg.blocks.iter().filter(|b| !b.reachable).collect();
+        assert_eq!(unreachable.len(), 1);
+        assert!(matches!(unreachable[0].term, Terminator::FallThrough));
+    }
+
+    #[test]
+    fn undecodable_word_forms_illegal_block() {
+        // addi a0,zero,1 ; <garbage> ; ecall
+        let text = [0x0010_0513, 0xffff_ffff, 0x0000_0073];
+        let cfg = cfg_of(&text, 0x1000);
+        assert_eq!(cfg.blocks.len(), 3);
+        assert_eq!(cfg.blocks[0].term, Terminator::FallThrough);
+        assert_eq!(cfg.blocks[1].term, Terminator::Illegal);
+        assert_eq!(cfg.blocks[1].ninstr, 0);
+        assert!(cfg.blocks[1].reachable, "fallthrough reaches the illegal word");
+    }
+
+    #[test]
+    fn last_word_without_terminator_falls_off() {
+        // addi a0,zero,1 (no halt)
+        let cfg = cfg_of(&[0x0010_0513], 0x1000);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert_eq!(cfg.blocks[0].term, Terminator::FallOff);
+    }
+
+    #[test]
+    fn resolved_jalr_gets_edge() {
+        let (_cache, mut cfg_unresolved) = assemble(|a| {
+            a.li(T6, 0x1000);
+            a.emit(crate::isa::Instr::Jalr { rd: ZERO, rs1: T6, offset: 8 });
+            a.halt();
+        });
+        // Without resolution the jalr is a sink.
+        let jalr_block = cfg_unresolved
+            .blocks
+            .iter_mut()
+            .find(|b| matches!(b.term, Terminator::Indirect { .. }))
+            .unwrap();
+        assert!(jalr_block.succs.is_empty());
+    }
+}

@@ -1,0 +1,668 @@
+//! Dataflow passes over the recovered CFG: per-instruction def/use
+//! effects (including the I′/S′ operand slots and the `c3` prefix-unit
+//! carry state), constant propagation for address lints and jalr
+//! resolution, must-initialized tracking, and backward liveness for
+//! dead-write detection (DESIGN.md §12).
+
+use std::collections::VecDeque;
+
+use super::cfg::{BasicBlock, Cfg};
+use crate::arch::sp_init;
+use crate::isa::reg::{self, Reg, VReg};
+use crate::isa::{DecodeCache, Instr};
+
+// ---------------------------------------------------------------------------
+// Def/use effects
+// ---------------------------------------------------------------------------
+
+/// One (possibly indexed) data-memory reference.
+#[derive(Debug, Clone, Copy)]
+pub struct MemRef {
+    pub base: Reg,
+    /// Second base register for `lv`/`sv` (address is `base + index`).
+    pub index: Option<Reg>,
+    pub offset: i32,
+    pub len: usize,
+    pub store: bool,
+}
+
+/// Architectural def/use summary of one instruction. For custom
+/// instructions this encodes the standard unit pool's slot bindings
+/// (c0 mem, c1 merge, c2 sort, c3 prefix); a slot/funct3 pair outside
+/// that table sets `valid_custom = false` (it faults at execute).
+#[derive(Debug, Clone, Default)]
+pub struct Effects {
+    pub uses: Vec<Reg>,
+    pub defs: Vec<Reg>,
+    pub vuses: Vec<VReg>,
+    pub vdefs: Vec<VReg>,
+    pub uses_carry: bool,
+    pub defs_carry: bool,
+    pub mem: Option<MemRef>,
+    pub valid_custom: bool,
+}
+
+/// Def/use sets of `i` under the standard unit pool. `vlen_bytes` sizes
+/// vector memory references.
+pub fn effects(i: &Instr, vlen_bytes: usize) -> Effects {
+    use Instr::*;
+    let mut e = Effects { valid_custom: true, ..Effects::default() };
+    match *i {
+        Lui { rd, .. } | Auipc { rd, .. } | Jal { rd, .. } => e.defs.push(rd),
+        Jalr { rd, rs1, .. } => {
+            e.uses.push(rs1);
+            e.defs.push(rd);
+        }
+        Beq { rs1, rs2, .. }
+        | Bne { rs1, rs2, .. }
+        | Blt { rs1, rs2, .. }
+        | Bge { rs1, rs2, .. }
+        | Bltu { rs1, rs2, .. }
+        | Bgeu { rs1, rs2, .. } => {
+            e.uses.push(rs1);
+            e.uses.push(rs2);
+        }
+        Lb { rd, rs1, offset } | Lbu { rd, rs1, offset } => {
+            e.uses.push(rs1);
+            e.defs.push(rd);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 1, store: false });
+        }
+        Lh { rd, rs1, offset } | Lhu { rd, rs1, offset } => {
+            e.uses.push(rs1);
+            e.defs.push(rd);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 2, store: false });
+        }
+        Lw { rd, rs1, offset } => {
+            e.uses.push(rs1);
+            e.defs.push(rd);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 4, store: false });
+        }
+        Sb { rs1, rs2, offset } => {
+            e.uses.push(rs1);
+            e.uses.push(rs2);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 1, store: true });
+        }
+        Sh { rs1, rs2, offset } => {
+            e.uses.push(rs1);
+            e.uses.push(rs2);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 2, store: true });
+        }
+        Sw { rs1, rs2, offset } => {
+            e.uses.push(rs1);
+            e.uses.push(rs2);
+            e.mem = Some(MemRef { base: rs1, index: None, offset, len: 4, store: true });
+        }
+        Addi { rd, rs1, .. }
+        | Slti { rd, rs1, .. }
+        | Sltiu { rd, rs1, .. }
+        | Xori { rd, rs1, .. }
+        | Ori { rd, rs1, .. }
+        | Andi { rd, rs1, .. }
+        | Slli { rd, rs1, .. }
+        | Srli { rd, rs1, .. }
+        | Srai { rd, rs1, .. }
+        | Csrrs { rd, rs1, .. } => {
+            e.uses.push(rs1);
+            e.defs.push(rd);
+        }
+        Add { rd, rs1, rs2 }
+        | Sub { rd, rs1, rs2 }
+        | Sll { rd, rs1, rs2 }
+        | Slt { rd, rs1, rs2 }
+        | Sltu { rd, rs1, rs2 }
+        | Xor { rd, rs1, rs2 }
+        | Srl { rd, rs1, rs2 }
+        | Sra { rd, rs1, rs2 }
+        | Or { rd, rs1, rs2 }
+        | And { rd, rs1, rs2 }
+        | Mul { rd, rs1, rs2 }
+        | Mulh { rd, rs1, rs2 }
+        | Mulhsu { rd, rs1, rs2 }
+        | Mulhu { rd, rs1, rs2 }
+        | Div { rd, rs1, rs2 }
+        | Divu { rd, rs1, rs2 }
+        | Rem { rd, rs1, rs2 }
+        | Remu { rd, rs1, rs2 } => {
+            e.uses.push(rs1);
+            e.uses.push(rs2);
+            e.defs.push(rd);
+        }
+        Fence | Ecall | Ebreak => {}
+        CustomI { slot, funct3, ops } => match (slot.index(), funct3) {
+            // c1_merge: (vrd1, vrd2) = merge(vrs1, vrs2)
+            (1, 0) => {
+                e.vuses.extend([ops.vrs1, ops.vrs2]);
+                e.vdefs.extend([ops.vrd1, ops.vrd2]);
+            }
+            // c1_vadd: vrd1 = vrs1 + vrs2
+            (1, 1) => {
+                e.vuses.extend([ops.vrs1, ops.vrs2]);
+                e.vdefs.push(ops.vrd1);
+            }
+            // c1_vscale: vrd1 = vrs1 * rs1
+            (1, 2) => {
+                e.vuses.push(ops.vrs1);
+                e.uses.push(ops.rs1);
+                e.vdefs.push(ops.vrd1);
+            }
+            // c1_vfilt: (vrd1, rd) = filter(vrs1, rs1)
+            (1, 3) => {
+                e.vuses.push(ops.vrs1);
+                e.uses.push(ops.rs1);
+                e.vdefs.push(ops.vrd1);
+                e.defs.push(ops.rd);
+            }
+            // c2_sort: vrd1 = sort(vrs1)
+            (2, 0) => {
+                e.vuses.push(ops.vrs1);
+                e.vdefs.push(ops.vrd1);
+            }
+            // c3_prefix: vrd1 = prefix(vrs1) + carry; carry updated
+            (3, 0) => {
+                e.vuses.push(ops.vrs1);
+                e.vdefs.push(ops.vrd1);
+                e.uses_carry = true;
+                e.defs_carry = true;
+            }
+            // c3_reset
+            (3, 1) => e.defs_carry = true,
+            // c3_carry: rd = carry
+            (3, 2) => {
+                e.uses_carry = true;
+                e.defs.push(ops.rd);
+            }
+            _ => e.valid_custom = false,
+        },
+        CustomS { slot, funct3, ops } => match (slot.index(), funct3) {
+            // c0_lv: vrd1 = mem[rs1 + rs2]
+            (0, 4) => {
+                e.uses.extend([ops.rs1, ops.rs2]);
+                e.vdefs.push(ops.vrd1);
+                e.mem = Some(MemRef {
+                    base: ops.rs1,
+                    index: Some(ops.rs2),
+                    offset: 0,
+                    len: vlen_bytes,
+                    store: false,
+                });
+            }
+            // c0_sv: mem[rs1 + rs2] = vrs1
+            (0, 5) => {
+                e.uses.extend([ops.rs1, ops.rs2]);
+                e.vuses.push(ops.vrs1);
+                e.mem = Some(MemRef {
+                    base: ops.rs1,
+                    index: Some(ops.rs2),
+                    offset: 0,
+                    len: vlen_bytes,
+                    store: true,
+                });
+            }
+            _ => e.valid_custom = false,
+        },
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// Constant propagation
+// ---------------------------------------------------------------------------
+
+/// Flat constant lattice per scalar register: `Some(c)` = known
+/// constant, `None` = ⊤ (unknown). `x0` is pinned to `Some(0)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConstState {
+    regs: [Option<u32>; 32],
+}
+
+impl ConstState {
+    /// Architectural state after [`crate::ref_iss::RefIss::load`]: every
+    /// register is zeroed, then `sp` is set to the top of DRAM.
+    pub fn entry(dram_bytes: usize) -> Self {
+        let mut regs = [Some(0u32); 32];
+        regs[reg::SP.num() as usize] = Some(sp_init(dram_bytes));
+        ConstState { regs }
+    }
+
+    #[inline]
+    pub fn get(&self, r: Reg) -> Option<u32> {
+        if r.num() == 0 {
+            Some(0)
+        } else {
+            self.regs[r.num() as usize]
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, r: Reg, v: Option<u32>) {
+        if r.num() != 0 {
+            self.regs[r.num() as usize] = v;
+        }
+    }
+
+    fn meet(&self, other: &ConstState) -> ConstState {
+        let mut out = self.clone();
+        for k in 0..32 {
+            if out.regs[k] != other.regs[k] {
+                out.regs[k] = None;
+            }
+        }
+        out
+    }
+
+    /// Apply `i` at `pc`.
+    pub fn transfer(&mut self, i: &Instr, pc: u32, vlen_bytes: usize) {
+        if let Some((rd, v)) = eval_scalar_def(i, pc, self) {
+            self.set(rd, v);
+        } else {
+            // Remaining scalar defs (loads, CSRs, custom rd writers)
+            // produce unknown values.
+            for rd in effects(i, vlen_bytes).defs {
+                self.set(rd, None);
+            }
+        }
+    }
+}
+
+/// Folded value of a pure scalar-producing instruction, or `None` if the
+/// instruction is not statically foldable (its defs must then be set to
+/// ⊤ from its [`effects`]). `mulh*`/`div*`/`rem*` are deliberately left
+/// unfolded: their corner semantics never feed address computations in
+/// practice and leaving them ⊤ cannot produce a false error finding.
+fn eval_scalar_def(i: &Instr, pc: u32, st: &ConstState) -> Option<(Reg, Option<u32>)> {
+    use Instr::*;
+    let r = match *i {
+        Lui { rd, imm } => (rd, Some(imm as u32)),
+        Auipc { rd, imm } => (rd, Some(pc.wrapping_add(imm as u32))),
+        Jal { rd, .. } | Jalr { rd, .. } => (rd, Some(pc.wrapping_add(4))),
+        Addi { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a.wrapping_add(imm as u32))),
+        Slti { rd, rs1, imm } => (rd, st.get(rs1).map(|a| ((a as i32) < imm) as u32)),
+        Sltiu { rd, rs1, imm } => (rd, st.get(rs1).map(|a| (a < imm as u32) as u32)),
+        Xori { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a ^ imm as u32)),
+        Ori { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a | imm as u32)),
+        Andi { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a & imm as u32)),
+        Slli { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| a << (shamt & 31))),
+        Srli { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| a >> (shamt & 31))),
+        Srai { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| ((a as i32) >> (shamt & 31)) as u32)),
+        Add { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_add)),
+        Sub { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_sub)),
+        Sll { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a << (b & 31))),
+        Slt { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| ((a as i32) < (b as i32)) as u32)),
+        Sltu { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| (a < b) as u32)),
+        Xor { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a ^ b)),
+        Srl { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a >> (b & 31))),
+        Sra { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| ((a as i32) >> (b & 31)) as u32)),
+        Or { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a | b)),
+        And { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a & b)),
+        Mul { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_mul)),
+        _ => return None,
+    };
+    Some(r)
+}
+
+#[inline]
+fn bin(st: &ConstState, rs1: Reg, rs2: Reg, f: impl Fn(u32, u32) -> u32) -> Option<u32> {
+    Some(f(st.get(rs1)?, st.get(rs2)?))
+}
+
+// ---------------------------------------------------------------------------
+// Must-initialized tracking
+// ---------------------------------------------------------------------------
+
+/// Registers guaranteed written on every path from entry. Meet is
+/// intersection; a read outside the set is an uninitialized-read finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InitState {
+    pub scalars: u32,
+    pub vecs: u8,
+    pub carry: bool,
+}
+
+impl InitState {
+    /// Post-load architectural state: the loader zeroes everything, but
+    /// only `x0`/`sp` (and the hardwired `v0`) carry *meaningful* values;
+    /// reading any other register before writing it is flagged.
+    pub fn entry() -> Self {
+        InitState {
+            scalars: 1 | (1 << reg::SP.num()),
+            vecs: 1, // v0
+            carry: false,
+        }
+    }
+
+    #[inline]
+    pub fn scalar(&self, r: Reg) -> bool {
+        self.scalars & (1 << r.num()) != 0
+    }
+
+    #[inline]
+    pub fn vec(&self, v: VReg) -> bool {
+        self.vecs & (1 << v.num()) != 0
+    }
+
+    fn meet(&self, other: &InitState) -> InitState {
+        InitState {
+            scalars: self.scalars & other.scalars,
+            vecs: self.vecs & other.vecs,
+            carry: self.carry && other.carry,
+        }
+    }
+
+    pub fn transfer(&mut self, i: &Instr, vlen_bytes: usize) {
+        let e = effects(i, vlen_bytes);
+        for r in e.defs {
+            self.scalars |= 1 << r.num();
+        }
+        for v in e.vdefs {
+            self.vecs |= 1 << v.num();
+        }
+        if e.defs_carry {
+            self.carry = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Liveness (backward)
+// ---------------------------------------------------------------------------
+
+/// Live register sets (union meet, backward direction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveState {
+    pub scalars: u32,
+    pub vecs: u8,
+    pub carry: bool,
+}
+
+impl LiveState {
+    pub fn none() -> Self {
+        LiveState { scalars: 0, vecs: 0, carry: false }
+    }
+
+    /// Conservative exit state: everything observable.
+    pub fn all() -> Self {
+        LiveState { scalars: u32::MAX, vecs: u8::MAX, carry: true }
+    }
+
+    fn union(&self, other: &LiveState) -> LiveState {
+        LiveState {
+            scalars: self.scalars | other.scalars,
+            vecs: self.vecs | other.vecs,
+            carry: self.carry || other.carry,
+        }
+    }
+
+    #[inline]
+    pub fn scalar(&self, r: Reg) -> bool {
+        self.scalars & (1 << r.num()) != 0
+    }
+
+    #[inline]
+    pub fn vec(&self, v: VReg) -> bool {
+        self.vecs & (1 << v.num()) != 0
+    }
+
+    /// Backward transfer: kill defs, then gen uses.
+    pub fn transfer(&mut self, i: &Instr, vlen_bytes: usize) {
+        let e = effects(i, vlen_bytes);
+        for r in &e.defs {
+            self.scalars &= !(1 << r.num());
+        }
+        for v in &e.vdefs {
+            self.vecs &= !(1 << v.num());
+        }
+        if e.defs_carry {
+            self.carry = false;
+        }
+        for r in &e.uses {
+            self.scalars |= 1 << r.num();
+        }
+        for v in &e.vuses {
+            self.vecs |= 1 << v.num();
+        }
+        if e.uses_carry {
+            self.carry = true;
+        }
+        // x0/v0 are hardwired; they are never "live" in a meaningful sense
+        // but keeping their bits set is harmless (dead-write reporting
+        // skips them explicitly).
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixpoint drivers
+// ---------------------------------------------------------------------------
+
+/// Generic forward worklist fixpoint. Returns the in-state of every
+/// block (`None` for blocks unreachable from the entry).
+pub fn forward_fixpoint<S: Clone + PartialEq>(
+    cfg: &Cfg,
+    entry: S,
+    transfer: impl Fn(&BasicBlock, &S) -> S,
+    meet: impl Fn(&S, &S) -> S,
+) -> Vec<Option<S>> {
+    let n = cfg.blocks.len();
+    let mut ins: Vec<Option<S>> = vec![None; n];
+    let Some(e) = cfg.entry_block else { return ins };
+    ins[e] = Some(entry);
+    let mut inq = vec![false; n];
+    let mut work = VecDeque::from([e]);
+    inq[e] = true;
+    while let Some(b) = work.pop_front() {
+        inq[b] = false;
+        let st = ins[b].clone().expect("queued block has a state");
+        let out = transfer(&cfg.blocks[b], &st);
+        for &s in &cfg.blocks[b].succs {
+            let merged = match &ins[s] {
+                None => out.clone(),
+                Some(cur) => meet(cur, &out),
+            };
+            if ins[s].as_ref() != Some(&merged) {
+                ins[s] = Some(merged);
+                if !inq[s] {
+                    inq[s] = true;
+                    work.push_back(s);
+                }
+            }
+        }
+    }
+    ins
+}
+
+/// Constant-propagation in-states for every reachable block.
+pub fn const_states(
+    cfg: &Cfg,
+    cache: &DecodeCache,
+    dram_bytes: usize,
+    vlen_bytes: usize,
+) -> Vec<Option<ConstState>> {
+    forward_fixpoint(
+        cfg,
+        ConstState::entry(dram_bytes),
+        |b, st| {
+            let mut out = st.clone();
+            for (pc, i) in cfg.instrs(cache, b) {
+                out.transfer(&i, pc, vlen_bytes);
+            }
+            out
+        },
+        ConstState::meet,
+    )
+}
+
+/// Must-initialized in-states for every reachable block.
+pub fn init_states(cfg: &Cfg, cache: &DecodeCache, vlen_bytes: usize) -> Vec<Option<InitState>> {
+    forward_fixpoint(
+        cfg,
+        InitState::entry(),
+        |b, st| {
+            let mut out = *st;
+            for (_, i) in cfg.instrs(cache, b) {
+                out.transfer(&i, vlen_bytes);
+            }
+            out
+        },
+        |a, b| a.meet(b),
+    )
+}
+
+/// Backward liveness: live-out set of every block. Blocks whose exit is
+/// not summarized by CFG successors (see [`Cfg::exit_unknown`]) treat
+/// every register as live.
+pub fn live_out_states(cfg: &Cfg, cache: &DecodeCache, vlen_bytes: usize) -> Vec<LiveState> {
+    let n = cfg.blocks.len();
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, b) in cfg.blocks.iter().enumerate() {
+        for &s in &b.succs {
+            preds[s].push(id);
+        }
+    }
+    let mut live_in = vec![LiveState::none(); n];
+    let mut live_out = vec![LiveState::none(); n];
+    let mut inq = vec![true; n];
+    let mut work: VecDeque<usize> = (0..n).collect();
+    while let Some(b) = work.pop_front() {
+        inq[b] = false;
+        let blk = &cfg.blocks[b];
+        let mut out = if cfg.exit_unknown(blk) { LiveState::all() } else { LiveState::none() };
+        for &s in &blk.succs {
+            out = out.union(&live_in[s]);
+        }
+        live_out[b] = out;
+        let mut st = out;
+        let instrs: Vec<_> = cfg.instrs(cache, blk).collect();
+        for (_, i) in instrs.iter().rev() {
+            st.transfer(i, vlen_bytes);
+        }
+        if st != live_in[b] {
+            live_in[b] = st;
+            for &p in &preds[b] {
+                if !inq[p] {
+                    inq[p] = true;
+                    work.push_back(p);
+                }
+            }
+        }
+    }
+    live_out
+}
+
+/// Resolve `jalr` targets: for each reachable block ending in an
+/// unresolved indirect jump, fold the block body from its const
+/// in-state and compute `(base + offset) & !1`. Returns
+/// `(word_index_of_jalr, masked_target)` pairs.
+pub fn resolve_jalrs(
+    cfg: &Cfg,
+    cache: &DecodeCache,
+    states: &[Option<ConstState>],
+    vlen_bytes: usize,
+) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    for (id, b) in cfg.blocks.iter().enumerate() {
+        if !matches!(b.term, super::cfg::Terminator::Indirect { resolved: None }) {
+            continue;
+        }
+        let Some(st0) = &states[id] else { continue };
+        let mut st = st0.clone();
+        let mut resolved = None;
+        for (pc, i) in cfg.instrs(cache, b) {
+            if let Instr::Jalr { rs1, offset, .. } = i {
+                resolved = st.get(rs1).map(|c| c.wrapping_add(offset as u32) & !1);
+            }
+            st.transfer(&i, pc, vlen_bytes);
+        }
+        if let Some(t) = resolved {
+            out.push((b.start + b.ninstr - 1, t));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::{IPrime, SPrime};
+    use crate::isa::reg::*;
+    use crate::isa::CustomSlot;
+
+    #[test]
+    fn effects_cover_custom_slots() {
+        let ip = IPrime { vrs1: V1, vrd1: V2, vrs2: V3, vrd2: V4, rs1: A0, rd: A1 };
+        let merge = Instr::CustomI { slot: CustomSlot::C1, funct3: 0, ops: ip };
+        let e = effects(&merge, 32);
+        assert_eq!(e.vuses, vec![V1, V3]);
+        assert_eq!(e.vdefs, vec![V2, V4]);
+        assert!(e.valid_custom && e.defs.is_empty());
+
+        let vfilt = Instr::CustomI { slot: CustomSlot::C1, funct3: 3, ops: ip };
+        let e = effects(&vfilt, 32);
+        assert_eq!(e.defs, vec![A1]);
+        assert_eq!(e.uses, vec![A0]);
+
+        let prefix = Instr::CustomI { slot: CustomSlot::C3, funct3: 0, ops: ip };
+        let e = effects(&prefix, 32);
+        assert!(e.uses_carry && e.defs_carry);
+
+        let bad = Instr::CustomI { slot: CustomSlot::C2, funct3: 1, ops: ip };
+        assert!(!effects(&bad, 32).valid_custom);
+
+        let sp = SPrime { vrs1: V1, vrd1: V2, imm: 0, rs2: A2, rs1: A0, rd: ZERO };
+        let lv = Instr::CustomS { slot: CustomSlot::C0, funct3: 4, ops: sp };
+        let e = effects(&lv, 64);
+        let m = e.mem.expect("lv touches memory");
+        assert!(!m.store && m.len == 64 && m.index == Some(A2));
+
+        let bad_s = Instr::CustomS { slot: CustomSlot::C1, funct3: 4, ops: sp };
+        assert!(!effects(&bad_s, 64).valid_custom);
+    }
+
+    #[test]
+    fn const_entry_matches_loader() {
+        let st = ConstState::entry(64 * 1024 * 1024);
+        assert_eq!(st.get(ZERO), Some(0));
+        assert_eq!(st.get(SP), Some(64 * 1024 * 1024));
+        assert_eq!(st.get(A0), Some(0));
+    }
+
+    #[test]
+    fn const_transfer_folds_li_and_auipc_chains() {
+        let mut st = ConstState::entry(1 << 20);
+        // lui a0, 0x100 ; addi a0, a0, 0x42
+        st.transfer(&Instr::Lui { rd: A0, imm: 0x100 << 12 }, 0x1000, 32);
+        st.transfer(&Instr::Addi { rd: A0, rs1: A0, imm: 0x42 }, 0x1004, 32);
+        assert_eq!(st.get(A0), Some(0x0010_0042));
+        // auipc t0, 0 at 0x2000
+        st.transfer(&Instr::Auipc { rd: T0, imm: 0 }, 0x2000, 32);
+        assert_eq!(st.get(T0), Some(0x2000));
+        // a load makes its destination unknown
+        st.transfer(&Instr::Lw { rd: A0, rs1: SP, offset: -4 }, 0x2004, 32);
+        assert_eq!(st.get(A0), None);
+        // x0 stays pinned even if "written"
+        st.transfer(&Instr::Addi { rd: ZERO, rs1: A0, imm: 1 }, 0x2008, 32);
+        assert_eq!(st.get(ZERO), Some(0));
+    }
+
+    #[test]
+    fn init_meet_is_intersection_and_carry_tracked() {
+        let mut a = InitState::entry();
+        a.transfer(&Instr::Addi { rd: A0, rs1: ZERO, imm: 1 }, 32);
+        let b = InitState::entry();
+        let m = a.meet(&b);
+        assert!(!m.scalar(A0) && m.scalar(SP));
+
+        let ip = IPrime { vrs1: V1, vrd1: V2, vrs2: V0, vrd2: V0, rs1: ZERO, rd: ZERO };
+        let mut c = InitState::entry();
+        assert!(!c.carry);
+        c.transfer(&Instr::CustomI { slot: CustomSlot::C3, funct3: 1, ops: ip }, 32);
+        assert!(c.carry, "c3_reset defines the carry");
+    }
+
+    #[test]
+    fn liveness_kill_then_gen() {
+        let mut st = LiveState::none();
+        st.scalars = 1 << A0.num();
+        // a0 = a1 + a2 : a0 dies, a1/a2 born
+        st.transfer(&Instr::Add { rd: A0, rs1: A1, rs2: A2 }, 32);
+        assert!(!st.scalar(A0) && st.scalar(A1) && st.scalar(A2));
+    }
+}

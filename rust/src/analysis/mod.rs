@@ -1,0 +1,810 @@
+//! Static guest-program analyzer (DESIGN.md §12): CFG recovery over the
+//! predecoded text segment plus dataflow lints for RV32IM and the
+//! paper's I′/S′ SIMD instruction types.
+//!
+//! The analyzer answers "is this program structurally broken?" before a
+//! single instruction executes: uninitialized scalar/vector/carry reads,
+//! dead writes, constant-folded out-of-DRAM or misaligned accesses,
+//! stores that overlap the text segment (static SMC), branches out of
+//! text, wild/misaligned indirect jumps, unreachable blocks, and
+//! fall-off-the-end-of-text paths. Error-severity findings are tied to
+//! the lint-oracle property checked in `tests/analysis_oracle.rs`: a
+//! program the analyzer passes with **zero errors** runs to a clean
+//! exit on [`crate::ref_iss::RefIss`] for every fuzzer preset.
+//!
+//! Known-unsound corners (documented, by design): an unresolved `jalr`
+//! is a CFG sink; resolved indirect targets are best-effort constants;
+//! self-modifying stores are reported but their *patched* program is
+//! not analyzed; and a pc inside DRAM but outside the text segment is
+//! flagged as an error even though the architecture will happily fetch
+//! raw bytes there (the gap is zero-filled, so it faults in practice).
+
+pub mod cfg;
+pub mod dataflow;
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::asm::Program;
+use crate::isa::DecodeCache;
+use crate::mem::config::MemConfig;
+
+pub use cfg::{BasicBlock, Cfg, Terminator};
+pub use dataflow::{effects, ConstState, Effects, InitState, LiveState, MemRef};
+
+/// How many instructions of disassembly context a finding carries.
+const CONTEXT_WINDOW: usize = 4;
+/// Cap on jalr-resolution/CFG-rebuild rounds (each round resolves at
+/// least one new indirect target or stops).
+const MAX_RESOLVE_ROUNDS: usize = 64;
+
+/// Severity of a finding. Errors are the machine-checked tier: the
+/// lint oracle asserts that zero-error programs run clean on the ISS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// Kind of a finding. The severity split is part of the analyzer's
+/// contract (see [`Severity`]): everything the architecture *faults on*
+/// (or that prevents loading) is an error; everything it tolerates but
+/// almost certainly indicates a broken program is a warning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FindingKind {
+    /// Text or data segment does not fit in DRAM; loading faults.
+    ImageOverflow,
+    /// Entry pc is not a word-aligned text address.
+    EntryOutOfText,
+    /// A reachable word does not decode; fetching it faults.
+    IllegalWord,
+    /// A reachable `ebreak` raises a Break fault.
+    UnexpectedBreak,
+    /// Execution can run past the last text word.
+    FallOffEnd,
+    /// Direct branch/jal target outside the text segment.
+    BranchOutOfText,
+    /// Branch/jump target is not word-aligned; fetching it faults.
+    MisalignedTarget,
+    /// Resolved indirect jump leaves DRAM entirely.
+    WildJump,
+    /// Constant-folded access past the end of DRAM.
+    OutOfDramAccess,
+    /// Custom slot/funct3 pair the standard unit pool rejects.
+    UnknownCustomOp,
+    /// Store whose byte range overlaps the text segment (static SMC).
+    StoreToText,
+    /// Constant-folded access not naturally aligned (tolerated by the
+    /// memory system, but usually a bug in address arithmetic).
+    MisalignedAccess,
+    /// Read of a scalar register never written on some path from entry.
+    UninitScalarRead,
+    /// Read of a vector register never written on some path from entry.
+    UninitVectorRead,
+    /// `c3` prefix/carry read before any `c3` op defined the carry.
+    UninitCarryRead,
+    /// Scalar register written but never read afterwards.
+    DeadWrite,
+    /// Vector register written but never read afterwards.
+    DeadVectorWrite,
+    /// Block not reachable from the entry pc.
+    UnreachableBlock,
+}
+
+impl FindingKind {
+    pub fn severity(self) -> Severity {
+        use FindingKind::*;
+        match self {
+            ImageOverflow | EntryOutOfText | IllegalWord | UnexpectedBreak | FallOffEnd
+            | BranchOutOfText | MisalignedTarget | WildJump | OutOfDramAccess
+            | UnknownCustomOp => Severity::Error,
+            StoreToText | MisalignedAccess | UninitScalarRead | UninitVectorRead
+            | UninitCarryRead | DeadWrite | DeadVectorWrite | UnreachableBlock => {
+                Severity::Warning
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        use FindingKind::*;
+        match self {
+            ImageOverflow => "image-overflow",
+            EntryOutOfText => "entry-out-of-text",
+            IllegalWord => "illegal-word",
+            UnexpectedBreak => "unexpected-break",
+            FallOffEnd => "fall-off-end",
+            BranchOutOfText => "branch-out-of-text",
+            MisalignedTarget => "misaligned-target",
+            WildJump => "wild-jump",
+            OutOfDramAccess => "out-of-dram-access",
+            UnknownCustomOp => "unknown-custom-op",
+            StoreToText => "store-to-text",
+            MisalignedAccess => "misaligned-access",
+            UninitScalarRead => "uninit-scalar-read",
+            UninitVectorRead => "uninit-vector-read",
+            UninitCarryRead => "uninit-carry-read",
+            DeadWrite => "dead-write",
+            DeadVectorWrite => "dead-vector-write",
+            UnreachableBlock => "unreachable-block",
+        }
+    }
+}
+
+/// One pc-anchored finding with a disassembly context window (same
+/// rendering as the cosim divergence report).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub kind: FindingKind,
+    pub pc: u32,
+    pub message: String,
+    pub context: Vec<String>,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}] {:#010x}: {}",
+            match self.kind.severity() {
+                Severity::Error => "error  ",
+                Severity::Warning => "warning",
+            },
+            self.kind.name(),
+            self.pc,
+            self.message
+        )
+    }
+}
+
+/// One data-memory reference seen during the constant-propagation
+/// sweep. `addr` is the folded absolute address when every operand was
+/// a known constant.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    pub pc: u32,
+    pub addr: Option<u32>,
+    pub len: usize,
+    pub store: bool,
+}
+
+/// Analyzer output: findings plus CFG statistics and the memory-access
+/// evidence the fuzzer invariant tests assert over.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub blocks: usize,
+    pub reachable_blocks: usize,
+    pub instrs: usize,
+    pub accesses: Vec<Access>,
+}
+
+impl Report {
+    pub fn errors(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.kind.severity() == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.kind.severity() == Severity::Warning)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.warnings().count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    pub fn has_kind(&self, kind: FindingKind) -> bool {
+        self.findings.iter().any(|f| f.kind == kind)
+    }
+
+    /// Human-readable rendering; warnings beyond `max_warnings` are
+    /// summarized with a count.
+    pub fn render(&self, max_warnings: usize) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} blocks ({} reachable), {} instrs, {} errors, {} warnings",
+            self.blocks,
+            self.reachable_blocks,
+            self.instrs,
+            self.error_count(),
+            self.warning_count()
+        );
+        let mut emitted_warnings = 0usize;
+        for f in &self.findings {
+            if f.kind.severity() == Severity::Warning {
+                emitted_warnings += 1;
+                if emitted_warnings > max_warnings {
+                    continue;
+                }
+            }
+            let _ = writeln!(out, "{f}");
+            for line in &f.context {
+                let _ = writeln!(out, "    {line}");
+            }
+        }
+        if emitted_warnings > max_warnings {
+            let _ = writeln!(out, "... {} more warnings", emitted_warnings - max_warnings);
+        }
+        out
+    }
+}
+
+/// Analyzer parameters: the machine shape the program is judged
+/// against.
+#[derive(Debug, Clone, Copy)]
+pub struct AnalysisConfig {
+    pub vlen_bits: usize,
+    pub dram_bytes: usize,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> Self {
+        AnalysisConfig {
+            vlen_bits: 256,
+            dram_bytes: MemConfig::paper_default().dram.size_bytes,
+        }
+    }
+}
+
+/// Recover the final CFG of `prog`: leaders, blocks, edges, and
+/// constant-propagation-resolved `jalr` targets (iterated until no new
+/// indirect target resolves). Exposed for the fuzzer's structural
+/// invariant tests.
+pub fn recover_cfg(prog: &Program, cfg: &AnalysisConfig) -> (DecodeCache, Cfg) {
+    let vlen_bytes = cfg.vlen_bits / 8;
+    let mut cache = DecodeCache::empty();
+    cache.predecode(prog.text_base, &prog.text);
+    let mut jalr_map: HashMap<usize, u32> = HashMap::new();
+    let mut graph = Cfg::build(&cache, prog.entry, &[], &jalr_map);
+    for _ in 0..MAX_RESOLVE_ROUNDS {
+        let consts = dataflow::const_states(&graph, &cache, cfg.dram_bytes, vlen_bytes);
+        let new = dataflow::resolve_jalrs(&graph, &cache, &consts, vlen_bytes);
+        let mut changed = false;
+        for (w, t) in new {
+            changed |= jalr_map.insert(w, t).is_none();
+        }
+        if !changed {
+            break;
+        }
+        let extra: Vec<u32> = jalr_map.values().copied().collect();
+        graph = Cfg::build(&cache, prog.entry, &extra, &jalr_map);
+    }
+    (cache, graph)
+}
+
+/// Run the full analysis pipeline over `prog`.
+pub fn analyze_program(prog: &Program, config: &AnalysisConfig) -> Report {
+    let vlen_bytes = config.vlen_bits / 8;
+    let dram = config.dram_bytes as u64;
+    let (cache, graph) = recover_cfg(prog, config);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut accesses: Vec<Access> = Vec::new();
+    let ctx = |pc: u32| context_window(&cache, &prog.text, pc);
+    let text_base = prog.text_base;
+    let text_end = graph.text_end();
+
+    // Image fit: a program that does not fit DRAM never starts.
+    let image_end = (prog.data_base as u64 + prog.data.len() as u64).max(text_end as u64);
+    if image_end > dram {
+        findings.push(Finding {
+            kind: FindingKind::ImageOverflow,
+            pc: prog.entry,
+            message: format!(
+                "image ends at {image_end:#x} but DRAM is {dram:#x} bytes; loading faults"
+            ),
+            context: Vec::new(),
+        });
+    }
+    if graph.entry_block.is_none() {
+        findings.push(Finding {
+            kind: FindingKind::EntryOutOfText,
+            pc: prog.entry,
+            message: format!(
+                "entry pc {:#010x} is not a word-aligned text address in [{:#010x}, {:#010x})",
+                prog.entry, text_base, text_end
+            ),
+            context: Vec::new(),
+        });
+    }
+
+    let in_text = |pc: u32| (text_base..text_end).contains(&pc);
+
+    // ---- structural findings per block ----------------------------------
+    for b in &graph.blocks {
+        let pc = b.pc(graph.base);
+        let tpc = b.term_pc(graph.base);
+        if !b.reachable {
+            if b.ninstr > 0 {
+                findings.push(Finding {
+                    kind: FindingKind::UnreachableBlock,
+                    pc,
+                    message: format!(
+                        "block of {} instruction{} is unreachable from the entry pc",
+                        b.ninstr,
+                        if b.ninstr == 1 { "" } else { "s" }
+                    ),
+                    context: ctx(pc),
+                });
+            }
+            continue;
+        }
+        let mut bad_target = |target: u32, what: &str| {
+            if target % 4 != 0 {
+                findings.push(Finding {
+                    kind: FindingKind::MisalignedTarget,
+                    pc: tpc,
+                    message: format!(
+                        "{what} target {target:#010x} is not word-aligned; fetch faults"
+                    ),
+                    context: ctx(tpc),
+                });
+            } else if !in_text(target) {
+                findings.push(Finding {
+                    kind: FindingKind::BranchOutOfText,
+                    pc: tpc,
+                    message: format!(
+                        "{what} target {target:#010x} is outside the text segment [{text_base:#010x}, {text_end:#010x})"
+                    ),
+                    context: ctx(tpc),
+                });
+            }
+        };
+        match b.term {
+            Terminator::Branch { target } => {
+                bad_target(target, "taken-branch");
+                if b.start + b.span() >= graph.nwords {
+                    findings.push(Finding {
+                        kind: FindingKind::FallOffEnd,
+                        pc: tpc,
+                        message: "not-taken path falls off the end of the text segment".into(),
+                        context: ctx(tpc),
+                    });
+                }
+            }
+            Terminator::Jump { target } => bad_target(target, "jal"),
+            Terminator::Indirect { resolved: Some(target) } => {
+                if target % 4 != 0 {
+                    bad_target(target, "resolved jalr");
+                } else if target as u64 + 4 > dram {
+                    findings.push(Finding {
+                        kind: FindingKind::WildJump,
+                        pc: tpc,
+                        message: format!(
+                            "resolved jalr target {target:#010x} is outside DRAM ({dram:#x} bytes)"
+                        ),
+                        context: ctx(tpc),
+                    });
+                } else {
+                    bad_target(target, "resolved jalr");
+                }
+            }
+            Terminator::Indirect { resolved: None } => {}
+            Terminator::Break => {
+                findings.push(Finding {
+                    kind: FindingKind::UnexpectedBreak,
+                    pc: tpc,
+                    message: "reachable ebreak raises a Break fault".into(),
+                    context: ctx(tpc),
+                });
+            }
+            Terminator::Illegal => {
+                let w = prog.text.get(b.start).copied().unwrap_or(0);
+                findings.push(Finding {
+                    kind: FindingKind::IllegalWord,
+                    pc,
+                    message: format!("word {w:#010x} does not decode; fetching it faults"),
+                    context: ctx(pc),
+                });
+            }
+            Terminator::FallOff => {
+                findings.push(Finding {
+                    kind: FindingKind::FallOffEnd,
+                    pc: tpc,
+                    message: "execution falls off the end of the text segment".into(),
+                    context: ctx(tpc),
+                });
+            }
+            Terminator::Halt | Terminator::FallThrough => {}
+        }
+    }
+
+    // ---- constant-propagation sweep: addresses & unknown custom ops ------
+    let consts = dataflow::const_states(&graph, &cache, config.dram_bytes, vlen_bytes);
+    for (id, b) in graph.blocks.iter().enumerate() {
+        if !b.reachable {
+            continue;
+        }
+        let Some(st0) = &consts[id] else { continue };
+        let mut st = st0.clone();
+        for (pc, i) in graph.instrs(&cache, b) {
+            let e = effects(&i, vlen_bytes);
+            if !e.valid_custom {
+                findings.push(Finding {
+                    kind: FindingKind::UnknownCustomOp,
+                    pc,
+                    message: format!(
+                        "`{i}` names a slot/funct3 pair the standard unit pool rejects"
+                    ),
+                    context: ctx(pc),
+                });
+            }
+            if let Some(m) = e.mem {
+                let addr = st.get(m.base).and_then(|base| {
+                    let idx = match m.index {
+                        Some(r) => st.get(r)?,
+                        None => 0,
+                    };
+                    Some(base.wrapping_add(idx).wrapping_add(m.offset as u32))
+                });
+                accesses.push(Access { pc, addr, len: m.len, store: m.store });
+                if let Some(a) = addr {
+                    let end = a as u64 + m.len as u64;
+                    let align: u32 = if m.index.is_some() { 4 } else { m.len as u32 };
+                    if end > dram {
+                        findings.push(Finding {
+                            kind: FindingKind::OutOfDramAccess,
+                            pc,
+                            message: format!(
+                                "{} of {} bytes at {a:#010x} runs past the end of DRAM ({dram:#x} bytes)",
+                                if m.store { "store" } else { "load" },
+                                m.len
+                            ),
+                            context: ctx(pc),
+                        });
+                    } else {
+                        if align > 1 && a % align != 0 {
+                            findings.push(Finding {
+                                kind: FindingKind::MisalignedAccess,
+                                pc,
+                                message: format!(
+                                    "{} address {a:#010x} is not {align}-byte aligned",
+                                    if m.store { "store" } else { "load" }
+                                ),
+                                context: ctx(pc),
+                            });
+                        }
+                        if m.store && a < text_end && end > text_base as u64 {
+                            findings.push(Finding {
+                                kind: FindingKind::StoreToText,
+                                pc,
+                                message: format!(
+                                    "store at {a:#010x} overlaps the text segment [{text_base:#010x}, {text_end:#010x}) — self-modifying code is invisible to static analysis"
+                                ),
+                                context: ctx(pc),
+                            });
+                        }
+                    }
+                }
+            }
+            st.transfer(&i, pc, vlen_bytes);
+        }
+    }
+
+    // ---- must-init sweep: uninitialized reads ----------------------------
+    let inits = dataflow::init_states(&graph, &cache, vlen_bytes);
+    for (id, b) in graph.blocks.iter().enumerate() {
+        if !b.reachable {
+            continue;
+        }
+        let Some(st0) = &inits[id] else { continue };
+        let mut st = *st0;
+        for (pc, i) in graph.instrs(&cache, b) {
+            let e = effects(&i, vlen_bytes);
+            for &r in &e.uses {
+                if !st.scalar(r) {
+                    findings.push(Finding {
+                        kind: FindingKind::UninitScalarRead,
+                        pc,
+                        message: format!(
+                            "`{i}` reads {} before any write reaches this point",
+                            r.abi_name()
+                        ),
+                        context: ctx(pc),
+                    });
+                }
+            }
+            for &v in &e.vuses {
+                if !st.vec(v) {
+                    findings.push(Finding {
+                        kind: FindingKind::UninitVectorRead,
+                        pc,
+                        message: format!("`{i}` reads {v} before any write reaches this point"),
+                        context: ctx(pc),
+                    });
+                }
+            }
+            if e.uses_carry && !st.carry {
+                findings.push(Finding {
+                    kind: FindingKind::UninitCarryRead,
+                    pc,
+                    message: format!(
+                        "`{i}` reads the c3 carry before any prefix/reset defined it"
+                    ),
+                    context: ctx(pc),
+                });
+            }
+            st.transfer(&i, vlen_bytes);
+        }
+    }
+
+    // ---- liveness sweep: dead writes -------------------------------------
+    let live_out = dataflow::live_out_states(&graph, &cache, vlen_bytes);
+    for (id, b) in graph.blocks.iter().enumerate() {
+        if !b.reachable {
+            continue;
+        }
+        let mut st = live_out[id];
+        let instrs: Vec<_> = graph.instrs(&cache, b).collect();
+        for (pc, i) in instrs.iter().rev() {
+            let e = effects(i, vlen_bytes);
+            for &r in &e.defs {
+                if r.num() != 0 && !st.scalar(r) {
+                    findings.push(Finding {
+                        kind: FindingKind::DeadWrite,
+                        pc: *pc,
+                        message: format!("`{i}` writes {} but nothing reads it", r.abi_name()),
+                        context: ctx(*pc),
+                    });
+                }
+            }
+            for &v in &e.vdefs {
+                if v.num() != 0 && !st.vec(v) {
+                    findings.push(Finding {
+                        kind: FindingKind::DeadVectorWrite,
+                        pc: *pc,
+                        message: format!("`{i}` writes {v} but nothing reads it"),
+                        context: ctx(*pc),
+                    });
+                }
+            }
+            st.transfer(i, vlen_bytes);
+        }
+    }
+
+    findings.sort_by_key(|f| (f.kind.severity(), f.pc));
+    let reachable_blocks = graph.blocks.iter().filter(|b| b.reachable).count();
+    let instrs = graph.blocks.iter().map(|b| b.ninstr).sum();
+    Report {
+        findings,
+        blocks: graph.blocks.len(),
+        reachable_blocks,
+        instrs,
+        accesses,
+    }
+}
+
+/// Disassembly window of up to [`CONTEXT_WINDOW`] instructions ending
+/// at `pc` (most recent last), matching the cosim divergence report.
+fn context_window(cache: &DecodeCache, text: &[u32], pc: u32) -> Vec<String> {
+    let Some(idx) = cache.word_index(pc) else { return Vec::new() };
+    let lo = idx.saturating_sub(CONTEXT_WINDOW - 1);
+    (lo..=idx)
+        .map(|k| {
+            let kpc = cache.base().wrapping_add((k as u32) * 4);
+            match cache.get(k) {
+                Some(i) => crate::cosim::context_line(kpc, &i),
+                None => format!("{kpc:#010x}: .word {:#010x}", text[k]),
+            }
+        })
+        .collect()
+}
+
+/// Static-vs-dynamic consistency: every recovered CFG block must agree
+/// with the boundaries [`crate::ref_iss::block::BlockCache`] lowering
+/// would produce from the same start word. A CFG block may be *shorter*
+/// only because a jump target (leader) splits it, and *longer* only
+/// past the ISS's `MAX_BLOCK_UOPS` cap; any other disagreement means
+/// the two definitions of "basic block" have drifted.
+pub fn check_block_consistency(prog: &Program, graph: &Cfg) -> Result<(), String> {
+    use crate::ref_iss::block::{ends_block, MAX_BLOCK_UOPS};
+    let mut cache = DecodeCache::empty();
+    cache.predecode(prog.text_base, &prog.text);
+    for b in &graph.blocks {
+        if b.ninstr == 0 {
+            continue;
+        }
+        // Replicate the ISS scan from this block's start word.
+        let mut k = b.start;
+        let mut count = 0usize;
+        while k < cache.len() && count < MAX_BLOCK_UOPS {
+            let Some(i) = cache.get(k) else { break };
+            count += 1;
+            if ends_block(&i) {
+                break;
+            }
+            k += 1;
+        }
+        let pc = b.pc(graph.base);
+        if b.ninstr > count && count < MAX_BLOCK_UOPS {
+            return Err(format!(
+                "cfg block at {pc:#010x} has {} instrs but ISS lowering stops after {count}",
+                b.ninstr
+            ));
+        }
+        if b.ninstr < count && !matches!(b.term, Terminator::FallThrough) {
+            return Err(format!(
+                "cfg block at {pc:#010x} ends after {} instrs ({:?}) but ISS lowering continues to {count}",
+                b.ninstr, b.term
+            ));
+        }
+        // Terminator classification must agree with ends_block per instr.
+        for (n, (ipc, i)) in graph.instrs(&cache, b).enumerate() {
+            let is_last = n + 1 == b.ninstr;
+            let cfg_terminates = is_last
+                && matches!(
+                    b.term,
+                    Terminator::Branch { .. }
+                        | Terminator::Jump { .. }
+                        | Terminator::Indirect { .. }
+                        | Terminator::Halt
+                        | Terminator::Break
+                );
+            if cfg_terminates != ends_block(&i) {
+                return Err(format!(
+                    "terminator disagreement at {ipc:#010x}: cfg={cfg_terminates} iss={}",
+                    ends_block(&i)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+    use crate::isa::Instr;
+
+    fn analyze(f: impl FnOnce(&mut Asm)) -> Report {
+        let mut a = Asm::new();
+        f(&mut a);
+        let prog = a.assemble().expect("fixture assembles");
+        analyze_program(&prog, &AnalysisConfig::default())
+    }
+
+    #[test]
+    fn clean_program_is_clean() {
+        let r = analyze(|a| {
+            a.li(A0, 1);
+            a.li(A1, 2);
+            a.emit(Instr::Add { rd: A2, rs1: A0, rs2: A1 });
+            a.emit(Instr::Sw { rs1: SP, rs2: A2, offset: -4 });
+            a.halt();
+        });
+        assert!(r.is_clean(), "unexpected errors: {}", r.render(50));
+        assert_eq!(r.blocks, 1);
+    }
+
+    #[test]
+    fn uninit_scalar_read_flagged() {
+        let r = analyze(|a| {
+            a.emit(Instr::Add { rd: A0, rs1: A1, rs2: A2 });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::UninitScalarRead));
+        assert!(r.is_clean(), "uninit reads are warnings");
+    }
+
+    #[test]
+    fn dead_write_flagged() {
+        let r = analyze(|a| {
+            a.li(A0, 1);
+            a.li(A0, 2); // first li is dead
+            a.emit(Instr::Sw { rs1: SP, rs2: A0, offset: -4 });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::DeadWrite));
+    }
+
+    #[test]
+    fn out_of_dram_access_is_error() {
+        let r = analyze(|a| {
+            a.li(A0, 0x7000_0000);
+            a.emit(Instr::Lw { rd: A1, rs1: A0, offset: 0 });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::OutOfDramAccess));
+        assert_eq!(r.error_count(), 1);
+    }
+
+    #[test]
+    fn sp_relative_store_at_top_of_dram_is_clean() {
+        let r = analyze(|a| {
+            a.li(A0, 7);
+            a.emit(Instr::Sw { rs1: SP, rs2: A0, offset: -4 });
+            a.halt();
+        });
+        assert!(r.is_clean(), "{}", r.render(50));
+        // But storing *at* sp (== DRAM top) is out of bounds.
+        let r = analyze(|a| {
+            a.li(A0, 7);
+            a.emit(Instr::Sw { rs1: SP, rs2: A0, offset: 0 });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::OutOfDramAccess));
+    }
+
+    #[test]
+    fn unknown_custom_op_is_error() {
+        use crate::isa::instr::IPrime;
+        use crate::isa::CustomSlot;
+        let r = analyze(|a| {
+            a.emit(Instr::CustomI {
+                slot: CustomSlot::C2,
+                funct3: 3,
+                ops: IPrime { vrs1: V0, vrd1: V1, vrs2: V0, vrd2: V0, rs1: ZERO, rd: ZERO },
+            });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::UnknownCustomOp));
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn uninit_carry_flagged_until_reset() {
+        let r = analyze(|a| {
+            a.prefix(V2, V1); // carry read before reset; v1 uninit too
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::UninitCarryRead));
+        assert!(r.has_kind(FindingKind::UninitVectorRead));
+        let r = analyze(|a| {
+            a.prefix_reset();
+            a.prefix(V2, V1);
+            a.halt();
+        });
+        assert!(!r.has_kind(FindingKind::UninitCarryRead));
+    }
+
+    #[test]
+    fn jalr_chain_resolves_and_keeps_code_reachable() {
+        let r = analyze(|a| {
+            // auipc+jalr to the next instruction, twice in sequence —
+            // the second pair is only reachable through the first, so
+            // resolution must iterate.
+            for _ in 0..2 {
+                a.emit(Instr::Auipc { rd: T6, imm: 0 });
+                a.emit(Instr::Jalr { rd: ZERO, rs1: T6, offset: 8 });
+            }
+            a.li(A0, 1);
+            a.emit(Instr::Sw { rs1: SP, rs2: A0, offset: -4 });
+            a.halt();
+        });
+        assert!(r.is_clean(), "{}", r.render(50));
+        assert!(!r.has_kind(FindingKind::UnreachableBlock));
+        assert_eq!(r.reachable_blocks, r.blocks);
+    }
+
+    #[test]
+    fn fall_off_end_is_error() {
+        let r = analyze(|a| {
+            a.li(A0, 1);
+        });
+        assert!(r.has_kind(FindingKind::FallOffEnd));
+    }
+
+    #[test]
+    fn consistency_holds_on_fixture() {
+        let mut a = Asm::new();
+        let skip = a.new_label("skip");
+        a.li(A0, 3);
+        a.bnez(A0, skip);
+        a.li(A1, 1);
+        a.bind(skip);
+        a.sort8(V1, V1);
+        a.halt();
+        let prog = a.assemble().unwrap();
+        let (_, graph) = recover_cfg(&prog, &AnalysisConfig::default());
+        check_block_consistency(&prog, &graph).expect("boundaries agree");
+    }
+}

@@ -169,6 +169,13 @@ fn compare_memory(core: &Core, iss: &RefIss, deltas: &mut Vec<String>) {
     }
 }
 
+/// Render one line of a disassembly context window. Shared between the
+/// lockstep divergence report and the static analyzer's pc-anchored
+/// findings so both read identically.
+pub fn context_line(pc: u32, i: &Instr) -> String {
+    format!("{pc:#010x}: {i}")
+}
+
 fn divergence(
     core: &Core,
     iss: &RefIss,
@@ -180,7 +187,7 @@ fn divergence(
         core_pc: ArchState::pc(core),
         iss_pc: ArchState::pc(iss),
         deltas,
-        context: window.iter().map(|(pc, i)| format!("{pc:#010x}: {i}")).collect(),
+        context: window.iter().map(|(pc, i)| context_line(*pc, i)).collect(),
     })
 }
 

@@ -548,6 +548,11 @@ pub enum FailureKind {
     /// Neither side halted within the budget: the termination
     /// guarantee is broken.
     Watchdog,
+    /// The static analyzer pre-flight ([`FuzzConfig::analyze`]) found
+    /// error-severity findings in a generated program before it ran:
+    /// either the generator broke a structural invariant or the
+    /// analyzer has a false positive — both are bugs.
+    Lint,
 }
 
 /// One failing fuzz case, with everything triage needs.
@@ -575,6 +580,12 @@ pub struct FuzzConfig {
     pub weights: Option<OpWeights>,
     pub points: Vec<MachinePoint>,
     pub jobs: Parallelism,
+    /// Static-analyzer pre-flight (`fuzz --analyze`): before running a
+    /// case in lockstep, assert the generated program carries zero
+    /// error-severity findings ([`crate::analysis`]). Skipped when the
+    /// wild-jump class is enabled — wild jumps exist precisely to fault,
+    /// and the analyzer flags every one of them.
+    pub analyze: bool,
 }
 
 impl Default for FuzzConfig {
@@ -586,6 +597,7 @@ impl Default for FuzzConfig {
             weights: None,
             points: vec![MachinePoint::default(), stressed_point()],
             jobs: Parallelism::auto(),
+            analyze: false,
         }
     }
 }
@@ -670,6 +682,40 @@ pub fn run_case(
     }
 }
 
+/// Static-analyzer pre-flight for one case: generate the program and
+/// assert it carries zero error-severity findings. The generator's
+/// structural guarantees ("no generated program can fault") become a
+/// machine-checked property instead of a construction-time comment.
+/// Callers gate this on `w.wildjump == 0`: wild jumps are *meant* to
+/// fault and the analyzer flags every one of them.
+pub fn preflight_case(
+    seed: u64,
+    ops: usize,
+    weights_name: &str,
+    w: &OpWeights,
+    mp: &MachinePoint,
+) -> Result<(), Box<FuzzFailure>> {
+    let prog = generate(seed, ops, w, mp.vlen);
+    let cfg = crate::analysis::AnalysisConfig { vlen_bits: mp.vlen, dram_bytes: FUZZ_DRAM_BYTES };
+    let report = crate::analysis::analyze_program(&prog, &cfg);
+    if report.is_clean() {
+        return Ok(());
+    }
+    Err(Box::new(FuzzFailure {
+        seed,
+        ops,
+        weights_name: weights_name.to_string(),
+        point: *mp,
+        kind: FailureKind::Lint,
+        listing: prog.disassemble(),
+        report: format!(
+            "static analyzer pre-flight found {} error(s) in a generated program:\n{}",
+            report.error_count(),
+            report.render(20)
+        ),
+    }))
+}
+
 /// Expand a seed range into content-addressed service jobs — one
 /// [`crate::service::Job`] per (machine point, seed) — so a fuzz
 /// campaign can flow through the sweep service's queue and result
@@ -705,7 +751,11 @@ pub fn run_campaign(cfg: &FuzzConfig) -> FuzzSummary {
         }
     }
     let n_cases = cases.len() as u64;
+    let analyze = cfg.analyze;
     let results = sweep::parallel_map_bounded(cases, cfg.jobs.workers(), |(seed, name, w, mp)| {
+        if analyze && w.wildjump == 0 {
+            preflight_case(seed, cfg.ops, name, &w, &mp)?;
+        }
         run_case(seed, cfg.ops, name, &w, &mp)
     });
     let mut summary = FuzzSummary { cases: n_cases, instrs: 0, faulted: 0, failures: Vec::new() };
@@ -918,5 +968,128 @@ mod tests {
         assert!(mp.validate().is_ok());
         let r = run_case(5, 150, "balanced", &OpWeights::balanced(), &mp);
         assert!(r.is_ok(), "{}", r.unwrap_err().report);
+    }
+
+    fn fuzz_analysis_config() -> crate::analysis::AnalysisConfig {
+        crate::analysis::AnalysisConfig { vlen_bits: 256, dram_bytes: FUZZ_DRAM_BYTES }
+    }
+
+    #[test]
+    fn branch_discipline_is_an_analyzer_checked_invariant() {
+        // The module doc promises: conditional branches and `jal` only
+        // target forward, backward branches exist only as the counted
+        // loop's `bnez s10`, and the benign `auipc`+`jalr` pair lands on
+        // the next instruction. Recover the CFG and assert all three,
+        // instead of trusting the generator's construction.
+        use crate::analysis::{recover_cfg, Terminator};
+        for seed in 0..8 {
+            let (name, w) = OpWeights::preset_for_seed(seed);
+            let prog = generate(seed, 200, &w, 256);
+            let (cache, graph) = recover_cfg(&prog, &fuzz_analysis_config());
+            for b in graph.blocks.iter().filter(|b| b.reachable) {
+                let tpc = b.term_pc(graph.base);
+                match b.term {
+                    Terminator::Branch { target } if target <= tpc => {
+                        let i = cache
+                            .word_index(tpc)
+                            .and_then(|k| cache.get(k))
+                            .expect("terminator decodes");
+                        assert!(
+                            matches!(i, Instr::Bne { rs1, rs2, .. } if rs1 == S10 && rs2 == ZERO),
+                            "seed {seed} ({name}): backward branch at {tpc:#010x} is not the \
+                             counted-loop `bnez s10`: {i}"
+                        );
+                    }
+                    Terminator::Jump { target } => {
+                        assert!(
+                            target > tpc,
+                            "seed {seed} ({name}): jal at {tpc:#010x} targets backward"
+                        );
+                    }
+                    Terminator::Indirect { resolved } => {
+                        assert_eq!(
+                            resolved,
+                            Some(tpc.wrapping_add(4)),
+                            "seed {seed} ({name}): reachable jalr at {tpc:#010x} must resolve \
+                             to the next instruction"
+                        );
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn data_window_is_an_analyzer_checked_invariant() {
+        // Every load/store in a preset program must constant-fold to an
+        // address inside the 4 KiB data window — the other half of the
+        // "no generated program can fault" guarantee.
+        use crate::analysis::analyze_program;
+        for seed in 0..8 {
+            let (name, w) = OpWeights::preset_for_seed(seed);
+            let prog = generate(seed, 200, &w, 256);
+            let report = analyze_program(&prog, &fuzz_analysis_config());
+            assert!(report.is_clean(), "seed {seed} ({name}):\n{}", report.render(20));
+            let lo = prog.data_base;
+            let hi = lo as u64 + DATA_BYTES as u64;
+            assert!(!report.accesses.is_empty(), "seed {seed} ({name}) emitted no accesses");
+            for acc in &report.accesses {
+                let addr = acc.addr.unwrap_or_else(|| {
+                    panic!(
+                        "seed {seed} ({name}): access at {:#010x} did not constant-fold",
+                        acc.pc
+                    )
+                });
+                assert!(
+                    addr >= lo && addr as u64 + acc.len as u64 <= hi,
+                    "seed {seed} ({name}): {} at pc {:#010x} hits {addr:#010x}+{} outside the \
+                     data window [{lo:#010x}, {hi:#010x})",
+                    if acc.store { "store" } else { "load" },
+                    acc.pc,
+                    acc.len
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn preflight_rejects_wild_programs() {
+        // Wild jalr shapes all draw error-severity findings (wild-jump
+        // or misaligned-target), which is exactly why the campaign skips
+        // the pre-flight when the class is enabled.
+        let mp = MachinePoint::default();
+        let f = (4000..4016)
+            .find_map(|seed| preflight_case(seed, 150, "wild", &OpWeights::wild(), &mp).err())
+            .expect("some wild program fails the static pre-flight");
+        assert!(matches!(f.kind, FailureKind::Lint), "{:?}: {}", f.kind, f.report);
+    }
+
+    #[test]
+    fn smc_programs_pass_preflight_with_text_store_warnings() {
+        // Self-modifying stores are warnings, not errors: the program
+        // still halts cleanly, so the pre-flight must let it through
+        // while flagging every text-overlapping store.
+        use crate::analysis::{analyze_program, FindingKind};
+        let prog = generate(5001, 150, &OpWeights::smc(), 256);
+        let report = analyze_program(&prog, &fuzz_analysis_config());
+        assert!(report.is_clean(), "{}", report.render(30));
+        assert!(report.has_kind(FindingKind::StoreToText), "no store-to-text warning");
+    }
+
+    #[test]
+    fn analyze_preflight_campaign_is_clean() {
+        let cfg = FuzzConfig {
+            seeds: 6,
+            base_seed: 7000,
+            ops: 150,
+            analyze: true,
+            ..Default::default()
+        };
+        let summary = run_campaign(&cfg);
+        for f in &summary.failures {
+            eprintln!("seed {} ({:?}):\n{}\n{}", f.seed, f.kind, f.report, f.listing);
+        }
+        assert!(summary.ok(), "{} failures with the analyze pre-flight on", summary.failures.len());
     }
 }

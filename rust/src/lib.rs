@@ -28,6 +28,7 @@
 //! content-addressed result store with resumable checkpoints, and the
 //! `serve` line-delimited JSON API.
 
+pub mod analysis;
 pub mod arch;
 pub mod asm;
 pub mod baseline;

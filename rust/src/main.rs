@@ -22,7 +22,7 @@
 //!   list-workloads                      registry contents
 //!
 //! verification:
-//!   fuzz [--seeds N] [--base-seed S] [--ops M]
+//!   fuzz [--seeds N] [--base-seed S] [--ops M] [--analyze]
 //!        [--weights alu=..,branch=..,muldiv=..,mem=..,vec=..,vecmem=..,wildjump=..,smc=..]
 //!        [--sweep axis=a,b,c]... [--artifact-dir DIR] [--json]
 //!                                       differential fuzzing: random
@@ -31,11 +31,26 @@
 //!                                       default grid = paper machine +
 //!                                       stressed memory (mshrs=8,
 //!                                       prefetch, 2 channels); --sweep
-//!                                       uses the machine axes above; on
+//!                                       uses the machine axes above;
+//!                                       --analyze pre-flights every case
+//!                                       through the static analyzer; on
 //!                                       failure the program listing and
 //!                                       divergence report land in
 //!                                       --artifact-dir (default
 //!                                       fuzz-artifacts/)
+//!   analyze [<workload>] [--variant v] [--size N] [--vlen N]
+//!           [--listing FILE.s] [--json]
+//!                                       static guest-program analyzer
+//!                                       (DESIGN.md §12): CFG recovery +
+//!                                       dataflow lints over every
+//!                                       registry workload (or one, or an
+//!                                       assembled .s listing); also
+//!                                       cross-checks recovered block
+//!                                       boundaries against the reference
+//!                                       ISS block lowering; exits
+//!                                       non-zero on any error-severity
+//!                                       finding (CI captures --json as
+//!                                       BENCH_analysis.json)
 //!
 //! Every command accepts the `--jobs N` flag bounding its sweep worker
 //! pool (default: available parallelism).
@@ -220,6 +235,7 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
         }
         "run-workload" => run_workload(flags, json, jobs),
         "fuzz" => run_fuzz(flags, json, jobs),
+        "analyze" => run_analyze(flags, json),
         "sweep-grid" => run_sweep_grid(flags, json, jobs),
         "serve" => run_serve(flags, jobs),
         "list-workloads" => {
@@ -238,9 +254,9 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fuzz|sweep-grid|serve|fig3|mem-sweep|\
-     pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|discussion|all|\
-     run|disasm|fabric|config> [options]\n\
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|analyze|sweep-grid|serve|fig3|\
+     mem-sweep|pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|\
+     discussion|all|run|disasm|fabric|config> [options]\n\
      sweep axes for run-workload, fuzz and sweep-grid: variant, size, vlen, llc-block, mshrs, \
      prefetch, channels, issue-width; the --jobs N flag bounds every sweep worker pool\n\
      sweep-grid/serve run through the service queue: --store FILE.jsonl persists results and \
@@ -595,7 +611,15 @@ fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> 
         mp.validate()?;
     }
 
-    let cfg = FuzzConfig { seeds, base_seed, ops, weights, points: points.clone(), jobs };
+    let cfg = FuzzConfig {
+        seeds,
+        base_seed,
+        ops,
+        weights,
+        points: points.clone(),
+        jobs,
+        analyze: flags.has("--analyze"),
+    };
     let summary = fuzz::run_campaign(&cfg);
 
     let mut t = Table::new("fuzz: lockstep differential campaign", &["metric", "value"]);
@@ -667,6 +691,133 @@ fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> 
         summary.failures.len(),
         summary.cases
     ))
+}
+
+/// The `analyze` subcommand: the static guest-program analyzer
+/// (DESIGN.md §12). Runs CFG recovery + dataflow lints over every
+/// registry workload (or one named workload, or a single assembled
+/// `--listing FILE.s`), cross-checks the recovered block boundaries
+/// against the reference-ISS block lowering, and exits non-zero when
+/// any program draws an error-severity finding — which makes it a CI
+/// gate over the whole registry.
+fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
+    use simdsoftcore::analysis::{self, AnalysisConfig};
+    let vlen = flags.parse_usize("--vlen")?.unwrap_or(256);
+    MachinePoint { vlen, ..MachinePoint::default() }.validate()?;
+    let dram_floor = simdsoftcore::mem::config::MemConfig::paper_default().dram.size_bytes;
+
+    // Single-listing mode: assemble and analyze one .s file.
+    if let Some(path) = flags.opt_val("--listing")? {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let prog = simdsoftcore::asm::assemble_text(&src).map_err(|e| e.to_string())?;
+        let cfg = AnalysisConfig { vlen_bits: vlen, dram_bytes: dram_floor };
+        let report = analysis::analyze_program(&prog, &cfg);
+        if json {
+            let mut t = Table::new("analyze (static lints)", &[
+                "program", "VLEN", "blocks", "reachable", "instrs", "errors", "warnings",
+            ]);
+            t.row(&[
+                path.to_string(),
+                vlen.to_string(),
+                report.blocks.to_string(),
+                report.reachable_blocks.to_string(),
+                report.instrs.to_string(),
+                report.error_count().to_string(),
+                report.warning_count().to_string(),
+            ]);
+            println!("{}", t.render_json());
+        } else {
+            print!("{path}: {}", report.render(50));
+        }
+        return if report.is_clean() {
+            Ok(())
+        } else {
+            Err(format!("{path}: {} error-severity finding(s)", report.error_count()))
+        };
+    }
+
+    // Registry mode: every workload x variant, or one named workload.
+    const VALUE_FLAGS: &[&str] = &["--variant", "--size", "--vlen", "--listing", "--jobs"];
+    let filter = flags.positional(VALUE_FLAGS).first().copied();
+    let chosen_variant = match flags.opt_val("--variant")? {
+        Some(v) => Some(
+            Variant::parse(v).ok_or_else(|| format!("--variant must be scalar|vector, got '{v}'"))?,
+        ),
+        None => None,
+    };
+    if let Some(name) = filter {
+        if simdsoftcore::workloads::lookup(name).is_none() {
+            let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
+            return Err(format!("unknown workload '{name}'; known: {}", names.join(", ")));
+        }
+    }
+
+    let mut t = Table::new("analyze (static lints over the workload registry)", &[
+        "workload", "variant", "size", "VLEN", "blocks", "reachable", "instrs", "errors",
+        "warnings", "cfg=iss", "ms",
+    ]);
+    let mut total_errors = 0usize;
+    let mut inconsistent = 0usize;
+    let mut detail = String::new();
+    for entry in registry() {
+        if filter.is_some_and(|f| f != entry.name) {
+            continue;
+        }
+        let mut w = entry.make();
+        let size = flags.parse_usize("--size")?.unwrap_or_else(|| w.default_size());
+        let variants: Vec<Variant> = match chosen_variant {
+            Some(v) if w.variants().contains(&v) => vec![v],
+            Some(_) => Vec::new(), // workload lacks the requested variant
+            None => w.variants().to_vec(),
+        };
+        for variant in variants {
+            let sc = Scenario::new(variant, size).with_vlen(vlen);
+            let prog = w.build(&sc);
+            let (bufs, bytes_each) = w.buffers(&sc);
+            let dram = dram_floor.max(simdsoftcore::machine::dram_needed(bufs, bytes_each));
+            let cfg = AnalysisConfig { vlen_bits: vlen, dram_bytes: dram };
+            let t0 = std::time::Instant::now();
+            let report = analysis::analyze_program(&prog, &cfg);
+            let (_, graph) = analysis::recover_cfg(&prog, &cfg);
+            let consistency = analysis::check_block_consistency(&prog, &graph);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            total_errors += report.error_count();
+            if let Err(e) = &consistency {
+                inconsistent += 1;
+                t.note(format!("INCONSISTENT {}/{variant}: {e}", entry.name));
+            }
+            if report.error_count() > 0 || filter.is_some() {
+                use std::fmt::Write;
+                let _ = write!(detail, "== {}/{variant} ==\n{}", entry.name, report.render(10));
+            }
+            t.row(&[
+                entry.name.to_string(),
+                variant.to_string(),
+                size.to_string(),
+                vlen.to_string(),
+                report.blocks.to_string(),
+                report.reachable_blocks.to_string(),
+                report.instrs.to_string(),
+                report.error_count().to_string(),
+                report.warning_count().to_string(),
+                consistency.is_ok().to_string(),
+                format!("{ms:.1}"),
+            ]);
+        }
+    }
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+        print!("{detail}");
+    }
+    if total_errors > 0 || inconsistent > 0 {
+        return Err(format!(
+            "analysis found {total_errors} error-severity finding(s) and {inconsistent} \
+             static-vs-ISS block-boundary disagreement(s)"
+        ));
+    }
+    Ok(())
 }
 
 /// The `sweep-grid` subcommand: run a workload grid through the sweep

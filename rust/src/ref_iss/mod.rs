@@ -45,7 +45,7 @@
 //! lockstep driver ([`crate::cosim`]) injects the timed core's value so
 //! downstream dataflow still compares exactly.
 
-mod block;
+pub(crate) mod block;
 
 use crate::arch::ArchState;
 use crate::asm::Program;

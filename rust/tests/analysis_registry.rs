@@ -1,0 +1,46 @@
+//! Registry hygiene (DESIGN.md §12): every registered workload program
+//! passes the static analyzer with zero error-severity findings — at
+//! the default VLEN and a stressed one — and its recovered CFG block
+//! boundaries agree with the reference-ISS block lowering. A workload
+//! that trips this test has a real structural bug (or the analyzer has
+//! a false positive; both block the merge).
+
+use simdsoftcore::analysis::{
+    analyze_program, check_block_consistency, recover_cfg, AnalysisConfig,
+};
+use simdsoftcore::machine::dram_needed;
+use simdsoftcore::mem::config::MemConfig;
+use simdsoftcore::workloads::{registry, Scenario};
+
+#[test]
+fn registry_is_lint_clean_and_block_consistent_across_vlens() {
+    let dram_floor = MemConfig::paper_default().dram.size_bytes;
+    for vlen in [256usize, 512] {
+        for entry in registry() {
+            let mut w = entry.make();
+            for &variant in w.variants() {
+                let sc = Scenario::new(variant, w.default_size()).with_vlen(vlen);
+                let prog = w.build(&sc);
+                let (bufs, bytes_each) = w.buffers(&sc);
+                // Same DRAM sizing rule as Machine::run, so sp-relative
+                // and buffer addresses are judged against the capacity
+                // the workload actually runs with.
+                let cfg = AnalysisConfig {
+                    vlen_bits: vlen,
+                    dram_bytes: dram_floor.max(dram_needed(bufs, bytes_each)),
+                };
+                let report = analyze_program(&prog, &cfg);
+                assert!(
+                    report.is_clean(),
+                    "{}/{variant} @vlen {vlen} drew error findings:\n{}",
+                    entry.name,
+                    report.render(20)
+                );
+                let (_, graph) = recover_cfg(&prog, &cfg);
+                check_block_consistency(&prog, &graph).unwrap_or_else(|e| {
+                    panic!("{}/{variant} @vlen {vlen}: {e}", entry.name)
+                });
+            }
+        }
+    }
+}
