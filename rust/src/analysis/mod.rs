@@ -718,6 +718,21 @@ mod tests {
     }
 
     #[test]
+    fn access_wrapping_the_address_space_is_out_of_dram() {
+        // End-of-range rule at the 4 GiB boundary: a 4-byte load at
+        // 0xFFFF_FFFE must fold to end = 0x1_0000_0002 (u64, no wrap to
+        // a small in-DRAM address) and be flagged like the backends'
+        // MemWrap fault.
+        let r = analyze(|a| {
+            a.li(A0, 0xFFFF_FFFEu32 as i32 as i64);
+            a.emit(Instr::Lw { rd: A1, rs1: A0, offset: 0 });
+            a.halt();
+        });
+        assert!(r.has_kind(FindingKind::OutOfDramAccess), "{}", r.render(50));
+        assert_eq!(r.error_count(), 1);
+    }
+
+    #[test]
     fn sp_relative_store_at_top_of_dram_is_clean() {
         let r = analyze(|a| {
             a.li(A0, 7);

@@ -113,7 +113,7 @@ mod tests {
         a.li(A0, 42);
         a.halt();
         let p = a.assemble().unwrap();
-        core.load(&p);
+        core.load(&p).unwrap();
         core.run(100).unwrap();
         core.mem.flush_all();
         let arch: &dyn ArchState = &core;

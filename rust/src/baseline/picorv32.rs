@@ -73,7 +73,17 @@ impl PicoCore {
         }
     }
 
-    pub fn load(&mut self, prog: &Program) {
+    /// Load a program image, rejecting one that does not fit DRAM with
+    /// [`SimError::ImageFault`] (the same contract as `Core::load` and
+    /// `RefIss::load`) instead of panicking on the host-side copy.
+    pub fn load(&mut self, prog: &Program) -> Result<(), SimError> {
+        let size = self.cfg.dram_size;
+        for (base, len) in [(prog.text_base, prog.text.len() * 4), (prog.data_base, prog.data.len())]
+        {
+            if base as u64 + len as u64 > size as u64 {
+                return Err(SimError::ImageFault { addr: base, len, size });
+            }
+        }
         let mut text_bytes = Vec::with_capacity(prog.text.len() * 4);
         for w in &prog.text {
             text_bytes.extend_from_slice(&w.to_le_bytes());
@@ -89,6 +99,7 @@ impl PicoCore {
         self.instret = 0;
         self.halted = false;
         self.text.predecode(prog.text_base, &prog.text);
+        Ok(())
     }
 
     pub fn host_write(&mut self, addr: u32, data: &[u8]) {
@@ -134,10 +145,21 @@ impl PicoCore {
         Ok(())
     }
 
-    fn mem_read(&mut self, addr: u32, len: usize) -> Result<u32, SimError> {
-        if addr as usize + len > self.cfg.dram_size {
+    /// Shared fault classification with Core/RefIss: end-of-range in
+    /// u64, address-space wrap distinct from plain out-of-DRAM.
+    fn check_mem(&self, addr: u32, len: usize) -> Result<(), SimError> {
+        let end = addr as u64 + len as u64;
+        if end > 1 << 32 {
+            return Err(SimError::MemWrap { pc: self.pc, addr, len });
+        }
+        if end > self.cfg.dram_size as u64 {
             return Err(SimError::MemFault { pc: self.pc, addr, len, size: self.cfg.dram_size });
         }
+        Ok(())
+    }
+
+    fn mem_read(&mut self, addr: u32, len: usize) -> Result<u32, SimError> {
+        self.check_mem(addr, len)?;
         // One AXI-Lite transaction (word granularity).
         let (word, done) = self.dram.read_word_single(addr & !3, self.cfg.axi_latency, self.cycle);
         self.cycle = done;
@@ -146,9 +168,7 @@ impl PicoCore {
     }
 
     fn mem_write(&mut self, addr: u32, value: u32, len: usize) -> Result<(), SimError> {
-        if addr as usize + len > self.cfg.dram_size {
-            return Err(SimError::MemFault { pc: self.pc, addr, len, size: self.cfg.dram_size });
-        }
+        self.check_mem(addr, len)?;
         // Read-modify-write for sub-word stores (AXI-Lite with strobes
         // would avoid this; PicoRV32 uses strobes, so charge one
         // transaction only).
@@ -371,7 +391,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = PicoCore::new(PicoConfig::default());
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(1000).unwrap();
         assert_eq!(c.reg(A1), 15);
     }
@@ -403,10 +423,10 @@ mod tests {
         let p2 = mem.assemble().unwrap();
 
         let mut c1 = PicoCore::new(PicoConfig::default());
-        c1.load(&p1);
+        c1.load(&p1).unwrap();
         c1.run(10_000).unwrap();
         let mut c2 = PicoCore::new(PicoConfig::default());
-        c2.load(&p2);
+        c2.load(&p2).unwrap();
         c2.run(10_000).unwrap();
         // Per iteration: ALU loop = 2 fetches; mem loop = 4 fetches + 2
         // data transactions. Cycle ratio ≈ 3.
@@ -434,7 +454,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = PicoCore::new(PicoConfig::default());
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(1000).unwrap();
         assert_eq!(c.reg(A0), 101, "PicoRV32 executed a stale cached decode");
     }
@@ -446,8 +466,47 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = PicoCore::new(PicoConfig::default());
-        c.load(&p);
+        c.load(&p).unwrap();
         assert!(matches!(c.run(10), Err(SimError::Illegal { .. })));
+    }
+
+    #[test]
+    fn wrapping_access_raises_the_same_fault_as_the_other_backends() {
+        // A 4-byte load at 0xFFFF_FFFE crosses the top of the 32-bit
+        // address space: MemWrap, never a wrapped read of address zero.
+        let mut a = Asm::new();
+        a.li(A0, 0xFFFF_FFFEu32 as i32 as i64);
+        a.lw(A1, 0, A0);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = PicoCore::new(PicoConfig::default());
+        c.load(&p).unwrap();
+        let err = c.run(10).unwrap_err();
+        assert!(
+            matches!(err, SimError::MemWrap { addr: 0xFFFF_FFFE, len: 4, .. }),
+            "{err}"
+        );
+        // In-range-but-past-DRAM stays an ordinary MemFault.
+        let mut a = Asm::new();
+        a.li(A0, 0x7000_0000);
+        a.lw(A1, 0, A0);
+        a.halt();
+        let p = a.assemble().unwrap();
+        let mut c = PicoCore::new(PicoConfig::default());
+        c.load(&p).unwrap();
+        assert!(matches!(c.run(10), Err(SimError::MemFault { .. })));
+    }
+
+    #[test]
+    fn oversized_image_is_an_image_fault_not_a_panic() {
+        let mut a = Asm::new();
+        a.halt();
+        let mut p = a.assemble().unwrap();
+        p.data_base = 0xFFFF_FF00;
+        p.data = vec![0u8; 0x200];
+        let mut c = PicoCore::new(PicoConfig::default());
+        let err = c.load(&p).unwrap_err();
+        assert!(matches!(err, SimError::ImageFault { .. }), "{err}");
     }
 
     #[test]
@@ -456,7 +515,7 @@ mod tests {
         let n = 4096usize;
         let p = crate::workloads::memcpy::build_scalar(0x10000, 0x20000, n);
         let mut c = PicoCore::new(PicoConfig::default());
-        c.load(&p);
+        c.load(&p).unwrap();
         c.host_write(0x10000, &vec![0xA5u8; n]);
         c.run(100_000_000).unwrap();
         assert_eq!(c.dram_slice(0x20000, n), &vec![0xA5u8; n][..]);

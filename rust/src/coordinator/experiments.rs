@@ -344,7 +344,7 @@ pub fn fig6() -> String {
     let prog = a.assemble().expect("fig6 program");
 
     let mut core = Core::paper_default();
-    core.load(&prog);
+    core.load(&prog).expect("fig6 program fits default DRAM");
     // Trace the second loop iteration (caches warm — the paper's figure
     // shows the steady-state loop).
     core.trace = Trace::windowed(15, 35);

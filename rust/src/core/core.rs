@@ -37,6 +37,13 @@ use crate::simd::{standard_pool, UnitError, UnitInputs, UnitPool, VecMemOp, VecV
 pub enum SimError {
     Illegal { pc: u32, source: DecodeError },
     MemFault { pc: u32, addr: u32, len: usize, size: usize },
+    /// A multi-byte access whose end address (`addr + len`) overflows
+    /// the 32-bit address space (e.g. a 4-byte load at 0xFFFF_FFFE).
+    /// Architecturally distinct from [`SimError::MemFault`]: no DRAM
+    /// size can ever make such an access legal, and the address
+    /// computation must not wrap back over low memory. All three
+    /// backends (Core, RefIss, PicoCore) raise it identically.
+    MemWrap { pc: u32, addr: u32, len: usize },
     /// Instruction fetch outside DRAM (a wild `jalr`/branch target).
     FetchFault { pc: u32, size: usize },
     /// Instruction fetch from a non-word-aligned pc (reachable through
@@ -61,6 +68,10 @@ impl std::fmt::Display for SimError {
             SimError::MemFault { pc, addr, len, size } => write!(
                 f,
                 "memory fault at pc {pc:#010x}: access {addr:#010x}+{len} outside DRAM ({size:#x} bytes)"
+            ),
+            SimError::MemWrap { pc, addr, len } => write!(
+                f,
+                "memory fault at pc {pc:#010x}: access {addr:#010x}+{len} wraps the 32-bit address space"
             ),
             SimError::FetchFault { pc, size } => {
                 write!(f, "fetch fault: pc {pc:#010x} outside DRAM ({size:#x} bytes)")
@@ -263,7 +274,19 @@ impl Core {
     /// Load a program and reset architectural state. The stack pointer is
     /// initialised to the top of DRAM (16-byte aligned, capped at the
     /// 32-bit address-space limit — see [`crate::arch::sp_init`]).
-    pub fn load(&mut self, prog: &Program) {
+    ///
+    /// An image that does not fit the configured DRAM is rejected as
+    /// [`SimError::ImageFault`] (the same contract as [`crate::ref_iss::RefIss::load`])
+    /// instead of panicking on the host-side copy — ELF segments place
+    /// arbitrary user-controlled addresses on this path.
+    pub fn load(&mut self, prog: &Program) -> Result<(), SimError> {
+        let size = self.mem.dram_size();
+        for (base, len) in [(prog.text_base, prog.text.len() * 4), (prog.data_base, prog.data.len())]
+        {
+            if base as u64 + len as u64 > size as u64 {
+                return Err(SimError::ImageFault { addr: base, len, size });
+            }
+        }
         self.mem.load_program(prog);
         self.regs = [0; 32];
         self.vregs = [VecVal::zero(self.cfg.lanes()); 8];
@@ -281,6 +304,7 @@ impl Core {
         self.issue_used = 0;
         self.unit_issue_cycle = [u64::MAX; 4];
         self.pool.reset_all();
+        Ok(())
     }
 
     // ---- host accessors ---------------------------------------------------
@@ -351,7 +375,14 @@ impl Core {
 
     #[inline]
     fn check_mem(&self, addr: u32, len: usize) -> Result<(), SimError> {
-        if (addr as usize).checked_add(len).is_none_or(|end| end > self.mem.dram_size()) {
+        // End-of-range rule in u64 (not usize, whose width is
+        // host-dependent): first classify accesses whose end address
+        // overflows the 32-bit space, then plain out-of-DRAM ones.
+        let end = addr as u64 + len as u64;
+        if end > 1 << 32 {
+            return Err(SimError::MemWrap { pc: self.pc, addr, len });
+        }
+        if end > self.mem.dram_size() as u64 {
             return Err(SimError::MemFault {
                 pc: self.pc,
                 addr,
@@ -958,7 +989,7 @@ mod tests {
         build(&mut a);
         let p = a.assemble().unwrap();
         let mut core = Core::paper_default();
-        core.load(&p);
+        core.load(&p).unwrap();
         core.run(1_000_000).unwrap();
         core
     }
@@ -1011,7 +1042,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut warm = Core::paper_default();
-        warm.load(&p);
+        warm.load(&p).unwrap();
         warm.run(100).unwrap();
         assert_eq!(warm.reg(A0), 8);
         // Warm run to measure the hit-latency path: run again after caches
@@ -1051,7 +1082,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         assert_eq!(c.reg(A2) as i32, -2);
         assert_eq!(c.reg(A3), 0xFE);
@@ -1146,7 +1177,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         c.mem.flush_all();
         let bytes = c.mem.dram_slice(p.sym("out"), 32);
@@ -1170,7 +1201,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         c.mem.flush_all();
         assert_eq!(c.mem.dram_slice(p.sym("out"), 32), &[0u8; 32]);
@@ -1191,7 +1222,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         assert_eq!(c.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
         assert!(
@@ -1222,7 +1253,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         // The two sorts overlap (Fig. 6: the second sort issues ~2 cycles
         // after the first, waiting on its own load — far less than the
@@ -1269,7 +1300,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         let ctr = c.counters();
         assert!(ctr.mem_bw_stall_cycles > 0, "second load waited on the blocking port");
@@ -1295,7 +1326,7 @@ mod tests {
         let p = a.assemble().unwrap();
 
         let mut blocking = Core::paper_default();
-        blocking.load(&p);
+        blocking.load(&p).unwrap();
         let slow = blocking.run(100).unwrap().cycles;
 
         let mut mem = MemConfig::paper_default();
@@ -1303,7 +1334,7 @@ mod tests {
         mem.llc_mshrs = 4;
         mem.dram.channels = 2;
         let mut nb = Core::new(CoreConfig::paper_default(), mem);
-        nb.load(&p);
+        nb.load(&p).unwrap();
         let fast = nb.run(100).unwrap().cycles;
         assert!(fast < slow, "overlapped misses must be faster ({fast} vs {slow})");
         assert_eq!(nb.counters().mem_bw_stall_cycles, 0, "non-blocking port never holds data");
@@ -1316,7 +1347,7 @@ mod tests {
         a.j(l);
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         assert!(matches!(c.run(1000), Err(SimError::Watchdog(1000))));
     }
 
@@ -1326,7 +1357,7 @@ mod tests {
         a.ebreak();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         assert!(matches!(c.run(10), Err(SimError::Break(_))));
     }
 
@@ -1338,7 +1369,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         assert!(matches!(c.run(10), Err(SimError::MemFault { .. })));
     }
 
@@ -1352,7 +1383,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         match c.run(10) {
             Err(SimError::FetchFault { pc, .. }) => assert_eq!(pc, 0xF000_0000),
             other => panic!("expected FetchFault, got {other:?}"),
@@ -1371,7 +1402,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         match c.run(10) {
             Err(SimError::FetchMisaligned { pc }) => assert_eq!(pc % 4, 2),
             other => panic!("expected FetchMisaligned, got {other:?}"),
@@ -1391,7 +1422,7 @@ mod tests {
         // assembler's label API only produces aligned targets).
         p.text[0] = encode(&Instr::Beq { rs1: ZERO, rs2: ZERO, offset: 6 }).unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         assert!(matches!(c.run(10), Err(SimError::FetchMisaligned { .. })));
     }
 
@@ -1411,7 +1442,7 @@ mod tests {
             let mut cfg = CoreConfig::paper_default();
             cfg.issue_width = width;
             let mut c = Core::new(cfg, MemConfig::paper_default());
-            c.load(&p);
+            c.load(&p).unwrap();
             c.run(10_000).unwrap();
             c
         };
@@ -1444,10 +1475,10 @@ mod tests {
         let mut cfg = CoreConfig::paper_default();
         cfg.issue_width = 2;
         let mut dual = Core::new(cfg, MemConfig::paper_default());
-        dual.load(&p);
+        dual.load(&p).unwrap();
         dual.run(10_000).unwrap();
         let mut single = Core::paper_default();
-        single.load(&p);
+        single.load(&p).unwrap();
         single.run(10_000).unwrap();
         assert_eq!(dual.reg(A0), 100);
         assert_eq!(dual.counters().dual_issue_pairs, 0, "a RAW chain never pairs");
@@ -1467,7 +1498,7 @@ mod tests {
         let mut cfg = CoreConfig::paper_default();
         cfg.issue_width = 4;
         let mut c = Core::new(cfg, MemConfig::paper_default());
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         assert_eq!(c.reg(A2), 14);
         // The div issued alone: its cycle wasted width-1 = 3 slots.
@@ -1488,7 +1519,7 @@ mod tests {
         let mut cfg = CoreConfig::paper_default();
         cfg.issue_width = 2;
         let mut c = Core::new(cfg, MemConfig::paper_default());
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(1000).unwrap();
         assert_eq!(c.reg(A1), 55);
     }
@@ -1506,7 +1537,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         c.run(100).unwrap();
         assert_eq!(c.vreg(V2).to_i32s(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
         assert_eq!(c.vreg(V3).to_i32s(), vec![9, 10, 11, 12, 13, 14, 15, 16]);
@@ -1522,7 +1553,7 @@ mod tests {
         a.halt();
         let p = a.assemble().unwrap();
         let mut c = Core::paper_default();
-        c.load(&p);
+        c.load(&p).unwrap();
         let r = c.run(100).unwrap();
         assert_eq!(r.instret, 51);
         assert!(r.ipc() > 0.5, "mostly 1 IPC, got {}", r.ipc());

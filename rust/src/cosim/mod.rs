@@ -92,6 +92,9 @@ fn error_key(e: &SimError) -> String {
         SimError::MemFault { pc, addr, len, .. } => {
             format!("memfault@{pc:#010x}:{addr:#010x}+{len}")
         }
+        SimError::MemWrap { pc, addr, len } => {
+            format!("memwrap@{pc:#010x}:{addr:#010x}+{len}")
+        }
         SimError::FetchFault { pc, .. } => format!("fetchfault@{pc:#010x}"),
         SimError::FetchMisaligned { pc } => format!("fetchmisaligned@{pc:#010x}"),
         SimError::Unit { pc, source } => format!("unit@{pc:#010x}:{source}"),
@@ -308,7 +311,7 @@ mod tests {
         let mut mem = crate::mem::MemConfig::paper_default();
         mem.dram.size_bytes = MEM;
         let mut core = Core::new(crate::core::CoreConfig::paper_default(), mem);
-        core.load(&p);
+        core.load(&p).unwrap();
         let mut iss = RefIss::paper_default(core.mem.dram_size());
         iss.load(&p).unwrap();
         (core, iss)
@@ -401,6 +404,71 @@ mod tests {
         });
         let r = run_lockstep(&mut core, &mut iss, 100).expect("identical faults agree");
         assert!(matches!(r.outcome, LockstepOutcome::Faulted(_)), "{:?}", r.outcome);
+    }
+
+    #[test]
+    fn wrapping_access_faults_identically_on_both_sides() {
+        // A 4-byte load at 0xFFFF_FFFE crosses the top of the 32-bit
+        // address space; both backends must classify it as a wrap fault
+        // (not an out-of-DRAM fault, and never a wrapped access to
+        // address zero) with the same key.
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, 0xFFFF_FFFEu32 as i32 as i64);
+            a.lw(A1, 0, A0);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 100).expect("identical wrap faults agree");
+        match r.outcome {
+            LockstepOutcome::Faulted(key) => {
+                assert!(key.starts_with("memwrap@"), "{key}");
+                assert!(key.ends_with(":0xfffffffe+4"), "{key}");
+            }
+            other => panic!("expected a wrap fault, got {other:?}"),
+        }
+        // Same for a store: a half-word at 0xFFFF_FFFF wraps.
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, u32::MAX as i32 as i64);
+            a.li(A1, 1);
+            a.sh(A1, 0, A0);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 100).expect("identical wrap faults agree");
+        match r.outcome {
+            LockstepOutcome::Faulted(key) => {
+                assert!(key.starts_with("memwrap@"), "{key}");
+                assert!(key.ends_with(":0xffffffff+2"), "{key}");
+            }
+            other => panic!("expected a wrap fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn access_ending_exactly_at_the_dram_top_is_legal() {
+        // The last word of DRAM is addressable (end == size is in
+        // bounds); one byte further is an ordinary out-of-DRAM fault.
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, (MEM - 4) as i64);
+            a.li(A1, 77);
+            a.sw(A1, 0, A0);
+            a.lw(A2, 0, A0);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 100).expect("no divergence");
+        assert_eq!(r.outcome, LockstepOutcome::Halted);
+        assert_eq!(core.reg(A2), 77);
+
+        let (mut core, mut iss) = pair(|a| {
+            a.li(A0, (MEM - 3) as i64);
+            a.lw(A2, 0, A0);
+            a.halt();
+        });
+        let r = run_lockstep(&mut core, &mut iss, 100).expect("identical faults agree");
+        match r.outcome {
+            LockstepOutcome::Faulted(key) => {
+                assert!(key.starts_with("memfault@"), "{key}");
+            }
+            other => panic!("expected an out-of-DRAM fault, got {other:?}"),
+        }
     }
 
     #[test]

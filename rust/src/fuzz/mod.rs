@@ -645,7 +645,7 @@ pub fn run_case(
     };
     let mut core = mp.machine().dram_bytes(FUZZ_DRAM_BYTES).build();
     let mut iss = RefIss::new(mp.vlen, core.mem.dram_size());
-    core.load(&prog);
+    core.load(&prog).expect("fuzz image fits the fuzz DRAM");
     iss.load(&prog).expect("fuzz image fits the fuzz DRAM");
     match run_lockstep(&mut core, &mut iss, max_instrs_for(ops)) {
         Ok(r) => match r.outcome {

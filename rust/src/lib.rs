@@ -37,6 +37,7 @@ pub mod core;
 pub mod cosim;
 pub mod fuzz;
 pub mod isa;
+pub mod loader;
 pub mod machine;
 pub mod mem;
 pub mod ref_iss;

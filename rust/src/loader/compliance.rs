@@ -1,0 +1,144 @@
+//! Compliance-suite runner: every checked-in rv32ui/rv32um riscv-tests
+//! ELF, run on the timed core *and* the reference ISS, with the static
+//! analyzer as a pre-flight.
+//!
+//! The suite's contract is differential: a binary's HTIF pass/fail must
+//! be identical on both backends. A mismatch means the two execution
+//! engines disagree about RV32IM architecture — exactly the class of
+//! bug the lockstep fuzzer hunts, but pinned to a named, replayable
+//! compliance test. The binaries live in `rust/tests/compliance/` and
+//! are generated (and independently self-verified) by the checked-in
+//! `gen_compliance.py`, so CI needs no cross-compilation toolchain.
+
+use std::path::{Path, PathBuf};
+
+use super::workload::ElfWorkload;
+use crate::analysis::{self, AnalysisConfig};
+use crate::machine::{Backend, Machine};
+use crate::workloads::workload::{Scenario, Variant, Workload};
+
+/// One backend's result for one binary.
+#[derive(Debug, Clone)]
+pub struct BackendOutcome {
+    /// HTIF pass (`verified == Some(true)`); simulation errors count as
+    /// a fail with the error text in `detail`.
+    pub pass: bool,
+    /// "pass", the HTIF failure message, or the simulation error.
+    pub detail: String,
+    pub instret: u64,
+}
+
+/// One compliance binary's row: both backends plus the analyzer.
+#[derive(Debug, Clone)]
+pub struct ComplianceRow {
+    pub name: String,
+    pub core: BackendOutcome,
+    pub iss: BackendOutcome,
+    /// Error-severity findings from the static analyzer (warnings are
+    /// allowed — compliance programs legitimately read BSS, for
+    /// example).
+    pub analyzer_errors: usize,
+}
+
+impl ComplianceRow {
+    /// Whether the two backends disagree on pass/fail — the property
+    /// the suite exists to check.
+    pub fn mismatch(&self) -> bool {
+        self.core.pass != self.iss.pass
+    }
+}
+
+/// The whole suite's results.
+#[derive(Debug, Clone, Default)]
+pub struct ComplianceReport {
+    pub rows: Vec<ComplianceRow>,
+}
+
+impl ComplianceReport {
+    pub fn mismatches(&self) -> impl Iterator<Item = &ComplianceRow> {
+        self.rows.iter().filter(|r| r.mismatch())
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &ComplianceRow> {
+        self.rows.iter().filter(|r| !r.core.pass || !r.iss.pass)
+    }
+
+    pub fn all_passed(&self) -> bool {
+        !self.rows.is_empty() && self.rows.iter().all(|r| r.core.pass && r.iss.pass)
+    }
+}
+
+fn run_backend(path: &Path, backend: Backend) -> BackendOutcome {
+    let mut w = match ElfWorkload::from_file(path) {
+        Ok(w) => w,
+        Err(e) => {
+            return BackendOutcome { pass: false, detail: format!("load: {e}"), instret: 0 }
+        }
+    };
+    let sc = Scenario::new(Variant::Scalar, w.default_size());
+    match Machine::paper_default().backend(backend).run(&mut w, &sc) {
+        Ok(r) => BackendOutcome {
+            pass: r.verified == Some(true),
+            detail: r.verify_error.unwrap_or_else(|| "pass".into()),
+            instret: r.throughput.instret,
+        },
+        Err(e) => BackendOutcome { pass: false, detail: e.to_string(), instret: 0 },
+    }
+}
+
+/// Run one compliance binary on both backends and the analyzer.
+pub fn run_elf(path: &Path) -> ComplianceRow {
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("elf")
+        .to_string();
+    let analyzer_errors = match ElfWorkload::from_file(path) {
+        Ok(w) => {
+            let cfg = AnalysisConfig::default();
+            analysis::analyze_program(w.program(), &cfg).error_count()
+        }
+        Err(_) => 0, // the load failure already surfaces per backend
+    };
+    ComplianceRow {
+        name,
+        core: run_backend(path, Backend::Timed),
+        iss: run_backend(path, Backend::RefIss),
+        analyzer_errors,
+    }
+}
+
+/// Every `*.elf` under `dir`, in name order.
+pub fn suite_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "elf"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no .elf files under {}", dir.display()));
+    }
+    Ok(files)
+}
+
+/// Run the full suite under `dir`.
+pub fn run_suite(dir: &Path) -> Result<ComplianceReport, String> {
+    let mut report = ComplianceReport::default();
+    for path in suite_files(dir)? {
+        report.rows.push(run_elf(&path));
+    }
+    Ok(report)
+}
+
+/// Default on-disk location of the checked-in suite, relative to the
+/// repository layout (`rust/tests/compliance`). The CLI resolves it
+/// from the working directory; tests use `CARGO_MANIFEST_DIR`.
+pub fn default_dir() -> PathBuf {
+    let in_rust = PathBuf::from("tests/compliance");
+    if in_rust.is_dir() {
+        in_rust
+    } else {
+        PathBuf::from("rust/tests/compliance")
+    }
+}

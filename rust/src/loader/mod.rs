@@ -1,0 +1,573 @@
+//! RV32 ELF loader (DESIGN.md §13): parse little-endian ELF32
+//! executables, materialise their `PT_LOAD` segments (including BSS
+//! zero-fill), and lower the result to the repository's [`Program`]
+//! image so every execution backend — the timed [`crate::core::Core`],
+//! the reference ISS, the PicoRV32 baseline — and the static analyzer
+//! accept ELF binaries exactly like builder-assembled listings.
+//!
+//! The loader is dependency-free by design: it parses only what the
+//! simulator needs (ELF header, program headers, and the symbol table
+//! for the riscv-tests `tohost`/`fromhost` HTIF convention) and rejects
+//! everything it cannot represent with a typed [`LoaderError`] instead
+//! of a panic. [`write::write_elf`] is the inverse — a deterministic
+//! writer used by the round-trip tests and mirrored by the checked-in
+//! compliance-suite generator.
+
+pub mod compliance;
+pub mod workload;
+pub mod write;
+
+pub use workload::{ElfWorkload, HtifOutcome};
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::asm::Program;
+
+/// `e_machine` for RISC-V.
+pub const EM_RISCV: u16 = 243;
+/// `e_type` for an executable.
+pub const ET_EXEC: u16 = 2;
+/// `p_type` of a loadable segment.
+pub const PT_LOAD: u32 = 1;
+/// Segment permission bits.
+pub const PF_X: u32 = 1;
+pub const PF_W: u32 = 2;
+pub const PF_R: u32 = 4;
+/// `sh_type` of a symbol table.
+const SHT_SYMTAB: u32 = 2;
+
+/// Cap on one segment's in-memory size. The address-space check already
+/// bounds `memsz` below 4 GiB; this keeps a hostile header from making
+/// the loader allocate gigabytes before the simulator would reject the
+/// image anyway (simulated DRAM tops out well below this).
+pub const MAX_SEGMENT_BYTES: u64 = 256 * 1024 * 1024;
+
+/// Everything the loader can reject. Each variant corresponds to one
+/// malformation class in the rejection corpus (`tests/loader_elf.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LoaderError {
+    /// File shorter than the 52-byte ELF32 header.
+    TruncatedHeader { len: usize },
+    /// First four bytes are not `\x7fELF`.
+    BadMagic([u8; 4]),
+    /// `EI_CLASS` is not ELFCLASS32.
+    NotElf32(u8),
+    /// `EI_DATA` is not little-endian.
+    NotLittleEndian(u8),
+    /// `e_type` is not `ET_EXEC` (relocatables/shared objects carry no
+    /// load image for a flat simulator).
+    NotExecutable(u16),
+    /// `e_machine` is not RISC-V.
+    WrongMachine(u16),
+    /// `e_phentsize` disagrees with the 32-byte ELF32 program header.
+    BadPhentSize(u16),
+    /// The program-header table runs past the end of the file.
+    TruncatedProgramHeaders { index: usize },
+    /// A `PT_LOAD` with `p_memsz == 0` loads nothing; the linkers this
+    /// loader supports never emit one, so it flags a corrupt image.
+    ZeroSizedSegment { index: usize },
+    /// `p_filesz > p_memsz` is unrepresentable (file bytes past the
+    /// segment's memory image).
+    FileszExceedsMemsz { index: usize, filesz: u32, memsz: u32 },
+    /// Segment file bytes run past the end of the file.
+    TruncatedSegment { index: usize, offset: u32, filesz: u32, len: usize },
+    /// `p_vaddr + p_memsz` crosses the top of the 32-bit address space.
+    SegmentOutOfAddressSpace { index: usize, vaddr: u32, memsz: u32 },
+    /// Segment larger than [`MAX_SEGMENT_BYTES`].
+    SegmentTooLarge { index: usize, memsz: u32 },
+    /// Two `PT_LOAD` segments overlap in memory.
+    OverlappingSegments { first: u32, second: u32 },
+    /// No executable (`PF_X`) segment in the image.
+    NoTextSegment,
+    /// `e_entry` is not word-aligned.
+    MisalignedEntry { entry: u32 },
+    /// The executable segment does not start on a word boundary, so it
+    /// cannot become the word-granular text image.
+    MisalignedTextSegment { vaddr: u32 },
+    /// `e_entry` does not fall inside any executable segment.
+    EntryOutsideText { entry: u32 },
+    /// Non-text segments span more than [`MAX_SEGMENT_BYTES`] once
+    /// merged into the single data blob of a [`Program`].
+    DataSpanTooLarge { span: u64 },
+    /// The riscv-tests HTIF convention requires a `tohost` symbol
+    /// (raised by [`ElfWorkload`], not by segment loading).
+    MissingTohost,
+    /// Reading the file failed.
+    Io { path: String, msg: String },
+}
+
+impl fmt::Display for LoaderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use LoaderError::*;
+        match self {
+            TruncatedHeader { len } => {
+                write!(f, "file is {len} bytes, shorter than the 52-byte ELF32 header")
+            }
+            BadMagic(m) => write!(f, "bad ELF magic {m:02x?}"),
+            NotElf32(c) => write!(f, "EI_CLASS {c} is not ELFCLASS32"),
+            NotLittleEndian(d) => write!(f, "EI_DATA {d} is not little-endian"),
+            NotExecutable(t) => write!(f, "e_type {t} is not ET_EXEC"),
+            WrongMachine(m) => write!(f, "e_machine {m} is not RISC-V ({EM_RISCV})"),
+            BadPhentSize(s) => write!(f, "e_phentsize {s} is not the ELF32 value 32"),
+            TruncatedProgramHeaders { index } => {
+                write!(f, "program header {index} runs past the end of the file")
+            }
+            ZeroSizedSegment { index } => write!(f, "PT_LOAD segment {index} has p_memsz == 0"),
+            FileszExceedsMemsz { index, filesz, memsz } => write!(
+                f,
+                "segment {index} has p_filesz {filesz:#x} > p_memsz {memsz:#x}"
+            ),
+            TruncatedSegment { index, offset, filesz, len } => write!(
+                f,
+                "segment {index} claims bytes [{offset:#x}, {:#x}) but the file is {len} bytes",
+                *offset as u64 + *filesz as u64
+            ),
+            SegmentOutOfAddressSpace { index, vaddr, memsz } => write!(
+                f,
+                "segment {index} at {vaddr:#010x}+{memsz:#x} crosses the 32-bit address space"
+            ),
+            SegmentTooLarge { index, memsz } => write!(
+                f,
+                "segment {index} p_memsz {memsz:#x} exceeds the {MAX_SEGMENT_BYTES:#x}-byte cap"
+            ),
+            OverlappingSegments { first, second } => write!(
+                f,
+                "PT_LOAD segments at {first:#010x} and {second:#010x} overlap in memory"
+            ),
+            NoTextSegment => write!(f, "no executable (PF_X) PT_LOAD segment"),
+            MisalignedEntry { entry } => {
+                write!(f, "entry point {entry:#010x} is not word-aligned")
+            }
+            MisalignedTextSegment { vaddr } => {
+                write!(f, "executable segment at {vaddr:#010x} is not word-aligned")
+            }
+            EntryOutsideText { entry } => write!(
+                f,
+                "entry point {entry:#010x} falls outside every executable segment"
+            ),
+            DataSpanTooLarge { span } => write!(
+                f,
+                "data segments span {span:#x} bytes, over the {MAX_SEGMENT_BYTES:#x}-byte cap"
+            ),
+            MissingTohost => write!(
+                f,
+                "no `tohost` symbol — the riscv-tests HTIF convention needs one to report \
+                 pass/fail"
+            ),
+            Io { path, msg } => write!(f, "reading {path}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LoaderError {}
+
+/// One materialised `PT_LOAD` segment: `data` is `p_memsz` bytes long —
+/// the file bytes followed by the BSS zero fill.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub vaddr: u32,
+    pub flags: u32,
+    pub filesz: usize,
+    pub data: Vec<u8>,
+}
+
+impl Segment {
+    pub fn executable(&self) -> bool {
+        self.flags & PF_X != 0
+    }
+
+    /// Address one past the end of the segment (u64: a segment may end
+    /// exactly at the 4 GiB boundary).
+    pub fn end(&self) -> u64 {
+        self.vaddr as u64 + self.data.len() as u64
+    }
+
+    fn contains(&self, addr: u32) -> bool {
+        self.vaddr <= addr && (addr as u64) < self.end()
+    }
+}
+
+/// A parsed ELF32 executable: entry point, loadable segments sorted by
+/// address, and the symbol table (best-effort — an image without
+/// sections simply has no symbols).
+#[derive(Debug, Clone)]
+pub struct LoadedElf {
+    pub entry: u32,
+    pub segments: Vec<Segment>,
+    pub symbols: HashMap<String, u32>,
+}
+
+fn u16_at(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([b[off], b[off + 1]])
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an ELF32 image into its loadable segments and symbols.
+pub fn parse_elf(bytes: &[u8]) -> Result<LoadedElf, LoaderError> {
+    if bytes.len() < 52 {
+        return Err(LoaderError::TruncatedHeader { len: bytes.len() });
+    }
+    let magic = [bytes[0], bytes[1], bytes[2], bytes[3]];
+    if magic != [0x7f, b'E', b'L', b'F'] {
+        return Err(LoaderError::BadMagic(magic));
+    }
+    if bytes[4] != 1 {
+        return Err(LoaderError::NotElf32(bytes[4]));
+    }
+    if bytes[5] != 1 {
+        return Err(LoaderError::NotLittleEndian(bytes[5]));
+    }
+    let e_type = u16_at(bytes, 16);
+    if e_type != ET_EXEC {
+        return Err(LoaderError::NotExecutable(e_type));
+    }
+    let e_machine = u16_at(bytes, 18);
+    if e_machine != EM_RISCV {
+        return Err(LoaderError::WrongMachine(e_machine));
+    }
+    let entry = u32_at(bytes, 24);
+    let phoff = u32_at(bytes, 28) as u64;
+    let phentsize = u16_at(bytes, 42);
+    let phnum = u16_at(bytes, 44) as usize;
+    if phnum > 0 && phentsize != 32 {
+        return Err(LoaderError::BadPhentSize(phentsize));
+    }
+
+    let mut segments: Vec<Segment> = Vec::new();
+    for i in 0..phnum {
+        let off = phoff + (i as u64) * 32;
+        if off + 32 > bytes.len() as u64 {
+            return Err(LoaderError::TruncatedProgramHeaders { index: i });
+        }
+        let off = off as usize;
+        let p_type = u32_at(bytes, off);
+        if p_type != PT_LOAD {
+            continue;
+        }
+        let p_offset = u32_at(bytes, off + 4);
+        let p_vaddr = u32_at(bytes, off + 8);
+        let p_filesz = u32_at(bytes, off + 16);
+        let p_memsz = u32_at(bytes, off + 20);
+        let p_flags = u32_at(bytes, off + 24);
+        if p_memsz == 0 {
+            return Err(LoaderError::ZeroSizedSegment { index: i });
+        }
+        if p_filesz > p_memsz {
+            return Err(LoaderError::FileszExceedsMemsz {
+                index: i,
+                filesz: p_filesz,
+                memsz: p_memsz,
+            });
+        }
+        // End-of-range rules in u64: both the file range and the memory
+        // range are checked against wraparound, matching the
+        // simulator's MemWrap contract at the 4 GiB boundary.
+        if p_vaddr as u64 + p_memsz as u64 > 1 << 32 {
+            return Err(LoaderError::SegmentOutOfAddressSpace {
+                index: i,
+                vaddr: p_vaddr,
+                memsz: p_memsz,
+            });
+        }
+        if p_memsz as u64 > MAX_SEGMENT_BYTES {
+            return Err(LoaderError::SegmentTooLarge { index: i, memsz: p_memsz });
+        }
+        if p_offset as u64 + p_filesz as u64 > bytes.len() as u64 {
+            return Err(LoaderError::TruncatedSegment {
+                index: i,
+                offset: p_offset,
+                filesz: p_filesz,
+                len: bytes.len(),
+            });
+        }
+        let mut data = vec![0u8; p_memsz as usize];
+        let file = &bytes[p_offset as usize..(p_offset + p_filesz) as usize];
+        data[..file.len()].copy_from_slice(file);
+        segments.push(Segment {
+            vaddr: p_vaddr,
+            flags: p_flags,
+            filesz: p_filesz as usize,
+            data,
+        });
+    }
+    segments.sort_by_key(|s| s.vaddr);
+    for pair in segments.windows(2) {
+        if pair[0].end() > pair[1].vaddr as u64 {
+            return Err(LoaderError::OverlappingSegments {
+                first: pair[0].vaddr,
+                second: pair[1].vaddr,
+            });
+        }
+    }
+
+    Ok(LoadedElf { entry, segments, symbols: parse_symbols(bytes) })
+}
+
+/// Best-effort symbol-table read: `.symtab` entries resolved through
+/// the string table `sh_link` names. Malformed or absent section
+/// headers yield an empty map rather than a load failure — segments
+/// alone are enough to *run* an image; symbols are only needed for the
+/// HTIF convention, which reports their absence separately.
+fn parse_symbols(bytes: &[u8]) -> HashMap<String, u32> {
+    let mut symbols = HashMap::new();
+    let shoff = u32_at(bytes, 32) as u64;
+    let shentsize = u16_at(bytes, 46) as u64;
+    let shnum = u16_at(bytes, 48) as u64;
+    if shoff == 0 || shentsize != 40 {
+        return symbols;
+    }
+    let section = |idx: u64| -> Option<(u32, u32, u32, u32, u32)> {
+        let off = shoff.checked_add(idx.checked_mul(40)?)?;
+        if off + 40 > bytes.len() as u64 {
+            return None;
+        }
+        let off = off as usize;
+        // (sh_type, sh_offset, sh_size, sh_link, sh_entsize)
+        Some((
+            u32_at(bytes, off + 4),
+            u32_at(bytes, off + 16),
+            u32_at(bytes, off + 20),
+            u32_at(bytes, off + 24),
+            u32_at(bytes, off + 36),
+        ))
+    };
+    for idx in 0..shnum {
+        let Some((sh_type, sym_off, sym_size, sh_link, entsize)) = section(idx) else {
+            continue;
+        };
+        if sh_type != SHT_SYMTAB || entsize != 16 {
+            continue;
+        }
+        let Some((_, str_off, str_size, _, _)) = section(sh_link as u64) else { continue };
+        if str_off as u64 + str_size as u64 > bytes.len() as u64 {
+            continue;
+        }
+        let strtab = &bytes[str_off as usize..][..str_size as usize];
+        let count = (sym_size / 16) as u64;
+        for k in 0..count {
+            let off = sym_off as u64 + k * 16;
+            if off + 16 > bytes.len() as u64 {
+                break;
+            }
+            let off = off as usize;
+            let st_name = u32_at(bytes, off) as usize;
+            let st_value = u32_at(bytes, off + 4);
+            let Some(tail) = strtab.get(st_name..) else { continue };
+            let name_len = tail.iter().position(|&b| b == 0).unwrap_or(tail.len());
+            if name_len == 0 {
+                continue;
+            }
+            if let Ok(name) = std::str::from_utf8(&tail[..name_len]) {
+                symbols.insert(name.to_string(), st_value);
+            }
+        }
+    }
+    symbols
+}
+
+/// Lower a parsed ELF to the simulator's [`Program`] image: the
+/// executable segment containing the entry point becomes the
+/// word-granular text; every other `PT_LOAD` is merged (zero-gapped)
+/// into the single data blob.
+pub fn to_program(elf: &LoadedElf) -> Result<Program, LoaderError> {
+    if elf.entry % 4 != 0 {
+        return Err(LoaderError::MisalignedEntry { entry: elf.entry });
+    }
+    if !elf.segments.iter().any(Segment::executable) {
+        return Err(LoaderError::NoTextSegment);
+    }
+    let text_idx = elf
+        .segments
+        .iter()
+        .position(|s| s.executable() && s.contains(elf.entry))
+        .ok_or(LoaderError::EntryOutsideText { entry: elf.entry })?;
+    let text_seg = &elf.segments[text_idx];
+    if text_seg.vaddr % 4 != 0 {
+        return Err(LoaderError::MisalignedTextSegment { vaddr: text_seg.vaddr });
+    }
+    let mut text = Vec::with_capacity(text_seg.data.len().div_ceil(4));
+    for chunk in text_seg.data.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        text.push(u32::from_le_bytes(w));
+    }
+
+    let rest: Vec<&Segment> = elf
+        .segments
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != text_idx)
+        .map(|(_, s)| s)
+        .collect();
+    let (data_base, data) = if rest.is_empty() {
+        // No data segments: an empty blob placed right after the text so
+        // image-size accounting stays exact (the cast only wraps for a
+        // text segment ending exactly at 4 GiB, where an empty blob's
+        // base is irrelevant).
+        (text_seg.end() as u32, Vec::new())
+    } else {
+        let base = rest.iter().map(|s| s.vaddr).min().expect("non-empty");
+        let end = rest.iter().map(|s| s.end()).max().expect("non-empty");
+        let span = end - base as u64;
+        if span > MAX_SEGMENT_BYTES {
+            return Err(LoaderError::DataSpanTooLarge { span });
+        }
+        let mut blob = vec![0u8; span as usize];
+        for s in &rest {
+            let at = (s.vaddr - base) as usize;
+            blob[at..at + s.data.len()].copy_from_slice(&s.data);
+        }
+        (base, blob)
+    };
+
+    Ok(Program {
+        text_base: text_seg.vaddr,
+        text,
+        data_base,
+        data,
+        symbols: elf.symbols.clone(),
+        entry: elf.entry,
+    })
+}
+
+/// Parse an ELF image and lower it to a [`Program`] in one call.
+pub fn load_program(bytes: &[u8]) -> Result<Program, LoaderError> {
+    to_program(&parse_elf(bytes)?)
+}
+
+/// [`load_program`] from a file path.
+pub fn load_file(path: &std::path::Path) -> Result<Program, LoaderError> {
+    let bytes = std::fs::read(path).map_err(|e| LoaderError::Io {
+        path: path.display().to_string(),
+        msg: e.to_string(),
+    })?;
+    load_program(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal hand-rolled two-segment ELF: 8 text bytes at 0x1000
+    /// (addi a0,a0,1; ecall), 4 file data bytes + 4 BSS bytes at 0x2000.
+    fn tiny_elf() -> Vec<u8> {
+        let text: [u32; 2] = [0x0015_0513, 0x0000_0073];
+        let data: [u8; 4] = [1, 2, 3, 4];
+        let mut f = vec![0u8; 52];
+        f[0..4].copy_from_slice(&[0x7f, b'E', b'L', b'F']);
+        f[4] = 1; // ELFCLASS32
+        f[5] = 1; // little-endian
+        f[6] = 1; // EV_CURRENT
+        f[16..18].copy_from_slice(&ET_EXEC.to_le_bytes());
+        f[18..20].copy_from_slice(&EM_RISCV.to_le_bytes());
+        f[20..24].copy_from_slice(&1u32.to_le_bytes());
+        f[24..28].copy_from_slice(&0x1000u32.to_le_bytes()); // e_entry
+        f[28..32].copy_from_slice(&52u32.to_le_bytes()); // e_phoff
+        f[40..42].copy_from_slice(&52u16.to_le_bytes()); // e_ehsize
+        f[42..44].copy_from_slice(&32u16.to_le_bytes()); // e_phentsize
+        f[44..46].copy_from_slice(&2u16.to_le_bytes()); // e_phnum
+        let text_off = 52 + 2 * 32;
+        let data_off = text_off + 8;
+        let phdr = |p_off: u32, vaddr: u32, filesz: u32, memsz: u32, flags: u32| {
+            let mut p = vec![0u8; 32];
+            p[0..4].copy_from_slice(&PT_LOAD.to_le_bytes());
+            p[4..8].copy_from_slice(&p_off.to_le_bytes());
+            p[8..12].copy_from_slice(&vaddr.to_le_bytes());
+            p[12..16].copy_from_slice(&vaddr.to_le_bytes());
+            p[16..20].copy_from_slice(&filesz.to_le_bytes());
+            p[20..24].copy_from_slice(&memsz.to_le_bytes());
+            p[24..28].copy_from_slice(&flags.to_le_bytes());
+            p[28..32].copy_from_slice(&4u32.to_le_bytes());
+            p
+        };
+        f.extend(phdr(text_off as u32, 0x1000, 8, 8, PF_R | PF_X));
+        f.extend(phdr(data_off as u32, 0x2000, 4, 8, PF_R | PF_W));
+        for w in text {
+            f.extend(w.to_le_bytes());
+        }
+        f.extend(data);
+        f
+    }
+
+    #[test]
+    fn parses_segments_with_bss_zero_fill() {
+        let elf = parse_elf(&tiny_elf()).unwrap();
+        assert_eq!(elf.entry, 0x1000);
+        assert_eq!(elf.segments.len(), 2);
+        assert!(elf.segments[0].executable());
+        assert_eq!(elf.segments[1].data, vec![1, 2, 3, 4, 0, 0, 0, 0]);
+        assert_eq!(elf.segments[1].filesz, 4);
+    }
+
+    #[test]
+    fn lowers_to_a_program() {
+        let p = load_program(&tiny_elf()).unwrap();
+        assert_eq!(p.text_base, 0x1000);
+        assert_eq!(p.text, vec![0x0015_0513, 0x0000_0073]);
+        assert_eq!(p.data_base, 0x2000);
+        assert_eq!(p.data, vec![1, 2, 3, 4, 0, 0, 0, 0]);
+        assert_eq!(p.entry, 0x1000);
+    }
+
+    #[test]
+    fn rejects_malformed_headers() {
+        assert!(matches!(
+            parse_elf(&tiny_elf()[..40]),
+            Err(LoaderError::TruncatedHeader { len: 40 })
+        ));
+        let mut bad = tiny_elf();
+        bad[0] = 0x7e;
+        assert!(matches!(parse_elf(&bad), Err(LoaderError::BadMagic(_))));
+        let mut bad = tiny_elf();
+        bad[4] = 2; // ELFCLASS64
+        assert!(matches!(parse_elf(&bad), Err(LoaderError::NotElf32(2))));
+        let mut bad = tiny_elf();
+        bad[18] = 0x3e; // EM_X86_64
+        bad[19] = 0;
+        assert!(matches!(parse_elf(&bad), Err(LoaderError::WrongMachine(0x3e))));
+    }
+
+    #[test]
+    fn rejects_segment_crossing_the_address_space() {
+        let mut bad = tiny_elf();
+        // Second phdr's vaddr → 0xFFFF_FFFC with memsz 8: end wraps.
+        let off = 52 + 32;
+        bad[off + 8..off + 12].copy_from_slice(&0xFFFF_FFFCu32.to_le_bytes());
+        assert!(matches!(
+            parse_elf(&bad),
+            Err(LoaderError::SegmentOutOfAddressSpace { vaddr: 0xFFFF_FFFC, .. })
+        ));
+        // ... but ending exactly at the boundary parses.
+        let mut edge = tiny_elf();
+        edge[off + 8..off + 12].copy_from_slice(&0xFFFF_FFF8u32.to_le_bytes());
+        assert!(parse_elf(&edge).is_ok());
+    }
+
+    #[test]
+    fn rejects_overlapping_segments() {
+        let mut bad = tiny_elf();
+        let off = 52 + 32;
+        bad[off + 8..off + 12].copy_from_slice(&0x1004u32.to_le_bytes());
+        assert!(matches!(
+            parse_elf(&bad),
+            Err(LoaderError::OverlappingSegments { first: 0x1000, second: 0x1004 })
+        ));
+    }
+
+    #[test]
+    fn rejects_entry_outside_text() {
+        let mut bad = tiny_elf();
+        bad[24..28].copy_from_slice(&0x2000u32.to_le_bytes());
+        assert!(matches!(
+            load_program(&bad),
+            Err(LoaderError::EntryOutsideText { entry: 0x2000 })
+        ));
+        let mut bad = tiny_elf();
+        bad[24..28].copy_from_slice(&0x1002u32.to_le_bytes());
+        assert!(matches!(load_program(&bad), Err(LoaderError::MisalignedEntry { .. })));
+    }
+}

@@ -1,0 +1,246 @@
+//! ELF binaries as first-class [`Workload`]s.
+//!
+//! An [`ElfWorkload`] wraps a loaded ELF [`Program`] and verifies runs
+//! through the riscv-tests HTIF convention: the program owns a
+//! word-sized `tohost` location, writes `1` on pass or
+//! `(testnum << 1) | 1` on the first failing check, then executes the
+//! halting `ecall` (this simulator's return-to-host). That makes a
+//! prebuilt compliance binary runnable through every existing surface —
+//! `Machine::run` on the timed core or the reference ISS, the
+//! `run-workload --elf` CLI, and the differential suites — with
+//! `verified` meaning "the binary reported HTIF pass".
+
+use std::path::Path;
+
+use super::LoaderError;
+use crate::arch::ArchState;
+use crate::asm::Program;
+use crate::workloads::workload::{Scenario, Variant, VerifyError, Workload};
+
+/// What a run reported through its `tohost` word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HtifOutcome {
+    /// `tohost == 1`.
+    Pass,
+    /// `tohost == (testnum << 1) | 1` with `testnum != 0`.
+    Fail { testnum: u32 },
+    /// `tohost` still holds its initial value — the program halted (or
+    /// faulted) without reporting.
+    NotReported,
+}
+
+impl HtifOutcome {
+    /// Classify a final `tohost` word.
+    pub fn from_tohost(tohost: u32) -> Self {
+        match tohost {
+            0 => HtifOutcome::NotReported,
+            1 => HtifOutcome::Pass,
+            t => HtifOutcome::Fail { testnum: t >> 1 },
+        }
+    }
+}
+
+/// A prebuilt ELF binary, runnable as a registry-shaped workload.
+pub struct ElfWorkload {
+    name: &'static str,
+    program: Program,
+    tohost: u32,
+    image: Vec<(u32, Vec<u8>)>,
+}
+
+impl ElfWorkload {
+    /// Load an ELF image; `name` labels reports (for files, the stem).
+    /// Requires the `tohost` symbol of the HTIF convention.
+    pub fn from_bytes(name: &str, bytes: &[u8]) -> Result<Self, LoaderError> {
+        let program = super::load_program(bytes)?;
+        let tohost = *program.symbols.get("tohost").ok_or(LoaderError::MissingTohost)?;
+        Ok(Self {
+            // Workload::name returns &'static str; compliance binaries
+            // are few and live for the whole process, so leaking the
+            // name is the honest cost of joining the trait surface.
+            name: Box::leak(name.to_string().into_boxed_str()),
+            program,
+            tohost,
+            image: Vec::new(),
+        })
+    }
+
+    /// Load an ELF file, labelled by its file stem.
+    pub fn from_file(path: &Path) -> Result<Self, LoaderError> {
+        let bytes = std::fs::read(path).map_err(|e| LoaderError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("elf");
+        Self::from_bytes(name, &bytes)
+    }
+
+    /// Address of the `tohost` word.
+    pub fn tohost_addr(&self) -> u32 {
+        self.tohost
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// Read the HTIF outcome from a halted backend's memory.
+    pub fn htif(&self, arch: &dyn ArchState) -> Result<HtifOutcome, VerifyError> {
+        let end = self.tohost as u64 + 4;
+        if self.tohost % 4 != 0 {
+            return Err(VerifyError::new(format!(
+                "tohost {:#010x} is not word-aligned",
+                self.tohost
+            )));
+        }
+        if end > arch.mem_size() as u64 {
+            return Err(VerifyError::new(format!(
+                "tohost {:#010x} is outside the {} bytes of simulated DRAM",
+                self.tohost,
+                arch.mem_size()
+            )));
+        }
+        let b = arch.mem_slice(self.tohost, 4);
+        Ok(HtifOutcome::from_tohost(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+    }
+}
+
+impl Workload for ElfWorkload {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn description(&self) -> &'static str {
+        "prebuilt RV32 ELF binary (riscv-tests HTIF convention; size = text words)"
+    }
+
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Scalar]
+    }
+
+    fn required_units(&self, _variant: Variant) -> &'static [usize] {
+        &[]
+    }
+
+    fn default_size(&self) -> usize {
+        self.program.text.len().max(1)
+    }
+
+    fn smoke_size(&self) -> usize {
+        self.default_size()
+    }
+
+    /// Footprint hint so `Machine::run` auto-sizes DRAM over the image
+    /// end and the `tohost` word, wherever the binary was linked.
+    fn buffers(&self, _sc: &Scenario) -> (usize, usize) {
+        let image_end = (self.program.text_end() as u64)
+            .max(self.program.data_base as u64 + self.program.data.len() as u64)
+            .max(self.tohost as u64 + 4);
+        let covered = crate::workloads::common::BUF_BASE as u64 + 128 * 1024;
+        (1, image_end.saturating_sub(covered) as usize)
+    }
+
+    fn build(&mut self, _sc: &Scenario) -> Program {
+        self.program.clone()
+    }
+
+    fn init_image(&self) -> &[(u32, Vec<u8>)] {
+        &self.image
+    }
+
+    fn bytes_moved(&self, _sc: &Scenario) -> u64 {
+        0
+    }
+
+    fn verify(&self, arch: &dyn ArchState) -> Result<(), VerifyError> {
+        match self.htif(arch)? {
+            HtifOutcome::Pass => Ok(()),
+            HtifOutcome::Fail { testnum } => Err(VerifyError::new(format!(
+                "HTIF fail: test {testnum} (tohost = {:#x})",
+                (testnum << 1) | 1
+            ))),
+            HtifOutcome::NotReported => {
+                Err(VerifyError::new("program halted without writing tohost"))
+            }
+        }
+    }
+
+    fn result_data(&self, arch: &dyn ArchState) -> Vec<i32> {
+        match self.htif(arch) {
+            Ok(HtifOutcome::Pass) => vec![1],
+            Ok(HtifOutcome::Fail { testnum }) => vec![((testnum << 1) | 1) as i32],
+            _ => vec![0],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+    use crate::loader::write::write_elf;
+    use crate::machine::{Backend, Machine};
+
+    /// Build a tiny HTIF program: write `tohost_value` to `tohost`, halt.
+    fn htif_elf(tohost_value: i64) -> Vec<u8> {
+        let mut a = Asm::new();
+        let tohost = a.words("tohost", &[0]);
+        a.words("fromhost", &[0]);
+        a.la(T0, tohost);
+        a.li(T1, tohost_value);
+        a.sw(T1, 0, T0);
+        a.halt();
+        write_elf(&a.assemble().unwrap())
+    }
+
+    #[test]
+    fn pass_and_fail_verify_through_htif() {
+        let mut w = ElfWorkload::from_bytes("pass", &htif_elf(1)).unwrap();
+        let sc = Scenario::new(Variant::Scalar, w.default_size());
+        let r = Machine::paper_default().run(&mut w, &sc).unwrap();
+        assert_eq!(r.verified, Some(true));
+
+        // tohost = (3 << 1) | 1: test 3 failed.
+        let mut w = ElfWorkload::from_bytes("fail", &htif_elf(7)).unwrap();
+        let r = Machine::paper_default().run(&mut w, &sc).unwrap();
+        assert_eq!(r.verified, Some(false));
+        assert!(r.verify_error.as_deref().unwrap_or("").contains("test 3"), "{r:?}");
+    }
+
+    #[test]
+    fn both_backends_agree_on_htif() {
+        for backend in [Backend::Timed, Backend::RefIss] {
+            let mut w = ElfWorkload::from_bytes("pass", &htif_elf(1)).unwrap();
+            let sc = Scenario::new(Variant::Scalar, w.default_size());
+            let r = Machine::paper_default().backend(backend).run(&mut w, &sc).unwrap();
+            assert_eq!(r.verified, Some(true), "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn silent_halt_is_a_verification_failure() {
+        let mut a = Asm::new();
+        a.words("tohost", &[0]);
+        a.li(A0, 1);
+        a.halt();
+        let bytes = write_elf(&a.assemble().unwrap());
+        let mut w = ElfWorkload::from_bytes("silent", &bytes).unwrap();
+        let sc = Scenario::new(Variant::Scalar, w.default_size());
+        let r = Machine::paper_default().run(&mut w, &sc).unwrap();
+        assert_eq!(r.verified, Some(false));
+        assert!(r.verify_error.as_deref().unwrap_or("").contains("without writing"), "{r:?}");
+    }
+
+    #[test]
+    fn missing_tohost_is_rejected() {
+        let mut a = Asm::new();
+        a.li(A0, 1);
+        a.halt();
+        let bytes = write_elf(&a.assemble().unwrap());
+        assert!(matches!(
+            ElfWorkload::from_bytes("x", &bytes),
+            Err(LoaderError::MissingTohost)
+        ));
+    }
+}

@@ -436,7 +436,7 @@ pub fn run_on_pico(
         PicoConfig { dram_size: cfg.dram_size.max(dram_needed(buffers, bytes_each)), ..cfg };
     let prog = w.build(&sc);
     let mut pico = PicoCore::new(cfg);
-    pico.load(&prog);
+    pico.load(&prog)?;
     for (addr, bytes) in w.init_image() {
         pico.host_write(*addr, bytes);
     }

@@ -19,6 +19,13 @@
 //!                                       >=2 non-blocking; issue-width=1
 //!                                       is the paper's single-issue
 //!                                       pipeline, 2/4 superscalar)
+//!   run-workload --elf FILE [machine flags] [--sweep axis=...]... [--json]
+//!                                       run a prebuilt RV32 ELF binary
+//!                                       (riscv-tests HTIF convention,
+//!                                       DESIGN.md §13) instead of a
+//!                                       registry workload; machine axes
+//!                                       sweep as above, verified =
+//!                                       "binary reported HTIF pass"
 //!   list-workloads                      registry contents
 //!
 //! verification:
@@ -51,6 +58,15 @@
 //!                                       non-zero on any error-severity
 //!                                       finding (CI captures --json as
 //!                                       BENCH_analysis.json)
+//!   compliance [--dir DIR] [--json]     rv32ui/rv32um compliance suite:
+//!                                       every checked-in ELF under
+//!                                       rust/tests/compliance/ runs on
+//!                                       the timed core AND the reference
+//!                                       ISS plus a static-analyzer
+//!                                       pre-flight; exits non-zero on
+//!                                       any failure or any backend
+//!                                       pass/fail mismatch (CI captures
+//!                                       --json as BENCH_compliance.json)
 //!
 //! Every command accepts the `--jobs N` flag bounding its sweep worker
 //! pool (default: available parallelism).
@@ -236,6 +252,7 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
         "run-workload" => run_workload(flags, json, jobs),
         "fuzz" => run_fuzz(flags, json, jobs),
         "analyze" => run_analyze(flags, json),
+        "compliance" => run_compliance(flags, json),
         "sweep-grid" => run_sweep_grid(flags, json, jobs),
         "serve" => run_serve(flags, jobs),
         "list-workloads" => {
@@ -254,9 +271,11 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fuzz|analyze|sweep-grid|serve|fig3|\
-     mem-sweep|pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|\
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|analyze|compliance|sweep-grid|serve|\
+     fig3|mem-sweep|pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|\
      discussion|all|run|disasm|fabric|config> [options]\n\
+     run-workload --elf FILE runs a prebuilt RV32 ELF binary (riscv-tests HTIF convention); \
+     compliance runs the checked-in rv32ui/rv32um suite on both backends\n\
      sweep axes for run-workload, fuzz and sweep-grid: variant, size, vlen, llc-block, mshrs, \
      prefetch, channels, issue-width; the --jobs N flag bounds every sweep worker pool\n\
      sweep-grid/serve run through the service queue: --store FILE.jsonl persists results and \
@@ -429,8 +448,12 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
 fn run_workload(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> {
     const VALUE_FLAGS: &[&str] = &[
         "--variant", "--size", "--vlen", "--llc-block", "--mshrs", "--prefetch", "--channels",
-        "--issue-width", "--sweep", "--jobs",
+        "--issue-width", "--sweep", "--jobs", "--elf",
     ];
+    // ELF mode: a prebuilt binary instead of a registry workload.
+    if let Some(path) = flags.opt_val("--elf")? {
+        return run_workload_elf(path, flags, json, jobs);
+    }
     let positional = flags.positional(VALUE_FLAGS);
     let Some(&name) = positional.first() else {
         return Err(format!(
@@ -579,6 +602,180 @@ fn run_workload(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), Stri
     }
     if failed {
         return Err("one or more sweep points failed (see notes above)".into());
+    }
+    Ok(())
+}
+
+/// `run-workload --elf FILE`: a prebuilt RV32 ELF binary (riscv-tests
+/// HTIF convention, DESIGN.md §13) run over the machine-axis grid.
+/// Workload-level sweep axes (variant/size) are meaningless for a fixed
+/// binary and are rejected; `verified` means "the binary reported HTIF
+/// pass", and any HTIF fail is a non-zero exit.
+fn run_workload_elf(
+    path: &str,
+    flags: &Flags,
+    json: bool,
+    jobs: Parallelism,
+) -> Result<(), String> {
+    use simdsoftcore::loader::ElfWorkload;
+    use simdsoftcore::workloads::Workload;
+    let bytes = std::fs::read(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let stem = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("elf")
+        .to_string();
+    // Fail early on a bad image, before any sweep thread spawns.
+    ElfWorkload::from_bytes(&stem, &bytes).map_err(|e| format!("{path}: {e}"))?;
+
+    let mut base = MachinePoint::default();
+    for &axis in MachinePoint::AXES {
+        if let Some(v) = flags.parse_usize(&format!("--{axis}"))? {
+            base.set(axis, v);
+        }
+    }
+    let mut machine_specs: Vec<&str> = Vec::new();
+    for spec in flags.opt_vals("--sweep")? {
+        let (axis, _) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--sweep expects axis=v1,v2,..., got '{spec}'"))?;
+        if !MachinePoint::is_axis(axis) {
+            return Err(format!(
+                "sweep axis '{axis}' does not apply to --elf (axes: {})",
+                MachinePoint::AXES.join(", ")
+            ));
+        }
+        machine_specs.push(spec);
+    }
+    let grid = machine_grid(base, &machine_specs)?;
+    for mp in &grid {
+        mp.validate()?;
+    }
+
+    let results = sweep::parallel_map_bounded(grid, jobs.workers(), |mp| {
+        let run = ElfWorkload::from_bytes(&stem, &bytes)
+            .map_err(|e| e.to_string())
+            .and_then(|mut w| {
+                let sc = Scenario::new(Variant::Scalar, w.default_size());
+                mp.machine().run(&mut w, &sc).map_err(|e| e.to_string())
+            });
+        (mp, run)
+    });
+
+    let mut t = Table::new(
+        format!("run-workload --elf {stem}"),
+        &["VLEN", "LLC block", "MSHRs", "pf", "ch", "IW", "instret", "cycles", "IPC", "verified"],
+    );
+    let mut failed = false;
+    let mut htif_failed = false;
+    for (mp, r) in results {
+        match r {
+            Ok(r) => {
+                if r.verified == Some(false) {
+                    htif_failed = true;
+                    t.note(format!(
+                        "HTIF FAIL vlen={} llc-block={} mshrs={} prefetch={} channels={} \
+                         issue-width={}: {}",
+                        mp.vlen,
+                        mp.llc_block,
+                        mp.mshrs,
+                        mp.prefetch,
+                        mp.channels,
+                        mp.issue_width,
+                        r.verify_error.as_deref().unwrap_or("?")
+                    ));
+                }
+                t.row(&[
+                    mp.vlen.to_string(),
+                    mp.llc_block.to_string(),
+                    mp.mshrs.to_string(),
+                    mp.prefetch.to_string(),
+                    mp.channels.to_string(),
+                    mp.issue_width.to_string(),
+                    r.throughput.instret.to_string(),
+                    r.throughput.cycles.to_string(),
+                    format!("{:.3}", r.throughput.ipc()),
+                    r.verified_cell(),
+                ]);
+            }
+            Err(e) => {
+                failed = true;
+                t.note(format!(
+                    "FAILED vlen={} llc-block={} mshrs={} prefetch={} channels={} \
+                     issue-width={}: {e}",
+                    mp.vlen, mp.llc_block, mp.mshrs, mp.prefetch, mp.channels, mp.issue_width
+                ));
+            }
+        }
+    }
+    t.note(format!("verified = \"the binary reported HTIF pass\" ({path})"));
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+    if failed {
+        return Err("one or more machine points failed (see notes above)".into());
+    }
+    if htif_failed {
+        return Err(format!("{path}: the binary reported HTIF fail (see notes above)"));
+    }
+    Ok(())
+}
+
+/// The `compliance` subcommand: every checked-in rv32ui/rv32um binary
+/// (DESIGN.md §13) on the timed core AND the reference ISS, with the
+/// static analyzer as a pre-flight. Exits non-zero on any failure, and
+/// with a dedicated message when the two backends disagree on pass/fail
+/// — the differential property the suite exists to check.
+fn run_compliance(flags: &Flags, json: bool) -> Result<(), String> {
+    use simdsoftcore::loader::compliance::{self, BackendOutcome};
+    let dir = match flags.opt_val("--dir")? {
+        Some(d) => std::path::PathBuf::from(d),
+        None => compliance::default_dir(),
+    };
+    let report = compliance::run_suite(&dir)?;
+    let mut t = Table::new(
+        format!("compliance ({} binaries under {})", report.rows.len(), dir.display()),
+        &["test", "core", "ref ISS", "core instret", "ISS instret", "analyzer errors", "agree"],
+    );
+    let cell = |o: &BackendOutcome| if o.pass { "pass".to_string() } else { "FAIL".to_string() };
+    for r in &report.rows {
+        t.row(&[
+            r.name.clone(),
+            cell(&r.core),
+            cell(&r.iss),
+            r.core.instret.to_string(),
+            r.iss.instret.to_string(),
+            r.analyzer_errors.to_string(),
+            (!r.mismatch()).to_string(),
+        ]);
+        if !r.core.pass {
+            t.note(format!("{} core: {}", r.name, r.core.detail));
+        }
+        if !r.iss.pass {
+            t.note(format!("{} ISS: {}", r.name, r.iss.detail));
+        }
+    }
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+    let mismatches = report.mismatches().count();
+    if mismatches > 0 {
+        return Err(format!(
+            "{mismatches} binaries got a different pass/fail on the timed core vs the \
+             reference ISS — the backends disagree about RV32IM architecture"
+        ));
+    }
+    if !report.all_passed() {
+        let failures: Vec<&str> = report.failures().map(|r| r.name.as_str()).collect();
+        return Err(format!(
+            "{} compliance failure(s): {}",
+            failures.len(),
+            failures.join(", ")
+        ));
     }
     Ok(())
 }
@@ -1006,7 +1203,7 @@ fn run_program(flags: &Flags) -> Result<(), String> {
     if flags.has("--trace") {
         core.trace = Trace::full();
     }
-    core.load(&prog);
+    core.load(&prog).map_err(|e| e.to_string())?;
     let run = core.run(1_000_000_000).map_err(|e| e.to_string())?;
     println!(
         "halted: {} instructions, {} cycles (IPC {:.3})",

@@ -151,14 +151,10 @@ impl RefIss {
     pub fn load(&mut self, prog: &Program) -> Result<(), SimError> {
         let size = self.mem.len();
         let text_len = prog.text.len() * 4;
-        if (prog.text_base as usize).checked_add(text_len).is_none_or(|end| end > size) {
+        if prog.text_base as u64 + text_len as u64 > size as u64 {
             return Err(SimError::ImageFault { addr: prog.text_base, len: text_len, size });
         }
-        if !prog.data.is_empty()
-            && (prog.data_base as usize)
-                .checked_add(prog.data.len())
-                .is_none_or(|end| end > size)
-        {
+        if !prog.data.is_empty() && prog.data_base as u64 + prog.data.len() as u64 > size as u64 {
             return Err(SimError::ImageFault {
                 addr: prog.data_base,
                 len: prog.data.len(),
@@ -192,7 +188,7 @@ impl RefIss {
     /// land on the text segment invalidate the decoded view, like a
     /// store would.
     pub fn host_write(&mut self, addr: u32, data: &[u8]) -> Result<(), SimError> {
-        if (addr as usize).checked_add(data.len()).is_none_or(|end| end > self.mem.len()) {
+        if addr as u64 + data.len() as u64 > self.mem.len() as u64 {
             return Err(SimError::ImageFault { addr, len: data.len(), size: self.mem.len() });
         }
         let at = addr as usize;
@@ -242,13 +238,28 @@ impl RefIss {
 
     #[inline]
     fn mem_ok(&self, addr: u32, len: usize) -> bool {
-        (addr as usize).checked_add(len).is_some_and(|end| end <= self.mem.len())
+        // End-of-range rule in u64 (not usize, whose width is
+        // host-dependent) — shared with the timed core and PicoCore.
+        addr as u64 + len as u64 <= self.mem.len() as u64
+    }
+
+    /// Classify a failed data access: an end address overflowing the
+    /// 32-bit space is a [`SimError::MemWrap`] (no DRAM size could make
+    /// it legal), anything else an out-of-DRAM [`SimError::MemFault`].
+    /// All three backends raise the identical fault for the same access.
+    #[inline]
+    fn mem_fault(&self, pc: u32, addr: u32, len: usize) -> SimError {
+        if addr as u64 + len as u64 > 1 << 32 {
+            SimError::MemWrap { pc, addr, len }
+        } else {
+            SimError::MemFault { pc, addr, len, size: self.mem.len() }
+        }
     }
 
     #[inline]
     fn check_mem(&self, pc: u32, addr: u32, len: usize) -> Result<(), SimError> {
         if !self.mem_ok(addr, len) {
-            return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
+            return Err(self.mem_fault(pc, addr, len));
         }
         Ok(())
     }
@@ -766,7 +777,7 @@ impl RefIss {
                     if !self.mem_ok(addr, len) {
                         let pc = pc0.wrapping_add(4 * k as u32);
                         self.pc = pc;
-                        return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
+                        return Err(self.mem_fault(pc, addr, len));
                     }
                     let at = addr as usize;
                     let v = match kind {
@@ -786,7 +797,7 @@ impl RefIss {
                     if !self.mem_ok(addr, len) {
                         let pc = pc0.wrapping_add(4 * k as u32);
                         self.pc = pc;
-                        return Err(SimError::MemFault { pc, addr, len, size: self.mem.len() });
+                        return Err(self.mem_fault(pc, addr, len));
                     }
                     let bytes = self.reg8(rs2).to_le_bytes();
                     let at = addr as usize;

@@ -8,23 +8,68 @@ use crate::util::Xoshiro256;
 /// Base address for large workload buffers (above code + static data).
 pub const BUF_BASE: u32 = 0x0100_0000;
 
-/// Align `addr` up to `align` (power of two).
-pub const fn align_up(addr: u32, align: u32) -> u32 {
-    (addr + align - 1) & !(align - 1)
+/// Align `addr` up to `align` (power of two), or `None` when the
+/// aligned address no longer fits the 32-bit address space. The naive
+/// `(addr + align - 1)` form wraps near 4 GiB and would silently alias
+/// a buffer laid out above the boundary back over low memory.
+pub const fn align_up(addr: u32, align: u32) -> Option<u32> {
+    match addr.checked_add(align - 1) {
+        Some(x) => Some(x & !(align - 1)),
+        None => None,
+    }
 }
 
-/// Layout `count` buffers of `bytes` each, LLC-block aligned (2 KiB holds
-/// for every explored LLC block size), starting at [`BUF_BASE`].
-pub fn layout_buffers(count: usize, bytes: usize) -> Vec<u32> {
-    let align = 64 * 1024; // generous: aligned for any explored LLC block
-    let mut addrs = Vec::with_capacity(count);
-    let mut a = BUF_BASE;
-    for _ in 0..count {
-        a = align_up(a, align);
-        addrs.push(a);
-        a += bytes as u32;
+/// A workload buffer layout does not fit the 32-bit address space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayoutError {
+    /// Index of the buffer that overflowed.
+    pub buffer: usize,
+    /// Address the buffer would have started at (cursor before/after
+    /// alignment, depending on which step overflowed).
+    pub addr: u64,
+    pub bytes: usize,
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "buffer {} at {:#x} (+{} bytes) does not fit the 32-bit address space",
+            self.buffer, self.addr, self.bytes
+        )
     }
-    addrs
+}
+
+impl std::error::Error for LayoutError {}
+
+/// Layout `count` buffers of `bytes` each, LLC-block aligned (64 KiB
+/// holds for every explored LLC block size), starting at [`BUF_BASE`].
+/// Fails instead of wrapping when the layout reaches the 4 GiB boundary.
+pub fn try_layout_buffers(count: usize, bytes: usize) -> Result<Vec<u32>, LayoutError> {
+    const ALIGN: u32 = 64 * 1024; // generous: aligned for any explored LLC block
+    let mut addrs = Vec::with_capacity(count);
+    let mut next = BUF_BASE as u64;
+    for i in 0..count {
+        let base = u32::try_from(next)
+            .ok()
+            .and_then(|a| align_up(a, ALIGN))
+            .ok_or(LayoutError { buffer: i, addr: next, bytes })?;
+        let end = base as u64 + bytes as u64;
+        if end > 1u64 << 32 {
+            return Err(LayoutError { buffer: i, addr: base as u64, bytes });
+        }
+        addrs.push(base);
+        next = end;
+    }
+    Ok(addrs)
+}
+
+/// Infallible form of [`try_layout_buffers`] for the in-repo workloads,
+/// whose footprints [`crate::machine::Machine::run`] already bounds via
+/// `dram_needed` + config validation; an overflowing layout panics with
+/// the [`LayoutError`] instead of silently aliasing buffers.
+pub fn layout_buffers(count: usize, bytes: usize) -> Vec<u32> {
+    try_layout_buffers(count, bytes).unwrap_or_else(|e| panic!("workload buffer layout: {e}"))
 }
 
 /// `n` deterministic random i32 values for a seed (the host side of
@@ -96,8 +141,36 @@ mod tests {
 
     #[test]
     fn alignment() {
-        assert_eq!(align_up(0x1001, 0x1000), 0x2000);
-        assert_eq!(align_up(0x1000, 0x1000), 0x1000);
+        assert_eq!(align_up(0x1001, 0x1000), Some(0x2000));
+        assert_eq!(align_up(0x1000, 0x1000), Some(0x1000));
+    }
+
+    #[test]
+    fn align_up_checked_at_the_4gib_boundary() {
+        // The last 4 KiB-aligned address is representable...
+        assert_eq!(align_up(0xFFFF_F000, 0x1000), Some(0xFFFF_F000));
+        // ...but one byte past it, `addr + align - 1` used to wrap to a
+        // low address; the checked form refuses instead.
+        assert_eq!(align_up(0xFFFF_F001, 0x1000), None);
+        assert_eq!(align_up(u32::MAX, 4), None);
+        assert_eq!(align_up(u32::MAX, 1), Some(u32::MAX));
+    }
+
+    #[test]
+    fn layout_rejects_buffers_past_the_4gib_boundary() {
+        // One buffer reaching exactly 2^32 fits (its last byte is at
+        // 0xFFFF_FFFF)...
+        let max_fit = (1u64 << 32) as usize - BUF_BASE as usize;
+        assert_eq!(try_layout_buffers(1, max_fit), Ok(vec![BUF_BASE]));
+        // ...a second one must be a layout error, not a wrapped cursor
+        // aliasing buffer 0.
+        let err = try_layout_buffers(2, max_fit).unwrap_err();
+        assert_eq!(err.buffer, 1);
+        // A single oversized buffer overflows immediately.
+        assert!(try_layout_buffers(1, max_fit + 1).is_err());
+        // And a mid-layout overflow names the right buffer.
+        let err = try_layout_buffers(3, 0x7000_0000).unwrap_err();
+        assert_eq!(err.buffer, 2);
     }
 
     #[test]

@@ -403,7 +403,7 @@ mod tests {
         let mut core = Core::paper_default();
         let addrs = layout_buffers(1, 64 * 4);
         let prog = build_qsort(addrs[0], 64);
-        core.load(&prog);
+        core.load(&prog).unwrap();
         let vals = vec![5i32; 64];
         let mut bytes = Vec::new();
         for v in &vals {

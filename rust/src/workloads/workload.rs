@@ -250,7 +250,7 @@ pub fn run_on_budget(
 ) -> Result<WorkloadReport, SimError> {
     let sc = Scenario { vlen_bits: core.cfg.vlen_bits, ..*sc };
     let prog = w.build(&sc);
-    core.load(&prog);
+    core.load(&prog)?;
     w.init(core);
     let run = core.run(max_instrs)?;
     let throughput = Throughput::from_run(core, &run, w.bytes_moved(&sc));

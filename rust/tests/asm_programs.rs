@@ -10,7 +10,7 @@ use simdsoftcore::isa::reg::*;
 fn run(src: &str) -> Core {
     let prog = assemble_text(src).expect("assembles");
     let mut core = Core::paper_default();
-    core.load(&prog);
+    core.load(&prog).unwrap();
     core.run(50_000_000).expect("runs to completion");
     core
 }

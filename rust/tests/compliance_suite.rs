@@ -1,0 +1,61 @@
+//! The checked-in rv32ui/rv32um compliance suite (DESIGN.md §13).
+//!
+//! Every `tests/compliance/*.elf` is a self-checking riscv-tests-style
+//! binary (generated and independently verified by `gen_compliance.py`)
+//! that reports through the HTIF `tohost` convention. The contract here
+//! is differential: each binary must load, run, and report HTIF pass on
+//! BOTH the timed core and the reference ISS, and must be clean under
+//! the static analyzer — a pass/fail mismatch means the two execution
+//! engines disagree about RV32IM architecture.
+
+use simdsoftcore::loader::compliance::{run_elf, suite_files};
+use simdsoftcore::loader::ElfWorkload;
+use std::path::PathBuf;
+
+fn suite_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/compliance")
+}
+
+#[test]
+fn the_suite_is_checked_in_and_loadable() {
+    let files = suite_files(&suite_dir()).expect("checked-in suite present");
+    assert!(
+        files.len() >= 40,
+        "expected the full rv32ui+rv32um suite, got {} binaries",
+        files.len()
+    );
+    for path in &files {
+        let w = ElfWorkload::from_file(path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!w.program().text.is_empty(), "{}", path.display());
+        // Every binary follows the shared HTIF layout.
+        assert_eq!(w.tohost_addr(), 0x0010_0000, "{}", path.display());
+        assert_eq!(w.program().entry, 0x1000, "{}", path.display());
+    }
+}
+
+#[test]
+fn every_checked_in_binary_passes_on_both_backends() {
+    for path in suite_files(&suite_dir()).expect("checked-in suite present") {
+        let row = run_elf(&path);
+        assert!(
+            !row.mismatch(),
+            "{}: backend mismatch — core: {} / ISS: {}",
+            row.name,
+            row.core.detail,
+            row.iss.detail
+        );
+        assert!(row.core.pass, "{}: timed core: {}", row.name, row.core.detail);
+        assert!(row.iss.pass, "{}: reference ISS: {}", row.name, row.iss.detail);
+        assert!(
+            row.core.instret > 0 && row.iss.instret > 0,
+            "{}: a passing run must retire instructions",
+            row.name
+        );
+        assert_eq!(
+            row.analyzer_errors, 0,
+            "{}: static analyzer found error-severity findings",
+            row.name
+        );
+    }
+}

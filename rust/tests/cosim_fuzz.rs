@@ -35,7 +35,7 @@ fn workload_programs_agree_in_lockstep() {
         let mut core = machine.build();
         let mut iss = machine.build_iss();
         let prog = w.build(&Scenario { vlen_bits: 256, ..sc });
-        core.load(&prog);
+        core.load(&prog).unwrap();
         iss.load(&prog).unwrap();
         for (addr, bytes) in w.init_image() {
             core.mem.host_write(*addr, bytes);
@@ -104,7 +104,7 @@ fn wild_jumps_fault_identically_on_both_backends() {
         let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
         let mut core = machine.build();
         let mut iss = RefIss::new(256, core.mem.dram_size());
-        core.load(&prog);
+        core.load(&prog).unwrap();
         iss.load(&prog).unwrap();
         run_lockstep(&mut core, &mut iss, 1000).expect("identical faults are agreement")
     };
@@ -167,7 +167,7 @@ fn planted_divergence_produces_actionable_report() {
     let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
     let mut core = machine.build();
     let mut iss = RefIss::new(256, core.mem.dram_size());
-    core.load(&prog);
+    core.load(&prog).unwrap();
     iss.load(&prog).unwrap();
     // Corrupt a pool register the generator writes early and often.
     iss.force_reg(simdsoftcore::isa::reg::A0, 0x1234_5678);

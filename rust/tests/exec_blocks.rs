@@ -165,7 +165,7 @@ fn timed_core_reexecutes_patched_instruction_after_text_store() {
             .dram_bytes(fuzz::FUZZ_DRAM_BYTES)
             .issue_width(issue_width)
             .build();
-        core.load(&backward_patch_program());
+        core.load(&backward_patch_program()).unwrap();
         core.run(10_000).unwrap_or_else(|e| panic!("issue_width {issue_width}: {e}"));
         assert_eq!(
             core.reg(A0),
@@ -184,7 +184,7 @@ fn smc_program_agrees_in_lockstep() {
     let machine = Machine::paper_default().dram_bytes(fuzz::FUZZ_DRAM_BYTES);
     let mut core = machine.build();
     let mut iss = machine.build_iss();
-    core.load(&prog);
+    core.load(&prog).unwrap();
     iss.load(&prog).unwrap();
     let r = run_lockstep(&mut core, &mut iss, 10_000)
         .unwrap_or_else(|d| panic!("SMC program diverged:\n{d}"));

@@ -164,14 +164,14 @@ fn core_with_hlo_pool_matches_native_core() {
     let prog = build();
 
     let mut native = Core::paper_default();
-    native.load(&prog);
+    native.load(&prog).unwrap();
     let nat_run = native.run(1_000_000).unwrap();
     native.mem.flush_all();
     let nat_mem = native.mem.dram_slice(prog.sym("data"), 8 * 64).to_vec();
 
     let mut hlo = Core::paper_default();
     hlo.pool = hlo_pool(fabric, vlen);
-    hlo.load(&prog);
+    hlo.load(&prog).unwrap();
     let hlo_run = hlo.run(1_000_000).unwrap();
     hlo.mem.flush_all();
     let hlo_mem = hlo.mem.dram_slice(prog.sym("data"), 8 * 64).to_vec();

@@ -66,7 +66,7 @@ fn fig4_bands() {
         let addrs = common::layout_buffers(3, n * 4);
         let prog = stream::build_scalar(stream::Kernel::Copy, addrs[0], addrs[1], addrs[2], n);
         let mut pico = PicoCore::new(PicoConfig::default());
-        pico.load(&prog);
+        pico.load(&prog).unwrap();
         pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(n));
         pico.run(1_000_000_000).unwrap();
         pico_rates.push(pico.bytes_per_second(8 * n as u64) / 1e6);
@@ -140,7 +140,7 @@ fn picorv32_ratio_bands() {
     let addrs = common::layout_buffers(3, n * 4);
     let prog = stream::build_scalar(stream::Kernel::Copy, addrs[0], addrs[1], addrs[2], n);
     let mut pico = PicoCore::new(PicoConfig::default());
-    pico.load(&prog);
+    pico.load(&prog).unwrap();
     pico.host_write(addrs[0], &1i32.to_le_bytes().repeat(n));
     pico.run(1_000_000_000).unwrap();
     let p_mbps = pico.bytes_per_second(8 * n as u64) / 1e6;

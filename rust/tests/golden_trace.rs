@@ -62,7 +62,7 @@ fn check_golden(name: &str, actual: &str) {
 
 /// Trace the first `LINES` instructions of `prog` on `core`.
 fn traced_text(core: &mut Core, prog: &simdsoftcore::asm::Program) -> String {
-    core.load(prog);
+    core.load(prog).unwrap();
     core.trace = Trace::windowed(0, LINES);
     core.run(1_000_000).expect("traced program runs");
     core.trace.render_text()
@@ -98,7 +98,7 @@ fn simd_sort_workload_trace_matches_golden() {
         let sc = Scenario::new(Variant::Vector, w.smoke_size());
         let prog = w.build(&sc);
         let mut core = machine.build();
-        core.load(&prog);
+        core.load(&prog).unwrap();
         w.init(&mut core);
         core.trace = Trace::windowed(0, LINES);
         core.run(simdsoftcore::workloads::common::MAX_INSTRS).expect("sort runs");

@@ -46,7 +46,7 @@ fn recursive_fibonacci() {
     )
     .unwrap();
     let mut core = Core::paper_default();
-    core.load(&prog);
+    core.load(&prog).unwrap();
     core.run(10_000_000).unwrap();
     assert_eq!(core.reg(A0), 144, "fib(12)");
 }
@@ -82,11 +82,11 @@ fn softcore_and_picorv32_agree_architecturally() {
         let prog = a.assemble().map_err(|e| e.to_string())?;
 
         let mut soft = Core::paper_default();
-        soft.load(&prog);
+        soft.load(&prog).unwrap();
         soft.run(10_000).map_err(|e| e.to_string())?;
 
         let mut pico = PicoCore::new(PicoConfig::default());
-        pico.load(&prog);
+        pico.load(&prog).unwrap();
         pico.run(10_000).map_err(|e| e.to_string())?;
 
         prop_assert_eq!(soft.reg(A2), pico.reg(A2));
@@ -127,7 +127,7 @@ fn mixed_scalar_vector_program_property() {
         a.halt();
         let prog = a.assemble().map_err(|e| e.to_string())?;
         let mut core = Core::paper_default();
-        core.load(&prog);
+        core.load(&prog).unwrap();
         core.run(100_000).map_err(|e| e.to_string())?;
         core.mem.flush_all();
         let out = core.mem.dram_slice(prog.sym("dst"), 128).to_vec();
@@ -209,7 +209,7 @@ fn text_and_builder_assemblers_agree() {
     assert_eq!(text.text, built.text);
 
     let mut core = Core::paper_default();
-    core.load(&text);
+    core.load(&text).unwrap();
     core.run(100_000).unwrap();
     assert_eq!(core.reg(A1), 500500);
 }
@@ -254,7 +254,7 @@ fn program_visible_counters_match_host_view() {
     )
     .unwrap();
     let mut core = Core::paper_default();
-    core.load(&prog);
+    core.load(&prog).unwrap();
     core.run(10_000).unwrap();
     let cycles = core.reg(A0);
     let instrs = core.reg(A1);
