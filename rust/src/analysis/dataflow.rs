@@ -205,47 +205,337 @@ pub fn effects(i: &Instr, vlen_bytes: usize) -> Effects {
 }
 
 // ---------------------------------------------------------------------------
-// Constant propagation
+// Constant propagation (interval domain)
 // ---------------------------------------------------------------------------
 
-/// Flat constant lattice per scalar register: `Some(c)` = known
-/// constant, `None` = ⊤ (unknown). `x0` is pinned to `Some(0)`.
+/// Unsigned value-range abstraction of one register: every value `v`
+/// with `lo <= v <= hi`. `[0, u32::MAX]` is ⊤. The domain is *sound by
+/// construction*: every transfer over-approximates the architecture, so
+/// a property the whole interval satisfies (e.g. "this access runs past
+/// DRAM") is a property of every concrete execution — which is what
+/// lets range-derived findings keep the "errors = exactly what the
+/// architecture faults on" contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Interval {
+    pub const TOP: Interval = Interval { lo: 0, hi: u32::MAX };
+
+    #[inline]
+    pub fn exact(v: u32) -> Self {
+        Interval { lo: v, hi: v }
+    }
+
+    /// `[lo, hi]`, or ⊤ when the bounds are inverted (an empty range
+    /// has no meaning here; callers only construct non-empty ones).
+    #[inline]
+    pub fn new(lo: u32, hi: u32) -> Self {
+        if lo <= hi {
+            Interval { lo, hi }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    #[inline]
+    pub fn singleton(self) -> Option<u32> {
+        (self.lo == self.hi).then_some(self.lo)
+    }
+
+    #[inline]
+    pub fn is_top(self) -> bool {
+        self == Interval::TOP
+    }
+
+    /// Least upper bound (interval hull).
+    #[inline]
+    pub fn join(self, o: Interval) -> Interval {
+        Interval { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+
+    /// Widening: any bound still moving after the join jumps straight
+    /// to its extreme, bounding the fixpoint chain length.
+    #[inline]
+    fn widen(self, next: Interval) -> Interval {
+        Interval {
+            lo: if next.lo < self.lo { 0 } else { self.lo },
+            hi: if next.hi > self.hi { u32::MAX } else { self.hi },
+        }
+    }
+
+    /// Wrapping add: precise when neither or both ends wrap, ⊤ when the
+    /// sum straddles the 2^32 boundary.
+    fn add(self, o: Interval) -> Interval {
+        let lo = self.lo as u64 + o.lo as u64;
+        let hi = self.hi as u64 + o.hi as u64;
+        const M: u64 = u32::MAX as u64;
+        if hi <= M {
+            Interval { lo: lo as u32, hi: hi as u32 }
+        } else if lo > M {
+            Interval { lo: (lo - M - 1) as u32, hi: (hi - M - 1) as u32 }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    /// Wrapping subtract, same wrap discipline as [`Interval::add`].
+    fn sub(self, o: Interval) -> Interval {
+        let lo = self.lo as i64 - o.hi as i64;
+        let hi = self.hi as i64 - o.lo as i64;
+        if lo >= 0 {
+            Interval { lo: lo as u32, hi: hi as u32 }
+        } else if hi < 0 {
+            Interval { lo: (lo + (1 << 32)) as u32, hi: (hi + (1 << 32)) as u32 }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    fn mul(self, o: Interval) -> Interval {
+        let hi = self.hi as u64 * o.hi as u64;
+        if hi <= u32::MAX as u64 {
+            Interval { lo: self.lo * o.lo, hi: hi as u32 }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    /// Smallest all-ones mask covering `x` (`0b0010_1000 -> 0b0011_1111`).
+    #[inline]
+    fn smear(x: u32) -> u32 {
+        if x == 0 {
+            0
+        } else {
+            u32::MAX >> x.leading_zeros()
+        }
+    }
+
+    fn and(self, o: Interval) -> Interval {
+        match (self.singleton(), o.singleton()) {
+            (Some(a), Some(b)) => Interval::exact(a & b),
+            // a & b can clear bits but never set them past either bound.
+            _ => Interval { lo: 0, hi: self.hi.min(o.hi) },
+        }
+    }
+
+    fn or(self, o: Interval) -> Interval {
+        match (self.singleton(), o.singleton()) {
+            (Some(a), Some(b)) => Interval::exact(a | b),
+            // a | b >= max(a, b); its top set bit is bounded by the top
+            // set bit of hi1 | hi2.
+            _ => Interval { lo: self.lo.max(o.lo), hi: Self::smear(self.hi | o.hi) },
+        }
+    }
+
+    fn xor(self, o: Interval) -> Interval {
+        match (self.singleton(), o.singleton()) {
+            (Some(a), Some(b)) => Interval::exact(a ^ b),
+            _ => Interval { lo: 0, hi: Self::smear(self.hi | o.hi) },
+        }
+    }
+
+    fn shl_imm(self, s: u32) -> Interval {
+        let s = s & 31;
+        if (self.hi as u64) << s <= u32::MAX as u64 {
+            Interval { lo: self.lo << s, hi: self.hi << s }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    fn shr_imm(self, s: u32) -> Interval {
+        let s = s & 31;
+        Interval { lo: self.lo >> s, hi: self.hi >> s }
+    }
+
+    fn sar_imm(self, s: u32) -> Interval {
+        let s = s & 31;
+        if self.hi <= i32::MAX as u32 {
+            // All non-negative: arithmetic == logical shift.
+            self.shr_imm(s)
+        } else if self.lo > i32::MAX as u32 {
+            // All negative: `>>` on i32 is monotone and stays negative,
+            // and the negative range is order-preserved as u32.
+            Interval {
+                lo: ((self.lo as i32) >> s) as u32,
+                hi: ((self.hi as i32) >> s) as u32,
+            }
+        } else {
+            Interval::TOP
+        }
+    }
+
+    fn shl(self, o: Interval) -> Interval {
+        match o.singleton() {
+            Some(s) => self.shl_imm(s),
+            None => Interval::TOP,
+        }
+    }
+
+    fn shr(self, o: Interval) -> Interval {
+        match o.singleton() {
+            Some(s) => self.shr_imm(s),
+            // Unknown amount: the result can only shrink.
+            None => Interval { lo: 0, hi: self.hi },
+        }
+    }
+
+    fn sar(self, o: Interval) -> Interval {
+        match o.singleton() {
+            Some(s) => self.sar_imm(s),
+            None if self.hi <= i32::MAX as u32 => Interval { lo: 0, hi: self.hi },
+            None => Interval::TOP,
+        }
+    }
+
+    /// `a < b` unsigned: decided when the ranges are disjoint.
+    fn ltu(self, o: Interval) -> Interval {
+        if self.hi < o.lo {
+            Interval::exact(1)
+        } else if self.lo >= o.hi {
+            Interval::exact(0)
+        } else {
+            Interval { lo: 0, hi: 1 }
+        }
+    }
+
+    /// `a < b` signed: decided for singletons, else `[0, 1]`.
+    fn lts(self, o: Interval) -> Interval {
+        match (self.singleton(), o.singleton()) {
+            (Some(a), Some(b)) => Interval::exact(((a as i32) < (b as i32)) as u32),
+            _ => Interval { lo: 0, hi: 1 },
+        }
+    }
+
+    /// True when every value is non-negative as i32.
+    #[inline]
+    fn all_signed_nonneg(self) -> bool {
+        self.hi <= i32::MAX as u32
+    }
+
+    fn mulhu(self, o: Interval) -> Interval {
+        // mulhu is monotone in both unsigned arguments.
+        Interval {
+            lo: ((self.lo as u64 * o.lo as u64) >> 32) as u32,
+            hi: ((self.hi as u64 * o.hi as u64) >> 32) as u32,
+        }
+    }
+
+    fn mulh_signed(self, o: Interval) -> Interval {
+        if self.all_signed_nonneg() && o.all_signed_nonneg() {
+            self.mulhu(o)
+        } else {
+            Interval::TOP
+        }
+    }
+
+    fn divu(self, o: Interval) -> Interval {
+        if o.lo >= 1 {
+            Interval { lo: self.lo / o.hi, hi: self.hi / o.lo }
+        } else {
+            // Division by zero yields u32::MAX (RISC-V), so a divisor
+            // range containing 0 gives up.
+            Interval::TOP
+        }
+    }
+
+    fn remu(self, o: Interval) -> Interval {
+        // remu(a, b) <= a always (remu(a, 0) == a per the spec), and
+        // < b when b != 0.
+        if o.lo >= 1 {
+            Interval { lo: 0, hi: self.hi.min(o.hi - 1) }
+        } else {
+            Interval { lo: 0, hi: self.hi }
+        }
+    }
+
+    fn div_signed(self, o: Interval) -> Interval {
+        if self.all_signed_nonneg() && o.all_signed_nonneg() && o.lo >= 1 {
+            self.divu(o)
+        } else {
+            Interval::TOP
+        }
+    }
+
+    fn rem_signed(self, o: Interval) -> Interval {
+        if self.all_signed_nonneg() && o.all_signed_nonneg() && o.lo >= 1 {
+            Interval { lo: 0, hi: self.hi.min(o.hi - 1) }
+        } else {
+            Interval::TOP
+        }
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_top() {
+            write!(f, "⊤")
+        } else if let Some(v) = self.singleton() {
+            write!(f, "{v:#x}")
+        } else {
+            write!(f, "[{:#x}, {:#x}]", self.lo, self.hi)
+        }
+    }
+}
+
+/// Value-range state per scalar register. `x0` is pinned to `0`.
+///
+/// `get` keeps the historical flat-lattice contract (`Some` only for a
+/// single known constant) so the jalr resolver and the singleton
+/// address lints are byte-identical to the old domain; `range` exposes
+/// the interval for the range-based lints and the cost model.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConstState {
-    regs: [Option<u32>; 32],
+    regs: [Interval; 32],
 }
 
 impl ConstState {
     /// Architectural state after [`crate::ref_iss::RefIss::load`]: every
     /// register is zeroed, then `sp` is set to the top of DRAM.
     pub fn entry(dram_bytes: usize) -> Self {
-        let mut regs = [Some(0u32); 32];
-        regs[reg::SP.num() as usize] = Some(sp_init(dram_bytes));
+        let mut regs = [Interval::exact(0); 32];
+        regs[reg::SP.num() as usize] = Interval::exact(sp_init(dram_bytes));
         ConstState { regs }
     }
 
+    /// Known constant value of `r`, if its range is a singleton.
     #[inline]
     pub fn get(&self, r: Reg) -> Option<u32> {
+        self.range(r).singleton()
+    }
+
+    /// Value range of `r`.
+    #[inline]
+    pub fn range(&self, r: Reg) -> Interval {
         if r.num() == 0 {
-            Some(0)
+            Interval::exact(0)
         } else {
             self.regs[r.num() as usize]
         }
     }
 
     #[inline]
-    fn set(&mut self, r: Reg, v: Option<u32>) {
+    fn set(&mut self, r: Reg, v: Interval) {
         if r.num() != 0 {
             self.regs[r.num() as usize] = v;
         }
     }
 
-    fn meet(&self, other: &ConstState) -> ConstState {
+    fn join(&self, other: &ConstState) -> ConstState {
         let mut out = self.clone();
         for k in 0..32 {
-            if out.regs[k] != other.regs[k] {
-                out.regs[k] = None;
-            }
+            out.regs[k] = out.regs[k].join(other.regs[k]);
+        }
+        out
+    }
+
+    fn widen(&self, next: &ConstState) -> ConstState {
+        let mut out = self.clone();
+        for k in 0..32 {
+            out.regs[k] = out.regs[k].widen(next.regs[k]);
         }
         out
     }
@@ -255,54 +545,79 @@ impl ConstState {
         if let Some((rd, v)) = eval_scalar_def(i, pc, self) {
             self.set(rd, v);
         } else {
-            // Remaining scalar defs (loads, CSRs, custom rd writers)
+            // Remaining scalar defs (CSR reads, custom rd writers)
             // produce unknown values.
             for rd in effects(i, vlen_bytes).defs {
-                self.set(rd, None);
+                self.set(rd, Interval::TOP);
             }
         }
     }
 }
 
-/// Folded value of a pure scalar-producing instruction, or `None` if the
-/// instruction is not statically foldable (its defs must then be set to
-/// ⊤ from its [`effects`]). `mulh*`/`div*`/`rem*` are deliberately left
-/// unfolded: their corner semantics never feed address computations in
-/// practice and leaving them ⊤ cannot produce a false error finding.
-fn eval_scalar_def(i: &Instr, pc: u32, st: &ConstState) -> Option<(Reg, Option<u32>)> {
+/// Range of a scalar-producing instruction, or `None` if the
+/// instruction's defs must be set to ⊤ from its [`effects`]. Unlike the
+/// old flat-constant domain, `mulh*`/`div*`/`rem*` and sub-word loads
+/// keep (sound) partial information instead of dropping to ⊤.
+fn eval_scalar_def(i: &Instr, pc: u32, st: &ConstState) -> Option<(Reg, Interval)> {
     use Instr::*;
+    let e = |v: u32| Interval::exact(v);
     let r = match *i {
-        Lui { rd, imm } => (rd, Some(imm as u32)),
-        Auipc { rd, imm } => (rd, Some(pc.wrapping_add(imm as u32))),
-        Jal { rd, .. } | Jalr { rd, .. } => (rd, Some(pc.wrapping_add(4))),
-        Addi { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a.wrapping_add(imm as u32))),
-        Slti { rd, rs1, imm } => (rd, st.get(rs1).map(|a| ((a as i32) < imm) as u32)),
-        Sltiu { rd, rs1, imm } => (rd, st.get(rs1).map(|a| (a < imm as u32) as u32)),
-        Xori { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a ^ imm as u32)),
-        Ori { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a | imm as u32)),
-        Andi { rd, rs1, imm } => (rd, st.get(rs1).map(|a| a & imm as u32)),
-        Slli { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| a << (shamt & 31))),
-        Srli { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| a >> (shamt & 31))),
-        Srai { rd, rs1, shamt } => (rd, st.get(rs1).map(|a| ((a as i32) >> (shamt & 31)) as u32)),
-        Add { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_add)),
-        Sub { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_sub)),
-        Sll { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a << (b & 31))),
-        Slt { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| ((a as i32) < (b as i32)) as u32)),
-        Sltu { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| (a < b) as u32)),
-        Xor { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a ^ b)),
-        Srl { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a >> (b & 31))),
-        Sra { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| ((a as i32) >> (b & 31)) as u32)),
-        Or { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a | b)),
-        And { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, |a, b| a & b)),
-        Mul { rd, rs1, rs2 } => (rd, bin(st, rs1, rs2, u32::wrapping_mul)),
+        Lui { rd, imm } => (rd, e(imm as u32)),
+        Auipc { rd, imm } => (rd, e(pc.wrapping_add(imm as u32))),
+        Jal { rd, .. } | Jalr { rd, .. } => (rd, e(pc.wrapping_add(4))),
+        Addi { rd, rs1, imm } => (rd, st.range(rs1).add(e(imm as u32))),
+        Slti { rd, rs1, imm } => (rd, st.range(rs1).lts(e(imm as u32))),
+        Sltiu { rd, rs1, imm } => (rd, st.range(rs1).ltu(e(imm as u32))),
+        Xori { rd, rs1, imm } => (rd, st.range(rs1).xor(e(imm as u32))),
+        Ori { rd, rs1, imm } => (rd, st.range(rs1).or(e(imm as u32))),
+        Andi { rd, rs1, imm } => (rd, st.range(rs1).and(e(imm as u32))),
+        Slli { rd, rs1, shamt } => (rd, st.range(rs1).shl_imm(u32::from(shamt))),
+        Srli { rd, rs1, shamt } => (rd, st.range(rs1).shr_imm(u32::from(shamt))),
+        Srai { rd, rs1, shamt } => (rd, st.range(rs1).sar_imm(u32::from(shamt))),
+        Add { rd, rs1, rs2 } => (rd, st.range(rs1).add(st.range(rs2))),
+        Sub { rd, rs1, rs2 } => (rd, st.range(rs1).sub(st.range(rs2))),
+        Sll { rd, rs1, rs2 } => (rd, st.range(rs1).shl(st.range(rs2))),
+        Slt { rd, rs1, rs2 } => (rd, st.range(rs1).lts(st.range(rs2))),
+        Sltu { rd, rs1, rs2 } => (rd, st.range(rs1).ltu(st.range(rs2))),
+        Xor { rd, rs1, rs2 } => (rd, st.range(rs1).xor(st.range(rs2))),
+        Srl { rd, rs1, rs2 } => (rd, st.range(rs1).shr(st.range(rs2))),
+        Sra { rd, rs1, rs2 } => (rd, st.range(rs1).sar(st.range(rs2))),
+        Or { rd, rs1, rs2 } => (rd, st.range(rs1).or(st.range(rs2))),
+        And { rd, rs1, rs2 } => (rd, st.range(rs1).and(st.range(rs2))),
+        Mul { rd, rs1, rs2 } => {
+            let (a, b) = (st.range(rs1), st.range(rs2));
+            match (a.singleton(), b.singleton()) {
+                (Some(x), Some(y)) => (rd, e(x.wrapping_mul(y))),
+                _ => (rd, a.mul(b)),
+            }
+        }
+        Mulh { rd, rs1, rs2 } | Mulhsu { rd, rs1, rs2 } => {
+            (rd, st.range(rs1).mulh_signed(st.range(rs2)))
+        }
+        Mulhu { rd, rs1, rs2 } => (rd, st.range(rs1).mulhu(st.range(rs2))),
+        Div { rd, rs1, rs2 } => (rd, st.range(rs1).div_signed(st.range(rs2))),
+        Divu { rd, rs1, rs2 } => (rd, st.range(rs1).divu(st.range(rs2))),
+        Rem { rd, rs1, rs2 } => (rd, st.range(rs1).rem_signed(st.range(rs2))),
+        Remu { rd, rs1, rs2 } => (rd, st.range(rs1).remu(st.range(rs2))),
+        // Sub-word unsigned loads have architectural range bounds even
+        // though their values are unknown.
+        Lbu { rd, .. } => (rd, Interval::new(0, 0xff)),
+        Lhu { rd, .. } => (rd, Interval::new(0, 0xffff)),
+        Lb { rd, .. } | Lh { rd, .. } | Lw { rd, .. } => (rd, Interval::TOP),
         _ => return None,
     };
     Some(r)
 }
 
-#[inline]
-fn bin(st: &ConstState, rs1: Reg, rs2: Reg, f: impl Fn(u32, u32) -> u32) -> Option<u32> {
-    Some(f(st.get(rs1)?, st.get(rs2)?))
+/// Sound address range of a memory reference under `st`:
+/// `base + index + offset` in interval arithmetic (⊤ when a wrap
+/// straddles the address space).
+pub fn mem_addr_range(m: &MemRef, st: &ConstState) -> Interval {
+    let mut r = st.range(m.base);
+    if let Some(idx) = m.index {
+        r = r.add(st.range(idx));
+    }
+    r.add(Interval::exact(m.offset as u32))
 }
 
 // ---------------------------------------------------------------------------
@@ -469,25 +784,57 @@ pub fn forward_fixpoint<S: Clone + PartialEq>(
     ins
 }
 
-/// Constant-propagation in-states for every reachable block.
+/// Join updates per block before widening kicks in. Small enough to
+/// terminate fast, large enough that short counted loops (the usual
+/// induction: pointer += stride a few times) converge to their exact
+/// hull first.
+const WIDEN_AFTER: u32 = 8;
+
+/// Constant-propagation (value-range) in-states for every reachable
+/// block. Unlike the generic [`forward_fixpoint`], this driver widens:
+/// the interval domain has chains as long as the value space, so after
+/// [`WIDEN_AFTER`] joins a still-moving bound jumps to its extreme,
+/// bounding iteration without giving up soundness.
 pub fn const_states(
     cfg: &Cfg,
     cache: &DecodeCache,
     dram_bytes: usize,
     vlen_bytes: usize,
 ) -> Vec<Option<ConstState>> {
-    forward_fixpoint(
-        cfg,
-        ConstState::entry(dram_bytes),
-        |b, st| {
-            let mut out = st.clone();
-            for (pc, i) in cfg.instrs(cache, b) {
-                out.transfer(&i, pc, vlen_bytes);
+    let n = cfg.blocks.len();
+    let mut ins: Vec<Option<ConstState>> = vec![None; n];
+    let Some(e) = cfg.entry_block else { return ins };
+    ins[e] = Some(ConstState::entry(dram_bytes));
+    let mut updates = vec![0u32; n];
+    let mut inq = vec![false; n];
+    let mut work = VecDeque::from([e]);
+    inq[e] = true;
+    while let Some(b) = work.pop_front() {
+        inq[b] = false;
+        let mut out = ins[b].clone().expect("queued block has a state");
+        for (pc, i) in cfg.instrs(cache, &cfg.blocks[b]) {
+            out.transfer(&i, pc, vlen_bytes);
+        }
+        for &s in &cfg.blocks[b].succs {
+            let joined = match &ins[s] {
+                None => out.clone(),
+                Some(cur) => cur.join(&out),
+            };
+            let next = match &ins[s] {
+                Some(cur) if updates[s] >= WIDEN_AFTER => cur.widen(&joined),
+                _ => joined,
+            };
+            if ins[s].as_ref() != Some(&next) {
+                updates[s] += 1;
+                ins[s] = Some(next);
+                if !inq[s] {
+                    inq[s] = true;
+                    work.push_back(s);
+                }
             }
-            out
-        },
-        ConstState::meet,
-    )
+        }
+    }
+    ins
 }
 
 /// Must-initialized in-states for every reachable block.
@@ -664,5 +1011,67 @@ mod tests {
         // a0 = a1 + a2 : a0 dies, a1/a2 born
         st.transfer(&Instr::Add { rd: A0, rs1: A1, rs2: A2 }, 32);
         assert!(!st.scalar(A0) && st.scalar(A1) && st.scalar(A2));
+    }
+
+    #[test]
+    fn interval_add_sub_track_wraparound() {
+        let a = Interval::new(10, 20);
+        let b = Interval::new(1, 2);
+        assert_eq!(a.add(b), Interval::new(11, 22));
+        assert_eq!(a.sub(b), Interval::new(8, 19));
+        // Both ends wrap: still precise.
+        let top_end = Interval::new(u32::MAX - 1, u32::MAX);
+        assert_eq!(top_end.add(Interval::exact(2)), Interval::new(0, 1));
+        assert_eq!(
+            Interval::new(0, 1).sub(Interval::exact(2)),
+            Interval::new(u32::MAX - 1, u32::MAX)
+        );
+        // Straddling the 2^32 boundary loses everything.
+        assert!(Interval::new(u32::MAX - 1, u32::MAX).add(Interval::new(0, 2)).is_top());
+        assert!(Interval::new(0, 4).sub(Interval::exact(2)).is_top());
+    }
+
+    #[test]
+    fn interval_bitops_and_shifts_stay_sound() {
+        let a = Interval::new(0x10, 0x1f);
+        assert_eq!(a.shl_imm(4), Interval::new(0x100, 0x1f0));
+        assert_eq!(a.shr_imm(4), Interval::exact(1));
+        assert!(Interval::new(0, u32::MAX).shl_imm(1).is_top());
+        // Bit ops on non-singletons fall back to bit-smeared bounds.
+        let b = Interval::new(8, 11);
+        assert_eq!(a.and(b), Interval::new(0, 11));
+        assert_eq!(a.or(b), Interval::new(0x10, 0x1f));
+        assert_eq!(a.xor(b), Interval::new(0, 0x1f));
+        // All-negative ranges shift arithmetically without losing sign.
+        let neg = Interval::new(-64i32 as u32, -16i32 as u32);
+        assert_eq!(neg.sar_imm(2), Interval::new(-16i32 as u32, -4i32 as u32));
+        assert!(Interval::new(0, u32::MAX).sar_imm(2).is_top());
+    }
+
+    #[test]
+    fn interval_compare_divide_and_remainder() {
+        let small = Interval::new(0, 9);
+        let big = Interval::new(10, 20);
+        assert_eq!(small.ltu(big), Interval::exact(1));
+        assert_eq!(big.ltu(small), Interval::exact(0));
+        assert_eq!(small.ltu(Interval::new(5, 20)), Interval::new(0, 1));
+        assert_eq!(big.divu(Interval::new(2, 5)), Interval::new(2, 10));
+        assert!(big.divu(Interval::new(0, 5)).is_top(), "divisor range with 0 must give up");
+        assert_eq!(big.remu(Interval::exact(8)), Interval::new(0, 7));
+        assert_eq!(big.remu(Interval::new(0, 8)), Interval::new(0, 20));
+    }
+
+    #[test]
+    fn const_range_feeds_address_intervals() {
+        let mut st = ConstState::entry(1 << 20);
+        // lbu bounds its destination to a byte even though the loaded
+        // value itself is unknown.
+        st.transfer(&Instr::Lbu { rd: A0, rs1: SP, offset: -1 }, 0x1000, 32);
+        assert_eq!(st.range(A0), Interval::new(0, 255));
+        st.transfer(&Instr::Slli { rd: A0, rs1: A0, shamt: 2 }, 0x1004, 32);
+        assert_eq!(st.range(A0), Interval::new(0, 1020));
+        st.transfer(&Instr::Addi { rd: A1, rs1: ZERO, imm: 0x800 }, 0x1008, 32);
+        let m = MemRef { base: A1, index: Some(A0), offset: 4, len: 4, store: false };
+        assert_eq!(mem_addr_range(&m, &st), Interval::new(0x804, 0x804 + 1020));
     }
 }

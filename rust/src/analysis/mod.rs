@@ -21,6 +21,8 @@
 
 pub mod cfg;
 pub mod dataflow;
+pub mod perf;
+pub mod sched;
 
 use std::collections::HashMap;
 use std::fmt;
@@ -30,7 +32,11 @@ use crate::isa::DecodeCache;
 use crate::mem::config::MemConfig;
 
 pub use cfg::{BasicBlock, Cfg, Terminator};
-pub use dataflow::{effects, ConstState, Effects, InitState, LiveState, MemRef};
+pub use dataflow::{effects, ConstState, Effects, InitState, Interval, LiveState, MemRef};
+pub use perf::{
+    analyze_perf, BlockCost, CostSim, MemTiming, PerfModel, PerfReport, StallEvent, StallKind,
+};
+pub use sched::{schedule_program, verify_schedule, ScheduleOutcome};
 
 /// How many instructions of disassembly context a finding carries.
 const CONTEXT_WINDOW: usize = 4;
@@ -40,10 +46,15 @@ const MAX_RESOLVE_ROUNDS: usize = 64;
 
 /// Severity of a finding. Errors are the machine-checked tier: the
 /// lint oracle asserts that zero-error programs run clean on the ISS.
+/// `Perf` findings (the stall-attribution lints from [`perf`]) never
+/// affect correctness — they explain cycles, not faults — and are only
+/// produced by the dedicated perf entry points, never by
+/// [`analyze_program`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Severity {
     Error,
     Warning,
+    Perf,
 }
 
 /// Kind of a finding. The severity split is part of the analyzer's
@@ -89,6 +100,17 @@ pub enum FindingKind {
     DeadVectorWrite,
     /// Block not reachable from the entry pc.
     UnreachableBlock,
+    /// A dependent instruction waits on a load's result inside the
+    /// load-use window (perf: the bubble a scheduler can often hide).
+    LoadUseBubble,
+    /// An instruction waits for an earlier in-flight write to the same
+    /// destination register to retire (WAW ordering).
+    WawWait,
+    /// An issue group closed early (stall, or a serialising div/mul)
+    /// and dual-issue slots went unused.
+    WastedIssueSlot,
+    /// Two ops contended for a SIMD unit's one-issue-per-cycle slot.
+    UnitConflict,
 }
 
 impl FindingKind {
@@ -102,6 +124,7 @@ impl FindingKind {
             | UninitCarryRead | DeadWrite | DeadVectorWrite | UnreachableBlock => {
                 Severity::Warning
             }
+            LoadUseBubble | WawWait | WastedIssueSlot | UnitConflict => Severity::Perf,
         }
     }
 
@@ -126,6 +149,10 @@ impl FindingKind {
             DeadWrite => "dead-write",
             DeadVectorWrite => "dead-vector-write",
             UnreachableBlock => "unreachable-block",
+            LoadUseBubble => "load-use-bubble",
+            WawWait => "waw-wait",
+            WastedIssueSlot => "wasted-issue-slot",
+            UnitConflict => "unit-conflict",
         }
     }
 }
@@ -148,6 +175,7 @@ impl fmt::Display for Finding {
             match self.kind.severity() {
                 Severity::Error => "error  ",
                 Severity::Warning => "warning",
+                Severity::Perf => "perf   ",
             },
             self.kind.name(),
             self.pc,
@@ -195,6 +223,14 @@ impl Report {
         self.warnings().count()
     }
 
+    pub fn perf_findings(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.kind.severity() == Severity::Perf)
+    }
+
+    pub fn perf_count(&self) -> usize {
+        self.perf_findings().count()
+    }
+
     pub fn is_clean(&self) -> bool {
         self.error_count() == 0
     }
@@ -203,27 +239,41 @@ impl Report {
         self.findings.iter().any(|f| f.kind == kind)
     }
 
-    /// Human-readable rendering; warnings beyond `max_warnings` are
-    /// summarized with a count.
+    /// Human-readable rendering; warnings (and perf findings) beyond
+    /// `max_warnings` each are summarized with a count.
     pub fn render(&self, max_warnings: usize) -> String {
         use std::fmt::Write;
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{} blocks ({} reachable), {} instrs, {} errors, {} warnings",
+            "{} blocks ({} reachable), {} instrs, {} errors, {} warnings{}",
             self.blocks,
             self.reachable_blocks,
             self.instrs,
             self.error_count(),
-            self.warning_count()
+            self.warning_count(),
+            match self.perf_count() {
+                0 => String::new(),
+                n => format!(", {n} perf"),
+            }
         );
         let mut emitted_warnings = 0usize;
+        let mut emitted_perf = 0usize;
         for f in &self.findings {
-            if f.kind.severity() == Severity::Warning {
-                emitted_warnings += 1;
-                if emitted_warnings > max_warnings {
-                    continue;
+            match f.kind.severity() {
+                Severity::Warning => {
+                    emitted_warnings += 1;
+                    if emitted_warnings > max_warnings {
+                        continue;
+                    }
                 }
+                Severity::Perf => {
+                    emitted_perf += 1;
+                    if emitted_perf > max_warnings {
+                        continue;
+                    }
+                }
+                Severity::Error => {}
             }
             let _ = writeln!(out, "{f}");
             for line in &f.context {
@@ -232,6 +282,9 @@ impl Report {
         }
         if emitted_warnings > max_warnings {
             let _ = writeln!(out, "... {} more warnings", emitted_warnings - max_warnings);
+        }
+        if emitted_perf > max_warnings {
+            let _ = writeln!(out, "... {} more perf findings", emitted_perf - max_warnings);
         }
         out
     }
@@ -437,14 +490,27 @@ pub fn analyze_program(prog: &Program, config: &AnalysisConfig) -> Report {
                 });
             }
             if let Some(m) = e.mem {
-                let addr = st.get(m.base).and_then(|base| {
-                    let idx = match m.index {
-                        Some(r) => st.get(r)?,
-                        None => 0,
-                    };
-                    Some(base.wrapping_add(idx).wrapping_add(m.offset as u32))
-                });
+                let range = dataflow::mem_addr_range(&m, &st);
+                let addr = range.singleton();
                 accesses.push(Access { pc, addr, len: m.len, store: m.store });
+                if addr.is_none() && !range.is_top() {
+                    // Range-only knowledge still decides out-of-DRAM when
+                    // the *entire* interval faults (the range is sound, so
+                    // every concrete execution faults) — keeps the
+                    // "errors = what the architecture faults on" contract.
+                    if range.lo as u64 + m.len as u64 > dram {
+                        findings.push(Finding {
+                            kind: FindingKind::OutOfDramAccess,
+                            pc,
+                            message: format!(
+                                "{} of {} bytes at an address in {range} runs past the end of DRAM ({dram:#x} bytes) for every possible value",
+                                if m.store { "store" } else { "load" },
+                                m.len
+                            ),
+                            context: ctx(pc),
+                        });
+                    }
+                }
                 if let Some(a) = addr {
                     let end = a as u64 + m.len as u64;
                     let align: u32 = if m.index.is_some() { 4 } else { m.len as u32 };

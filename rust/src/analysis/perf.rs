@@ -1,0 +1,725 @@
+//! Static per-basic-block cycle cost model (DESIGN.md §12).
+//!
+//! [`PerfModel`] replays the timed core's issue rules — operand RAW
+//! stalls against per-register ready times, the `load_use_cycles` load
+//! pipe, the iterative divider issuing alone, vector-destination WAW
+//! ordering, each SIMD unit's one-issue-per-cycle slot, taken
+//! branches/jumps closing their issue group, and the `issue_width`
+//! 1/2/4 group accounting — over a straight-line instruction sequence
+//! *without executing it*. The replay is a transcription of
+//! `Core::step` + `Core::exec_custom` with the architectural work
+//! removed; every timing parameter is read from [`CoreConfig`] (which
+//! also owns the shared `serial_issue` predicate), and custom-op
+//! latencies come from `simd::units::static_op`, pinned against the
+//! executing units by a unit test.
+//!
+//! ## Exactness contract
+//!
+//! Under [`MemTiming::Flat`] (magic memory: every access issues and
+//! completes in the same cycle, instruction fetch never stalls) the
+//! estimate for a straight-line sequence entered with all registers
+//! ready is **cycle-exact** against `Core` at every issue width — a
+//! property test drives this over the fuzz generator and every registry
+//! workload's basic blocks. Under [`MemTiming::Bounded`] each data
+//! access may additionally cost up to `worst_access_cycles`, so costs
+//! widen to a `[min, max]` interval: `min` is the flat/all-hit replay,
+//! `max` a conservative estimate, not a proven bound (it ignores fetch
+//! stalls and cross-block cache state).
+//!
+//! Per-block costs assume a clean entry state (no in-flight writes from
+//! a predecessor block) and model the terminator in its taken form;
+//! both assumptions are part of why whole-program numbers from block
+//! costs are estimates even under flat memory.
+
+use crate::asm::Program;
+use crate::core::CoreConfig;
+use crate::isa::{reg::V0, Instr, Reg, VReg};
+use crate::mem::config::MemConfig;
+use crate::simd::units::{static_op, StaticMemKind};
+
+use super::{recover_cfg, AnalysisConfig, Finding, FindingKind};
+
+/// What the model assumes about the memory hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTiming {
+    /// Magic/flat memory: every access ready the cycle it issues. This
+    /// is the regime the cycle-exactness guarantee covers.
+    Flat,
+    /// A cached hierarchy: each data access may cost up to
+    /// `worst_access_cycles` extra cycles, widening costs to intervals.
+    Bounded { worst_access_cycles: u64 },
+}
+
+impl MemTiming {
+    /// A conservative per-access bound derived from a memory
+    /// configuration: DRAM burst setup plus the LLC-block transfer time
+    /// plus the LLC hit latency — the cost of a full miss that has to
+    /// stream one LLC block from one DRAM channel.
+    pub fn bounded_by(mem: &MemConfig) -> MemTiming {
+        let block = mem.llc.block_bytes() as u64;
+        let per_cycle = mem.dram.bytes_per_cycle().max(1) as u64;
+        MemTiming::Bounded {
+            worst_access_cycles: mem.dram.burst_setup_cycles
+                + block.div_ceil(per_cycle)
+                + mem.llc_hit_cycles,
+        }
+    }
+
+    fn worst(self) -> u64 {
+        match self {
+            MemTiming::Flat => 0,
+            MemTiming::Bounded { worst_access_cycles } => worst_access_cycles,
+        }
+    }
+}
+
+/// Why an instruction's issue slipped past the cycle its group opened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StallKind {
+    /// Waited on a load result inside the load-use window.
+    LoadUse,
+    /// Waited for an earlier in-flight write to the same vector
+    /// destination to retire (write-ordering).
+    Waw,
+    /// An issue group closed with unused dual-issue slots (operand
+    /// stall past the group, or a serialising div/mul issuing alone).
+    WastedSlots,
+    /// Contended for a SIMD unit's one-issue-per-cycle slot.
+    UnitConflict,
+}
+
+/// One pc-anchored stall the replay attributed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallEvent {
+    /// The stalled (or group-closing) instruction.
+    pub pc: u32,
+    pub kind: StallKind,
+    /// Bubble length in cycles for stalls; unused slots for
+    /// [`StallKind::WastedSlots`].
+    pub cycles: u64,
+    /// The producing instruction for load-use / WAW waits.
+    pub producer: Option<u32>,
+    /// The contended SIMD slot for [`StallKind::UnitConflict`].
+    pub unit: Option<usize>,
+}
+
+/// Cost of one basic block (or straight-line sequence).
+#[derive(Debug, Clone)]
+pub struct BlockCost {
+    /// pc of the first instruction.
+    pub pc: u32,
+    /// Instructions the replay covered.
+    pub instrs: usize,
+    /// Cycles under flat/all-hit memory.
+    pub min_cycles: u64,
+    /// Cycles with every access at the worst-case bound (equals
+    /// `min_cycles` under [`MemTiming::Flat`]).
+    pub max_cycles: u64,
+    /// Whether `min_cycles` carries the cycle-exactness guarantee:
+    /// flat memory and the whole sequence modeled (no fault stop).
+    pub exact: bool,
+    /// False when the replay stopped early at an instruction the core
+    /// would fault on (unknown custom op, `ebreak`).
+    pub complete: bool,
+    /// Stall attributions from the flat replay, in program order.
+    pub events: Vec<StallEvent>,
+}
+
+/// The static cost model: a [`CoreConfig`] (timing parameters + issue
+/// rules) plus a memory assumption.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfModel {
+    pub cfg: CoreConfig,
+    pub mem: MemTiming,
+}
+
+/// Replay state: the timing-relevant slice of `Core`, nothing else.
+#[derive(Clone)]
+struct Replay {
+    cfg: CoreConfig,
+    /// Extra cycles charged to every data access (0 = flat).
+    extra: u64,
+    record: bool,
+    cycle: u64,
+    issue_used: u64,
+    reg_ready: [u64; 32],
+    vreg_ready: [u64; 8],
+    /// Last issue cycle per SIMD slot (u64::MAX = never, as in `Core`).
+    unit_issue_cycle: [u64; 4],
+    /// Last writer of each scalar register: (pc, was-a-load).
+    reg_writer: [Option<(u32, bool)>; 32],
+    vreg_writer: [Option<(u32, bool)>; 8],
+    halted: bool,
+    events: Vec<StallEvent>,
+}
+
+enum StepExit {
+    Continue,
+    Halt,
+    /// The core would fault here (unknown custom op, `ebreak`): the
+    /// replay stops with the cycle count accumulated so far.
+    Fault,
+}
+
+impl Replay {
+    fn new(cfg: CoreConfig, extra: u64, record: bool) -> Self {
+        Replay {
+            cfg,
+            extra,
+            record,
+            cycle: 0,
+            issue_used: 0,
+            reg_ready: [0; 32],
+            vreg_ready: [0; 8],
+            unit_issue_cycle: [u64::MAX; 4],
+            reg_writer: [None; 32],
+            vreg_writer: [None; 8],
+            halted: false,
+            events: Vec::new(),
+        }
+    }
+
+    fn read_reg(&mut self, r: Reg, t: &mut u64, pc: u32) {
+        let n = r.num() as usize;
+        if self.reg_ready[n] > *t {
+            let wait = self.reg_ready[n] - *t;
+            if self.record {
+                if let Some((src, true)) = self.reg_writer[n] {
+                    self.events.push(StallEvent {
+                        pc,
+                        kind: StallKind::LoadUse,
+                        cycles: wait,
+                        producer: Some(src),
+                        unit: None,
+                    });
+                }
+            }
+            *t = self.reg_ready[n];
+        }
+    }
+
+    fn read_vreg(&mut self, v: VReg, t: &mut u64, pc: u32) {
+        let n = v.num() as usize;
+        if self.vreg_ready[n] > *t {
+            let wait = self.vreg_ready[n] - *t;
+            if self.record {
+                if let Some((src, true)) = self.vreg_writer[n] {
+                    self.events.push(StallEvent {
+                        pc,
+                        kind: StallKind::LoadUse,
+                        cycles: wait,
+                        producer: Some(src),
+                        unit: None,
+                    });
+                }
+            }
+            *t = self.vreg_ready[n];
+        }
+    }
+
+    fn write_reg(&mut self, r: Reg, ready: u64, pc: u32, load: bool) {
+        let n = r.num() as usize;
+        if n == 0 {
+            return;
+        }
+        self.reg_ready[n] = ready;
+        self.reg_writer[n] = Some((pc, load));
+    }
+
+    fn write_vreg(&mut self, v: VReg, ready: u64, pc: u32, load: bool) {
+        let n = v.num() as usize;
+        if n == 0 {
+            return;
+        }
+        self.vreg_ready[n] = ready;
+        self.vreg_writer[n] = Some((pc, load));
+    }
+
+    fn wasted(&mut self, pc: u32, slots: u64) {
+        if self.record && slots > 0 {
+            self.events.push(StallEvent {
+                pc,
+                kind: StallKind::WastedSlots,
+                cycles: slots,
+                producer: None,
+                unit: None,
+            });
+        }
+    }
+
+    /// One instruction through the issue rules — structured exactly as
+    /// `Core::step` (group-full close, serial-issue close, per-class
+    /// operand stalls and latencies, post-issue group accounting).
+    /// Returns the exit state and the instruction's issue time (the
+    /// scheduler's selection metric).
+    fn step(&mut self, pc: u32, instr: &Instr, taken: bool) -> (StepExit, u64) {
+        use Instr::*;
+        let width = self.cfg.issue_width as u64;
+        if width > 1 && self.issue_used >= width {
+            self.cycle += self.cfg.base_cpi;
+            self.issue_used = 0;
+        }
+        // Fetch is modeled as always ready: true under flat memory
+        // (magic fetch), an approximation otherwise.
+        let serial = width > 1 && self.cfg.serial_issue(instr);
+        if serial && self.issue_used > 0 {
+            self.wasted(pc, width - self.issue_used);
+            self.cycle += self.cfg.base_cpi;
+            self.issue_used = 0;
+        }
+
+        let group_cycle = self.cycle;
+        let mut t = self.cycle;
+        let mut redirect = false;
+        match *instr {
+            Lui { rd, .. } => self.write_reg(rd, t + 1, pc, false),
+            Auipc { rd, .. } => self.write_reg(rd, t + 1, pc, false),
+            Jal { rd, .. } => {
+                self.write_reg(rd, t + 1, pc, false);
+                redirect = true;
+                t += self.cfg.branch_taken_penalty;
+            }
+            Jalr { rd, rs1, .. } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.write_reg(rd, t + 1, pc, false);
+                redirect = true;
+                t += self.cfg.branch_taken_penalty;
+            }
+            Beq { rs1, rs2, .. }
+            | Bne { rs1, rs2, .. }
+            | Blt { rs1, rs2, .. }
+            | Bge { rs1, rs2, .. }
+            | Bltu { rs1, rs2, .. }
+            | Bgeu { rs1, rs2, .. } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.read_reg(rs2, &mut t, pc);
+                if taken {
+                    redirect = true;
+                    t += self.cfg.branch_taken_penalty;
+                }
+            }
+            Lb { rd, rs1, .. }
+            | Lh { rd, rs1, .. }
+            | Lw { rd, rs1, .. }
+            | Lbu { rd, rs1, .. }
+            | Lhu { rd, rs1, .. } => {
+                self.read_reg(rs1, &mut t, pc);
+                t += self.extra;
+                let ready = self.cfg.flat_load_ready(t);
+                self.write_reg(rd, ready, pc, true);
+            }
+            Sb { rs1, rs2, .. } | Sh { rs1, rs2, .. } | Sw { rs1, rs2, .. } => {
+                self.read_reg(rs1, &mut t, pc);
+                // Widths > 1 model a store buffer: the data operand is
+                // consumed at commit and never stalls issue.
+                if width <= 1 {
+                    self.read_reg(rs2, &mut t, pc);
+                }
+                t += self.extra;
+            }
+            Addi { rd, rs1, .. }
+            | Slti { rd, rs1, .. }
+            | Sltiu { rd, rs1, .. }
+            | Xori { rd, rs1, .. }
+            | Ori { rd, rs1, .. }
+            | Andi { rd, rs1, .. }
+            | Slli { rd, rs1, .. }
+            | Srli { rd, rs1, .. }
+            | Srai { rd, rs1, .. } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.write_reg(rd, t + 1, pc, false);
+            }
+            Add { rd, rs1, rs2 }
+            | Sub { rd, rs1, rs2 }
+            | Sll { rd, rs1, rs2 }
+            | Slt { rd, rs1, rs2 }
+            | Sltu { rd, rs1, rs2 }
+            | Xor { rd, rs1, rs2 }
+            | Srl { rd, rs1, rs2 }
+            | Sra { rd, rs1, rs2 }
+            | Or { rd, rs1, rs2 }
+            | And { rd, rs1, rs2 } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.read_reg(rs2, &mut t, pc);
+                self.write_reg(rd, t + 1, pc, false);
+            }
+            Mul { rd, rs1, rs2 }
+            | Mulh { rd, rs1, rs2 }
+            | Mulhsu { rd, rs1, rs2 }
+            | Mulhu { rd, rs1, rs2 } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.read_reg(rs2, &mut t, pc);
+                t += self.cfg.mul_cycles - 1;
+                self.write_reg(rd, t + 1, pc, false);
+            }
+            Div { rd, rs1, rs2 }
+            | Divu { rd, rs1, rs2 }
+            | Rem { rd, rs1, rs2 }
+            | Remu { rd, rs1, rs2 } => {
+                self.read_reg(rs1, &mut t, pc);
+                self.read_reg(rs2, &mut t, pc);
+                t += self.cfg.div_cycles - 1;
+                self.write_reg(rd, t + 1, pc, false);
+            }
+            Fence => {}
+            Ecall => self.halted = true,
+            Ebreak => return (StepExit::Fault, t),
+            // csrrs reads no base register in the timed core (the
+            // counter CSRs have no register operand path).
+            Csrrs { rd, .. } => self.write_reg(rd, t + 1, pc, false),
+            CustomI { slot, funct3, ops } => {
+                match self.custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    None,
+                    ops.vrs1,
+                    ops.vrs2,
+                    ops.rd,
+                    ops.vrd1,
+                    ops.vrd2,
+                    &mut t,
+                ) {
+                    Some(()) => {}
+                    None => return (StepExit::Fault, t),
+                }
+            }
+            CustomS { slot, funct3, ops } => {
+                match self.custom(
+                    pc,
+                    slot.index(),
+                    funct3,
+                    ops.rs1,
+                    Some(ops.rs2),
+                    ops.vrs1,
+                    V0,
+                    ops.rd,
+                    ops.vrd1,
+                    V0,
+                    &mut t,
+                ) {
+                    Some(()) => {}
+                    None => return (StepExit::Fault, t),
+                }
+            }
+        }
+
+        if width <= 1 {
+            self.cycle = t + self.cfg.base_cpi;
+        } else if serial {
+            self.cycle = t + self.cfg.base_cpi;
+            self.issue_used = 0;
+        } else {
+            if t == group_cycle {
+                self.issue_used += 1;
+            } else {
+                if self.issue_used > 0 {
+                    self.wasted(pc, width - self.issue_used);
+                }
+                self.cycle = t;
+                self.issue_used = 1;
+            }
+            if redirect || self.halted {
+                self.cycle = t + self.cfg.base_cpi;
+                self.issue_used = 0;
+            }
+        }
+        if self.halted {
+            (StepExit::Halt, t)
+        } else {
+            (StepExit::Continue, t)
+        }
+    }
+
+    /// The custom-op issue path, mirroring `Core::exec_custom`: both
+    /// vector sources are read (stalling) regardless of semantic use,
+    /// destinations wait for in-flight writes (WAW), and at width > 1
+    /// each slot accepts one issue per cycle.
+    #[allow(clippy::too_many_arguments)]
+    fn custom(
+        &mut self,
+        pc: u32,
+        slot: usize,
+        funct3: u8,
+        rs1: Reg,
+        rs2: Option<Reg>,
+        vrs1: VReg,
+        vrs2: VReg,
+        rd: Reg,
+        vrd1: VReg,
+        vrd2: VReg,
+        t: &mut u64,
+    ) -> Option<()> {
+        let op = static_op(slot, funct3, self.cfg.lanes())?;
+        self.read_reg(rs1, t, pc);
+        if let Some(r) = rs2 {
+            self.read_reg(r, t, pc);
+        }
+        self.read_vreg(vrs1, t, pc);
+        self.read_vreg(vrs2, t, pc);
+        for v in [vrd1, vrd2] {
+            let n = v.num() as usize;
+            if n != 0 && self.vreg_ready[n] > *t {
+                let wait = self.vreg_ready[n] - *t;
+                if self.record {
+                    let producer = self.vreg_writer[n].map(|(src, _)| src);
+                    self.events.push(StallEvent {
+                        pc,
+                        kind: StallKind::Waw,
+                        cycles: wait,
+                        producer,
+                        unit: None,
+                    });
+                }
+                *t = self.vreg_ready[n];
+            }
+        }
+        if self.cfg.issue_width > 1 {
+            if self.unit_issue_cycle[slot] == *t {
+                *t += 1;
+                if self.record {
+                    self.events.push(StallEvent {
+                        pc,
+                        kind: StallKind::UnitConflict,
+                        cycles: 1,
+                        producer: None,
+                        unit: Some(slot),
+                    });
+                }
+            }
+            self.unit_issue_cycle[slot] = *t;
+        }
+        match op.mem {
+            Some(StaticMemKind::Load) => {
+                *t += self.extra;
+                let ready = (*t + op.latency).max(*t + 2);
+                self.write_vreg(vrd1, ready, pc, true);
+            }
+            Some(StaticMemKind::Store) => {
+                *t += self.extra;
+            }
+            None => {
+                let ready = *t + op.latency;
+                if op.writes_vrd1 {
+                    self.write_vreg(vrd1, ready, pc, false);
+                }
+                if op.writes_vrd2 {
+                    self.write_vreg(vrd2, ready, pc, false);
+                }
+                if op.writes_rd {
+                    self.write_reg(rd, ready, pc, false);
+                }
+            }
+        }
+        Some(())
+    }
+}
+
+impl PerfModel {
+    pub fn new(cfg: CoreConfig, mem: MemTiming) -> Self {
+        PerfModel { cfg, mem }
+    }
+
+    /// A flat-memory model (the cycle-exact regime).
+    pub fn flat(cfg: CoreConfig) -> Self {
+        PerfModel { cfg, mem: MemTiming::Flat }
+    }
+
+    /// Cost of a straight-line sequence entered with a clean state (all
+    /// registers ready, no open issue group). Branches are modeled in
+    /// their taken form; the replay stops (with `complete = false`)
+    /// at an instruction the core would fault on.
+    pub fn sequence_cost(&self, seq: &[(u32, Instr)]) -> BlockCost {
+        let (min_cycles, events, covered, complete) = self.replay(seq, 0, true);
+        let worst = self.mem.worst();
+        let max_cycles = if worst == 0 {
+            min_cycles
+        } else {
+            self.replay(seq, worst, false).0
+        };
+        BlockCost {
+            pc: seq.first().map(|&(pc, _)| pc).unwrap_or(0),
+            instrs: covered,
+            min_cycles,
+            max_cycles,
+            exact: self.mem == MemTiming::Flat && complete,
+            complete,
+            events,
+        }
+    }
+
+    fn replay(
+        &self,
+        seq: &[(u32, Instr)],
+        extra: u64,
+        record: bool,
+    ) -> (u64, Vec<StallEvent>, usize, bool) {
+        let mut r = Replay::new(self.cfg, extra, record);
+        let mut covered = 0usize;
+        let mut complete = true;
+        for &(pc, ref instr) in seq {
+            match r.step(pc, instr, true).0 {
+                StepExit::Continue => covered += 1,
+                StepExit::Halt => {
+                    covered += 1;
+                    break;
+                }
+                StepExit::Fault => {
+                    complete = false;
+                    break;
+                }
+            }
+        }
+        (r.cycle, r.events, covered, complete)
+    }
+
+    /// An incremental flat-memory simulator over the same replay: the
+    /// list scheduler's lookahead (peek a candidate's issue time, then
+    /// commit the chosen one).
+    pub fn sim(&self) -> CostSim {
+        CostSim { r: Replay::new(self.cfg, self.mem.worst(), false) }
+    }
+
+    /// Per-block costs for every reachable block of `prog`, in block
+    /// order.
+    pub fn block_costs(&self, prog: &Program, acfg: &AnalysisConfig) -> Vec<BlockCost> {
+        let (cache, graph) = recover_cfg(prog, acfg);
+        let mut out = Vec::new();
+        for b in graph.blocks.iter().filter(|b| b.reachable && b.ninstr > 0) {
+            let seq: Vec<(u32, Instr)> = graph.instrs(&cache, b).collect();
+            out.push(self.sequence_cost(&seq));
+        }
+        out
+    }
+}
+
+/// Incremental cost simulator (see [`PerfModel::sim`]).
+#[derive(Clone)]
+pub struct CostSim {
+    r: Replay,
+}
+
+impl CostSim {
+    /// The issue time `instr` would get if stepped now, without
+    /// mutating the simulator.
+    pub fn peek_issue(&self, pc: u32, instr: &Instr) -> u64 {
+        let mut probe = self.r.clone();
+        probe.step(pc, instr, true).1
+    }
+
+    /// Commit `instr`.
+    pub fn step(&mut self, pc: u32, instr: &Instr) {
+        self.r.step(pc, instr, true);
+    }
+
+    /// Cycles consumed so far.
+    pub fn cycle(&self) -> u64 {
+        self.r.cycle
+    }
+}
+
+/// Per-block costs plus the stall findings, for the `analyze --perf`
+/// surface.
+#[derive(Debug)]
+pub struct PerfReport {
+    pub costs: Vec<BlockCost>,
+    pub findings: Vec<Finding>,
+}
+
+impl PerfReport {
+    /// Flat-memory whole-program lower bound: the sum of block minima
+    /// (each block entered once, clean state, taken terminators).
+    pub fn total_min_cycles(&self) -> u64 {
+        self.costs.iter().map(|c| c.min_cycles).sum()
+    }
+}
+
+/// Run the cost model over every reachable block and turn the stall
+/// events into pc-anchored `perf`-severity findings. Deliberately a
+/// separate entry point from `analyze_program`: perf findings never
+/// affect `Report::is_clean()` or the lint oracle.
+pub fn analyze_perf(
+    prog: &Program,
+    acfg: &AnalysisConfig,
+    model: &PerfModel,
+) -> PerfReport {
+    let (cache, graph) = recover_cfg(prog, acfg);
+    let costs = model.block_costs(prog, acfg);
+    // Constant-propagated address ranges: attached to data-port
+    // (c0 slot) conflict findings so the report says *which* accesses
+    // contend, not just that two did.
+    let vlen_bytes = acfg.vlen_bits / 8;
+    let consts = super::dataflow::const_states(&graph, &cache, acfg.dram_bytes, vlen_bytes);
+    let mut addr_ranges: std::collections::HashMap<u32, super::Interval> =
+        std::collections::HashMap::new();
+    for (id, b) in graph.blocks.iter().enumerate() {
+        let Some(st0) = &consts[id] else { continue };
+        let mut st = st0.clone();
+        for (pc, i) in graph.instrs(&cache, b) {
+            let e = super::dataflow::effects(&i, vlen_bytes);
+            if let Some(m) = e.mem {
+                let r = super::dataflow::mem_addr_range(&m, &st);
+                if !r.is_top() {
+                    addr_ranges.insert(pc, r);
+                }
+            }
+            st.transfer(&i, pc, vlen_bytes);
+        }
+    }
+    let mut findings = Vec::new();
+    for cost in &costs {
+        for ev in &cost.events {
+            let (kind, message) = match ev.kind {
+                StallKind::LoadUse => (
+                    FindingKind::LoadUseBubble,
+                    format!(
+                        "stalls {} cycle(s) on the load issued at {:#010x} (load-use window)",
+                        ev.cycles,
+                        ev.producer.unwrap_or(0)
+                    ),
+                ),
+                StallKind::Waw => (
+                    FindingKind::WawWait,
+                    match ev.producer {
+                        Some(src) => format!(
+                            "waits {} cycle(s) for the in-flight vector write from {src:#010x} \
+                             to retire (WAW ordering)",
+                            ev.cycles
+                        ),
+                        None => format!(
+                            "waits {} cycle(s) for an in-flight vector write to retire \
+                             (WAW ordering)",
+                            ev.cycles
+                        ),
+                    },
+                ),
+                StallKind::WastedSlots => (
+                    FindingKind::WastedIssueSlot,
+                    format!("closes its issue group early; {} issue slot(s) wasted", ev.cycles),
+                ),
+                StallKind::UnitConflict => {
+                    let slot = ev.unit.unwrap_or(0);
+                    let mut msg = format!(
+                        "waits 1 cycle for SIMD unit slot c{slot} (one issue per cycle{})",
+                        if slot == 0 { ", one data-port access" } else { "" }
+                    );
+                    if slot == 0 {
+                        if let Some(r) = addr_ranges.get(&ev.pc) {
+                            msg.push_str(&format!("; this access targets {r}"));
+                        }
+                    }
+                    (FindingKind::UnitConflict, msg)
+                }
+            };
+            findings.push(Finding {
+                kind,
+                pc: ev.pc,
+                message,
+                context: super::context_window(&cache, &prog.text, ev.pc),
+            });
+        }
+    }
+    findings.sort_by_key(|f| (f.kind.severity(), f.pc));
+    PerfReport { costs, findings }
+}

@@ -1,0 +1,329 @@
+//! Semantics-preserving intra-block instruction scheduler.
+//!
+//! [`schedule_program`] reorders instructions *within* each basic block
+//! to shrink the static cycle cost from [`super::perf::PerfModel`] —
+//! hoisting loads out of their use window, pairing independent ops into
+//! dual-issue groups, and spreading SIMD-unit issues apart. The block
+//! structure, every control transfer, and all architectural semantics
+//! are preserved by construction:
+//!
+//! * **Pinned instructions never move.** PC-relative producers
+//!   (`auipc`/`jal`/`jalr`), `csrrs` (counter reads are
+//!   position-sensitive under lockstep), `fence`, `ecall`, `ebreak`,
+//!   undecodable custom ops (they fault at their own pc), and the
+//!   block's terminator act as full barriers: everything before stays
+//!   before, everything after stays after, so their absolute word
+//!   position is unchanged and CFG leaders/targets cannot shift.
+//! * **Dependences are edges.** RAW/WAR/WAW over scalar registers
+//!   (`x0` ignored) and vector registers (`v0` ignored), the `c3`
+//!   prefix-unit carry state (carry-touching ops stay in program
+//!   order), and memory: no memory operation crosses a store (loads
+//!   may reorder with loads only).
+//!
+//! The original order is always a topological order of this DAG, and a
+//! block is only rewritten when the replayed cost of the new order is
+//! strictly lower — scheduling can never pessimize the model's
+//! estimate. Equivalence of the rewritten program is not argued, it is
+//! *checked*: [`verify_schedule`] runs original and scheduled programs
+//! to completion on the reference ISS and demands identical final
+//! architectural state, then cosimulates the scheduled program against
+//! the ISS in lockstep on the timed core.
+
+use std::cmp::Reverse;
+
+use super::cfg::Terminator;
+use super::dataflow::effects;
+use super::perf::PerfModel;
+use super::{recover_cfg, AnalysisConfig};
+use crate::arch::ArchState;
+use crate::asm::Program;
+use crate::core::CoreConfig;
+use crate::cosim::{run_lockstep, LockstepOutcome};
+use crate::isa::Instr;
+use crate::machine::Machine;
+use crate::ref_iss::RefIss;
+use crate::simd::units::{static_op, StaticMemKind};
+
+/// Result of scheduling a program.
+#[derive(Debug, Clone)]
+pub struct ScheduleOutcome {
+    /// The rewritten program (identical to the input when nothing
+    /// improved).
+    pub program: Program,
+    /// Blocks whose instruction order changed.
+    pub blocks_changed: usize,
+    /// Instructions that ended up at a different word index.
+    pub instrs_moved: usize,
+}
+
+impl ScheduleOutcome {
+    pub fn changed(&self) -> bool {
+        self.blocks_changed > 0
+    }
+}
+
+/// Reorder instructions within each reachable basic block of `prog` to
+/// minimize the flat-memory cost model for `core`. Only blocks where
+/// the model predicts a strictly lower cycle count are rewritten.
+pub fn schedule_program(
+    prog: &Program,
+    acfg: &AnalysisConfig,
+    core: &CoreConfig,
+) -> ScheduleOutcome {
+    let (cache, graph) = recover_cfg(prog, acfg);
+    let model = PerfModel::flat(*core);
+    let vlen_bytes = core.vlen_bytes();
+    let mut text = prog.text.clone();
+    let mut blocks_changed = 0;
+    let mut instrs_moved = 0;
+    for b in graph.blocks.iter().filter(|b| b.reachable) {
+        // A FallOff block runs off the end of the text segment and
+        // faults; moving anything would move the fault point.
+        if b.ninstr < 3 || matches!(b.term, Terminator::FallOff) {
+            continue;
+        }
+        let seq: Vec<(u32, Instr)> = graph.instrs(&cache, b).collect();
+        // `instrs` yields the terminator instruction for blocks ended by
+        // an explicit control transfer / halt; it must stay last.
+        let term_pinned = !matches!(b.term, Terminator::FallThrough);
+        if let Some(order) = schedule_block(&seq, term_pinned, vlen_bytes, &model) {
+            blocks_changed += 1;
+            for (k, &src) in order.iter().enumerate() {
+                if src != k {
+                    instrs_moved += 1;
+                }
+                text[b.start + k] = prog.text[b.start + src];
+            }
+        }
+    }
+    let mut program = prog.clone();
+    program.text = text;
+    ScheduleOutcome { program, blocks_changed, instrs_moved }
+}
+
+/// Critical-path weight of an instruction: its result latency under the
+/// flat model, used as the list-scheduling priority contribution.
+fn latency_weight(i: &Instr, cfg: &CoreConfig) -> u64 {
+    use Instr::*;
+    match *i {
+        _ if i.is_load() => cfg.load_use_cycles.max(2),
+        Mul { .. } | Mulh { .. } | Mulhsu { .. } | Mulhu { .. } => cfg.mul_cycles,
+        Div { .. } | Divu { .. } | Rem { .. } | Remu { .. } => cfg.div_cycles,
+        CustomI { slot, funct3, .. } | CustomS { slot, funct3, .. } => {
+            match static_op(slot.index(), funct3, cfg.lanes()) {
+                Some(op) => match op.mem {
+                    Some(StaticMemKind::Load) => op.latency.max(2),
+                    _ => op.latency.max(1),
+                },
+                None => 1,
+            }
+        }
+        _ => 1,
+    }
+}
+
+/// Schedule one straight-line sequence. Returns the new order as
+/// `order[new_index] = old_index`, or `None` when the model does not
+/// predict a strict improvement.
+fn schedule_block(
+    seq: &[(u32, Instr)],
+    term_pinned: bool,
+    vlen_bytes: usize,
+    model: &PerfModel,
+) -> Option<Vec<usize>> {
+    use Instr::*;
+    let n = seq.len();
+    let effs: Vec<_> = seq.iter().map(|(_, i)| effects(i, vlen_bytes)).collect();
+    let mut pinned: Vec<bool> = seq
+        .iter()
+        .zip(&effs)
+        .map(|(&(_, i), e)| {
+            i.is_pc_relative()
+                || matches!(i, Csrrs { .. } | Fence | Ecall | Ebreak)
+                || !e.valid_custom
+        })
+        .collect();
+    if term_pinned {
+        pinned[n - 1] = true;
+    }
+
+    // Dependence DAG, edges j -> i for j < i. The original order is a
+    // topological order by construction.
+    let dep = |j: usize, i: usize| -> bool {
+        if pinned[i] || pinned[j] {
+            return true;
+        }
+        let (a, b) = (&effs[j], &effs[i]);
+        let raw = a.defs.iter().any(|d| d.num() != 0 && b.uses.contains(d));
+        let war = b.defs.iter().any(|d| d.num() != 0 && a.uses.contains(d));
+        let waw = a.defs.iter().any(|d| d.num() != 0 && b.defs.contains(d));
+        if raw || war || waw {
+            return true;
+        }
+        let vraw = a.vdefs.iter().any(|d| d.num() != 0 && b.vuses.contains(d));
+        let vwar = b.vdefs.iter().any(|d| d.num() != 0 && a.vuses.contains(d));
+        let vwaw = a.vdefs.iter().any(|d| d.num() != 0 && b.vdefs.contains(d));
+        if vraw || vwar || vwaw {
+            return true;
+        }
+        // The c3 carry is a single piece of hidden state: keep every
+        // carry-touching op in program order.
+        if (a.uses_carry || a.defs_carry) && (b.uses_carry || b.defs_carry) {
+            return true;
+        }
+        // Memory: nothing crosses a store (no alias analysis); loads
+        // reorder freely with loads.
+        match (&a.mem, &b.mem) {
+            (Some(ma), Some(mb)) => ma.store || mb.store,
+            _ => false,
+        }
+    };
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 1..n {
+        for j in 0..i {
+            if dep(j, i) {
+                preds[i].push(j);
+                succs[j].push(i);
+            }
+        }
+    }
+
+    // Priority: longest latency-weighted path to the end of the block.
+    let mut prio = vec![0u64; n];
+    for i in (0..n).rev() {
+        let tail = succs[i].iter().map(|&s| prio[s]).max().unwrap_or(0);
+        prio[i] = latency_weight(&seq[i].1, &model.cfg) + tail;
+    }
+
+    // Greedy list scheduling: among ready instructions pick the one the
+    // cost model would issue earliest, breaking ties by critical path,
+    // then original order (so the schedule is deterministic and reduces
+    // to the identity when nothing can improve).
+    let mut indeg: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut sim = model.sim();
+    let mut order = Vec::with_capacity(n);
+    loop {
+        let pick = ready
+            .iter()
+            .copied()
+            .min_by_key(|&i| (sim.peek_issue(seq[i].0, &seq[i].1), Reverse(prio[i]), i));
+        let Some(pick) = pick else { break };
+        ready.retain(|&i| i != pick);
+        sim.step(seq[pick].0, &seq[pick].1);
+        order.push(pick);
+        for &s in &succs[pick] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n);
+    if order.iter().enumerate().all(|(k, &src)| k == src) {
+        return None;
+    }
+    // Accept only strict improvement under the model; ties keep the
+    // original order (no churn for zero gain).
+    let orig = model.sequence_cost(seq).min_cycles;
+    let scheduled: Vec<(u32, Instr)> =
+        order.iter().enumerate().map(|(k, &src)| (seq[k].0, seq[src].1)).collect();
+    if model.sequence_cost(&scheduled).min_cycles >= orig {
+        return None;
+    }
+    Some(order)
+}
+
+fn run_to_halt(
+    prog: &Program,
+    init: &[(u32, Vec<u8>)],
+    vlen_bits: usize,
+    dram_bytes: usize,
+    max_instrs: u64,
+    label: &str,
+) -> Result<RefIss, String> {
+    let mut iss = RefIss::new(vlen_bits, dram_bytes);
+    iss.load(prog).map_err(|e| format!("{label}: load failed: {e}"))?;
+    for (addr, bytes) in init {
+        iss.host_write(*addr, bytes)
+            .map_err(|e| format!("{label}: init write at {addr:#010x} failed: {e}"))?;
+    }
+    iss.run(max_instrs).map_err(|e| format!("{label}: faulted: {e}"))?;
+    if !ArchState::halted(&iss) {
+        return Err(format!("{label}: did not halt within {max_instrs} instructions"));
+    }
+    Ok(iss)
+}
+
+/// Prove `sched` architecturally equivalent to `orig` for one input
+/// image: run both to a clean halt on the reference ISS and require an
+/// identical final state (retired instruction count, every scalar and
+/// vector register, the full memory image), then run the scheduled
+/// program on the timed core in lockstep against the ISS — the
+/// per-instruction cosim catches any divergence the end-state compare
+/// could mask.
+pub fn verify_schedule(
+    orig: &Program,
+    sched: &Program,
+    init: &[(u32, Vec<u8>)],
+    vlen_bits: usize,
+    dram_bytes: usize,
+    issue_width: usize,
+    max_instrs: u64,
+) -> Result<(), String> {
+    let a = run_to_halt(orig, init, vlen_bits, dram_bytes, max_instrs, "original")?;
+    let b = run_to_halt(sched, init, vlen_bits, dram_bytes, max_instrs, "scheduled")?;
+    if a.instret() != b.instret() {
+        return Err(format!(
+            "instret mismatch: original {} vs scheduled {}",
+            a.instret(),
+            b.instret()
+        ));
+    }
+    for n in 1..32u8 {
+        let r = crate::isa::Reg::new(n);
+        if a.reg(r) != b.reg(r) {
+            return Err(format!(
+                "x{n} mismatch: original {:#010x} vs scheduled {:#010x}",
+                a.reg(r),
+                b.reg(r)
+            ));
+        }
+    }
+    for n in 1..8u8 {
+        let v = crate::isa::VReg::new(n);
+        if a.vreg(v) != b.vreg(v) {
+            return Err(format!("v{n} mismatch after halt"));
+        }
+    }
+    let len = a.mem_size();
+    if len != b.mem_size() || a.mem_slice(0, len) != b.mem_slice(0, len) {
+        return Err("final memory images differ".to_string());
+    }
+
+    // Lockstep: scheduled program, timed core (flat memory) vs ISS.
+    let m = Machine::for_vlen(vlen_bits)
+        .magic_memory(true)
+        .dram_bytes(dram_bytes)
+        .issue_width(issue_width);
+    let mut core = m.build();
+    core.load(sched).map_err(|e| format!("core load failed: {e}"))?;
+    let mut iss = RefIss::new(vlen_bits, dram_bytes);
+    iss.load(sched).map_err(|e| format!("iss load failed: {e}"))?;
+    for (addr, bytes) in init {
+        core.mem.host_write(*addr, bytes);
+        iss.host_write(*addr, bytes)
+            .map_err(|e| format!("iss init write at {addr:#010x} failed: {e}"))?;
+    }
+    match run_lockstep(&mut core, &mut iss, max_instrs) {
+        Ok(rep) => match rep.outcome {
+            LockstepOutcome::Halted => Ok(()),
+            LockstepOutcome::Faulted(e) => Err(format!("scheduled lockstep faulted: {e}")),
+            LockstepOutcome::Watchdog(n) => {
+                Err(format!("scheduled lockstep hit the {n}-instruction watchdog"))
+            }
+        },
+        Err(d) => Err(format!("scheduled program diverged on the timed core:\n{d}")),
+    }
+}

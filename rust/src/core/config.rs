@@ -1,5 +1,7 @@
 //! Core timing configuration (§3.2 of the paper).
 
+use crate::isa::Instr;
+
 /// Timing parameters of the single-pipeline-stage softcore.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CoreConfig {
@@ -68,6 +70,30 @@ impl CoreConfig {
     /// Convert a cycle count to seconds at this core's clock.
     pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.fmax_mhz * 1e6)
+    }
+
+    /// Whether `i` must issue alone when `issue_width > 1`: the iterative
+    /// divider always blocks the group; the multiplier only does when it
+    /// is configured multi-cycle (`mul_cycles > 1`). This predicate is
+    /// the single source of truth shared by the timed core's issue logic
+    /// and the static cost model (`analysis::perf`).
+    pub fn serial_issue(&self, i: &Instr) -> bool {
+        match i {
+            Instr::Div { .. } | Instr::Divu { .. } | Instr::Rem { .. } | Instr::Remu { .. } => true,
+            Instr::Mul { .. } | Instr::Mulh { .. } | Instr::Mulhsu { .. } | Instr::Mulhu { .. } => {
+                self.mul_cycles > 1
+            }
+            _ => false,
+        }
+    }
+
+    /// The completion cycle of a load issued at `issue` under flat/magic
+    /// memory (access ready the same cycle): the load-use pipe and the
+    /// 2-cycle data-return floor, whichever is later. Shared by the core
+    /// (which applies the same formula to the real access's ready time)
+    /// and the static cost model's exact flat-memory path.
+    pub fn flat_load_ready(&self, issue: u64) -> u64 {
+        (issue + self.load_use_cycles).max(issue + 2)
     }
 }
 

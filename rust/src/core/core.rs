@@ -511,14 +511,11 @@ impl Core {
         };
 
         // Serialising classes issue alone: the iterative divider (and a
-        // multi-cycle multiplier, if configured) blocks the pipeline.
+        // multi-cycle multiplier, if configured) blocks the pipeline. The
+        // predicate lives on CoreConfig so the static cost model
+        // (analysis::perf) reads the same rule instead of duplicating it.
         use Instr::*;
-        let serial = width > 1
-            && match instr {
-                Div { .. } | Divu { .. } | Rem { .. } | Remu { .. } => true,
-                Mul { .. } | Mulh { .. } | Mulhsu { .. } | Mulhu { .. } => self.cfg.mul_cycles > 1,
-                _ => false,
-            };
+        let serial = width > 1 && self.cfg.serial_issue(&instr);
         if serial && self.issue_used > 0 {
             self.counters.issue_slots_wasted += width - self.issue_used;
             self.cycle += self.cfg.base_cpi;

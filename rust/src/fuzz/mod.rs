@@ -586,6 +586,11 @@ pub struct FuzzConfig {
     /// wild-jump class is enabled — wild jumps exist precisely to fault,
     /// and the analyzer flags every one of them.
     pub analyze: bool,
+    /// Scheduler round-trip (`fuzz --sched`): before the lockstep run,
+    /// schedule each generated program for the point's core
+    /// configuration and prove the rewrite equivalent via
+    /// [`crate::analysis::verify_schedule`] (see [`sched_case`]).
+    pub sched: bool,
 }
 
 impl Default for FuzzConfig {
@@ -598,6 +603,7 @@ impl Default for FuzzConfig {
             points: vec![MachinePoint::default(), stressed_point()],
             jobs: Parallelism::auto(),
             analyze: false,
+            sched: false,
         }
     }
 }
@@ -716,6 +722,62 @@ pub fn preflight_case(
     }))
 }
 
+/// Scheduler round-trip for one case (`fuzz --sched`): schedule the
+/// generated program for the point's core configuration and prove the
+/// rewrite semantics-preserving with
+/// [`crate::analysis::verify_schedule`] — reference-ISS final-state
+/// identity plus a lockstep cosim of the scheduled program on the
+/// timed core. Seeds whose *original* program does not halt cleanly on
+/// the ISS are skipped: the scheduler may legally reorder two faulting
+/// accesses within a block, so only clean programs have a comparable
+/// end state (the regular lockstep case still covers the faulting
+/// ones).
+pub fn sched_case(
+    seed: u64,
+    ops: usize,
+    weights_name: &str,
+    w: &OpWeights,
+    mp: &MachinePoint,
+) -> Result<(), Box<FuzzFailure>> {
+    use crate::arch::ArchState;
+    let prog = generate(seed, ops, w, mp.vlen);
+    let max = max_instrs_for(ops);
+    let mut iss = RefIss::new(mp.vlen, FUZZ_DRAM_BYTES);
+    if iss.load(&prog).is_err() || iss.run(max).is_err() || !ArchState::halted(&iss) {
+        return Ok(());
+    }
+    let acfg = crate::analysis::AnalysisConfig { vlen_bits: mp.vlen, dram_bytes: FUZZ_DRAM_BYTES };
+    let core_cfg = *mp.machine().dram_bytes(FUZZ_DRAM_BYTES).core_config();
+    let outcome = crate::analysis::schedule_program(&prog, &acfg, &core_cfg);
+    if !outcome.changed() {
+        return Ok(());
+    }
+    crate::analysis::verify_schedule(
+        &prog,
+        &outcome.program,
+        &[],
+        mp.vlen,
+        FUZZ_DRAM_BYTES,
+        core_cfg.issue_width,
+        max,
+    )
+    .map_err(|report| {
+        Box::new(FuzzFailure {
+            seed,
+            ops,
+            weights_name: weights_name.to_string(),
+            point: *mp,
+            kind: FailureKind::Divergence,
+            listing: outcome.program.disassemble(),
+            report: format!(
+                "scheduled program is not equivalent to the original \
+                 ({} block(s) reordered, {} instr(s) moved): {report}",
+                outcome.blocks_changed, outcome.instrs_moved
+            ),
+        })
+    })
+}
+
 /// Expand a seed range into content-addressed service jobs — one
 /// [`crate::service::Job`] per (machine point, seed) — so a fuzz
 /// campaign can flow through the sweep service's queue and result
@@ -752,9 +814,13 @@ pub fn run_campaign(cfg: &FuzzConfig) -> FuzzSummary {
     }
     let n_cases = cases.len() as u64;
     let analyze = cfg.analyze;
+    let sched = cfg.sched;
     let results = sweep::parallel_map_bounded(cases, cfg.jobs.workers(), |(seed, name, w, mp)| {
         if analyze && w.wildjump == 0 {
             preflight_case(seed, cfg.ops, name, &w, &mp)?;
+        }
+        if sched {
+            sched_case(seed, cfg.ops, name, &w, &mp)?;
         }
         run_case(seed, cfg.ops, name, &w, &mp)
     });
@@ -1091,5 +1157,26 @@ mod tests {
             eprintln!("seed {} ({:?}):\n{}\n{}", f.seed, f.kind, f.report, f.listing);
         }
         assert!(summary.ok(), "{} failures with the analyze pre-flight on", summary.failures.len());
+    }
+
+    #[test]
+    fn sched_campaign_roundtrip_is_equivalent() {
+        // Every generated program that halts cleanly must survive the
+        // scheduler round-trip: schedule for the point's core config
+        // (the stressed point is dual-issue, so real reordering
+        // happens), then prove ISS end-state identity + lockstep
+        // agreement of the scheduled program.
+        let cfg = FuzzConfig {
+            seeds: 8,
+            base_seed: 9000,
+            ops: 150,
+            sched: true,
+            ..Default::default()
+        };
+        let summary = run_campaign(&cfg);
+        for f in &summary.failures {
+            eprintln!("seed {} ({:?}):\n{}\n{}", f.seed, f.kind, f.report, f.listing);
+        }
+        assert!(summary.ok(), "{} scheduler round-trip failures", summary.failures.len());
     }
 }

@@ -257,6 +257,26 @@ impl Instr {
         )
     }
 
+    /// True for scalar loads (writes `rd` through the load-use pipe).
+    pub fn is_load(&self) -> bool {
+        use Instr::*;
+        matches!(self, Lb { .. } | Lh { .. } | Lw { .. } | Lbu { .. } | Lhu { .. })
+    }
+
+    /// True for scalar stores.
+    pub fn is_store(&self) -> bool {
+        use Instr::*;
+        matches!(self, Sb { .. } | Sh { .. } | Sw { .. })
+    }
+
+    /// True for instructions whose *result value* depends on their own
+    /// address (`auipc`, and the link value of `jal`/`jalr`): these may
+    /// never be moved by the instruction scheduler.
+    pub fn is_pc_relative(&self) -> bool {
+        use Instr::*;
+        matches!(self, Auipc { .. } | Jal { .. } | Jalr { .. })
+    }
+
     /// Canonical mnemonic (what the text assembler parses and the
     /// disassembler prints).
     pub fn mnemonic(&self) -> &'static str {

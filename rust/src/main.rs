@@ -25,11 +25,15 @@
 //!                                       DESIGN.md §13) instead of a
 //!                                       registry workload; machine axes
 //!                                       sweep as above, verified =
-//!                                       "binary reported HTIF pass"
+//!                                       "binary reported HTIF pass";
+//!                                       the static analyzer pre-flights
+//!                                       the binary and error-severity
+//!                                       findings abort before the timed
+//!                                       run (--no-analyze opts out)
 //!   list-workloads                      registry contents
 //!
 //! verification:
-//!   fuzz [--seeds N] [--base-seed S] [--ops M] [--analyze]
+//!   fuzz [--seeds N] [--base-seed S] [--ops M] [--analyze] [--sched]
 //!        [--weights alu=..,branch=..,muldiv=..,mem=..,vec=..,vecmem=..,wildjump=..,smc=..]
 //!        [--sweep axis=a,b,c]... [--artifact-dir DIR] [--json]
 //!                                       differential fuzzing: random
@@ -40,13 +44,18 @@
 //!                                       prefetch, 2 channels); --sweep
 //!                                       uses the machine axes above;
 //!                                       --analyze pre-flights every case
-//!                                       through the static analyzer; on
-//!                                       failure the program listing and
-//!                                       divergence report land in
-//!                                       --artifact-dir (default
+//!                                       through the static analyzer;
+//!                                       --sched round-trips every case
+//!                                       through the intra-block list
+//!                                       scheduler and proves equivalence
+//!                                       by state compare + lockstep
+//!                                       cosim; on failure the program
+//!                                       listing and divergence report
+//!                                       land in --artifact-dir (default
 //!                                       fuzz-artifacts/)
 //!   analyze [<workload>] [--variant v] [--size N] [--vlen N]
-//!           [--listing FILE.s] [--json]
+//!           [--listing FILE.s] [--perf] [--schedule] [--width 1|2|4]
+//!           [--json]
 //!                                       static guest-program analyzer
 //!                                       (DESIGN.md §12): CFG recovery +
 //!                                       dataflow lints over every
@@ -57,7 +66,22 @@
 //!                                       ISS block lowering; exits
 //!                                       non-zero on any error-severity
 //!                                       finding (CI captures --json as
-//!                                       BENCH_analysis.json)
+//!                                       BENCH_analysis.json); --perf
+//!                                       adds the static per-block cycle
+//!                                       cost model + stall-attribution
+//!                                       findings and --schedule the
+//!                                       cosim-verified intra-block list
+//!                                       scheduler, both at issue width
+//!                                       --width (default 2)
+//!   sched-bench [<workload>] [--variant v] [--size N] [--vlen N] [--json]
+//!                                       per-workload static cost-model
+//!                                       estimate vs measured cycles vs
+//!                                       post-schedule cycles on the
+//!                                       flat-memory core at issue widths
+//!                                       1/2/4; every reordered program
+//!                                       must prove equivalence (CI
+//!                                       captures --json as
+//!                                       BENCH_sched.json)
 //!   compliance [--dir DIR] [--json]     rv32ui/rv32um compliance suite:
 //!                                       every checked-in ELF under
 //!                                       rust/tests/compliance/ runs on
@@ -252,6 +276,7 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
         "run-workload" => run_workload(flags, json, jobs),
         "fuzz" => run_fuzz(flags, json, jobs),
         "analyze" => run_analyze(flags, json),
+        "sched-bench" => run_sched_bench(flags, json),
         "compliance" => run_compliance(flags, json),
         "sweep-grid" => run_sweep_grid(flags, json, jobs),
         "serve" => run_serve(flags, jobs),
@@ -271,11 +296,15 @@ fn dispatch(cmd: &str, flags: &Flags) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: simdsoftcore <run-workload|list-workloads|fuzz|analyze|compliance|sweep-grid|serve|\
-     fig3|mem-sweep|pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|prefix-speedup|\
-     discussion|all|run|disasm|fabric|config> [options]\n\
-     run-workload --elf FILE runs a prebuilt RV32 ELF binary (riscv-tests HTIF convention); \
+    "usage: simdsoftcore <run-workload|list-workloads|fuzz|analyze|sched-bench|compliance|\
+     sweep-grid|serve|fig3|mem-sweep|pipe-sweep|fig4|table1|table2|fig5|fig6|memcpy|sort-speedup|\
+     prefix-speedup|discussion|all|run|disasm|fabric|config> [options]\n\
+     run-workload --elf FILE runs a prebuilt RV32 ELF binary (riscv-tests HTIF convention) with \
+     a static-analyzer pre-flight (--no-analyze opts out); \
      compliance runs the checked-in rv32ui/rv32um suite on both backends\n\
+     analyze --perf adds the static cycle cost model, analyze --schedule the cosim-verified \
+     intra-block scheduler (both honour --width 1|2|4); sched-bench compares static estimate vs \
+     measured vs post-schedule cycles; fuzz --sched round-trips every case through the scheduler\n\
      sweep axes for run-workload, fuzz and sweep-grid: variant, size, vlen, llc-block, mshrs, \
      prefetch, channels, issue-width; the --jobs N flag bounds every sweep worker pool\n\
      sweep-grid/serve run through the service queue: --store FILE.jsonl persists results and \
@@ -625,8 +654,24 @@ fn run_workload_elf(
         .and_then(|s| s.to_str())
         .unwrap_or("elf")
         .to_string();
-    // Fail early on a bad image, before any sweep thread spawns.
-    ElfWorkload::from_bytes(&stem, &bytes).map_err(|e| format!("{path}: {e}"))?;
+    // Fail early on a bad image, before any sweep thread spawns — and
+    // run the static analyzer as a pre-flight (same contract as
+    // `compliance`): error-severity findings mean the binary faults or
+    // never loads, so they abort before any timed run unless the user
+    // opts out with --no-analyze.
+    let preflight = ElfWorkload::from_bytes(&stem, &bytes).map_err(|e| format!("{path}: {e}"))?;
+    if !flags.has("--no-analyze") {
+        use simdsoftcore::analysis::{self, AnalysisConfig};
+        let report = analysis::analyze_program(preflight.program(), &AnalysisConfig::default());
+        if !report.is_clean() {
+            eprint!("{path}: {}", report.render(0));
+            return Err(format!(
+                "{path}: the static analyzer found {} error-severity finding(s) before the \
+                 timed run (pass --no-analyze to run anyway)",
+                report.error_count()
+            ));
+        }
+    }
 
     let mut base = MachinePoint::default();
     for &axis in MachinePoint::AXES {
@@ -816,6 +861,7 @@ fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> 
         points: points.clone(),
         jobs,
         analyze: flags.has("--analyze"),
+        sched: flags.has("--sched"),
     };
     let summary = fuzz::run_campaign(&cfg);
 
@@ -829,6 +875,8 @@ fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> 
             None => "preset rotation (balanced / scalar / vector)".into(),
         },
     ]);
+    t.row(&["analyzer pre-flight".into(), cfg.analyze.to_string()]);
+    t.row(&["scheduler round-trip".into(), cfg.sched.to_string()]);
     for (i, mp) in points.iter().enumerate() {
         t.row(&[
             format!("machine[{i}]"),
@@ -898,10 +946,24 @@ fn run_fuzz(flags: &Flags, json: bool, jobs: Parallelism) -> Result<(), String> 
 /// any program draws an error-severity finding — which makes it a CI
 /// gate over the whole registry.
 fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
-    use simdsoftcore::analysis::{self, AnalysisConfig};
+    use simdsoftcore::analysis::{self, AnalysisConfig, PerfModel};
     let vlen = flags.parse_usize("--vlen")?.unwrap_or(256);
     MachinePoint { vlen, ..MachinePoint::default() }.validate()?;
     let dram_floor = simdsoftcore::mem::config::MemConfig::paper_default().dram.size_bytes;
+    let width = flags.parse_usize("--width")?.unwrap_or(2);
+    if ![1, 2, 4].contains(&width) {
+        return Err(format!("--width must be 1, 2 or 4, got {width}"));
+    }
+    let want_perf = flags.has("--perf");
+    let want_sched = flags.has("--schedule");
+    // Timing parameters for the cost model / scheduler: the paper
+    // machine at the requested VLEN and issue width. Flat memory is the
+    // cycle-exact regime (DESIGN.md §12).
+    let core_cfg = *MachinePoint { vlen, issue_width: width, ..MachinePoint::default() }
+        .machine()
+        .magic_memory(true)
+        .core_config();
+    let model = PerfModel::flat(core_cfg);
 
     // Single-listing mode: assemble and analyze one .s file.
     if let Some(path) = flags.opt_val("--listing")? {
@@ -926,6 +988,89 @@ fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
         } else {
             print!("{path}: {}", report.render(50));
         }
+        if want_perf {
+            let perf = analysis::analyze_perf(&prog, &cfg, &model);
+            let mut t = Table::new(
+                format!("analyze --perf ({path}, issue width {width}, flat memory)"),
+                &["block pc", "instrs", "min cyc", "max cyc", "exact", "stalls"],
+            );
+            for c in &perf.costs {
+                t.row(&[
+                    format!("{:#010x}", c.pc),
+                    c.instrs.to_string(),
+                    c.min_cycles.to_string(),
+                    c.max_cycles.to_string(),
+                    c.exact.to_string(),
+                    c.events.len().to_string(),
+                ]);
+            }
+            t.note(format!(
+                "whole-program lower bound {} cycles (each reachable block once, clean entry, \
+                 taken terminators)",
+                perf.total_min_cycles()
+            ));
+            if json {
+                println!("{}", t.render_json());
+            } else {
+                print!("{}", t.render());
+                for f in &perf.findings {
+                    println!("{f}");
+                    for line in &f.context {
+                        println!("    {line}");
+                    }
+                }
+            }
+        }
+        if want_sched {
+            // Listings are arbitrary programs: bound the equivalence
+            // runs so a non-halting input fails fast as a watchdog
+            // instead of wedging the CLI.
+            const LISTING_SCHED_BUDGET: u64 = 10_000_000;
+            let outcome = analysis::schedule_program(&prog, &cfg, &core_cfg);
+            let total =
+                |p: &simdsoftcore::asm::Program| -> u64 {
+                    model.block_costs(p, &cfg).iter().map(|c| c.min_cycles).sum()
+                };
+            let verify = if outcome.changed() {
+                analysis::verify_schedule(
+                    &prog,
+                    &outcome.program,
+                    &[],
+                    vlen,
+                    dram_floor,
+                    width,
+                    LISTING_SCHED_BUDGET,
+                )
+            } else {
+                Ok(())
+            };
+            let mut t = Table::new(
+                format!("analyze --schedule ({path}, issue width {width})"),
+                &["blocks changed", "instrs moved", "static min before", "after", "equivalent"],
+            );
+            t.row(&[
+                outcome.blocks_changed.to_string(),
+                outcome.instrs_moved.to_string(),
+                total(&prog).to_string(),
+                total(&outcome.program).to_string(),
+                match &verify {
+                    Ok(()) if outcome.changed() => "true".to_string(),
+                    Ok(()) => "- (unchanged)".to_string(),
+                    Err(_) => "FAIL".to_string(),
+                },
+            ]);
+            if json {
+                println!("{}", t.render_json());
+            } else {
+                print!("{}", t.render());
+                if outcome.changed() && verify.is_ok() {
+                    print!("{}", outcome.program.disassemble());
+                }
+            }
+            if let Err(e) = verify {
+                return Err(format!("{path}: scheduled program failed verification: {e}"));
+            }
+        }
         return if report.is_clean() {
             Ok(())
         } else {
@@ -934,7 +1079,8 @@ fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
     }
 
     // Registry mode: every workload x variant, or one named workload.
-    const VALUE_FLAGS: &[&str] = &["--variant", "--size", "--vlen", "--listing", "--jobs"];
+    const VALUE_FLAGS: &[&str] =
+        &["--variant", "--size", "--vlen", "--listing", "--jobs", "--width"];
     let filter = flags.positional(VALUE_FLAGS).first().copied();
     let chosen_variant = match flags.opt_val("--variant")? {
         Some(v) => Some(
@@ -953,8 +1099,17 @@ fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
         "workload", "variant", "size", "VLEN", "blocks", "reachable", "instrs", "errors",
         "warnings", "cfg=iss", "ms",
     ]);
+    let mut perf_t = Table::new(
+        format!("analyze --perf (issue width {width}, flat memory)"),
+        &["workload", "variant", "blocks costed", "exact", "static min cyc", "stall findings"],
+    );
+    let mut sched_t = Table::new(format!("analyze --schedule (issue width {width})"), &[
+        "workload", "variant", "blocks changed", "instrs moved", "static min before", "after",
+        "equivalent",
+    ]);
     let mut total_errors = 0usize;
     let mut inconsistent = 0usize;
+    let mut sched_failures: Vec<String> = Vec::new();
     let mut detail = String::new();
     for entry in registry() {
         if filter.is_some_and(|f| f != entry.name) {
@@ -1000,13 +1155,87 @@ fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
                 consistency.is_ok().to_string(),
                 format!("{ms:.1}"),
             ]);
+            if want_perf {
+                let perf = analysis::analyze_perf(&prog, &cfg, &model);
+                let exact = perf.costs.iter().filter(|c| c.exact).count();
+                perf_t.row(&[
+                    entry.name.to_string(),
+                    variant.to_string(),
+                    perf.costs.len().to_string(),
+                    exact.to_string(),
+                    perf.total_min_cycles().to_string(),
+                    perf.findings.len().to_string(),
+                ]);
+                if filter.is_some() {
+                    use std::fmt::Write;
+                    for f in &perf.findings {
+                        let _ = writeln!(detail, "{f}");
+                        for line in &f.context {
+                            let _ = writeln!(detail, "    {line}");
+                        }
+                    }
+                }
+            }
+            if want_sched {
+                let outcome = analysis::schedule_program(&prog, &cfg, &core_cfg);
+                let verify = if outcome.changed() {
+                    analysis::verify_schedule(
+                        &prog,
+                        &outcome.program,
+                        w.init_image(),
+                        vlen,
+                        dram,
+                        width,
+                        simdsoftcore::workloads::common::MAX_INSTRS,
+                    )
+                } else {
+                    Ok(())
+                };
+                let total = |p: &simdsoftcore::asm::Program| -> u64 {
+                    model.block_costs(p, &cfg).iter().map(|c| c.min_cycles).sum()
+                };
+                sched_t.row(&[
+                    entry.name.to_string(),
+                    variant.to_string(),
+                    outcome.blocks_changed.to_string(),
+                    outcome.instrs_moved.to_string(),
+                    total(&prog).to_string(),
+                    total(&outcome.program).to_string(),
+                    match &verify {
+                        Ok(()) if outcome.changed() => "true".to_string(),
+                        Ok(()) => "- (unchanged)".to_string(),
+                        Err(_) => "FAIL".to_string(),
+                    },
+                ]);
+                if let Err(e) = verify {
+                    sched_failures.push(format!("{}/{variant}: {e}", entry.name));
+                }
+            }
         }
     }
     if json {
         println!("{}", t.render_json());
+        if want_perf {
+            println!("{}", perf_t.render_json());
+        }
+        if want_sched {
+            println!("{}", sched_t.render_json());
+        }
     } else {
         print!("{}", t.render());
+        if want_perf {
+            print!("{}", perf_t.render());
+        }
+        if want_sched {
+            print!("{}", sched_t.render());
+        }
         print!("{detail}");
+    }
+    if !sched_failures.is_empty() {
+        return Err(format!(
+            "the scheduled program failed equivalence verification for: {}",
+            sched_failures.join("; ")
+        ));
     }
     if total_errors > 0 || inconsistent > 0 {
         return Err(format!(
@@ -1015,6 +1244,188 @@ fn run_analyze(flags: &Flags, json: bool) -> Result<(), String> {
         ));
     }
     Ok(())
+}
+
+/// Dynamic-weighted static estimate: walk the program on the reference
+/// ISS counting entries into each reachable CFG block, and charge each
+/// entry the block's static flat-memory minimum cost. An estimate, not
+/// a bound — per-block costs assume a clean entry state and taken
+/// terminators (DESIGN.md §12).
+fn static_estimate(
+    prog: &simdsoftcore::asm::Program,
+    init: &[(u32, Vec<u8>)],
+    acfg: &simdsoftcore::analysis::AnalysisConfig,
+    model: &simdsoftcore::analysis::PerfModel,
+    max_instrs: u64,
+) -> Result<u64, String> {
+    use simdsoftcore::arch::ArchState;
+    let mut min_by_pc = std::collections::HashMap::new();
+    for c in model.block_costs(prog, acfg) {
+        min_by_pc.insert(c.pc, c.min_cycles);
+    }
+    let mut iss = simdsoftcore::ref_iss::RefIss::new(acfg.vlen_bits, acfg.dram_bytes);
+    iss.load(prog).map_err(|e| e.to_string())?;
+    for (addr, bytes) in init {
+        iss.host_write(*addr, bytes).map_err(|e| e.to_string())?;
+    }
+    let mut est = 0u64;
+    let mut steps = 0u64;
+    while !ArchState::halted(&iss) {
+        if steps >= max_instrs {
+            return Err(format!("static-estimate walk exceeded {max_instrs} instructions"));
+        }
+        if let Some(&c) = min_by_pc.get(&ArchState::pc(&iss)) {
+            est += c;
+        }
+        iss.step().map_err(|e| e.to_string())?;
+        steps += 1;
+    }
+    Ok(est)
+}
+
+/// Run `prog` to completion on a core built from `machine`, with `w`
+/// providing the input image and the result oracle; returns the cycle
+/// count.
+fn measure_cycles(
+    machine: &simdsoftcore::machine::Machine,
+    w: &mut dyn simdsoftcore::workloads::Workload,
+    prog: &simdsoftcore::asm::Program,
+    max_instrs: u64,
+) -> Result<u64, String> {
+    let mut core = machine.build();
+    core.load(prog).map_err(|e| e.to_string())?;
+    w.init(&mut core);
+    core.run(max_instrs).map_err(|e| e.to_string())?;
+    core.mem.flush_all();
+    w.verify(&core).map_err(|e| e.to_string())?;
+    Ok(core.cycle())
+}
+
+/// The `sched-bench` subcommand: per-workload static cost-model
+/// estimate vs measured cycles vs post-schedule measured cycles on the
+/// flat-memory (magic) core at issue widths 1/2/4 — CI captures --json
+/// as BENCH_sched.json. Every reordered program must prove equivalence
+/// (final-state compare + lockstep cosim via `analysis::verify_schedule`);
+/// any verification failure is a non-zero exit.
+fn run_sched_bench(flags: &Flags, json: bool) -> Result<(), String> {
+    use simdsoftcore::analysis::{self, AnalysisConfig, PerfModel};
+    use simdsoftcore::workloads::common::MAX_INSTRS;
+    const VALUE_FLAGS: &[&str] = &["--variant", "--size", "--vlen", "--jobs"];
+    let filter = flags.positional(VALUE_FLAGS).first().copied();
+    let vlen = flags.parse_usize("--vlen")?.unwrap_or(256);
+    MachinePoint { vlen, ..MachinePoint::default() }.validate()?;
+    let chosen_variant = match flags.opt_val("--variant")? {
+        Some(v) => Some(
+            Variant::parse(v).ok_or_else(|| format!("--variant must be scalar|vector, got '{v}'"))?,
+        ),
+        None => None,
+    };
+    if let Some(name) = filter {
+        if simdsoftcore::workloads::lookup(name).is_none() {
+            let names: Vec<&str> = registry().iter().map(|e| e.name).collect();
+            return Err(format!("unknown workload '{name}'; known: {}", names.join(", ")));
+        }
+    }
+    let dram_floor = simdsoftcore::mem::config::MemConfig::paper_default().dram.size_bytes;
+
+    let mut t = Table::new(
+        "sched-bench: static estimate vs measured vs post-schedule cycles (flat memory)",
+        &[
+            "workload", "variant", "size", "IW", "est cyc", "cycles", "sched cyc", "saved %",
+            "moved", "verified",
+        ],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    for entry in registry() {
+        if filter.is_some_and(|f| f != entry.name) {
+            continue;
+        }
+        let mut w = entry.make();
+        let size = flags.parse_usize("--size")?.unwrap_or_else(|| w.default_size());
+        let variants: Vec<Variant> = match chosen_variant {
+            Some(v) if w.variants().contains(&v) => vec![v],
+            Some(_) => Vec::new(),
+            None => w.variants().to_vec(),
+        };
+        for variant in variants {
+            let sc = Scenario::new(variant, size).with_vlen(vlen);
+            let prog = w.build(&sc);
+            let (bufs, bytes_each) = w.buffers(&sc);
+            let dram = dram_floor.max(simdsoftcore::machine::dram_needed(bufs, bytes_each));
+            let acfg = AnalysisConfig { vlen_bits: vlen, dram_bytes: dram };
+            for width in [1usize, 2, 4] {
+                let machine = MachinePoint { vlen, issue_width: width, ..MachinePoint::default() }
+                    .machine()
+                    .magic_memory(true)
+                    .dram_bytes(dram);
+                let core_cfg = *machine.core_config();
+                let model = PerfModel::flat(core_cfg);
+                let est = static_estimate(&prog, w.init_image(), &acfg, &model, MAX_INSTRS)
+                    .map_err(|e| format!("{}/{variant} IW{width}: {e}", entry.name))?;
+                let cycles = measure_cycles(&machine, w.as_mut(), &prog, MAX_INSTRS)
+                    .map_err(|e| format!("{}/{variant} IW{width}: {e}", entry.name))?;
+                let outcome = analysis::schedule_program(&prog, &acfg, &core_cfg);
+                let (sched_cycles, verified) = if outcome.changed() {
+                    match measure_cycles(&machine, w.as_mut(), &outcome.program, MAX_INSTRS) {
+                        Ok(c) => {
+                            let v = analysis::verify_schedule(
+                                &prog,
+                                &outcome.program,
+                                w.init_image(),
+                                vlen,
+                                dram,
+                                width,
+                                MAX_INSTRS,
+                            );
+                            (c, v)
+                        }
+                        Err(e) => (0, Err(format!("scheduled run failed: {e}"))),
+                    }
+                } else {
+                    (cycles, Ok(()))
+                };
+                if let Err(e) = &verified {
+                    failures.push(format!("{}/{variant} IW{width}: {e}", entry.name));
+                }
+                let saved = if cycles > 0 {
+                    100.0 * (cycles as f64 - sched_cycles as f64) / cycles as f64
+                } else {
+                    0.0
+                };
+                t.row(&[
+                    entry.name.to_string(),
+                    variant.to_string(),
+                    size.to_string(),
+                    width.to_string(),
+                    est.to_string(),
+                    cycles.to_string(),
+                    sched_cycles.to_string(),
+                    format!("{saved:.1}"),
+                    outcome.instrs_moved.to_string(),
+                    match &verified {
+                        Ok(()) if outcome.changed() => "true".to_string(),
+                        Ok(()) => "- (unchanged)".to_string(),
+                        Err(_) => "FAIL".to_string(),
+                    },
+                ]);
+            }
+        }
+    }
+    t.note(
+        "est cyc = sum over the run of (block entries x static flat-memory block minimum); \
+         cycles measured on the magic-memory core; saved % = measured reduction after \
+         intra-block scheduling",
+    );
+    if json {
+        println!("{}", t.render_json());
+    } else {
+        print!("{}", t.render());
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("scheduler verification failed for: {}", failures.join("; ")))
+    }
 }
 
 /// The `sweep-grid` subcommand: run a workload grid through the sweep

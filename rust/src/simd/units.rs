@@ -328,6 +328,57 @@ pub fn standard_pool(vlen_bits: usize) -> super::unit::UnitPool {
     pool
 }
 
+/// Memory behaviour of a custom op, statically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StaticMemKind {
+    /// Vector load through the DL1 pipe (writes vrd1 at the load-ready
+    /// time, like a scalar load).
+    Load,
+    /// Vector store (completion follows the access, no register write).
+    Store,
+}
+
+/// The statically-knowable timing shape of one standard-pool operation:
+/// its fixed latency and which outputs it writes. This is what the
+/// static cost model (`analysis::perf`) needs from a unit *without*
+/// executing it; a unit test pins it against the executing units so the
+/// two can never drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaticOp {
+    pub latency: u64,
+    pub writes_rd: bool,
+    pub writes_vrd1: bool,
+    pub writes_vrd2: bool,
+    pub mem: Option<StaticMemKind>,
+}
+
+/// Static shape of `(slot, funct3)` in the standard pool at `lanes`
+/// lanes, or `None` where the executing pool would fault (unknown
+/// funct3). Latencies are derived from the same network constructors the
+/// units use, so a network change moves both in lockstep.
+pub fn static_op(slot: usize, funct3: u8, lanes: usize) -> Option<StaticOp> {
+    let op = |latency, writes_rd, writes_vrd1, writes_vrd2, mem| StaticOp {
+        latency,
+        writes_rd,
+        writes_vrd1,
+        writes_vrd2,
+        mem,
+    };
+    match (slot, funct3) {
+        (0, 4) => Some(op(LOAD_PIPE_CYCLES, false, true, false, Some(StaticMemKind::Load))),
+        (0, 5) => Some(op(1, false, false, false, Some(StaticMemKind::Store))),
+        (1, 0) => Some(op(merge_block_network(2 * lanes).len() as u64, false, true, true, None)),
+        (1, 1) => Some(op(1, false, true, false, None)),
+        (1, 2) => Some(op(2, false, true, false, None)),
+        (1, 3) => Some(op((lanes.trailing_zeros() as u64) + 2, true, true, false, None)),
+        (2, 0) => Some(op(bitonic_sort_network(lanes).len() as u64, false, true, false, None)),
+        (3, 0) => Some(op(prefix_latency(lanes), false, true, false, None)),
+        (3, 1) => Some(op(1, false, false, false, None)),
+        (3, 2) => Some(op(1, true, false, false, None)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,5 +537,57 @@ mod tests {
             crate::prop_assert_eq!(got, expect);
             Ok(())
         });
+    }
+
+    /// `static_op` must agree with the executing pool on every
+    /// (slot, funct3): same latency, same outputs written, same memory
+    /// behaviour, and `None` exactly where the pool faults. This is the
+    /// contract the static cost model stands on.
+    #[test]
+    fn static_op_table_matches_executing_units() {
+        for &lanes in &[4usize, 8, 16, 32] {
+            let mut pool = standard_pool(lanes * 32);
+            for slot in 0..4usize {
+                for funct3 in 0..8u8 {
+                    let inp = UnitInputs {
+                        funct3,
+                        rs1: 0,
+                        rs2: 0,
+                        imm: 0,
+                        vrs1: VecVal::zero(lanes),
+                        vrs2: VecVal::zero(lanes),
+                    };
+                    let executed = pool.get_mut(slot).and_then(|u| u.execute(&inp));
+                    match static_op(slot, funct3, lanes) {
+                        None => assert!(
+                            executed.is_err(),
+                            "static_op says ({slot},{funct3}) faults but the pool ran it"
+                        ),
+                        Some(st) => {
+                            let out = executed.unwrap_or_else(|e| {
+                                panic!("static_op lists ({slot},{funct3}) but the pool faults: {e:?}")
+                            });
+                            assert_eq!(st.latency, out.latency, "latency ({slot},{funct3})");
+                            assert_eq!(st.writes_rd, out.rd.is_some(), "rd ({slot},{funct3})");
+                            assert_eq!(
+                                st.writes_vrd1,
+                                out.vrd1.is_some(),
+                                "vrd1 ({slot},{funct3})"
+                            );
+                            assert_eq!(
+                                st.writes_vrd2,
+                                out.vrd2.is_some(),
+                                "vrd2 ({slot},{funct3})"
+                            );
+                            let mem = out.mem.as_ref().map(|m| match m {
+                                VecMemOp::Load { .. } => StaticMemKind::Load,
+                                VecMemOp::Store { .. } => StaticMemKind::Store,
+                            });
+                            assert_eq!(st.mem, mem, "mem kind ({slot},{funct3})");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

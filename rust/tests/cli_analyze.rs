@@ -1,0 +1,84 @@
+//! CLI coverage for `analyze --listing` — the single-file front door to
+//! the static analyzer. One planted finding of each severity comes back
+//! with its kind tag and the right exit status (errors fail the run,
+//! warnings and perf findings do not), and a malformed listing is
+//! rejected with a line-numbered parse error rather than a panic.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn fixture(name: &str, contents: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("simdsoftcore-cli-{}-{name}.s", std::process::id()));
+    std::fs::write(&p, contents).expect("write fixture listing");
+    p
+}
+
+fn analyze(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_simdsoftcore"))
+        .args(args)
+        .output()
+        .expect("spawn simdsoftcore binary")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// A constant-folded load far outside DRAM is an error-severity finding
+/// and must make the listing run exit non-zero.
+#[test]
+fn planted_error_finding_fails_the_listing() {
+    let p = fixture("error", "main:\n    li a0, 0x70000000\n    lw a1, 0(a0)\n    halt\n");
+    let out = analyze(&["analyze", "--listing", p.to_str().unwrap()]);
+    assert!(!out.status.success(), "error-severity finding must fail the run");
+    let text = stdout(&out);
+    assert!(
+        text.contains("[out-of-dram-access]"),
+        "stdout:\n{text}\nstderr:\n{}",
+        stderr(&out)
+    );
+    assert!(stderr(&out).contains("error-severity"), "stderr:\n{}", stderr(&out));
+}
+
+/// A dead scalar write is warning severity: reported in the rendering,
+/// but the run still exits zero.
+#[test]
+fn planted_warning_finding_is_reported_but_passes() {
+    let p = fixture("warning", "main:\n    li t0, 1\n    li t0, 2\n    sw t0, -4(sp)\n    halt\n");
+    let out = analyze(&["analyze", "--listing", p.to_str().unwrap()]);
+    assert!(out.status.success(), "warnings must not fail the run: {}", stderr(&out));
+    assert!(stdout(&out).contains("[dead-write]"), "stdout:\n{}", stdout(&out));
+}
+
+/// Under `--perf` a load feeding its consumer on the next instruction
+/// draws a perf-severity load-use-bubble finding; perf findings never
+/// fail the run.
+#[test]
+fn planted_load_use_bubble_surfaces_under_perf() {
+    let p = fixture(
+        "perf",
+        "main:\n    lw t0, -8(sp)\n    addi t1, t0, 1\n    sw t1, -4(sp)\n    halt\n",
+    );
+    let out = analyze(&["analyze", "--listing", p.to_str().unwrap(), "--perf", "--width", "2"]);
+    assert!(out.status.success(), "perf findings must not fail the run: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("[load-use-bubble]"), "stdout:\n{text}");
+    assert!(text.contains("analyze --perf"), "stdout:\n{text}");
+}
+
+/// Listings that do not assemble are rejected with the parse error and
+/// its line number on stderr.
+#[test]
+fn malformed_listing_is_rejected() {
+    let p = fixture("malformed", "main:\n    lw a0, 4[sp]\n    halt\n");
+    let out = analyze(&["analyze", "--listing", p.to_str().unwrap()]);
+    assert!(!out.status.success(), "malformed listing must fail the run");
+    let err = stderr(&out);
+    assert!(err.contains("error:"), "stderr:\n{err}");
+    assert!(err.contains("line 2"), "stderr:\n{err}");
+}
